@@ -1,0 +1,40 @@
+//! Shared bench scaffolding: scale selection + table output.
+//!
+//! `cargo bench` runs the quick grid by default (seconds per target);
+//! set `VIVALDI_BENCH_FULL=1` for the full figure grids.
+
+use vivaldi::config::Scale;
+
+#[allow(dead_code)]
+pub fn bench_scale() -> Scale {
+    if std::env::var("VIVALDI_BENCH_FULL").is_ok_and(|v| v == "1") {
+        Scale::default()
+    } else {
+        Scale {
+            weak_n0: 128,
+            strong_n: 1024,
+            d_cap_kdd: 64,
+            d_cap_mnist: 64,
+            iters: 5,
+            gpu_counts: vec![1, 4, 16, 64],
+            ks: vec![16],
+            seed: 20260710,
+        }
+    }
+}
+
+#[allow(dead_code)]
+pub fn emit(tables: Vec<vivaldi::metrics::Table>) {
+    for t in &tables {
+        t.print();
+        let name: String = t
+            .title
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+            .collect::<String>()
+            .to_lowercase();
+        if let Ok(p) = t.save_csv(&name) {
+            println!("saved {}\n", p.display());
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Fig. 2: weak scaling of the four algorithms across the three
+//! dataset stand-ins (modeled runtime = measured compute + α-β comm).
+mod common;
+use vivaldi::data::datasets::PaperDataset;
+
+fn main() {
+    let scale = common::bench_scale();
+    let machine = vivaldi::model::MachineModel::perlmutter();
+    common::emit(vivaldi::bench::weak_scaling(&scale, &machine, &PaperDataset::ALL, false));
+    common::emit(vec![vivaldi::bench::summary(&scale, &machine, &PaperDataset::ALL)]);
+}

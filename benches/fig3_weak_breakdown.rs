@@ -1,0 +1,11 @@
+//! Fig. 3: weak-scaling runtime breakdown (K vs clustering loop,
+//! compute vs communication) for MNIST8m-like and HIGGS-like.
+mod common;
+use vivaldi::data::datasets::PaperDataset;
+
+fn main() {
+    let scale = common::bench_scale();
+    let machine = vivaldi::model::MachineModel::perlmutter();
+    let ds = [PaperDataset::Mnist8mLike, PaperDataset::HiggsLike];
+    common::emit(vivaldi::bench::weak_scaling(&scale, &machine, &ds, true));
+}

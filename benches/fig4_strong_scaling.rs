@@ -1,0 +1,9 @@
+//! Fig. 4: strong scaling at fixed n across the dataset stand-ins.
+mod common;
+use vivaldi::data::datasets::PaperDataset;
+
+fn main() {
+    let scale = common::bench_scale();
+    let machine = vivaldi::model::MachineModel::perlmutter();
+    common::emit(vivaldi::bench::strong_scaling(&scale, &machine, &PaperDataset::ALL, false));
+}

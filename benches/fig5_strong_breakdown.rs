@@ -1,0 +1,11 @@
+//! Fig. 5: strong-scaling runtime breakdown for MNIST8m-like and
+//! KDD-like.
+mod common;
+use vivaldi::data::datasets::PaperDataset;
+
+fn main() {
+    let scale = common::bench_scale();
+    let machine = vivaldi::model::MachineModel::perlmutter();
+    let ds = [PaperDataset::Mnist8mLike, PaperDataset::KddLike];
+    common::emit(vivaldi::bench::strong_scaling(&scale, &machine, &ds, true));
+}

@@ -1,0 +1,10 @@
+//! Fig. 6: speedup of the distributed 1.5D algorithm over the
+//! single-device sliding-window baseline.
+mod common;
+use vivaldi::data::datasets::PaperDataset;
+
+fn main() {
+    let scale = common::bench_scale();
+    let machine = vivaldi::model::MachineModel::perlmutter();
+    common::emit(vivaldi::bench::sliding_speedup(&scale, &machine, &PaperDataset::ALL));
+}

@@ -1,0 +1,35 @@
+//! Microbenchmarks: the collective primitives the algorithms are built
+//! from (fabric overhead; the α-β model supplies network time).
+mod common;
+use vivaldi::comm::{Group, World};
+use vivaldi::util::timing::BenchRunner;
+
+fn main() {
+    let runner = BenchRunner::default();
+    for p in [4usize, 16] {
+        for len in [1usize << 10, 1 << 16] {
+            runner.run(&format!("allgather p={p} len={len}"), || {
+                World::run(p, |comm| {
+                    let g = Group::world(p);
+                    comm.allgather_concat(&g, vec![1.0f32; len / p])
+                })
+            });
+            runner.run(&format!("allreduce p={p} len={len}"), || {
+                World::run(p, |comm| {
+                    let g = Group::world(p);
+                    comm.allreduce_sum_f32(&g, vec![1.0f32; len])
+                })
+            });
+            runner.run(&format!("reduce_scatter p={p} len={len}"), || {
+                World::run(p, |comm| {
+                    let g = Group::world(p);
+                    comm.reduce_scatter_block(&g, vec![1.0f32; len], |a, b| {
+                        for (x, y) in a.iter_mut().zip(b) {
+                            *x += y;
+                        }
+                    })
+                })
+            });
+        }
+    }
+}

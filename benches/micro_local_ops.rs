@@ -1,0 +1,67 @@
+//! Microbenchmarks: local hot-path kernels (native vs PJRT artifacts).
+//! These drive the §Perf optimization log in EXPERIMENTS.md.
+mod common;
+use vivaldi::backend::{ComputeBackend, NativeBackend};
+use vivaldi::dense::DenseMatrix;
+use vivaldi::kernelfn::KernelFn;
+use vivaldi::util::rng::Rng;
+use vivaldi::util::timing::BenchRunner;
+
+fn main() {
+    let runner = BenchRunner::default();
+    let nat = NativeBackend::new();
+    let mut rng = Rng::new(5);
+    let kf = KernelFn::paper_polynomial();
+
+    // Gram tile (the 1D / sliding-window hot spot).
+    for (m, n, d) in [(512, 4096, 64), (1024, 4096, 64)] {
+        let a = DenseMatrix::random(m, d, &mut rng);
+        let b = DenseMatrix::random(n, d, &mut rng);
+        runner.run(&format!("native gram_tile {m}x{n}x{d}"), || {
+            nat.gram_tile(&a, &b, &kf, &[], &[])
+        });
+    }
+    // Structured SpMM (the per-iteration hot spot).
+    for (m, nr, k) in [(1024, 4096, 16), (2048, 2048, 16)] {
+        let kt = DenseMatrix::random(m, nr, &mut rng);
+        let assign: Vec<u32> = (0..nr).map(|_| rng.below(k) as u32).collect();
+        let inv = vec![1.0f32 / 16.0; k];
+        runner.run(&format!("native spmm_vk {m}x{nr} k={k}"), || {
+            nat.spmm_vk(&kt, &assign, k, &inv)
+        });
+        let ktt = DenseMatrix::random(nr, m, &mut rng);
+        runner.run(&format!("native spmm_vk_t {nr}x{m} k={k}"), || {
+            nat.spmm_vk_t(&ktt, &assign, k, &inv)
+        });
+    }
+    // Fused update.
+    let e = DenseMatrix::random(4096, 16, &mut rng);
+    let c: Vec<f32> = (0..16).map(|_| rng.next_f32()).collect();
+    runner.run("native distances_argmin 4096x16", || nat.distances_argmin(&e, &c));
+
+    // PJRT artifact path (when available): same ops through the AOT
+    // executables — the comparison the §Perf log tracks.
+    if vivaldi::runtime::artifacts_available() {
+        match vivaldi::runtime::PjrtBackend::from_default_artifacts(1) {
+            Ok(be) => {
+                let kt = DenseMatrix::random(1024, 4096, &mut rng);
+                let assign: Vec<u32> = (0..4096).map(|_| rng.below(16) as u32).collect();
+                let inv = vec![1.0f32 / 16.0; 16];
+                runner.run("pjrt   spmm_vk 1024x4096 k=16", || {
+                    be.spmm_vk(&kt, &assign, 16, &inv)
+                });
+                runner.run("pjrt   distances_argmin 4096x16", || {
+                    be.distances_argmin(&e, &c)
+                });
+                let a = DenseMatrix::random(1024, 64, &mut rng);
+                let b = DenseMatrix::random(4096, 64, &mut rng);
+                runner.run("pjrt   gram_tile 1024x4096x64", || {
+                    be.gram_tile(&a, &b, &kf, &[], &[])
+                });
+                let (hits, misses) = be.counters();
+                println!("pjrt counters: {hits} hits, {misses} fallbacks");
+            }
+            Err(e) => println!("pjrt unavailable: {e}"),
+        }
+    }
+}

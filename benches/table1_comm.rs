@@ -1,0 +1,9 @@
+//! Table I: exact counted communication volume per algorithm vs the
+//! paper's analytic α-β expressions.
+mod common;
+
+fn main() {
+    let scale = common::bench_scale();
+    let machine = vivaldi::model::MachineModel::perlmutter();
+    common::emit(vivaldi::bench::comm_table(&scale, &machine));
+}

@@ -1,0 +1,184 @@
+"""AOT pipeline: lower every L2 op at the manifest shapes to HLO text.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the Rust
+side's xla_extension 0.5.1 rejects; the text parser reassigns ids, so
+text round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from ``make artifacts``):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits ``<op>__<shape-sig>.hlo.txt`` per entry plus ``manifest.json``
+describing op name, input/output shapes+dtypes, and baked kernel
+parameters. The Rust runtime (rust/src/runtime/) compiles each module
+once on the PJRT CPU client and dispatches by (op, input shapes).
+
+The default shape set covers the shipped examples and benches; pass
+``--shapes custom.json`` to extend it (the Rust backend falls back to
+the native path at unmatched shapes, counting misses).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def dtype_tag(dt) -> str:
+    return {"float32": "f32", "int32": "i32"}[jnp.dtype(dt).name]
+
+
+def impl_table(impl):
+    """Op-name → lowering function for the chosen implementation.
+
+    * ``pallas`` — the L1 Pallas kernels under interpret=True. This is
+      the TPU-shaped code path; on CPU the interpreter makes it 5-100×
+      slower than XLA-compiled jnp (EXPERIMENTS.md §Perf), so it is the
+      *validation* target, not the serving default.
+    * ``jnp`` (default) — the pure-jnp reference ops (ref.py), which
+      pytest verifies bit-close against the Pallas kernels. XLA fuses
+      these into tight CPU loops; this is what the Rust hot path loads.
+    """
+    if impl == "pallas":
+        return {
+            "gram_poly": model.gram_tile_poly,
+            "kernel_apply_poly": model.kernel_apply_poly,
+            "spmm_vk": model.spmm_vk,
+            "spmm_vk_t": model.spmm_vk_t,
+            "update_pre": model.update_pre,
+            "update_post": model.update_post,
+        }
+    if impl == "jnp":
+        return {
+            "gram_poly": ref.gram_poly,
+            "kernel_apply_poly": ref.kernel_apply_poly,
+            "spmm_vk": ref.spmm_vk,
+            "spmm_vk_t": ref.spmm_vk_t,
+            "update_pre": ref.update_pre,
+            "update_post": ref.update_post,
+        }
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def default_entries(n=4096, d=64, k=16, q=2, impl="jnp"):
+    """Shape set for the default experiment scale (n, d, k, √P = q).
+
+    Derived sizes: grid block t = n/q, 1D slice m = n/q², 1D block row
+    mb = n/p.
+    """
+    p = q * q
+    t = n // q
+    m = n // p
+    fns = impl_table(impl)
+    entries = []
+
+    def add(op, args, params=None):
+        entries.append({"op": op, "fn": fns[op], "args": args, "params": params or {}})
+
+    # K computation (1D block row + sliding-window block + SUMMA tile).
+    add("gram_poly", [spec((m, d)), spec((n, d))])
+    add("gram_poly", [spec((t, d)), spec((n, d))])
+    add("gram_poly", [spec((512, d)), spec((n, d))])
+    add("gram_poly", [spec((n, d)), spec((n, d))])
+    add("kernel_apply_poly", [spec((t, t))])
+
+    # Clustering loop, 1D layout (m × n block rows).
+    add("spmm_vk", [spec((m, n)), spec((n,), I32), spec((k,))])
+    add("spmm_vk", [spec((512, n)), spec((n,), I32), spec((k,))])
+    add("spmm_vk", [spec((n, n)), spec((n,), I32), spec((k,))])
+    # Clustering loop, 2D/1.5D tiles (t × t).
+    add("spmm_vk_t", [spec((t, t)), spec((t,), I32), spec((k,))])
+    # Update steps at the 1D slice (m), tile (t), and full (n) heights.
+    for rows in sorted({m, t, n, 512}):
+        add("update_pre", [spec((rows, k)), spec((rows,), I32), spec((k,))])
+        add("update_post", [spec((rows, k)), spec((k,))])
+    return entries
+
+
+def signature(args) -> str:
+    return "_".join("x".join(map(str, a.shape)) + dtype_tag(a.dtype) for a in args)
+
+
+def lower_entry(entry, out_dir):
+    args = entry["args"]
+    fn = entry["fn"]
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    sig = signature(args)
+    fname = f"{entry['op']}__{sig}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    out_shapes = jax.eval_shape(fn, *args)
+    if not isinstance(out_shapes, (tuple, list)):
+        out_shapes = (out_shapes,)
+    return {
+        "op": entry["op"],
+        "file": fname,
+        "inputs": [
+            {"shape": list(a.shape), "dtype": dtype_tag(a.dtype)} for a in args
+        ],
+        "outputs": [
+            {"shape": list(o.shape), "dtype": dtype_tag(o.dtype)} for o in out_shapes
+        ],
+        "params": entry["params"],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--n", type=int, default=4096)
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--k", type=int, default=16)
+    ap.add_argument("--q", type=int, default=2)
+    ap.add_argument(
+        "--impl",
+        choices=["jnp", "pallas"],
+        default="jnp",
+        help="lowering source: jnp = XLA-fused reference (CPU serving "
+        "default), pallas = L1 kernels under interpret=True (TPU-shaped; "
+        "slow on CPU, for validation)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    entries = default_entries(n=args.n, d=args.d, k=args.k, q=args.q, impl=args.impl)
+    manifest = {"version": 1, "ops": []}
+    seen = set()
+    for e in entries:
+        key = (e["op"], signature(e["args"]))
+        if key in seen:
+            continue
+        seen.add(key)
+        rec = lower_entry(e, args.out)
+        manifest["ops"].append(rec)
+        print(f"lowered {rec['op']:<18} {rec['file']}")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['ops'])} artifacts + manifest to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

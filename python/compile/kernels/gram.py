@@ -1,0 +1,126 @@
+"""L1 Pallas kernel: tiled Gram matrix with fused kernel function.
+
+GPU→TPU adaptation (DESIGN.md §8): the paper computes B = P·Pᵀ with
+cuBLAS and then applies κ elementwise in a separate pass. On TPU the
+natural shape is one Pallas kernel that (a) tiles the (m×d)·(d×n)
+contraction for the MXU — blocks staged HBM→VMEM via BlockSpec — and
+(b) applies κ in-register on the accumulated block before it is written
+back, eliminating the second HBM round trip.
+
+VMEM footprint per grid step (f32): bm·d + bn·d + bm·bn words. With the
+default bm = bn = 128 and d ≤ 4096 this stays well under the ~16 MiB
+VMEM of a TPU core (see EXPERIMENTS.md §Perf for the table).
+
+All kernels run with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls; on real TPU hardware the same code lowers
+to MXU ops.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-aligned tile edge.
+BLOCK = 128
+
+
+def _poly(x, gamma, c, degree):
+    # degree==2 is the paper's benchmark kernel; keep the fast path
+    # multiplication-only so the MXU epilogue stays cheap.
+    base = gamma * x + c
+    return jnp.where(degree == 2.0, base * base, base**degree)
+
+
+def _gram_kernel_poly(x_ref, y_ref, o_ref, *, gamma, c, degree):
+    """o = κ_poly(x @ yᵀ) for one (bm × bn) output block."""
+    acc = jnp.dot(x_ref[...], y_ref[...].T, preferred_element_type=jnp.float32)
+    o_ref[...] = _poly(acc, gamma, c, degree)
+
+
+def _gram_kernel_linear(x_ref, y_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], y_ref[...].T, preferred_element_type=jnp.float32)
+
+
+def _gram_kernel_rbf(x_ref, y_ref, o_ref, *, gamma):
+    x = x_ref[...]
+    y = y_ref[...]
+    acc = jnp.dot(x, y.T, preferred_element_type=jnp.float32)
+    sq_x = jnp.sum(x * x, axis=1, keepdims=True)
+    sq_y = jnp.sum(y * y, axis=1, keepdims=True).T
+    o_ref[...] = jnp.exp(-gamma * (sq_x + sq_y - 2.0 * acc))
+
+
+def _block(n, bound):
+    """Largest divisor-friendly block ≤ bound (pad-free tiling)."""
+    b = min(n, bound)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "gamma", "c", "degree"))
+def gram_tile(a, b, kind="poly", gamma=1.0, c=1.0, degree=2.0):
+    """κ(A·Bᵀ) as a tiled Pallas kernel.
+
+    a: (m, d) f32, b: (n, d) f32 -> (m, n) f32. `kind` ∈ {"linear",
+    "poly", "rbf"}. Tiles are chosen to divide m and n exactly (the
+    coordinator's shapes are multiples of the partition sizes).
+    """
+    m, d = a.shape
+    n, d2 = b.shape
+    assert d == d2, "feature dims differ"
+    bm = _block(m, BLOCK)
+    bn = _block(n, BLOCK)
+
+    if kind == "poly":
+        kernel = functools.partial(_gram_kernel_poly, gamma=gamma, c=c, degree=degree)
+    elif kind == "rbf":
+        kernel = functools.partial(_gram_kernel_rbf, gamma=gamma)
+    elif kind == "linear":
+        kernel = _gram_kernel_linear
+    else:
+        raise ValueError(f"unknown kernel kind {kind!r}")
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "gamma", "c", "degree"))
+def kernel_apply(b, kind="poly", gamma=1.0, c=1.0, degree=2.0):
+    """Elementwise kernel epilogue (SUMMA path) as a Pallas map.
+
+    b: (m, n) accumulated Gram values -> κ applied elementwise.
+    (The rbf epilogue needs norms; see model.kernel_apply_rbf.)
+    """
+    m, n = b.shape
+    bm = _block(m, BLOCK)
+    bn = _block(n, 512)
+
+    def kern(b_ref, o_ref):
+        if kind == "poly":
+            o_ref[...] = _poly(b_ref[...], gamma, c, degree)
+        else:  # linear: identity
+            o_ref[...] = b_ref[...]
+
+    if kind == "rbf":
+        raise ValueError("rbf epilogue requires norms; use model.kernel_apply_rbf")
+
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm, n // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(b)

@@ -1,0 +1,115 @@
+"""L1 Pallas kernel: the structured SpMM Eᵀ = V·K.
+
+GPU→TPU adaptation (DESIGN.md §8): the paper uses cuSPARSE CSC·dense
+SpMM. V has exactly one nonzero per column, so on TPU the segment-sum
+becomes a **one-hot matmul on the MXU**: materialize the (block × k)
+one-hot of the assignment slice in VMEM and contract it against the K
+block. k ≤ 64 keeps the one-hot tiny; the grid walks K in blocks so
+every K element is read from HBM exactly once — the memory-level
+analogue of the paper's communication avoidance.
+
+Two orientations match the Rust coordinator's layouts:
+  * ``spmm_vk``   — k_tile (m, nr), output E (m, k)   (1D block rows)
+  * ``spmm_vk_t`` — k_tile (nr, m), output Eᵀ (k, m)  (2D tiles)
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_M = 128
+BLOCK_R = 512
+
+
+def _block(n, bound):
+    b = min(n, bound)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _vk_kernel(k_ref, onehot_ref, inv_ref, o_ref, *, nsteps):
+    """Accumulate E block: o (bm, k) += K(bm, br) @ onehot(br, k)."""
+    r = pl.program_id(1)
+
+    @pl.when(r == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        k_ref[...], onehot_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(r == nsteps - 1)
+    def _scale():
+        o_ref[...] = o_ref[...] * inv_ref[...][None, :]
+
+
+@jax.jit
+def spmm_vk(k_tile, assign, inv_sizes):
+    """E (m,k) from k_tile (m,nr) + assignment of the nr summed points."""
+    m, nr = k_tile.shape
+    k = inv_sizes.shape[0]
+    bm = _block(m, BLOCK_M)
+    br = _block(nr, BLOCK_R)
+    nsteps = nr // br
+    # One-hot built once at f32 (the MXU contraction operand).
+    onehot = (assign[:, None] == jnp.arange(k, dtype=assign.dtype)[None, :]).astype(
+        jnp.float32
+    )
+    return pl.pallas_call(
+        functools.partial(_vk_kernel, nsteps=nsteps),
+        grid=(m // bm, nsteps),
+        in_specs=[
+            pl.BlockSpec((bm, br), lambda i, r: (i, r)),
+            pl.BlockSpec((br, k), lambda i, r: (r, 0)),
+            pl.BlockSpec((k,), lambda i, r: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, k), lambda i, r: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.float32),
+        interpret=True,
+    )(k_tile, onehot, inv_sizes)
+
+
+def _vkt_kernel(onehot_ref, k_ref, inv_ref, o_ref, *, nsteps):
+    """Accumulate Eᵀ block: o (k, bm) += onehotᵀ(k, br) @ K(br, bm)."""
+    r = pl.program_id(1)
+
+    @pl.when(r == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        onehot_ref[...].T, k_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(r == nsteps - 1)
+    def _scale():
+        o_ref[...] = o_ref[...] * inv_ref[...][:, None]
+
+
+@jax.jit
+def spmm_vk_t(k_tile, assign, inv_sizes):
+    """Eᵀ (k,m) from k_tile (nr,m) in natural 2D orientation."""
+    nr, m = k_tile.shape
+    k = inv_sizes.shape[0]
+    bm = _block(m, BLOCK_M)
+    br = _block(nr, BLOCK_R)
+    nsteps = nr // br
+    onehot = (assign[:, None] == jnp.arange(k, dtype=assign.dtype)[None, :]).astype(
+        jnp.float32
+    )
+    return pl.pallas_call(
+        functools.partial(_vkt_kernel, nsteps=nsteps),
+        grid=(m // bm, nsteps),
+        in_specs=[
+            pl.BlockSpec((br, k), lambda i, r: (r, 0)),
+            pl.BlockSpec((br, bm), lambda i, r: (r, i)),
+            pl.BlockSpec((k,), lambda i, r: (0,)),
+        ],
+        out_specs=pl.BlockSpec((k, bm), lambda i, r: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((k, m), jnp.float32),
+        interpret=True,
+    )(onehot, k_tile, inv_sizes)

@@ -1,0 +1,80 @@
+"""L2: the per-rank compute graph of distributed Kernel K-means.
+
+Composes the L1 Pallas kernels (``kernels/``) into the jit-able
+functions the Rust coordinator calls through PJRT:
+
+  * ``gram_tile_*``  — K tile = κ(P_i · P_jᵀ)            (Eqs. 1–2)
+  * ``kernel_apply_*`` — SUMMA elementwise epilogue
+  * ``spmm_vk`` / ``spmm_vk_t`` — structured SpMM          (Eq. 4)
+  * ``update_pre``   — fused mask + local SpMV → partial c (Eqs. 5–6)
+  * ``update_post``  — fused distances + argmin            (Eq. 8)
+  * ``cluster_iter_local`` — the whole communication-free part of one
+    1D-layout iteration (SpMM → pre), demonstrating XLA fusion across
+    kernels; the Allreduce of c happens in Rust between ``pre`` and
+    ``post``.
+
+Everything here is build-time only: ``aot.py`` lowers these functions
+at the manifest's shapes to HLO text; Python never runs at serving
+time.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import distance, gram, spmm
+
+
+# --- K computation -------------------------------------------------------
+
+def gram_tile_linear(a, b):
+    return gram.gram_tile(a, b, kind="linear")
+
+
+def gram_tile_poly(a, b, gamma=1.0, c=1.0, degree=2.0):
+    """The paper's benchmark kernel (γ=1, c=1, d=2) by default."""
+    return gram.gram_tile(a, b, kind="poly", gamma=gamma, c=c, degree=degree)
+
+
+def gram_tile_rbf(a, b, gamma=1.0):
+    return gram.gram_tile(a, b, kind="rbf", gamma=gamma)
+
+
+def kernel_apply_poly(b, gamma=1.0, c=1.0, degree=2.0):
+    return gram.kernel_apply(b, kind="poly", gamma=gamma, c=c, degree=degree)
+
+
+def kernel_apply_rbf(b, row_norms, col_norms, gamma=1.0):
+    """RBF epilogue needs norms; plain jnp (elementwise, XLA fuses it)."""
+    d2 = row_norms[:, None] + col_norms[None, :] - 2.0 * b
+    return jnp.exp(-gamma * d2)
+
+
+# --- clustering loop ------------------------------------------------------
+
+def spmm_vk(k_tile, assign, inv_sizes):
+    return spmm.spmm_vk(k_tile, assign, inv_sizes)
+
+
+def spmm_vk_t(k_tile, assign, inv_sizes):
+    return spmm.spmm_vk_t(k_tile, assign, inv_sizes)
+
+
+def update_pre(e, assign, inv_sizes):
+    return distance.update_pre(e, assign, inv_sizes)
+
+
+def update_post(e, c):
+    return distance.update_post(e, c)
+
+
+def cluster_iter_local(k_block_row, assign_all, assign_own, inv_sizes):
+    """The communication-free half of one 1D iteration.
+
+    k_block_row: (m, n) — this rank's block row of K.
+    assign_all: (n,) i32 — allgathered assignments.
+    assign_own: (m,) i32 — this rank's slice (for the mask).
+    Returns (E (m,k), partial c (k,)). The coordinator allreduces c and
+    then calls ``update_post``.
+    """
+    e = spmm.spmm_vk(k_block_row, assign_all, inv_sizes)
+    c_part = distance.update_pre(e, assign_own, inv_sizes)
+    return e, c_part

@@ -1,0 +1,161 @@
+"""L1 Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Fixed-shape smoke tests plus hypothesis sweeps over shapes, cluster
+counts and value ranges. All Pallas calls run under interpret=True (CPU
+lowering of the TPU kernels).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import distance, gram, ref, spmm
+
+RNG = np.random.default_rng(1234)
+
+
+def f32(a):
+    return jnp.asarray(a, dtype=jnp.float32)
+
+
+def rand(*shape, scale=1.0):
+    return f32(RNG.normal(size=shape) * scale)
+
+
+# --- gram ---------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,n,d", [(4, 4, 3), (16, 8, 5), (128, 128, 64), (96, 256, 28)])
+def test_gram_poly_matches_ref(m, n, d):
+    a, b = rand(m, d), rand(n, d)
+    got = gram.gram_tile(a, b, kind="poly")
+    want = ref.gram_poly(a, b)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("kind", ["linear", "poly", "rbf"])
+def test_gram_kinds(kind):
+    a, b = rand(32, 7), rand(24, 7)
+    got = gram.gram_tile(a, b, kind=kind, gamma=0.5, c=2.0, degree=3.0)
+    if kind == "linear":
+        want = ref.gram_linear(a, b)
+    elif kind == "poly":
+        want = ref.gram_poly(a, b, gamma=0.5, c=2.0, degree=3.0)
+    else:
+        want = ref.gram_rbf(a, b, gamma=0.5)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-4, atol=2e-4)
+
+
+def test_gram_symmetry():
+    a = rand(40, 6)
+    k = np.array(gram.gram_tile(a, a, kind="poly"))
+    np.testing.assert_allclose(k, k.T, rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_apply_poly():
+    b = rand(64, 48)
+    got = gram.kernel_apply(b, kind="poly", gamma=1.0, c=1.0, degree=2.0)
+    want = ref.kernel_apply_poly(b)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 80),
+    n=st.integers(1, 80),
+    d=st.integers(1, 40),
+    gamma=st.floats(0.1, 2.0),
+    c=st.floats(0.0, 3.0),
+)
+def test_gram_poly_hypothesis(m, n, d, gamma, c):
+    a, b = rand(m, d, scale=0.5), rand(n, d, scale=0.5)
+    got = gram.gram_tile(a, b, kind="poly", gamma=gamma, c=c, degree=2.0)
+    want = ref.gram_poly(a, b, gamma=gamma, c=c, degree=2.0)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-3, atol=1e-3)
+
+
+# --- spmm ---------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,nr,k", [(8, 8, 2), (128, 512, 16), (64, 96, 7), (33, 50, 3)])
+def test_spmm_vk_matches_ref(m, nr, k):
+    kt = rand(m, nr)
+    assign = jnp.asarray(RNG.integers(0, k, size=nr), dtype=jnp.int32)
+    inv = f32(RNG.uniform(0.05, 1.0, size=k))
+    got = spmm.spmm_vk(kt, assign, inv)
+    want = ref.spmm_vk(kt, assign, inv)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("nr,m,k", [(8, 8, 2), (512, 128, 16), (96, 64, 5)])
+def test_spmm_vk_t_matches_ref(nr, m, k):
+    kt = rand(nr, m)
+    assign = jnp.asarray(RNG.integers(0, k, size=nr), dtype=jnp.int32)
+    inv = f32(RNG.uniform(0.05, 1.0, size=k))
+    got = spmm.spmm_vk_t(kt, assign, inv)
+    want = ref.spmm_vk_t(kt, assign, inv)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 64), nr=st.integers(1, 96), k=st.integers(1, 24))
+def test_spmm_vk_hypothesis(m, nr, k):
+    kt = rand(m, nr)
+    assign = jnp.asarray(RNG.integers(0, k, size=nr), dtype=jnp.int32)
+    inv = f32(RNG.uniform(0.05, 1.0, size=k))
+    got = spmm.spmm_vk(kt, assign, inv)
+    want = ref.spmm_vk(kt, assign, inv)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-3, atol=1e-3)
+
+
+def test_spmm_perfect_load_balance_semantics():
+    # All points in one cluster: E column 0 = row sums · inv[0].
+    kt = rand(16, 32)
+    assign = jnp.zeros(32, dtype=jnp.int32)
+    inv = f32([0.25, 1.0])
+    e = np.array(spmm.spmm_vk(kt, assign, inv))
+    np.testing.assert_allclose(e[:, 0], np.array(kt).sum(axis=1) * 0.25, rtol=1e-4)
+    np.testing.assert_allclose(e[:, 1], 0.0)
+
+
+# --- update -------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k", [(4, 2), (512, 16), (100, 7)])
+def test_update_post_matches_ref(m, k):
+    e = rand(m, k)
+    c = rand(k)
+    am, mv = distance.update_post(e, c)
+    am2, mv2 = ref.update_post(e, c)
+    np.testing.assert_array_equal(np.array(am), np.array(am2))
+    np.testing.assert_allclose(np.array(mv), np.array(mv2), rtol=1e-5, atol=1e-5)
+
+
+def test_update_post_tie_breaks_low():
+    e = f32([[1.0, 1.0, 0.0]])
+    c = f32([0.0, 0.0, 2.0])
+    am, mv = distance.update_post(e, c)
+    assert int(am[0]) == 0
+    assert float(mv[0]) == -2.0
+
+
+@pytest.mark.parametrize("m,k", [(8, 2), (512, 16), (96, 5)])
+def test_update_pre_matches_ref(m, k):
+    e = rand(m, k)
+    assign = jnp.asarray(RNG.integers(0, k, size=m), dtype=jnp.int32)
+    inv = f32(RNG.uniform(0.05, 1.0, size=k))
+    got = distance.update_pre(e, assign, inv)
+    want = ref.update_pre(e, assign, inv)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 128), k=st.integers(1, 32))
+def test_update_post_hypothesis(m, k):
+    e = rand(m, k)
+    c = rand(k)
+    am, mv = distance.update_post(e, c)
+    am2, mv2 = ref.update_post(e, c)
+    np.testing.assert_array_equal(np.array(am), np.array(am2))
+    np.testing.assert_allclose(np.array(mv), np.array(mv2), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,101 @@
+//! Pluggable local-compute backends.
+//!
+//! The distributed algorithms are written against [`ComputeBackend`],
+//! which exposes exactly the local operations the paper's
+//! implementation delegates to cuBLAS / cuSPARSE / hand-written CUDA
+//! kernels:
+//!
+//! * `gram_tile` — fused GEMM + elementwise kernel function (Eq. 1–2),
+//! * `matmul_nn_acc` + `kernel_apply` — SUMMA's accumulate path,
+//! * `spmm_vk` — the structured SpMM (Eq. 4),
+//! * `mask_z` — the masking kernel (Eq. 5),
+//! * `spmv_vz` — the structured SpMV (Eq. 6),
+//! * `distances_argmin` — fused D = −2E + C̃ and row argmin (Eq. 8).
+//!
+//! Two implementations exist: [`native::NativeBackend`] (pure Rust,
+//! works at any shape — used by tests) and
+//! [`crate::runtime::PjrtBackend`] (AOT-compiled JAX/Pallas artifacts
+//! executed via PJRT, with native fallback at unmatched shapes).
+
+pub mod native;
+
+pub use native::NativeBackend;
+
+use crate::dense::DenseMatrix;
+use crate::kernelfn::KernelFn;
+
+/// Local compute operations used from the distributed hot path.
+pub trait ComputeBackend: Send + Sync {
+    /// κ(A·Bᵀ): A is (m×d) points, B is (n×d) points; returns the m×n
+    /// kernel-matrix tile. `row_norms`/`col_norms` are the squared
+    /// point norms (may be empty unless `kernel.needs_norms()`).
+    fn gram_tile(
+        &self,
+        a: &DenseMatrix,
+        b: &DenseMatrix,
+        kernel: &KernelFn,
+        row_norms: &[f32],
+        col_norms: &[f32],
+    ) -> DenseMatrix;
+
+    /// C += A·B (SUMMA inner step; plain Gram accumulation, no kernel).
+    fn matmul_nn_acc(&self, a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix);
+
+    /// Apply the kernel function elementwise to an accumulated Gram
+    /// tile (SUMMA epilogue).
+    fn kernel_apply(
+        &self,
+        b: &mut DenseMatrix,
+        kernel: &KernelFn,
+        row_norms: &[f32],
+        col_norms: &[f32],
+    );
+
+    /// Structured SpMM: E_local[j,a] = inv_sizes[a]·Σ_{r:a_r=a} K[j,r].
+    /// See [`crate::sparse::ops::spmm_vk`] for the layout contract.
+    fn spmm_vk(
+        &self,
+        k_tile: &DenseMatrix,
+        assign_r: &[u32],
+        k: usize,
+        inv_sizes: &[f32],
+    ) -> DenseMatrix;
+
+    /// Structured SpMM against a tile in natural 2D orientation (rows =
+    /// summed points, cols = output points); returns Eᵀ (k × m).
+    /// See [`crate::sparse::ops::spmm_vk_t`].
+    fn spmm_vk_t(
+        &self,
+        k_tile: &DenseMatrix,
+        assign_r: &[u32],
+        k: usize,
+        inv_sizes: &[f32],
+    ) -> DenseMatrix;
+
+    /// Masking: z[j] = E[j, assign[j]] (Eq. 5).
+    fn mask_z(&self, e_local: &DenseMatrix, assign: &[u32]) -> Vec<f32>;
+
+    /// Structured SpMV: partial c (Eq. 6).
+    fn spmv_vz(&self, assign: &[u32], z: &[f32], k: usize, inv_sizes: &[f32]) -> Vec<f32>;
+
+    /// Fused mask + local SpMV (Eqs. 5–6): partial c from E directly.
+    /// Default composes `mask_z` + `spmv_vz`; the PJRT backend
+    /// overrides with the fused `update_pre` artifact.
+    fn update_pre(
+        &self,
+        e_local: &DenseMatrix,
+        assign: &[u32],
+        k: usize,
+        inv_sizes: &[f32],
+    ) -> Vec<f32> {
+        let z = self.mask_z(e_local, assign);
+        self.spmv_vz(assign, &z, k, inv_sizes)
+    }
+
+    /// Fused distance + argmin: D[j,a] = −2E[j,a] + c[a]; returns
+    /// (argmin_a D[j,·], min_a D[j,·]) with ties to the lower index.
+    fn distances_argmin(&self, e_local: &DenseMatrix, c: &[f32]) -> (Vec<u32>, Vec<f32>);
+
+    /// Human-readable backend name for reports.
+    fn name(&self) -> &str;
+}

@@ -1,0 +1,159 @@
+//! Pure-Rust backend: blocked multithreaded GEMM + structured sparse
+//! kernels. Works at every shape; the reference the PJRT backend falls
+//! back to and is validated against.
+
+use super::ComputeBackend;
+use crate::dense::{matrix::DenseMatrix, ops};
+use crate::kernelfn::KernelFn;
+use crate::sparse;
+
+/// The native (pure Rust) compute backend.
+#[derive(Debug, Default, Clone)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        NativeBackend
+    }
+}
+
+impl ComputeBackend for NativeBackend {
+    fn gram_tile(
+        &self,
+        a: &DenseMatrix,
+        b: &DenseMatrix,
+        kernel: &KernelFn,
+        row_norms: &[f32],
+        col_norms: &[f32],
+    ) -> DenseMatrix {
+        let mut tile = ops::matmul_nt(a, b);
+        kernel.apply_tile(&mut tile, row_norms, col_norms);
+        tile
+    }
+
+    fn matmul_nn_acc(&self, a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix) {
+        ops::matmul_nn_acc(a, b, c);
+    }
+
+    fn kernel_apply(
+        &self,
+        b: &mut DenseMatrix,
+        kernel: &KernelFn,
+        row_norms: &[f32],
+        col_norms: &[f32],
+    ) {
+        kernel.apply_tile(b, row_norms, col_norms);
+    }
+
+    fn spmm_vk(
+        &self,
+        k_tile: &DenseMatrix,
+        assign_r: &[u32],
+        k: usize,
+        inv_sizes: &[f32],
+    ) -> DenseMatrix {
+        sparse::ops::spmm_vk(k_tile, assign_r, k, inv_sizes)
+    }
+
+    fn spmm_vk_t(
+        &self,
+        k_tile: &DenseMatrix,
+        assign_r: &[u32],
+        k: usize,
+        inv_sizes: &[f32],
+    ) -> DenseMatrix {
+        sparse::ops::spmm_vk_t(k_tile, assign_r, k, inv_sizes)
+    }
+
+    fn mask_z(&self, e_local: &DenseMatrix, assign: &[u32]) -> Vec<f32> {
+        assert_eq!(e_local.rows(), assign.len());
+        assign
+            .iter()
+            .enumerate()
+            .map(|(j, &a)| e_local.get(j, a as usize))
+            .collect()
+    }
+
+    fn spmv_vz(&self, assign: &[u32], z: &[f32], k: usize, inv_sizes: &[f32]) -> Vec<f32> {
+        sparse::ops::spmv_vz(assign, z, k, inv_sizes)
+    }
+
+    fn distances_argmin(&self, e_local: &DenseMatrix, c: &[f32]) -> (Vec<u32>, Vec<f32>) {
+        let k = e_local.cols();
+        assert_eq!(c.len(), k);
+        let m = e_local.rows();
+        let mut arg = vec![0u32; m];
+        let mut val = vec![0.0f32; m];
+        for j in 0..m {
+            let row = e_local.row(j);
+            let mut best = 0usize;
+            let mut best_d = -2.0 * row[0] + c[0];
+            for a in 1..k {
+                let d = -2.0 * row[a] + c[a];
+                // Strict < : ties break to the lower cluster index.
+                if d < best_d {
+                    best_d = d;
+                    best = a;
+                }
+            }
+            arg[j] = best as u32;
+            val[j] = best_d;
+        }
+        (arg, val)
+    }
+
+    fn name(&self) -> &str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gram_tile_fuses_kernel() {
+        let mut rng = Rng::new(2);
+        let a = DenseMatrix::random(4, 3, &mut rng);
+        let b = DenseMatrix::random(5, 3, &mut rng);
+        let be = NativeBackend::new();
+        let kf = KernelFn::paper_polynomial();
+        let tile = be.gram_tile(&a, &b, &kf, &[], &[]);
+        for i in 0..4 {
+            for j in 0..5 {
+                let dot = ops::dot(a.row(i), b.row(j));
+                assert!((tile.get(i, j) - kf.apply(dot, 0.0, 0.0)).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn mask_z_selects_assigned_column() {
+        let e = DenseMatrix::from_fn(3, 2, |i, j| (i * 2 + j) as f32);
+        let be = NativeBackend::new();
+        let z = be.mask_z(&e, &[1, 0, 1]);
+        assert_eq!(z, vec![1.0, 2.0, 5.0]);
+    }
+
+    #[test]
+    fn argmin_tie_breaks_low() {
+        // Row where clusters 0 and 1 tie exactly.
+        let e = DenseMatrix::from_vec(1, 3, vec![1.0, 1.0, 0.0]);
+        let c = vec![0.0, 0.0, 0.0];
+        let be = NativeBackend::new();
+        let (arg, val) = be.distances_argmin(&e, &c);
+        assert_eq!(arg, vec![0]);
+        assert_eq!(val, vec![-2.0]);
+    }
+
+    #[test]
+    fn argmin_uses_centroid_norms() {
+        // E identical across clusters; c decides.
+        let e = DenseMatrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = vec![5.0, 1.0];
+        let be = NativeBackend::new();
+        let (arg, _) = be.distances_argmin(&e, &c);
+        assert_eq!(arg, vec![1, 1]);
+    }
+}

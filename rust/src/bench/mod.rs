@@ -1,0 +1,16 @@
+//! Experiment harness: regenerates every table and figure in the
+//! paper's evaluation (§VI) at the configured scale.
+//!
+//! Timing model (DESIGN.md §1): per-phase **compute** is measured for
+//! real as per-rank thread-CPU time (max over ranks = critical path;
+//! immune to host oversubscription), and per-phase **communication**
+//! is modeled as `rounds·α + crit_bytes·β` from the *exactly counted*
+//! critical-path ledgers, on a Perlmutter-like machine profile.
+//! Reported runtime = Σ_phase (comp + comm). Volumes and schedules are
+//! real; only the network clock is synthetic.
+
+pub mod run;
+pub mod figures;
+
+pub use figures::{comm_table, sliding_speedup, strong_scaling, weak_scaling, summary};
+pub use run::{run_once, RunOutcome, PhaseCost};

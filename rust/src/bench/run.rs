@@ -1,0 +1,253 @@
+//! Single experiment execution + the hybrid timing model.
+
+use crate::comm::CommStats;
+use crate::config::{MemModel, Scale};
+use crate::data::datasets::PaperDataset;
+use crate::kernelfn::KernelFn;
+use crate::kkmeans::{self, Algo, FitConfig};
+use crate::model::MachineModel;
+use crate::util::timing::Stopwatch;
+use crate::VivaldiError;
+
+/// Per-phase cost decomposition.
+#[derive(Debug, Clone)]
+pub struct PhaseCost {
+    pub name: String,
+    /// Measured per-rank compute (max over ranks), seconds.
+    pub comp: f64,
+    /// Modeled communication (critical path over ranks), seconds.
+    pub comm: f64,
+}
+
+/// Outcome of one (algo, dataset, G, k) cell.
+#[derive(Debug, Clone)]
+pub struct RunOutcome {
+    pub algo: Algo,
+    pub dataset: PaperDataset,
+    pub g: usize,
+    pub k: usize,
+    pub n: usize,
+    pub d: usize,
+    pub oom: bool,
+    pub phases: Vec<PhaseCost>,
+    /// Total modeled runtime (Σ comp + comm).
+    pub total: f64,
+    /// Total bytes sent across all ranks, per phase name.
+    pub volumes: Vec<(String, u64)>,
+    /// Total messages across ranks, per phase name.
+    pub messages: Vec<(String, u64)>,
+    /// Iterations actually run.
+    pub iterations: usize,
+}
+
+impl RunOutcome {
+    pub fn phase(&self, name: &str) -> Option<&PhaseCost> {
+        self.phases.iter().find(|p| p.name == name)
+    }
+
+    /// "K computation" time = gemm + redist phases.
+    pub fn k_time(&self) -> f64 {
+        self.phases
+            .iter()
+            .filter(|p| p.name == "gemm" || p.name == "redist")
+            .map(|p| p.comp + p.comm)
+            .sum()
+    }
+
+    /// Clustering-loop time = spmm + update phases.
+    pub fn loop_time(&self) -> f64 {
+        self.phases
+            .iter()
+            .filter(|p| p.name == "spmm" || p.name == "update")
+            .map(|p| p.comp + p.comm)
+            .sum()
+    }
+}
+
+fn enable_bench_timing() {
+    // Per-thread CPU clock + single-threaded local kernels: per-rank
+    // compute stays comparable across rank counts (see module docs).
+    std::env::set_var("VIVALDI_TIMING", "cpu");
+    std::env::set_var("VIVALDI_THREADS", "1");
+}
+
+/// Build the outcome from fit internals (shared with the OOM path).
+fn outcome_from(
+    algo: Algo,
+    dataset: PaperDataset,
+    g: usize,
+    k: usize,
+    n: usize,
+    d: usize,
+    machine: &MachineModel,
+    timings: &[Stopwatch],
+    stats: &[CommStats],
+    iterations: usize,
+) -> RunOutcome {
+    let comp = Stopwatch::max_over(timings);
+    let comm_by_phase = machine.comm_time_by_phase(stats);
+    let mut names: Vec<String> = comp.phases().iter().map(|(n, _)| n.clone()).collect();
+    for (n, _) in &comm_by_phase {
+        if !names.contains(n) {
+            names.push(n.clone());
+        }
+    }
+    let phases: Vec<PhaseCost> = names
+        .iter()
+        .map(|name| PhaseCost {
+            name: name.clone(),
+            comp: comp.get(name),
+            comm: comm_by_phase.iter().find(|(n, _)| n == name).map(|(_, t)| *t).unwrap_or(0.0),
+        })
+        .collect();
+    let total = phases.iter().map(|p| p.comp + p.comm).sum();
+    let merged = CommStats::merged_sum(stats);
+    let volumes = merged.phases().map(|(n, s)| (n.to_string(), s.bytes)).collect();
+    let messages = merged.phases().map(|(n, s)| (n.to_string(), s.msgs)).collect();
+    RunOutcome {
+        algo,
+        dataset,
+        g,
+        k,
+        n,
+        d,
+        oom: false,
+        phases,
+        total,
+        volumes,
+        messages,
+        iterations,
+    }
+}
+
+/// Run one cell of the evaluation grid.
+///
+/// `mem`: the calibrated device-memory model for this experiment family
+/// (weak/strong scaling figures enforce it; the comm-volume table runs
+/// unlimited).
+pub fn run_once(
+    algo: Algo,
+    dataset: PaperDataset,
+    g: usize,
+    k: usize,
+    n: usize,
+    scale: &Scale,
+    machine: &MachineModel,
+    mem: Option<MemModel>,
+) -> RunOutcome {
+    enable_bench_timing();
+    let ds = dataset.generate(n.max(k), scale.d_cap(dataset), scale.seed);
+    let d = ds.d();
+    let cfg = FitConfig {
+        k,
+        max_iters: scale.iters,
+        kernel: KernelFn::paper_polynomial(),
+        converge_on_stable: false, // fixed iteration count, as the paper
+        mem,
+    };
+    match kkmeans::fit(algo, g, &ds.points, &cfg) {
+        Ok(res) => outcome_from(
+            algo,
+            dataset,
+            g,
+            k,
+            ds.n(),
+            d,
+            machine,
+            &res.timings,
+            &res.comm_stats,
+            res.iterations,
+        ),
+        Err(VivaldiError::OutOfMemory { .. }) => RunOutcome {
+            algo,
+            dataset,
+            g,
+            k,
+            n: ds.n(),
+            d,
+            oom: true,
+            phases: Vec::new(),
+            total: f64::NAN,
+            volumes: Vec::new(),
+            messages: Vec::new(),
+            iterations: 0,
+        },
+        Err(e) => panic!("fit failed: {e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_once_produces_phases() {
+        let scale = Scale { iters: 3, ..Scale::quick() };
+        let machine = MachineModel::perlmutter();
+        let out = run_once(
+            Algo::OneFiveD,
+            PaperDataset::HiggsLike,
+            4,
+            4,
+            128,
+            &scale,
+            &machine,
+            None,
+        );
+        assert!(!out.oom);
+        assert!(out.total > 0.0);
+        assert!(out.phase("gemm").is_some());
+        assert!(out.phase("spmm").is_some());
+        assert!(out.phase("update").is_some());
+        assert_eq!(out.iterations, 3);
+        assert!(out.k_time() > 0.0);
+        assert!(out.loop_time() > 0.0);
+    }
+
+    #[test]
+    fn kdd_like_1d_ooms_but_15d_does_not() {
+        // The paper's Fig. 2 memory story at laptop scale: with the
+        // calibrated budget, the 1D algorithm's replicated-P charge
+        // blows the budget on the high-d dataset at G=16 while 1.5D
+        // fits — exactly §VI.B's observation.
+        let scale = Scale { iters: 2, ..Scale::quick() };
+        let machine = MachineModel::perlmutter();
+        let mem = scale.mem_model_weak(PaperDataset::KddLike);
+        let g = 16;
+        let n = scale.weak_n(g);
+        let one_d = run_once(
+            Algo::OneD,
+            PaperDataset::KddLike,
+            g,
+            4,
+            n,
+            &scale,
+            &machine,
+            Some(mem),
+        );
+        let fifteen = run_once(
+            Algo::OneFiveD,
+            PaperDataset::KddLike,
+            g,
+            4,
+            n,
+            &scale,
+            &machine,
+            Some(mem),
+        );
+        assert!(one_d.oom, "1D should OOM on the high-d dataset");
+        assert!(!fifteen.oom, "1.5D should fit");
+        // And at G=4 the 1D algorithm still fits (paper: fails only >4).
+        let g4 = run_once(
+            Algo::OneD,
+            PaperDataset::KddLike,
+            4,
+            4,
+            scale.weak_n(4),
+            &scale,
+            &machine,
+            Some(mem),
+        );
+        assert!(!g4.oom, "1D at G=4 must fit");
+    }
+}

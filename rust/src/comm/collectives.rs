@@ -1,0 +1,611 @@
+//! Collective operations over a [`Group`], implemented on the pt2pt
+//! fabric with textbook schedules. The schedule choices match the
+//! assumptions of the paper's α-β cost analysis (§IV):
+//!
+//! | collective            | schedule            | rounds (α)      | critical-path bytes (β) |
+//! |-----------------------|---------------------|-----------------|-------------------------|
+//! | `bcast`               | binomial tree       | ⌈log₂P⌉         | ⌈log₂P⌉·m               |
+//! | `gather`              | binomial tree       | ⌈log₂P⌉         | Σ other members' m      |
+//! | `allgather(v)`        | ring (pairwise)     | P−1             | Σ forwarded blocks      |
+//! | `reduce`/`allreduce`  | binomial (+bcast)   | ⌈log₂P⌉ (·2)    | ⌈log₂P⌉·m (·2)          |
+//! | `reduce_scatter_block`| recursive halving   | log₂P           | m·(1−1/P)               |
+//! | `alltoallv`           | pairwise exchange   | P−1             | Σ sent blocks           |
+//!
+//! Floating-point combine order is **deterministic** (fixed tree shape,
+//! independent of thread timing), which the integration tests rely on.
+
+use super::fabric::Comm;
+use super::Group;
+
+#[inline]
+fn ceil_log2(p: usize) -> u64 {
+    if p <= 1 {
+        0
+    } else {
+        (usize::BITS - (p - 1).leading_zeros()) as u64
+    }
+}
+
+impl Comm {
+    fn my_index(&self, g: &Group) -> usize {
+        g.index_of(self.rank())
+            .unwrap_or_else(|| panic!("rank {} not in group {:?}", self.rank(), g.ranks()))
+    }
+
+    /// Synchronize all members of `g`.
+    pub fn barrier(&self, g: &Group) {
+        let _ = self.allgather_bytes_marker(g);
+    }
+
+    fn allgather_bytes_marker(&self, g: &Group) -> Vec<u8> {
+        // Zero-byte ring allgather; counts rounds only.
+        let parts = self.allgather::<u8>(g, vec![]);
+        parts.into_iter().flatten().collect()
+    }
+
+    /// Broadcast `data` from group index `root_idx` (binomial tree).
+    pub fn bcast<T: Clone + Send + 'static>(
+        &self,
+        g: &Group,
+        root_idx: usize,
+        data: Option<Vec<T>>,
+    ) -> Vec<T> {
+        let p = g.size();
+        let me = self.my_index(g);
+        let tag = self.next_tag(g);
+        if p == 1 {
+            return data.expect("root must supply data");
+        }
+        let vrank = (me + p - root_idx) % p;
+        let mut buf: Option<Vec<T>> = if vrank == 0 {
+            Some(data.expect("root must supply data"))
+        } else {
+            None
+        };
+        let rounds = ceil_log2(p);
+        // Receive first from the appropriate parent, then forward.
+        let mut have = vrank == 0;
+        for t in 0..rounds {
+            let stride = 1usize << t;
+            if !have && vrank >= stride && vrank < 2 * stride {
+                let parent_v = vrank - stride;
+                let parent = g.rank_at((parent_v + root_idx) % p);
+                buf = Some(self.recv::<T>(parent, tag));
+                have = true;
+            } else if have && vrank < stride {
+                let child_v = vrank + stride;
+                if child_v < p {
+                    let child = g.rank_at((child_v + root_idx) % p);
+                    self.send(child, tag, buf.as_ref().unwrap().clone());
+                }
+            }
+        }
+        let out = buf.expect("bcast: no data received");
+        let m = (out.len() * std::mem::size_of::<T>()) as u64;
+        self.record_critical(rounds, rounds * m);
+        out
+    }
+
+    /// Gather each member's buffer at group index `root_idx`.
+    /// Returns `Some(bufs_in_group_order)` at the root, `None` elsewhere.
+    ///
+    /// Binomial tree; buffer lengths may differ per member (gatherv).
+    pub fn gather<T: Send + 'static>(
+        &self,
+        g: &Group,
+        root_idx: usize,
+        local: Vec<T>,
+    ) -> Option<Vec<Vec<T>>> {
+        let p = g.size();
+        let me = self.my_index(g);
+        let tag = self.next_tag(g);
+        if p == 1 {
+            return Some(vec![local]);
+        }
+        let vrank = (me + p - root_idx) % p;
+        // Accumulate (vrank, data) pairs; flatten on the wire as
+        // (lengths header handled by Vec framing per message).
+        let mut held: Vec<(u32, Vec<T>)> = vec![(vrank as u32, local)];
+        let rounds = ceil_log2(p);
+        let mut crit: u64 = 0;
+        for t in 0..rounds {
+            let stride = 1usize << t;
+            if vrank % (2 * stride) == 0 {
+                let child_v = vrank + stride;
+                if child_v < p {
+                    let child = g.rank_at((child_v + root_idx) % p);
+                    // Header: child subtree's (vrank, len) pairs.
+                    let hdr: Vec<u64> = self.recv(child, tag ^ 0x1);
+                    let mut body: Vec<T> = self.recv(child, tag);
+                    crit += (body.len() * std::mem::size_of::<T>()) as u64;
+                    // Split the flat body back into per-member segments
+                    // (from the tail, so split_off moves without Clone).
+                    let mut segs: Vec<(u32, Vec<T>)> = Vec::with_capacity(hdr.len() / 2);
+                    for pair in hdr.chunks(2).rev() {
+                        let (vr, len) = (pair[0] as u32, pair[1] as usize);
+                        let tail = body.split_off(body.len() - len);
+                        segs.push((vr, tail));
+                    }
+                    segs.reverse();
+                    held.extend(segs);
+                }
+            } else if vrank % (2 * stride) == stride {
+                let parent_v = vrank - stride;
+                let parent = g.rank_at((parent_v + root_idx) % p);
+                let hdr: Vec<u64> =
+                    held.iter().flat_map(|(vr, d)| [*vr as u64, d.len() as u64]).collect();
+                let mut body: Vec<T> = Vec::new();
+                for (_, d) in held.drain(..) {
+                    body.extend(d);
+                }
+                self.send(parent, tag ^ 0x1, hdr);
+                self.send(parent, tag, body);
+                break;
+            }
+        }
+        self.record_critical(rounds, crit);
+        if vrank == 0 {
+            held.sort_by_key(|(vr, _)| *vr);
+            // Convert vrank order back to group-index order.
+            let mut out: Vec<Option<Vec<T>>> = (0..p).map(|_| None).collect();
+            for (vr, d) in held {
+                let idx = (vr as usize + root_idx) % p;
+                out[idx] = Some(d);
+            }
+            Some(out.into_iter().map(|d| d.expect("gather: missing member")).collect())
+        } else {
+            None
+        }
+    }
+
+    /// Ring allgather: returns every member's buffer, in group order.
+    /// Handles variable-length buffers (allgatherv).
+    pub fn allgather<T: Clone + Send + 'static>(&self, g: &Group, local: Vec<T>) -> Vec<Vec<T>> {
+        let p = g.size();
+        let me = self.my_index(g);
+        let tag = self.next_tag(g);
+        let mut parts: Vec<Option<Vec<T>>> = (0..p).map(|_| None).collect();
+        if p == 1 {
+            parts[0] = Some(local);
+            return parts.into_iter().map(|x| x.unwrap()).collect();
+        }
+        let right = g.rank_at((me + 1) % p);
+        let left = g.rank_at((me + p - 1) % p);
+        let mut crit = 0u64;
+        // Step s sends the block originally owned by (me - s + 1) mod p.
+        let mut current = local.clone();
+        parts[me] = Some(local);
+        for s in 1..p {
+            crit += (current.len() * std::mem::size_of::<T>()) as u64;
+            self.send(right, tag.wrapping_add(s as u64), current);
+            let incoming: Vec<T> = self.recv(left, tag.wrapping_add(s as u64));
+            let owner = (me + p - s) % p;
+            parts[owner] = Some(incoming.clone());
+            current = incoming;
+        }
+        self.record_critical((p - 1) as u64, crit);
+        parts.into_iter().map(|x| x.expect("allgather: hole")).collect()
+    }
+
+    /// Allgather + concatenate in group order.
+    pub fn allgather_concat<T: Clone + Send + 'static>(&self, g: &Group, local: Vec<T>) -> Vec<T> {
+        self.allgather(g, local).into_iter().flatten().collect()
+    }
+
+    /// Reduce to group index `root_idx` with a deterministic binomial
+    /// tree. `combine(acc, other)` must be associative.
+    pub fn reduce<T, F>(&self, g: &Group, root_idx: usize, data: Vec<T>, combine: F) -> Option<Vec<T>>
+    where
+        T: Send + 'static,
+        F: Fn(&mut [T], &[T]),
+    {
+        let p = g.size();
+        let me = self.my_index(g);
+        let tag = self.next_tag(g);
+        if p == 1 {
+            return Some(data);
+        }
+        let vrank = (me + p - root_idx) % p;
+        let m = (data.len() * std::mem::size_of::<T>()) as u64;
+        let mut acc = data;
+        let rounds = ceil_log2(p);
+        for t in 0..rounds {
+            let stride = 1usize << t;
+            if vrank % (2 * stride) == 0 {
+                let child_v = vrank + stride;
+                if child_v < p {
+                    let child = g.rank_at((child_v + root_idx) % p);
+                    let other: Vec<T> = self.recv(child, tag.wrapping_add(t as u64));
+                    combine(&mut acc, &other);
+                }
+            } else if vrank % (2 * stride) == stride {
+                let parent_v = vrank - stride;
+                let parent = g.rank_at((parent_v + root_idx) % p);
+                self.send(parent, tag.wrapping_add(t as u64), acc);
+                acc = Vec::new();
+                break;
+            }
+        }
+        self.record_critical(rounds, rounds * m);
+        if vrank == 0 {
+            Some(acc)
+        } else {
+            None
+        }
+    }
+
+    /// Allreduce = binomial reduce + binomial bcast.
+    pub fn allreduce<T, F>(&self, g: &Group, data: Vec<T>, combine: F) -> Vec<T>
+    where
+        T: Clone + Send + 'static,
+        F: Fn(&mut [T], &[T]),
+    {
+        let reduced = self.reduce(g, 0, data, combine);
+        self.bcast(g, 0, reduced)
+    }
+
+    /// Elementwise f32 sum allreduce.
+    pub fn allreduce_sum_f32(&self, g: &Group, data: Vec<f32>) -> Vec<f32> {
+        self.allreduce(g, data, |acc, other| {
+            for (a, b) in acc.iter_mut().zip(other) {
+                *a += b;
+            }
+        })
+    }
+
+    /// Elementwise u64 sum allreduce (cluster sizes).
+    pub fn allreduce_sum_u64(&self, g: &Group, data: Vec<u64>) -> Vec<u64> {
+        self.allreduce(g, data, |acc, other| {
+            for (a, b) in acc.iter_mut().zip(other) {
+                *a += b;
+            }
+        })
+    }
+
+    /// Logical-AND allreduce (collective OOM checks).
+    pub fn allreduce_and(&self, g: &Group, ok: bool) -> bool {
+        let out = self.allreduce(g, vec![ok as u8], |acc, other| {
+            for (a, b) in acc.iter_mut().zip(other) {
+                *a &= b;
+            }
+        });
+        out[0] != 0
+    }
+
+    /// MINLOC allreduce: elementwise min of `vals` with the winning
+    /// member's `loc`. Ties break toward the **lower loc** (the paper's
+    /// deterministic argmin tie-break). Wire format is (f32, u32) pairs
+    /// — 8 B/element, matching the MPI_FLOAT_INT doubling the paper
+    /// notes for the 2D algorithm's cluster update.
+    pub fn allreduce_minloc(&self, g: &Group, vals: Vec<f32>, locs: Vec<u32>) -> (Vec<f32>, Vec<u32>) {
+        assert_eq!(vals.len(), locs.len());
+        let pairs: Vec<(f32, u32)> = vals.into_iter().zip(locs).collect();
+        let out = self.allreduce(g, pairs, |acc, other| {
+            for (a, b) in acc.iter_mut().zip(other) {
+                if b.0 < a.0 || (b.0 == a.0 && b.1 < a.1) {
+                    *a = *b;
+                }
+            }
+        });
+        out.into_iter().unzip()
+    }
+
+    /// Block reduce-scatter: `data.len()` must be `p · block`; member i
+    /// receives the elementwise reduction of everyone's i-th block.
+    ///
+    /// Recursive halving for power-of-two groups (log₂P rounds,
+    /// m(1−1/P) bytes); binomial reduce + direct scatter otherwise.
+    pub fn reduce_scatter_block<T, F>(&self, g: &Group, data: Vec<T>, combine: F) -> Vec<T>
+    where
+        T: Clone + Send + 'static,
+        F: Fn(&mut [T], &[T]),
+    {
+        let p = g.size();
+        let me = self.my_index(g);
+        assert_eq!(data.len() % p, 0, "reduce_scatter_block: len not divisible by group size");
+        let block = data.len() / p;
+        if p == 1 {
+            return data;
+        }
+        let tag = self.next_tag(g);
+        let elem = std::mem::size_of::<T>();
+        if p.is_power_of_two() {
+            // Recursive halving. Invariant: `buf` holds the partially
+            // reduced blocks for the index range [lo, lo+span).
+            let mut buf = data;
+            let mut lo = 0usize;
+            let mut span = p;
+            let mut crit = 0u64;
+            let mut rounds = 0u64;
+            while span > 1 {
+                let half = span / 2;
+                let in_low = me < lo + half;
+                let partner_idx = if in_low { me + half } else { me - half };
+                let partner = g.rank_at(partner_idx);
+                // Split buf into low half (blocks lo..lo+half) and high.
+                let split = half * block;
+                let (keep, send_part): (Vec<T>, Vec<T>) = if in_low {
+                    let high = buf.split_off(split);
+                    (buf, high)
+                } else {
+                    let high = buf.split_off(split);
+                    (high, buf)
+                };
+                crit += (send_part.len() * elem) as u64;
+                rounds += 1;
+                self.send(partner, tag.wrapping_add(rounds), send_part);
+                let incoming: Vec<T> = self.recv(partner, tag.wrapping_add(rounds));
+                let mut acc = keep;
+                // Deterministic order: lower half of the pair is always
+                // the accumulator target side; combine(acc, incoming)
+                // where incoming is the partner's contribution.
+                combine(&mut acc, &incoming);
+                buf = acc;
+                if in_low {
+                    span = half;
+                } else {
+                    lo += half;
+                    span = half;
+                }
+            }
+            self.record_critical(rounds, crit);
+            debug_assert_eq!(buf.len(), block);
+            buf
+        } else {
+            // General fallback: reduce to index 0, then scatter blocks.
+            let reduced = self.reduce(g, 0, data, &combine);
+            let stag = self.next_tag(g);
+            if me == 0 {
+                let mut reduced = reduced.unwrap();
+                let mine = reduced[..block].to_vec();
+                for i in (1..p).rev() {
+                    let tail = reduced.split_off(i * block);
+                    self.send(g.rank_at(i), stag, tail);
+                }
+                self.record_critical(1, ((p - 1) * block * elem) as u64);
+                mine
+            } else {
+                let out = self.recv::<T>(g.rank_at(0), stag);
+                self.record_critical(1, 0);
+                out
+            }
+        }
+    }
+
+    /// Personalized all-to-all with variable block sizes (pairwise
+    /// exchange, P−1 rounds). `sends[i]` goes to group index i; returns
+    /// the buffer received from each group index.
+    pub fn alltoallv<T: Clone + Send + 'static>(
+        &self,
+        g: &Group,
+        mut sends: Vec<Vec<T>>,
+    ) -> Vec<Vec<T>> {
+        let p = g.size();
+        assert_eq!(sends.len(), p);
+        let me = self.my_index(g);
+        let tag = self.next_tag(g);
+        let mut recvs: Vec<Option<Vec<T>>> = (0..p).map(|_| None).collect();
+        let elem = std::mem::size_of::<T>();
+        let mut crit = 0u64;
+        // Self block moves locally.
+        recvs[me] = Some(std::mem::take(&mut sends[me]));
+        for s in 1..p {
+            let to = (me + s) % p;
+            let from = (me + p - s) % p;
+            let payload = std::mem::take(&mut sends[to]);
+            crit += (payload.len() * elem) as u64;
+            self.send(g.rank_at(to), tag.wrapping_add(s as u64), payload);
+            let incoming: Vec<T> = self.recv(g.rank_at(from), tag.wrapping_add(s as u64));
+            recvs[from] = Some(incoming);
+        }
+        self.record_critical((p - 1) as u64, crit);
+        recvs.into_iter().map(|r| r.expect("alltoallv: hole")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::fabric::World;
+    use super::super::Group;
+
+    #[test]
+    fn bcast_all_sizes() {
+        for p in 1..=9 {
+            for root in 0..p {
+                let (results, _) = World::run(p, |comm| {
+                    let g = Group::world(p);
+                    let data = if comm.rank() == root { Some(vec![7u32, 8, 9]) } else { None };
+                    comm.bcast(&g, root, data)
+                });
+                for r in results {
+                    assert_eq!(r, vec![7, 8, 9], "p={p} root={root}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_variable_lengths() {
+        for p in 1..=8 {
+            for root in 0..p {
+                let (results, _) = World::run(p, |comm| {
+                    let g = Group::world(p);
+                    let local: Vec<u64> = (0..=comm.rank() as u64).collect();
+                    comm.gather(&g, root, local)
+                });
+                for (r, res) in results.into_iter().enumerate() {
+                    if r == root {
+                        let bufs = res.expect("root gets data");
+                        assert_eq!(bufs.len(), p);
+                        for (i, b) in bufs.iter().enumerate() {
+                            assert_eq!(b, &(0..=i as u64).collect::<Vec<_>>(), "p={p} root={root}");
+                        }
+                    } else {
+                        assert!(res.is_none());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_ring() {
+        for p in 1..=8 {
+            let (results, stats) = World::run(p, |comm| {
+                let g = Group::world(p);
+                comm.allgather(&g, vec![comm.rank() as u32 * 10])
+            });
+            for r in results {
+                assert_eq!(r.len(), p);
+                for (i, b) in r.iter().enumerate() {
+                    assert_eq!(b, &vec![i as u32 * 10]);
+                }
+            }
+            if p > 1 {
+                // Ring: each rank sends exactly p-1 messages.
+                for s in &stats {
+                    assert_eq!(s.total().msgs, (p - 1) as u64);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_variable_sizes() {
+        let p = 5;
+        let (results, _) = World::run(p, |comm| {
+            let g = Group::world(p);
+            let local: Vec<f32> = vec![comm.rank() as f32; comm.rank() + 1];
+            comm.allgather_concat(&g, local)
+        });
+        let expected: Vec<f32> =
+            (0..p).flat_map(|r| std::iter::repeat(r as f32).take(r + 1)).collect();
+        for r in results {
+            assert_eq!(r, expected);
+        }
+    }
+
+    #[test]
+    fn allreduce_sum() {
+        for p in [1, 2, 3, 4, 7, 8] {
+            let (results, _) = World::run(p, |comm| {
+                let g = Group::world(p);
+                comm.allreduce_sum_f32(&g, vec![1.0, comm.rank() as f32])
+            });
+            let rank_sum: f32 = (0..p).map(|r| r as f32).sum();
+            for r in results {
+                assert_eq!(r[0], p as f32);
+                assert_eq!(r[1], rank_sum);
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_deterministic_order() {
+        // Same inputs => bit-identical outputs across repetitions.
+        let p = 6;
+        let run = || {
+            let (results, _) = World::run(p, |comm| {
+                let g = Group::world(p);
+                let x = 0.1f32 * (comm.rank() as f32 + 1.0);
+                comm.allreduce_sum_f32(&g, vec![x, x * x, x * 1e-6])
+            });
+            results
+        };
+        let a = run();
+        let b = run();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn allreduce_minloc_ties_to_lower_loc() {
+        let p = 4;
+        let (results, _) = World::run(p, |comm| {
+            let g = Group::world(p);
+            // All ranks have the same value at slot 0 => lowest loc wins.
+            let vals = vec![5.0f32, comm.rank() as f32];
+            let locs = vec![comm.rank() as u32 + 10, comm.rank() as u32];
+            comm.allreduce_minloc(&g, vals, locs)
+        });
+        for (vals, locs) in results {
+            assert_eq!(vals, vec![5.0, 0.0]);
+            assert_eq!(locs, vec![10, 0]);
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_block_pow2_and_general() {
+        for p in [2usize, 3, 4, 8] {
+            let block = 3;
+            let (results, _) = World::run(p, |comm| {
+                let g = Group::world(p);
+                // data[j] = rank + j; reduction over ranks of block i is
+                // sum_r (r + (i*block + l)) = p*(i*block+l) + p(p-1)/2.
+                let data: Vec<f64> =
+                    (0..p * block).map(|j| comm.rank() as f64 + j as f64).collect();
+                comm.reduce_scatter_block(&g, data, |acc, other| {
+                    for (a, b) in acc.iter_mut().zip(other) {
+                        *a += b;
+                    }
+                })
+            });
+            let ranksum = (p * (p - 1) / 2) as f64;
+            for (i, r) in results.into_iter().enumerate() {
+                assert_eq!(r.len(), block);
+                for (l, v) in r.into_iter().enumerate() {
+                    let expect = p as f64 * (i * block + l) as f64 + ranksum;
+                    assert!((v - expect).abs() < 1e-9, "p={p} i={i} l={l}: {v} vs {expect}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn alltoallv_permutes() {
+        for p in [1usize, 2, 3, 5, 8] {
+            let (results, _) = World::run(p, |comm| {
+                let g = Group::world(p);
+                let me = comm.rank();
+                // Send to j a buffer [me, j] of length (j+1).
+                let sends: Vec<Vec<u32>> =
+                    (0..p).map(|j| vec![(me * 100 + j) as u32; j + 1]).collect();
+                comm.alltoallv(&g, sends)
+            });
+            for (j, recvd) in results.into_iter().enumerate() {
+                assert_eq!(recvd.len(), p);
+                for (i, buf) in recvd.into_iter().enumerate() {
+                    assert_eq!(buf, vec![(i * 100 + j) as u32; j + 1]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn subgroup_collectives_interleave() {
+        // Two disjoint groups run different collectives concurrently.
+        let p = 4;
+        let (results, _) = World::run(p, |comm| {
+            let me = comm.rank();
+            let g = if me < 2 { Group::new(vec![0, 1]) } else { Group::new(vec![2, 3]) };
+            let s = comm.allreduce_sum_f32(&g, vec![me as f32]);
+            let all = comm.allgather_concat(&g, vec![me as u32]);
+            (s[0], all)
+        });
+        assert_eq!(results[0].0, 1.0);
+        assert_eq!(results[2].0, 5.0);
+        assert_eq!(results[1].1, vec![0, 1]);
+        assert_eq!(results[3].1, vec![2, 3]);
+    }
+
+    #[test]
+    fn barrier_completes() {
+        let (results, _) = World::run(5, |comm| {
+            let g = Group::world(5);
+            comm.barrier(&g);
+            comm.rank()
+        });
+        assert_eq!(results, vec![0, 1, 2, 3, 4]);
+    }
+}

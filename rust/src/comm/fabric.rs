@@ -1,0 +1,324 @@
+//! The mailbox fabric: P ranks as OS threads, typed pt2pt messaging.
+//!
+//! Each rank owns a mailbox (`Mutex<Vec<Envelope>> + Condvar`). `send`
+//! deposits a type-erased payload into the destination's mailbox;
+//! `recv` blocks until a message with matching `(src, tag)` arrives.
+//! Tags are derived per communication group from a monotone per-group
+//! counter, so interleaved collectives on different groups (grid rows
+//! vs. columns) never cross-match.
+//!
+//! A receive timeout (default 120 s, `VIVALDI_RECV_TIMEOUT_SECS`) turns
+//! protocol deadlocks into loud panics instead of hung test suites.
+
+use std::any::Any;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use super::stats::{CommStats, PhaseStats};
+use super::Group;
+
+struct Envelope {
+    src: usize,
+    tag: u64,
+    payload: Box<dyn Any + Send>,
+}
+
+#[derive(Default)]
+struct Mailbox {
+    queue: Mutex<Vec<Envelope>>,
+    cv: Condvar,
+}
+
+/// The shared fabric: one mailbox per rank.
+pub struct World {
+    p: usize,
+    mailboxes: Arc<Vec<Mailbox>>,
+}
+
+impl World {
+    pub fn new(p: usize) -> Self {
+        assert!(p >= 1, "need at least one rank");
+        let mailboxes = Arc::new((0..p).map(|_| Mailbox::default()).collect::<Vec<_>>());
+        World { p, mailboxes }
+    }
+
+    pub fn size(&self) -> usize {
+        self.p
+    }
+
+    /// Spawn P rank threads running `f(comm)`; returns per-rank results
+    /// in rank order along with each rank's communication ledger.
+    ///
+    /// Panics in any rank propagate (they abort the whole run with that
+    /// rank's panic payload) — tests rely on this.
+    pub fn run<T, F>(p: usize, f: F) -> (Vec<T>, Vec<CommStats>)
+    where
+        T: Send,
+        F: Fn(&mut Comm) -> T + Sync,
+    {
+        let world = World::new(p);
+        let mut results: Vec<Option<T>> = (0..p).map(|_| None).collect();
+        let mut stats: Vec<Option<CommStats>> = (0..p).map(|_| None).collect();
+        {
+            let fref = &f;
+            let mbs = &world.mailboxes;
+            std::thread::scope(|s| {
+                let handles: Vec<_> = (0..p)
+                    .map(|rank| {
+                        s.spawn(move || {
+                            let mut comm = Comm::new(rank, p, Arc::clone(mbs));
+                            let out = fref(&mut comm);
+                            (out, comm.into_stats())
+                        })
+                    })
+                    .collect();
+                for (rank, h) in handles.into_iter().enumerate() {
+                    match h.join() {
+                        Ok((out, st)) => {
+                            results[rank] = Some(out);
+                            stats[rank] = Some(st);
+                        }
+                        Err(e) => std::panic::resume_unwind(e),
+                    }
+                }
+            });
+        }
+        (
+            results.into_iter().map(|r| r.unwrap()).collect(),
+            stats.into_iter().map(|s| s.unwrap()).collect(),
+        )
+    }
+}
+
+fn recv_timeout() -> Duration {
+    let secs = std::env::var("VIVALDI_RECV_TIMEOUT_SECS")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(120);
+    Duration::from_secs(secs)
+}
+
+/// Per-rank communicator handle.
+///
+/// Cloneable state lives in `Arc`s; the per-rank ledger and tag counters
+/// are rank-local. All collective operations live in
+/// [`super::collectives`] as methods on `Comm`.
+pub struct Comm {
+    rank: usize,
+    p: usize,
+    mailboxes: Arc<Vec<Mailbox>>,
+    stats: RefCell<CommStats>,
+    phase: RefCell<String>,
+    /// Per-group monotone counters for tag derivation.
+    group_ops: RefCell<HashMap<u64, u64>>,
+}
+
+impl Comm {
+    fn new(rank: usize, p: usize, mailboxes: Arc<Vec<Mailbox>>) -> Self {
+        Comm {
+            rank,
+            p,
+            mailboxes,
+            stats: RefCell::new(CommStats::new()),
+            phase: RefCell::new("default".to_string()),
+            group_ops: RefCell::new(HashMap::new()),
+        }
+    }
+
+    #[inline]
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    #[inline]
+    pub fn size(&self) -> usize {
+        self.p
+    }
+
+    /// Set the accounting phase for subsequent communication
+    /// (e.g. "gemm", "spmm", "update", "redist").
+    pub fn set_phase(&self, phase: &str) {
+        *self.phase.borrow_mut() = phase.to_string();
+    }
+
+    pub fn phase(&self) -> String {
+        self.phase.borrow().clone()
+    }
+
+    /// Snapshot of this rank's ledger.
+    pub fn stats(&self) -> CommStats {
+        self.stats.borrow().clone()
+    }
+
+    fn into_stats(self) -> CommStats {
+        self.stats.into_inner()
+    }
+
+    /// Record a communication event under the current phase.
+    pub(crate) fn record(&self, delta: PhaseStats) {
+        self.stats.borrow_mut().record(&self.phase.borrow(), delta);
+    }
+
+    /// Next tag for a collective op on `group`. All members advance
+    /// their counter at the same call, so tags agree.
+    pub(crate) fn next_tag(&self, group: &Group) -> u64 {
+        let mut ops = self.group_ops.borrow_mut();
+        let ctr = ops.entry(group.id()).or_insert(0);
+        *ctr += 1;
+        group.id().wrapping_add(ctr.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    /// Point-to-point send of a typed buffer. Counts `len·size_of::<T>`
+    /// bytes and one message (self-sends are not counted and bypass the
+    /// mailbox — MPI semantics where local copies are free).
+    pub fn send<T: Send + 'static>(&self, dst: usize, tag: u64, data: Vec<T>) {
+        assert!(dst < self.p, "send to invalid rank {dst}");
+        let bytes = (data.len() * std::mem::size_of::<T>()) as u64;
+        if dst == self.rank {
+            // Local move: deliver without counting.
+            let mb = &self.mailboxes[dst];
+            let mut q = mb.queue.lock().unwrap();
+            q.push(Envelope { src: self.rank, tag, payload: Box::new(data) });
+            mb.cv.notify_all();
+            return;
+        }
+        self.record(PhaseStats { msgs: 1, bytes, rounds: 0, crit_bytes: 0 });
+        let mb = &self.mailboxes[dst];
+        let mut q = mb.queue.lock().unwrap();
+        q.push(Envelope { src: self.rank, tag, payload: Box::new(data) });
+        mb.cv.notify_all();
+    }
+
+    /// Blocking receive matching `(src, tag)`.
+    ///
+    /// Panics on type mismatch or after the deadlock timeout.
+    pub fn recv<T: Send + 'static>(&self, src: usize, tag: u64) -> Vec<T> {
+        let mb = &self.mailboxes[self.rank];
+        let deadline = std::time::Instant::now() + recv_timeout();
+        let mut q = mb.queue.lock().unwrap();
+        loop {
+            if let Some(pos) = q.iter().position(|e| e.src == src && e.tag == tag) {
+                let env = q.remove(pos);
+                drop(q);
+                return *env
+                    .payload
+                    .downcast::<Vec<T>>()
+                    .unwrap_or_else(|_| panic!("type mismatch on recv from {src} tag {tag}"));
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                panic!(
+                    "rank {}: recv timeout waiting for src={} tag={} (protocol deadlock?)",
+                    self.rank, src, tag
+                );
+            }
+            let (qq, _t) = mb.cv.wait_timeout(q, deadline - now).unwrap();
+            q = qq;
+        }
+    }
+
+    /// Record critical-path α-β terms for a collective this rank took
+    /// part in (volume is recorded by the underlying `send`s).
+    pub(crate) fn record_critical(&self, rounds: u64, crit_bytes: u64) {
+        self.record(PhaseStats { msgs: 0, bytes: 0, rounds, crit_bytes });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pt2pt_roundtrip() {
+        let (results, stats) = World::run(2, |comm| {
+            if comm.rank() == 0 {
+                comm.send(1, 42, vec![1.0f32, 2.0, 3.0]);
+                0usize
+            } else {
+                let v: Vec<f32> = comm.recv(0, 42);
+                v.len()
+            }
+        });
+        assert_eq!(results, vec![0, 3]);
+        assert_eq!(stats[0].total().bytes, 12);
+        assert_eq!(stats[0].total().msgs, 1);
+        assert_eq!(stats[1].total().msgs, 0);
+    }
+
+    #[test]
+    fn tag_matching_out_of_order() {
+        let (results, _) = World::run(2, |comm| {
+            if comm.rank() == 0 {
+                comm.send(1, 1, vec![10u32]);
+                comm.send(1, 2, vec![20u32]);
+                0
+            } else {
+                // Receive in reverse order of sending.
+                let b: Vec<u32> = comm.recv(0, 2);
+                let a: Vec<u32> = comm.recv(0, 1);
+                (a[0] + b[0]) as usize
+            }
+        });
+        assert_eq!(results[1], 30);
+    }
+
+    #[test]
+    fn self_send_not_counted() {
+        let (_, stats) = World::run(1, |comm| {
+            comm.send(0, 7, vec![0u8; 100]);
+            let v: Vec<u8> = comm.recv(0, 7);
+            v.len()
+        });
+        assert_eq!(stats[0].total().bytes, 0);
+        assert_eq!(stats[0].total().msgs, 0);
+    }
+
+    #[test]
+    fn many_ranks_ring() {
+        let p = 8;
+        let (results, _) = World::run(p, |comm| {
+            let next = (comm.rank() + 1) % p;
+            let prev = (comm.rank() + p - 1) % p;
+            comm.send(next, 5, vec![comm.rank() as u64]);
+            let v: Vec<u64> = comm.recv(prev, 5);
+            v[0] as usize
+        });
+        for (r, got) in results.iter().enumerate() {
+            assert_eq!(*got, (r + p - 1) % p);
+        }
+    }
+
+    #[test]
+    fn phase_accounting() {
+        let (_, stats) = World::run(2, |comm| {
+            comm.set_phase("alpha");
+            if comm.rank() == 0 {
+                comm.send(1, 1, vec![0u64; 4]);
+            } else {
+                let _: Vec<u64> = comm.recv(0, 1);
+            }
+            comm.set_phase("beta");
+            if comm.rank() == 0 {
+                comm.send(1, 2, vec![0u64; 2]);
+            } else {
+                let _: Vec<u64> = comm.recv(0, 2);
+            }
+        });
+        assert_eq!(stats[0].get("alpha").bytes, 32);
+        assert_eq!(stats[0].get("beta").bytes, 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "type mismatch")]
+    fn type_mismatch_panics() {
+        let _ = World::run(2, |comm| {
+            if comm.rank() == 0 {
+                comm.send(1, 9, vec![1.0f64]);
+            } else {
+                let _: Vec<u32> = comm.recv(0, 9);
+            }
+        });
+    }
+}

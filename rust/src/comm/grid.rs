@@ -1,0 +1,145 @@
+//! 2D process grid with **column-major** rank ordering.
+//!
+//! The paper (§V.C) arranges the √P×√P grid column-major so that the
+//! 1.5D algorithm's `MPI_Reduce_scatter_block` along process columns
+//! lands the fully reduced Eᵀ partitions on *contiguous global ranks*,
+//! which is exactly the 1D columnwise partitioning the clustering-loop
+//! update step needs. `Grid2D` encodes that ordering and hands out the
+//! row/column [`Group`]s the algorithms communicate over.
+
+use super::Group;
+
+/// A square process grid over ranks `0..p` in column-major order:
+/// global rank `g` sits at `(row = g % q, col = g / q)` for `q = √P`.
+#[derive(Debug, Clone)]
+pub struct Grid2D {
+    /// Grid side length √P.
+    q: usize,
+}
+
+impl Grid2D {
+    /// Build a √P×√P grid; `p` must be a perfect square.
+    pub fn new(p: usize) -> Result<Self, String> {
+        let q = (p as f64).sqrt().round() as usize;
+        if q * q != p {
+            return Err(format!("2D grid requires a perfect-square rank count, got {p}"));
+        }
+        Ok(Grid2D { q })
+    }
+
+    /// Grid side √P.
+    #[inline]
+    pub fn q(&self) -> usize {
+        self.q
+    }
+
+    /// Total ranks P.
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.q * self.q
+    }
+
+    /// (row, col) of a global rank (column-major).
+    #[inline]
+    pub fn coords(&self, rank: usize) -> (usize, usize) {
+        (rank % self.q, rank / self.q)
+    }
+
+    /// Global rank at (row, col).
+    #[inline]
+    pub fn rank_at(&self, row: usize, col: usize) -> usize {
+        debug_assert!(row < self.q && col < self.q);
+        col * self.q + row
+    }
+
+    /// Row index of a global rank.
+    #[inline]
+    pub fn row_of(&self, rank: usize) -> usize {
+        rank % self.q
+    }
+
+    /// Column index of a global rank.
+    #[inline]
+    pub fn col_of(&self, rank: usize) -> usize {
+        rank / self.q
+    }
+
+    /// The communication group of row `row` (all columns, in column
+    /// order).
+    pub fn row_group(&self, row: usize) -> Group {
+        Group::new((0..self.q).map(|c| self.rank_at(row, c)).collect())
+    }
+
+    /// The communication group of column `col` (all rows, in row order).
+    pub fn col_group(&self, col: usize) -> Group {
+        Group::new((0..self.q).map(|r| self.rank_at(r, col)).collect())
+    }
+
+    /// Diagonal process of row `i`: P(i, i).
+    #[inline]
+    pub fn diagonal_of_row(&self, row: usize) -> usize {
+        self.rank_at(row, row)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn column_major_layout() {
+        let g = Grid2D::new(4).unwrap();
+        // q=2, column-major: rank 0 -> (0,0), 1 -> (1,0), 2 -> (0,1), 3 -> (1,1)
+        assert_eq!(g.coords(0), (0, 0));
+        assert_eq!(g.coords(1), (1, 0));
+        assert_eq!(g.coords(2), (0, 1));
+        assert_eq!(g.coords(3), (1, 1));
+        assert_eq!(g.rank_at(1, 0), 1);
+        assert_eq!(g.rank_at(0, 1), 2);
+    }
+
+    #[test]
+    fn roundtrip_coords() {
+        let g = Grid2D::new(16).unwrap();
+        for r in 0..16 {
+            let (i, j) = g.coords(r);
+            assert_eq!(g.rank_at(i, j), r);
+            assert_eq!(g.row_of(r), i);
+            assert_eq!(g.col_of(r), j);
+        }
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        assert!(Grid2D::new(3).is_err());
+        assert!(Grid2D::new(8).is_err());
+        assert!(Grid2D::new(1).is_ok());
+        assert!(Grid2D::new(256).is_ok());
+    }
+
+    #[test]
+    fn groups() {
+        let g = Grid2D::new(9).unwrap();
+        // Row 1 of a 3x3 column-major grid: ranks 1, 4, 7.
+        assert_eq!(g.row_group(1).ranks(), &[1, 4, 7]);
+        // Column 2: ranks 6, 7, 8.
+        assert_eq!(g.col_group(2).ranks(), &[6, 7, 8]);
+        assert_eq!(g.diagonal_of_row(2), g.rank_at(2, 2));
+    }
+
+    #[test]
+    fn reduce_scatter_contiguity_property() {
+        // The property §V.C relies on: walking column j's members in row
+        // order and assigning each the l-th sub-block yields global rank
+        // p = j*q + l — i.e. contiguous ranks cover contiguous Eᵀ
+        // column blocks.
+        let g = Grid2D::new(16).unwrap();
+        let q = g.q();
+        for j in 0..q {
+            let col = g.col_group(j);
+            for l in 0..q {
+                assert_eq!(col.rank_at(l), j * q + l);
+            }
+        }
+    }
+}

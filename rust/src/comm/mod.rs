@@ -1,0 +1,125 @@
+//! Simulated multi-rank communication fabric with exact accounting.
+//!
+//! The paper's contribution is the *communication structure* of four
+//! distributed Kernel K-means algorithms. This module provides the
+//! substrate those algorithms run on in this reproduction:
+//!
+//! * [`World`] spawns P ranks as OS threads and gives each a [`Comm`]
+//!   handle over a shared mailbox fabric ([`fabric`]).
+//! * [`collectives`] implements the MPI collectives the paper uses
+//!   (Allgather(v), Allreduce, Reduce, Reduce_scatter_block, Bcast,
+//!   Gather, Alltoallv, Barrier) with textbook algorithms whose
+//!   message/word counts match the α-β analysis in the paper's §IV.
+//! * Every collective records **exact** per-phase communication counts
+//!   (total messages/bytes sent by this rank) *and* the critical-path
+//!   α-β terms (rounds, bytes on the critical path) into [`CommStats`],
+//!   from which Table I and the runtime-breakdown figures are produced.
+//! * [`grid::Grid2D`] arranges ranks column-major (required by the 1.5D
+//!   reduce-scatter layout, paper §V.C) and derives row/column groups.
+//!
+//! Ranks execute real numerics concurrently; the fabric moves real data,
+//! so distributed results are testable against single-rank oracles.
+
+pub mod fabric;
+pub mod collectives;
+pub mod grid;
+pub mod stats;
+
+pub use fabric::{Comm, World};
+pub use grid::Grid2D;
+pub use stats::{CommStats, PhaseStats};
+
+/// An ordered set of global ranks forming a communication group
+/// (world, a grid row, a grid column, ...). All collective operations
+/// are defined over a `Group`; members must call the same sequence of
+/// collectives on equal groups.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Group {
+    ranks: Vec<usize>,
+    /// Stable identifier mixed into message tags so collectives on
+    /// different groups never cross-match.
+    id: u64,
+}
+
+impl Group {
+    pub fn new(ranks: Vec<usize>) -> Self {
+        assert!(!ranks.is_empty(), "empty group");
+        let mut sorted = ranks.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), ranks.len(), "duplicate ranks in group");
+        let id = fnv1a(&ranks);
+        Group { ranks, id }
+    }
+
+    pub fn world(p: usize) -> Self {
+        Group::new((0..p).collect())
+    }
+
+    #[inline]
+    pub fn size(&self) -> usize {
+        self.ranks.len()
+    }
+
+    #[inline]
+    pub fn ranks(&self) -> &[usize] {
+        &self.ranks
+    }
+
+    #[inline]
+    pub fn rank_at(&self, idx: usize) -> usize {
+        self.ranks[idx]
+    }
+
+    /// Index of a global rank within this group.
+    #[inline]
+    pub fn index_of(&self, global_rank: usize) -> Option<usize> {
+        self.ranks.iter().position(|&r| r == global_rank)
+    }
+
+    #[inline]
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+fn fnv1a(ranks: &[usize]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &r in ranks {
+        for b in (r as u64).to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_indexing() {
+        let g = Group::new(vec![3, 1, 7]);
+        assert_eq!(g.size(), 3);
+        assert_eq!(g.index_of(1), Some(1));
+        assert_eq!(g.index_of(7), Some(2));
+        assert_eq!(g.index_of(0), None);
+        assert_eq!(g.rank_at(0), 3);
+    }
+
+    #[test]
+    fn group_ids_differ() {
+        let a = Group::new(vec![0, 1, 2, 3]);
+        let b = Group::new(vec![0, 1, 2]);
+        let c = Group::new(vec![1, 0, 2, 3]); // different order => different id
+        assert_ne!(a.id(), b.id());
+        assert_ne!(a.id(), c.id());
+    }
+
+    #[test]
+    #[should_panic]
+    fn duplicate_ranks_rejected() {
+        let _ = Group::new(vec![0, 1, 1]);
+    }
+}

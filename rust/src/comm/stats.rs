@@ -1,0 +1,133 @@
+//! Exact communication accounting, per rank and per phase.
+//!
+//! Two kinds of numbers are tracked for every collective call:
+//!
+//! * **Volume**: total messages and bytes *sent by this rank* — exact
+//!   counts of what crossed rank boundaries. These regenerate Table I
+//!   (communication volume of K and Dᵀ computation per algorithm).
+//! * **Critical path**: the α-β terms of the collective's schedule —
+//!   `rounds` (latency hops on the critical path) and `crit_bytes`
+//!   (bytes serialized on the critical path). The machine model
+//!   ([`crate::model`]) turns these into modeled communication time:
+//!   `T = rounds·α + crit_bytes·β`, mirroring the paper's cost analysis.
+
+use std::collections::BTreeMap;
+
+/// Counters for one phase (e.g. "gemm", "spmm", "update", "redist").
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct PhaseStats {
+    /// Messages sent by this rank.
+    pub msgs: u64,
+    /// Bytes sent by this rank.
+    pub bytes: u64,
+    /// Latency rounds on the critical path (α multiplier).
+    pub rounds: u64,
+    /// Bytes on the critical path (β multiplier).
+    pub crit_bytes: u64,
+}
+
+impl PhaseStats {
+    pub fn add(&mut self, other: &PhaseStats) {
+        self.msgs += other.msgs;
+        self.bytes += other.bytes;
+        self.rounds += other.rounds;
+        self.crit_bytes += other.crit_bytes;
+    }
+
+    /// Elementwise max (for critical-path aggregation across ranks).
+    pub fn max(&self, other: &PhaseStats) -> PhaseStats {
+        PhaseStats {
+            msgs: self.msgs.max(other.msgs),
+            bytes: self.bytes.max(other.bytes),
+            rounds: self.rounds.max(other.rounds),
+            crit_bytes: self.crit_bytes.max(other.crit_bytes),
+        }
+    }
+}
+
+/// Per-rank ledger of [`PhaseStats`] keyed by phase label.
+#[derive(Debug, Default, Clone)]
+pub struct CommStats {
+    phases: BTreeMap<String, PhaseStats>,
+}
+
+impl CommStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, phase: &str, delta: PhaseStats) {
+        self.phases.entry(phase.to_string()).or_default().add(&delta);
+    }
+
+    pub fn get(&self, phase: &str) -> PhaseStats {
+        self.phases.get(phase).copied().unwrap_or_default()
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&str, &PhaseStats)> {
+        self.phases.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Sum over all phases.
+    pub fn total(&self) -> PhaseStats {
+        let mut t = PhaseStats::default();
+        for s in self.phases.values() {
+            t.add(s);
+        }
+        t
+    }
+
+    /// Merge by summation (aggregate volume across ranks).
+    pub fn merged_sum(all: &[CommStats]) -> CommStats {
+        let mut out = CommStats::new();
+        for cs in all {
+            for (k, v) in &cs.phases {
+                out.phases.entry(k.clone()).or_default().add(v);
+            }
+        }
+        out
+    }
+
+    /// Merge by per-phase max (critical path across ranks).
+    pub fn merged_max(all: &[CommStats]) -> CommStats {
+        let mut out = CommStats::new();
+        for cs in all {
+            for (k, v) in &cs.phases {
+                let e = out.phases.entry(k.clone()).or_default();
+                *e = e.max(v);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_total() {
+        let mut s = CommStats::new();
+        s.record("gemm", PhaseStats { msgs: 2, bytes: 100, rounds: 2, crit_bytes: 50 });
+        s.record("gemm", PhaseStats { msgs: 1, bytes: 10, rounds: 1, crit_bytes: 10 });
+        s.record("spmm", PhaseStats { msgs: 5, bytes: 7, rounds: 5, crit_bytes: 7 });
+        assert_eq!(s.get("gemm").msgs, 3);
+        assert_eq!(s.get("gemm").bytes, 110);
+        assert_eq!(s.total().msgs, 8);
+        assert_eq!(s.get("absent"), PhaseStats::default());
+    }
+
+    #[test]
+    fn merges() {
+        let mut a = CommStats::new();
+        a.record("x", PhaseStats { msgs: 1, bytes: 10, rounds: 1, crit_bytes: 10 });
+        let mut b = CommStats::new();
+        b.record("x", PhaseStats { msgs: 3, bytes: 5, rounds: 3, crit_bytes: 5 });
+        let sum = CommStats::merged_sum(&[a.clone(), b.clone()]);
+        assert_eq!(sum.get("x").msgs, 4);
+        assert_eq!(sum.get("x").bytes, 15);
+        let max = CommStats::merged_max(&[a, b]);
+        assert_eq!(max.get("x").msgs, 3);
+        assert_eq!(max.get("x").bytes, 10);
+    }
+}

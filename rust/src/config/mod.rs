@@ -1,0 +1,256 @@
+//! Experiment configuration: defaults that regenerate the paper's
+//! evaluation at laptop scale, overridable from JSON files and CLI
+//! flags.
+//!
+//! The scale knobs keep the *ratios* the paper's evaluation is built
+//! on: weak scaling grows n with √G at fixed per-GPU work; strong
+//! scaling fixes n near the single-node memory limit; the device
+//! budget is set so per-rank K occupies the same fraction of "device
+//! memory" as the paper's 36.9 GB / 80 GB (see DESIGN.md §1).
+
+use crate::data::datasets::PaperDataset;
+use crate::util::json::Json;
+
+/// Simulated device-memory model for one experiment family.
+///
+/// The paper's feasibility boundaries (1D OOMs on KDD past 4 GPUs;
+/// H-1D cannot run weak scaling past 16 GPUs — §VI.B) come from device
+/// memory that we do not physically have, so we reproduce them as a
+/// *calibrated budget model* (DESIGN.md §1):
+///
+/// * `budget` keeps the paper's device-to-K ratio: per-rank K occupies
+///   36.9 GB of an 80 GB A100 at the paper's scale, so
+///   budget = 2.17 × per-rank-K.
+/// * `repl_factor` scales the 1D algorithm's replicated-P charge so
+///   that the charge equals λ·n·d_paper·(n_ours/n_paper)·4 with λ = 4
+///   (P + Pᵀ + SLATE/cuSPARSE workspace) — the value at which the
+///   paper's own boundary (d = 10000 OOMs exactly past G = 4 in weak
+///   scaling) falls out of the α-β-style inequality 4·d > 1.17·n/G.
+/// * `redist_factor` charges H-1D's Alltoallv staging ν·√P·tile bytes
+///   (per-peer bounce buffers grow with the grid width); ν = 0.2
+///   reproduces the paper's weak-scaling boundary (runs at 16, not 64).
+#[derive(Debug, Clone, Copy)]
+pub struct MemModel {
+    pub budget: u64,
+    pub repl_factor: f64,
+    pub redist_factor: f64,
+}
+
+impl MemModel {
+    /// λ: replicated-P overhead multiplier (P + Pᵀ + workspace).
+    pub const LAMBDA_REPL: f64 = 4.0;
+    /// ν: per-peer Alltoallv staging constant.
+    pub const NU_REDIST: f64 = 0.08;
+    /// Effective device-to-K budget ratio. The raw paper ratio is
+    /// 80 GB / 36.9 GB ≈ 2.17; the effective value adds back the
+    /// workspace slack so that H-1D's peak (K tile + staged block row
+    /// + ν·√P·tile bounce buffers ≈ (2+ν√P)·K) fits at √P ≤ 4 and
+    /// fails at √P = 8 — the paper's observed boundary.
+    pub const DEVICE_TO_K: f64 = 2.4;
+
+    fn calibrated(
+        k_rank_bytes: u64,
+        ds: PaperDataset,
+        n_ours: usize,
+        n_paper: usize,
+        d_cap: Option<usize>,
+    ) -> MemModel {
+        let d_actual = d_cap.unwrap_or(ds.d()) as f64;
+        // Memory-equivalent feature count: the paper's d scaled by our
+        // n ratio, so the replication-vs-K proportion is preserved.
+        let d_mem = ds.d() as f64 * n_ours as f64 / n_paper as f64;
+        MemModel {
+            budget: (k_rank_bytes as f64 * Self::DEVICE_TO_K) as u64,
+            repl_factor: Self::LAMBDA_REPL * d_mem / d_actual,
+            redist_factor: Self::NU_REDIST,
+        }
+    }
+
+    /// No limits (plain library use).
+    pub fn unlimited() -> MemModel {
+        MemModel { budget: u64::MAX, repl_factor: 1.0, redist_factor: 0.0 }
+    }
+}
+
+/// Scaled-down experiment scale (paper values in comments).
+#[derive(Debug, Clone)]
+pub struct Scale {
+    /// Weak scaling per-√G points (paper: 96,000).
+    pub weak_n0: usize,
+    /// Strong scaling fixed n (paper: 192,000).
+    pub strong_n: usize,
+    /// Feature caps per dataset stand-in (compute affordability; the
+    /// memory model uses the same capped d consistently).
+    pub d_cap_kdd: usize,
+    pub d_cap_mnist: usize,
+    /// Clustering iterations per fit (paper: 100).
+    pub iters: usize,
+    /// GPU counts to sweep (paper: up to 256).
+    pub gpu_counts: Vec<usize>,
+    /// k values (paper: {16, 32, 64}; figures show {16, 64}).
+    pub ks: Vec<usize>,
+    /// Random seed.
+    pub seed: u64,
+}
+
+impl Default for Scale {
+    fn default() -> Self {
+        Scale {
+            weak_n0: 512,
+            strong_n: 2048,
+            d_cap_kdd: 256,
+            d_cap_mnist: 128,
+            iters: 10,
+            gpu_counts: vec![1, 4, 16, 64, 256],
+            ks: vec![16, 64],
+            seed: 20260710,
+        }
+    }
+}
+
+impl Scale {
+    /// Quick profile for smoke tests / CI.
+    pub fn quick() -> Self {
+        Scale {
+            weak_n0: 128,
+            strong_n: 1024,
+            d_cap_kdd: 64,
+            d_cap_mnist: 64,
+            iters: 5,
+            gpu_counts: vec![1, 4, 16],
+            ks: vec![16],
+            seed: 20260710,
+        }
+    }
+
+    /// Weak-scaling n for G gpus: n = √G · n0 (paper §VI.B).
+    pub fn weak_n(&self, g: usize) -> usize {
+        ((g as f64).sqrt() * self.weak_n0 as f64).round() as usize
+    }
+
+    /// Feature cap for a dataset stand-in.
+    pub fn d_cap(&self, ds: PaperDataset) -> Option<usize> {
+        match ds {
+            PaperDataset::KddLike => Some(self.d_cap_kdd),
+            PaperDataset::HiggsLike => None, // d=28 is affordable as-is
+            PaperDataset::Mnist8mLike => Some(self.d_cap_mnist),
+        }
+    }
+
+    /// Device-memory model for weak scaling (see `MemModel`).
+    pub fn mem_model_weak(&self, ds: PaperDataset) -> MemModel {
+        // Per-rank K is constant in weak scaling: n²/G·4 = n0²·4.
+        let k_rank = (self.weak_n0 as u64).pow(2) * 4;
+        MemModel::calibrated(k_rank, ds, self.weak_n0, 96_000, self.d_cap(ds))
+    }
+
+    /// Device-memory model for strong scaling: the paper picks n so K
+    /// is "near the single-node memory limit" (node = 4 GPUs), i.e.
+    /// per-rank K at G=4 fills the paper's 36.9/80 ratio.
+    pub fn mem_model_strong(&self, ds: PaperDataset) -> MemModel {
+        let k_rank_at_4 = (self.strong_n as u64).pow(2) * 4 / 4;
+        MemModel::calibrated(k_rank_at_4, ds, self.strong_n, 192_000, self.d_cap(ds))
+    }
+
+    /// Apply overrides from a JSON object (unknown keys rejected).
+    pub fn apply_json(&mut self, j: &Json) -> Result<(), String> {
+        let obj = j.as_obj().ok_or("scale config must be an object")?;
+        for (key, val) in obj {
+            match key.as_str() {
+                "weak_n0" => self.weak_n0 = val.as_usize().ok_or("weak_n0")?,
+                "strong_n" => self.strong_n = val.as_usize().ok_or("strong_n")?,
+                "d_cap_kdd" => self.d_cap_kdd = val.as_usize().ok_or("d_cap_kdd")?,
+                "d_cap_mnist" => self.d_cap_mnist = val.as_usize().ok_or("d_cap_mnist")?,
+                "iters" => self.iters = val.as_usize().ok_or("iters")?,
+                "seed" => self.seed = val.as_usize().ok_or("seed")? as u64,
+                "gpu_counts" => {
+                    self.gpu_counts = val
+                        .as_arr()
+                        .ok_or("gpu_counts")?
+                        .iter()
+                        .map(|v| v.as_usize().ok_or("gpu_counts entry".to_string()))
+                        .collect::<Result<_, _>>()?;
+                }
+                "ks" => {
+                    self.ks = val
+                        .as_arr()
+                        .ok_or("ks")?
+                        .iter()
+                        .map(|v| v.as_usize().ok_or("ks entry".to_string()))
+                        .collect::<Result<_, _>>()?;
+                }
+                other => return Err(format!("unknown scale key {other:?}")),
+            }
+        }
+        Ok(())
+    }
+
+    /// Load overrides from a JSON file.
+    pub fn load_overrides(&mut self, path: &std::path::Path) -> Result<(), String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let j = crate::util::json::parse(&text)?;
+        self.apply_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weak_n_scales_with_sqrt_g() {
+        let s = Scale::default();
+        assert_eq!(s.weak_n(1), s.weak_n0);
+        assert_eq!(s.weak_n(4), 2 * s.weak_n0);
+        assert_eq!(s.weak_n(256), 16 * s.weak_n0);
+    }
+
+    #[test]
+    fn weak_feasibility_boundaries_match_paper() {
+        // The calibrated model must reproduce §VI.B's observations:
+        // 1D+KDD OOMs past 4 GPUs; 1D+MNIST8m never; H-1D past 16.
+        let s = Scale::default();
+        let kdd = s.mem_model_weak(PaperDataset::KddLike);
+        let mnist = s.mem_model_weak(PaperDataset::Mnist8mLike);
+        let d_kdd = s.d_cap_kdd as f64;
+        let d_mnist = s.d_cap_mnist as f64;
+        let charge_1d = |model: &MemModel, g: usize, d: f64| {
+            let n = s.weak_n(g) as f64;
+            // replicated P (scaled charge) + own K block row.
+            (model.repl_factor * n * d * 4.0) + n * n * 4.0 / g as f64
+        };
+        // KDD: fits at 4, OOMs at 16 and beyond.
+        assert!(charge_1d(&kdd, 4, d_kdd) <= kdd.budget as f64, "KDD G=4 must fit");
+        assert!(charge_1d(&kdd, 16, d_kdd) > kdd.budget as f64, "KDD G=16 must OOM");
+        // MNIST: fits at every G.
+        for g in [4usize, 16, 64, 256] {
+            assert!(
+                charge_1d(&mnist, g, d_mnist) <= mnist.budget as f64,
+                "MNIST G={g} must fit"
+            );
+        }
+        // H-1D peak: resident K tile + staged block row + ν√P·tile
+        // bounce buffers = (2 + ν√P)·K_rank: fits at 16, not at 64.
+        let k_rank = (s.weak_n0 * s.weak_n0 * 4) as f64;
+        let h1d = |q: f64| (2.0 + MemModel::NU_REDIST * q) * k_rank;
+        assert!(h1d(4.0) <= kdd.budget as f64, "H-1D G=16 must fit");
+        assert!(h1d(8.0) > kdd.budget as f64, "H-1D G=64 must OOM");
+    }
+
+    #[test]
+    fn json_overrides() {
+        let mut s = Scale::default();
+        let j = crate::util::json::parse(
+            r#"{"weak_n0": 64, "gpu_counts": [1, 4], "ks": [8], "iters": 3}"#,
+        )
+        .unwrap();
+        s.apply_json(&j).unwrap();
+        assert_eq!(s.weak_n0, 64);
+        assert_eq!(s.gpu_counts, vec![1, 4]);
+        assert_eq!(s.ks, vec![8]);
+        assert_eq!(s.iters, 3);
+        // Unknown key rejected.
+        let bad = crate::util::json::parse(r#"{"nope": 1}"#).unwrap();
+        assert!(s.apply_json(&bad).is_err());
+    }
+}

@@ -1,0 +1,37 @@
+//! Datasets: synthetic generators, paper-dataset stand-ins, and a
+//! libSVM-format reader.
+//!
+//! The paper evaluates on three libSVM datasets (Table II): KDD-sampled
+//! (8.4M × 10000), HIGGS (11M × 28), MNIST8m (8.1M × 784). Those files
+//! are not available on this testbed, so [`datasets`] provides
+//! generators that match each dataset's **feature dimensionality and
+//! cluster structure class** at configurable scaled-down n — the
+//! algorithms' cost structure depends only on (n, d, k) and V's
+//! sparsity, all preserved (see DESIGN.md §1). [`libsvm`] reads the
+//! real files if present, so they drop in transparently.
+
+pub mod synth;
+pub mod datasets;
+pub mod libsvm;
+
+use crate::dense::DenseMatrix;
+
+/// A labeled dataset (labels are generator ground truth where
+/// available, used only by quality metrics — never by the algorithms).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub points: DenseMatrix,
+    /// Ground-truth labels (empty when unknown).
+    pub labels: Vec<u32>,
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.points.rows()
+    }
+
+    pub fn d(&self) -> usize {
+        self.points.cols()
+    }
+}

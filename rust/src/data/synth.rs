@@ -1,0 +1,147 @@
+//! Synthetic dataset generators with known ground truth.
+//!
+//! Deterministic for a given seed (own PRNG), covering the cluster
+//! geometries the paper's motivation cites: linearly separable blobs
+//! (plain K-means suffices) and non-linearly separable rings/moons
+//! (where Kernel K-means is required).
+
+use super::Dataset;
+use crate::dense::DenseMatrix;
+use crate::util::rng::Rng;
+
+/// Isotropic Gaussian blobs: `n` points, `d` dims, `k` clusters whose
+/// centers sit `separation` standard deviations apart on random axes.
+pub fn gaussian_blobs(n: usize, d: usize, k: usize, separation: f64, seed: u64) -> Dataset {
+    assert!(k >= 1 && d >= 1 && n >= k);
+    let mut rng = Rng::new(seed);
+    // Random unit-ish centers scaled by separation.
+    let centers: Vec<Vec<f64>> = (0..k)
+        .map(|_| (0..d).map(|_| rng.normal() * separation).collect())
+        .collect();
+    let mut data = Vec::with_capacity(n * d);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % k; // balanced clusters, deterministic
+        labels.push(c as u32);
+        for f in 0..d {
+            data.push((centers[c][f] + rng.normal()) as f32);
+        }
+    }
+    Dataset {
+        points: DenseMatrix::from_vec(n, d, data),
+        labels,
+        name: format!("blobs(n={n},d={d},k={k})"),
+    }
+}
+
+/// `k` concentric rings in 2D (radius 1, 2, ..., k) with small radial
+/// noise — the canonical non-linearly-separable case.
+pub fn concentric_rings(n: usize, k: usize, seed: u64) -> Dataset {
+    assert!(k >= 1 && n >= k);
+    let mut rng = Rng::new(seed);
+    let mut data = Vec::with_capacity(n * 2);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % k;
+        labels.push(c as u32);
+        let radius = (c + 1) as f64 + rng.normal() * 0.06;
+        let theta = rng.range_f64(0.0, 2.0 * std::f64::consts::PI);
+        data.push((radius * theta.cos()) as f32);
+        data.push((radius * theta.sin()) as f32);
+    }
+    Dataset {
+        points: DenseMatrix::from_vec(n, 2, data),
+        labels,
+        name: format!("rings(n={n},k={k})"),
+    }
+}
+
+/// Two interleaving half-moons in 2D.
+pub fn two_moons(n: usize, noise: f64, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut data = Vec::with_capacity(n * 2);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % 2;
+        labels.push(c as u32);
+        let t = rng.range_f64(0.0, std::f64::consts::PI);
+        let (x, y) = if c == 0 {
+            (t.cos(), t.sin())
+        } else {
+            (1.0 - t.cos(), 0.5 - t.sin())
+        };
+        data.push((x + rng.normal() * noise) as f32);
+        data.push((y + rng.normal() * noise) as f32);
+    }
+    Dataset {
+        points: DenseMatrix::from_vec(n, 2, data),
+        labels,
+        name: format!("moons(n={n})"),
+    }
+}
+
+/// Anisotropic Gaussian mixture in `d` dims with per-cluster random
+/// covariance scale — harder blobs (used by the MNIST-like stand-in).
+pub fn anisotropic_mixture(n: usize, d: usize, k: usize, seed: u64) -> Dataset {
+    assert!(k >= 1 && d >= 1 && n >= k);
+    let mut rng = Rng::new(seed);
+    let centers: Vec<Vec<f64>> =
+        (0..k).map(|_| (0..d).map(|_| rng.normal() * 4.0).collect()).collect();
+    let scales: Vec<Vec<f64>> =
+        (0..k).map(|_| (0..d).map(|_| 0.5 + rng.next_f64() * 1.5).collect()).collect();
+    let mut data = Vec::with_capacity(n * d);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % k;
+        labels.push(c as u32);
+        for f in 0..d {
+            data.push((centers[c][f] + rng.normal() * scales[c][f]) as f32);
+        }
+    }
+    Dataset {
+        points: DenseMatrix::from_vec(n, d, data),
+        labels,
+        name: format!("aniso(n={n},d={d},k={k})"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blobs_shape_and_determinism() {
+        let a = gaussian_blobs(50, 4, 3, 3.0, 7);
+        let b = gaussian_blobs(50, 4, 3, 3.0, 7);
+        assert_eq!(a.n(), 50);
+        assert_eq!(a.d(), 4);
+        assert_eq!(a.labels.len(), 50);
+        assert_eq!(a.points, b.points);
+        let c = gaussian_blobs(50, 4, 3, 3.0, 8);
+        assert_ne!(a.points, c.points);
+    }
+
+    #[test]
+    fn rings_radii_separate() {
+        let ds = concentric_rings(200, 2, 9);
+        for i in 0..200 {
+            let r = (ds.points.get(i, 0).powi(2) + ds.points.get(i, 1).powi(2)).sqrt();
+            let expect = (ds.labels[i] + 1) as f32;
+            assert!((r - expect).abs() < 0.5, "point {i}: r={r} label={}", ds.labels[i]);
+        }
+    }
+
+    #[test]
+    fn moons_two_classes() {
+        let ds = two_moons(100, 0.05, 10);
+        assert_eq!(ds.labels.iter().filter(|&&l| l == 0).count(), 50);
+    }
+
+    #[test]
+    fn balanced_label_counts() {
+        let ds = gaussian_blobs(90, 2, 3, 2.0, 11);
+        for c in 0..3u32 {
+            assert_eq!(ds.labels.iter().filter(|&&l| l == c).count(), 30);
+        }
+    }
+}

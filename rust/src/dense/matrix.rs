@@ -1,0 +1,254 @@
+//! Row-major dense f32 matrix.
+
+use crate::util::rng::Rng;
+
+/// Row-major dense matrix of f32.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseMatrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl DenseMatrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        DenseMatrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        DenseMatrix { rows, cols, data }
+    }
+
+    /// Build elementwise.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        DenseMatrix { rows, cols, data }
+    }
+
+    /// Uniform random entries in [-1, 1).
+    pub fn random(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols).map(|_| (rng.next_f32() * 2.0) - 1.0).collect();
+        DenseMatrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Contiguous row slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Bytes of the backing store (for memory budgeting).
+    pub fn bytes(&self) -> u64 {
+        (self.data.len() * std::mem::size_of::<f32>()) as u64
+    }
+
+    /// Copy of a contiguous row block [r0, r1).
+    pub fn row_block(&self, r0: usize, r1: usize) -> DenseMatrix {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        DenseMatrix {
+            rows: r1 - r0,
+            cols: self.cols,
+            data: self.data[r0 * self.cols..r1 * self.cols].to_vec(),
+        }
+    }
+
+    /// Copy of a contiguous column block [c0, c1).
+    pub fn col_block(&self, c0: usize, c1: usize) -> DenseMatrix {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        let w = c1 - c0;
+        let mut data = Vec::with_capacity(self.rows * w);
+        for i in 0..self.rows {
+            data.extend_from_slice(&self.data[i * self.cols + c0..i * self.cols + c1]);
+        }
+        DenseMatrix { rows: self.rows, cols: w, data }
+    }
+
+    /// Copy of an arbitrary sub-block [r0,r1)×[c0,c1).
+    pub fn block(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> DenseMatrix {
+        assert!(r0 <= r1 && r1 <= self.rows && c0 <= c1 && c1 <= self.cols);
+        let w = c1 - c0;
+        let mut data = Vec::with_capacity((r1 - r0) * w);
+        for i in r0..r1 {
+            data.extend_from_slice(&self.data[i * self.cols + c0..i * self.cols + c1]);
+        }
+        DenseMatrix { rows: r1 - r0, cols: w, data }
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> DenseMatrix {
+        let mut out = DenseMatrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// Write `other` into this matrix at offset (r0, c0).
+    pub fn paste(&mut self, r0: usize, c0: usize, other: &DenseMatrix) {
+        assert!(r0 + other.rows <= self.rows && c0 + other.cols <= self.cols);
+        for i in 0..other.rows {
+            let dst = (r0 + i) * self.cols + c0;
+            self.data[dst..dst + other.cols].copy_from_slice(other.row(i));
+        }
+    }
+
+    /// Stack row blocks vertically (all must share `cols`).
+    pub fn vstack(blocks: &[DenseMatrix]) -> DenseMatrix {
+        assert!(!blocks.is_empty());
+        let cols = blocks[0].cols;
+        assert!(blocks.iter().all(|b| b.cols == cols), "vstack: column mismatch");
+        let rows = blocks.iter().map(|b| b.rows).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for b in blocks {
+            data.extend_from_slice(&b.data);
+        }
+        DenseMatrix { rows, cols, data }
+    }
+
+    /// Stack column blocks horizontally (all must share `rows`).
+    pub fn hstack(blocks: &[DenseMatrix]) -> DenseMatrix {
+        assert!(!blocks.is_empty());
+        let rows = blocks[0].rows;
+        assert!(blocks.iter().all(|b| b.rows == rows), "hstack: row mismatch");
+        let cols: usize = blocks.iter().map(|b| b.cols).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for b in blocks {
+                data.extend_from_slice(b.row(i));
+            }
+        }
+        DenseMatrix { rows, cols, data }
+    }
+
+    /// Squared L2 norm of each row.
+    pub fn row_sq_norms(&self) -> Vec<f32> {
+        (0..self.rows).map(|i| self.row(i).iter().map(|x| x * x).sum()).collect()
+    }
+
+    /// Max |a-b| against another matrix.
+    pub fn max_abs_diff(&self, other: &DenseMatrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let m = DenseMatrix::from_fn(2, 3, |i, j| (i * 10 + j) as f32);
+        assert_eq!(m.get(1, 2), 12.0);
+        assert_eq!(m.row(0), &[0.0, 1.0, 2.0]);
+        assert_eq!(m.bytes(), 24);
+    }
+
+    #[test]
+    fn blocks() {
+        let m = DenseMatrix::from_fn(4, 4, |i, j| (i * 4 + j) as f32);
+        let rb = m.row_block(1, 3);
+        assert_eq!(rb.rows(), 2);
+        assert_eq!(rb.get(0, 0), 4.0);
+        let cb = m.col_block(2, 4);
+        assert_eq!(cb.cols(), 2);
+        assert_eq!(cb.get(1, 0), 6.0);
+        let b = m.block(1, 3, 1, 3);
+        assert_eq!(b.get(0, 0), 5.0);
+        assert_eq!(b.get(1, 1), 10.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(1);
+        let m = DenseMatrix::random(5, 7, &mut rng);
+        let tt = m.transpose().transpose();
+        assert_eq!(m, tt);
+    }
+
+    #[test]
+    fn stack_and_paste() {
+        let a = DenseMatrix::from_fn(1, 2, |_, j| j as f32);
+        let b = DenseMatrix::from_fn(2, 2, |i, j| 10.0 + (i * 2 + j) as f32);
+        let v = DenseMatrix::vstack(&[a.clone(), b.clone()]);
+        assert_eq!(v.rows(), 3);
+        assert_eq!(v.get(2, 1), 13.0);
+        let h = DenseMatrix::hstack(&[b.clone(), b.clone()]);
+        assert_eq!(h.cols(), 4);
+        assert_eq!(h.get(1, 3), 13.0);
+        let mut z = DenseMatrix::zeros(3, 3);
+        z.paste(1, 1, &b);
+        assert_eq!(z.get(0, 0), 0.0);
+        assert_eq!(z.get(2, 2), 13.0);
+    }
+
+    #[test]
+    fn norms_and_diff() {
+        let m = DenseMatrix::from_vec(2, 2, vec![3.0, 4.0, 0.0, 1.0]);
+        assert_eq!(m.row_sq_norms(), vec![25.0, 1.0]);
+        let mut n = m.clone();
+        n.set(0, 0, 3.5);
+        assert!((m.max_abs_diff(&n) - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_size_checked() {
+        let _ = DenseMatrix::from_vec(2, 2, vec![0.0; 3]);
+    }
+}

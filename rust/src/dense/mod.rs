@@ -1,0 +1,13 @@
+//! Dense matrix substrate: row-major f32 matrices and the local GEMM
+//! kernels the coordinator composes (the cuBLAS/SLATE stand-in).
+//!
+//! Row-major storage matches the paper's implementation choice (§V,
+//! "storing dense matrices in row-major order is known to improve the
+//! performance of cuSPARSE's SpMM routine") — here it makes the
+//! structured SpMM's inner loop contiguous.
+
+pub mod matrix;
+pub mod ops;
+
+pub use matrix::DenseMatrix;
+pub use ops::{matmul_nn, matmul_nt};

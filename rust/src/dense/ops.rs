@@ -1,0 +1,210 @@
+//! Local dense GEMM kernels (the cuBLAS stand-in on this testbed).
+//!
+//! Two variants cover everything the coordinator needs:
+//!
+//! * [`matmul_nt`] — C = A·Bᵀ for row-major A (m×d), B (n×d). This is
+//!   the Gram-tile form K_ij = P_i·P_jᵀ; both operands stream
+//!   contiguously.
+//! * [`matmul_nn`] — C = A·B for A (m×t), B (t×n); used by SUMMA's
+//!   inner accumulation.
+//!
+//! Both are cache-blocked and parallelized over row stripes with the
+//! crate's scoped-thread helper. Inner kernels accumulate in f32 with
+//! 8-wide unrolled dot/axpy loops that LLVM auto-vectorizes.
+
+use super::matrix::DenseMatrix;
+use crate::util::par::{par_ranges, SendPtr};
+
+/// Row-block size for parallel partitioning.
+const PAR_MIN_ROWS: usize = 8;
+/// Cache block over the inner (reduction) dimension.
+const BLOCK_K: usize = 256;
+/// Cache block over B's rows in `matmul_nt`.
+const BLOCK_J: usize = 64;
+
+/// C = A·Bᵀ (+ optional accumulate into `into`).
+///
+/// A is m×d, B is n×d, result m×n.
+pub fn matmul_nt(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+    assert_eq!(a.cols(), b.cols(), "matmul_nt: inner dims differ");
+    let (m, n, d) = (a.rows(), b.rows(), a.cols());
+    let mut c = DenseMatrix::zeros(m, n);
+    {
+        let cptr = SendPtr(c.data_mut().as_mut_ptr());
+        par_ranges(m, PAR_MIN_ROWS, |lo, hi| {
+            let cptr = &cptr;
+            for jb in (0..n).step_by(BLOCK_J) {
+                let jend = (jb + BLOCK_J).min(n);
+                for kb in (0..d).step_by(BLOCK_K) {
+                    let kend = (kb + BLOCK_K).min(d);
+                    for i in lo..hi {
+                        let arow = &a.row(i)[kb..kend];
+                        // SAFETY: rows [lo,hi) are exclusive to this worker.
+                        let crow =
+                            unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i * n), n) };
+                        for j in jb..jend {
+                            let brow = &b.row(j)[kb..kend];
+                            crow[j] += dot(arow, brow);
+                        }
+                    }
+                }
+            }
+        });
+    }
+    c
+}
+
+/// C += A·B into an existing accumulator (SUMMA inner step).
+///
+/// A is m×t, B is t×n, `c` is m×n.
+pub fn matmul_nn_acc(a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix) {
+    assert_eq!(a.cols(), b.rows(), "matmul_nn: inner dims differ");
+    assert_eq!(c.rows(), a.rows());
+    assert_eq!(c.cols(), b.cols());
+    let (m, t, n) = (a.rows(), a.cols(), b.cols());
+    let cptr = SendPtr(c.data_mut().as_mut_ptr());
+    par_ranges(m, PAR_MIN_ROWS, |lo, hi| {
+        let cptr = &cptr;
+        for i in lo..hi {
+            // SAFETY: row i exclusive to this worker.
+            let crow = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i * n), n) };
+            for kb in (0..t).step_by(BLOCK_K) {
+                let kend = (kb + BLOCK_K).min(t);
+                let arow = a.row(i);
+                for kk in kb..kend {
+                    let aik = arow[kk];
+                    if aik != 0.0 {
+                        axpy(aik, b.row(kk), crow);
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// C = A·B.
+pub fn matmul_nn(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+    let mut c = DenseMatrix::zeros(a.rows(), b.cols());
+    matmul_nn_acc(a, b, &mut c);
+    c
+}
+
+/// Unrolled dot product (auto-vectorizes).
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let (mut s4, mut s5, mut s6, mut s7) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 8;
+        s0 += x[i] * y[i];
+        s1 += x[i + 1] * y[i + 1];
+        s2 += x[i + 2] * y[i + 2];
+        s3 += x[i + 3] * y[i + 3];
+        s4 += x[i + 4] * y[i + 4];
+        s5 += x[i + 5] * y[i + 5];
+        s6 += x[i + 6] * y[i + 6];
+        s7 += x[i + 7] * y[i + 7];
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..n {
+        tail += x[i] * y[i];
+    }
+    ((s0 + s1) + (s2 + s3)) + ((s4 + s5) + (s6 + s7)) + tail
+}
+
+/// y += a·x (auto-vectorizes).
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// Naive reference GEMM (tests only).
+pub fn matmul_nt_naive(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+    let mut c = DenseMatrix::zeros(a.rows(), b.rows());
+    for i in 0..a.rows() {
+        for j in 0..b.rows() {
+            let mut s = 0.0f32;
+            for t in 0..a.cols() {
+                s += a.get(i, t) * b.get(j, t);
+            }
+            c.set(i, j, s);
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn nt_matches_naive() {
+        let mut rng = Rng::new(42);
+        for (m, n, d) in [(1, 1, 1), (3, 5, 7), (17, 9, 33), (64, 64, 100), (70, 30, 513)] {
+            let a = DenseMatrix::random(m, d, &mut rng);
+            let b = DenseMatrix::random(n, d, &mut rng);
+            let fast = matmul_nt(&a, &b);
+            let slow = matmul_nt_naive(&a, &b);
+            assert!(fast.max_abs_diff(&slow) < 1e-3, "({m},{n},{d})");
+        }
+    }
+
+    #[test]
+    fn nn_matches_nt_of_transpose() {
+        let mut rng = Rng::new(43);
+        for (m, t, n) in [(4, 6, 5), (32, 17, 64), (10, 100, 3)] {
+            let a = DenseMatrix::random(m, t, &mut rng);
+            let b = DenseMatrix::random(t, n, &mut rng);
+            let c1 = matmul_nn(&a, &b);
+            let c2 = matmul_nt(&a, &b.transpose());
+            assert!(c1.max_abs_diff(&c2) < 1e-3, "({m},{t},{n})");
+        }
+    }
+
+    #[test]
+    fn nn_acc_accumulates() {
+        let mut rng = Rng::new(44);
+        let a = DenseMatrix::random(8, 8, &mut rng);
+        let b = DenseMatrix::random(8, 8, &mut rng);
+        let mut acc = matmul_nn(&a, &b);
+        matmul_nn_acc(&a, &b, &mut acc);
+        let double = matmul_nn(&a, &b);
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!((acc.get(i, j) - 2.0 * double.get(i, j)).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn dot_and_axpy() {
+        let x: Vec<f32> = (0..19).map(|i| i as f32).collect();
+        let y: Vec<f32> = (0..19).map(|i| (i * 2) as f32).collect();
+        let expect: f32 = (0..19).map(|i| (i * i * 2) as f32).sum();
+        assert_eq!(dot(&x, &y), expect);
+        let mut acc = vec![1.0f32; 19];
+        axpy(2.0, &x, &mut acc);
+        for (i, v) in acc.iter().enumerate() {
+            assert_eq!(*v, 1.0 + 2.0 * i as f32);
+        }
+    }
+
+    #[test]
+    fn gram_is_symmetric() {
+        let mut rng = Rng::new(45);
+        let p = DenseMatrix::random(20, 6, &mut rng);
+        let k = matmul_nt(&p, &p);
+        for i in 0..20 {
+            for j in 0..20 {
+                assert!((k.get(i, j) - k.get(j, i)).abs() < 1e-5);
+            }
+        }
+    }
+}

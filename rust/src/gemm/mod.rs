@@ -1,0 +1,19 @@
+//! Distributed GEMM algorithms for the kernel matrix K = κ(P·Pᵀ).
+//!
+//! * [`onedim`] — the 1D Allgather GEMM (Algorithm 1, line 1–2): every
+//!   rank replicates the full point matrix and computes its block row
+//!   of K. Communication α·O(P) + β·O(P·n·d) — Eq. (14) — and a memory
+//!   footprint that OOMs first (replicated P).
+//! * [`summa`] — SUMMA over the √P×√P grid (used by H-1D, 1.5D, 2D):
+//!   α·O(√P·log√P) + β·O(log(√P)·n·d/√P) — Eq. (16).
+//! * [`redistribute`] — the H-1D 2D→1D Alltoallv redistribution of K,
+//!   the α·O(P) + β·O(n²/P) step — Eq. (17) — that makes H-1D
+//!   uncompetitive.
+
+pub mod onedim;
+pub mod summa;
+pub mod redistribute;
+
+pub use onedim::gemm_1d_gram;
+pub use redistribute::redistribute_2d_to_1d;
+pub use summa::{summa_gram, SummaPointTiles};

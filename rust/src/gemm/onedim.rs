@@ -1,0 +1,167 @@
+//! 1D Allgather GEMM: K_p = κ(P_p · Pᵀ) with P fully replicated.
+//!
+//! The baseline the paper's prior-work approaches reduce to. Every rank
+//! allgathers the entire point matrix (O(P·n·d) total words — the
+//! volume does not shrink with P) and computes its block row of K
+//! locally. Memory: the replicated P plus the local K block row —
+//! exactly the footprint that OOMs for KDD's d = 10000 in the paper's
+//! Fig. 2 discussion, reproduced here via the [`MemTracker`] budget.
+
+use crate::backend::ComputeBackend;
+use crate::comm::{Comm, Group};
+use crate::dense::DenseMatrix;
+use crate::kernelfn::KernelFn;
+use crate::model::MemTracker;
+use crate::VivaldiError;
+
+/// Compute this rank's block row of K.
+///
+/// `local_points`: this rank's (m_p × d) slice of P (1D row blocks in
+/// rank order). Returns K_p = κ(P_p·Pᵀ), shape m_p × n.
+///
+/// The big allocations (replicated P, K_p) are registered against
+/// `tracker`; failure is detected **collectively** (AND-allreduce) so
+/// every rank returns `OutOfMemory` together instead of deadlocking.
+pub fn gemm_1d_gram(
+    comm: &Comm,
+    world: &Group,
+    local_points: &DenseMatrix,
+    kernel: &KernelFn,
+    backend: &dyn ComputeBackend,
+    tracker: &MemTracker,
+    repl_factor: f64,
+) -> Result<DenseMatrix, VivaldiError> {
+    comm.set_phase("gemm");
+    let d = local_points.cols();
+    let m = local_points.rows();
+
+    // Collective memory check before the allgather: full P + K block.
+    let n_total: u64 = {
+        let counts = comm.allreduce_sum_u64(world, vec![m as u64]);
+        counts[0]
+    };
+    // The replicated-P charge is scaled by `repl_factor` (calibrated
+    // memory model, see crate::config::MemModel; 1.0 = actual bytes).
+    let need = (MemTracker::matrix_f32(n_total as usize, d) as f64 * repl_factor) as u64
+        + MemTracker::matrix_f32(m, n_total as usize);
+    let ok = tracker.try_alloc(need, "1D GEMM: replicated P + K block row");
+    if !comm.allreduce_and(world, ok) {
+        if ok {
+            tracker.free(need);
+        }
+        return Err(VivaldiError::OutOfMemory {
+            rank: comm.rank(),
+            requested: need,
+            budget: tracker.budget(),
+            what: "1D GEMM: replicated P + K block row".into(),
+        });
+    }
+
+    // Allgather P (the expensive replication).
+    let full_p_data = comm.allgather_concat(world, local_points.data().to_vec());
+    let full_p = DenseMatrix::from_vec(n_total as usize, d, full_p_data);
+
+    // Norms only needed for distance-based kernels.
+    let (row_norms, col_norms) = if kernel.needs_norms() {
+        (local_points.row_sq_norms(), full_p.row_sq_norms())
+    } else {
+        (Vec::new(), Vec::new())
+    };
+
+    let k_block = backend.gram_tile(local_points, &full_p, kernel, &row_norms, &col_norms);
+    // The replicated P is freed after the GEMM (K block row stays).
+    tracker.free((MemTracker::matrix_f32(n_total as usize, d) as f64 * repl_factor) as u64);
+    Ok(k_block)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::comm::World;
+    use crate::util::{part, rng::Rng};
+
+    fn oracle_k(points: &DenseMatrix, kernel: &KernelFn) -> DenseMatrix {
+        let be = NativeBackend::new();
+        let norms = points.row_sq_norms();
+        be.gram_tile(points, points, kernel, &norms, &norms)
+    }
+
+    #[test]
+    fn matches_oracle_across_rank_counts() {
+        let mut rng = Rng::new(21);
+        let n = 37;
+        let d = 5;
+        let points = DenseMatrix::random(n, d, &mut rng);
+        for kernel in [KernelFn::linear(), KernelFn::paper_polynomial(), KernelFn::gaussian(0.3)]
+        {
+            let expect = oracle_k(&points, &kernel);
+            for p in [1usize, 2, 4, 5] {
+                let pref = &points;
+                let kref = &kernel;
+                let (blocks, _) = World::run(p, |comm| {
+                    let world = Group::world(p);
+                    let (lo, hi) = part::bounds(n, p, comm.rank());
+                    let local = pref.row_block(lo, hi);
+                    let be = NativeBackend::new();
+                    let tracker = MemTracker::unlimited(comm.rank());
+                    gemm_1d_gram(comm, &world, &local, kref, &be, &tracker, 1.0).unwrap()
+                });
+                let k_full = DenseMatrix::vstack(&blocks);
+                assert!(
+                    k_full.max_abs_diff(&expect) < 1e-3,
+                    "kernel={kernel:?} p={p}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn volume_grows_with_p() {
+        // The defining 1D weakness: allgather volume scales with P.
+        let mut rng = Rng::new(22);
+        let n = 32;
+        let d = 8;
+        let points = DenseMatrix::random(n, d, &mut rng);
+        let mut volumes = Vec::new();
+        for p in [2usize, 4, 8] {
+            let pref = &points;
+            let (_, stats) = World::run(p, |comm| {
+                let world = Group::world(p);
+                let (lo, hi) = part::bounds(n, p, comm.rank());
+                let local = pref.row_block(lo, hi);
+                let be = NativeBackend::new();
+                let tracker = MemTracker::unlimited(comm.rank());
+                gemm_1d_gram(comm, &world, &local, &KernelFn::linear(), &be, &tracker, 1.0).unwrap()
+            });
+            let total: u64 = stats.iter().map(|s| s.get("gemm").bytes).sum();
+            volumes.push(total);
+        }
+        // Ring allgather: each rank forwards ~the whole matrix, so the
+        // total volume is ≈ (P-1)·n·d·4 — strictly increasing in P.
+        assert!(volumes[1] > volumes[0]);
+        assert!(volumes[2] > volumes[1]);
+    }
+
+    #[test]
+    fn collective_oom() {
+        let n = 64;
+        let d = 16;
+        let mut rng = Rng::new(23);
+        let points = DenseMatrix::random(n, d, &mut rng);
+        let p = 4;
+        let pref = &points;
+        let (results, _) = World::run(p, |comm| {
+            let world = Group::world(p);
+            let (lo, hi) = part::bounds(n, p, comm.rank());
+            let local = pref.row_block(lo, hi);
+            let be = NativeBackend::new();
+            // Budget too small for replicated P (64*16*4 = 4096 B).
+            let tracker = MemTracker::new(comm.rank(), 1024);
+            gemm_1d_gram(comm, &world, &local, &KernelFn::linear(), &be, &tracker, 1.0)
+        });
+        for r in results {
+            assert!(matches!(r, Err(VivaldiError::OutOfMemory { .. })));
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! H-1D's 2D→1D redistribution of K (Alltoallv).
+//!
+//! After SUMMA leaves K 2D-partitioned, the Hybrid-1D algorithm moves
+//! it to the 1D columnwise layout the clustering loop wants. Every rank
+//! ships essentially its whole tile (O(n²/P) words, up to √P
+//! destinations, O(P) messages in the pairwise exchange) — Eq. (17),
+//! the step that makes H-1D uncompetitive and, at scale, OOM-prone
+//! (tile + staging buffers held simultaneously).
+
+use crate::comm::{Comm, Grid2D, Group};
+use crate::dense::DenseMatrix;
+use crate::model::MemTracker;
+use crate::util::part;
+use crate::VivaldiError;
+
+/// Redistribute 2D K tiles to 1D block rows.
+///
+/// Rank (i,j) holds `k_tile` = K[row block i, col block j]; global rank
+/// p must end with K[1D row block p, :] (m_p × n). 1D blocks here are
+/// the *plain* `part::bounds(n, P, p)` split (the H-1D loop is the 1D
+/// loop).
+pub fn redistribute_2d_to_1d(
+    comm: &Comm,
+    grid: &Grid2D,
+    k_tile: &DenseMatrix,
+    n: usize,
+    tracker: &MemTracker,
+    staging_factor: f64,
+) -> Result<DenseMatrix, VivaldiError> {
+    comm.set_phase("redist");
+    let p_total = grid.p();
+    let q = grid.q();
+    let world = Group::world(p_total);
+    let (i, _j) = grid.coords(comm.rank());
+    let (my_row_lo, _my_row_hi) = part::bounds(n, q, i);
+    let my_1d = part::bounds(n, p_total, comm.rank());
+
+    // Memory: destination block row + the calibrated staging charge
+    // ν·√P·tile covering send staging and per-peer bounce buffers (see
+    // crate::config::MemModel; staging_factor = 0 charges the received
+    // block row only — the send side reuses the resident tile).
+    let need = MemTracker::matrix_f32(my_1d.1 - my_1d.0, n)
+        + (staging_factor * q as f64 * k_tile.bytes() as f64) as u64;
+    let ok = tracker.try_alloc(need, "H-1D redistribution staging");
+    if !comm.allreduce_and(&world, ok) {
+        if ok {
+            tracker.free(need);
+        }
+        return Err(VivaldiError::OutOfMemory {
+            rank: comm.rank(),
+            requested: need,
+            budget: tracker.budget(),
+            what: "H-1D redistribution staging".into(),
+        });
+    }
+
+    // Build per-destination row slices of our tile.
+    let mut sends: Vec<Vec<f32>> = Vec::with_capacity(p_total);
+    for dst in 0..p_total {
+        let dst_rows = part::bounds(n, p_total, dst);
+        let tile_rows = (my_row_lo, my_row_lo + k_tile.rows());
+        match part::intersect(dst_rows, tile_rows) {
+            Some((lo, hi)) => {
+                let mut buf = Vec::with_capacity((hi - lo) * k_tile.cols());
+                for r in lo..hi {
+                    buf.extend_from_slice(k_tile.row(r - my_row_lo));
+                }
+                sends.push(buf);
+            }
+            None => sends.push(Vec::new()),
+        }
+    }
+
+    let recvs = comm.alltoallv(&world, sends);
+
+    // Assemble my 1D block row: source rank (si,sj) contributes its
+    // column block [col range of sj] for my rows.
+    let m = my_1d.1 - my_1d.0;
+    let mut out = DenseMatrix::zeros(m, n);
+    for src in 0..p_total {
+        let buf = &recvs[src];
+        if buf.is_empty() {
+            continue;
+        }
+        let (_si, sj) = grid.coords(src);
+        let (sc_lo, sc_hi) = part::bounds(n, q, sj);
+        let w = sc_hi - sc_lo;
+        assert_eq!(buf.len() % w, 0, "bad redistribution payload");
+        let rows = buf.len() / w;
+        // Rows arrive in ascending global order within the
+        // intersection; the intersection start is max(my_lo, src row
+        // block start).
+        let src_rows = part::bounds(n, q, grid.coords(src).0);
+        let start = my_1d.0.max(src_rows.0);
+        for r in 0..rows {
+            let dst_r = start - my_1d.0 + r;
+            out.row_mut(dst_r)[sc_lo..sc_hi].copy_from_slice(&buf[r * w..(r + 1) * w]);
+        }
+    }
+    // Staging released, destination block row stays.
+    tracker.free((staging_factor * q as f64 * k_tile.bytes() as f64) as u64);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::World;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_matches_direct_slices() {
+        let mut rng = Rng::new(41);
+        for (n, p) in [(16usize, 4usize), (37, 4), (24, 9), (50, 16)] {
+            let k_full = DenseMatrix::random(n, n, &mut rng);
+            let grid = Grid2D::new(p).unwrap();
+            let gref = &grid;
+            let kref = &k_full;
+            let (rows_out, stats) = World::run(p, |comm| {
+                let (i, j) = gref.coords(comm.rank());
+                let (rlo, rhi) = part::bounds(n, gref.q(), i);
+                let (clo, chi) = part::bounds(n, gref.q(), j);
+                let tile = kref.block(rlo, rhi, clo, chi);
+                let tracker = MemTracker::unlimited(comm.rank());
+                redistribute_2d_to_1d(comm, gref, &tile, n, &tracker, 0.0).unwrap()
+            });
+            for (rank, got) in rows_out.iter().enumerate() {
+                let (lo, hi) = part::bounds(n, p, rank);
+                let expect = k_full.row_block(lo, hi);
+                assert_eq!(got, &expect, "n={n} p={p} rank={rank}");
+            }
+            // Volume sanity: aggregate ≈ the whole matrix (each element
+            // travels at most once; diagonal-resident parts are free).
+            let total: u64 = stats.iter().map(|s| s.get("redist").bytes).sum();
+            assert!(total <= (n * n * 4) as u64, "n={n} p={p} total={total}");
+            assert!(total >= (n * n * 4) as u64 / 2, "n={n} p={p} total={total}");
+        }
+    }
+
+    #[test]
+    fn oom_when_budget_too_small() {
+        let n = 32;
+        let p = 4;
+        let mut rng = Rng::new(42);
+        let k_full = DenseMatrix::random(n, n, &mut rng);
+        let grid = Grid2D::new(p).unwrap();
+        let gref = &grid;
+        let kref = &k_full;
+        let (results, _) = World::run(p, |comm| {
+            let (i, j) = gref.coords(comm.rank());
+            let (rlo, rhi) = part::bounds(n, gref.q(), i);
+            let (clo, chi) = part::bounds(n, gref.q(), j);
+            let tile = kref.block(rlo, rhi, clo, chi);
+            let tracker = MemTracker::new(comm.rank(), 64);
+            redistribute_2d_to_1d(comm, gref, &tile, n, &tracker, 0.0)
+        });
+        for r in results {
+            assert!(matches!(r, Err(VivaldiError::OutOfMemory { .. })));
+        }
+    }
+}

@@ -1,0 +1,181 @@
+//! Kernel functions κ(x, y) applied elementwise to the Gram matrix.
+//!
+//! K(i,j) = κ(P(i,:), P(j,:)) is computed from the Gram value
+//! B(i,j) = ⟨x, y⟩ (plus squared norms for the Gaussian kernel), so the
+//! kernel application fuses into the Gram GEMM — the paper's Eq. (2)
+//! path, and the same fusion the Pallas L1 kernel performs on-device.
+
+/// Supported kernel functions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KernelFn {
+    /// κ(x,y) = ⟨x,y⟩ (the paper's analysis default, B = K).
+    Linear,
+    /// κ(x,y) = (γ⟨x,y⟩ + c)^degree — the paper's benchmark kernel
+    /// (γ=1, c=1, degree=2).
+    Polynomial { gamma: f32, c: f32, degree: f32 },
+    /// κ(x,y) = exp(−γ‖x−y‖²), using ‖x−y‖² = ‖x‖² + ‖y‖² − 2⟨x,y⟩.
+    Gaussian { gamma: f32 },
+}
+
+impl Default for KernelFn {
+    fn default() -> Self {
+        KernelFn::paper_polynomial()
+    }
+}
+
+impl KernelFn {
+    pub fn linear() -> Self {
+        KernelFn::Linear
+    }
+
+    pub fn polynomial(gamma: f32, c: f32, degree: f32) -> Self {
+        KernelFn::Polynomial { gamma, c, degree }
+    }
+
+    /// The paper's evaluation kernel: (⟨x,y⟩ + 1)².
+    pub fn paper_polynomial() -> Self {
+        KernelFn::Polynomial { gamma: 1.0, c: 1.0, degree: 2.0 }
+    }
+
+    pub fn gaussian(gamma: f32) -> Self {
+        KernelFn::Gaussian { gamma }
+    }
+
+    /// Whether this kernel needs the squared norms of the two points in
+    /// addition to their inner product.
+    pub fn needs_norms(&self) -> bool {
+        matches!(self, KernelFn::Gaussian { .. })
+    }
+
+    /// Apply to a single Gram entry. `dot` = ⟨x,y⟩; `nx`, `ny` = ‖x‖²,
+    /// ‖y‖² (ignored unless [`Self::needs_norms`]).
+    #[inline]
+    pub fn apply(&self, dot: f32, nx: f32, ny: f32) -> f32 {
+        match *self {
+            KernelFn::Linear => dot,
+            KernelFn::Polynomial { gamma, c, degree } => {
+                let base = gamma * dot + c;
+                if degree == 2.0 {
+                    base * base
+                } else if degree == 3.0 {
+                    base * base * base
+                } else {
+                    base.powf(degree)
+                }
+            }
+            KernelFn::Gaussian { gamma } => (-gamma * (nx + ny - 2.0 * dot)).exp(),
+        }
+    }
+
+    /// Apply in place to a Gram tile B (rows i map to `row_norms`,
+    /// columns j to `col_norms`).
+    pub fn apply_tile(
+        &self,
+        b: &mut crate::dense::DenseMatrix,
+        row_norms: &[f32],
+        col_norms: &[f32],
+    ) {
+        if !self.needs_norms() {
+            for v in b.data_mut() {
+                *v = self.apply(*v, 0.0, 0.0);
+            }
+            return;
+        }
+        assert_eq!(row_norms.len(), b.rows());
+        assert_eq!(col_norms.len(), b.cols());
+        let cols = b.cols();
+        for i in 0..b.rows() {
+            let nx = row_norms[i];
+            let row = &mut b.data_mut()[i * cols..(i + 1) * cols];
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = self.apply(*v, nx, col_norms[j]);
+            }
+        }
+    }
+
+    /// Stable identifier used in artifact names (`gram_poly_...`).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            KernelFn::Linear => "linear",
+            KernelFn::Polynomial { .. } => "poly",
+            KernelFn::Gaussian { .. } => "rbf",
+        }
+    }
+
+    /// Scalar parameters in a fixed order (for artifact dispatch).
+    pub fn params(&self) -> Vec<f32> {
+        match *self {
+            KernelFn::Linear => vec![],
+            KernelFn::Polynomial { gamma, c, degree } => vec![gamma, c, degree],
+            KernelFn::Gaussian { gamma } => vec![gamma],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dense::DenseMatrix;
+
+    #[test]
+    fn linear_is_identity() {
+        assert_eq!(KernelFn::linear().apply(3.5, 9.0, 9.0), 3.5);
+    }
+
+    #[test]
+    fn paper_polynomial_values() {
+        let k = KernelFn::paper_polynomial();
+        // (1*2 + 1)^2 = 9
+        assert_eq!(k.apply(2.0, 0.0, 0.0), 9.0);
+        assert_eq!(k.apply(0.0, 0.0, 0.0), 1.0);
+        assert_eq!(k.apply(-1.0, 0.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn cubic_and_fractional_degrees() {
+        let k3 = KernelFn::polynomial(1.0, 0.0, 3.0);
+        assert_eq!(k3.apply(2.0, 0.0, 0.0), 8.0);
+        let k15 = KernelFn::polynomial(1.0, 0.0, 1.5);
+        assert!((k15.apply(4.0, 0.0, 0.0) - 8.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gaussian_from_gram() {
+        let k = KernelFn::gaussian(0.5);
+        // x = (1,0), y = (0,1): dot=0, norms=1 -> exp(-0.5 * 2) = e^-1.
+        let v = k.apply(0.0, 1.0, 1.0);
+        assert!((v - (-1.0f32).exp()).abs() < 1e-6);
+        // Same point: distance 0 -> 1.
+        assert_eq!(k.apply(1.0, 1.0, 1.0), 1.0);
+    }
+
+    #[test]
+    fn apply_tile_poly() {
+        let mut b = DenseMatrix::from_vec(2, 2, vec![0.0, 1.0, 2.0, 3.0]);
+        KernelFn::paper_polynomial().apply_tile(&mut b, &[0.0; 2], &[0.0; 2]);
+        assert_eq!(b.data(), &[1.0, 4.0, 9.0, 16.0]);
+    }
+
+    #[test]
+    fn apply_tile_gaussian_uses_norms() {
+        let mut b = DenseMatrix::from_vec(1, 2, vec![0.0, 1.0]);
+        KernelFn::gaussian(1.0).apply_tile(&mut b, &[1.0], &[1.0, 1.0]);
+        assert!((b.get(0, 0) - (-2.0f32).exp()).abs() < 1e-6);
+        assert!((b.get(0, 1) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn symmetry_property() {
+        // κ(x,y) == κ(y,x) for all kernel types on random Gram entries.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(3);
+        for kf in [KernelFn::linear(), KernelFn::paper_polynomial(), KernelFn::gaussian(0.7)] {
+            for _ in 0..50 {
+                let dot = rng.next_f32();
+                let nx = rng.next_f32() + 1.0;
+                let ny = rng.next_f32() + 1.0;
+                assert_eq!(kf.apply(dot, nx, ny), kf.apply(dot, ny, nx));
+            }
+        }
+    }
+}

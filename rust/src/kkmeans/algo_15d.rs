@@ -1,0 +1,142 @@
+//! The 1.5D Kernel K-means algorithm (Algorithm 2) — the paper's main
+//! contribution.
+//!
+//! SUMMA leaves K 2D-partitioned and it **never moves again**; V stays
+//! 1D-partitioned (rank p = j·√P + i owns sub-slice i of point block
+//! j — the nested partition). The 1.5D SpMM's column-split
+//! reduce-scatter lands Eᵀ 1D-columnwise on exactly the rank that owns
+//! those points, so the entire cluster update (mask, SpMV, distances,
+//! argmin, V update) is communication-free apart from the tiny c and
+//! size allreduces — the composability win the paper is about.
+
+use crate::backend::ComputeBackend;
+use crate::comm::{Comm, Grid2D, Group};
+use crate::dense::DenseMatrix;
+use crate::gemm::{summa_gram, SummaPointTiles};
+use crate::model::MemTracker;
+use crate::spmm::spmm_15d;
+use crate::util::{part, timing::Stopwatch};
+use crate::VivaldiError;
+
+use super::loop_common;
+use super::{FitConfig, RankOutput};
+
+pub(super) fn run_rank(
+    comm: &Comm,
+    points: &DenseMatrix,
+    cfg: &FitConfig,
+    backend: &dyn ComputeBackend,
+) -> Result<RankOutput, VivaldiError> {
+    let p = comm.size();
+    let n = points.rows();
+    let d = points.cols();
+    let k = cfg.k;
+    let world = Group::world(p);
+    let grid = Grid2D::new(p).expect("fit() checked square grid");
+    let q = grid.q();
+    let (i, j) = grid.coords(comm.rank());
+    let mem = cfg.mem.unwrap_or_else(crate::config::MemModel::unlimited);
+    let tracker = if cfg.mem.is_some() {
+        MemTracker::new(comm.rank(), mem.budget)
+    } else {
+        MemTracker::unlimited(comm.rank())
+    };
+    let mut sw = Stopwatch::new();
+
+    // SUMMA K; the 2D tile stays put for the whole run.
+    let tiles = SummaPointTiles::from_global(points, &grid, comm.rank());
+    let k_tile = sw.time("gemm", || {
+        summa_gram(comm, &grid, &tiles, n, d, &cfg.kernel, backend, &tracker)
+    })?;
+
+    // Own 1D V partition: sub-slice i of point block j (global rank
+    // order ⇒ contiguous coverage of 0..n).
+    let (vlo, vhi) = part::nested(n, q, j, i);
+    let mut assign: Vec<u32> = (vlo..vhi).map(|x| (x % k) as u32).collect();
+    comm.set_phase("update");
+    let mut sizes = loop_common::global_sizes(comm, &world, &assign, k);
+
+    let mut objective_curve = Vec::new();
+    let mut changes_curve = Vec::new();
+    let mut iterations = 0;
+    let mut converged = false;
+    for _ in 0..cfg.max_iters {
+        let inv = loop_common::inv_sizes(&sizes);
+        let e_local = sw.time("spmm", || {
+            spmm_15d(comm, &grid, &k_tile, &assign, n, k, &inv, backend)
+        });
+        debug_assert_eq!(e_local.rows(), assign.len());
+        let (changes, obj, new_sizes) = sw.time("update", || {
+            loop_common::local_update(comm, &world, backend, &e_local, &mut assign, k, &inv)
+        });
+        sizes = new_sizes;
+        objective_curve.push(obj);
+        changes_curve.push(changes);
+        iterations += 1;
+        if changes == 0 && cfg.converge_on_stable {
+            converged = true;
+            break;
+        }
+    }
+
+    Ok(RankOutput {
+        assign,
+        stopwatch: sw,
+        iterations,
+        converged,
+        objective_curve,
+        changes_curve,
+        peak_mem: tracker.peak(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{fit, Algo, FitConfig};
+    use crate::data::synth;
+    use crate::kernelfn::KernelFn;
+
+    #[test]
+    fn matches_1d_exactly_linear_kernel() {
+        let ds = synth::gaussian_blobs(80, 4, 4, 4.0, 23);
+        let cfg = FitConfig {
+            k: 4,
+            max_iters: 40,
+            kernel: KernelFn::linear(),
+            ..Default::default()
+        };
+        let ref_out = fit(Algo::OneD, 1, &ds.points, &cfg).unwrap();
+        for p in [4usize, 16] {
+            let out = fit(Algo::OneFiveD, p, &ds.points, &cfg).unwrap();
+            assert_eq!(out.assignments, ref_out.assignments, "p={p}");
+        }
+    }
+
+    #[test]
+    fn nonlinear_rings_need_the_kernel() {
+        // Polynomial kernel separates concentric rings; converges and
+        // the objective is monotone.
+        let ds = synth::concentric_rings(128, 2, 29);
+        let cfg = FitConfig { k: 2, max_iters: 60, ..Default::default() };
+        let out = fit(Algo::OneFiveD, 4, &ds.points, &cfg).unwrap();
+        for w in out.objective_curve.windows(2) {
+            assert!(w[1] <= w[0] + 1e-3);
+        }
+    }
+
+    #[test]
+    fn update_phase_is_communication_light() {
+        // The 1.5D selling point: cluster updates need no Eᵀ movement —
+        // only the k-word c/size allreduces. Its update-phase bytes
+        // must be far below its spmm-phase bytes.
+        let ds = synth::gaussian_blobs(144, 6, 4, 3.0, 31);
+        let cfg = FitConfig { k: 4, max_iters: 10, converge_on_stable: false, ..Default::default() };
+        let out = fit(Algo::OneFiveD, 9, &ds.points, &cfg).unwrap();
+        let spmm: u64 = out.comm_stats.iter().map(|s| s.get("spmm").bytes).sum();
+        let update: u64 = out.comm_stats.iter().map(|s| s.get("update").bytes).sum();
+        assert!(
+            update < spmm / 2,
+            "update bytes {update} should be << spmm bytes {spmm}"
+        );
+    }
+}

@@ -1,0 +1,120 @@
+//! The 1D Kernel K-means baseline (Algorithm 1).
+//!
+//! Everything 1D-columnwise: rank p owns points `bounds(n, P, p)`, the
+//! replicated-P GEMM produces its block row of K, the clustering loop
+//! allgathers V (indices only) and updates clusters with no further
+//! communication. The communication pattern of prior distributed
+//! Kernel K-means work [22], [55] — and the baseline every figure
+//! compares against.
+
+use crate::backend::ComputeBackend;
+use crate::comm::{Comm, Group};
+use crate::dense::DenseMatrix;
+use crate::gemm::gemm_1d_gram;
+use crate::model::MemTracker;
+use crate::spmm::spmm_1d;
+use crate::util::{part, timing::Stopwatch};
+use crate::VivaldiError;
+
+use super::loop_common;
+use super::{FitConfig, RankOutput};
+
+pub(super) fn run_rank(
+    comm: &Comm,
+    points: &DenseMatrix,
+    cfg: &FitConfig,
+    backend: &dyn ComputeBackend,
+) -> Result<RankOutput, VivaldiError> {
+    let p = comm.size();
+    let n = points.rows();
+    let k = cfg.k;
+    let world = Group::world(p);
+    let mem = cfg.mem.unwrap_or_else(crate::config::MemModel::unlimited);
+    let tracker = if cfg.mem.is_some() {
+        MemTracker::new(comm.rank(), mem.budget)
+    } else {
+        MemTracker::unlimited(comm.rank())
+    };
+    let (lo, hi) = part::bounds(n, p, comm.rank());
+    let local_pts = points.row_block(lo, hi);
+    let mut sw = Stopwatch::new();
+
+    // K block row (1D Allgather GEMM) — the scalability bottleneck.
+    let k_block =
+        sw.time("gemm", || gemm_1d_gram(comm, &world, &local_pts, &cfg.kernel, backend, &tracker, mem.repl_factor))?;
+
+    // Round-robin V init over global indices.
+    let mut assign: Vec<u32> = (lo..hi).map(|x| (x % k) as u32).collect();
+    comm.set_phase("update");
+    let mut sizes = loop_common::global_sizes(comm, &world, &assign, k);
+
+    let mut objective_curve = Vec::new();
+    let mut changes_curve = Vec::new();
+    let mut iterations = 0;
+    let mut converged = false;
+    for _ in 0..cfg.max_iters {
+        let inv = loop_common::inv_sizes(&sizes);
+        let e_local =
+            sw.time("spmm", || spmm_1d(comm, &world, &k_block, &assign, k, &inv, backend));
+        let (changes, obj, new_sizes) = sw.time("update", || {
+            loop_common::local_update(comm, &world, backend, &e_local, &mut assign, k, &inv)
+        });
+        sizes = new_sizes;
+        objective_curve.push(obj);
+        changes_curve.push(changes);
+        iterations += 1;
+        if changes == 0 && cfg.converge_on_stable {
+            converged = true;
+            break;
+        }
+    }
+
+    Ok(RankOutput {
+        assign,
+        stopwatch: sw,
+        iterations,
+        converged,
+        objective_curve,
+        changes_curve,
+        peak_mem: tracker.peak(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{fit, Algo, FitConfig};
+    use crate::data::synth;
+    use crate::kernelfn::KernelFn;
+
+    #[test]
+    fn converges_on_separable_blobs() {
+        let ds = synth::gaussian_blobs(120, 4, 3, 5.0, 11);
+        let cfg = FitConfig { k: 3, max_iters: 50, ..Default::default() };
+        let out = fit(Algo::OneD, 4, &ds.points, &cfg).unwrap();
+        assert!(out.converged, "should converge on well-separated blobs");
+        // Objective must be monotone non-increasing.
+        for w in out.objective_curve.windows(2) {
+            assert!(w[1] <= w[0] + 1e-3, "objective increased: {w:?}");
+        }
+        // Clustering should recover the blobs (up to label permutation).
+        let nmi = crate::quality::nmi(&out.assignments, &ds.labels, 3);
+        assert!(nmi > 0.9, "nmi = {nmi}");
+    }
+
+    #[test]
+    fn linear_kernel_matches_across_p() {
+        let ds = synth::gaussian_blobs(60, 3, 3, 4.0, 13);
+        let cfg = FitConfig {
+            k: 3,
+            max_iters: 30,
+            kernel: KernelFn::linear(),
+            ..Default::default()
+        };
+        let ref_out = fit(Algo::OneD, 1, &ds.points, &cfg).unwrap();
+        for p in [2usize, 4, 5] {
+            let out = fit(Algo::OneD, p, &ds.points, &cfg).unwrap();
+            assert_eq!(out.assignments, ref_out.assignments, "p={p}");
+            assert_eq!(out.iterations, ref_out.iterations, "p={p}");
+        }
+    }
+}

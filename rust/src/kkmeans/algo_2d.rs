@@ -1,0 +1,229 @@
+//! The pure 2D Kernel K-means algorithm (paper §IV.B, second
+//! alternative).
+//!
+//! SUMMA K stays 2D; V is 2D-partitioned to match (rank (i,j) stores
+//! the assignment slice for sub-slice j of point block i). The 2D SpMM
+//! leaves Eᵀ 2D-partitioned — clusters block i × points block j on
+//! rank (i,j) — which is precisely why cluster updates now cost
+//! communication:
+//!
+//! * c: partial sums per cluster block, Allreduced **along process
+//!   rows** (paper §V.B);
+//! * argmin: each rank minimizes over its own cluster block only, then
+//!   an **MPI_MINLOC Allreduce along process columns** (8 B/point — the
+//!   buffer-doubling the paper calls out) resolves the global winner —
+//!   Eq. (19), the term that stops 2D from matching 1.5D;
+//! * V refresh: the slice a rank feeds the next SpMM belongs to its
+//!   *row* block, but new assignments are resolved per *column* block;
+//!   a transpose pairwise exchange with rank (j,i) delivers it (the
+//!   paper leaves this step implicit; the n/P-word exchange is
+//!   asymptotically free next to the MINLOC allreduce).
+
+use crate::backend::ComputeBackend;
+use crate::comm::{Comm, Grid2D, Group};
+use crate::dense::DenseMatrix;
+use crate::gemm::{summa_gram, SummaPointTiles};
+use crate::model::MemTracker;
+use crate::spmm::spmm_2d;
+use crate::util::{part, timing::Stopwatch};
+use crate::VivaldiError;
+
+use super::loop_common;
+use super::{FitConfig, RankOutput};
+
+pub(super) fn run_rank(
+    comm: &Comm,
+    points: &DenseMatrix,
+    cfg: &FitConfig,
+    backend: &dyn ComputeBackend,
+) -> Result<RankOutput, VivaldiError> {
+    let p = comm.size();
+    let n = points.rows();
+    let d = points.cols();
+    let k = cfg.k;
+    let world = Group::world(p);
+    let grid = Grid2D::new(p).expect("fit() checked square grid");
+    let q = grid.q();
+    let (i, j) = grid.coords(comm.rank());
+    let row_g = grid.row_group(i);
+    let col_g = grid.col_group(j);
+    let mem = cfg.mem.unwrap_or_else(crate::config::MemModel::unlimited);
+    let tracker = if cfg.mem.is_some() {
+        MemTracker::new(comm.rank(), mem.budget)
+    } else {
+        MemTracker::unlimited(comm.rank())
+    };
+    let mut sw = Stopwatch::new();
+
+    let tiles = SummaPointTiles::from_global(points, &grid, comm.rank());
+    let k_tile = sw.time("gemm", || {
+        summa_gram(comm, &grid, &tiles, n, d, &cfg.kernel, backend, &tracker)
+    })?;
+
+    // Point ranges.
+    let (bj_lo, bj_hi) = part::bounds(n, q, j); // my column's point block
+    // V slice fed to the SpMM: sub-slice j of row block i.
+    let (vi_lo, vi_hi) = part::nested(n, q, i, j);
+    // Canonical output slice: sub-slice i of column block j.
+    let (own_lo, own_hi) = part::nested(n, q, j, i);
+
+    // Round-robin init.
+    let mut v_slice: Vec<u32> = (vi_lo..vi_hi).map(|x| (x % k) as u32).collect();
+    let mut assign_block_j: Vec<u32> = (bj_lo..bj_hi).map(|x| (x % k) as u32).collect();
+    comm.set_phase("update");
+    let own_assign = |abj: &[u32]| abj[own_lo - bj_lo..own_hi - bj_lo].to_vec();
+    let mut sizes = loop_common::global_sizes(comm, &world, &own_assign(&assign_block_j), k);
+
+    let mut objective_curve = Vec::new();
+    let mut changes_curve = Vec::new();
+    let mut iterations = 0;
+    let mut converged = false;
+    for _ in 0..cfg.max_iters {
+        let inv = loop_common::inv_sizes(&sizes);
+        // 2D B-stationary SpMM: Eᵀ tile, clusters [clo,chi) × block j.
+        let et = sw.time("spmm", || {
+            spmm_2d(comm, &grid, &k_tile, &v_slice, n, k, &inv, backend)
+        });
+        let (clo, chi) = et.cluster_range;
+        let n_j = et.tile.cols();
+
+        let t_update = crate::util::timing::clock_now();
+        comm.set_phase("update");
+        // c partials for my cluster block over my point block (Eq. 5–6,
+        // restricted to rows I own).
+        let mut c_part = vec![0.0f32; chi - clo];
+        for (c_idx, &a) in assign_block_j.iter().enumerate() {
+            let a = a as usize;
+            if a >= clo && a < chi {
+                c_part[a - clo] += et.tile.get(a - clo, c_idx);
+            }
+        }
+        for (a_off, v) in c_part.iter_mut().enumerate() {
+            *v *= inv[clo + a_off];
+        }
+        // Allreduce along the process row (paper §V.B).
+        let c_block = comm.allreduce_sum_f32(&row_g, c_part);
+
+        // Local argmin over my cluster block.
+        let mut vals = vec![f32::INFINITY; n_j];
+        let mut locs = vec![0u32; n_j];
+        for a in clo..chi {
+            let ca = c_block[a - clo];
+            let row = et.tile.row(a - clo);
+            for (c_idx, &e) in row.iter().enumerate() {
+                let dist = -2.0 * e + ca;
+                if dist < vals[c_idx] {
+                    vals[c_idx] = dist;
+                    locs[c_idx] = a as u32;
+                }
+            }
+        }
+        // Global winner per point: MINLOC along the process column
+        // (8 B per point — the paper's doubled buffer).
+        let (minvals, new_assign_block_j) = comm.allreduce_minloc(&col_g, vals, locs);
+
+        // Change count + objective: block j is shared by the whole
+        // process column; row 0 contributes, everyone calls the
+        // collective.
+        let (local_changes, local_obj) = if i == 0 {
+            let ch = assign_block_j
+                .iter()
+                .zip(&new_assign_block_j)
+                .filter(|(o, n)| o != n)
+                .count() as u64;
+            let ob: f64 = minvals.iter().map(|&v| v as f64).sum();
+            (ch, ob)
+        } else {
+            (0, 0.0)
+        };
+        let changes = comm.allreduce_sum_u64(&world, vec![local_changes])[0];
+        let obj = loop_common::allreduce_sum_f64(comm, &world, local_obj);
+        assign_block_j = new_assign_block_j;
+
+        // Global cluster sizes from disjoint canonical slices.
+        sizes = loop_common::global_sizes(comm, &world, &own_assign(&assign_block_j), k);
+
+        // V refresh: transpose exchange with partner (j,i). I know the
+        // new block j; my partner needs sub-slice i of block j (its
+        // v_slice); I need sub-slice j of block i (mine).
+        let partner = grid.rank_at(j, i);
+        let tag = comm.next_tag(&world);
+        let outgoing = own_assign(&assign_block_j); // = nested(n,q,j,i)
+        if partner == comm.rank() {
+            v_slice = outgoing;
+        } else {
+            comm.send(partner, tag, outgoing);
+            v_slice = comm.recv(partner, tag);
+        }
+        debug_assert_eq!(v_slice.len(), vi_hi - vi_lo);
+        sw.add("update", crate::util::timing::clock_now() - t_update);
+
+        objective_curve.push(obj);
+        changes_curve.push(changes);
+        iterations += 1;
+        if changes == 0 && cfg.converge_on_stable {
+            converged = true;
+            break;
+        }
+    }
+
+    Ok(RankOutput {
+        assign: own_assign(&assign_block_j),
+        stopwatch: sw,
+        iterations,
+        converged,
+        objective_curve,
+        changes_curve,
+        peak_mem: tracker.peak(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{fit, Algo, FitConfig};
+    use crate::data::synth;
+    use crate::kernelfn::KernelFn;
+
+    #[test]
+    fn matches_1d_on_separable_data() {
+        let ds = synth::gaussian_blobs(80, 4, 4, 4.0, 37);
+        let cfg = FitConfig {
+            k: 4,
+            max_iters: 40,
+            kernel: KernelFn::linear(),
+            ..Default::default()
+        };
+        let ref_out = fit(Algo::OneD, 1, &ds.points, &cfg).unwrap();
+        for p in [1usize, 4] {
+            let out = fit(Algo::TwoD, p, &ds.points, &cfg).unwrap();
+            assert_eq!(out.assignments, ref_out.assignments, "p={p}");
+        }
+    }
+
+    #[test]
+    fn sixteen_ranks_polynomial() {
+        let ds = synth::gaussian_blobs(160, 6, 4, 4.0, 38);
+        let cfg = FitConfig { k: 4, max_iters: 50, ..Default::default() };
+        let ref_out = fit(Algo::OneFiveD, 16, &ds.points, &cfg).unwrap();
+        let out = fit(Algo::TwoD, 16, &ds.points, &cfg).unwrap();
+        // Same fixed point on well-separated data.
+        assert_eq!(out.assignments, ref_out.assignments);
+        for w in out.objective_curve.windows(2) {
+            assert!(w[1] <= w[0] + 1e-3);
+        }
+    }
+
+    #[test]
+    fn update_phase_costs_more_than_15d() {
+        // The MINLOC allreduce makes 2D's update phase communicate
+        // O(n/√P·log√P) words/rank vs 1.5D's O(k): Eq. 19 vs "none".
+        let ds = synth::gaussian_blobs(288, 4, 4, 3.0, 39);
+        let cfg =
+            FitConfig { k: 4, max_iters: 10, converge_on_stable: false, ..Default::default() };
+        let two = fit(Algo::TwoD, 9, &ds.points, &cfg).unwrap();
+        let fifteen = fit(Algo::OneFiveD, 9, &ds.points, &cfg).unwrap();
+        let up2: u64 = two.comm_stats.iter().map(|s| s.get("update").bytes).sum();
+        let up15: u64 = fifteen.comm_stats.iter().map(|s| s.get("update").bytes).sum();
+        assert!(up2 > 2 * up15, "2D update {up2} vs 1.5D update {up15}");
+    }
+}

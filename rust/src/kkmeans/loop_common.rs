@@ -1,0 +1,139 @@
+//! Shared pieces of the clustering loop (Eqs. 5–8 + the V update).
+//!
+//! Every algorithm's iteration, after its own distributed SpMM, runs:
+//! mask → local SpMV → Allreduce c → fused distances+argmin → change
+//! count / cluster-size Allreduce. The 1D-layout variants (1D, H-1D,
+//! 1.5D) share [`local_update`] verbatim; the 2D algorithm has its own
+//! update path (MINLOC) in [`super::algo_2d`].
+
+use crate::backend::ComputeBackend;
+use crate::comm::{Comm, Group};
+use crate::dense::DenseMatrix;
+use crate::sparse::VPartition;
+
+/// Global cluster sizes from local assignments (Allreduce).
+pub fn global_sizes(comm: &Comm, world: &Group, assign: &[u32], k: usize) -> Vec<u64> {
+    let mut local = vec![0u64; k];
+    for &a in assign {
+        local[a as usize] += 1;
+    }
+    comm.allreduce_sum_u64(world, local)
+}
+
+/// One shared 1D-layout update step.
+///
+/// Inputs: this rank's E_local (own points × k) and current local
+/// assignments. Performs mask (Eq. 5), local SpMV + Allreduce (Eq. 6),
+/// fused distances/argmin (Eq. 8), updates `assign` in place, and
+/// returns (changes, Σ local minvals, new global sizes).
+#[allow(clippy::too_many_arguments)]
+pub fn local_update(
+    comm: &Comm,
+    world: &Group,
+    backend: &dyn ComputeBackend,
+    e_local: &DenseMatrix,
+    assign: &mut Vec<u32>,
+    k: usize,
+    inv_sizes: &[f32],
+) -> (u64, f64, Vec<u64>) {
+    comm.set_phase("update");
+    // Eqs. 5–6 fused: z = mask(Eᵀ), partial c = V z (then Allreduce).
+    let c_part = backend.update_pre(e_local, assign, k, inv_sizes);
+    let c = comm.allreduce_sum_f32(world, c_part);
+    // Eq. 8 + argmin.
+    let (new_assign, minvals) = backend.distances_argmin(e_local, &c);
+    let mut changes = 0u64;
+    for (o, n) in assign.iter().zip(&new_assign) {
+        if o != n {
+            changes += 1;
+        }
+    }
+    let obj_local: f64 = minvals.iter().map(|&v| v as f64).sum();
+    *assign = new_assign;
+    // Global change count + objective + new sizes.
+    let changes = comm.allreduce_sum_u64(world, vec![changes])[0];
+    let obj = allreduce_sum_f64(comm, world, obj_local);
+    let sizes = global_sizes(comm, world, assign, k);
+    (changes, obj, sizes)
+}
+
+/// f64 sum allreduce helper (objective tracking).
+pub fn allreduce_sum_f64(comm: &Comm, g: &Group, x: f64) -> f64 {
+    let out = comm.allreduce(g, vec![x], |acc, other| {
+        for (a, b) in acc.iter_mut().zip(other) {
+            *a += b;
+        }
+    });
+    out[0]
+}
+
+/// Inverse sizes vector (V values) from global sizes.
+pub fn inv_sizes(sizes: &[u64]) -> Vec<f32> {
+    VPartition::inv_sizes(sizes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::comm::World;
+    use crate::util::part;
+
+    #[test]
+    fn global_sizes_sum_over_ranks() {
+        let n = 10;
+        let k = 3;
+        let assign_all: Vec<u32> = (0..n).map(|x| (x % k) as u32).collect();
+        let aref = &assign_all;
+        let (results, _) = World::run(2, |comm| {
+            let world = Group::world(2);
+            let (lo, hi) = part::bounds(n, 2, comm.rank());
+            global_sizes(comm, &world, &aref[lo..hi], k)
+        });
+        for r in results {
+            assert_eq!(r, vec![4, 3, 3]);
+        }
+    }
+
+    #[test]
+    fn local_update_single_rank_matches_manual() {
+        // Tiny fixture: n=4, k=2. E chosen so points 0,1 -> cluster 0
+        // and 2,3 -> cluster 1 after the update.
+        let e = DenseMatrix::from_vec(
+            4,
+            2,
+            vec![
+                5.0, 1.0, // strongly cluster 0
+                4.0, 1.0, //
+                1.0, 6.0, // strongly cluster 1
+                0.0, 7.0,
+            ],
+        );
+        let (results, _) = World::run(1, |comm| {
+            let world = Group::world(1);
+            let be = NativeBackend::new();
+            let mut assign = vec![0u32, 1, 0, 1]; // mixed start
+            let sizes = global_sizes(comm, &world, &assign, 2);
+            let inv = inv_sizes(&sizes);
+            let (changes, obj, new_sizes) =
+                local_update(comm, &world, &be, &e, &mut assign, 2, &inv);
+            (assign, changes, obj, new_sizes)
+        });
+        let (assign, changes, obj, sizes) = results.into_iter().next().unwrap();
+        assert_eq!(assign, vec![0, 0, 1, 1]);
+        assert_eq!(changes, 2);
+        assert_eq!(sizes, vec![2, 2]);
+        assert!(obj.is_finite());
+    }
+
+    #[test]
+    fn f64_allreduce() {
+        let (results, _) = World::run(3, |comm| {
+            let world = Group::world(3);
+            allreduce_sum_f64(comm, &world, (comm.rank() + 1) as f64)
+        });
+        for r in results {
+            assert_eq!(r, 6.0);
+        }
+    }
+}

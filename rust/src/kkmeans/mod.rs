@@ -1,0 +1,260 @@
+//! Distributed Kernel K-means: the paper's four algorithms behind one
+//! `fit` entry point.
+//!
+//! | variant | K (GEMM) | Eᵀ (SpMM) | cluster update |
+//! |---|---|---|---|
+//! | [`Algo::OneD`]      | 1D Allgather  | 1D B-stationary | local |
+//! | [`Algo::HybridOneD`]| SUMMA + redistribute | 1D B-stationary | local |
+//! | [`Algo::TwoD`]      | SUMMA         | 2D B-stationary | MINLOC allreduce |
+//! | [`Algo::OneFiveD`]  | SUMMA         | **1.5D** (column-split reduce-scatter) | local |
+//!
+//! All four share iteration semantics: round-robin init (paper §V),
+//! argmin ties to the lower cluster index, V's values recomputed from
+//! allreduced cluster sizes, fixed `max_iters` or convergence when no
+//! assignment changes. Distributed runs of *every* variant produce
+//! assignments that the integration tests compare against the
+//! single-rank oracle ([`oracle`]).
+
+pub mod loop_common;
+pub mod algo_1d;
+pub mod algo_h1d;
+pub mod algo_2d;
+pub mod algo_15d;
+pub mod oracle;
+
+use crate::comm::{CommStats, World};
+use crate::dense::DenseMatrix;
+use crate::kernelfn::KernelFn;
+use crate::util::timing::Stopwatch;
+use crate::VivaldiError;
+
+/// Algorithm selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    /// 1D baseline (Algorithm 1) — the communication pattern of prior
+    /// distributed Kernel K-means work.
+    OneD,
+    /// Hybrid 1D: SUMMA for K, then 2D→1D redistribution.
+    HybridOneD,
+    /// Pure 2D: SUMMA K, 2D B-stationary SpMM, MINLOC cluster updates.
+    TwoD,
+    /// 1.5D (Algorithm 2) — the paper's main contribution.
+    OneFiveD,
+}
+
+impl Algo {
+    pub const ALL: [Algo; 4] = [Algo::OneD, Algo::HybridOneD, Algo::TwoD, Algo::OneFiveD];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::OneD => "1D",
+            Algo::HybridOneD => "H-1D",
+            Algo::TwoD => "2D",
+            Algo::OneFiveD => "1.5D",
+        }
+    }
+
+    /// Whether this algorithm needs a perfect-square rank count.
+    pub fn needs_square_grid(&self) -> bool {
+        !matches!(self, Algo::OneD)
+    }
+
+    pub fn parse(s: &str) -> Option<Algo> {
+        match s.to_ascii_lowercase().as_str() {
+            "1d" | "oned" => Some(Algo::OneD),
+            "h1d" | "h-1d" | "hybrid1d" | "hybrid-1d" => Some(Algo::HybridOneD),
+            "2d" | "twod" => Some(Algo::TwoD),
+            "1.5d" | "15d" | "onefived" => Some(Algo::OneFiveD),
+            _ => None,
+        }
+    }
+}
+
+/// Fit configuration.
+#[derive(Debug, Clone)]
+pub struct FitConfig {
+    /// Number of clusters.
+    pub k: usize,
+    /// Maximum clustering iterations (the paper benchmarks with 100).
+    pub max_iters: usize,
+    /// Kernel function (paper benchmark: polynomial γ=1, c=1, d=2).
+    pub kernel: KernelFn,
+    /// Stop early when no assignment changes.
+    pub converge_on_stable: bool,
+    /// Simulated device-memory model (None = unlimited). See
+    /// [`crate::config::MemModel`] for the calibration story.
+    pub mem: Option<crate::config::MemModel>,
+}
+
+impl Default for FitConfig {
+    fn default() -> Self {
+        FitConfig {
+            k: 16,
+            max_iters: 100,
+            kernel: KernelFn::paper_polynomial(),
+            converge_on_stable: true,
+            mem: None,
+        }
+    }
+}
+
+/// Per-rank outcome, assembled into [`FitResult`] by [`fit`].
+#[derive(Debug, Clone)]
+pub struct RankOutput {
+    /// Final assignments of this rank's canonical point slice.
+    pub assign: Vec<u32>,
+    /// Phase timings ("gemm", "spmm", "update" + "redist" for H-1D).
+    pub stopwatch: Stopwatch,
+    /// Iterations executed.
+    pub iterations: usize,
+    /// Converged before `max_iters`?
+    pub converged: bool,
+    /// Relative objective per iteration (identical on every rank).
+    pub objective_curve: Vec<f64>,
+    /// Assignment changes per iteration (identical on every rank).
+    pub changes_curve: Vec<u64>,
+    /// Peak simulated device memory.
+    pub peak_mem: u64,
+}
+
+/// Result of a distributed fit.
+#[derive(Debug, Clone)]
+pub struct FitResult {
+    /// Global assignments in point order.
+    pub assignments: Vec<u32>,
+    pub iterations: usize,
+    pub converged: bool,
+    /// Relative objective Σⱼ minₐ D(j,a) per iteration (monotone ↓).
+    pub objective_curve: Vec<f64>,
+    pub changes_curve: Vec<u64>,
+    /// Per-rank communication ledgers (phase-labeled).
+    pub comm_stats: Vec<CommStats>,
+    /// Per-rank phase timings.
+    pub timings: Vec<Stopwatch>,
+    /// Max peak simulated device memory over ranks.
+    pub peak_mem: u64,
+    /// Rank count the fit ran on.
+    pub ranks: usize,
+}
+
+impl FitResult {
+    /// Critical-path phase timings (max over ranks).
+    pub fn critical_timings(&self) -> Stopwatch {
+        Stopwatch::max_over(&self.timings)
+    }
+}
+
+/// Run a distributed Kernel K-means fit on `p` simulated ranks with the
+/// native backend. Points are globally visible to the harness; each
+/// rank thread slices out only what its layout owns.
+pub fn fit(
+    algo: Algo,
+    p: usize,
+    points: &DenseMatrix,
+    cfg: &FitConfig,
+) -> Result<FitResult, VivaldiError> {
+    let backend = crate::backend::NativeBackend::new();
+    fit_with_backend(algo, p, points, cfg, &backend)
+}
+
+/// [`fit`] with an explicit compute backend (native or PJRT).
+pub fn fit_with_backend(
+    algo: Algo,
+    p: usize,
+    points: &DenseMatrix,
+    cfg: &FitConfig,
+    backend: &dyn crate::backend::ComputeBackend,
+) -> Result<FitResult, VivaldiError> {
+    if algo.needs_square_grid() && !crate::util::is_perfect_square(p) {
+        return Err(VivaldiError::InvalidConfig(format!(
+            "{} requires a perfect-square rank count, got {p}",
+            algo.name()
+        )));
+    }
+    if cfg.k == 0 || points.rows() == 0 {
+        return Err(VivaldiError::InvalidConfig("k and n must be positive".into()));
+    }
+    if points.rows() < cfg.k {
+        return Err(VivaldiError::InvalidConfig(format!(
+            "n = {} < k = {}",
+            points.rows(),
+            cfg.k
+        )));
+    }
+    if algo == Algo::TwoD {
+        let q = (p as f64).sqrt().round() as usize;
+        if q > cfg.k {
+            return Err(VivaldiError::InvalidConfig(format!(
+                "2D requires √P ≤ k (√{p} > {})",
+                cfg.k
+            )));
+        }
+    }
+
+    let (rank_results, comm_stats) = World::run(p, |comm| match algo {
+        Algo::OneD => algo_1d::run_rank(comm, points, cfg, backend),
+        Algo::HybridOneD => algo_h1d::run_rank(comm, points, cfg, backend),
+        Algo::TwoD => algo_2d::run_rank(comm, points, cfg, backend),
+        Algo::OneFiveD => algo_15d::run_rank(comm, points, cfg, backend),
+    });
+
+    // Propagate a collective failure (e.g. OOM) — every rank reports it.
+    let mut outs = Vec::with_capacity(p);
+    for r in rank_results {
+        outs.push(r?);
+    }
+
+    // All layouts return canonical contiguous slices in rank order.
+    let assignments: Vec<u32> = outs.iter().flat_map(|o| o.assign.iter().copied()).collect();
+    debug_assert_eq!(assignments.len(), points.rows());
+    let first = &outs[0];
+    Ok(FitResult {
+        iterations: first.iterations,
+        converged: first.converged,
+        objective_curve: first.objective_curve.clone(),
+        changes_curve: first.changes_curve.clone(),
+        peak_mem: outs.iter().map(|o| o.peak_mem).max().unwrap_or(0),
+        timings: outs.iter().map(|o| o.stopwatch.clone()).collect(),
+        comm_stats,
+        assignments,
+        ranks: p,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algo_parse_and_names() {
+        assert_eq!(Algo::parse("1.5d"), Some(Algo::OneFiveD));
+        assert_eq!(Algo::parse("H-1D"), Some(Algo::HybridOneD));
+        assert_eq!(Algo::parse("2d"), Some(Algo::TwoD));
+        assert_eq!(Algo::parse("1d"), Some(Algo::OneD));
+        assert_eq!(Algo::parse("3d"), None);
+        assert_eq!(Algo::OneFiveD.name(), "1.5D");
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let points = DenseMatrix::zeros(10, 2);
+        let cfg = FitConfig { k: 2, ..Default::default() };
+        // Non-square grid for a grid algorithm.
+        assert!(matches!(
+            fit(Algo::OneFiveD, 3, &points, &cfg),
+            Err(VivaldiError::InvalidConfig(_))
+        ));
+        // √P > k for 2D.
+        let cfg2 = FitConfig { k: 2, ..Default::default() };
+        assert!(matches!(
+            fit(Algo::TwoD, 16, &points, &cfg2),
+            Err(VivaldiError::InvalidConfig(_))
+        ));
+        // n < k.
+        let cfg3 = FitConfig { k: 100, ..Default::default() };
+        assert!(matches!(
+            fit(Algo::OneD, 1, &points, &cfg3),
+            Err(VivaldiError::InvalidConfig(_))
+        ));
+    }
+}

@@ -1,0 +1,96 @@
+//! # VIVALDI-RS — Communication-Avoiding Distributed Kernel K-Means
+//!
+//! A reproduction of *"Communication-Avoiding Linear Algebraic Kernel
+//! K-Means on GPUs"* (CS.DC 2026) as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **Layer 3 (this crate)** — the distributed coordinator: four Kernel
+//!   K-means algorithms (1D, Hybrid-1D, 1.5D, 2D) built on
+//!   communication-counted collectives over a simulated multi-rank
+//!   fabric, plus distributed GEMM (1D / SUMMA) and distributed SpMM
+//!   (1D / 2D / 1.5D B-stationary) primitives, a single-device
+//!   sliding-window baseline, and an experiment harness that regenerates
+//!   every table and figure in the paper's evaluation.
+//! * **Layer 2/1 (build-time Python, `python/compile/`)** — the per-rank
+//!   local compute graph (Gram tile + kernel function, the fused
+//!   clustering iteration) authored in JAX with Pallas kernels, AOT
+//!   lowered to HLO text and executed from Rust via PJRT
+//!   ([`runtime`]).
+//!
+//! The crate is fully self-contained after `make artifacts`: Python never
+//! runs on the request path.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use vivaldi::data::synth;
+//! use vivaldi::kernelfn::KernelFn;
+//! use vivaldi::kkmeans::{self, Algo, FitConfig};
+//!
+//! // 4096 points on two concentric rings — not linearly separable.
+//! let ds = synth::concentric_rings(4096, 2, 42);
+//! let cfg = FitConfig {
+//!     k: 2,
+//!     max_iters: 50,
+//!     kernel: KernelFn::polynomial(1.0, 1.0, 2.0),
+//!     ..Default::default()
+//! };
+//! // Run the paper's 1.5D algorithm on 4 simulated ranks.
+//! let out = kkmeans::fit(Algo::OneFiveD, 4, &ds.points, &cfg).unwrap();
+//! println!("converged after {} iters", out.iterations);
+//! ```
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment
+//! index, and `EXPERIMENTS.md` for the paper-vs-measured record.
+
+pub mod util;
+pub mod comm;
+pub mod model;
+pub mod dense;
+pub mod sparse;
+pub mod kernelfn;
+pub mod backend;
+pub mod gemm;
+pub mod spmm;
+pub mod kkmeans;
+pub mod sliding_window;
+pub mod lloyd;
+pub mod data;
+pub mod quality;
+pub mod runtime;
+pub mod config;
+pub mod metrics;
+pub mod bench;
+
+/// Crate-wide result type (thin alias over `anyhow`).
+pub type Result<T> = anyhow::Result<T>;
+
+/// Errors surfaced by the coordinator.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum VivaldiError {
+    /// A simulated rank exceeded its device memory budget. Mirrors the
+    /// paper's OOM behaviour (1D replication of P, H-1D redistribution).
+    OutOfMemory {
+        rank: usize,
+        requested: u64,
+        budget: u64,
+        what: String,
+    },
+    /// Invalid configuration (e.g. non-square grid for a 2D algorithm).
+    InvalidConfig(String),
+}
+
+impl std::fmt::Display for VivaldiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            VivaldiError::OutOfMemory { rank, requested, budget, what } => write!(
+                f,
+                "rank {rank}: out of device memory allocating {what} \
+                 ({requested} B requested, {budget} B budget)"
+            ),
+            VivaldiError::InvalidConfig(msg) => write!(f, "invalid config: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for VivaldiError {}

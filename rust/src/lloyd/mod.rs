@@ -1,0 +1,133 @@
+//! Standard (Lloyd) K-means in input space.
+//!
+//! The linear baseline the paper's motivation contrasts with: fast, but
+//! blind to non-linearly-separable structure. Used by the quality
+//! examples ([`crate::quality`]) to demonstrate where Kernel K-means is
+//! worth its O(n²) — exactly the paper's §I argument.
+
+use crate::dense::DenseMatrix;
+use crate::util::par::par_map;
+
+/// Lloyd's algorithm result.
+#[derive(Debug, Clone)]
+pub struct LloydResult {
+    pub assignments: Vec<u32>,
+    pub centroids: DenseMatrix,
+    pub iterations: usize,
+    pub converged: bool,
+    /// Sum of squared distances per iteration (inertia).
+    pub inertia_curve: Vec<f64>,
+}
+
+/// Run standard K-means with round-robin init (same init policy as the
+/// kernel algorithms, so comparisons isolate the kernel's effect).
+pub fn lloyd_fit(points: &DenseMatrix, k: usize, max_iters: usize) -> LloydResult {
+    let n = points.rows();
+    let d = points.cols();
+    assert!(k >= 1 && n >= k);
+    let mut assign: Vec<u32> = (0..n).map(|x| (x % k) as u32).collect();
+    let mut centroids = DenseMatrix::zeros(k, d);
+    let mut inertia_curve = Vec::new();
+    let mut converged = false;
+    let mut iterations = 0;
+
+    for _ in 0..max_iters {
+        // Centroid update.
+        let mut sums = vec![0.0f64; k * d];
+        let mut counts = vec![0u64; k];
+        for j in 0..n {
+            let a = assign[j] as usize;
+            counts[a] += 1;
+            for (f, &v) in points.row(j).iter().enumerate() {
+                sums[a * d + f] += v as f64;
+            }
+        }
+        for a in 0..k {
+            if counts[a] > 0 {
+                for f in 0..d {
+                    centroids.set(a, f, (sums[a * d + f] / counts[a] as f64) as f32);
+                }
+            }
+        }
+        // Assignment update (parallel over points).
+        let cref = &centroids;
+        let new_assign_and_d: Vec<(u32, f64)> = par_map(n, 256, |j| {
+            let row = points.row(j);
+            let mut best = 0u32;
+            let mut best_d = f64::INFINITY;
+            for a in 0..k {
+                let c = cref.row(a);
+                let mut dist = 0.0f64;
+                for (x, y) in row.iter().zip(c) {
+                    let t = (x - y) as f64;
+                    dist += t * t;
+                }
+                if dist < best_d {
+                    best_d = dist;
+                    best = a as u32;
+                }
+            }
+            (best, best_d)
+        });
+        let mut changes = 0usize;
+        let mut inertia = 0.0f64;
+        for (j, (a, dist)) in new_assign_and_d.into_iter().enumerate() {
+            if assign[j] != a {
+                changes += 1;
+            }
+            assign[j] = a;
+            inertia += dist;
+        }
+        inertia_curve.push(inertia);
+        iterations += 1;
+        if changes == 0 {
+            converged = true;
+            break;
+        }
+    }
+
+    LloydResult { assignments: assign, centroids, iterations, converged, inertia_curve }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn recovers_blobs() {
+        let ds = synth::gaussian_blobs(120, 4, 3, 5.0, 61);
+        let out = lloyd_fit(&ds.points, 3, 50);
+        assert!(out.converged);
+        let nmi = crate::quality::nmi(&out.assignments, &ds.labels, 3);
+        assert!(nmi > 0.95, "nmi={nmi}");
+    }
+
+    #[test]
+    fn inertia_monotone() {
+        let ds = synth::two_moons(100, 0.1, 62);
+        let out = lloyd_fit(&ds.points, 2, 30);
+        for w in out.inertia_curve.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9);
+        }
+    }
+
+    #[test]
+    fn fails_on_rings_where_kernel_succeeds() {
+        // The motivating contrast: rings defeat Lloyd.
+        let ds = synth::concentric_rings(200, 2, 63);
+        let lloyd = lloyd_fit(&ds.points, 2, 60);
+        let nmi_lloyd = crate::quality::nmi(&lloyd.assignments, &ds.labels, 2);
+        let kk = crate::kkmeans::oracle::reference_fit(
+            &ds.points,
+            2,
+            &crate::kernelfn::KernelFn::gaussian(2.0),
+            60,
+        );
+        let nmi_kk = crate::quality::nmi(&kk.assignments, &ds.labels, 2);
+        assert!(
+            nmi_kk > nmi_lloyd + 0.3,
+            "kernel {nmi_kk} should beat lloyd {nmi_lloyd} on rings"
+        );
+    }
+}

@@ -1,0 +1,303 @@
+//! `vivaldi` — launcher CLI for the distributed Kernel K-means
+//! reproduction.
+//!
+//! Subcommands map one-to-one onto the paper's evaluation artifacts:
+//!
+//! ```text
+//! vivaldi run              one fit (choose algo/dataset/G/k/n)
+//! vivaldi weak-scaling     Fig. 2 (+ --breakdown = Fig. 3)
+//! vivaldi strong-scaling   Fig. 4 (+ --breakdown = Fig. 5)
+//! vivaldi sliding-window   Fig. 6 speedup table
+//! vivaldi comm-table       Table I counted-vs-analytic volumes
+//! vivaldi summary          §VI headline aggregates
+//! vivaldi datasets         Table II dataset card
+//! vivaldi artifacts-check  verify PJRT artifacts load + execute
+//! ```
+//!
+//! Every experiment accepts `--quick` (small grid) and `--scale FILE`
+//! (JSON overrides, see `config::Scale`). Tables print to stdout and
+//! are saved as CSV under `results/`.
+
+use vivaldi::bench;
+use vivaldi::config::Scale;
+use vivaldi::data::datasets::PaperDataset;
+use vivaldi::kernelfn::KernelFn;
+use vivaldi::kkmeans::{self, Algo, FitConfig};
+use vivaldi::metrics::Table;
+use vivaldi::model::MachineModel;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = &args[1.min(args.len())..];
+    let code = match cmd {
+        "run" => cmd_run(rest),
+        "weak-scaling" => cmd_figures(rest, Figure::Weak),
+        "strong-scaling" => cmd_figures(rest, Figure::Strong),
+        "sliding-window" | "sliding-window-speedup" => cmd_figures(rest, Figure::Sliding),
+        "comm-table" => cmd_figures(rest, Figure::CommTable),
+        "summary" => cmd_figures(rest, Figure::Summary),
+        "datasets" => cmd_datasets(),
+        "artifacts-check" => cmd_artifacts_check(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            0
+        }
+        other => {
+            eprintln!("unknown command {other:?}; try `vivaldi help`");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "vivaldi — communication-avoiding distributed Kernel K-means\n\
+         \n\
+         USAGE: vivaldi <COMMAND> [FLAGS]\n\
+         \n\
+         COMMANDS:\n\
+         \x20 run               one fit: --algo 1d|h1d|2d|1.5d --gpus G --k K\n\
+         \x20                   --n N --dataset kdd|higgs|mnist8m [--pjrt]\n\
+         \x20 weak-scaling      Fig. 2 [--breakdown → Fig. 3] [--quick]\n\
+         \x20 strong-scaling    Fig. 4 [--breakdown → Fig. 5] [--quick]\n\
+         \x20 sliding-window    Fig. 6 speedup over the single-device baseline\n\
+         \x20 comm-table        Table I: counted vs analytic communication\n\
+         \x20 summary           §VI headline aggregates\n\
+         \x20 datasets          Table II dataset card\n\
+         \x20 artifacts-check   verify the AOT artifacts load and execute\n\
+         \n\
+         COMMON FLAGS:\n\
+         \x20 --quick           small grid (seconds, for smoke tests)\n\
+         \x20 --scale FILE      JSON overrides for the experiment scale\n\
+         \x20 --datasets LIST   comma-separated subset (kdd,higgs,mnist8m)"
+    );
+}
+
+/// Minimal flag parser: `--key value` and boolean `--flag`.
+struct Flags<'a> {
+    args: &'a [String],
+}
+
+impl<'a> Flags<'a> {
+    fn get(&self, key: &str) -> Option<&str> {
+        self.args
+            .iter()
+            .position(|a| a == key)
+            .and_then(|i| self.args.get(i + 1))
+            .map(String::as_str)
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.args.iter().any(|a| a == key)
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn load_scale(f: &Flags) -> Scale {
+    let mut scale = if f.has("--quick") { Scale::quick() } else { Scale::default() };
+    if let Some(path) = f.get("--scale") {
+        if let Err(e) = scale.load_overrides(std::path::Path::new(path)) {
+            eprintln!("bad --scale file: {e}");
+            std::process::exit(2);
+        }
+    }
+    scale
+}
+
+fn parse_datasets(f: &Flags) -> Vec<PaperDataset> {
+    match f.get("--datasets") {
+        None => PaperDataset::ALL.to_vec(),
+        Some(list) => list
+            .split(',')
+            .map(|s| {
+                PaperDataset::parse(s).unwrap_or_else(|| {
+                    eprintln!("unknown dataset {s:?}");
+                    std::process::exit(2);
+                })
+            })
+            .collect(),
+    }
+}
+
+fn cmd_run(args: &[String]) -> i32 {
+    let f = Flags { args };
+    let algo = match Algo::parse(f.get("--algo").unwrap_or("1.5d")) {
+        Some(a) => a,
+        None => {
+            eprintln!("unknown --algo (use 1d|h1d|2d|1.5d)");
+            return 2;
+        }
+    };
+    let g = f.usize_or("--gpus", 4);
+    let k = f.usize_or("--k", 16);
+    let n = f.usize_or("--n", 4096);
+    let iters = f.usize_or("--iters", 10);
+    let ds = PaperDataset::parse(f.get("--dataset").unwrap_or("higgs")).unwrap_or(PaperDataset::HiggsLike);
+    let scale = load_scale(&f);
+    let data = ds.generate(n, scale.d_cap(ds), scale.seed);
+    let cfg = FitConfig {
+        k,
+        max_iters: iters,
+        kernel: KernelFn::paper_polynomial(),
+        converge_on_stable: true,
+        mem: None,
+    };
+    println!(
+        "fit: algo={} G={g} n={} d={} k={k} iters<={iters} backend={}",
+        algo.name(),
+        data.n(),
+        data.d(),
+        if f.has("--pjrt") { "pjrt" } else { "native" }
+    );
+    let t0 = std::time::Instant::now();
+    let result = if f.has("--pjrt") {
+        match vivaldi::runtime::PjrtBackend::from_default_artifacts(f.usize_or("--devices", 1)) {
+            Ok(be) => {
+                let r = kkmeans::fit_with_backend(algo, g, &data.points, &cfg, &be);
+                let (hits, misses) = be.counters();
+                println!("pjrt: {hits} artifact executions, {misses} native fallbacks");
+                r
+            }
+            Err(e) => {
+                eprintln!("pjrt backend unavailable ({e}); run `make artifacts` first");
+                return 1;
+            }
+        }
+    } else {
+        kkmeans::fit(algo, g, &data.points, &cfg)
+    };
+    match result {
+        Ok(out) => {
+            println!(
+                "done in {:.3}s wall: {} iterations, converged={}, changes last iter={}",
+                t0.elapsed().as_secs_f64(),
+                out.iterations,
+                out.converged,
+                out.changes_curve.last().copied().unwrap_or(0)
+            );
+            let crit = out.critical_timings();
+            for (phase, secs) in crit.phases() {
+                println!("  phase {phase:<8} {secs:.4}s (critical path)");
+            }
+            let total = vivaldi::comm::CommStats::merged_sum(&out.comm_stats).total();
+            println!(
+                "  comm: {} messages, {} total",
+                total.msgs,
+                vivaldi::util::human_bytes(total.bytes)
+            );
+            if !data.labels.is_empty() {
+                let nmi = vivaldi::quality::nmi(&out.assignments, &data.labels, k);
+                println!("  quality: NMI vs generator labels = {nmi:.3}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("fit failed: {e}");
+            1
+        }
+    }
+}
+
+enum Figure {
+    Weak,
+    Strong,
+    Sliding,
+    CommTable,
+    Summary,
+}
+
+fn cmd_figures(args: &[String], which: Figure) -> i32 {
+    let f = Flags { args };
+    let scale = load_scale(&f);
+    let datasets = parse_datasets(&f);
+    let machine = MachineModel::perlmutter();
+    let breakdown = f.has("--breakdown");
+    let tables: Vec<Table> = match which {
+        Figure::Weak => bench::weak_scaling(&scale, &machine, &datasets, breakdown),
+        Figure::Strong => bench::strong_scaling(&scale, &machine, &datasets, breakdown),
+        Figure::Sliding => bench::sliding_speedup(&scale, &machine, &datasets),
+        Figure::CommTable => bench::comm_table(&scale, &machine),
+        Figure::Summary => vec![bench::summary(&scale, &machine, &datasets)],
+    };
+    for t in &tables {
+        t.print();
+        let name: String = t
+            .title
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+            .collect::<String>()
+            .to_lowercase();
+        match t.save_csv(&name) {
+            Ok(p) => println!("saved {}\n", p.display()),
+            Err(e) => eprintln!("csv save failed: {e}"),
+        }
+    }
+    0
+}
+
+fn cmd_datasets() -> i32 {
+    let mut t = Table::new(
+        "Table II — evaluation datasets (stand-ins; real libSVM files drop in via $VIVALDI_DATA)",
+        &["dataset", "paper n", "d", "domain", "stand-in"],
+    );
+    let domains = ["Education", "Physics", "Vision"];
+    for (ds, dom) in PaperDataset::ALL.iter().zip(domains) {
+        t.row(vec![
+            ds.name().into(),
+            ds.paper_n().to_string(),
+            ds.d().to_string(),
+            dom.into(),
+            format!("{}(n, d≤cap)", ds.name()),
+        ]);
+    }
+    t.print();
+    0
+}
+
+fn cmd_artifacts_check() -> i32 {
+    if !vivaldi::runtime::artifacts_available() {
+        eprintln!("no artifacts found — run `make artifacts`");
+        return 1;
+    }
+    let dir = vivaldi::runtime::artifacts_dir();
+    let manifest = match vivaldi::runtime::Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("manifest error: {e}");
+            return 1;
+        }
+    };
+    println!("manifest: {} ops in {}", manifest.ops.len(), dir.display());
+    match vivaldi::runtime::PjrtBackend::new(&manifest, 1) {
+        Ok(be) => {
+            // Exercise one op per kind against the native backend.
+            use vivaldi::backend::ComputeBackend;
+            use vivaldi::dense::DenseMatrix;
+            use vivaldi::util::rng::Rng;
+            let nat = vivaldi::backend::NativeBackend::new();
+            let mut rng = Rng::new(1);
+            let mut checked = 0;
+            for e in manifest.ops.iter().filter(|e| e.op == "update_post") {
+                let (m, k) = (e.inputs[0].shape[0], e.inputs[0].shape[1]);
+                let em = DenseMatrix::random(m, k, &mut rng);
+                let c: Vec<f32> = (0..k).map(|_| rng.next_f32()).collect();
+                let (a1, _) = be.distances_argmin(&em, &c);
+                let (a2, _) = nat.distances_argmin(&em, &c);
+                assert_eq!(a1, a2, "mismatch at {m}x{k}");
+                checked += 1;
+            }
+            let (hits, misses) = be.counters();
+            println!("checked {checked} update_post shapes: OK ({hits} hits, {misses} misses)");
+            0
+        }
+        Err(e) => {
+            eprintln!("backend init failed: {e}");
+            1
+        }
+    }
+}

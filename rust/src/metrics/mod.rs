@@ -1,0 +1,161 @@
+//! Result reporting: aligned console tables, CSV, and JSON records.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// A printable results table (one per paper table/figure series).
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Aligned console rendering.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.headers.join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write CSV under `results/` (created on demand).
+    pub fn save_csv(&self, name: &str) -> std::io::Result<std::path::PathBuf> {
+        let dir = results_dir();
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{name}.csv"));
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+}
+
+/// Results directory (override with `VIVALDI_RESULTS`).
+pub fn results_dir() -> std::path::PathBuf {
+    std::env::var("VIVALDI_RESULTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("results"))
+}
+
+/// A flat metric record serializable to JSON (experiment provenance).
+#[derive(Debug, Clone, Default)]
+pub struct Record {
+    fields: BTreeMap<String, Json>,
+}
+
+impl Record {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set_str(&mut self, k: &str, v: &str) -> &mut Self {
+        self.fields.insert(k.into(), Json::Str(v.into()));
+        self
+    }
+
+    pub fn set_num(&mut self, k: &str, v: f64) -> &mut Self {
+        self.fields.insert(k.into(), Json::Num(v));
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(self.fields.clone())
+    }
+}
+
+/// Append records as JSON lines under `results/`.
+pub fn append_jsonl(name: &str, records: &[Record]) -> std::io::Result<std::path::PathBuf> {
+    use std::io::Write;
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{name}.jsonl"));
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&path)?;
+    for r in records {
+        writeln!(f, "{}", r.to_json().to_string())?;
+    }
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["algo", "time"]);
+        t.row(vec!["1.5D".into(), "0.5".into()]);
+        t.row(vec!["longer-name".into(), "12.25".into()]);
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.contains("1.5D"));
+        // CSV shape.
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("algo,time"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn record_json() {
+        let mut r = Record::new();
+        r.set_str("algo", "2D").set_num("gpus", 16.0);
+        let j = r.to_json().to_string();
+        assert!(j.contains("\"algo\":\"2D\""));
+        assert!(j.contains("\"gpus\":16"));
+    }
+}

@@ -1,0 +1,149 @@
+//! The paper's analytic communication-cost formulas (Table I), in code.
+//!
+//! For each algorithm these give the asymptotic **words** (f32 elements)
+//! and **messages** for computing K and Dᵀ, in the α-β model with the
+//! log(√P) factors the paper omits "for brevity" left out here too.
+//! The Table I bench compares these against the fabric's exact counts
+//! to validate that the implementation has the claimed asymptotics.
+
+/// Problem parameters for the cost formulas.
+#[derive(Debug, Clone, Copy)]
+pub struct CostParams {
+    /// Total points.
+    pub n: usize,
+    /// Feature dimension.
+    pub d: usize,
+    /// Clusters.
+    pub k: usize,
+    /// Ranks.
+    pub p: usize,
+}
+
+/// An (α-messages, β-words) asymptotic estimate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CommCost {
+    pub messages: f64,
+    pub words: f64,
+}
+
+impl CommCost {
+    fn new(messages: f64, words: f64) -> Self {
+        CommCost { messages, words }
+    }
+}
+
+fn sqrt_p(p: usize) -> f64 {
+    (p as f64).sqrt()
+}
+
+/// 1D GEMM (Allgather of P) — Eq. (14). The paper states the total
+/// volume O(P·n·d); per process the ring allgather sends ≈ n·d words,
+/// which is the convention used here (all formulas per process, like
+/// the rest of Table I). The per-process volume *grows* with P in weak
+/// scaling since n = √G·n₀.
+pub fn k_1d(c: CostParams) -> CommCost {
+    CommCost::new(c.p as f64, (c.n * c.d) as f64)
+}
+
+/// H-1D K per process: SUMMA + 2D→1D redistribution — Eq. (16) + (17):
+/// α·O(P) + β·O(n²/P + n·d/√P).
+pub fn k_h1d(c: CostParams) -> CommCost {
+    let n = c.n as f64;
+    CommCost::new(c.p as f64, n * n / c.p as f64 + n * c.d as f64 / sqrt_p(c.p))
+}
+
+/// 1.5D / 2D K via SUMMA: α·O(√P) + β·O(n·d/√P) — Eq. (16), log
+/// factors dropped as in Table I.
+pub fn k_summa(c: CostParams) -> CommCost {
+    CommCost::new(sqrt_p(c.p), (c.n * c.d) as f64 / sqrt_p(c.p))
+}
+
+/// 1D / H-1D Dᵀ per iteration: α·O(P) + β·O(n) — Eq. (15).
+pub fn d_1d(c: CostParams) -> CommCost {
+    CommCost::new(c.p as f64, c.n as f64)
+}
+
+/// 1.5D Dᵀ per iteration: α·O(√P) + β·O(n(k+1)/√P) — Eq. (25).
+pub fn d_15d(c: CostParams) -> CommCost {
+    CommCost::new(sqrt_p(c.p), (c.n * (c.k + 1)) as f64 / sqrt_p(c.p))
+}
+
+/// 2D Dᵀ per iteration: α·O(√P) + β·O(n(k+1)/√P + n) — Eq. (18) + (19),
+/// the +n from the cluster-update MINLOC allreduce.
+pub fn d_2d(c: CostParams) -> CommCost {
+    let base = d_15d(c);
+    CommCost::new(base.messages, base.words + c.n as f64)
+}
+
+/// Sliding-window baseline: no network communication (single device),
+/// but O(n²/b) kernel-block recomputations per iteration.
+pub fn d_sliding_window(_c: CostParams) -> CommCost {
+    CommCost::new(0.0, 0.0)
+}
+
+/// All Table I rows for a parameter set, in the paper's order:
+/// (algorithm, K cost, Dᵀ cost).
+pub fn table1(c: CostParams) -> Vec<(&'static str, CommCost, CommCost)> {
+    vec![
+        ("1D", k_1d(c), d_1d(c)),
+        ("Hybrid 1D", k_h1d(c), d_1d(c)),
+        ("1.5D", k_summa(c), d_15d(c)),
+        ("2D", k_summa(c), d_2d(c)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const C: CostParams = CostParams { n: 96_000, d: 784, k: 64, p: 64 };
+
+    #[test]
+    fn one_d_words_do_not_shrink_with_p() {
+        let c4 = CostParams { p: 4, ..C };
+        let c64 = CostParams { p: 64, ..C };
+        // Per-process 1D GEMM volume is flat in P (the paper's core
+        // criticism: it grows with n in weak scaling), while SUMMA's
+        // shrinks with √P.
+        assert_eq!(k_1d(c64).words, k_1d(c4).words);
+        assert!(k_summa(c64).words < k_summa(c4).words);
+        assert!((k_summa(c4).words / k_summa(c64).words - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fifteen_d_beats_2d_by_n_words() {
+        let d15 = d_15d(C);
+        let d2 = d_2d(C);
+        assert!((d2.words - d15.words - C.n as f64).abs() < 1e-9);
+        assert_eq!(d2.messages, d15.messages);
+    }
+
+    #[test]
+    fn crossover_1d_vs_15d_spmm() {
+        // 1D Dᵀ words are O(n) flat; 1.5D words are O(n(k+1)/√P):
+        // for small P 1D communicates less, for large P 1.5D wins —
+        // the crossover the paper describes in §IV.C.
+        let small = CostParams { p: 4, ..C };
+        // Crossover needs √P > k+1 (words_15d = n(k+1)/√P < n = words_1d).
+        let large = CostParams { p: 16_384, ..C };
+        assert!(d_15d(small).words > d_1d(small).words);
+        assert!(d_15d(large).words < d_1d(large).words);
+    }
+
+    #[test]
+    fn h1d_redistribution_dominates_at_small_p() {
+        let c = CostParams { p: 16, ..C };
+        // n²/P term dwarfs the SUMMA term for n >> d√P.
+        let cost = k_h1d(c);
+        let summa = k_summa(c);
+        assert!(cost.words > 10.0 * summa.words);
+    }
+
+    #[test]
+    fn table_has_four_rows() {
+        let t = table1(C);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t[0].0, "1D");
+        assert_eq!(t[2].0, "1.5D");
+    }
+}

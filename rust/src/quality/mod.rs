@@ -1,0 +1,185 @@
+//! Clustering-quality metrics: NMI, ARI, and the kernel objective.
+//!
+//! Used to validate that the distributed algorithms cluster as well as
+//! the oracle and that Kernel K-means beats plain K-means on
+//! non-linearly-separable data (the paper's motivation) — never used
+//! inside the algorithms themselves.
+
+use crate::dense::DenseMatrix;
+use crate::kernelfn::KernelFn;
+
+/// Contingency table between two labelings.
+fn contingency(a: &[u32], b: &[u32], ka: usize, kb: usize) -> Vec<u64> {
+    assert_eq!(a.len(), b.len());
+    let mut t = vec![0u64; ka * kb];
+    for (&x, &y) in a.iter().zip(b) {
+        t[x as usize * kb + y as usize] += 1;
+    }
+    t
+}
+
+fn entropy(counts: &[u64], n: f64) -> f64 {
+    counts
+        .iter()
+        .filter(|&&c| c > 0)
+        .map(|&c| {
+            let p = c as f64 / n;
+            -p * p.ln()
+        })
+        .sum()
+}
+
+/// Normalized mutual information in [0, 1] (arithmetic-mean
+/// normalization). `k` must bound both labelings' max label + 1.
+pub fn nmi(a: &[u32], b: &[u32], k: usize) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len() as f64;
+    if a.is_empty() {
+        return 0.0;
+    }
+    let ka = k.max(a.iter().map(|&x| x as usize + 1).max().unwrap_or(1));
+    let kb = k.max(b.iter().map(|&x| x as usize + 1).max().unwrap_or(1));
+    let t = contingency(a, b, ka, kb);
+    let row: Vec<u64> = (0..ka).map(|i| (0..kb).map(|j| t[i * kb + j]).sum()).collect();
+    let col: Vec<u64> = (0..kb).map(|j| (0..ka).map(|i| t[i * kb + j]).sum()).collect();
+    let mut mi = 0.0f64;
+    for i in 0..ka {
+        for j in 0..kb {
+            let c = t[i * kb + j];
+            if c > 0 {
+                let pij = c as f64 / n;
+                let pi = row[i] as f64 / n;
+                let pj = col[j] as f64 / n;
+                mi += pij * (pij / (pi * pj)).ln();
+            }
+        }
+    }
+    let ha = entropy(&row, n);
+    let hb = entropy(&col, n);
+    if ha == 0.0 && hb == 0.0 {
+        return 1.0; // both single-cluster: identical partitions
+    }
+    let denom = 0.5 * (ha + hb);
+    if denom == 0.0 {
+        0.0
+    } else {
+        (mi / denom).clamp(0.0, 1.0)
+    }
+}
+
+/// Adjusted Rand index (can be negative for worse-than-chance).
+pub fn ari(a: &[u32], b: &[u32], k: usize) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len() as f64;
+    if a.is_empty() {
+        return 0.0;
+    }
+    let ka = k.max(a.iter().map(|&x| x as usize + 1).max().unwrap_or(1));
+    let kb = k.max(b.iter().map(|&x| x as usize + 1).max().unwrap_or(1));
+    let t = contingency(a, b, ka, kb);
+    let comb2 = |x: u64| (x as f64) * (x as f64 - 1.0) / 2.0;
+    let row: Vec<u64> = (0..ka).map(|i| (0..kb).map(|j| t[i * kb + j]).sum()).collect();
+    let col: Vec<u64> = (0..kb).map(|j| (0..ka).map(|i| t[i * kb + j]).sum()).collect();
+    let sum_ij: f64 = t.iter().map(|&c| comb2(c)).sum();
+    let sum_a: f64 = row.iter().map(|&c| comb2(c)).sum();
+    let sum_b: f64 = col.iter().map(|&c| comb2(c)).sum();
+    let total = comb2(n as u64);
+    let expected = sum_a * sum_b / total;
+    let max_index = 0.5 * (sum_a + sum_b);
+    if (max_index - expected).abs() < 1e-12 {
+        return 1.0;
+    }
+    (sum_ij - expected) / (max_index - expected)
+}
+
+/// Exact kernel K-means objective: Σⱼ ‖φ(xⱼ) − μ_{cl(j)}‖² computed
+/// from the full kernel matrix (small-n validation only: O(n²)).
+pub fn kernel_objective(points: &DenseMatrix, assign: &[u32], k: usize, kernel: &KernelFn) -> f64 {
+    let n = points.rows();
+    assert_eq!(assign.len(), n);
+    let norms = points.row_sq_norms();
+    let mut kmat = crate::dense::ops::matmul_nt(points, points);
+    kernel.apply_tile(&mut kmat, &norms, &norms);
+    let mut sizes = vec![0f64; k];
+    for &a in assign {
+        sizes[a as usize] += 1.0;
+    }
+    // ‖μ_a‖² = (1/|L_a|²) Σ_{r,s∈L_a} K(r,s); Σ_{j∈L_a} K(j,·V_a) etc.
+    let mut mu_norm = vec![0f64; k];
+    let mut cross = vec![0f64; n]; // (K v_a)(j) for j's own cluster
+    for r in 0..n {
+        let ar = assign[r] as usize;
+        for s in 0..n {
+            if assign[s] as usize == ar {
+                let v = kmat.get(r, s) as f64;
+                mu_norm[ar] += v;
+                if s == r {
+                    // diagonal handled in final loop
+                }
+            }
+        }
+    }
+    for j in 0..n {
+        let a = assign[j] as usize;
+        let mut acc = 0.0;
+        for s in 0..n {
+            if assign[s] as usize == a {
+                acc += kmat.get(j, s) as f64;
+            }
+        }
+        cross[j] = acc / sizes[a];
+    }
+    let mut obj = 0.0;
+    for j in 0..n {
+        let a = assign[j] as usize;
+        let mn = mu_norm[a] / (sizes[a] * sizes[a]);
+        obj += kmat.get(j, j) as f64 - 2.0 * cross[j] + mn;
+    }
+    obj
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nmi_identical_is_one() {
+        let a = vec![0u32, 0, 1, 1, 2, 2];
+        assert!((nmi(&a, &a, 3) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nmi_permutation_invariant() {
+        let a = vec![0u32, 0, 1, 1, 2, 2];
+        let b = vec![2u32, 2, 0, 0, 1, 1]; // relabeled
+        assert!((nmi(&a, &b, 3) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nmi_independent_is_low() {
+        // Block labels vs alternating labels over 64 points.
+        let a: Vec<u32> = (0..64).map(|i| (i / 32) as u32).collect();
+        let b: Vec<u32> = (0..64).map(|i| (i % 2) as u32).collect();
+        assert!(nmi(&a, &b, 2) < 0.1);
+    }
+
+    #[test]
+    fn ari_bounds() {
+        let a = vec![0u32, 0, 1, 1];
+        let b = vec![1u32, 1, 0, 0];
+        assert!((ari(&a, &b, 2) - 1.0).abs() < 1e-9);
+        let c = vec![0u32, 1, 0, 1];
+        assert!(ari(&a, &c, 2) < 0.5);
+    }
+
+    #[test]
+    fn objective_prefers_true_clustering() {
+        use crate::data::synth;
+        let ds = synth::gaussian_blobs(60, 3, 3, 4.0, 5);
+        let good = kernel_objective(&ds.points, &ds.labels, 3, &KernelFn::linear());
+        // Scrambled assignment must be worse.
+        let bad_assign: Vec<u32> = (0..60).map(|i| ((i / 20) % 3) as u32).collect();
+        let bad = kernel_objective(&ds.points, &bad_assign, 3, &KernelFn::linear());
+        assert!(good < bad, "good={good} bad={bad}");
+    }
+}

@@ -1,0 +1,309 @@
+//! [`PjrtBackend`]: ComputeBackend implementation dispatching to AOT
+//! artifacts, with transparent native fallback + hit/miss accounting.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::manifest::{Manifest, TensorSpec};
+use super::service::{fingerprint_f32, Arg, DeviceService, HostTensor};
+use crate::backend::{ComputeBackend, NativeBackend};
+use crate::dense::DenseMatrix;
+use crate::kernelfn::KernelFn;
+
+/// PJRT-backed compute with native fallback.
+pub struct PjrtBackend {
+    svc: Arc<DeviceService>,
+    native: NativeBackend,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PjrtBackend {
+    /// Load artifacts from the default directory with `n_devices`
+    /// service threads.
+    pub fn from_default_artifacts(n_devices: usize) -> Result<Self, String> {
+        let dir = super::artifacts_dir();
+        let manifest = Manifest::load(&dir)?;
+        Self::new(&manifest, n_devices)
+    }
+
+    pub fn new(manifest: &Manifest, n_devices: usize) -> Result<Self, String> {
+        Ok(PjrtBackend {
+            svc: Arc::new(DeviceService::start(manifest, n_devices)?),
+            native: NativeBackend::new(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        })
+    }
+
+    /// (artifact executions, native fallbacks) so far.
+    pub fn counters(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    pub fn fallbacks(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    fn try_exec(&self, op: &str, inputs: Vec<HostTensor>) -> Option<Vec<HostTensor>> {
+        let specs: Vec<_> = inputs.iter().map(|t| t.spec()).collect();
+        if !self.svc.has(op, &specs) {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        match self.svc.execute(op, inputs) {
+            Ok(out) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(out)
+            }
+            Err(e) => {
+                // Compiled but failed at run time: surface loudly in
+                // debug, fall back in release.
+                debug_assert!(false, "pjrt execute failed: {e}");
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Execute an SpMM with the (immutable, iteration-invariant) K tile
+    /// kept device-resident: uploaded once per fingerprint, referenced
+    /// thereafter — avoids re-copying the tile every iteration.
+    fn try_exec_spmm_cached(
+        &self,
+        op: &str,
+        k_tile: &DenseMatrix,
+        rest: Vec<HostTensor>,
+    ) -> Option<Vec<HostTensor>> {
+        let tile_spec =
+            TensorSpec { shape: vec![k_tile.rows(), k_tile.cols()], dtype: super::manifest::Dtype::F32 };
+        let mut specs = vec![tile_spec.clone()];
+        specs.extend(rest.iter().map(|t| t.spec()));
+        if !self.svc.has(op, &specs) {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let fp = fingerprint_f32(k_tile.data(), &[k_tile.rows(), k_tile.cols()]);
+        if !self.svc.has_cached(fp) {
+            let t = HostTensor::F32(k_tile.data().to_vec(), vec![k_tile.rows(), k_tile.cols()]);
+            if let Err(e) = self.svc.put_cached(fp, t) {
+                debug_assert!(false, "pjrt put_cached failed: {e}");
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        }
+        let mut args = vec![Arg::Cached { fp, spec: tile_spec }];
+        args.extend(rest.into_iter().map(Arg::Inline));
+        match self.svc.execute_cached(fp, op, args) {
+            Ok(out) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(out)
+            }
+            Err(e) => {
+                debug_assert!(false, "pjrt cached execute failed: {e}");
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    fn mat(t: &HostTensor) -> DenseMatrix {
+        match t {
+            HostTensor::F32(v, s) => DenseMatrix::from_vec(s[0], s[1], v.clone()),
+            _ => panic!("expected f32 matrix"),
+        }
+    }
+
+    fn assign_i32(assign: &[u32]) -> HostTensor {
+        HostTensor::I32(assign.iter().map(|&a| a as i32).collect(), vec![assign.len()])
+    }
+}
+
+/// Is this the paper's default polynomial kernel (the one baked into
+/// the `gram_poly` / `kernel_apply_poly` artifacts)?
+fn is_paper_poly(kernel: &KernelFn) -> bool {
+    matches!(kernel, KernelFn::Polynomial { gamma, c, degree }
+        if *gamma == 1.0 && *c == 1.0 && *degree == 2.0)
+}
+
+impl ComputeBackend for PjrtBackend {
+    fn gram_tile(
+        &self,
+        a: &DenseMatrix,
+        b: &DenseMatrix,
+        kernel: &KernelFn,
+        row_norms: &[f32],
+        col_norms: &[f32],
+    ) -> DenseMatrix {
+        if is_paper_poly(kernel) {
+            let inputs = vec![
+                HostTensor::F32(a.data().to_vec(), vec![a.rows(), a.cols()]),
+                HostTensor::F32(b.data().to_vec(), vec![b.rows(), b.cols()]),
+            ];
+            if let Some(out) = self.try_exec("gram_poly", inputs) {
+                return Self::mat(&out[0]);
+            }
+        }
+        self.native.gram_tile(a, b, kernel, row_norms, col_norms)
+    }
+
+    fn matmul_nn_acc(&self, a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix) {
+        // SUMMA inner accumulation stays native (shape zoo).
+        self.native.matmul_nn_acc(a, b, c)
+    }
+
+    fn kernel_apply(
+        &self,
+        b: &mut DenseMatrix,
+        kernel: &KernelFn,
+        row_norms: &[f32],
+        col_norms: &[f32],
+    ) {
+        if is_paper_poly(kernel) {
+            let inputs = vec![HostTensor::F32(b.data().to_vec(), vec![b.rows(), b.cols()])];
+            if let Some(out) = self.try_exec("kernel_apply_poly", inputs) {
+                *b = Self::mat(&out[0]);
+                return;
+            }
+        }
+        self.native.kernel_apply(b, kernel, row_norms, col_norms)
+    }
+
+    fn spmm_vk(
+        &self,
+        k_tile: &DenseMatrix,
+        assign_r: &[u32],
+        k: usize,
+        inv_sizes: &[f32],
+    ) -> DenseMatrix {
+        let rest = vec![Self::assign_i32(assign_r), HostTensor::F32(inv_sizes.to_vec(), vec![k])];
+        if let Some(out) = self.try_exec_spmm_cached("spmm_vk", k_tile, rest) {
+            return Self::mat(&out[0]);
+        }
+        self.native.spmm_vk(k_tile, assign_r, k, inv_sizes)
+    }
+
+    fn spmm_vk_t(
+        &self,
+        k_tile: &DenseMatrix,
+        assign_r: &[u32],
+        k: usize,
+        inv_sizes: &[f32],
+    ) -> DenseMatrix {
+        let rest = vec![Self::assign_i32(assign_r), HostTensor::F32(inv_sizes.to_vec(), vec![k])];
+        if let Some(out) = self.try_exec_spmm_cached("spmm_vk_t", k_tile, rest) {
+            return Self::mat(&out[0]);
+        }
+        self.native.spmm_vk_t(k_tile, assign_r, k, inv_sizes)
+    }
+
+    fn mask_z(&self, e_local: &DenseMatrix, assign: &[u32]) -> Vec<f32> {
+        self.native.mask_z(e_local, assign)
+    }
+
+    fn spmv_vz(&self, assign: &[u32], z: &[f32], k: usize, inv_sizes: &[f32]) -> Vec<f32> {
+        self.native.spmv_vz(assign, z, k, inv_sizes)
+    }
+
+    fn update_pre(&self, e_local: &DenseMatrix, assign: &[u32], k: usize, inv_sizes: &[f32]) -> Vec<f32> {
+        let inputs = vec![
+            HostTensor::F32(e_local.data().to_vec(), vec![e_local.rows(), e_local.cols()]),
+            Self::assign_i32(assign),
+            HostTensor::F32(inv_sizes.to_vec(), vec![k]),
+        ];
+        if let Some(out) = self.try_exec("update_pre", inputs) {
+            return out[0].as_f32().unwrap().to_vec();
+        }
+        self.native.update_pre(e_local, assign, k, inv_sizes)
+    }
+
+    fn distances_argmin(&self, e_local: &DenseMatrix, c: &[f32]) -> (Vec<u32>, Vec<f32>) {
+        let inputs = vec![
+            HostTensor::F32(e_local.data().to_vec(), vec![e_local.rows(), e_local.cols()]),
+            HostTensor::F32(c.to_vec(), vec![c.len()]),
+        ];
+        if let Some(out) = self.try_exec("update_post", inputs) {
+            let am = out[0].as_i32().unwrap().iter().map(|&x| x as u32).collect();
+            let mv = out[1].as_f32().unwrap().to_vec();
+            return (am, mv);
+        }
+        self.native.distances_argmin(e_local, c)
+    }
+
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn backend() -> Option<PjrtBackend> {
+        if !crate::runtime::artifacts_available() {
+            eprintln!("skipping: no artifacts");
+            return None;
+        }
+        Some(PjrtBackend::from_default_artifacts(1).unwrap())
+    }
+
+    #[test]
+    fn pjrt_matches_native_on_manifest_shapes() {
+        let Some(be) = backend() else { return };
+        let nat = NativeBackend::new();
+        let manifest = Manifest::load(&crate::runtime::artifacts_dir()).unwrap();
+        let mut rng = Rng::new(77);
+        // For every spmm_vk entry, compare pjrt vs native.
+        for entry in manifest.ops.iter().filter(|e| e.op == "spmm_vk") {
+            let (m, nr) = (entry.inputs[0].shape[0], entry.inputs[0].shape[1]);
+            let k = entry.inputs[2].shape[0];
+            if m * nr > 1 << 22 {
+                continue; // keep the test fast
+            }
+            let k_tile = DenseMatrix::random(m, nr, &mut rng);
+            let assign: Vec<u32> = (0..nr).map(|_| rng.below(k) as u32).collect();
+            let inv: Vec<f32> = (0..k).map(|a| 1.0 / (a + 1) as f32).collect();
+            let got = be.spmm_vk(&k_tile, &assign, k, &inv);
+            let want = nat.spmm_vk(&k_tile, &assign, k, &inv);
+            assert!(got.max_abs_diff(&want) < 1e-3, "{m}x{nr} k={k}");
+        }
+        let (hits, _) = be.counters();
+        assert!(hits > 0, "expected artifact executions");
+    }
+
+    #[test]
+    fn fallback_counts_unmatched_shapes() {
+        let Some(be) = backend() else { return };
+        let mut rng = Rng::new(78);
+        // Weird shape not in any manifest.
+        let k_tile = DenseMatrix::random(13, 29, &mut rng);
+        let assign: Vec<u32> = (0..29).map(|_| rng.below(3) as u32).collect();
+        let out = be.spmm_vk(&k_tile, &assign, 3, &[0.5, 0.25, 1.0]);
+        assert_eq!(out.rows(), 13);
+        assert!(be.fallbacks() > 0);
+    }
+
+    #[test]
+    fn update_post_matches_native() {
+        let Some(be) = backend() else { return };
+        let nat = NativeBackend::new();
+        let manifest = Manifest::load(&crate::runtime::artifacts_dir()).unwrap();
+        let mut rng = Rng::new(79);
+        let entry = manifest
+            .ops
+            .iter()
+            .filter(|e| e.op == "update_post")
+            .min_by_key(|e| e.inputs[0].shape[0])
+            .unwrap();
+        let (m, k) = (entry.inputs[0].shape[0], entry.inputs[0].shape[1]);
+        let e = DenseMatrix::random(m, k, &mut rng);
+        let c: Vec<f32> = (0..k).map(|_| rng.next_f32()).collect();
+        let (am1, mv1) = be.distances_argmin(&e, &c);
+        let (am2, mv2) = nat.distances_argmin(&e, &c);
+        assert_eq!(am1, am2);
+        for (a, b) in mv1.iter().zip(&mv2) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Parse `artifacts/manifest.json` (emitted by `python -m compile.aot`).
+
+use crate::util::json::{self, Json};
+use std::path::{Path, PathBuf};
+
+/// Tensor dtype in the manifest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => Err(format!("unknown dtype {other:?}")),
+        }
+    }
+}
+
+/// Shape + dtype of one operand.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+/// One compiled op in the manifest.
+#[derive(Debug, Clone)]
+pub struct OpEntry {
+    pub op: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl OpEntry {
+    /// Dispatch key: op name + input shapes/dtypes.
+    pub fn key(&self) -> (String, Vec<TensorSpec>) {
+        (self.op.clone(), self.inputs.clone())
+    }
+}
+
+/// The whole artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub ops: Vec<OpEntry>,
+    pub dir: PathBuf,
+}
+
+fn parse_specs(v: &Json) -> Result<Vec<TensorSpec>, String> {
+    let arr = v.as_arr().ok_or("specs not an array")?;
+    arr.iter()
+        .map(|s| {
+            let shape = s
+                .get("shape")
+                .and_then(|x| x.as_arr())
+                .ok_or("missing shape")?
+                .iter()
+                .map(|d| d.as_usize().ok_or("bad dim".to_string()))
+                .collect::<Result<Vec<_>, _>>()?;
+            let dtype = Dtype::parse(s.get("dtype").and_then(|x| x.as_str()).ok_or("missing dtype")?)?;
+            Ok(TensorSpec { shape, dtype })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (separated for tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest, String> {
+        let root = json::parse(text)?;
+        let version = root.get("version").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        if version != 1.0 {
+            return Err(format!("unsupported manifest version {version}"));
+        }
+        let ops = root
+            .get("ops")
+            .and_then(|v| v.as_arr())
+            .ok_or("missing ops")?
+            .iter()
+            .map(|o| {
+                Ok(OpEntry {
+                    op: o.get("op").and_then(|x| x.as_str()).ok_or("missing op")?.to_string(),
+                    file: dir.join(o.get("file").and_then(|x| x.as_str()).ok_or("missing file")?),
+                    inputs: parse_specs(o.get("inputs").ok_or("missing inputs")?)?,
+                    outputs: parse_specs(o.get("outputs").ok_or("missing outputs")?)?,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(Manifest { ops, dir: dir.to_path_buf() })
+    }
+
+    /// Find the entry matching an op name + input specs.
+    pub fn find(&self, op: &str, inputs: &[TensorSpec]) -> Option<&OpEntry> {
+        self.ops.iter().find(|e| e.op == op && e.inputs == inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "ops": [
+        {"op": "spmm_vk",
+         "file": "spmm_vk__64x128f32_128i32_4f32.hlo.txt",
+         "inputs": [
+           {"shape": [64, 128], "dtype": "f32"},
+           {"shape": [128], "dtype": "i32"},
+           {"shape": [4], "dtype": "f32"}],
+         "outputs": [{"shape": [64, 4], "dtype": "f32"}],
+         "params": {}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.ops.len(), 1);
+        let e = &m.ops[0];
+        assert_eq!(e.op, "spmm_vk");
+        assert_eq!(e.inputs[0].shape, vec![64, 128]);
+        assert_eq!(e.inputs[1].dtype, Dtype::I32);
+        assert_eq!(e.outputs[0].shape, vec![64, 4]);
+        assert!(e.file.starts_with("/tmp/a"));
+    }
+
+    #[test]
+    fn find_matches_exact_specs() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        let specs = vec![
+            TensorSpec { shape: vec![64, 128], dtype: Dtype::F32 },
+            TensorSpec { shape: vec![128], dtype: Dtype::I32 },
+            TensorSpec { shape: vec![4], dtype: Dtype::F32 },
+        ];
+        assert!(m.find("spmm_vk", &specs).is_some());
+        let mut wrong = specs.clone();
+        wrong[0].shape = vec![64, 64];
+        assert!(m.find("spmm_vk", &wrong).is_none());
+        assert!(m.find("other_op", &specs).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_versions_and_shapes() {
+        assert!(Manifest::parse(r#"{"version": 2, "ops": []}"#, Path::new("/")).is_err());
+        assert!(Manifest::parse(r#"{"version": 1}"#, Path::new("/")).is_err());
+        assert!(Manifest::parse("not json", Path::new("/")).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let dir = crate::runtime::artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.ops.is_empty());
+            for e in &m.ops {
+                assert!(e.file.exists(), "missing artifact {}", e.file.display());
+            }
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! PJRT runtime: load the AOT artifacts and serve them to the
+//! coordinator's hot path.
+//!
+//! `make artifacts` (Python, build-time only) lowers every L2 op to HLO
+//! text + `manifest.json`. At startup the device service parses the
+//! manifest, compiles each module **once** on a PJRT CPU client
+//! (`HloModuleProto::from_text_file` → `client.compile`), and
+//! [`PjrtBackend`] dispatches compute by `(op, input shapes)`.
+//!
+//! Threading: PJRT handles are not `Send`/`Sync`, but coordinator ranks
+//! are OS threads — so executables live on dedicated **device-service
+//! threads** (one PJRT client each, mirroring the paper's 4-GPUs-per-
+//! node), and ranks submit exec requests over channels. Shapes missing
+//! from the manifest fall back to the native backend and are counted
+//! ([`PjrtBackend::fallbacks`]), so benches can report the PJRT hit
+//! rate honestly.
+
+pub mod manifest;
+pub mod service;
+pub mod backend;
+
+pub use backend::PjrtBackend;
+pub use manifest::{Manifest, OpEntry, TensorSpec};
+pub use service::{DeviceService, HostTensor};
+
+/// Default artifacts directory (override with `VIVALDI_ARTIFACTS`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("VIVALDI_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+/// True when AOT artifacts are present.
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}

@@ -1,0 +1,426 @@
+//! Device-service threads: own the PJRT client + compiled executables,
+//! serve execution requests from coordinator ranks over channels.
+//!
+//! PJRT handles are thread-affine (`!Send`), so each service thread
+//! compiles its own copy of every artifact on its own
+//! `PjRtClient::cpu()` — the analogue of one GPU with its own context.
+//! Ranks round-robin across services.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+use super::manifest::{Dtype, Manifest, TensorSpec};
+
+/// A host-side tensor crossing the service channel.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn spec(&self) -> TensorSpec {
+        match self {
+            HostTensor::F32(_, s) => TensorSpec { shape: s.clone(), dtype: Dtype::F32 },
+            HostTensor::I32(_, s) => TensorSpec { shape: s.clone(), dtype: Dtype::I32 },
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            HostTensor::F32(v, _) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            HostTensor::I32(v, _) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// An execution argument: inline data, or a reference to a buffer the
+/// service has cached device-side (the K tile is uploaded once per fit
+/// and referenced by fingerprint for the remaining ~100 iterations —
+/// the §Perf "device-resident operands" optimization).
+#[derive(Debug, Clone)]
+pub enum Arg {
+    Inline(HostTensor),
+    Cached { fp: u64, spec: TensorSpec },
+}
+
+impl Arg {
+    fn spec(&self) -> TensorSpec {
+        match self {
+            Arg::Inline(t) => t.spec(),
+            Arg::Cached { spec, .. } => spec.clone(),
+        }
+    }
+}
+
+enum Request {
+    Exec {
+        op: String,
+        args: Vec<Arg>,
+        reply: mpsc::SyncSender<Result<Vec<HostTensor>, String>>,
+    },
+    Has {
+        fp: u64,
+        reply: mpsc::SyncSender<bool>,
+    },
+    Put {
+        fp: u64,
+        tensor: HostTensor,
+        reply: mpsc::SyncSender<Result<(), String>>,
+    },
+}
+
+/// Handle to a pool of device-service threads.
+///
+/// Dropping the handle shuts the threads down **and joins them**, so
+/// PJRT client destruction never races process teardown.
+pub struct DeviceService {
+    senders: Vec<mpsc::Sender<Request>>,
+    next: AtomicUsize,
+    /// (op, file) pairs served (same on every service thread).
+    ops: Vec<(String, Vec<TensorSpec>)>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for DeviceService {
+    fn drop(&mut self) {
+        self.senders.clear(); // closes channels; service loops exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl DeviceService {
+    /// Spawn `n_devices` service threads, each compiling every artifact
+    /// in the manifest. Returns once all threads finished compiling (or
+    /// the first error).
+    pub fn start(manifest: &Manifest, n_devices: usize) -> Result<DeviceService, String> {
+        let n = n_devices.max(1);
+        let mut senders = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        for dev in 0..n {
+            let (tx, rx) = mpsc::channel::<Request>();
+            senders.push(tx);
+            let mani = manifest.clone();
+            let ready = ready_tx.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("pjrt-dev-{dev}"))
+                .spawn(move || service_main(mani, rx, ready))
+                .map_err(|e| e.to_string())?;
+            handles.push(h);
+        }
+        drop(ready_tx);
+        for _ in 0..n {
+            ready_rx.recv().map_err(|e| e.to_string())??;
+        }
+        Ok(DeviceService {
+            senders,
+            next: AtomicUsize::new(0),
+            ops: manifest.ops.iter().map(|e| (e.op.clone(), e.inputs.clone())).collect(),
+            handles,
+        })
+    }
+
+    /// Whether (op, input specs) has a compiled executable.
+    pub fn has(&self, op: &str, specs: &[TensorSpec]) -> bool {
+        self.ops.iter().any(|(o, s)| o == op && s == specs)
+    }
+
+    /// Execute an op; blocks until the device thread replies.
+    pub fn execute(&self, op: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>, String> {
+        let idx = self.next.fetch_add(1, Ordering::Relaxed) % self.senders.len();
+        self.execute_on(idx, op, inputs.into_iter().map(Arg::Inline).collect())
+    }
+
+    /// Execute with explicit args (inline and/or cached) on the device
+    /// owning `route_fp`'s cache entry.
+    pub fn execute_cached(
+        &self,
+        route_fp: u64,
+        op: &str,
+        args: Vec<Arg>,
+    ) -> Result<Vec<HostTensor>, String> {
+        self.execute_on(self.device_for(route_fp), op, args)
+    }
+
+    /// Which service thread caches fingerprint `fp`.
+    pub fn device_for(&self, fp: u64) -> usize {
+        (fp as usize) % self.senders.len()
+    }
+
+    /// Is `fp` uploaded on its home device?
+    pub fn has_cached(&self, fp: u64) -> bool {
+        let (tx, rx) = mpsc::sync_channel(1);
+        if self.senders[self.device_for(fp)].send(Request::Has { fp, reply: tx }).is_err() {
+            return false;
+        }
+        rx.recv().unwrap_or(false)
+    }
+
+    /// Upload a tensor to its home device cache.
+    pub fn put_cached(&self, fp: u64, tensor: HostTensor) -> Result<(), String> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.senders[self.device_for(fp)]
+            .send(Request::Put { fp, tensor, reply: tx })
+            .map_err(|_| "device service stopped".to_string())?;
+        rx.recv().map_err(|_| "device service dropped reply".to_string())?
+    }
+
+    fn execute_on(
+        &self,
+        idx: usize,
+        op: &str,
+        args: Vec<Arg>,
+    ) -> Result<Vec<HostTensor>, String> {
+        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+        self.senders[idx]
+            .send(Request::Exec { op: op.to_string(), args, reply: reply_tx })
+            .map_err(|_| "device service stopped".to_string())?;
+        reply_rx.recv().map_err(|_| "device service dropped reply".to_string())?
+    }
+}
+
+/// Content fingerprint for device-buffer caching: length/shape plus a
+/// strided sample of values. Collisions require equal shapes AND equal
+/// samples — adequate for the immutable K tiles this caches.
+pub fn fingerprint_f32(data: &[f32], shape: &[usize]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    mix(data.len() as u64);
+    for &s in shape {
+        mix(s as u64);
+    }
+    let step = (data.len() / 64).max(1);
+    for i in (0..data.len()).step_by(step) {
+        mix(data[i].to_bits() as u64);
+    }
+    if let Some(last) = data.last() {
+        mix(last.to_bits() as u64);
+    }
+    h
+}
+
+fn tensor_of(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostTensor, String> {
+    match spec.dtype {
+        Dtype::F32 => Ok(HostTensor::F32(
+            lit.to_vec::<f32>().map_err(|e| e.to_string())?,
+            spec.shape.clone(),
+        )),
+        Dtype::I32 => Ok(HostTensor::I32(
+            lit.to_vec::<i32>().map_err(|e| e.to_string())?,
+            spec.shape.clone(),
+        )),
+    }
+}
+
+/// xla_extension 0.5.1's CPU client is not safe to create/destroy
+/// concurrently from multiple threads in one process; all client
+/// lifecycle events serialize on this lock (execution is fine).
+static PJRT_LIFECYCLE: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn service_main(
+    manifest: Manifest,
+    rx: mpsc::Receiver<Request>,
+    ready: mpsc::Sender<Result<(), String>>,
+) {
+    // Compile everything once (client creation under the lifecycle
+    // lock).
+    let guard = PJRT_LIFECYCLE.lock().unwrap();
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            drop(guard);
+            let _ = ready.send(Err(format!("PjRtClient::cpu: {e}")));
+            return;
+        }
+    };
+    let mut exes: HashMap<(String, Vec<TensorSpec>), (xla::PjRtLoadedExecutable, Vec<TensorSpec>)> =
+        HashMap::new();
+    for entry in &manifest.ops {
+        let proto = match xla::HloModuleProto::from_text_file(entry.file.to_str().unwrap_or("")) {
+            Ok(p) => p,
+            Err(e) => {
+                let _ = ready.send(Err(format!("parse {}: {e}", entry.file.display())));
+                return;
+            }
+        };
+        let comp = xla::XlaComputation::from_proto(&proto);
+        match client.compile(&comp) {
+            Ok(exe) => {
+                exes.insert((entry.op.clone(), entry.inputs.clone()), (exe, entry.outputs.clone()));
+            }
+            Err(e) => {
+                let _ = ready.send(Err(format!("compile {}: {e}", entry.file.display())));
+                return;
+            }
+        }
+    }
+    drop(guard);
+    let _ = ready.send(Ok(()));
+
+    let mut bufcache: HashMap<u64, xla::PjRtBuffer> = HashMap::new();
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Has { fp, reply } => {
+                let _ = reply.send(bufcache.contains_key(&fp));
+            }
+            Request::Put { fp, tensor, reply } => {
+                let result = (|| -> Result<(), String> {
+                    let buf = match &tensor {
+                        HostTensor::F32(v, shape) => client
+                            .buffer_from_host_buffer(v, shape, None)
+                            .map_err(|e| e.to_string())?,
+                        HostTensor::I32(v, shape) => client
+                            .buffer_from_host_buffer(v, shape, None)
+                            .map_err(|e| e.to_string())?,
+                    };
+                    bufcache.insert(fp, buf);
+                    Ok(())
+                })();
+                let _ = reply.send(result);
+            }
+            Request::Exec { op, args, reply } => {
+                let specs: Vec<TensorSpec> = args.iter().map(|a| a.spec()).collect();
+                let result = (|| -> Result<Vec<HostTensor>, String> {
+                    let (exe, out_specs) = exes
+                        .get(&(op.clone(), specs.clone()))
+                        .ok_or_else(|| format!("no executable for {op} {specs:?}"))?;
+                    // Assemble device buffers: cached refs resolve from
+                    // the cache, inline args upload on the spot.
+                    let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+                    let mut order: Vec<usize> = Vec::new(); // index into owned or cache marker
+                    let mut cached_refs: Vec<u64> = Vec::new();
+                    for a in &args {
+                        match a {
+                            Arg::Inline(t) => {
+                                let buf = match t {
+                                    HostTensor::F32(v, shape) => client
+                                        .buffer_from_host_buffer(v, shape, None)
+                                        .map_err(|e| e.to_string())?,
+                                    HostTensor::I32(v, shape) => client
+                                        .buffer_from_host_buffer(v, shape, None)
+                                        .map_err(|e| e.to_string())?,
+                                };
+                                owned.push(buf);
+                                order.push(owned.len()); // >0 = owned[i-1]
+                                cached_refs.push(0);
+                            }
+                            Arg::Cached { fp, .. } => {
+                                if !bufcache.contains_key(fp) {
+                                    return Err(format!("no cached buffer {fp:#x}"));
+                                }
+                                order.push(0); // 0 = cached
+                                cached_refs.push(*fp);
+                            }
+                        }
+                    }
+                    let mut owned_iter = 0usize;
+                    let buf_args: Vec<&xla::PjRtBuffer> = order
+                        .iter()
+                        .zip(&cached_refs)
+                        .map(|(&o, fp)| {
+                            if o == 0 {
+                                &bufcache[fp]
+                            } else {
+                                let b = &owned[owned_iter];
+                                owned_iter += 1;
+                                b
+                            }
+                        })
+                        .collect();
+                    let out = exe.execute_b::<&xla::PjRtBuffer>(&buf_args).map_err(|e| e.to_string())?;
+                    let root = out[0][0].to_literal_sync().map_err(|e| e.to_string())?;
+                    // Lowered with return_tuple=True: unwrap the tuple.
+                    let parts = root.to_tuple().map_err(|e| e.to_string())?;
+                    if parts.len() != out_specs.len() {
+                        return Err(format!(
+                            "output arity mismatch: {} vs {}",
+                            parts.len(),
+                            out_specs.len()
+                        ));
+                    }
+                    parts.iter().zip(out_specs).map(|(l, s)| tensor_of(l, s)).collect()
+                })();
+                let _ = reply.send(result);
+            }
+        }
+    }
+    // Teardown under the lifecycle lock: buffers, executables, then the
+    // client — never concurrent with another thread's create/destroy.
+    let _guard = PJRT_LIFECYCLE.lock().unwrap();
+    drop(bufcache);
+    drop(exes);
+    drop(client);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// End-to-end artifact execution (skipped when artifacts absent).
+    #[test]
+    fn executes_real_artifact() {
+        let dir = crate::runtime::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let manifest = Manifest::load(&dir).unwrap();
+        // Pick the smallest update_post entry.
+        let entry = manifest
+            .ops
+            .iter()
+            .filter(|e| e.op == "update_post")
+            .min_by_key(|e| e.inputs[0].shape.iter().product::<usize>())
+            .expect("manifest has update_post");
+        let svc = DeviceService::start(&manifest, 1).unwrap();
+        let m = entry.inputs[0].shape[0];
+        let k = entry.inputs[0].shape[1];
+        // E with a clear winner per row; c = 0.
+        let mut e = vec![0.0f32; m * k];
+        for j in 0..m {
+            e[j * k + (j % k)] = 10.0; // argmin of -2E+c is j%k
+        }
+        let out = svc
+            .execute(
+                "update_post",
+                vec![
+                    HostTensor::F32(e, vec![m, k]),
+                    HostTensor::F32(vec![0.0; k], vec![k]),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        let am = out[0].as_i32().unwrap();
+        for j in 0..m {
+            assert_eq!(am[j] as usize, j % k, "row {j}");
+        }
+        let mv = out[1].as_f32().unwrap();
+        assert!((mv[0] + 20.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn unknown_op_errors() {
+        let dir = crate::runtime::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let manifest = Manifest::load(&dir).unwrap();
+        let svc = DeviceService::start(&manifest, 1).unwrap();
+        let err = svc.execute("nonexistent", vec![HostTensor::F32(vec![1.0], vec![1])]);
+        assert!(err.is_err());
+    }
+}

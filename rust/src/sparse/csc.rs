@@ -1,0 +1,189 @@
+//! General compressed-sparse-column matrix (f32).
+//!
+//! Used by tests as the explicit form of V (the paper stores local V
+//! partitions in CSC, §V) and to validate the structured kernels in
+//! [`super::ops`] against a general SpMM.
+
+use crate::dense::DenseMatrix;
+
+/// CSC sparse matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CscMatrix {
+    rows: usize,
+    cols: usize,
+    /// Column pointers, len = cols + 1.
+    colptr: Vec<usize>,
+    /// Row indices, len = nnz.
+    rowidx: Vec<u32>,
+    /// Values, len = nnz.
+    values: Vec<f32>,
+}
+
+impl CscMatrix {
+    pub fn new(rows: usize, cols: usize, colptr: Vec<usize>, rowidx: Vec<u32>, values: Vec<f32>) -> Self {
+        assert_eq!(colptr.len(), cols + 1);
+        assert_eq!(*colptr.last().unwrap(), rowidx.len());
+        assert_eq!(rowidx.len(), values.len());
+        for w in colptr.windows(2) {
+            assert!(w[0] <= w[1], "colptr not monotone");
+        }
+        assert!(rowidx.iter().all(|&r| (r as usize) < rows), "row index out of range");
+        CscMatrix { rows, cols, colptr, rowidx, values }
+    }
+
+    /// Build from (row, col, value) triplets (unsorted OK; duplicates
+    /// summed).
+    pub fn from_triplets(rows: usize, cols: usize, triplets: &[(usize, usize, f32)]) -> Self {
+        let mut per_col: Vec<Vec<(u32, f32)>> = vec![Vec::new(); cols];
+        for &(r, c, v) in triplets {
+            assert!(r < rows && c < cols);
+            per_col[c].push((r as u32, v));
+        }
+        let mut colptr = Vec::with_capacity(cols + 1);
+        let mut rowidx = Vec::new();
+        let mut values = Vec::new();
+        colptr.push(0);
+        for col in &mut per_col {
+            col.sort_by_key(|(r, _)| *r);
+            let mut i = 0;
+            while i < col.len() {
+                let r = col[i].0;
+                let mut v = 0.0;
+                while i < col.len() && col[i].0 == r {
+                    v += col[i].1;
+                    i += 1;
+                }
+                rowidx.push(r);
+                values.push(v);
+            }
+            colptr.push(rowidx.len());
+        }
+        CscMatrix { rows, cols, colptr, rowidx, values }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.rowidx.len()
+    }
+
+    pub fn colptr(&self) -> &[usize] {
+        &self.colptr
+    }
+
+    pub fn rowidx(&self) -> &[u32] {
+        &self.rowidx
+    }
+
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    /// Entries of column j as (row, value) pairs.
+    pub fn col(&self, j: usize) -> impl Iterator<Item = (u32, f32)> + '_ {
+        let lo = self.colptr[j];
+        let hi = self.colptr[j + 1];
+        self.rowidx[lo..hi].iter().copied().zip(self.values[lo..hi].iter().copied())
+    }
+
+    /// Dense conversion (tests).
+    pub fn to_dense(&self) -> DenseMatrix {
+        let mut out = DenseMatrix::zeros(self.rows, self.cols);
+        for j in 0..self.cols {
+            for (r, v) in self.col(j) {
+                out.set(r as usize, j, v);
+            }
+        }
+        out
+    }
+
+    /// General SpMM: self (m×n) · dense (n×q) -> dense (m×q).
+    pub fn spmm(&self, dense: &DenseMatrix) -> DenseMatrix {
+        assert_eq!(self.cols, dense.rows(), "spmm: dims");
+        let mut out = DenseMatrix::zeros(self.rows, dense.cols());
+        for j in 0..self.cols {
+            for (r, v) in self.col(j) {
+                let dst_start = r as usize * dense.cols();
+                let src = dense.row(j);
+                let dst = &mut out.data_mut()[dst_start..dst_start + src.len()];
+                for (d, s) in dst.iter_mut().zip(src) {
+                    *d += v * s;
+                }
+            }
+        }
+        out
+    }
+
+    /// SpMV: self (m×n) · x (n) -> y (m).
+    pub fn spmv(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, x.len());
+        let mut y = vec![0.0f32; self.rows];
+        for j in 0..self.cols {
+            for (r, v) in self.col(j) {
+                y[r as usize] += v * x[j];
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CscMatrix {
+        // [[1, 0, 2],
+        //  [0, 3, 0]]
+        CscMatrix::from_triplets(2, 3, &[(0, 0, 1.0), (1, 1, 3.0), (0, 2, 2.0)])
+    }
+
+    #[test]
+    fn construction() {
+        let m = sample();
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.to_dense().get(1, 1), 3.0);
+        assert_eq!(m.to_dense().get(0, 2), 2.0);
+        assert_eq!(m.to_dense().get(1, 2), 0.0);
+    }
+
+    #[test]
+    fn duplicates_summed() {
+        let m = CscMatrix::from_triplets(2, 2, &[(0, 0, 1.0), (0, 0, 2.0)]);
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.to_dense().get(0, 0), 3.0);
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        let m = sample();
+        let d = DenseMatrix::from_fn(3, 2, |i, j| (i + j) as f32);
+        let out = m.spmm(&d);
+        // row 0: 1*d[0,:] + 2*d[2,:] ; row 1: 3*d[1,:]
+        assert_eq!(out.get(0, 0), 1.0 * 0.0 + 2.0 * 2.0);
+        assert_eq!(out.get(0, 1), 1.0 * 1.0 + 2.0 * 3.0);
+        assert_eq!(out.get(1, 0), 3.0 * 1.0);
+        assert_eq!(out.get(1, 1), 3.0 * 2.0);
+    }
+
+    #[test]
+    fn spmv_basic() {
+        let m = sample();
+        let y = m.spmv(&[1.0, 2.0, 3.0]);
+        assert_eq!(y, vec![1.0 + 6.0, 6.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_row_index_rejected() {
+        let _ = CscMatrix::new(2, 1, vec![0, 1], vec![5], vec![1.0]);
+    }
+}

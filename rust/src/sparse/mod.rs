@@ -1,0 +1,19 @@
+//! Sparse substrate: the assignment matrix **V** and structured sparse
+//! kernels (the cuSPARSE stand-in).
+//!
+//! The paper's key structural observation is that V ∈ ℝ^{k×n} has
+//! **exactly one nonzero per column** (point j contributes 1/|L_cl(j)|
+//! to row cl(j)). A general CSC matrix ([`CscMatrix`]) is provided for
+//! completeness and testing, but the algorithms carry V in its minimal
+//! wire form — the per-point assignment vector plus global cluster
+//! sizes ([`VPartition`]) — exactly the paper's §V optimization of
+//! communicating only row indices and recomputing values from the
+//! allreduced cluster sizes.
+
+pub mod csc;
+pub mod vmatrix;
+pub mod ops;
+
+pub use csc::CscMatrix;
+pub use vmatrix::VPartition;
+pub use ops::{spmm_vk, spmv_vz};

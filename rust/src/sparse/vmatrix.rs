@@ -1,0 +1,133 @@
+//! The assignment matrix V in its minimal structured form.
+//!
+//! V(i,j) = 1/|L_i| if point j belongs to cluster i, else 0 — exactly
+//! one nonzero per column. A local partition over a contiguous block of
+//! points (columns of V) is therefore fully described by the per-point
+//! cluster assignment; values are recovered from the global cluster
+//! sizes (allreduced each iteration). This is the paper's wire format:
+//! "communication of V partitions involves only their local row
+//! indices" (§V).
+
+use super::csc::CscMatrix;
+
+/// Local partition of V covering points
+/// `[col_offset, col_offset + assign.len())`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VPartition {
+    /// Number of clusters (rows of V).
+    pub k: usize,
+    /// Global index of the first local point.
+    pub col_offset: usize,
+    /// Cluster assignment of each local point (the CSC row indices).
+    pub assign: Vec<u32>,
+}
+
+impl VPartition {
+    /// Round-robin initialization (the paper's §V strategy): global
+    /// point j starts in cluster j mod k.
+    pub fn round_robin(k: usize, col_offset: usize, n_local: usize) -> Self {
+        let assign = (0..n_local).map(|j| ((col_offset + j) % k) as u32).collect();
+        VPartition { k, col_offset, assign }
+    }
+
+    /// From an explicit assignment vector.
+    pub fn from_assign(k: usize, col_offset: usize, assign: Vec<u32>) -> Self {
+        let v = VPartition { k, col_offset, assign };
+        v.validate();
+        v
+    }
+
+    /// Panics if any assignment is out of range — the one-nonzero-per-
+    /// column invariant is structural (every point has exactly one
+    /// cluster by construction).
+    pub fn validate(&self) {
+        assert!(
+            self.assign.iter().all(|&a| (a as usize) < self.k),
+            "assignment out of range"
+        );
+    }
+
+    #[inline]
+    pub fn n_local(&self) -> usize {
+        self.assign.len()
+    }
+
+    /// Local contribution to the global cluster sizes.
+    pub fn local_sizes(&self) -> Vec<u64> {
+        let mut sizes = vec![0u64; self.k];
+        for &a in &self.assign {
+            sizes[a as usize] += 1;
+        }
+        sizes
+    }
+
+    /// Explicit CSC form given the global cluster sizes (tests and the
+    /// general-SpMM cross-check). Column j has the single entry
+    /// (assign[j], 1/|L_assign[j]|).
+    pub fn to_csc(&self, global_sizes: &[u64]) -> CscMatrix {
+        assert_eq!(global_sizes.len(), self.k);
+        let n = self.n_local();
+        let colptr: Vec<usize> = (0..=n).collect();
+        let rowidx = self.assign.clone();
+        let values: Vec<f32> = self
+            .assign
+            .iter()
+            .map(|&a| {
+                let s = global_sizes[a as usize];
+                assert!(s > 0, "cluster {a} is empty but has members assigned");
+                1.0 / s as f32
+            })
+            .collect();
+        CscMatrix::new(self.k, n, colptr, rowidx, values)
+    }
+
+    /// Inverse cluster sizes as f32 (the V values per row), with empty
+    /// clusters mapped to 0 so they contribute nothing.
+    pub fn inv_sizes(global_sizes: &[u64]) -> Vec<f32> {
+        global_sizes.iter().map(|&s| if s == 0 { 0.0 } else { 1.0 / s as f32 }).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_uses_global_index() {
+        let v = VPartition::round_robin(3, 4, 5);
+        // global points 4..9 -> clusters 1,2,0,1,2
+        assert_eq!(v.assign, vec![1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn local_sizes_count() {
+        let v = VPartition::from_assign(3, 0, vec![0, 1, 1, 2, 1]);
+        assert_eq!(v.local_sizes(), vec![1, 3, 1]);
+    }
+
+    #[test]
+    fn csc_has_one_nnz_per_column() {
+        let v = VPartition::round_robin(4, 0, 10);
+        let sizes = vec![3u64, 3, 2, 2];
+        let csc = v.to_csc(&sizes);
+        assert_eq!(csc.nnz(), 10);
+        for j in 0..10 {
+            assert_eq!(csc.col(j).count(), 1);
+            let (r, val) = csc.col(j).next().unwrap();
+            assert_eq!(r, v.assign[j]);
+            assert!((val - 1.0 / sizes[r as usize] as f32).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn inv_sizes_handles_empty() {
+        let inv = VPartition::inv_sizes(&[2, 0, 4]);
+        assert_eq!(inv, vec![0.5, 0.0, 0.25]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_assignment_rejected() {
+        let _ = VPartition::from_assign(2, 0, vec![0, 2]);
+    }
+}

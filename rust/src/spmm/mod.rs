@@ -1,0 +1,31 @@
+//! Distributed SpMM algorithms for Eᵀ = V·K.
+//!
+//! V has one nonzero per column, so its wire form is the per-point
+//! assignment vector (u32 indices only — paper §V); the dense operand K
+//! never moves (all three variants are B-stationary, the paper's
+//! communication-avoiding choice for the huge K).
+//!
+//! * [`onedim`] — Allgather the whole assignment vector, local SpMM
+//!   against the 1D block row of K: α·O(P) + β·O(n) — Eq. (15).
+//! * [`twodim`] — V tiles allgathered along grid rows, partial Eᵀ
+//!   reduce-scattered along grid columns by **cluster blocks**, leaving
+//!   Eᵀ 2D-partitioned: α·O(√P) + β·O(n(k+1)/√P) — Eq. (18) — but
+//!   cluster updates then need the MINLOC allreduce (Eq. 19).
+//! * [`onefived`] — the paper's main contribution: V stays 1D, K stays
+//!   2D; gather-to-diagonal + row broadcast replicates the needed V
+//!   slices, and the reduce-scatter is split along **columns** so Eᵀ
+//!   lands 1D-columnwise on contiguous ranks (column-major grid) —
+//!   cluster updates need **no** communication:
+//!   α·O(√P) + β·O(n(k+1)/√P) — Eq. (25).
+//!
+//! Layout reminder (see [`crate::sparse::ops`]): local E is stored as
+//! (points × k) row-major = Eᵀ column-major, so the 1.5D column split
+//! is a contiguous memory split.
+
+pub mod onedim;
+pub mod twodim;
+pub mod onefived;
+
+pub use onedim::spmm_1d;
+pub use onefived::spmm_15d;
+pub use twodim::spmm_2d;

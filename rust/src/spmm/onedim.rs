@@ -1,0 +1,96 @@
+//! 1D B-stationary SpMM (Algorithm 1, lines 4–5).
+//!
+//! V is replicated by a single Allgather of the assignment vectors
+//! (u32 row indices only — the paper's §V wire format); each rank then
+//! multiplies the full V against its block row of K. Perfect load
+//! balance (every rank's local SpMM touches exactly n·m_p entries) and
+//! no movement of K, but the O(n) allgather volume does not shrink
+//! with P — Eq. (15).
+
+use crate::backend::ComputeBackend;
+use crate::comm::{Comm, Group};
+use crate::dense::DenseMatrix;
+
+/// One 1D SpMM: returns E_local (m_p × k) for this rank's points.
+///
+/// `k_block_row`: K[1D block p, :] (m_p × n). `local_assign`: this
+/// rank's slice of the assignment vector. `inv_sizes`: 1/|L_a| (from
+/// the global cluster sizes).
+pub fn spmm_1d(
+    comm: &Comm,
+    world: &Group,
+    k_block_row: &DenseMatrix,
+    local_assign: &[u32],
+    k: usize,
+    inv_sizes: &[f32],
+    backend: &dyn ComputeBackend,
+) -> DenseMatrix {
+    comm.set_phase("spmm");
+    // Allgather V: row indices only (u32), n words total.
+    let all_assign = comm.allgather_concat(world, local_assign.to_vec());
+    debug_assert_eq!(all_assign.len(), k_block_row.cols());
+    backend.spmm_vk(k_block_row, &all_assign, k, inv_sizes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::comm::World;
+    use crate::sparse::VPartition;
+    use crate::util::{part, rng::Rng};
+
+    /// Single-rank oracle: E = (V·K)ᵀ as points×k.
+    fn oracle_e(k_full: &DenseMatrix, assign: &[u32], k: usize) -> DenseMatrix {
+        let sizes = {
+            let mut s = vec![0u64; k];
+            for &a in assign {
+                s[a as usize] += 1;
+            }
+            s
+        };
+        let inv = VPartition::inv_sizes(&sizes);
+        crate::sparse::ops::spmm_vk(k_full, assign, k, &inv)
+    }
+
+    #[test]
+    fn matches_oracle() {
+        let mut rng = Rng::new(51);
+        let n = 40;
+        let k = 4;
+        // Symmetric K like the real pipeline produces.
+        let pts = DenseMatrix::random(n, 6, &mut rng);
+        let k_full = crate::dense::ops::matmul_nt(&pts, &pts);
+        let assign: Vec<u32> = (0..n).map(|_| rng.below(k) as u32).collect();
+        let expect = oracle_e(&k_full, &assign, k);
+        let sizes = {
+            let mut s = vec![0u64; k];
+            for &a in &assign {
+                s[a as usize] += 1;
+            }
+            s
+        };
+        let inv = VPartition::inv_sizes(&sizes);
+
+        for p in [1usize, 2, 4, 5] {
+            let kref = &k_full;
+            let aref = &assign;
+            let iref = &inv;
+            let (blocks, stats) = World::run(p, |comm| {
+                let world = Group::world(p);
+                let (lo, hi) = part::bounds(n, p, comm.rank());
+                let be = NativeBackend::new();
+                spmm_1d(comm, &world, &kref.row_block(lo, hi), &aref[lo..hi], k, iref, &be)
+            });
+            let e_full = DenseMatrix::vstack(&blocks);
+            assert!(e_full.max_abs_diff(&expect) < 1e-4, "p={p}");
+            // Volume: the allgather moves ≈ (P-1)·n u32 words in total
+            // (ring), i.e. it does NOT shrink as P grows.
+            if p > 1 {
+                let total: u64 = stats.iter().map(|s| s.get("spmm").bytes).sum();
+                let approx = ((p - 1) * n * 4) as u64;
+                assert!(total >= approx / 2 && total <= approx * 2, "p={p} total={total}");
+            }
+        }
+    }
+}

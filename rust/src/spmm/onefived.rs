@@ -1,0 +1,343 @@
+//! The paper's 1.5D SpMM (Algorithm 2, lines 3–7 / Figure 1).
+//!
+//! V stays 1D-partitioned (global rank p = j·√P + l owns sub-slice l of
+//! point block j — nested partition), K stays 2D from SUMMA. Per
+//! iteration:
+//!
+//! 1. The V partitions covering K's row block i live on process
+//!    **column** i (column-major grid); they are gathered onto the
+//!    diagonal P(i,i) (`MPI_Gather`) and broadcast along process
+//!    **row** i (`MPI_Bcast`) — together equivalent to the Allgather in
+//!    Algorithm 2 (paper §V.C).
+//! 2. Local structured SpMM produces the partial Eᵀ_ij (k × n_j).
+//! 3. The partial is transposed (the paper's row-major→column-major
+//!    conversion) and reduce-scattered along process columns, split
+//!    **along columns of Eᵀ** — not rows as in prior 1.5D SpMM [47] —
+//!    so each rank receives exactly the E rows of its own 1D V
+//!    partition: Eᵀ lands 1D-columnwise on contiguous global ranks and
+//!    cluster updates need no further communication.
+//!
+//! Cost: α·O(√P) + β·O(n(k+1)/√P) — Eq. (25).
+
+use crate::backend::ComputeBackend;
+use crate::comm::{Comm, Grid2D};
+use crate::dense::DenseMatrix;
+use crate::util::part;
+
+/// One 1.5D SpMM step. Returns E_local (own points × k), own points =
+/// `part::nested(n, q, j, l)` for this rank at grid coords (l-th row,
+/// j-th column)... i.e. exactly the points of this rank's 1D V
+/// partition (global rank p = j·q + l).
+///
+/// `k_tile` = K[block i, block j]; `local_assign` = assignments of this
+/// rank's own 1D V partition.
+pub fn spmm_15d(
+    comm: &Comm,
+    grid: &Grid2D,
+    k_tile: &DenseMatrix,
+    local_assign: &[u32],
+    _n: usize,
+    k: usize,
+    inv_sizes: &[f32],
+    backend: &dyn ComputeBackend,
+) -> DenseMatrix {
+    comm.set_phase("spmm");
+    let q = grid.q();
+    let (i, j) = grid.coords(comm.rank());
+    let row_g = grid.row_group(i);
+    let col_g = grid.col_group(j);
+
+    // (1) Gather the V partitions of point block `j`'s... — careful: the
+    // partitions this rank *contributes* belong to its own column j
+    // (ranks j·q+l are process column j); the partitions this rank
+    // *needs* are those of row block i, held by process column i.
+    //
+    // Gather over my column group to the diagonal P(j,j):
+    let gathered = comm.gather(&col_g, j, local_assign.to_vec());
+    // Diagonal P(j,j) now holds block j's full assignment; broadcast it
+    // along my ROW group from P(i,i) (root index i in column order).
+    let my_bcast_payload = if i == j {
+        // I am a diagonal process: concatenate slices (already in row
+        // order = slice order).
+        Some(gathered.expect("diagonal gather root").concat())
+    } else {
+        None
+    };
+    let assign_block_i = comm.bcast(&row_g, i, my_bcast_payload);
+    debug_assert_eq!(assign_block_i.len(), k_tile.rows());
+
+    // (2) Local structured SpMM: partial Eᵀ_ij (k × n_j).
+    let et_partial = backend.spmm_vk_t(k_tile, &assign_block_i, k, inv_sizes);
+
+    // (3) Transpose to (n_j × k) — Eᵀ column-major — and reduce-scatter
+    // along the process column, split by point sub-slices of block j.
+    let e_partial = et_partial.transpose();
+    let n_j = e_partial.rows();
+    // Equal blocks for the reduce-scatter: pad sub-slices to the max
+    // sub-slice height (remainder handling; no-op when q | n_j).
+    let max_rows = (0..q).map(|l| part::len(n_j, q, l)).max().unwrap();
+    let padded_len = q * max_rows * k;
+    let mut buf = vec![0.0f32; padded_len];
+    for l in 0..q {
+        let (lo, hi) = part::bounds(n_j, q, l);
+        let src = &e_partial.data()[lo * k..hi * k];
+        buf[l * max_rows * k..l * max_rows * k + src.len()].copy_from_slice(src);
+    }
+    let mine = comm.reduce_scatter_block(&col_g, buf, |acc, other| {
+        for (a, b) in acc.iter_mut().zip(other) {
+            *a += b;
+        }
+    });
+    // This rank is row l = i of column j; its slice length:
+    let my_rows = part::len(n_j, q, i);
+    DenseMatrix::from_vec(my_rows, k, mine[..my_rows * k].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::comm::World;
+    use crate::sparse::VPartition;
+    use crate::util::rng::Rng;
+
+    /// Distributed 1.5D SpMM vs the single-rank structured oracle.
+    fn check(n: usize, k: usize, p: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let pts = DenseMatrix::random(n, 6, &mut rng);
+        let k_full = crate::dense::ops::matmul_nt(&pts, &pts);
+        let assign: Vec<u32> = (0..n).map(|_| rng.below(k) as u32).collect();
+        let mut sizes = vec![0u64; k];
+        for &a in &assign {
+            sizes[a as usize] += 1;
+        }
+        let inv = VPartition::inv_sizes(&sizes);
+        let expect = crate::sparse::ops::spmm_vk(&k_full, &assign, k, &inv);
+
+        let grid = Grid2D::new(p).unwrap();
+        let q = grid.q();
+        let gref = &grid;
+        let kref = &k_full;
+        let aref = &assign;
+        let iref = &inv;
+        let (blocks, _) = World::run(p, |comm| {
+            let (i, j) = gref.coords(comm.rank());
+            let (rlo, rhi) = part::bounds(n, q, i);
+            let (clo, chi) = part::bounds(n, q, j);
+            let tile = kref.block(rlo, rhi, clo, chi);
+            // Own 1D V partition: rank p = j·q + i owns nested(n,q,j,i).
+            let (vlo, vhi) = part::nested(n, q, j, i);
+            let be = NativeBackend::new();
+            spmm_15d(comm, gref, &tile, &aref[vlo..vhi], n, k, iref, &be)
+        });
+        // Global ranks in order own contiguous nested slices.
+        let e_full = DenseMatrix::vstack(&blocks);
+        assert!(
+            e_full.max_abs_diff(&expect) < 1e-3,
+            "n={n} k={k} p={p}: diff {}",
+            e_full.max_abs_diff(&expect)
+        );
+    }
+
+    #[test]
+    fn matches_oracle_p4() {
+        check(24, 3, 4, 61);
+        check(37, 4, 4, 62); // remainders exercise the padding path
+    }
+
+    #[test]
+    fn matches_oracle_p9() {
+        check(45, 5, 9, 63);
+        check(50, 2, 9, 64);
+    }
+
+    #[test]
+    fn matches_oracle_p16() {
+        check(64, 4, 16, 65);
+        check(70, 6, 16, 66);
+    }
+
+    #[test]
+    fn single_rank_degenerate() {
+        check(10, 2, 1, 67);
+    }
+
+    #[test]
+    fn comm_volume_scales_down_with_p() {
+        // Per-rank Eᵀ-phase volume should shrink as P grows (the 1.5D
+        // selling point vs 1D's flat O(n)).
+        let n = 96;
+        let k = 4;
+        let mut per_rank = Vec::new();
+        for p in [4usize, 16] {
+            let mut rng = Rng::new(68);
+            let pts = DenseMatrix::random(n, 6, &mut rng);
+            let k_full = crate::dense::ops::matmul_nt(&pts, &pts);
+            let assign: Vec<u32> = (0..n).map(|_| rng.below(k) as u32).collect();
+            let mut sizes = vec![0u64; k];
+            for &a in &assign {
+                sizes[a as usize] += 1;
+            }
+            let inv = VPartition::inv_sizes(&sizes);
+            let grid = Grid2D::new(p).unwrap();
+            let q = grid.q();
+            let gref = &grid;
+            let kref = &k_full;
+            let aref = &assign;
+            let iref = &inv;
+            let (_, stats) = World::run(p, |comm| {
+                let (i, j) = gref.coords(comm.rank());
+                let (rlo, rhi) = part::bounds(n, q, i);
+                let (clo, chi) = part::bounds(n, q, j);
+                let tile = kref.block(rlo, rhi, clo, chi);
+                let (vlo, vhi) = part::nested(n, q, j, i);
+                let be = NativeBackend::new();
+                spmm_15d(comm, gref, &tile, &aref[vlo..vhi], n, k, iref, &be)
+            });
+            let max_rank: u64 = stats.iter().map(|s| s.get("spmm").bytes).max().unwrap();
+            per_rank.push(max_rank);
+        }
+        assert!(
+            per_rank[1] < per_rank[0],
+            "per-rank volume should drop: {per_rank:?}"
+        );
+    }
+}
+
+/// ABLATION: the prior-work 1.5D SpMM [47] that reduce-scatters along
+/// **rows of Eᵀ** (Eq. 21) instead of columns (Eq. 22).
+///
+/// Identical until the reduce-scatter; the row split leaves Eᵀ
+/// 2D-partitioned (cluster rows × point blocks), so the cluster update
+/// must then pay extra communication — here materialized by an
+/// allgather along the process column to rebuild each rank's own point
+/// slice of E (counted under the "update" phase). This is the design
+/// alternative the paper's §IV.C argues against; the ablation bench
+/// (`benches/ablation_15d_split.rs`) quantifies the difference.
+///
+/// Returns E_local (own points × k), same contract as [`spmm_15d`].
+pub fn spmm_15d_rowsplit(
+    comm: &Comm,
+    grid: &Grid2D,
+    k_tile: &DenseMatrix,
+    local_assign: &[u32],
+    _n: usize,
+    k: usize,
+    inv_sizes: &[f32],
+    backend: &dyn ComputeBackend,
+) -> DenseMatrix {
+    comm.set_phase("spmm");
+    let q = grid.q();
+    let (i, j) = grid.coords(comm.rank());
+    let row_g = grid.row_group(i);
+    let col_g = grid.col_group(j);
+
+    // (1) Same V replication as the column-split variant.
+    let gathered = comm.gather(&col_g, j, local_assign.to_vec());
+    let my_bcast_payload =
+        if i == j { Some(gathered.expect("diagonal gather root").concat()) } else { None };
+    let assign_block_i = comm.bcast(&row_g, i, my_bcast_payload);
+    debug_assert_eq!(assign_block_i.len(), k_tile.rows());
+
+    // (2) Partial Eᵀ_ij (k × n_j), kept row-major (no transpose — the
+    // row split is contiguous in this layout).
+    let et_partial = backend.spmm_vk_t(k_tile, &assign_block_i, k, inv_sizes);
+    let n_j = et_partial.cols();
+
+    // (3) Reduce-scatter along the process column split by CLUSTER
+    // rows (Eq. 21): rank (l, j) receives Eᵀ[cluster block l, block j].
+    let max_rows = (0..q).map(|l| part::len(k, q, l)).max().unwrap();
+    let mut buf = vec![0.0f32; q * max_rows * n_j];
+    for l in 0..q {
+        let (lo, hi) = part::bounds(k, q, l);
+        let src = &et_partial.data()[lo * n_j..hi * n_j];
+        buf[l * max_rows * n_j..l * max_rows * n_j + src.len()].copy_from_slice(src);
+    }
+    let mine = comm.reduce_scatter_block(&col_g, buf, |acc, other| {
+        for (a, b) in acc.iter_mut().zip(other) {
+            *a += b;
+        }
+    });
+    let (clo, chi) = part::bounds(k, q, i);
+    let my_cluster_rows = chi - clo;
+
+    // (4) THE PRICE OF THE ROW SPLIT: Eᵀ is now 2D-partitioned, so the
+    // communication-free update is lost. Rebuild the 1D layout with an
+    // allgather along the process column (cluster blocks re-united),
+    // counted under "update" — the extra n·k/√P words per rank that
+    // the paper's column split avoids.
+    comm.set_phase("update");
+    let full_cols = comm.allgather_concat(&col_g, mine[..my_cluster_rows * n_j].to_vec());
+    // Reassemble Eᵀ (k × n_j) from per-cluster-block pieces.
+    let mut et = DenseMatrix::zeros(k, n_j);
+    let mut off = 0usize;
+    for l in 0..q {
+        let (lo, hi) = part::bounds(k, q, l);
+        let len = (hi - lo) * n_j;
+        et.data_mut()[lo * n_j..hi * n_j].copy_from_slice(&full_cols[off..off + len]);
+        off += len;
+    }
+    comm.set_phase("spmm");
+    // Own slice: rows nested(n_j local coords) of the transposed view.
+    let (slo, shi) = part::bounds(n_j, q, i);
+    let e_full = et.transpose(); // n_j × k
+    e_full.row_block(slo, shi)
+}
+
+#[cfg(test)]
+mod ablation_tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::comm::World;
+    use crate::sparse::VPartition;
+    use crate::util::rng::Rng;
+
+    /// Both splits compute the same Eᵀ; the row split just pays more
+    /// update-phase communication.
+    #[test]
+    fn rowsplit_matches_columnsplit_with_extra_comm() {
+        let n = 48;
+        let k = 4;
+        let p = 4;
+        let mut rng = Rng::new(81);
+        let pts = DenseMatrix::random(n, 5, &mut rng);
+        let k_full = crate::dense::ops::matmul_nt(&pts, &pts);
+        let assign: Vec<u32> = (0..n).map(|_| rng.below(k) as u32).collect();
+        let mut sizes = vec![0u64; k];
+        for &a in &assign {
+            sizes[a as usize] += 1;
+        }
+        let inv = VPartition::inv_sizes(&sizes);
+        let grid = Grid2D::new(p).unwrap();
+        let q = grid.q();
+        let run = |rowsplit: bool| {
+            let gref = &grid;
+            let kref = &k_full;
+            let aref = &assign;
+            let iref = &inv;
+            World::run(p, move |comm| {
+                let (i, j) = gref.coords(comm.rank());
+                let (rlo, rhi) = part::bounds(n, q, i);
+                let (clo, chi) = part::bounds(n, q, j);
+                let tile = kref.block(rlo, rhi, clo, chi);
+                let (vlo, vhi) = part::nested(n, q, j, i);
+                let be = NativeBackend::new();
+                if rowsplit {
+                    spmm_15d_rowsplit(comm, gref, &tile, &aref[vlo..vhi], n, k, iref, &be)
+                } else {
+                    spmm_15d(comm, gref, &tile, &aref[vlo..vhi], n, k, iref, &be)
+                }
+            })
+        };
+        let (col_blocks, col_stats) = run(false);
+        let (row_blocks, row_stats) = run(true);
+        for (a, b) in col_blocks.iter().zip(&row_blocks) {
+            assert!(a.max_abs_diff(b) < 1e-4);
+        }
+        let upd = |stats: &[crate::comm::CommStats]| -> u64 {
+            stats.iter().map(|s| s.get("update").bytes).sum()
+        };
+        assert_eq!(upd(&col_stats), 0, "column split: update is comm-free");
+        assert!(upd(&row_stats) > 0, "row split must pay update comm");
+    }
+}

@@ -1,0 +1,169 @@
+//! 2D B-stationary SpMM (paper §IV.B / §V.B).
+//!
+//! V is 2D-partitioned to match the grid: rank (i,j) stores the
+//! assignment slice for sub-slice j of point block i, so process row i
+//! collectively holds block i. Per iteration:
+//!
+//! 1. `MPI_Allgatherv` along each process row replicates block i's
+//!    assignments on every rank of row i (the paper's single-Allgather
+//!    choice over √P broadcasts — uniform n/√P nonzeros per process
+//!    column, no load imbalance).
+//! 2. Local structured SpMM produces the partial Eᵀ_ij (k × n_j).
+//! 3. A reduce-scatter along process columns splits by **cluster
+//!    blocks** (contiguous rows of the k×m partial), leaving Eᵀ
+//!    2D-partitioned: rank (l,j) holds clusters block l × points block
+//!    j.
+//!
+//! The 2D partitioning of Eᵀ is exactly why this algorithm then pays
+//! the MINLOC allreduce during cluster updates (Eq. 19) — the cost the
+//! 1.5D layout avoids.
+//!
+//! Cost of Eᵀ: α·O(√P) + β·O(n(k+1)/√P) — Eq. (18).
+
+use crate::backend::ComputeBackend;
+use crate::comm::{Comm, Grid2D};
+use crate::dense::DenseMatrix;
+use crate::util::part;
+
+/// Output of one 2D SpMM: this rank's 2D tile of Eᵀ.
+#[derive(Debug, Clone)]
+pub struct Et2dTile {
+    /// Eᵀ[cluster block l, point block j] — (k_l × n_j) row-major.
+    pub tile: DenseMatrix,
+    /// Global cluster range [lo, hi) of the tile's rows.
+    pub cluster_range: (usize, usize),
+    /// Assignments of point block i (kept for the c computation).
+    pub assign_block_i: Vec<u32>,
+}
+
+/// One 2D SpMM step.
+///
+/// `k_tile` = K[block i, block j]; `local_assign` = assignments of this
+/// rank's V slice (sub-slice j of block i, `part::nested(n, q, i, j)`).
+/// Requires `q ≤ k` (each rank owns at least one cluster row).
+pub fn spmm_2d(
+    comm: &Comm,
+    grid: &Grid2D,
+    k_tile: &DenseMatrix,
+    local_assign: &[u32],
+    _n: usize,
+    k: usize,
+    inv_sizes: &[f32],
+    backend: &dyn ComputeBackend,
+) -> Et2dTile {
+    comm.set_phase("spmm");
+    let q = grid.q();
+    assert!(q <= k, "2D algorithm requires √P ≤ k");
+    let (i, j) = grid.coords(comm.rank());
+    let row_g = grid.row_group(i);
+    let col_g = grid.col_group(j);
+
+    // (1) Allgatherv along the process row: block i's assignments.
+    let assign_block_i = comm.allgather_concat(&row_g, local_assign.to_vec());
+    debug_assert_eq!(assign_block_i.len(), k_tile.rows());
+
+    // (2) Partial Eᵀ_ij (k × n_j).
+    let et_partial = backend.spmm_vk_t(k_tile, &assign_block_i, k, inv_sizes);
+    let n_j = et_partial.cols();
+
+    // (3) Reduce-scatter along the process column by cluster blocks
+    // (pad to equal heights for the collective, trim after).
+    let max_rows = (0..q).map(|l| part::len(k, q, l)).max().unwrap();
+    let mut buf = vec![0.0f32; q * max_rows * n_j];
+    for l in 0..q {
+        let (lo, hi) = part::bounds(k, q, l);
+        let src = &et_partial.data()[lo * n_j..hi * n_j];
+        buf[l * max_rows * n_j..l * max_rows * n_j + src.len()].copy_from_slice(src);
+    }
+    let mine = comm.reduce_scatter_block(&col_g, buf, |acc, other| {
+        for (a, b) in acc.iter_mut().zip(other) {
+            *a += b;
+        }
+    });
+    let (clo, chi) = part::bounds(k, q, i);
+    let rows = chi - clo;
+    Et2dTile {
+        tile: DenseMatrix::from_vec(rows, n_j, mine[..rows * n_j].to_vec()),
+        cluster_range: (clo, chi),
+        assign_block_i,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::comm::World;
+    use crate::sparse::VPartition;
+    use crate::util::rng::Rng;
+
+    fn check(n: usize, k: usize, p: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let pts = DenseMatrix::random(n, 5, &mut rng);
+        let k_full = crate::dense::ops::matmul_nt(&pts, &pts);
+        let assign: Vec<u32> = (0..n).map(|_| rng.below(k) as u32).collect();
+        let mut sizes = vec![0u64; k];
+        for &a in &assign {
+            sizes[a as usize] += 1;
+        }
+        let inv = VPartition::inv_sizes(&sizes);
+        // Oracle Eᵀ = V·K (k × n).
+        let expect_e = crate::sparse::ops::spmm_vk(&k_full, &assign, k, &inv); // n×k
+
+        let grid = Grid2D::new(p).unwrap();
+        let q = grid.q();
+        let gref = &grid;
+        let kref = &k_full;
+        let aref = &assign;
+        let iref = &inv;
+        let (tiles, _) = World::run(p, |comm| {
+            let (i, j) = gref.coords(comm.rank());
+            let (rlo, rhi) = part::bounds(n, q, i);
+            let (clo, chi) = part::bounds(n, q, j);
+            let tile = kref.block(rlo, rhi, clo, chi);
+            let (vlo, vhi) = part::nested(n, q, i, j);
+            let be = NativeBackend::new();
+            spmm_2d(comm, gref, &tile, &aref[vlo..vhi], n, k, iref, &be)
+        });
+        // Reassemble Eᵀ from 2D tiles and compare.
+        for (rank, out) in tiles.iter().enumerate() {
+            let (_i, j) = grid.coords(rank);
+            // Tile rows = clusters [clo,chi), cols = points block j.
+            let (plo, _phi) = part::bounds(n, q, j);
+            let (clo, chi) = out.cluster_range;
+            for a in clo..chi {
+                for c in 0..out.tile.cols() {
+                    let got = out.tile.get(a - clo, c);
+                    let want = expect_e.get(plo + c, a);
+                    assert!(
+                        (got - want).abs() < 1e-3,
+                        "n={n} k={k} p={p} rank={rank} a={a} c={c}: {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matches_oracle_various() {
+        check(24, 4, 4, 71);
+        check(37, 5, 4, 72);
+        check(45, 9, 9, 73);
+        check(64, 4, 16, 74);
+        check(51, 7, 16, 75); // k % q != 0 exercises padding
+    }
+
+    #[test]
+    #[should_panic(expected = "2D algorithm requires")]
+    fn rejects_small_k() {
+        let grid = Grid2D::new(16).unwrap();
+        let gref = &grid;
+        let (_, _) = World::run(16, |comm| {
+            let be = NativeBackend::new();
+            let tile = DenseMatrix::zeros(4, 4);
+            let assign = vec![0u32; 1];
+            // k=2 < q=4 must panic.
+            spmm_2d(comm, gref, &tile, &assign, 16, 2, &[0.5, 0.5], &be)
+        });
+    }
+}

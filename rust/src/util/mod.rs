@@ -1,0 +1,96 @@
+//! Small self-contained utilities: PRNG, JSON, parallel-for, timing.
+//!
+//! The crate builds fully offline against a vendored dependency set that
+//! contains only the `xla` closure, so the usual ecosystem crates
+//! (`rand`, `serde_json`, `rayon`, `criterion`) are replaced by the
+//! minimal, well-tested implementations in this module.
+
+pub mod rng;
+pub mod json;
+pub mod par;
+pub mod part;
+pub mod timing;
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// True if `p` is a perfect square.
+#[inline]
+pub fn is_perfect_square(p: usize) -> bool {
+    let r = (p as f64).sqrt().round() as usize;
+    r * r == p
+}
+
+/// Integer square root of a perfect square (panics otherwise).
+#[inline]
+pub fn isqrt_exact(p: usize) -> usize {
+    let r = (p as f64).sqrt().round() as usize;
+    assert_eq!(r * r, p, "{p} is not a perfect square");
+    r
+}
+
+/// Human-readable byte count (GiB/MiB/KiB/B).
+pub fn human_bytes(b: u64) -> String {
+    const K: f64 = 1024.0;
+    let bf = b as f64;
+    if bf >= K * K * K {
+        format!("{:.2} GiB", bf / (K * K * K))
+    } else if bf >= K * K {
+        format!("{:.2} MiB", bf / (K * K))
+    } else if bf >= K {
+        format!("{:.2} KiB", bf / K)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Geometric mean of a slice (ignores non-positive entries).
+pub fn geomean(xs: &[f64]) -> f64 {
+    let vals: Vec<f64> = xs.iter().copied().filter(|x| *x > 0.0).collect();
+    if vals.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = vals.iter().map(|x| x.ln()).sum();
+    (s / vals.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(0, 3), 0);
+        assert_eq!(ceil_div(1, 1), 1);
+    }
+
+    #[test]
+    fn perfect_squares() {
+        assert!(is_perfect_square(1));
+        assert!(is_perfect_square(4));
+        assert!(is_perfect_square(256));
+        assert!(!is_perfect_square(2));
+        assert!(!is_perfect_square(12));
+        assert_eq!(isqrt_exact(144), 12);
+    }
+
+    #[test]
+    fn human_bytes_formats() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn geomean_basic() {
+        let g = geomean(&[1.0, 4.0]);
+        assert!((g - 2.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+}

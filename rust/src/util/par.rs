@@ -1,0 +1,110 @@
+//! Tiny data-parallel helpers over `std::thread::scope`.
+//!
+//! Replaces `rayon` in the vendored-only build. Work is split into
+//! contiguous chunks, one per worker; workers are plain OS threads. The
+//! hot local ops (GEMM tiles, SpMM segment sums) are regular enough that
+//! static chunking is within a few percent of work stealing.
+
+/// Number of worker threads to use for local compute.
+///
+/// Honors `VIVALDI_THREADS`; defaults to the available parallelism.
+pub fn num_threads() -> usize {
+    if let Ok(s) = std::env::var("VIVALDI_THREADS") {
+        if let Ok(n) = s.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Run `f(start, end)` over disjoint chunks of `0..n` in parallel.
+///
+/// `f` must be safe to call concurrently on disjoint ranges. Chunks are
+/// contiguous; at most `max_threads` workers are spawned, and the call
+/// degrades to a plain loop for small `n`.
+pub fn par_ranges<F>(n: usize, min_chunk: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let workers = num_threads().min(n.div_ceil(min_chunk.max(1))).max(1);
+    if workers == 1 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let lo = w * chunk;
+            let hi = ((w + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let fref = &f;
+            s.spawn(move || fref(lo, hi));
+        }
+    });
+}
+
+/// Parallel map over `0..n`, producing a `Vec<T>` in index order.
+pub fn par_map<T, F>(n: usize, min_chunk: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let slots = SendPtr(out.as_mut_ptr());
+        par_ranges(n, min_chunk, |lo, hi| {
+            let slots = &slots;
+            for i in lo..hi {
+                // SAFETY: each index is written by exactly one worker;
+                // ranges are disjoint and `out` outlives the scope.
+                unsafe { *slots.0.add(i) = f(i) };
+            }
+        });
+    }
+    out
+}
+
+/// Shared mutable pointer wrapper for disjoint-range writes.
+///
+/// SAFETY contract: users must only write through disjoint indices.
+pub struct SendPtr<T>(pub *mut T);
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn covers_all_indices_once() {
+        let n = 10_007;
+        let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        par_ranges(n, 16, |lo, hi| {
+            for i in lo..hi {
+                counts[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_map_order() {
+        let v = par_map(1000, 8, |i| i * i);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * i);
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny() {
+        par_ranges(0, 1, |_, _| panic!("must not be called"));
+        let v = par_map(1, 64, |i| i + 1);
+        assert_eq!(v, vec![1]);
+    }
+}

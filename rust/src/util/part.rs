@@ -1,0 +1,134 @@
+//! Partitioning arithmetic shared by every distributed algorithm.
+//!
+//! Contiguous block partitions with the remainder spread over the first
+//! blocks. The grid algorithms use *nested* partitions: points are
+//! first split into √P grid blocks, then each grid block is split into
+//! √P sub-slices — so the 1D partition owned by global rank `p = j·√P
+//! + l` is exactly sub-slice `l` of grid block `j`. This nesting is
+//! what makes the 1.5D column-split reduce-scatter land each rank's own
+//! points on itself (paper §V.C, column-major grid).
+
+/// Bounds [lo, hi) of block `i` of `n` items split into `parts`.
+#[inline]
+pub fn bounds(n: usize, parts: usize, i: usize) -> (usize, usize) {
+    debug_assert!(i < parts);
+    let base = n / parts;
+    let rem = n % parts;
+    let lo = i * base + i.min(rem);
+    let hi = lo + base + usize::from(i < rem);
+    (lo, hi)
+}
+
+/// Length of block `i`.
+#[inline]
+pub fn len(n: usize, parts: usize, i: usize) -> usize {
+    let (lo, hi) = bounds(n, parts, i);
+    hi - lo
+}
+
+/// Bounds of sub-slice `l` (of `q`) within block `j` (of `q`) of `n`
+/// items — the nested two-level partition used by the grid algorithms.
+#[inline]
+pub fn nested(n: usize, q: usize, j: usize, l: usize) -> (usize, usize) {
+    let (blo, bhi) = bounds(n, q, j);
+    let (slo, shi) = bounds(bhi - blo, q, l);
+    (blo + slo, blo + shi)
+}
+
+/// Which block of a `parts`-way split of `n` owns item `x`.
+#[inline]
+pub fn owner(n: usize, parts: usize, x: usize) -> usize {
+    debug_assert!(x < n);
+    // Invert `bounds`: blocks before `rem` have size base+1.
+    let base = n / parts;
+    let rem = n % parts;
+    let cut = rem * (base + 1);
+    if x < cut {
+        x / (base + 1)
+    } else if base == 0 {
+        // All remaining blocks are empty; owner is the last non-empty.
+        rem.saturating_sub(1)
+    } else {
+        rem + (x - cut) / base
+    }
+}
+
+/// Intersection of two half-open ranges.
+#[inline]
+pub fn intersect(a: (usize, usize), b: (usize, usize)) -> Option<(usize, usize)> {
+    let lo = a.0.max(b.0);
+    let hi = a.1.min(b.1);
+    (lo < hi).then_some((lo, hi))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_cover_exactly() {
+        for n in [0usize, 1, 7, 16, 100, 101] {
+            for parts in [1usize, 2, 3, 4, 7, 16] {
+                let mut total = 0;
+                let mut prev = 0;
+                for i in 0..parts {
+                    let (lo, hi) = bounds(n, parts, i);
+                    assert_eq!(lo, prev, "n={n} parts={parts} i={i}");
+                    assert!(hi >= lo);
+                    total += hi - lo;
+                    prev = hi;
+                }
+                assert_eq!(total, n);
+            }
+        }
+    }
+
+    #[test]
+    fn bounds_balanced() {
+        // Sizes differ by at most one.
+        for n in [100usize, 101, 97] {
+            for parts in [3usize, 7, 8] {
+                let sizes: Vec<usize> = (0..parts).map(|i| len(n, parts, i)).collect();
+                let mx = *sizes.iter().max().unwrap();
+                let mn = *sizes.iter().min().unwrap();
+                assert!(mx - mn <= 1, "n={n} parts={parts} sizes={sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn nested_covers_block() {
+        let n = 103;
+        let q = 4;
+        for j in 0..q {
+            let (blo, bhi) = bounds(n, q, j);
+            let mut prev = blo;
+            for l in 0..q {
+                let (lo, hi) = nested(n, q, j, l);
+                assert_eq!(lo, prev);
+                prev = hi;
+            }
+            assert_eq!(prev, bhi);
+        }
+    }
+
+    #[test]
+    fn owner_inverts_bounds() {
+        for n in [1usize, 5, 16, 97] {
+            for parts in [1usize, 2, 3, 8, 16] {
+                for x in 0..n {
+                    let o = owner(n, parts, x);
+                    let (lo, hi) = bounds(n, parts, o);
+                    assert!(lo <= x && x < hi, "n={n} parts={parts} x={x} o={o}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn intersections() {
+        assert_eq!(intersect((0, 5), (3, 9)), Some((3, 5)));
+        assert_eq!(intersect((0, 3), (3, 9)), None);
+        assert_eq!(intersect((4, 8), (0, 100)), Some((4, 8)));
+    }
+}

@@ -1,0 +1,268 @@
+//! Timing + micro-benchmark statistics (criterion replacement).
+//!
+//! `cargo bench` targets in `benches/` are plain binaries (harness =
+//! false) that use [`BenchRunner`] for warmup, repetition, and robust
+//! summary statistics.
+
+use std::time::{Duration, Instant};
+
+/// Timing mode for [`Stopwatch::time`].
+///
+/// * `wall` (default) — plain wall clock.
+/// * `cpu` — per-thread CPU time (`CLOCK_THREAD_CPUTIME_ID`): excludes
+///   time blocked in collectives *and* is immune to the thread
+///   oversubscription of running 256 simulated ranks on a small host —
+///   the mode the experiment harness uses so per-rank compute is
+///   comparable across rank counts (see DESIGN.md §1).
+///
+/// Selected once per process from `VIVALDI_TIMING`.
+fn use_cpu_clock() -> bool {
+    static MODE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *MODE.get_or_init(|| std::env::var("VIVALDI_TIMING").is_ok_and(|v| v == "cpu"))
+}
+
+/// Current thread's CPU time in seconds.
+pub fn thread_cpu_time() -> f64 {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    // SAFETY: plain libc call writing into a local struct.
+    unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+}
+
+/// Current time in seconds on the configured clock (for manual spans;
+/// only differences are meaningful).
+pub fn clock_now() -> f64 {
+    if use_cpu_clock() {
+        thread_cpu_time()
+    } else {
+        static EPOCH: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+        EPOCH.get_or_init(Instant::now).elapsed().as_secs_f64()
+    }
+}
+
+/// Simple stopwatch accumulating named phase durations.
+#[derive(Debug, Default, Clone)]
+pub struct Stopwatch {
+    phases: Vec<(String, f64)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f`, record under `name` (accumulating across calls).
+    /// Clock selected by `VIVALDI_TIMING` (see [`thread_cpu_time`]).
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        if use_cpu_clock() {
+            let t0 = thread_cpu_time();
+            let out = f();
+            self.add(name, thread_cpu_time() - t0);
+            out
+        } else {
+            let t0 = Instant::now();
+            let out = f();
+            self.add(name, t0.elapsed().as_secs_f64());
+            out
+        }
+    }
+
+    /// Add raw seconds to a phase.
+    pub fn add(&mut self, name: &str, secs: f64) {
+        if let Some(entry) = self.phases.iter_mut().find(|(n, _)| n == name) {
+            entry.1 += secs;
+        } else {
+            self.phases.push((name.to_string(), secs));
+        }
+    }
+
+    pub fn get(&self, name: &str) -> f64 {
+        self.phases.iter().find(|(n, _)| n == name).map(|(_, s)| *s).unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.phases.iter().map(|(_, s)| s).sum()
+    }
+
+    pub fn phases(&self) -> &[(String, f64)] {
+        &self.phases
+    }
+
+    /// Merge another stopwatch into this one (summing phases).
+    pub fn merge(&mut self, other: &Stopwatch) {
+        for (n, s) in &other.phases {
+            self.add(n, *s);
+        }
+    }
+
+    /// Per-phase max across stopwatches (critical path over ranks).
+    pub fn max_over(watches: &[Stopwatch]) -> Stopwatch {
+        let mut out = Stopwatch::new();
+        for w in watches {
+            for (n, s) in &w.phases {
+                let cur = out.get(n);
+                if *s > cur {
+                    // replace
+                    if let Some(e) = out.phases.iter_mut().find(|(pn, _)| pn == n) {
+                        e.1 = *s;
+                    } else {
+                        out.phases.push((n.clone(), *s));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Summary statistics of repeated timed runs.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: Vec<f64>,
+    pub mean: f64,
+    pub median: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl BenchStats {
+    pub fn from_samples(name: &str, mut samples: Vec<f64>) -> Self {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let median = if samples.len() % 2 == 1 {
+            samples[samples.len() / 2]
+        } else {
+            0.5 * (samples[samples.len() / 2 - 1] + samples[samples.len() / 2])
+        };
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        BenchStats {
+            name: name.to_string(),
+            mean,
+            median,
+            stddev: var.sqrt(),
+            min: samples[0],
+            max: *samples.last().unwrap(),
+            samples,
+        }
+    }
+
+    /// criterion-like one-line report.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} time: [{} {} {}]  (±{})",
+            self.name,
+            fmt_secs(self.min),
+            fmt_secs(self.median),
+            fmt_secs(self.max),
+            fmt_secs(self.stddev)
+        )
+    }
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Micro-benchmark runner: warmup then timed samples.
+pub struct BenchRunner {
+    pub warmup: usize,
+    pub samples: usize,
+    /// Soft time budget per benchmark; sampling stops early past this.
+    pub max_total: Duration,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        BenchRunner { warmup: 2, samples: 10, max_total: Duration::from_secs(30) }
+    }
+}
+
+impl BenchRunner {
+    pub fn quick() -> Self {
+        BenchRunner { warmup: 1, samples: 5, max_total: Duration::from_secs(10) }
+    }
+
+    /// Run `f` repeatedly; returns stats over wall times.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchStats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let started = Instant::now();
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+            if started.elapsed() > self.max_total && times.len() >= 3 {
+                break;
+            }
+        }
+        let stats = BenchStats::from_samples(name, times);
+        println!("{}", stats.report());
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.add("a", 1.0);
+        sw.add("a", 0.5);
+        sw.add("b", 2.0);
+        assert!((sw.get("a") - 1.5).abs() < 1e-12);
+        assert!((sw.total() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stopwatch_max_over() {
+        let mut a = Stopwatch::new();
+        a.add("x", 1.0);
+        a.add("y", 5.0);
+        let mut b = Stopwatch::new();
+        b.add("x", 2.0);
+        let m = Stopwatch::max_over(&[a, b]);
+        assert_eq!(m.get("x"), 2.0);
+        assert_eq!(m.get("y"), 5.0);
+    }
+
+    #[test]
+    fn bench_stats_math() {
+        let s = BenchStats::from_samples("t", vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_secs(2.0).ends_with(" s"));
+        assert!(fmt_secs(2e-3).ends_with(" ms"));
+        assert!(fmt_secs(2e-6).ends_with(" µs"));
+        assert!(fmt_secs(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn runner_runs() {
+        let r = BenchRunner { warmup: 1, samples: 3, max_total: Duration::from_secs(5) };
+        let stats = r.run("noop", || 1 + 1);
+        assert_eq!(stats.samples.len(), 3);
+    }
+}

@@ -1,0 +1,164 @@
+//! Integration tests: every distributed algorithm vs the single-rank
+//! oracle, across rank counts, kernels, and datasets; plus the
+//! end-to-end feasibility (OOM) behaviour and PJRT-backed fits.
+
+use vivaldi::config::Scale;
+use vivaldi::data::{datasets::PaperDataset, synth};
+use vivaldi::kernelfn::KernelFn;
+use vivaldi::kkmeans::{self, oracle, Algo, FitConfig};
+use vivaldi::quality;
+use vivaldi::sliding_window::{sliding_window_fit, SwConfig};
+use vivaldi::VivaldiError;
+
+fn cfg(k: usize, kernel: KernelFn) -> FitConfig {
+    FitConfig { k, max_iters: 40, kernel, converge_on_stable: true, mem: None }
+}
+
+/// All four algorithms must reach the oracle's fixed point on
+/// well-separated data, at every compatible rank count.
+#[test]
+fn all_algorithms_match_oracle() {
+    let ds = synth::gaussian_blobs(144, 5, 4, 4.5, 101);
+    let kernel = KernelFn::paper_polynomial();
+    let want = oracle::reference_fit(&ds.points, 4, &kernel, 40);
+    assert!(want.converged);
+    for algo in Algo::ALL {
+        let ps: &[usize] = if algo == Algo::OneD { &[1, 2, 3, 4, 6, 9] } else { &[1, 4, 9, 16] };
+        for &p in ps {
+            let out = kkmeans::fit(algo, p, &ds.points, &cfg(4, kernel)).unwrap();
+            assert_eq!(
+                out.assignments,
+                want.assignments,
+                "algo={} p={p}",
+                algo.name()
+            );
+            assert_eq!(out.iterations, want.iterations, "algo={} p={p}", algo.name());
+        }
+    }
+}
+
+/// Gaussian kernel path end-to-end (norms through SUMMA rows/cols).
+#[test]
+fn gaussian_kernel_all_algorithms() {
+    let ds = synth::concentric_rings(128, 2, 103);
+    let kernel = KernelFn::gaussian(2.0);
+    let want = oracle::reference_fit(&ds.points, 2, &kernel, 40);
+    for algo in Algo::ALL {
+        let out = kkmeans::fit(algo, 4, &ds.points, &cfg(2, kernel)).unwrap();
+        assert_eq!(out.assignments, want.assignments, "algo={}", algo.name());
+        let nmi = quality::nmi(&out.assignments, &ds.labels, 2);
+        assert!(nmi > 0.9, "algo={} nmi={nmi}", algo.name());
+    }
+}
+
+/// The sliding-window baseline reaches the same fixed point as the
+/// distributed algorithms (same math, different schedule).
+#[test]
+fn sliding_window_agrees_with_distributed() {
+    let ds = synth::gaussian_blobs(96, 4, 3, 4.0, 105);
+    let kernel = KernelFn::paper_polynomial();
+    let dist = kkmeans::fit(Algo::OneFiveD, 4, &ds.points, &cfg(3, kernel)).unwrap();
+    let be = vivaldi::backend::NativeBackend::new();
+    let sw = sliding_window_fit(
+        &ds.points,
+        &SwConfig { k: 3, max_iters: 40, kernel, block: 17, converge_on_stable: true },
+        &be,
+    );
+    assert_eq!(sw.assignments, dist.assignments);
+}
+
+/// Uneven divisions: n not divisible by P or by the grid — remainder
+/// handling on every path.
+#[test]
+fn remainder_shapes() {
+    let ds = synth::gaussian_blobs(101, 3, 3, 4.0, 107);
+    let kernel = KernelFn::linear();
+    let want = oracle::reference_fit(&ds.points, 3, &kernel, 30);
+    for algo in Algo::ALL {
+        let p = if algo == Algo::OneD { 7 } else { 9 };
+        let out = kkmeans::fit(algo, p, &ds.points, &cfg(3, kernel)).unwrap();
+        assert_eq!(out.assignments, want.assignments, "algo={}", algo.name());
+    }
+}
+
+/// The paper's weak-scaling feasibility pattern (§VI.B) at our scale:
+/// 1D OOMs on the high-d dataset past G=4; H-1D OOMs past G=16; 1.5D
+/// and 2D never do.
+#[test]
+fn feasibility_pattern_matches_paper() {
+    let scale = Scale { iters: 2, ..Scale::quick() };
+    let machine = vivaldi::model::MachineModel::perlmutter();
+    let mem = scale.mem_model_weak(PaperDataset::KddLike);
+    let run = |algo, g: usize| {
+        vivaldi::bench::run_once(
+            algo,
+            PaperDataset::KddLike,
+            g,
+            4,
+            scale.weak_n(g),
+            &scale,
+            &machine,
+            Some(mem),
+        )
+        .oom
+    };
+    assert!(!run(Algo::OneD, 4), "1D fits at G=4");
+    assert!(run(Algo::OneD, 16), "1D OOMs at G=16 (d=10000-equivalent)");
+    assert!(!run(Algo::HybridOneD, 16), "H-1D fits at G=16");
+    assert!(run(Algo::HybridOneD, 64), "H-1D OOMs at G=64");
+    assert!(!run(Algo::OneFiveD, 64), "1.5D fits at G=64");
+    assert!(!run(Algo::TwoD, 16), "2D fits at G=16");
+}
+
+/// PJRT-backed distributed fit must agree with the native fit exactly
+/// (artifact shapes cover the workload; skipped without artifacts).
+#[test]
+fn pjrt_fit_matches_native() {
+    if !vivaldi::runtime::artifacts_available() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    if cfg!(debug_assertions) {
+        // The n=4096 workload is sized for release builds (the shapes
+        // the AOT manifest ships); debug-mode GEMM would take minutes.
+        eprintln!("skipping in debug build (run with --release)");
+        return;
+    }
+    let ds = PaperDataset::Mnist8mLike.generate(4096, Some(64), 20260710);
+    let c = FitConfig { k: 16, max_iters: 3, converge_on_stable: false, ..Default::default() };
+    let native = kkmeans::fit(Algo::OneFiveD, 4, &ds.points, &c).unwrap();
+    let be = vivaldi::runtime::PjrtBackend::from_default_artifacts(1).unwrap();
+    let pjrt = kkmeans::fit_with_backend(Algo::OneFiveD, 4, &ds.points, &c, &be).unwrap();
+    assert_eq!(native.assignments, pjrt.assignments);
+    let (hits, _) = be.counters();
+    assert!(hits > 0, "pjrt path must actually execute artifacts");
+}
+
+/// Objective decreases monotonically on every algorithm (random data,
+/// no separability assumption).
+#[test]
+fn objective_monotone_all_algorithms() {
+    let ds = synth::anisotropic_mixture(120, 6, 4, 109);
+    for algo in Algo::ALL {
+        let out = kkmeans::fit(algo, 4, &ds.points, &cfg(4, KernelFn::paper_polynomial())).unwrap();
+        for w in out.objective_curve.windows(2) {
+            assert!(w[1] <= w[0] + 1e-2, "algo={} {w:?}", algo.name());
+        }
+    }
+}
+
+/// Errors surface as typed errors, not hangs or panics.
+#[test]
+fn error_paths() {
+    let ds = synth::gaussian_blobs(32, 2, 2, 3.0, 111);
+    // Non-square grid.
+    assert!(matches!(
+        kkmeans::fit(Algo::OneFiveD, 8, &ds.points, &cfg(2, KernelFn::linear())),
+        Err(VivaldiError::InvalidConfig(_))
+    ));
+    // 2D with √P > k.
+    assert!(matches!(
+        kkmeans::fit(Algo::TwoD, 16, &ds.points, &cfg(2, KernelFn::linear())),
+        Err(VivaldiError::InvalidConfig(_))
+    ));
+}
