@@ -1,0 +1,79 @@
+//! A dataset the exact 1.5D path cannot hold: under a calibrated
+//! device-memory budget the full n×n Gram OOMs collectively, while the
+//! landmark-approximate path (n×m cross-kernel, m = n/8) fits and still
+//! separates the rings.
+//!
+//! Run: `cargo run --release --example landmark_demo`
+
+use vivaldi::approx::{self, ApproxConfig};
+use vivaldi::config::{landmark_feasibility, MemModel};
+use vivaldi::kernelfn::KernelFn;
+use vivaldi::kkmeans::{self, Algo, FitConfig};
+use vivaldi::quality::nmi;
+use vivaldi::util::human_bytes;
+use vivaldi::VivaldiError;
+
+fn main() {
+    let n = 4096;
+    let p = 4;
+    let m = n / 8;
+    let ds = vivaldi::data::synth::concentric_rings(n, 2, 42);
+    let kernel = KernelFn::gaussian(2.0);
+    // A budget sized between the landmark state and the exact K tile.
+    let mem = MemModel { budget: 4 << 20, repl_factor: 1.0, redist_factor: 0.0 };
+
+    let feas = landmark_feasibility(n, ds.points.cols(), m, p, &mem);
+    println!(
+        "feasibility @ {} budget/rank: exact 1.5D needs {}, landmark (m={m}) needs {}",
+        human_bytes(feas.budget),
+        human_bytes(feas.exact_bytes_per_rank),
+        human_bytes(feas.landmark_bytes_per_rank),
+    );
+    assert!(feas.recommends_landmark(), "demo budget should separate the paths");
+
+    // The exact path refuses collectively (typed OOM, no deadlock).
+    let exact_cfg = FitConfig {
+        k: 2,
+        max_iters: 40,
+        kernel,
+        converge_on_stable: true,
+        mem: Some(mem),
+    };
+    match kkmeans::fit(Algo::OneFiveD, p, &ds.points, &exact_cfg) {
+        Err(VivaldiError::OutOfMemory { requested, budget, .. }) => println!(
+            "exact 1.5D: OutOfMemory as predicted ({} requested, {} budget)",
+            human_bytes(requested),
+            human_bytes(budget)
+        ),
+        other => panic!("expected the exact path to OOM, got {other:?}"),
+    }
+
+    // The landmark path runs under the same budget.
+    let cfg = ApproxConfig {
+        k: 2,
+        m,
+        kernel,
+        max_iters: 40,
+        mem: Some(mem),
+        ..Default::default()
+    };
+    let out = approx::fit(p, &ds.points, &cfg).expect("landmark fit");
+    let score = nmi(&out.assignments, &ds.labels, 2);
+    println!(
+        "landmark m={m}: {} iters, converged={}, peak mem {} / {}, NMI={score:.3}",
+        out.iterations,
+        out.converged,
+        human_bytes(out.peak_mem),
+        human_bytes(mem.budget),
+    );
+    let total = vivaldi::comm::CommStats::merged_sum(&out.comm_stats);
+    for (phase, s) in total.phases() {
+        println!(
+            "  phase {phase:<8} {:>6} msgs  {}",
+            s.msgs,
+            human_bytes(s.bytes)
+        );
+    }
+    assert!(score > 0.9, "landmark path should separate the rings");
+    println!("OK — the landmark path opened a workload the exact path cannot hold.");
+}

@@ -1,0 +1,352 @@
+//! Landmark-approximate distributed Kernel K-means (Chitta et al.,
+//! *Approximate Kernel k-means*; Nyström-style landmark formulation).
+//!
+//! The exact algorithms carry the full n×n kernel matrix K; the paper
+//! scales them by distributing K (1.5D partitioning), but aggregate
+//! memory still grows as O(n²). This module trades exactness for
+//! footprint: pick m ≪ n **landmark** points L, constrain every cluster
+//! center to the span of {φ(l) : l ∈ L}, and the whole state shrinks to
+//! the rectangular cross-kernel `C = κ(P, L)` (n×m, 1D row blocks), the
+//! tiny replicated `W = κ(L, L)` (m×m), and a k×m coefficient matrix —
+//! O(n·m/P) per rank instead of O(n²/P).
+//!
+//! Per iteration (the **reduced-rank cluster update**):
+//!
+//! 1. c̄_a = mean of C rows in cluster a — local k×m partial sums, one
+//!    Allreduce of k·m words (the only volume that scales with m·k).
+//! 2. α_a solves `(W + λI) α_a = c̄_a` — replicated f64 ridge Cholesky
+//!    ([`solve::SpdSolver`]), factored **once** per fit since W is
+//!    iteration-invariant; identical on every rank.
+//! 3. E = C·αᵀ (local GEMM through the backend) and c_a = α_aᵀWα_a;
+//!    then the exact path's own fused distances+argmin and the shared
+//!    [`loop_common::commit_assignment`] collectives finish the
+//!    iteration. Like the 1.5D algorithm, the update needs no movement
+//!    of per-point data — only O(k·m + k) words per iteration.
+//!
+//! Distributed runs are tested against the independent single-rank
+//! oracle ([`oracle`]) and the exact-path oracle (quality within
+//! tolerance at m ≪ n, exact agreement as m → n).
+
+pub mod oracle;
+pub mod solve;
+
+use crate::backend::ComputeBackend;
+use crate::comm::{Comm, Group, World};
+use crate::data::landmarks::{self, LandmarkSeeding};
+use crate::dense::DenseMatrix;
+use crate::gemm::gemm_1d_landmark_gram;
+use crate::kernelfn::KernelFn;
+use crate::kkmeans::{loop_common, FitResult, RankOutput};
+use crate::model::MemTracker;
+use crate::util::{part, timing::Stopwatch};
+use crate::VivaldiError;
+
+use solve::SpdSolver;
+
+/// Configuration for a landmark-approximate fit. Mirrors
+/// [`crate::kkmeans::FitConfig`] plus the landmark knobs.
+#[derive(Debug, Clone)]
+pub struct ApproxConfig {
+    /// Number of clusters.
+    pub k: usize,
+    /// Number of landmarks (k ≤ m ≤ n).
+    pub m: usize,
+    /// Landmark selection strategy.
+    pub seeding: LandmarkSeeding,
+    /// Seed for the landmark sampler (independent of the data seed).
+    pub landmark_seed: u64,
+    /// Maximum clustering iterations.
+    pub max_iters: usize,
+    /// Kernel function.
+    pub kernel: KernelFn,
+    /// Stop early when no assignment changes.
+    pub converge_on_stable: bool,
+    /// Simulated device-memory model (None = unlimited).
+    pub mem: Option<crate::config::MemModel>,
+}
+
+impl Default for ApproxConfig {
+    fn default() -> Self {
+        ApproxConfig {
+            k: 16,
+            m: 128,
+            seeding: LandmarkSeeding::Uniform,
+            landmark_seed: 20260710,
+            max_iters: 100,
+            kernel: KernelFn::paper_polynomial(),
+            converge_on_stable: true,
+            mem: None,
+        }
+    }
+}
+
+/// The landmark index set a fit at `p` ranks will use (exposed so tests
+/// and oracles can replay the exact same landmarks).
+pub fn landmark_indices(points: &DenseMatrix, cfg: &ApproxConfig, p: usize) -> Vec<usize> {
+    landmarks::sample_landmarks(points, cfg.m, p, cfg.seeding, cfg.landmark_seed)
+}
+
+/// Run a distributed landmark-approximate fit on `p` simulated ranks
+/// with the native backend. Mirrors [`crate::kkmeans::fit`]: points are
+/// globally visible to the harness, each rank slices out its 1D block.
+pub fn fit(p: usize, points: &DenseMatrix, cfg: &ApproxConfig) -> Result<FitResult, VivaldiError> {
+    let backend = crate::backend::NativeBackend::new();
+    fit_with_backend(p, points, cfg, &backend)
+}
+
+/// [`fit`] with an explicit compute backend.
+pub fn fit_with_backend(
+    p: usize,
+    points: &DenseMatrix,
+    cfg: &ApproxConfig,
+    backend: &dyn ComputeBackend,
+) -> Result<FitResult, VivaldiError> {
+    let n = points.rows();
+    if cfg.k == 0 || n == 0 {
+        return Err(VivaldiError::InvalidConfig("k and n must be positive".into()));
+    }
+    if n < cfg.k {
+        return Err(VivaldiError::InvalidConfig(format!("n = {n} < k = {}", cfg.k)));
+    }
+    if cfg.m < cfg.k || cfg.m > n {
+        return Err(VivaldiError::InvalidConfig(format!(
+            "landmark count m = {} must satisfy k = {} <= m <= n = {n}",
+            cfg.m, cfg.k
+        )));
+    }
+    if p == 0 || p > n {
+        return Err(VivaldiError::InvalidConfig(format!("rank count p = {p} out of range")));
+    }
+    // (m <= n already guarantees every rank block covers its stratified
+    // landmark quota: part::len is monotone in its first argument.)
+
+    let lidx = landmark_indices(points, cfg, p);
+    let (rank_results, comm_stats) =
+        World::run(p, |comm| run_rank(comm, points, &lidx, cfg, backend));
+
+    let mut outs = Vec::with_capacity(p);
+    for r in rank_results {
+        outs.push(r?);
+    }
+    let assignments: Vec<u32> = outs.iter().flat_map(|o| o.assign.iter().copied()).collect();
+    debug_assert_eq!(assignments.len(), n);
+    let first = &outs[0];
+    Ok(FitResult {
+        iterations: first.iterations,
+        converged: first.converged,
+        objective_curve: first.objective_curve.clone(),
+        changes_curve: first.changes_curve.clone(),
+        peak_mem: outs.iter().map(|o| o.peak_mem).max().unwrap_or(0),
+        timings: outs.iter().map(|o| o.stopwatch.clone()).collect(),
+        comm_stats,
+        assignments,
+        ranks: p,
+    })
+}
+
+fn run_rank(
+    comm: &Comm,
+    points: &DenseMatrix,
+    lidx: &[usize],
+    cfg: &ApproxConfig,
+    backend: &dyn ComputeBackend,
+) -> Result<RankOutput, VivaldiError> {
+    let p = comm.size();
+    let n = points.rows();
+    let k = cfg.k;
+    let m = lidx.len();
+    let world = Group::world(p);
+    let mem = cfg.mem.unwrap_or_else(crate::config::MemModel::unlimited);
+    let tracker = if cfg.mem.is_some() {
+        MemTracker::new(comm.rank(), mem.budget)
+    } else {
+        MemTracker::unlimited(comm.rank())
+    };
+    let (lo, hi) = part::bounds(n, p, comm.rank());
+    let local_pts = points.row_block(lo, hi);
+    let own_lms: Vec<usize> = lidx.iter().copied().filter(|&i| i >= lo && i < hi).collect();
+    let own_rows = landmarks::landmark_rows(points, &own_lms);
+    let mut sw = Stopwatch::new();
+
+    // Rectangular Gram pipeline: C block row + replicated W.
+    let (c_block, w) = sw.time("gemm", || {
+        gemm_1d_landmark_gram(comm, &world, &local_pts, &own_rows, &cfg.kernel, backend, &tracker)
+    })?;
+    let solver = SpdSolver::factor(&w);
+
+    // Round-robin V init over global indices (same policy as the exact
+    // algorithms, so comparisons isolate the approximation).
+    let mut assign: Vec<u32> = (lo..hi).map(|x| (x % k) as u32).collect();
+    comm.set_phase("update");
+    let mut sizes = loop_common::global_sizes(comm, &world, &assign, k);
+
+    let mut objective_curve = Vec::new();
+    let mut changes_curve = Vec::new();
+    let mut iterations = 0;
+    let mut converged = false;
+    for _ in 0..cfg.max_iters {
+        // Reduced-rank E computation, accounted under "spmm" like the
+        // exact paths' Eᵀ phase.
+        let (e_local, cvec) = sw.time("spmm", || {
+            reduced_rank_e(comm, &world, backend, &c_block, &w, &solver, &assign, k, &sizes)
+        });
+        comm.set_phase("update");
+        let (new_assign, minvals) =
+            sw.time("update", || backend.distances_argmin(&e_local, &cvec));
+        let (changes, obj, new_sizes) = sw.time("update", || {
+            loop_common::commit_assignment(comm, &world, &mut assign, new_assign, &minvals, k)
+        });
+        sizes = new_sizes;
+        objective_curve.push(obj);
+        changes_curve.push(changes);
+        iterations += 1;
+        if changes == 0 && cfg.converge_on_stable {
+            converged = true;
+            break;
+        }
+    }
+
+    Ok(RankOutput {
+        assign,
+        stopwatch: sw,
+        iterations,
+        converged,
+        objective_curve,
+        changes_curve,
+        peak_mem: tracker.peak(),
+    })
+}
+
+/// One reduced-rank E step: Allreduce the k×m per-cluster C sums, solve
+/// for α on every rank (bit-identical), return E = C·αᵀ and the center
+/// norms c_a = α_aᵀWα_a.
+#[allow(clippy::too_many_arguments)]
+fn reduced_rank_e(
+    comm: &Comm,
+    world: &Group,
+    backend: &dyn ComputeBackend,
+    c_block: &DenseMatrix,
+    w: &DenseMatrix,
+    solver: &SpdSolver,
+    assign: &[u32],
+    k: usize,
+    sizes: &[u64],
+) -> (DenseMatrix, Vec<f32>) {
+    comm.set_phase("spmm");
+    let m = solver.dim();
+    // Local per-cluster sums of C rows (k×m), then one Allreduce.
+    let mut b_part = vec![0.0f32; k * m];
+    for (j, &a) in assign.iter().enumerate() {
+        let row = c_block.row(j);
+        let acc = &mut b_part[a as usize * m..(a as usize + 1) * m];
+        for (s, v) in acc.iter_mut().zip(row) {
+            *s += v;
+        }
+    }
+    let b = comm.allreduce_sum_f32(world, b_part);
+
+    // α (k×m): replicated ridge solve in f64.
+    let mut alpha_t = DenseMatrix::zeros(m, k); // αᵀ, for the E GEMM
+    let mut alpha = vec![0.0f64; k * m];
+    for a in 0..k {
+        if sizes[a] == 0 {
+            continue;
+        }
+        let inv = 1.0 / sizes[a] as f64;
+        let rhs: Vec<f64> = b[a * m..(a + 1) * m].iter().map(|&v| v as f64 * inv).collect();
+        let x = solver.solve(&rhs);
+        for t in 0..m {
+            alpha_t.set(t, a, x[t] as f32);
+            alpha[a * m + t] = x[t];
+        }
+    }
+
+    // E = C·αᵀ through the backend GEMM.
+    let mut e = DenseMatrix::zeros(c_block.rows(), k);
+    backend.matmul_nn_acc(c_block, &alpha_t, &mut e);
+
+    // c_a = α_aᵀ W α_a in f64 (identical on every rank).
+    let mut cvec = vec![0.0f32; k];
+    for a in 0..k {
+        let al = &alpha[a * m..(a + 1) * m];
+        let mut s = 0.0f64;
+        for t in 0..m {
+            let mut row = 0.0f64;
+            for u in 0..m {
+                row += w.get(t, u) as f64 * al[u];
+            }
+            s += al[t] * row;
+        }
+        cvec[a] = s as f32;
+    }
+    (e, cvec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let ds = synth::gaussian_blobs(40, 3, 2, 3.0, 5);
+        // m < k.
+        let cfg = ApproxConfig { k: 4, m: 2, ..Default::default() };
+        assert!(matches!(fit(1, &ds.points, &cfg), Err(VivaldiError::InvalidConfig(_))));
+        // m > n.
+        let cfg = ApproxConfig { k: 2, m: 41, ..Default::default() };
+        assert!(matches!(fit(1, &ds.points, &cfg), Err(VivaldiError::InvalidConfig(_))));
+        // n < k.
+        let cfg = ApproxConfig { k: 64, m: 64, ..Default::default() };
+        assert!(matches!(fit(1, &ds.points, &cfg), Err(VivaldiError::InvalidConfig(_))));
+    }
+
+    #[test]
+    fn converges_on_separable_blobs() {
+        let ds = synth::gaussian_blobs(120, 4, 3, 5.0, 11);
+        let cfg = ApproxConfig { k: 3, m: 24, max_iters: 50, ..Default::default() };
+        let out = fit(4, &ds.points, &cfg).unwrap();
+        assert!(out.converged, "should converge on well-separated blobs");
+        let nmi = crate::quality::nmi(&out.assignments, &ds.labels, 3);
+        assert!(nmi > 0.9, "nmi = {nmi}");
+        assert_eq!(*out.changes_curve.last().unwrap(), 0);
+    }
+
+    #[test]
+    fn update_comm_is_reduced_rank() {
+        // The approximate loop's per-iteration volume is O(k·m) words —
+        // independent of n. Doubling n must not change the spmm-phase
+        // bytes per iteration (same p, same m, fixed iters).
+        let cfg = ApproxConfig {
+            k: 4,
+            m: 32,
+            max_iters: 3,
+            converge_on_stable: false,
+            ..Default::default()
+        };
+        let mut vols = Vec::new();
+        for n in [128usize, 256] {
+            let ds = synth::gaussian_blobs(n, 4, 4, 4.0, 13);
+            let out = fit(4, &ds.points, &cfg).unwrap();
+            let spmm: u64 = out.comm_stats.iter().map(|s| s.get("spmm").bytes).sum();
+            vols.push(spmm);
+        }
+        assert_eq!(vols[0], vols[1], "reduced-rank update volume must not scale with n");
+    }
+
+    #[test]
+    fn oom_surfaces_collectively() {
+        let ds = synth::gaussian_blobs(256, 8, 4, 4.0, 17);
+        let cfg = ApproxConfig {
+            k: 4,
+            m: 64,
+            mem: Some(crate::config::MemModel {
+                budget: 1024,
+                repl_factor: 1.0,
+                redist_factor: 0.0,
+            }),
+            ..Default::default()
+        };
+        assert!(matches!(fit(4, &ds.points, &cfg), Err(VivaldiError::OutOfMemory { .. })));
+    }
+}

@@ -1,0 +1,236 @@
+//! Single-rank reference for landmark-approximate Kernel K-means.
+//!
+//! Deliberately independent of the distributed code paths: the
+//! rectangular kernels are computed entry-by-entry in f64, the ridge
+//! Cholesky runs on the f64 `W` directly, and the loop is a plain
+//! serial rendition of the reduced-rank update. Every distributed
+//! `approx::fit` configuration is tested against this.
+
+use crate::dense::DenseMatrix;
+use crate::kernelfn::KernelFn;
+
+/// Reference fit output (mirrors [`crate::kkmeans::oracle::OracleResult`]).
+#[derive(Debug, Clone)]
+pub struct ApproxOracleResult {
+    pub assignments: Vec<u32>,
+    pub iterations: usize,
+    pub converged: bool,
+    pub objective_curve: Vec<f64>,
+}
+
+/// Run the reference landmark algorithm on explicit landmark indices
+/// (round-robin init, lower-index tie-break, stop on stability).
+pub fn reference_fit(
+    points: &DenseMatrix,
+    landmark_idx: &[usize],
+    k: usize,
+    kernel: &KernelFn,
+    max_iters: usize,
+) -> ApproxOracleResult {
+    let n = points.rows();
+    let m = landmark_idx.len();
+    assert!(k >= 1 && n >= k && m >= 1);
+
+    // C (n×m) and W (m×m) entry-by-entry. The Gram value is computed in
+    // f32 (matching on-device arithmetic) before the kernel function,
+    // then carried in f64.
+    let kval = |a: usize, b: usize| -> f64 {
+        let ra = points.row(a);
+        let rb = points.row(b);
+        let mut dot = 0.0f32;
+        let mut na = 0.0f32;
+        let mut nb = 0.0f32;
+        for (x, y) in ra.iter().zip(rb) {
+            dot += x * y;
+            na += x * x;
+            nb += y * y;
+        }
+        kernel.apply(dot, na, nb) as f64
+    };
+    let mut c = vec![0.0f64; n * m];
+    for j in 0..n {
+        for (t, &l) in landmark_idx.iter().enumerate() {
+            c[j * m + t] = kval(j, l);
+        }
+    }
+    let mut w = vec![0.0f64; m * m];
+    for (a, &la) in landmark_idx.iter().enumerate() {
+        for (b, &lb) in landmark_idx.iter().enumerate() {
+            w[a * m + b] = kval(la, lb);
+        }
+    }
+
+    // Ridge Cholesky on the f64 W, same deterministic escalation as the
+    // distributed solver.
+    let (chol, _ridge) = cholesky_escalate(&w, m);
+
+    let mut assign: Vec<u32> = (0..n).map(|x| (x % k) as u32).collect();
+    let mut objective_curve = Vec::new();
+    let mut converged = false;
+    let mut iterations = 0;
+
+    for _ in 0..max_iters {
+        let mut sizes = vec![0u64; k];
+        for &a in &assign {
+            sizes[a as usize] += 1;
+        }
+        // Per-cluster mean landmark profile c̄_a, then α_a.
+        let mut alpha = vec![0.0f64; k * m];
+        for a in 0..k {
+            if sizes[a] == 0 {
+                continue;
+            }
+            let mut rhs = vec![0.0f64; m];
+            for j in 0..n {
+                if assign[j] as usize == a {
+                    for t in 0..m {
+                        rhs[t] += c[j * m + t];
+                    }
+                }
+            }
+            for v in rhs.iter_mut() {
+                *v /= sizes[a] as f64;
+            }
+            let x = chol_solve(&chol, m, &rhs);
+            alpha[a * m..(a + 1) * m].copy_from_slice(&x);
+        }
+        // c_a = α_aᵀ W α_a.
+        let mut cc = vec![0.0f64; k];
+        for a in 0..k {
+            let al = &alpha[a * m..(a + 1) * m];
+            let mut s = 0.0;
+            for t in 0..m {
+                let mut row = 0.0;
+                for u in 0..m {
+                    row += w[t * m + u] * al[u];
+                }
+                s += al[t] * row;
+            }
+            cc[a] = s;
+        }
+        // D(j,a) = −2·(C α)_{j,a} + c_a, argmin with low-index ties.
+        let mut new_assign = vec![0u32; n];
+        let mut obj = 0.0f64;
+        for j in 0..n {
+            let mut best = 0usize;
+            let mut best_d = f64::INFINITY;
+            for a in 0..k {
+                let mut e = 0.0;
+                for t in 0..m {
+                    e += c[j * m + t] * alpha[a * m + t];
+                }
+                let d = -2.0 * e + cc[a];
+                if d < best_d {
+                    best_d = d;
+                    best = a;
+                }
+            }
+            new_assign[j] = best as u32;
+            obj += best_d;
+        }
+        let changes = assign.iter().zip(&new_assign).filter(|(a, b)| a != b).count();
+        assign = new_assign;
+        objective_curve.push(obj);
+        iterations += 1;
+        if changes == 0 {
+            converged = true;
+            break;
+        }
+    }
+
+    ApproxOracleResult { assignments: assign, iterations, converged, objective_curve }
+}
+
+/// f64 lower Cholesky of `w + λI` with the deterministic escalating
+/// ridge (λ₀ = 1e-8·tr/m, ×10 until positive-definite).
+fn cholesky_escalate(w: &[f64], m: usize) -> (Vec<f64>, f64) {
+    let trace: f64 = (0..m).map(|i| w[i * m + i]).sum();
+    let base = (trace / m as f64).abs().max(1e-12);
+    let mut ridge = 1e-8 * base;
+    for _ in 0..24 {
+        if let Some(l) = try_chol(w, m, ridge) {
+            return (l, ridge);
+        }
+        ridge *= 10.0;
+    }
+    panic!("oracle: cholesky never stabilized");
+}
+
+fn try_chol(w: &[f64], m: usize, ridge: f64) -> Option<Vec<f64>> {
+    let mut l = vec![0.0f64; m * m];
+    for i in 0..m {
+        for j in 0..=i {
+            let mut s = w[i * m + j] + if i == j { ridge } else { 0.0 };
+            for t in 0..j {
+                s -= l[i * m + t] * l[j * m + t];
+            }
+            if i == j {
+                if s <= 0.0 || !s.is_finite() {
+                    return None;
+                }
+                l[i * m + i] = s.sqrt();
+            } else {
+                l[i * m + j] = s / l[j * m + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+fn chol_solve(l: &[f64], m: usize, rhs: &[f64]) -> Vec<f64> {
+    let mut y = vec![0.0f64; m];
+    for i in 0..m {
+        let mut s = rhs[i];
+        for j in 0..i {
+            s -= l[i * m + j] * y[j];
+        }
+        y[i] = s / l[i * m + i];
+    }
+    let mut x = vec![0.0f64; m];
+    for i in (0..m).rev() {
+        let mut s = y[i];
+        for j in i + 1..m {
+            s -= l[j * m + i] * x[j];
+        }
+        x[i] = s / l[i * m + i];
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::landmarks::{sample_landmarks, LandmarkSeeding};
+    use crate::data::synth;
+
+    #[test]
+    fn recovers_blobs_with_few_landmarks() {
+        let ds = synth::gaussian_blobs(120, 4, 3, 4.5, 71);
+        let idx = sample_landmarks(&ds.points, 24, 1, LandmarkSeeding::Uniform, 7);
+        let out = reference_fit(&ds.points, &idx, 3, &KernelFn::paper_polynomial(), 40);
+        assert!(out.converged);
+        let nmi = crate::quality::nmi(&out.assignments, &ds.labels, 3);
+        assert!(nmi > 0.9, "nmi={nmi}");
+    }
+
+    #[test]
+    fn separates_rings_with_gaussian_kernel() {
+        let ds = synth::concentric_rings(160, 2, 72);
+        let idx = sample_landmarks(&ds.points, 20, 1, LandmarkSeeding::Uniform, 8);
+        let out = reference_fit(&ds.points, &idx, 2, &KernelFn::gaussian(2.0), 40);
+        let nmi = crate::quality::nmi(&out.assignments, &ds.labels, 2);
+        assert!(nmi > 0.9, "nmi={nmi}");
+    }
+
+    #[test]
+    fn all_points_as_landmarks_matches_exact_oracle() {
+        // m = n makes the landmark subspace the full span: assignments
+        // must agree with the exact oracle on separated data.
+        let ds = synth::gaussian_blobs(60, 3, 3, 4.0, 73);
+        let idx: Vec<usize> = (0..60).collect();
+        let approx = reference_fit(&ds.points, &idx, 3, &KernelFn::linear(), 40);
+        let exact =
+            crate::kkmeans::oracle::reference_fit(&ds.points, 3, &KernelFn::linear(), 40);
+        assert_eq!(approx.assignments, exact.assignments);
+    }
+}

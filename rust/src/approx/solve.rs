@@ -1,0 +1,159 @@
+//! Small dense SPD factorization for the reduced-rank cluster update.
+//!
+//! The landmark update solves `(W + λI) α_a = c̄_a` for every cluster,
+//! where `W = κ(L, L)` is m×m with m ≪ n. `W` can be numerically
+//! rank-deficient (a linear kernel has rank ≤ d; polynomial kernels are
+//! often ill-conditioned in f32), so the factorization is a **ridge-
+//! regularized f64 Cholesky with deterministic escalation**: start from
+//! λ = 1e-8·tr(W)/m and multiply by 10 until the factorization
+//! succeeds. Everything is deterministic and rank-replicated — every
+//! rank factors the same W and obtains bit-identical coefficients.
+
+use crate::dense::DenseMatrix;
+
+/// Cholesky factor of `W + λI` (f64), reused across iterations: `W` is
+/// fixed for a whole fit, only the right-hand sides change.
+#[derive(Debug, Clone)]
+pub struct SpdSolver {
+    /// Lower-triangular factor, row-major m×m.
+    l: Vec<f64>,
+    m: usize,
+    /// The ridge that made the factorization succeed.
+    pub ridge: f64,
+}
+
+impl SpdSolver {
+    /// Factor `w + λI` with the escalating deterministic ridge.
+    ///
+    /// Panics only if no ridge up to ~1e12·tr(W)/m works, which cannot
+    /// happen for finite symmetric input (the matrix becomes diagonally
+    /// dominant long before that).
+    pub fn factor(w: &DenseMatrix) -> SpdSolver {
+        let m = w.rows();
+        assert_eq!(w.cols(), m, "SpdSolver: square matrix required");
+        assert!(m >= 1);
+        let trace: f64 = (0..m).map(|i| w.get(i, i) as f64).sum();
+        let base = (trace / m as f64).abs().max(1e-12);
+        let mut ridge = 1e-8 * base;
+        for _ in 0..24 {
+            if let Some(l) = try_cholesky(w, ridge) {
+                return SpdSolver { l, m, ridge };
+            }
+            ridge *= 10.0;
+        }
+        panic!("SpdSolver: no ridge stabilized the {m}x{m} factorization");
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.m
+    }
+
+    /// Solve `(W + λI) x = rhs` via forward/back substitution.
+    pub fn solve(&self, rhs: &[f64]) -> Vec<f64> {
+        let m = self.m;
+        assert_eq!(rhs.len(), m);
+        // Forward: L y = rhs.
+        let mut y = vec![0.0f64; m];
+        for i in 0..m {
+            let mut s = rhs[i];
+            for j in 0..i {
+                s -= self.l[i * m + j] * y[j];
+            }
+            y[i] = s / self.l[i * m + i];
+        }
+        // Backward: Lᵀ x = y.
+        let mut x = vec![0.0f64; m];
+        for i in (0..m).rev() {
+            let mut s = y[i];
+            for j in i + 1..m {
+                s -= self.l[j * m + i] * x[j];
+            }
+            x[i] = s / self.l[i * m + i];
+        }
+        x
+    }
+}
+
+/// Plain lower Cholesky of `w + ridge·I` in f64; `None` on a
+/// non-positive or non-finite pivot.
+fn try_cholesky(w: &DenseMatrix, ridge: f64) -> Option<Vec<f64>> {
+    let m = w.rows();
+    let mut l = vec![0.0f64; m * m];
+    for i in 0..m {
+        for j in 0..=i {
+            let mut s = w.get(i, j) as f64;
+            if i == j {
+                s += ridge;
+            }
+            for t in 0..j {
+                s -= l[i * m + t] * l[j * m + t];
+            }
+            if i == j {
+                if s <= 0.0 || !s.is_finite() {
+                    return None;
+                }
+                l[i * m + i] = s.sqrt();
+            } else {
+                l[i * m + j] = s / l[j * m + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn solves_well_conditioned_spd() {
+        // W = A·Aᵀ + I is SPD; check W x ≈ b after solving.
+        let mut rng = Rng::new(1);
+        let m = 12;
+        let a = DenseMatrix::random(m, m, &mut rng);
+        let mut w = crate::dense::ops::matmul_nt(&a, &a);
+        for i in 0..m {
+            w.set(i, i, w.get(i, i) + 1.0);
+        }
+        let solver = SpdSolver::factor(&w);
+        let b: Vec<f64> = (0..m).map(|i| (i as f64) - 3.0).collect();
+        let x = solver.solve(&b);
+        for i in 0..m {
+            let wx: f64 = (0..m).map(|j| w.get(i, j) as f64 * x[j]).sum();
+            assert!((wx - b[i]).abs() < 1e-4, "row {i}: {wx} vs {}", b[i]);
+        }
+    }
+
+    #[test]
+    fn rank_deficient_gets_ridge() {
+        // Rank-1 matrix: plain Cholesky fails, ridge must kick in.
+        let m = 6;
+        let v: Vec<f32> = (0..m).map(|i| (i + 1) as f32).collect();
+        let w = DenseMatrix::from_fn(m, m, |i, j| v[i] * v[j]);
+        let solver = SpdSolver::factor(&w);
+        assert!(solver.ridge > 0.0);
+        let x = solver.solve(&vec![1.0; m]);
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn zero_matrix_solvable() {
+        let w = DenseMatrix::zeros(4, 4);
+        let solver = SpdSolver::factor(&w);
+        let x = solver.solve(&[1.0, 2.0, 3.0, 4.0]);
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut rng = Rng::new(2);
+        let a = DenseMatrix::random(8, 8, &mut rng);
+        let w = crate::dense::ops::matmul_nt(&a, &a);
+        let s1 = SpdSolver::factor(&w);
+        let s2 = SpdSolver::factor(&w);
+        assert_eq!(s1.ridge, s2.ridge);
+        assert_eq!(s1.solve(&[1.0; 8]), s2.solve(&[1.0; 8]));
+    }
+}

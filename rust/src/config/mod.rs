@@ -72,6 +72,61 @@ impl MemModel {
     }
 }
 
+/// Per-rank footprint comparison of the exact (full-Gram 1.5D) path and
+/// the landmark-approximate path under a device-memory model — the
+/// planning report for "which path can run this workload at all".
+#[derive(Debug, Clone, Copy)]
+pub struct Feasibility {
+    pub n: usize,
+    pub d: usize,
+    pub m: usize,
+    pub p: usize,
+    /// Per-rank bytes of the exact 1.5D path's resident state (the
+    /// SUMMA K tile plus its round buffers — the same charge
+    /// [`crate::gemm::summa_gram`] registers).
+    pub exact_bytes_per_rank: u64,
+    /// Per-rank bytes of the landmark path's resident state (C block
+    /// row + W + replicated L — the charge
+    /// [`crate::gemm::gemm_1d_landmark_gram`] registers).
+    pub landmark_bytes_per_rank: u64,
+    pub budget: u64,
+    pub exact_fits: bool,
+    pub landmark_fits: bool,
+}
+
+impl Feasibility {
+    /// True exactly when the landmark path opens a workload the exact
+    /// path cannot hold.
+    pub fn recommends_landmark(&self) -> bool {
+        !self.exact_fits && self.landmark_fits
+    }
+}
+
+/// Evaluate [`Feasibility`] for an (n, d) workload with m landmarks on
+/// p ranks under `mem`. For non-square p the exact estimate uses the
+/// next square grid side ⌈√p⌉ (the grid algorithms require square P).
+pub fn landmark_feasibility(n: usize, d: usize, m: usize, p: usize, mem: &MemModel) -> Feasibility {
+    use crate::util::ceil_div;
+    let q = (p as f64).sqrt().ceil() as usize;
+    let tile = ceil_div(n, q.max(1));
+    let feat = ceil_div(d, q.max(1));
+    let exact = 4 * (tile as u64 * tile as u64 + 2 * tile as u64 * feat as u64);
+    let n_p = ceil_div(n, p.max(1));
+    let landmark =
+        4 * (n_p as u64 * m as u64 + m as u64 * m as u64 + m as u64 * d as u64);
+    Feasibility {
+        n,
+        d,
+        m,
+        p,
+        exact_bytes_per_rank: exact,
+        landmark_bytes_per_rank: landmark,
+        budget: mem.budget,
+        exact_fits: exact <= mem.budget,
+        landmark_fits: landmark <= mem.budget,
+    }
+}
+
 /// Scaled-down experiment scale (paper values in comments).
 #[derive(Debug, Clone)]
 pub struct Scale {
@@ -235,6 +290,27 @@ mod tests {
         let h1d = |q: f64| (2.0 + MemModel::NU_REDIST * q) * k_rank;
         assert!(h1d(4.0) <= kdd.budget as f64, "H-1D G=16 must fit");
         assert!(h1d(8.0) > kdd.budget as f64, "H-1D G=64 must OOM");
+    }
+
+    #[test]
+    fn landmark_feasibility_separates_paths() {
+        // A 4096-point workload on 4 ranks with a 4 MiB budget: the
+        // exact 1.5D tile (n/2)² is 16 MiB and cannot fit; the m = 512
+        // landmark state (n/4·m + m² + m·d floats ≈ 3.1 MiB) can.
+        let mem = MemModel { budget: 4 << 20, repl_factor: 1.0, redist_factor: 0.0 };
+        let f = landmark_feasibility(4096, 2, 512, 4, &mem);
+        assert!(!f.exact_fits, "exact tile {} must exceed {}", f.exact_bytes_per_rank, f.budget);
+        assert!(f.landmark_fits, "landmark state {} must fit", f.landmark_bytes_per_rank);
+        assert!(f.recommends_landmark());
+        // With a huge budget both fit and the landmark path is not
+        // specifically recommended.
+        let big = MemModel { budget: u64::MAX, repl_factor: 1.0, redist_factor: 0.0 };
+        let f2 = landmark_feasibility(4096, 2, 512, 4, &big);
+        assert!(f2.exact_fits && f2.landmark_fits && !f2.recommends_landmark());
+        // Tiny budget: nothing fits.
+        let tiny = MemModel { budget: 1024, repl_factor: 1.0, redist_factor: 0.0 };
+        let f3 = landmark_feasibility(4096, 2, 512, 4, &tiny);
+        assert!(!f3.exact_fits && !f3.landmark_fits && !f3.recommends_landmark());
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! Deterministic landmark sampling for the approximate (Nyström-style)
+//! Kernel K-means path ([`crate::approx`]).
+//!
+//! Two strategies, both deterministic per seed (they draw only from the
+//! crate's own [`Rng`]) and both returning a **sorted, duplicate-free**
+//! index set:
+//!
+//! * [`LandmarkSeeding::Uniform`] — stratified uniform sampling over the
+//!   1D `p`-way point partition: rank block `r` contributes exactly
+//!   `part::len(m, p, r)` landmarks drawn uniformly from its own point
+//!   range. This makes landmark ownership **exactly balanced** across
+//!   ranks (the invariant the property tests pin down) and degenerates
+//!   to plain uniform sampling at `p = 1`.
+//! * [`LandmarkSeeding::KmeansPP`] — global k-means++ (D²) seeding in
+//!   input space, the spread-out initialization of Chitta et al.'s
+//!   approximate kernel k-means. No ownership-balance guarantee.
+
+use crate::dense::DenseMatrix;
+use crate::util::{part, rng::Rng};
+
+/// Landmark selection strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LandmarkSeeding {
+    /// Stratified uniform over the `p`-way 1D partition.
+    Uniform,
+    /// Global k-means++ (D²) seeding in input space.
+    KmeansPP,
+}
+
+impl LandmarkSeeding {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LandmarkSeeding::Uniform => "uniform",
+            LandmarkSeeding::KmeansPP => "kmeans++",
+        }
+    }
+}
+
+/// Sample `m` distinct landmark indices from `points` for a `p`-rank 1D
+/// layout. Deterministic per (strategy, seed, n, m, p); output sorted
+/// ascending.
+pub fn sample_landmarks(
+    points: &DenseMatrix,
+    m: usize,
+    p: usize,
+    seeding: LandmarkSeeding,
+    seed: u64,
+) -> Vec<usize> {
+    let n = points.rows();
+    assert!(m >= 1 && m <= n, "need 1 <= m <= n (m={m}, n={n})");
+    assert!(p >= 1);
+    let mut idx = match seeding {
+        LandmarkSeeding::Uniform => stratified_uniform(n, m, p, seed),
+        LandmarkSeeding::KmeansPP => kmeanspp(points, m, seed),
+    };
+    idx.sort_unstable();
+    debug_assert!(idx.windows(2).all(|w| w[0] < w[1]), "duplicate landmark");
+    idx
+}
+
+/// Rank block `r` contributes `part::len(m, p, r)` indices drawn from
+/// its own point range `part::bounds(n, p, r)` without replacement.
+fn stratified_uniform(n: usize, m: usize, p: usize, seed: u64) -> Vec<usize> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(m);
+    for r in 0..p {
+        let quota = part::len(m, p, r);
+        let (lo, hi) = part::bounds(n, p, r);
+        assert!(
+            quota <= hi - lo,
+            "rank {r}: quota {quota} exceeds block size {} (m too large for p)",
+            hi - lo
+        );
+        let local = rng.sample_indices(hi - lo, quota);
+        out.extend(local.into_iter().map(|x| lo + x));
+    }
+    out
+}
+
+/// Greedy D² sampling: first landmark uniform, then each next landmark
+/// drawn with probability proportional to its squared distance to the
+/// nearest already-chosen landmark. Chosen points have distance 0 and
+/// can never repeat; fully degenerate data falls back to the first
+/// unchosen index so the result is always duplicate-free.
+fn kmeanspp(points: &DenseMatrix, m: usize, seed: u64) -> Vec<usize> {
+    let n = points.rows();
+    let mut rng = Rng::new(seed);
+    let mut chosen = vec![false; n];
+    let mut out = Vec::with_capacity(m);
+    let first = rng.below(n);
+    chosen[first] = true;
+    out.push(first);
+    let mut d2: Vec<f64> = (0..n).map(|j| sq_dist(points, j, first)).collect();
+    while out.len() < m {
+        let total: f64 = d2.iter().sum();
+        let next = if total > 0.0 && total.is_finite() {
+            let target = rng.next_f64() * total;
+            let mut cum = 0.0;
+            let mut pick = None;
+            for (j, &w) in d2.iter().enumerate() {
+                cum += w;
+                if cum > target && !chosen[j] {
+                    pick = Some(j);
+                    break;
+                }
+            }
+            pick.unwrap_or_else(|| first_unchosen(&chosen))
+        } else {
+            first_unchosen(&chosen)
+        };
+        chosen[next] = true;
+        d2[next] = 0.0;
+        out.push(next);
+        for j in 0..n {
+            if !chosen[j] {
+                let d = sq_dist(points, j, next);
+                if d < d2[j] {
+                    d2[j] = d;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn first_unchosen(chosen: &[bool]) -> usize {
+    chosen.iter().position(|&c| !c).expect("m <= n guarantees a free index")
+}
+
+fn sq_dist(points: &DenseMatrix, a: usize, b: usize) -> f64 {
+    points
+        .row(a)
+        .iter()
+        .zip(points.row(b))
+        .map(|(x, y)| {
+            let t = (x - y) as f64;
+            t * t
+        })
+        .sum()
+}
+
+/// Gather the landmark rows into an `m × d` matrix (experiment setup /
+/// oracle use; the distributed path assembles the same matrix with an
+/// allgather of per-rank slices).
+pub fn landmark_rows(points: &DenseMatrix, idx: &[usize]) -> DenseMatrix {
+    let d = points.cols();
+    let mut out = DenseMatrix::zeros(idx.len(), d);
+    for (t, &j) in idx.iter().enumerate() {
+        out.row_mut(t).copy_from_slice(points.row(j));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pts(n: usize, d: usize, seed: u64) -> DenseMatrix {
+        let mut rng = Rng::new(seed);
+        DenseMatrix::random(n, d, &mut rng)
+    }
+
+    #[test]
+    fn uniform_is_deterministic_sorted_distinct() {
+        let points = pts(200, 3, 1);
+        let a = sample_landmarks(&points, 40, 4, LandmarkSeeding::Uniform, 7);
+        let b = sample_landmarks(&points, 40, 4, LandmarkSeeding::Uniform, 7);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0] < w[1]));
+        assert!(a.iter().all(|&i| i < 200));
+        let c = sample_landmarks(&points, 40, 4, LandmarkSeeding::Uniform, 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn uniform_partitions_evenly() {
+        let points = pts(203, 2, 2);
+        for p in [1usize, 4, 9, 16] {
+            let idx = sample_landmarks(&points, 37, p, LandmarkSeeding::Uniform, 11);
+            for r in 0..p {
+                let (lo, hi) = part::bounds(203, p, r);
+                let owned = idx.iter().filter(|&&i| i >= lo && i < hi).count();
+                assert_eq!(owned, part::len(37, p, r), "p={p} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn kmeanspp_spreads_and_is_distinct() {
+        let points = pts(150, 2, 3);
+        let a = sample_landmarks(&points, 30, 1, LandmarkSeeding::KmeansPP, 5);
+        let b = sample_landmarks(&points, 30, 1, LandmarkSeeding::KmeansPP, 5);
+        assert_eq!(a, b);
+        let mut u = a.clone();
+        u.dedup();
+        assert_eq!(u.len(), 30);
+    }
+
+    #[test]
+    fn kmeanspp_handles_degenerate_data() {
+        // All points identical: D² mass is zero after the first pick.
+        let points = DenseMatrix::zeros(10, 2);
+        let idx = sample_landmarks(&points, 5, 1, LandmarkSeeding::KmeansPP, 9);
+        assert_eq!(idx.len(), 5);
+        let mut u = idx.clone();
+        u.dedup();
+        assert_eq!(u.len(), 5);
+    }
+
+    #[test]
+    fn m_equals_n_takes_everything() {
+        let points = pts(12, 2, 4);
+        let idx = sample_landmarks(&points, 12, 3, LandmarkSeeding::Uniform, 1);
+        assert_eq!(idx, (0..12).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn landmark_rows_extracts() {
+        let points = DenseMatrix::from_fn(5, 2, |i, j| (i * 10 + j) as f32);
+        let rows = landmark_rows(&points, &[1, 4]);
+        assert_eq!(rows.row(0), &[10.0, 11.0]);
+        assert_eq!(rows.row(1), &[40.0, 41.0]);
+    }
+}

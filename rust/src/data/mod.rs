@@ -12,6 +12,7 @@
 
 pub mod synth;
 pub mod datasets;
+pub mod landmarks;
 pub mod libsvm;
 
 use crate::dense::DenseMatrix;

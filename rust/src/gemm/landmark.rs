@@ -1,0 +1,217 @@
+//! Rectangular n×m landmark Gram pipeline for the approximate path.
+//!
+//! Instead of the full n×n kernel matrix, the landmark algorithm only
+//! needs the rectangular cross-kernel `C = κ(P, L)` (n × m) and the
+//! small landmark kernel `W = κ(L, L)` (m × m), shrinking the Gram
+//! footprint from O(n²) to O(n·m + m²) — the Chitta et al. scaling
+//! observation that opens datasets whose exact Gram exceeds aggregate
+//! device memory.
+//!
+//! Distribution follows the 1D GEMM pattern ([`super::onedim`]): points
+//! are 1D row blocks; each rank contributes the landmark rows it owns,
+//! an Allgather(v) replicates the tiny `L` (O(m·d) words — compare the
+//! 1D algorithm's O(n·d) point replication), and each rank computes its
+//! C block row plus its own replicated copy of `W` locally through the
+//! same fused [`ComputeBackend::gram_tile`] the exact path uses.
+
+use crate::backend::ComputeBackend;
+use crate::comm::{Comm, Group};
+use crate::dense::DenseMatrix;
+use crate::kernelfn::KernelFn;
+use crate::model::MemTracker;
+use crate::VivaldiError;
+
+/// Compute this rank's block row of `C = κ(P, L)` plus the replicated
+/// `W = κ(L, L)`.
+///
+/// `local_points`: this rank's (n_p × d) slice of P (1D row blocks in
+/// rank order). `local_landmarks`: the landmark rows this rank owns, in
+/// ascending global landmark order (ranks own the landmarks falling in
+/// their point range, so the allgather concatenation reassembles L in
+/// landmark order).
+///
+/// Registers the replicated L, the C block row, and W against
+/// `tracker`; failure is collective (AND-allreduce), mirroring
+/// [`super::onedim::gemm_1d_gram`].
+pub fn gemm_1d_landmark_gram(
+    comm: &Comm,
+    world: &Group,
+    local_points: &DenseMatrix,
+    local_landmarks: &DenseMatrix,
+    kernel: &KernelFn,
+    backend: &dyn ComputeBackend,
+    tracker: &MemTracker,
+) -> Result<(DenseMatrix, DenseMatrix), VivaldiError> {
+    comm.set_phase("gemm");
+    let d = local_points.cols();
+    let n_p = local_points.rows();
+    assert!(
+        local_landmarks.rows() == 0 || local_landmarks.cols() == d,
+        "landmark feature dim mismatch"
+    );
+
+    // Collective memory check: replicated L + C block row + W.
+    let m_total: u64 = {
+        let counts = comm.allreduce_sum_u64(world, vec![local_landmarks.rows() as u64]);
+        counts[0]
+    };
+    let m = m_total as usize;
+    let need = MemTracker::matrix_f32(m, d)
+        + MemTracker::matrix_f32(n_p, m)
+        + MemTracker::matrix_f32(m, m);
+    let ok = tracker.try_alloc(need, "landmark GEMM: replicated L + C block + W");
+    if !comm.allreduce_and(world, ok) {
+        if ok {
+            tracker.free(need);
+        }
+        return Err(VivaldiError::OutOfMemory {
+            rank: comm.rank(),
+            requested: need,
+            budget: tracker.budget(),
+            what: "landmark GEMM: replicated L + C block + W".into(),
+        });
+    }
+
+    // Allgather(v) of the owned landmark rows: O(m·d) words.
+    let l_data = comm.allgather_concat(world, local_landmarks.data().to_vec());
+    let landmarks = DenseMatrix::from_vec(m, d, l_data);
+
+    // Norms only for distance kernels.
+    let (row_norms, l_norms) = if kernel.needs_norms() {
+        (local_points.row_sq_norms(), landmarks.row_sq_norms())
+    } else {
+        (Vec::new(), Vec::new())
+    };
+
+    let c_block = backend.gram_tile(local_points, &landmarks, kernel, &row_norms, &l_norms);
+    let w = backend.gram_tile(&landmarks, &landmarks, kernel, &l_norms, &l_norms);
+    // The replicated L is released after both Gram products; C and W
+    // stay resident for the clustering loop.
+    tracker.free(MemTracker::matrix_f32(m, d));
+    Ok((c_block, w))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::comm::World;
+    use crate::data::landmarks::{landmark_rows, sample_landmarks, LandmarkSeeding};
+    use crate::util::{part, rng::Rng};
+
+    fn oracle_c(points: &DenseMatrix, lms: &DenseMatrix, kernel: &KernelFn) -> DenseMatrix {
+        let be = NativeBackend::new();
+        let pn = points.row_sq_norms();
+        let ln = lms.row_sq_norms();
+        be.gram_tile(points, lms, kernel, &pn, &ln)
+    }
+
+    #[test]
+    fn matches_oracle_across_rank_counts() {
+        let mut rng = Rng::new(91);
+        let n = 53;
+        let d = 4;
+        let points = DenseMatrix::random(n, d, &mut rng);
+        for kernel in [KernelFn::linear(), KernelFn::paper_polynomial(), KernelFn::gaussian(0.5)]
+        {
+            for p in [1usize, 3, 4] {
+                let idx = sample_landmarks(&points, 12, p, LandmarkSeeding::Uniform, 5);
+                let lms = landmark_rows(&points, &idx);
+                let expect_c = oracle_c(&points, &lms, &kernel);
+                let expect_w = oracle_c(&lms, &lms, &kernel);
+                let pref = &points;
+                let iref = &idx;
+                let kref = &kernel;
+                let (results, _) = World::run(p, |comm| {
+                    let world = Group::world(p);
+                    let (lo, hi) = part::bounds(n, p, comm.rank());
+                    let local = pref.row_block(lo, hi);
+                    let own: Vec<usize> =
+                        iref.iter().copied().filter(|&i| i >= lo && i < hi).collect();
+                    let own_rows = landmark_rows(pref, &own);
+                    let be = NativeBackend::new();
+                    let tracker = MemTracker::unlimited(comm.rank());
+                    gemm_1d_landmark_gram(comm, &world, &local, &own_rows, kref, &be, &tracker)
+                        .unwrap()
+                });
+                let c_full = DenseMatrix::vstack(
+                    &results.iter().map(|(c, _)| c.clone()).collect::<Vec<_>>(),
+                );
+                assert!(c_full.max_abs_diff(&expect_c) < 1e-3, "kernel={kernel:?} p={p}");
+                for (_, w) in &results {
+                    assert!(w.max_abs_diff(&expect_w) < 1e-3, "kernel={kernel:?} p={p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn landmark_volume_beats_point_replication() {
+        // The selling point: the allgather moves O(m·d), not O(n·d).
+        let mut rng = Rng::new(92);
+        let n = 64;
+        let d = 16;
+        let m = 8;
+        let p = 4;
+        let points = DenseMatrix::random(n, d, &mut rng);
+        let idx = sample_landmarks(&points, m, p, LandmarkSeeding::Uniform, 3);
+        let pref = &points;
+        let iref = &idx;
+        let (_, stats) = World::run(p, |comm| {
+            let world = Group::world(p);
+            let (lo, hi) = part::bounds(n, p, comm.rank());
+            let local = pref.row_block(lo, hi);
+            let own: Vec<usize> = iref.iter().copied().filter(|&i| i >= lo && i < hi).collect();
+            let own_rows = crate::data::landmarks::landmark_rows(pref, &own);
+            let be = NativeBackend::new();
+            let tracker = MemTracker::unlimited(comm.rank());
+            gemm_1d_landmark_gram(
+                comm,
+                &world,
+                &local,
+                &own_rows,
+                &KernelFn::linear(),
+                &be,
+                &tracker,
+            )
+            .unwrap()
+        });
+        let total: u64 = stats.iter().map(|s| s.get("gemm").bytes).sum();
+        // Allgather of L ≈ (p-1)·m·d·4 plus small control messages —
+        // far below the 1D point replication (p-1)·n·d·4.
+        let point_repl = ((p - 1) * n * d * 4) as u64;
+        assert!(total < point_repl / 2, "total={total} vs point replication {point_repl}");
+    }
+
+    #[test]
+    fn collective_oom() {
+        let mut rng = Rng::new(93);
+        let n = 64;
+        let d = 8;
+        let points = DenseMatrix::random(n, d, &mut rng);
+        let idx = sample_landmarks(&points, 16, 2, LandmarkSeeding::Uniform, 3);
+        let pref = &points;
+        let iref = &idx;
+        let (results, _) = World::run(2, |comm| {
+            let world = Group::world(2);
+            let (lo, hi) = part::bounds(n, 2, comm.rank());
+            let local = pref.row_block(lo, hi);
+            let own: Vec<usize> = iref.iter().copied().filter(|&i| i >= lo && i < hi).collect();
+            let own_rows = crate::data::landmarks::landmark_rows(pref, &own);
+            let be = NativeBackend::new();
+            let tracker = MemTracker::new(comm.rank(), 256);
+            gemm_1d_landmark_gram(
+                comm,
+                &world,
+                &local,
+                &own_rows,
+                &KernelFn::linear(),
+                &be,
+                &tracker,
+            )
+        });
+        for r in results {
+            assert!(matches!(r, Err(VivaldiError::OutOfMemory { .. })));
+        }
+    }
+}

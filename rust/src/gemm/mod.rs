@@ -10,10 +10,12 @@
 //!   the α·O(P) + β·O(n²/P) step — Eq. (17) — that makes H-1D
 //!   uncompetitive.
 
+pub mod landmark;
 pub mod onedim;
 pub mod summa;
 pub mod redistribute;
 
+pub use landmark::gemm_1d_landmark_gram;
 pub use onedim::gemm_1d_gram;
 pub use redistribute::redistribute_2d_to_1d;
 pub use summa::{summa_gram, SummaPointTiles};

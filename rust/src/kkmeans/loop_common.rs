@@ -4,7 +4,11 @@
 //! mask → local SpMV → Allreduce c → fused distances+argmin → change
 //! count / cluster-size Allreduce. The 1D-layout variants (1D, H-1D,
 //! 1.5D) share [`local_update`] verbatim; the 2D algorithm has its own
-//! update path (MINLOC) in [`super::algo_2d`].
+//! update path (MINLOC) in [`super::algo_2d`]; the landmark-approximate
+//! loop ([`crate::approx`]) computes E and c through its reduced-rank
+//! coefficients and then reuses [`commit_assignment`] for the trailing
+//! change-count / objective / size collectives, so exact and
+//! approximate iterations stay behaviorally identical past the argmin.
 
 use crate::backend::ComputeBackend;
 use crate::comm::{Comm, Group};
@@ -42,6 +46,22 @@ pub fn local_update(
     let c = comm.allreduce_sum_f32(world, c_part);
     // Eq. 8 + argmin.
     let (new_assign, minvals) = backend.distances_argmin(e_local, &c);
+    commit_assignment(comm, world, assign, new_assign, &minvals, k)
+}
+
+/// The trailing, layout-independent part of every 1D-style update:
+/// count local changes, install the new assignment, and run the global
+/// change-count / objective / cluster-size collectives (in that fixed
+/// order — all callers must agree on the collective sequence).
+pub fn commit_assignment(
+    comm: &Comm,
+    world: &Group,
+    assign: &mut Vec<u32>,
+    new_assign: Vec<u32>,
+    minvals: &[f32],
+    k: usize,
+) -> (u64, f64, Vec<u64>) {
+    debug_assert_eq!(assign.len(), new_assign.len());
     let mut changes = 0u64;
     for (o, n) in assign.iter().zip(&new_assign) {
         if o != n {
@@ -50,7 +70,6 @@ pub fn local_update(
     }
     let obj_local: f64 = minvals.iter().map(|&v| v as f64).sum();
     *assign = new_assign;
-    // Global change count + objective + new sizes.
     let changes = comm.allreduce_sum_u64(world, vec![changes])[0];
     let obj = allreduce_sum_f64(comm, world, obj_local);
     let sizes = global_sizes(comm, world, assign, k);

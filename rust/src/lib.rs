@@ -40,6 +40,30 @@
 //! println!("converged after {} iters", out.iterations);
 //! ```
 //!
+//! ## When the exact Gram does not fit: the landmark path
+//!
+//! The exact algorithms distribute the full n×n kernel matrix; past the
+//! aggregate-memory limit ([`config::landmark_feasibility`] reports
+//! where that is) the [`approx`] subsystem clusters against m ≪ n
+//! landmark points instead, shrinking the Gram footprint from O(n²) to
+//! O(n·m) at a small, measured quality cost:
+//!
+//! ```no_run
+//! use vivaldi::approx::{self, ApproxConfig};
+//! use vivaldi::data::synth;
+//! use vivaldi::kernelfn::KernelFn;
+//!
+//! let ds = synth::concentric_rings(4096, 2, 42);
+//! let cfg = ApproxConfig {
+//!     k: 2,
+//!     m: 512, // n/8 landmarks
+//!     kernel: KernelFn::gaussian(2.0),
+//!     ..Default::default()
+//! };
+//! let out = approx::fit(4, &ds.points, &cfg).unwrap();
+//! println!("approximate fit: {} iters", out.iterations);
+//! ```
+//!
 //! See `DESIGN.md` for the full system inventory and the experiment
 //! index, and `EXPERIMENTS.md` for the paper-vs-measured record.
 
@@ -53,6 +77,7 @@ pub mod backend;
 pub mod gemm;
 pub mod spmm;
 pub mod kkmeans;
+pub mod approx;
 pub mod sliding_window;
 pub mod lloyd;
 pub mod data;
@@ -61,9 +86,6 @@ pub mod runtime;
 pub mod config;
 pub mod metrics;
 pub mod bench;
-
-/// Crate-wide result type (thin alias over `anyhow`).
-pub type Result<T> = anyhow::Result<T>;
 
 /// Errors surfaced by the coordinator.
 #[derive(Debug, Clone, PartialEq, Eq)]

@@ -6,6 +6,7 @@
 //! `PjRtClient::cpu()` — the analogue of one GPU with its own context.
 //! Ranks round-robin across services.
 
+#[cfg(feature = "xla")]
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -103,6 +104,21 @@ impl DeviceService {
     /// Spawn `n_devices` service threads, each compiling every artifact
     /// in the manifest. Returns once all threads finished compiling (or
     /// the first error).
+    ///
+    /// Built without the `xla` feature (the dependency-free default),
+    /// this reports the runtime as unavailable; callers fall back to
+    /// the native backend exactly as they do when artifacts are absent.
+    #[cfg(not(feature = "xla"))]
+    pub fn start(_manifest: &Manifest, _n_devices: usize) -> Result<DeviceService, String> {
+        Err("PJRT runtime unavailable: built without the `xla` feature \
+             (vendor the xla_extension bindings and enable it)"
+            .to_string())
+    }
+
+    /// Spawn `n_devices` service threads, each compiling every artifact
+    /// in the manifest. Returns once all threads finished compiling (or
+    /// the first error).
+    #[cfg(feature = "xla")]
     pub fn start(manifest: &Manifest, n_devices: usize) -> Result<DeviceService, String> {
         let n = n_devices.max(1);
         let mut senders = Vec::with_capacity(n);
@@ -213,6 +229,7 @@ pub fn fingerprint_f32(data: &[f32], shape: &[usize]) -> u64 {
     h
 }
 
+#[cfg(feature = "xla")]
 fn tensor_of(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostTensor, String> {
     match spec.dtype {
         Dtype::F32 => Ok(HostTensor::F32(
@@ -229,8 +246,10 @@ fn tensor_of(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostTensor, String
 /// xla_extension 0.5.1's CPU client is not safe to create/destroy
 /// concurrently from multiple threads in one process; all client
 /// lifecycle events serialize on this lock (execution is fine).
+#[cfg(feature = "xla")]
 static PJRT_LIFECYCLE: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
+#[cfg(feature = "xla")]
 fn service_main(
     manifest: Manifest,
     rx: mpsc::Receiver<Request>,

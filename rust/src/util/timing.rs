@@ -22,11 +22,25 @@ fn use_cpu_clock() -> bool {
 }
 
 /// Current thread's CPU time in seconds.
+///
+/// The dependency-free build has no `libc`, so on Linux this reads the
+/// calling thread's cumulative on-CPU nanoseconds from
+/// `/proc/thread-self/schedstat`; elsewhere (or when that file is
+/// unavailable) it falls back to a process-wide monotonic clock, which
+/// degrades the oversubscription immunity but keeps timings valid.
 pub fn thread_cpu_time() -> f64 {
-    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
-    // SAFETY: plain libc call writing into a local struct.
-    unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
-    ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+    if let Some(ns) = schedstat_cpu_ns() {
+        return ns as f64 * 1e-9;
+    }
+    static EPOCH: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+/// First field of /proc/thread-self/schedstat: ns spent on-CPU by this
+/// thread. `None` off Linux or when schedstats are compiled out.
+fn schedstat_cpu_ns() -> Option<u64> {
+    let text = std::fs::read_to_string("/proc/thread-self/schedstat").ok()?;
+    text.split_whitespace().next()?.parse::<u64>().ok()
 }
 
 /// Current time in seconds on the configured clock (for manual spans;

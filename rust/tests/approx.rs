@@ -1,0 +1,207 @@
+//! Landmark-approximate Kernel K-means: distributed fits vs the
+//! independent single-rank oracle, quality vs the exact-path oracle,
+//! and the feasibility story (exact OOMs, landmark fits).
+
+use vivaldi::approx::{self, oracle as approx_oracle, ApproxConfig};
+use vivaldi::config::{landmark_feasibility, MemModel};
+use vivaldi::data::landmarks::LandmarkSeeding;
+use vivaldi::data::synth;
+use vivaldi::kernelfn::KernelFn;
+use vivaldi::kkmeans::{self, oracle as exact_oracle, Algo, FitConfig};
+use vivaldi::quality::{ari, nmi};
+use vivaldi::VivaldiError;
+
+fn approx_cfg(k: usize, m: usize, kernel: KernelFn) -> ApproxConfig {
+    ApproxConfig { k, m, kernel, max_iters: 40, ..Default::default() }
+}
+
+/// The acceptance bar: `approx::fit` matches its single-rank oracle at
+/// p ∈ {1, 4, 9}. Both paths run the identical reduced-rank math over
+/// the identical landmark set; the distributed side accumulates in f32
+/// with a p-dependent allreduce order while the oracle sums in f64, so
+/// an isolated boundary point may flip — the match is asserted as
+/// at-most-one disagreeing point per configuration rather than
+/// bit-exactness across the float formats.
+#[test]
+fn matches_oracle_at_p_1_4_9() {
+    let kernel = KernelFn::paper_polynomial();
+    for seed in [201u64, 202] {
+        let ds = synth::gaussian_blobs(144, 5, 4, 4.5, seed);
+        for m in [16usize, 48] {
+            for p in [1usize, 4, 9] {
+                let cfg = approx_cfg(4, m, kernel);
+                let lidx = approx::landmark_indices(&ds.points, &cfg, p);
+                let want =
+                    approx_oracle::reference_fit(&ds.points, &lidx, 4, &kernel, 40);
+                assert!(want.converged, "oracle must converge (seed={seed} m={m} p={p})");
+                let out = approx::fit(p, &ds.points, &cfg).unwrap();
+                assert!(out.converged, "fit must converge (seed={seed} m={m} p={p})");
+                let diffs = out
+                    .assignments
+                    .iter()
+                    .zip(&want.assignments)
+                    .filter(|(a, b)| a != b)
+                    .count();
+                assert!(
+                    diffs <= 1,
+                    "seed={seed} m={m} p={p}: {diffs}/{} points disagree with the oracle",
+                    out.assignments.len()
+                );
+                let score = nmi(&out.assignments, &want.assignments, 4);
+                assert!(score >= 0.99, "seed={seed} m={m} p={p} nmi-vs-oracle={score}");
+            }
+        }
+    }
+}
+
+/// Quality bar from the issue: ≥ 0.9 NMI on concentric rings with
+/// m = n/8 landmarks (Gaussian kernel — the paper's motivating
+/// non-linearly-separable case).
+#[test]
+fn rings_nmi_with_eighth_landmarks() {
+    for seed in [211u64, 212, 213] {
+        let n = 256;
+        let ds = synth::concentric_rings(n, 2, seed);
+        let cfg = approx_cfg(2, n / 8, KernelFn::gaussian(2.0));
+        for p in [1usize, 4] {
+            let out = approx::fit(p, &ds.points, &cfg).unwrap();
+            let score = nmi(&out.assignments, &ds.labels, 2);
+            assert!(score >= 0.9, "seed={seed} p={p} nmi={score}");
+        }
+    }
+}
+
+/// Approximate fits must stay within tolerance of the *exact* oracle
+/// (the quality-vs-footprint tradeoff), across an m sweep and rank
+/// counts, on both geometries the quality module covers.
+#[test]
+fn quality_within_tolerance_of_exact_oracle() {
+    // Blobs with the polynomial kernel.
+    let ds = synth::gaussian_blobs(160, 4, 4, 4.5, 221);
+    let exact = exact_oracle::reference_fit(&ds.points, 4, &KernelFn::paper_polynomial(), 40);
+    for m in [16usize, 40, 80] {
+        for p in [1usize, 4] {
+            let cfg = approx_cfg(4, m, KernelFn::paper_polynomial());
+            let out = approx::fit(p, &ds.points, &cfg).unwrap();
+            let n_vs_exact = nmi(&out.assignments, &exact.assignments, 4);
+            let a_vs_exact = ari(&out.assignments, &exact.assignments, 4);
+            assert!(n_vs_exact >= 0.9, "blobs m={m} p={p} nmi={n_vs_exact}");
+            assert!(a_vs_exact >= 0.85, "blobs m={m} p={p} ari={a_vs_exact}");
+        }
+    }
+    // Rings with the Gaussian kernel.
+    let ds = synth::concentric_rings(240, 2, 222);
+    let exact = exact_oracle::reference_fit(&ds.points, 2, &KernelFn::gaussian(2.0), 40);
+    for m in [30usize, 60] {
+        let cfg = approx_cfg(2, m, KernelFn::gaussian(2.0));
+        let out = approx::fit(4, &ds.points, &cfg).unwrap();
+        let score = nmi(&out.assignments, &exact.assignments, 2);
+        assert!(score >= 0.9, "rings m={m} nmi={score}");
+    }
+}
+
+/// As m → n the landmark subspace becomes the full span: the
+/// approximate path must reach the exact oracle's fixed point (same
+/// one-boundary-point tolerance across the f32/f64 formats).
+#[test]
+fn full_landmark_set_matches_exact_oracle() {
+    let ds = synth::gaussian_blobs(80, 3, 3, 4.0, 231);
+    let kernel = KernelFn::linear();
+    let exact = exact_oracle::reference_fit(&ds.points, 3, &kernel, 40);
+    for p in [1usize, 4] {
+        let cfg = approx_cfg(3, 80, kernel);
+        let out = approx::fit(p, &ds.points, &cfg).unwrap();
+        let diffs = out
+            .assignments
+            .iter()
+            .zip(&exact.assignments)
+            .filter(|(a, b)| a != b)
+            .count();
+        assert!(diffs <= 1, "p={p}: {diffs}/80 points disagree with the exact oracle");
+    }
+}
+
+/// k-means++ seeding is deterministic end-to-end and clusters at least
+/// as well as uniform on spread-out blob data.
+#[test]
+fn kmeanspp_seeding_path() {
+    let ds = synth::gaussian_blobs(120, 4, 3, 4.5, 241);
+    let cfg = ApproxConfig {
+        k: 3,
+        m: 24,
+        seeding: LandmarkSeeding::KmeansPP,
+        kernel: KernelFn::paper_polynomial(),
+        max_iters: 40,
+        ..Default::default()
+    };
+    let a = approx::fit(4, &ds.points, &cfg).unwrap();
+    let b = approx::fit(4, &ds.points, &cfg).unwrap();
+    assert_eq!(a.assignments, b.assignments, "same config => same result");
+    // Quality vs the exact oracle (robust to however the generator's
+    // random centers happen to land relative to the labels).
+    let exact = exact_oracle::reference_fit(&ds.points, 3, &KernelFn::paper_polynomial(), 40);
+    let score = nmi(&a.assignments, &exact.assignments, 3);
+    assert!(score >= 0.9, "nmi-vs-exact={score}");
+}
+
+/// The feasibility report and the runtime agree: under a budget where
+/// the exact 1.5D path OOMs, the landmark path completes — the new
+/// workload class this subsystem opens.
+#[test]
+fn landmark_runs_where_exact_ooms() {
+    let n = 1024;
+    let ds = synth::concentric_rings(n, 2, 251);
+    let mem = MemModel { budget: 300 << 10, repl_factor: 1.0, redist_factor: 0.0 };
+    let m = n / 8;
+    let p = 4;
+
+    let feas = landmark_feasibility(n, ds.points.cols(), m, p, &mem);
+    assert!(feas.recommends_landmark(), "feasibility must separate the paths: {feas:?}");
+
+    // Exact 1.5D under the budget: collective OOM.
+    let exact_cfg = FitConfig {
+        k: 2,
+        max_iters: 20,
+        kernel: KernelFn::gaussian(2.0),
+        converge_on_stable: true,
+        mem: Some(mem),
+    };
+    assert!(matches!(
+        kkmeans::fit(Algo::OneFiveD, p, &ds.points, &exact_cfg),
+        Err(VivaldiError::OutOfMemory { .. })
+    ));
+
+    // Landmark path under the same budget: fits and clusters well.
+    let cfg = ApproxConfig {
+        k: 2,
+        m,
+        kernel: KernelFn::gaussian(2.0),
+        max_iters: 20,
+        mem: Some(mem),
+        ..Default::default()
+    };
+    let out = approx::fit(p, &ds.points, &cfg).unwrap();
+    assert!(out.peak_mem <= mem.budget);
+    let score = nmi(&out.assignments, &ds.labels, 2);
+    assert!(score >= 0.9, "nmi={score}");
+}
+
+/// Objective sanity: the reduced-rank loop's relative objective must be
+/// (near-)monotone — the ridge perturbs the per-cluster optimum by
+/// O(λ), so tiny upticks are tolerated, trends are not.
+#[test]
+fn objective_near_monotone() {
+    let ds = synth::anisotropic_mixture(150, 5, 4, 261);
+    let cfg = ApproxConfig {
+        k: 4,
+        m: 40,
+        max_iters: 15,
+        converge_on_stable: false,
+        ..Default::default()
+    };
+    let out = approx::fit(4, &ds.points, &cfg).unwrap();
+    for w in out.objective_curve.windows(2) {
+        let slack = 1e-3 * w[0].abs().max(1.0);
+        assert!(w[1] <= w[0] + slack, "objective increased: {w:?}");
+    }
+}

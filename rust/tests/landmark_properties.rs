@@ -1,0 +1,141 @@
+//! Property tests (randomized, seed-reported — the style of
+//! `properties.rs`) for the landmark sampling and partition invariants
+//! behind the approximate path.
+
+use vivaldi::approx::{self, ApproxConfig};
+use vivaldi::data::landmarks::{sample_landmarks, LandmarkSeeding};
+use vivaldi::dense::DenseMatrix;
+use vivaldi::util::part;
+use vivaldi::util::rng::Rng;
+
+const CASES: u64 = 25;
+
+/// Landmark sets are deterministic per seed and change with the seed.
+#[test]
+fn prop_landmarks_deterministic_per_seed() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(7000 + case);
+        let n = 50 + rng.below(300);
+        let d = 1 + rng.below(6);
+        let m = 1 + rng.below(n.min(64));
+        let p = 1 + rng.below(8);
+        if (0..p).any(|r| part::len(m, p, r) > part::len(n, p, r)) {
+            continue;
+        }
+        let points = DenseMatrix::random(n, d, &mut rng);
+        for seeding in [LandmarkSeeding::Uniform, LandmarkSeeding::KmeansPP] {
+            let a = sample_landmarks(&points, m, p, seeding, 900 + case);
+            let b = sample_landmarks(&points, m, p, seeding, 900 + case);
+            assert_eq!(a, b, "case {case} {seeding:?}: same seed must reproduce");
+            if m >= 8 && n >= 4 * m {
+                let c = sample_landmarks(&points, m, p, seeding, 901 + case);
+                assert_ne!(a, c, "case {case} {seeding:?}: different seed must differ");
+            }
+        }
+    }
+}
+
+/// No duplicates, sorted ascending, all indices in range — for both
+/// strategies, at every drawn (n, m, p).
+#[test]
+fn prop_landmarks_distinct_sorted_in_range() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(7100 + case);
+        let n = 30 + rng.below(200);
+        let d = 1 + rng.below(5);
+        let m = 1 + rng.below(n.min(48));
+        let p = 1 + rng.below(6);
+        if (0..p).any(|r| part::len(m, p, r) > part::len(n, p, r)) {
+            continue;
+        }
+        let points = DenseMatrix::random(n, d, &mut rng);
+        for seeding in [LandmarkSeeding::Uniform, LandmarkSeeding::KmeansPP] {
+            let idx = sample_landmarks(&points, m, p, seeding, 7100 + case);
+            assert_eq!(idx.len(), m, "case {case} {seeding:?}");
+            assert!(
+                idx.windows(2).all(|w| w[0] < w[1]),
+                "case {case} {seeding:?}: not strictly ascending => duplicate or unsorted"
+            );
+            assert!(idx.iter().all(|&i| i < n), "case {case} {seeding:?}");
+        }
+    }
+}
+
+/// Uniform (stratified) landmark sets partition **exactly evenly**
+/// across the p-way 1D point partition: rank r owns precisely
+/// `part::len(m, p, r)` landmarks — the load-balance invariant the
+/// distributed Gram pipeline relies on.
+#[test]
+fn prop_uniform_landmarks_partition_evenly() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(7200 + case);
+        let n = 60 + rng.below(400);
+        let m = 4 + rng.below(40);
+        let p = 1 + rng.below(9);
+        if (0..p).any(|r| part::len(m, p, r) > part::len(n, p, r)) {
+            continue;
+        }
+        let points = DenseMatrix::random(n, 2, &mut rng);
+        let idx = sample_landmarks(&points, m, p, LandmarkSeeding::Uniform, 7200 + case);
+        for r in 0..p {
+            let (lo, hi) = part::bounds(n, p, r);
+            let owned = idx.iter().filter(|&&i| i >= lo && i < hi).count();
+            assert_eq!(
+                owned,
+                part::len(m, p, r),
+                "case {case}: rank {r} of {p} owns {owned} landmarks"
+            );
+        }
+    }
+}
+
+/// V invariants hold after approximate fits, exactly as after exact
+/// fits: one cluster per point, indices < k, sizes summing to n.
+#[test]
+fn prop_v_invariants_after_approx_fit() {
+    for case in 0..8 {
+        let mut rng = Rng::new(7300 + case);
+        let k = 2 + rng.below(4);
+        let n = (k * 10) + rng.below(80);
+        let pts = DenseMatrix::random(n, 1 + rng.below(5), &mut rng);
+        let p = [1usize, 2, 4][rng.below(3)];
+        let m = (k + rng.below(n / 2 - k + 1)).min(n / p);
+        let cfg = ApproxConfig {
+            k,
+            m,
+            max_iters: 6,
+            converge_on_stable: false,
+            ..Default::default()
+        };
+        let out = approx::fit(p, &pts, &cfg).unwrap();
+        assert_eq!(out.assignments.len(), n, "case {case}");
+        assert!(out.assignments.iter().all(|&a| (a as usize) < k), "case {case}");
+        let mut sizes = vec![0u64; k];
+        for &a in &out.assignments {
+            sizes[a as usize] += 1;
+        }
+        assert_eq!(sizes.iter().sum::<u64>(), n as u64, "case {case}");
+    }
+}
+
+/// The fit's internal landmark choice is exactly the public
+/// [`approx::landmark_indices`] — oracles replaying those indices see
+/// the same subspace (pinned by a full-rank equivalence elsewhere).
+#[test]
+fn prop_landmark_indices_exposed_consistently() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(7400 + case);
+        let n = 40 + rng.below(100);
+        let pts = DenseMatrix::random(n, 3, &mut rng);
+        let cfg = ApproxConfig { k: 2, m: 8 + rng.below(8), ..Default::default() };
+        for p in [1usize, 2, 4] {
+            if (0..p).any(|r| part::len(cfg.m, p, r) > part::len(n, p, r)) {
+                continue;
+            }
+            let a = approx::landmark_indices(&pts, &cfg, p);
+            let b = approx::landmark_indices(&pts, &cfg, p);
+            assert_eq!(a, b, "case {case} p={p}");
+            assert_eq!(a.len(), cfg.m);
+        }
+    }
+}
