@@ -6,10 +6,11 @@
 use vivaldi::backend::NativeBackend;
 use vivaldi::comm::{Grid2D, World};
 use vivaldi::dense::DenseMatrix;
+use vivaldi::layout::Partition;
 use vivaldi::metrics::Table;
 use vivaldi::sparse::VPartition;
 use vivaldi::spmm::{onefived::spmm_15d_rowsplit, spmm_15d};
-use vivaldi::util::{part, rng::Rng};
+use vivaldi::util::rng::Rng;
 
 fn main() {
     let mut t = Table::new(
@@ -27,23 +28,22 @@ fn main() {
         }
         let inv = VPartition::inv_sizes(&sizes);
         let grid = Grid2D::new(p).unwrap();
-        let q = grid.q();
+        let layout = Partition::nested_15d(n, p).unwrap();
         for rowsplit in [false, true] {
             let gref = &grid;
+            let lref = &layout;
             let kref = &k_full;
             let aref = &assign;
             let iref = &inv;
             let (_, stats) = World::run(p, move |comm| {
-                let (i, j) = gref.coords(comm.rank());
-                let (rlo, rhi) = part::bounds(n, q, i);
-                let (clo, chi) = part::bounds(n, q, j);
+                let ((rlo, rhi), (clo, chi)) = lref.tile_bounds(comm.rank());
                 let tile = kref.block(rlo, rhi, clo, chi);
-                let (vlo, vhi) = part::nested(n, q, j, i);
+                let (vlo, vhi) = lref.owned_range(comm.rank());
                 let be = NativeBackend::new();
                 if rowsplit {
-                    spmm_15d_rowsplit(comm, gref, &tile, &aref[vlo..vhi], n, k, iref, &be)
+                    spmm_15d_rowsplit(comm, gref, &tile, &aref[vlo..vhi], k, iref, &be)
                 } else {
-                    spmm_15d(comm, gref, &tile, &aref[vlo..vhi], n, k, iref, &be)
+                    spmm_15d(comm, gref, &tile, &aref[vlo..vhi], k, iref, &be)
                 }
             });
             let spmm: u64 = stats.iter().map(|s| s.get("spmm").bytes).sum();

@@ -1,8 +1,9 @@
 //! Landmark-approximate vs exact 1.5D Kernel K-means: wall time,
 //! communication volume, peak simulated memory, and quality across an
 //! m sweep — the footprint/quality tradeoff the approximate subsystem
-//! buys (Chitta et al., 1402.3849).
-use vivaldi::approx::{self, ApproxConfig};
+//! buys (Chitta et al., 1402.3849) — with both landmark layouts, so the
+//! 1D-vs-1.5D coefficient-exchange crossover is visible in one table.
+use vivaldi::approx::{self, ApproxConfig, LandmarkLayout};
 use vivaldi::comm::CommStats;
 use vivaldi::data::synth;
 use vivaldi::kernelfn::KernelFn;
@@ -43,25 +44,28 @@ fn main() {
     ]);
 
     for m in [n / 32, n / 16, n / 8, n / 4] {
-        let acfg = ApproxConfig {
-            k: 2,
-            m,
-            kernel,
-            max_iters: iters,
-            converge_on_stable: false,
-            ..Default::default()
-        };
-        let t0 = std::time::Instant::now();
-        let out = approx::fit(p, &ds.points, &acfg).expect("approx fit");
-        let wall = t0.elapsed().as_secs_f64();
-        t.row(vec![
-            "landmark".into(),
-            m.to_string(),
-            format!("{wall:.3}"),
-            CommStats::merged_sum(&out.comm_stats).total().bytes.to_string(),
-            human_bytes(out.peak_mem),
-            format!("{:.3}", nmi(&out.assignments, &ds.labels, 2)),
-        ]);
+        for layout in [LandmarkLayout::OneD, LandmarkLayout::OneFiveD] {
+            let acfg = ApproxConfig {
+                k: 2,
+                m,
+                layout,
+                kernel,
+                max_iters: iters,
+                converge_on_stable: false,
+                ..Default::default()
+            };
+            let t0 = std::time::Instant::now();
+            let out = approx::fit(p, &ds.points, &acfg).expect("approx fit");
+            let wall = t0.elapsed().as_secs_f64();
+            t.row(vec![
+                format!("landmark {}", layout.name()),
+                m.to_string(),
+                format!("{wall:.3}"),
+                CommStats::merged_sum(&out.comm_stats).total().bytes.to_string(),
+                human_bytes(out.peak_mem),
+                format!("{:.3}", nmi(&out.assignments, &ds.labels, 2)),
+            ]);
+        }
     }
     t.print();
     let _ = t.save_csv("landmark_scaling");

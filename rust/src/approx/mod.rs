@@ -6,42 +6,90 @@
 //! memory still grows as O(n²). This module trades exactness for
 //! footprint: pick m ≪ n **landmark** points L, constrain every cluster
 //! center to the span of {φ(l) : l ∈ L}, and the whole state shrinks to
-//! the rectangular cross-kernel `C = κ(P, L)` (n×m, 1D row blocks), the
-//! tiny replicated `W = κ(L, L)` (m×m), and a k×m coefficient matrix —
-//! O(n·m/P) per rank instead of O(n²/P).
+//! the rectangular cross-kernel `C = κ(P, L)` (n×m), the landmark
+//! kernel `W = κ(L, L)` (m×m), and a k×m coefficient matrix.
 //!
 //! Per iteration (the **reduced-rank cluster update**):
 //!
-//! 1. c̄_a = mean of C rows in cluster a — local k×m partial sums, one
-//!    Allreduce of k·m words (the only volume that scales with m·k).
-//! 2. α_a solves `(W + λI) α_a = c̄_a` — replicated f64 ridge Cholesky
-//!    ([`solve::SpdSolver`]), factored **once** per fit since W is
-//!    iteration-invariant; identical on every rank.
-//! 3. E = C·αᵀ (local GEMM through the backend) and c_a = α_aᵀWα_a;
-//!    then the exact path's own fused distances+argmin and the shared
+//! 1. c̄_a = mean of C rows in cluster a — per-cluster C-row sums,
+//!    combined across ranks.
+//! 2. α_a solves `(W + λI) α_a = c̄_a` — deterministic f64 ridge
+//!    Cholesky ([`solve::SpdSolver`]), factored **once** per fit since
+//!    W is iteration-invariant.
+//! 3. E = C·αᵀ and c_a = α_aᵀWα_a; then the exact path's own fused
+//!    distances+argmin and the shared
 //!    [`loop_common::commit_assignment`] collectives finish the
-//!    iteration. Like the 1.5D algorithm, the update needs no movement
-//!    of per-point data — only O(k·m + k) words per iteration.
+//!    iteration.
 //!
-//! Distributed runs are tested against the independent single-rank
-//! oracle ([`oracle`]) and the exact-path oracle (quality within
-//! tolerance at m ≪ n, exact agreement as m → n).
+//! Two **layouts** implement that update ([`LandmarkLayout`], selected
+//! in [`ApproxConfig::layout`]), mirroring the paper's 1D-vs-1.5D story
+//! for the exact path:
+//!
+//! * [`LandmarkLayout::OneD`] — C in 1D row blocks, W fully replicated,
+//!   step 1 as a k×m Allreduce. Simple, but as m grows it hits exactly
+//!   the walls the exact 1D algorithm hits: P replicas of the m×m W and
+//!   an update volume that scales with k·m on every rank.
+//! * [`LandmarkLayout::OneFiveD`] — C tiled on the √P×√P grid
+//!   ([`Partition::LandmarkGrid`]: point blocks × landmark column
+//!   blocks, replication factor √P), W factored **once per grid
+//!   column** (held by the diagonal rank — aggregate W memory √P·m²
+//!   instead of P·m²), and the k×m allreduce replaced by a row-reduce
+//!   of per-landmark-block sums, a diagonal exchange, and a **column
+//!   reduce-scatter of E** that lands each rank's rows exactly on its
+//!   canonical slice — where [`loop_common::commit_assignment`] needs
+//!   them. Update volume per rank: O(k·m/√P + n(k+1)/√P) words vs the
+//!   1D layout's O(k·m·log P) — the win whenever m outgrows n/√P
+//!   (see [`crate::model::analytic::d_landmark_15d`]).
+//!
+//! Distributed runs of both layouts are tested against the independent
+//! single-rank oracle ([`oracle`]) and the exact-path oracle (quality
+//! within tolerance at m ≪ n, exact agreement as m → n).
 
 pub mod oracle;
 pub mod solve;
 
 use crate::backend::ComputeBackend;
-use crate::comm::{Comm, Group, World};
+use crate::comm::{Comm, Grid2D, Group, World};
 use crate::data::landmarks::{self, LandmarkSeeding};
 use crate::dense::DenseMatrix;
-use crate::gemm::gemm_1d_landmark_gram;
+use crate::gemm::{gemm_15d_landmark_gram, gemm_1d_landmark_gram};
 use crate::kernelfn::KernelFn;
 use crate::kkmeans::{loop_common, FitResult, RankOutput};
-use crate::model::MemTracker;
-use crate::util::{part, timing::Stopwatch};
+use crate::layout::{harness, Partition};
+use crate::util::{part, timing, timing::Stopwatch};
 use crate::VivaldiError;
 
 use solve::SpdSolver;
+
+/// How the landmark state (C, W, the coefficient exchange) is
+/// distributed across ranks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LandmarkLayout {
+    /// C in 1D row blocks, W replicated everywhere, k×m coefficient
+    /// Allreduce.
+    OneD,
+    /// C on the √P×√P landmark grid, W once per grid column, column
+    /// reduce-scatter update. Requires a perfect-square rank count and
+    /// m ≥ √P.
+    OneFiveD,
+}
+
+impl LandmarkLayout {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LandmarkLayout::OneD => "1D",
+            LandmarkLayout::OneFiveD => "1.5D",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<LandmarkLayout> {
+        match s.to_ascii_lowercase().as_str() {
+            "1d" | "oned" => Some(LandmarkLayout::OneD),
+            "1.5d" | "15d" | "onefived" => Some(LandmarkLayout::OneFiveD),
+            _ => None,
+        }
+    }
+}
 
 /// Configuration for a landmark-approximate fit. Mirrors
 /// [`crate::kkmeans::FitConfig`] plus the landmark knobs.
@@ -55,6 +103,8 @@ pub struct ApproxConfig {
     pub seeding: LandmarkSeeding,
     /// Seed for the landmark sampler (independent of the data seed).
     pub landmark_seed: u64,
+    /// How C, W, and the reduced-rank update are distributed.
+    pub layout: LandmarkLayout,
     /// Maximum clustering iterations.
     pub max_iters: usize,
     /// Kernel function.
@@ -72,6 +122,7 @@ impl Default for ApproxConfig {
             m: 128,
             seeding: LandmarkSeeding::Uniform,
             landmark_seed: 20260710,
+            layout: LandmarkLayout::OneD,
             max_iters: 100,
             kernel: KernelFn::paper_polynomial(),
             converge_on_stable: true,
@@ -81,14 +132,16 @@ impl Default for ApproxConfig {
 }
 
 /// The landmark index set a fit at `p` ranks will use (exposed so tests
-/// and oracles can replay the exact same landmarks).
+/// and oracles can replay the exact same landmarks). Identical for both
+/// layouts — the 1.5D grid re-tiles the same C.
 pub fn landmark_indices(points: &DenseMatrix, cfg: &ApproxConfig, p: usize) -> Vec<usize> {
     landmarks::sample_landmarks(points, cfg.m, p, cfg.seeding, cfg.landmark_seed)
 }
 
 /// Run a distributed landmark-approximate fit on `p` simulated ranks
 /// with the native backend. Mirrors [`crate::kkmeans::fit`]: points are
-/// globally visible to the harness, each rank slices out its 1D block.
+/// globally visible to the harness, each rank slices out what its
+/// layout owns.
 pub fn fit(p: usize, points: &DenseMatrix, cfg: &ApproxConfig) -> Result<FitResult, VivaldiError> {
     let backend = crate::backend::NativeBackend::new();
     fit_with_backend(p, points, cfg, &backend)
@@ -117,34 +170,31 @@ pub fn fit_with_backend(
     if p == 0 || p > n {
         return Err(VivaldiError::InvalidConfig(format!("rank count p = {p} out of range")));
     }
+    if cfg.layout == LandmarkLayout::OneFiveD {
+        // Surface the grid/shape constraints as InvalidConfig up front,
+        // exactly like kkmeans::fit does for its grid algorithms.
+        Partition::landmark_grid(n, cfg.m, p).map_err(VivaldiError::InvalidConfig)?;
+    }
     // (m <= n already guarantees every rank block covers its stratified
     // landmark quota: part::len is monotone in its first argument.)
 
     let lidx = landmark_indices(points, cfg, p);
-    let (rank_results, comm_stats) =
-        World::run(p, |comm| run_rank(comm, points, &lidx, cfg, backend));
-
-    let mut outs = Vec::with_capacity(p);
-    for r in rank_results {
-        outs.push(r?);
-    }
-    let assignments: Vec<u32> = outs.iter().flat_map(|o| o.assign.iter().copied()).collect();
-    debug_assert_eq!(assignments.len(), n);
-    let first = &outs[0];
-    Ok(FitResult {
-        iterations: first.iterations,
-        converged: first.converged,
-        objective_curve: first.objective_curve.clone(),
-        changes_curve: first.changes_curve.clone(),
-        peak_mem: outs.iter().map(|o| o.peak_mem).max().unwrap_or(0),
-        timings: outs.iter().map(|o| o.stopwatch.clone()).collect(),
-        comm_stats,
-        assignments,
-        ranks: p,
-    })
+    let (rank_results, comm_stats) = World::run(p, |comm| match cfg.layout {
+        LandmarkLayout::OneD => run_rank_1d(comm, points, &lidx, cfg, backend),
+        LandmarkLayout::OneFiveD => run_rank_15d(comm, points, &lidx, cfg, backend),
+    });
+    harness::assemble_fit(n, p, rank_results, comm_stats)
 }
 
-fn run_rank(
+/// The landmark rows this rank owns under the 1D point layout — the
+/// contribution both Gram pipelines feed to the L allgather.
+fn owned_landmark_rows(points: &DenseMatrix, lidx: &[usize], p: usize, rank: usize) -> DenseMatrix {
+    let (lo, hi) = part::bounds(points.rows(), p, rank);
+    let own: Vec<usize> = lidx.iter().copied().filter(|&t| t >= lo && t < hi).collect();
+    landmarks::landmark_rows(points, &own)
+}
+
+fn run_rank_1d(
     comm: &Comm,
     points: &DenseMatrix,
     lidx: &[usize],
@@ -154,18 +204,12 @@ fn run_rank(
     let p = comm.size();
     let n = points.rows();
     let k = cfg.k;
-    let m = lidx.len();
     let world = Group::world(p);
-    let mem = cfg.mem.unwrap_or_else(crate::config::MemModel::unlimited);
-    let tracker = if cfg.mem.is_some() {
-        MemTracker::new(comm.rank(), mem.budget)
-    } else {
-        MemTracker::unlimited(comm.rank())
-    };
-    let (lo, hi) = part::bounds(n, p, comm.rank());
+    let (_mem, tracker) = harness::rank_tracker(comm.rank(), cfg.mem);
+    let layout = Partition::one_d(n, p);
+    let (lo, hi) = layout.owned_range(comm.rank());
     let local_pts = points.row_block(lo, hi);
-    let own_lms: Vec<usize> = lidx.iter().copied().filter(|&i| i >= lo && i < hi).collect();
-    let own_rows = landmarks::landmark_rows(points, &own_lms);
+    let own_rows = owned_landmark_rows(points, lidx, p, comm.rank());
     let mut sw = Stopwatch::new();
 
     // Rectangular Gram pipeline: C block row + replicated W.
@@ -180,46 +224,28 @@ fn run_rank(
     comm.set_phase("update");
     let mut sizes = loop_common::global_sizes(comm, &world, &assign, k);
 
-    let mut objective_curve = Vec::new();
-    let mut changes_curve = Vec::new();
-    let mut iterations = 0;
-    let mut converged = false;
-    for _ in 0..cfg.max_iters {
-        // Reduced-rank E computation, accounted under "spmm" like the
-        // exact paths' Eᵀ phase.
-        let (e_local, cvec) = sw.time("spmm", || {
+    let outcome = harness::drive_loop(cfg.max_iters, cfg.converge_on_stable, |_| {
+        // The whole reduced-rank step is cluster-update communication —
+        // counted (and timed) under "update"; there is no Eᵀ/spmm phase
+        // in the landmark path.
+        let (e_local, cvec) = sw.time("update", || {
             reduced_rank_e(comm, &world, backend, &c_block, &w, &solver, &assign, k, &sizes)
         });
-        comm.set_phase("update");
         let (new_assign, minvals) =
             sw.time("update", || backend.distances_argmin(&e_local, &cvec));
         let (changes, obj, new_sizes) = sw.time("update", || {
             loop_common::commit_assignment(comm, &world, &mut assign, new_assign, &minvals, k)
         });
         sizes = new_sizes;
-        objective_curve.push(obj);
-        changes_curve.push(changes);
-        iterations += 1;
-        if changes == 0 && cfg.converge_on_stable {
-            converged = true;
-            break;
-        }
-    }
+        (changes, obj)
+    });
 
-    Ok(RankOutput {
-        assign,
-        stopwatch: sw,
-        iterations,
-        converged,
-        objective_curve,
-        changes_curve,
-        peak_mem: tracker.peak(),
-    })
+    Ok(harness::finish_rank(assign, sw, outcome, &tracker))
 }
 
-/// One reduced-rank E step: Allreduce the k×m per-cluster C sums, solve
-/// for α on every rank (bit-identical), return E = C·αᵀ and the center
-/// norms c_a = α_aᵀWα_a.
+/// One reduced-rank E step in the 1D layout: Allreduce the k×m
+/// per-cluster C sums, solve for α on every rank (bit-identical),
+/// return E = C·αᵀ and the center norms c_a = α_aᵀWα_a.
 #[allow(clippy::too_many_arguments)]
 fn reduced_rank_e(
     comm: &Comm,
@@ -232,21 +258,58 @@ fn reduced_rank_e(
     k: usize,
     sizes: &[u64],
 ) -> (DenseMatrix, Vec<f32>) {
-    comm.set_phase("spmm");
+    comm.set_phase("update");
     let m = solver.dim();
-    // Local per-cluster sums of C rows (k×m), then one Allreduce.
-    let mut b_part = vec![0.0f32; k * m];
+    // Local per-cluster sums of C rows (k×m), then one Allreduce — the
+    // volume the 1.5D layout avoids.
+    let b = comm.allreduce_sum_f32(world, cluster_row_sums(c_block, assign, k, m));
+
+    // α (k×m): replicated ridge solve in f64.
+    let (alpha, cvec) = solve_alpha(solver, w, &b, sizes, k);
+    let mut alpha_t = DenseMatrix::zeros(m, k); // αᵀ, for the E GEMM
+    for a in 0..k {
+        for t in 0..m {
+            alpha_t.set(t, a, alpha[a * m + t] as f32);
+        }
+    }
+
+    // E = C·αᵀ through the backend GEMM.
+    let mut e = DenseMatrix::zeros(c_block.rows(), k);
+    backend.matmul_nn_acc(c_block, &alpha_t, &mut e);
+    (e, cvec)
+}
+
+/// Per-cluster sums of C rows: the k×w partial this rank contributes to
+/// c̄ (w = the landmark columns this rank's C covers).
+fn cluster_row_sums(c_rows: &DenseMatrix, assign: &[u32], k: usize, w: usize) -> Vec<f32> {
+    debug_assert_eq!(c_rows.rows(), assign.len());
+    debug_assert_eq!(c_rows.cols(), w);
+    let mut b = vec![0.0f32; k * w];
     for (j, &a) in assign.iter().enumerate() {
-        let row = c_block.row(j);
-        let acc = &mut b_part[a as usize * m..(a as usize + 1) * m];
+        let row = c_rows.row(j);
+        let acc = &mut b[a as usize * w..(a as usize + 1) * w];
         for (s, v) in acc.iter_mut().zip(row) {
             *s += v;
         }
     }
-    let b = comm.allreduce_sum_f32(world, b_part);
+    b
+}
 
-    // α (k×m): replicated ridge solve in f64.
-    let mut alpha_t = DenseMatrix::zeros(m, k); // αᵀ, for the E GEMM
+/// Solve the ridge systems for every cluster from the globally summed
+/// per-cluster C rows `b` (k×m row-major, f32) and return α (k×m
+/// row-major f64; zero rows for empty clusters) plus the center norms
+/// c_a = α_aᵀWα_a. Pure f64 past the input — every caller holding the
+/// same (W factor, b, sizes) gets bit-identical output, which is what
+/// lets the 1.5D layout solve on diagonals only.
+fn solve_alpha(
+    solver: &SpdSolver,
+    w: &DenseMatrix,
+    b: &[f32],
+    sizes: &[u64],
+    k: usize,
+) -> (Vec<f64>, Vec<f32>) {
+    let m = solver.dim();
+    debug_assert_eq!(b.len(), k * m);
     let mut alpha = vec![0.0f64; k * m];
     for a in 0..k {
         if sizes[a] == 0 {
@@ -255,17 +318,8 @@ fn reduced_rank_e(
         let inv = 1.0 / sizes[a] as f64;
         let rhs: Vec<f64> = b[a * m..(a + 1) * m].iter().map(|&v| v as f64 * inv).collect();
         let x = solver.solve(&rhs);
-        for t in 0..m {
-            alpha_t.set(t, a, x[t] as f32);
-            alpha[a * m + t] = x[t];
-        }
+        alpha[a * m..(a + 1) * m].copy_from_slice(&x);
     }
-
-    // E = C·αᵀ through the backend GEMM.
-    let mut e = DenseMatrix::zeros(c_block.rows(), k);
-    backend.matmul_nn_acc(c_block, &alpha_t, &mut e);
-
-    // c_a = α_aᵀ W α_a in f64 (identical on every rank).
     let mut cvec = vec![0.0f32; k];
     for a in 0..k {
         let al = &alpha[a * m..(a + 1) * m];
@@ -279,7 +333,140 @@ fn reduced_rank_e(
         }
         cvec[a] = s as f32;
     }
-    (e, cvec)
+    (alpha, cvec)
+}
+
+/// The 1.5D landmark rank function. Per iteration (everything is
+/// cluster-update communication — phase "update"):
+///
+/// 1. Allgather the point block's assignments along the **grid
+///    column** (u32 indices, the nested-partition replication — factor
+///    √P, not P).
+/// 2. Per-cluster sums of the local C tile (k × m/√P), **reduced along
+///    the grid row** to the diagonal — the k×m allreduce shrunk by √P.
+/// 3. Diagonals exchange their landmark blocks (allgather over the √P
+///    diagonal ranks), run the replicated f64 solve **once per grid
+///    column**, and broadcast their α block + center norms back along
+///    their row.
+/// 4. Partial E = C_tile · αᵀ_block, **reduce-scattered along the grid
+///    column split by point sub-slices** — landing each rank's E rows
+///    exactly on its canonical slice, where
+///    [`loop_common::commit_assignment`] needs them (the same §V.C
+///    column-major-grid property the exact 1.5D SpMM uses).
+fn run_rank_15d(
+    comm: &Comm,
+    points: &DenseMatrix,
+    lidx: &[usize],
+    cfg: &ApproxConfig,
+    backend: &dyn ComputeBackend,
+) -> Result<RankOutput, VivaldiError> {
+    let p = comm.size();
+    let n = points.rows();
+    let k = cfg.k;
+    let m = lidx.len();
+    let world = Group::world(p);
+    let grid = Grid2D::new(p).expect("fit() checked square grid");
+    let q = grid.q();
+    let (i, j) = grid.coords(comm.rank());
+    let row_g = grid.row_group(i);
+    let col_g = grid.col_group(j);
+    let diag_g = Group::new((0..q).map(|r| grid.rank_at(r, r)).collect());
+    let is_diag = i == j;
+    let (_mem, tracker) = harness::rank_tracker(comm.rank(), cfg.mem);
+    let layout = Partition::landmark_grid(n, m, p).expect("fit() validated the landmark grid");
+    let ((plo, phi), (llo, lhi)) = layout.tile_bounds(comm.rank());
+    let n_j = phi - plo;
+    let m_i = lhi - llo;
+    let point_block = points.row_block(plo, phi);
+    let own_rows = owned_landmark_rows(points, lidx, p, comm.rank());
+    let mut sw = Stopwatch::new();
+
+    // C tile + (diagonal-only) W.
+    let (c_tile, w_opt) = sw.time("gemm", || {
+        gemm_15d_landmark_gram(
+            comm, &grid, &layout, &point_block, &own_rows, &cfg.kernel, backend, &tracker,
+        )
+    })?;
+    let solver = w_opt.as_ref().map(SpdSolver::factor);
+
+    // Round-robin V init over the canonical owned slice.
+    let (vlo, vhi) = layout.owned_range(comm.rank());
+    let mut assign: Vec<u32> = (vlo..vhi).map(|x| (x % k) as u32).collect();
+    comm.set_phase("update");
+    let mut sizes = loop_common::global_sizes(comm, &world, &assign, k);
+
+    let outcome = harness::drive_loop(cfg.max_iters, cfg.converge_on_stable, |_| {
+        let t0 = timing::clock_now();
+        comm.set_phase("update");
+
+        // (1) Assignments of point block j, shared by the column group.
+        let assign_block = comm.allgather_concat(&col_g, assign.clone());
+        debug_assert_eq!(assign_block.len(), n_j);
+
+        // (2) Per-cluster sums over my tile, reduced to the diagonal.
+        let b_part = cluster_row_sums(&c_tile, &assign_block, k, m_i);
+        let b_red = comm.reduce(&row_g, i, b_part, |acc, other| {
+            for (x, y) in acc.iter_mut().zip(other) {
+                *x += y;
+            }
+        });
+
+        // (3) Diagonal exchange + once-per-column solve; α block and
+        // center norms come back along the row.
+        let payload = if is_diag {
+            let b_block = b_red.expect("diagonal is the row-reduce root");
+            let blocks = comm.allgather(&diag_g, b_block);
+            let mut b = vec![0.0f32; k * m];
+            for (l, blk) in blocks.iter().enumerate() {
+                let (blo, bhi) = part::bounds(m, q, l);
+                let w_l = bhi - blo;
+                debug_assert_eq!(blk.len(), k * w_l);
+                for a in 0..k {
+                    b[a * m + blo..a * m + bhi].copy_from_slice(&blk[a * w_l..(a + 1) * w_l]);
+                }
+            }
+            let (alpha, cvec) = solve_alpha(
+                solver.as_ref().expect("diagonal holds the W factor"),
+                w_opt.as_ref().expect("diagonal holds W"),
+                &b,
+                &sizes,
+                k,
+            );
+            // Pack αᵀ[landmark block i] (m_i × k, f32) + cvec.
+            let mut flat = Vec::with_capacity(m_i * k + k);
+            for t in llo..lhi {
+                for a in 0..k {
+                    flat.push(alpha[a * m + t] as f32);
+                }
+            }
+            flat.extend_from_slice(&cvec);
+            Some(flat)
+        } else {
+            None
+        };
+        let flat = comm.bcast(&row_g, i, payload);
+        debug_assert_eq!(flat.len(), m_i * k + k);
+        let alpha_t_block = DenseMatrix::from_vec(m_i, k, flat[..m_i * k].to_vec());
+        let cvec: Vec<f32> = flat[m_i * k..].to_vec();
+
+        // (4) Partial E over my tile; the column reduce-scatter (the
+        // same padded row-block primitive as the exact 1.5D SpMM) lands
+        // my canonical slice's rows here.
+        let mut e_part = DenseMatrix::zeros(n_j, k);
+        backend.matmul_nn_acc(&c_tile, &alpha_t_block, &mut e_part);
+        let e_local = crate::spmm::reduce_scatter_row_blocks(comm, &col_g, &e_part, i);
+        debug_assert_eq!(e_local.rows(), assign.len());
+
+        // Fused distances/argmin + the shared trailing collectives.
+        let (new_assign, minvals) = backend.distances_argmin(&e_local, &cvec);
+        let (changes, obj, new_sizes) =
+            loop_common::commit_assignment(comm, &world, &mut assign, new_assign, &minvals, k);
+        sizes = new_sizes;
+        sw.add("update", timing::clock_now() - t0);
+        (changes, obj)
+    });
+
+    Ok(harness::finish_rank(assign, sw, outcome, &tracker))
 }
 
 #[cfg(test)]
@@ -299,6 +486,22 @@ mod tests {
         // n < k.
         let cfg = ApproxConfig { k: 64, m: 64, ..Default::default() };
         assert!(matches!(fit(1, &ds.points, &cfg), Err(VivaldiError::InvalidConfig(_))));
+        // 1.5D layout on a non-square rank count.
+        let cfg = ApproxConfig {
+            k: 2,
+            m: 8,
+            layout: LandmarkLayout::OneFiveD,
+            ..Default::default()
+        };
+        assert!(matches!(fit(2, &ds.points, &cfg), Err(VivaldiError::InvalidConfig(_))));
+        // 1.5D layout with m < √P (an empty landmark block).
+        let cfg = ApproxConfig {
+            k: 2,
+            m: 2,
+            layout: LandmarkLayout::OneFiveD,
+            ..Default::default()
+        };
+        assert!(matches!(fit(9, &ds.points, &cfg), Err(VivaldiError::InvalidConfig(_))));
     }
 
     #[test]
@@ -314,9 +517,10 @@ mod tests {
 
     #[test]
     fn update_comm_is_reduced_rank() {
-        // The approximate loop's per-iteration volume is O(k·m) words —
-        // independent of n. Doubling n must not change the spmm-phase
-        // bytes per iteration (same p, same m, fixed iters).
+        // The 1D landmark loop's per-iteration volume is O(k·m) words —
+        // independent of n, and there is no Eᵀ/spmm phase at all.
+        // Doubling n must not change the update-phase bytes per
+        // iteration (same p, same m, fixed iters).
         let cfg = ApproxConfig {
             k: 4,
             m: 32,
@@ -328,25 +532,52 @@ mod tests {
         for n in [128usize, 256] {
             let ds = synth::gaussian_blobs(n, 4, 4, 4.0, 13);
             let out = fit(4, &ds.points, &cfg).unwrap();
+            let update: u64 = out.comm_stats.iter().map(|s| s.get("update").bytes).sum();
             let spmm: u64 = out.comm_stats.iter().map(|s| s.get("spmm").bytes).sum();
-            vols.push(spmm);
+            assert_eq!(spmm, 0, "the landmark path has no spmm phase");
+            vols.push(update);
         }
         assert_eq!(vols[0], vols[1], "reduced-rank update volume must not scale with n");
     }
 
     #[test]
-    fn oom_surfaces_collectively() {
-        let ds = synth::gaussian_blobs(256, 8, 4, 4.0, 17);
-        let cfg = ApproxConfig {
+    fn fifteen_d_layout_matches_1d_layout() {
+        // Same landmark set, same reduced-rank math, different
+        // partitioning: the two layouts must reach the same clustering
+        // (modulo f32 reduction-order at block boundaries).
+        let ds = synth::gaussian_blobs(144, 5, 4, 4.5, 19);
+        let mk = |layout| ApproxConfig {
             k: 4,
-            m: 64,
-            mem: Some(crate::config::MemModel {
-                budget: 1024,
-                repl_factor: 1.0,
-                redist_factor: 0.0,
-            }),
+            m: 36,
+            layout,
+            max_iters: 40,
             ..Default::default()
         };
-        assert!(matches!(fit(4, &ds.points, &cfg), Err(VivaldiError::OutOfMemory { .. })));
+        for p in [1usize, 4, 9] {
+            let a = fit(p, &ds.points, &mk(LandmarkLayout::OneD)).unwrap();
+            let b = fit(p, &ds.points, &mk(LandmarkLayout::OneFiveD)).unwrap();
+            let diffs =
+                a.assignments.iter().zip(&b.assignments).filter(|(x, y)| x != y).count();
+            assert!(diffs <= 1, "p={p}: {diffs}/144 points disagree across layouts");
+            let score = crate::quality::nmi(&a.assignments, &b.assignments, 4);
+            assert!(score >= 0.99, "p={p} nmi={score}");
+        }
+    }
+
+    #[test]
+    fn oom_surfaces_collectively() {
+        let ds = synth::gaussian_blobs(256, 8, 4, 4.0, 17);
+        let mem = Some(crate::config::MemModel {
+            budget: 1024,
+            repl_factor: 1.0,
+            redist_factor: 0.0,
+        });
+        for layout in [LandmarkLayout::OneD, LandmarkLayout::OneFiveD] {
+            let cfg = ApproxConfig { k: 4, m: 64, layout, mem, ..Default::default() };
+            assert!(
+                matches!(fit(4, &ds.points, &cfg), Err(VivaldiError::OutOfMemory { .. })),
+                "{layout:?}"
+            );
+        }
     }
 }

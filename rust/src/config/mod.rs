@@ -89,9 +89,17 @@ pub struct Feasibility {
     /// row + W + replicated L — the charge
     /// [`crate::gemm::gemm_1d_landmark_gram`] registers).
     pub landmark_bytes_per_rank: u64,
+    /// Per-rank bytes of the 1.5D landmark layout's *worst* rank (the
+    /// diagonal: C tile + the per-grid-column W replica + transient L —
+    /// the charge [`crate::gemm::gemm_15d_landmark_gram`] registers).
+    /// Off-diagonal ranks drop the m² term entirely, so the aggregate W
+    /// footprint is √P·m² instead of P·m².
+    pub landmark_15d_bytes_per_rank: u64,
     pub budget: u64,
     pub exact_fits: bool,
     pub landmark_fits: bool,
+    /// Whether the 1.5D landmark layout's worst rank fits the budget.
+    pub landmark_15d_fits: bool,
 }
 
 impl Feasibility {
@@ -114,6 +122,11 @@ pub fn landmark_feasibility(n: usize, d: usize, m: usize, p: usize, mem: &MemMod
     let n_p = ceil_div(n, p.max(1));
     let landmark =
         4 * (n_p as u64 * m as u64 + m as u64 * m as u64 + m as u64 * d as u64);
+    // 1.5D landmark layout, diagonal (worst) rank: C tile n/q × m/q,
+    // one W replica, transient L.
+    let landmark_15d = 4 * (ceil_div(n, q.max(1)) as u64 * ceil_div(m, q.max(1)) as u64
+        + m as u64 * m as u64
+        + m as u64 * d as u64);
     Feasibility {
         n,
         d,
@@ -121,9 +134,13 @@ pub fn landmark_feasibility(n: usize, d: usize, m: usize, p: usize, mem: &MemMod
         p,
         exact_bytes_per_rank: exact,
         landmark_bytes_per_rank: landmark,
+        landmark_15d_bytes_per_rank: landmark_15d,
         budget: mem.budget,
         exact_fits: exact <= mem.budget,
         landmark_fits: landmark <= mem.budget,
+        // The 1.5D layout additionally needs a square grid; never
+        // report it as fitting on a rank count it cannot run on.
+        landmark_15d_fits: crate::util::is_perfect_square(p) && landmark_15d <= mem.budget,
     }
 }
 

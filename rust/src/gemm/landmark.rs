@@ -15,9 +15,10 @@
 //! same fused [`ComputeBackend::gram_tile`] the exact path uses.
 
 use crate::backend::ComputeBackend;
-use crate::comm::{Comm, Group};
+use crate::comm::{Comm, Grid2D, Group};
 use crate::dense::DenseMatrix;
 use crate::kernelfn::KernelFn;
+use crate::layout::Partition;
 use crate::model::MemTracker;
 use crate::VivaldiError;
 
@@ -89,6 +90,92 @@ pub fn gemm_1d_landmark_gram(
     // stay resident for the clustering loop.
     tracker.free(MemTracker::matrix_f32(m, d));
     Ok((c_block, w))
+}
+
+/// 1.5D landmark Gram pipeline: this rank's C tile on the √P×√P grid,
+/// plus `W = κ(L, L)` materialized **only on the diagonal ranks** — one
+/// replica per grid column instead of P replicas.
+///
+/// `layout` must be the [`Partition::LandmarkGrid`] of the fit: rank
+/// (i, j) computes C\[point block j, landmark block i\]
+/// (`layout.tile_bounds`). `point_block` is the rank's point-block row
+/// slice; `local_landmarks` are the landmark rows this rank owns under
+/// the **1D point layout** (the world allgather reassembles L in
+/// landmark order exactly as in [`gemm_1d_landmark_gram`]).
+///
+/// Returns `(c_tile, Some(w))` on diagonal ranks and `(c_tile, None)`
+/// elsewhere. Memory: every rank is charged the transient replicated L
+/// and its resident C tile; only diagonals carry the m×m W — the
+/// aggregate W footprint drops from P·m² to √P·m², which is what lets m
+/// grow past the 1D layout's replication wall. OOM is collective
+/// (AND-allreduce), as everywhere.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_15d_landmark_gram(
+    comm: &Comm,
+    grid: &Grid2D,
+    layout: &Partition,
+    point_block: &DenseMatrix,
+    local_landmarks: &DenseMatrix,
+    kernel: &KernelFn,
+    backend: &dyn ComputeBackend,
+    tracker: &MemTracker,
+) -> Result<(DenseMatrix, Option<DenseMatrix>), VivaldiError> {
+    comm.set_phase("gemm");
+    let world = Group::world(grid.p());
+    let d = point_block.cols();
+    let (i, j) = grid.coords(comm.rank());
+    let is_diag = i == j;
+    let ((plo, phi), (llo, lhi)) = layout.tile_bounds(comm.rank());
+    assert_eq!(point_block.rows(), phi - plo, "point block height mismatch");
+    assert!(
+        local_landmarks.rows() == 0 || local_landmarks.cols() == d,
+        "landmark feature dim mismatch"
+    );
+
+    // Total landmark count, verified collectively like the 1D pipeline.
+    let m = comm.allreduce_sum_u64(&world, vec![local_landmarks.rows() as u64])[0] as usize;
+    debug_assert!(lhi <= m, "layout landmark count disagrees with the sampled set");
+
+    // Collective memory check: replicated L + C tile (+ W on diagonals).
+    let need = MemTracker::matrix_f32(m, d)
+        + MemTracker::matrix_f32(phi - plo, lhi - llo)
+        + if is_diag { MemTracker::matrix_f32(m, m) } else { 0 };
+    let ok = tracker.try_alloc(need, "1.5D landmark GEMM: L + C tile (+ diagonal W)");
+    if !comm.allreduce_and(&world, ok) {
+        if ok {
+            tracker.free(need);
+        }
+        return Err(VivaldiError::OutOfMemory {
+            rank: comm.rank(),
+            requested: need,
+            budget: tracker.budget(),
+            what: "1.5D landmark GEMM: L + C tile (+ diagonal W)".into(),
+        });
+    }
+
+    // Allgather(v) of the owned landmark rows — O(m·d) words, rank
+    // order = ascending landmark order.
+    let l_data = comm.allgather_concat(&world, local_landmarks.data().to_vec());
+    let landmarks = DenseMatrix::from_vec(m, d, l_data);
+    let l_block = landmarks.row_block(llo, lhi);
+
+    let (row_norms, lb_norms, l_norms) = if kernel.needs_norms() {
+        // Full-L norms feed only the diagonal-only W product; off-
+        // diagonal ranks need just their landmark block's norms.
+        let l_norms = if is_diag { landmarks.row_sq_norms() } else { Vec::new() };
+        let lb_norms =
+            if is_diag { l_norms[llo..lhi].to_vec() } else { l_block.row_sq_norms() };
+        (point_block.row_sq_norms(), lb_norms, l_norms)
+    } else {
+        (Vec::new(), Vec::new(), Vec::new())
+    };
+
+    let c_tile = backend.gram_tile(point_block, &l_block, kernel, &row_norms, &lb_norms);
+    let w = is_diag.then(|| backend.gram_tile(&landmarks, &landmarks, kernel, &l_norms, &l_norms));
+    // The replicated L is transient; C (and the diagonal W) stay
+    // resident for the clustering loop.
+    tracker.free(MemTracker::matrix_f32(m, d));
+    Ok((c_tile, w))
 }
 
 #[cfg(test)]
@@ -181,6 +268,60 @@ mod tests {
         // far below the 1D point replication (p-1)·n·d·4.
         let point_repl = ((p - 1) * n * d * 4) as u64;
         assert!(total < point_repl / 2, "total={total} vs point replication {point_repl}");
+    }
+
+    #[test]
+    fn fifteen_d_tiles_match_oracle() {
+        let mut rng = Rng::new(94);
+        let n = 53;
+        let d = 4;
+        let m = 12;
+        let points = DenseMatrix::random(n, d, &mut rng);
+        for kernel in [KernelFn::linear(), KernelFn::gaussian(0.7)] {
+            for p in [1usize, 4, 9] {
+                let q = (p as f64).sqrt().round() as usize;
+                let idx = sample_landmarks(&points, m, p, LandmarkSeeding::Uniform, 6);
+                let lms = landmark_rows(&points, &idx);
+                let expect_c = oracle_c(&points, &lms, &kernel);
+                let expect_w = oracle_c(&lms, &lms, &kernel);
+                let grid = crate::comm::Grid2D::new(p).unwrap();
+                let layout = Partition::landmark_grid(n, m, p).unwrap();
+                let pref = &points;
+                let iref = &idx;
+                let kref = &kernel;
+                let gref = &grid;
+                let lref = &layout;
+                let (results, _) = World::run(p, |comm| {
+                    let ((plo, phi), _) = lref.tile_bounds(comm.rank());
+                    let block = pref.row_block(plo, phi);
+                    let (olo, ohi) = part::bounds(n, p, comm.rank());
+                    let own: Vec<usize> =
+                        iref.iter().copied().filter(|&t| t >= olo && t < ohi).collect();
+                    let own_rows = landmark_rows(pref, &own);
+                    let be = NativeBackend::new();
+                    let tracker = MemTracker::unlimited(comm.rank());
+                    gemm_15d_landmark_gram(
+                        comm, gref, lref, &block, &own_rows, kref, &be, &tracker,
+                    )
+                    .unwrap()
+                });
+                // Reassemble C from tiles: rank (i, j) holds
+                // C[point block j, landmark block i].
+                let mut c_full = DenseMatrix::zeros(n, m);
+                for (rank, (tile, w)) in results.iter().enumerate() {
+                    let (i, j) = grid.coords(rank);
+                    let (plo, _) = part::bounds(n, q, j);
+                    let (llo, _) = part::bounds(m, q, i);
+                    c_full.paste(plo, llo, tile);
+                    // W lives exactly on the diagonals.
+                    assert_eq!(w.is_some(), i == j, "rank {rank}");
+                    if let Some(w) = w {
+                        assert!(w.max_abs_diff(&expect_w) < 1e-3, "p={p}");
+                    }
+                }
+                assert!(c_full.max_abs_diff(&expect_c) < 1e-3, "kernel={kernel:?} p={p}");
+            }
+        }
     }
 
     #[test]

@@ -15,7 +15,7 @@ pub mod onedim;
 pub mod summa;
 pub mod redistribute;
 
-pub use landmark::gemm_1d_landmark_gram;
+pub use landmark::{gemm_15d_landmark_gram, gemm_1d_landmark_gram};
 pub use onedim::gemm_1d_gram;
 pub use redistribute::redistribute_2d_to_1d;
 pub use summa::{summa_gram, SummaPointTiles};

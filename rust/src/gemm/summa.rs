@@ -41,12 +41,14 @@ impl SummaPointTiles {
         let q = grid.q();
         let n = points.rows();
         let d = points.cols();
-        let (rlo, rhi) = part::bounds(n, q, i);
+        // Point blocks come from the 2D tile partition; features are
+        // split q ways alongside (they have no layout of their own).
+        let layout = crate::layout::Partition::Tiles2D { n, q };
+        let ((rlo, rhi), (plo, phi)) = layout.tile_bounds(rank);
         let (clo, chi) = part::bounds(d, q, j);
         let a = points.block(rlo, rhi, clo, chi);
         // B tile: features block i × points block j, i.e. Pᵀ block.
         let (flo, fhi) = part::bounds(d, q, i);
-        let (plo, phi) = part::bounds(n, q, j);
         let b = points.block(plo, phi, flo, fhi).transpose();
         SummaPointTiles { a, b }
     }

@@ -13,9 +13,9 @@ use crate::backend::ComputeBackend;
 use crate::comm::{Comm, Grid2D, Group};
 use crate::dense::DenseMatrix;
 use crate::gemm::{summa_gram, SummaPointTiles};
-use crate::model::MemTracker;
+use crate::layout::{harness, Partition};
 use crate::spmm::spmm_15d;
-use crate::util::{part, timing::Stopwatch};
+use crate::util::timing::Stopwatch;
 use crate::VivaldiError;
 
 use super::loop_common;
@@ -33,14 +33,7 @@ pub(super) fn run_rank(
     let k = cfg.k;
     let world = Group::world(p);
     let grid = Grid2D::new(p).expect("fit() checked square grid");
-    let q = grid.q();
-    let (i, j) = grid.coords(comm.rank());
-    let mem = cfg.mem.unwrap_or_else(crate::config::MemModel::unlimited);
-    let tracker = if cfg.mem.is_some() {
-        MemTracker::new(comm.rank(), mem.budget)
-    } else {
-        MemTracker::unlimited(comm.rank())
-    };
+    let (_mem, tracker) = harness::rank_tracker(comm.rank(), cfg.mem);
     let mut sw = Stopwatch::new();
 
     // SUMMA K; the 2D tile stays put for the whole run.
@@ -50,44 +43,27 @@ pub(super) fn run_rank(
     })?;
 
     // Own 1D V partition: sub-slice i of point block j (global rank
-    // order ⇒ contiguous coverage of 0..n).
-    let (vlo, vhi) = part::nested(n, q, j, i);
+    // order ⇒ contiguous coverage of 0..n — the nested 1.5D layout).
+    let layout = Partition::nested_15d(n, p).expect("fit() checked square grid");
+    let (vlo, vhi) = layout.owned_range(comm.rank());
     let mut assign: Vec<u32> = (vlo..vhi).map(|x| (x % k) as u32).collect();
     comm.set_phase("update");
     let mut sizes = loop_common::global_sizes(comm, &world, &assign, k);
 
-    let mut objective_curve = Vec::new();
-    let mut changes_curve = Vec::new();
-    let mut iterations = 0;
-    let mut converged = false;
-    for _ in 0..cfg.max_iters {
+    let outcome = harness::drive_loop(cfg.max_iters, cfg.converge_on_stable, |_| {
         let inv = loop_common::inv_sizes(&sizes);
         let e_local = sw.time("spmm", || {
-            spmm_15d(comm, &grid, &k_tile, &assign, n, k, &inv, backend)
+            spmm_15d(comm, &grid, &k_tile, &assign, k, &inv, backend)
         });
         debug_assert_eq!(e_local.rows(), assign.len());
         let (changes, obj, new_sizes) = sw.time("update", || {
             loop_common::local_update(comm, &world, backend, &e_local, &mut assign, k, &inv)
         });
         sizes = new_sizes;
-        objective_curve.push(obj);
-        changes_curve.push(changes);
-        iterations += 1;
-        if changes == 0 && cfg.converge_on_stable {
-            converged = true;
-            break;
-        }
-    }
+        (changes, obj)
+    });
 
-    Ok(RankOutput {
-        assign,
-        stopwatch: sw,
-        iterations,
-        converged,
-        objective_curve,
-        changes_curve,
-        peak_mem: tracker.peak(),
-    })
+    Ok(harness::finish_rank(assign, sw, outcome, &tracker))
 }
 
 #[cfg(test)]

@@ -11,9 +11,9 @@ use crate::backend::ComputeBackend;
 use crate::comm::{Comm, Group};
 use crate::dense::DenseMatrix;
 use crate::gemm::gemm_1d_gram;
-use crate::model::MemTracker;
+use crate::layout::{harness, Partition};
 use crate::spmm::spmm_1d;
-use crate::util::{part, timing::Stopwatch};
+use crate::util::timing::Stopwatch;
 use crate::VivaldiError;
 
 use super::loop_common;
@@ -29,13 +29,9 @@ pub(super) fn run_rank(
     let n = points.rows();
     let k = cfg.k;
     let world = Group::world(p);
-    let mem = cfg.mem.unwrap_or_else(crate::config::MemModel::unlimited);
-    let tracker = if cfg.mem.is_some() {
-        MemTracker::new(comm.rank(), mem.budget)
-    } else {
-        MemTracker::unlimited(comm.rank())
-    };
-    let (lo, hi) = part::bounds(n, p, comm.rank());
+    let (mem, tracker) = harness::rank_tracker(comm.rank(), cfg.mem);
+    let layout = Partition::one_d(n, p);
+    let (lo, hi) = layout.owned_range(comm.rank());
     let local_pts = points.row_block(lo, hi);
     let mut sw = Stopwatch::new();
 
@@ -48,11 +44,7 @@ pub(super) fn run_rank(
     comm.set_phase("update");
     let mut sizes = loop_common::global_sizes(comm, &world, &assign, k);
 
-    let mut objective_curve = Vec::new();
-    let mut changes_curve = Vec::new();
-    let mut iterations = 0;
-    let mut converged = false;
-    for _ in 0..cfg.max_iters {
+    let outcome = harness::drive_loop(cfg.max_iters, cfg.converge_on_stable, |_| {
         let inv = loop_common::inv_sizes(&sizes);
         let e_local =
             sw.time("spmm", || spmm_1d(comm, &world, &k_block, &assign, k, &inv, backend));
@@ -60,24 +52,10 @@ pub(super) fn run_rank(
             loop_common::local_update(comm, &world, backend, &e_local, &mut assign, k, &inv)
         });
         sizes = new_sizes;
-        objective_curve.push(obj);
-        changes_curve.push(changes);
-        iterations += 1;
-        if changes == 0 && cfg.converge_on_stable {
-            converged = true;
-            break;
-        }
-    }
+        (changes, obj)
+    });
 
-    Ok(RankOutput {
-        assign,
-        stopwatch: sw,
-        iterations,
-        converged,
-        objective_curve,
-        changes_curve,
-        peak_mem: tracker.peak(),
-    })
+    Ok(harness::finish_rank(assign, sw, outcome, &tracker))
 }
 
 #[cfg(test)]

@@ -23,7 +23,7 @@ use crate::backend::ComputeBackend;
 use crate::comm::{Comm, Grid2D, Group};
 use crate::dense::DenseMatrix;
 use crate::gemm::{summa_gram, SummaPointTiles};
-use crate::model::MemTracker;
+use crate::layout::{harness, Partition};
 use crate::spmm::spmm_2d;
 use crate::util::{part, timing::Stopwatch};
 use crate::VivaldiError;
@@ -47,12 +47,7 @@ pub(super) fn run_rank(
     let (i, j) = grid.coords(comm.rank());
     let row_g = grid.row_group(i);
     let col_g = grid.col_group(j);
-    let mem = cfg.mem.unwrap_or_else(crate::config::MemModel::unlimited);
-    let tracker = if cfg.mem.is_some() {
-        MemTracker::new(comm.rank(), mem.budget)
-    } else {
-        MemTracker::unlimited(comm.rank())
-    };
+    let (_mem, tracker) = harness::rank_tracker(comm.rank(), cfg.mem);
     let mut sw = Stopwatch::new();
 
     let tiles = SummaPointTiles::from_global(points, &grid, comm.rank());
@@ -60,12 +55,13 @@ pub(super) fn run_rank(
         summa_gram(comm, &grid, &tiles, n, d, &cfg.kernel, backend, &tracker)
     })?;
 
+    let layout = Partition::tiles_2d(n, p).expect("fit() checked square grid");
     // Point ranges.
     let (bj_lo, bj_hi) = part::bounds(n, q, j); // my column's point block
     // V slice fed to the SpMM: sub-slice j of row block i.
     let (vi_lo, vi_hi) = part::nested(n, q, i, j);
     // Canonical output slice: sub-slice i of column block j.
-    let (own_lo, own_hi) = part::nested(n, q, j, i);
+    let (own_lo, own_hi) = layout.owned_range(comm.rank());
 
     // Round-robin init.
     let mut v_slice: Vec<u32> = (vi_lo..vi_hi).map(|x| (x % k) as u32).collect();
@@ -74,11 +70,7 @@ pub(super) fn run_rank(
     let own_assign = |abj: &[u32]| abj[own_lo - bj_lo..own_hi - bj_lo].to_vec();
     let mut sizes = loop_common::global_sizes(comm, &world, &own_assign(&assign_block_j), k);
 
-    let mut objective_curve = Vec::new();
-    let mut changes_curve = Vec::new();
-    let mut iterations = 0;
-    let mut converged = false;
-    for _ in 0..cfg.max_iters {
+    let outcome = harness::drive_loop(cfg.max_iters, cfg.converge_on_stable, |_| {
         let inv = loop_common::inv_sizes(&sizes);
         // 2D B-stationary SpMM: Eᵀ tile, clusters [clo,chi) × block j.
         let et = sw.time("spmm", || {
@@ -157,25 +149,10 @@ pub(super) fn run_rank(
         }
         debug_assert_eq!(v_slice.len(), vi_hi - vi_lo);
         sw.add("update", crate::util::timing::clock_now() - t_update);
+        (changes, obj)
+    });
 
-        objective_curve.push(obj);
-        changes_curve.push(changes);
-        iterations += 1;
-        if changes == 0 && cfg.converge_on_stable {
-            converged = true;
-            break;
-        }
-    }
-
-    Ok(RankOutput {
-        assign: own_assign(&assign_block_j),
-        stopwatch: sw,
-        iterations,
-        converged,
-        objective_curve,
-        changes_curve,
-        peak_mem: tracker.peak(),
-    })
+    Ok(harness::finish_rank(own_assign(&assign_block_j), sw, outcome, &tracker))
 }
 
 #[cfg(test)]

@@ -10,9 +10,9 @@ use crate::backend::ComputeBackend;
 use crate::comm::{Comm, Grid2D, Group};
 use crate::dense::DenseMatrix;
 use crate::gemm::{redistribute_2d_to_1d, summa_gram, SummaPointTiles};
-use crate::model::MemTracker;
+use crate::layout::{harness, Partition};
 use crate::spmm::spmm_1d;
-use crate::util::{part, timing::Stopwatch};
+use crate::util::timing::Stopwatch;
 use crate::VivaldiError;
 
 use super::loop_common;
@@ -30,12 +30,7 @@ pub(super) fn run_rank(
     let k = cfg.k;
     let world = Group::world(p);
     let grid = Grid2D::new(p).expect("fit() checked square grid");
-    let mem = cfg.mem.unwrap_or_else(crate::config::MemModel::unlimited);
-    let tracker = if cfg.mem.is_some() {
-        MemTracker::new(comm.rank(), mem.budget)
-    } else {
-        MemTracker::unlimited(comm.rank())
-    };
+    let (mem, tracker) = harness::rank_tracker(comm.rank(), cfg.mem);
     let mut sw = Stopwatch::new();
 
     // SUMMA K (2D tiles), then redistribute to the 1D block rows.
@@ -48,16 +43,12 @@ pub(super) fn run_rank(
     drop(k_tile);
 
     // From here the loop is identical to the 1D algorithm.
-    let (lo, hi) = part::bounds(n, p, comm.rank());
+    let (lo, hi) = Partition::one_d(n, p).owned_range(comm.rank());
     let mut assign: Vec<u32> = (lo..hi).map(|x| (x % k) as u32).collect();
     comm.set_phase("update");
     let mut sizes = loop_common::global_sizes(comm, &world, &assign, k);
 
-    let mut objective_curve = Vec::new();
-    let mut changes_curve = Vec::new();
-    let mut iterations = 0;
-    let mut converged = false;
-    for _ in 0..cfg.max_iters {
+    let outcome = harness::drive_loop(cfg.max_iters, cfg.converge_on_stable, |_| {
         let inv = loop_common::inv_sizes(&sizes);
         let e_local =
             sw.time("spmm", || spmm_1d(comm, &world, &k_block, &assign, k, &inv, backend));
@@ -65,24 +56,10 @@ pub(super) fn run_rank(
             loop_common::local_update(comm, &world, backend, &e_local, &mut assign, k, &inv)
         });
         sizes = new_sizes;
-        objective_curve.push(obj);
-        changes_curve.push(changes);
-        iterations += 1;
-        if changes == 0 && cfg.converge_on_stable {
-            converged = true;
-            break;
-        }
-    }
+        (changes, obj)
+    });
 
-    Ok(RankOutput {
-        assign,
-        stopwatch: sw,
-        iterations,
-        converged,
-        objective_curve,
-        changes_curve,
-        peak_mem: tracker.peak(),
-    })
+    Ok(harness::finish_rank(assign, sw, outcome, &tracker))
 }
 
 #[cfg(test)]

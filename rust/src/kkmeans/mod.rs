@@ -198,27 +198,9 @@ pub fn fit_with_backend(
         Algo::OneFiveD => algo_15d::run_rank(comm, points, cfg, backend),
     });
 
-    // Propagate a collective failure (e.g. OOM) — every rank reports it.
-    let mut outs = Vec::with_capacity(p);
-    for r in rank_results {
-        outs.push(r?);
-    }
-
-    // All layouts return canonical contiguous slices in rank order.
-    let assignments: Vec<u32> = outs.iter().flat_map(|o| o.assign.iter().copied()).collect();
-    debug_assert_eq!(assignments.len(), points.rows());
-    let first = &outs[0];
-    Ok(FitResult {
-        iterations: first.iterations,
-        converged: first.converged,
-        objective_curve: first.objective_curve.clone(),
-        changes_curve: first.changes_curve.clone(),
-        peak_mem: outs.iter().map(|o| o.peak_mem).max().unwrap_or(0),
-        timings: outs.iter().map(|o| o.stopwatch.clone()).collect(),
-        comm_stats,
-        assignments,
-        ranks: p,
-    })
+    // All layouts return canonical contiguous slices in rank order; the
+    // shared harness propagates collective failures and reassembles.
+    crate::layout::harness::assemble_fit(points.rows(), p, rank_results, comm_stats)
 }
 
 #[cfg(test)]

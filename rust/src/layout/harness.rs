@@ -1,0 +1,157 @@
+//! The shared rank harness: everything a distributed fit repeats
+//! around its actual communication schedule.
+//!
+//! Before this module, every `algo_*.rs` and both `approx` rank
+//! functions carried identical copies of (a) the
+//! `MemTracker::new`-vs-`unlimited` construction, (b) the convergence
+//! loop skeleton (curves, iteration count, stop-on-stable), and (c) the
+//! `RankOutput` → `FitResult` assembly in the two `fit` entry points.
+//! One copy of each now lives here.
+
+use crate::comm::CommStats;
+use crate::config::MemModel;
+use crate::kkmeans::{FitResult, RankOutput};
+use crate::model::MemTracker;
+use crate::util::timing::Stopwatch;
+use crate::VivaldiError;
+
+/// Resolve a fit's optional memory model into the effective model plus
+/// this rank's tracker: enforcing when a model is given, unlimited
+/// otherwise.
+pub fn rank_tracker(rank: usize, mem: Option<MemModel>) -> (MemModel, MemTracker) {
+    match mem {
+        Some(m) => (m, MemTracker::new(rank, m.budget)),
+        None => (MemModel::unlimited(), MemTracker::unlimited(rank)),
+    }
+}
+
+/// What the shared convergence loop produced.
+#[derive(Debug, Clone)]
+pub struct LoopOutcome {
+    pub iterations: usize,
+    pub converged: bool,
+    pub objective_curve: Vec<f64>,
+    pub changes_curve: Vec<u64>,
+}
+
+/// Run the shared clustering-loop skeleton: `step(iter)` performs one
+/// full distributed iteration and returns (global assignment changes,
+/// global objective). Stops early on zero changes when
+/// `converge_on_stable` — identical semantics on every algorithm, so
+/// distributed runs of *any* layout agree on iteration counts.
+pub fn drive_loop(
+    max_iters: usize,
+    converge_on_stable: bool,
+    mut step: impl FnMut(usize) -> (u64, f64),
+) -> LoopOutcome {
+    let mut objective_curve = Vec::new();
+    let mut changes_curve = Vec::new();
+    let mut iterations = 0;
+    let mut converged = false;
+    for it in 0..max_iters {
+        let (changes, obj) = step(it);
+        objective_curve.push(obj);
+        changes_curve.push(changes);
+        iterations += 1;
+        if changes == 0 && converge_on_stable {
+            converged = true;
+            break;
+        }
+    }
+    LoopOutcome { iterations, converged, objective_curve, changes_curve }
+}
+
+/// Package a rank's final state into the [`RankOutput`] every algorithm
+/// returns.
+pub fn finish_rank(
+    assign: Vec<u32>,
+    stopwatch: Stopwatch,
+    outcome: LoopOutcome,
+    tracker: &MemTracker,
+) -> RankOutput {
+    RankOutput {
+        assign,
+        stopwatch,
+        iterations: outcome.iterations,
+        converged: outcome.converged,
+        objective_curve: outcome.objective_curve,
+        changes_curve: outcome.changes_curve,
+        peak_mem: tracker.peak(),
+    }
+}
+
+/// Assemble per-rank outcomes into a [`FitResult`], propagating a
+/// collective failure (e.g. OOM — every rank reports it). Relies on the
+/// canonical-reassembly property: ranks in order own contiguous slices
+/// of `0..n`, so a flat concat rebuilds the global assignment vector.
+pub fn assemble_fit(
+    n: usize,
+    p: usize,
+    rank_results: Vec<Result<RankOutput, VivaldiError>>,
+    comm_stats: Vec<CommStats>,
+) -> Result<FitResult, VivaldiError> {
+    let mut outs = Vec::with_capacity(p);
+    for r in rank_results {
+        outs.push(r?);
+    }
+    let assignments: Vec<u32> = outs.iter().flat_map(|o| o.assign.iter().copied()).collect();
+    debug_assert_eq!(assignments.len(), n);
+    let first = &outs[0];
+    Ok(FitResult {
+        iterations: first.iterations,
+        converged: first.converged,
+        objective_curve: first.objective_curve.clone(),
+        changes_curve: first.changes_curve.clone(),
+        peak_mem: outs.iter().map(|o| o.peak_mem).max().unwrap_or(0),
+        timings: outs.iter().map(|o| o.stopwatch.clone()).collect(),
+        comm_stats,
+        assignments,
+        ranks: p,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracker_resolution() {
+        let (_, unlimited) = rank_tracker(0, None);
+        assert!(unlimited.try_alloc(u64::MAX / 2, "huge"));
+        let model = MemModel { budget: 100, repl_factor: 1.0, redist_factor: 0.0 };
+        let (m, limited) = rank_tracker(3, Some(model));
+        assert_eq!(m.budget, 100);
+        assert!(limited.try_alloc(100, "fits"));
+        assert!(!limited.try_alloc(1, "over"));
+        assert_eq!(limited.rank(), 3);
+    }
+
+    #[test]
+    fn loop_stops_on_stable() {
+        let mut seq = vec![(3u64, 9.0), (1, 5.0), (0, 5.0), (7, 1.0)].into_iter();
+        let out = drive_loop(10, true, |_| seq.next().unwrap());
+        assert_eq!(out.iterations, 3);
+        assert!(out.converged);
+        assert_eq!(out.changes_curve, vec![3, 1, 0]);
+        assert_eq!(out.objective_curve, vec![9.0, 5.0, 5.0]);
+    }
+
+    #[test]
+    fn loop_runs_out_without_convergence() {
+        let out = drive_loop(4, true, |it| (1 + it as u64, 0.0));
+        assert_eq!(out.iterations, 4);
+        assert!(!out.converged);
+        // Zero changes without converge_on_stable keeps iterating.
+        let out = drive_loop(3, false, |_| (0, 0.0));
+        assert_eq!(out.iterations, 3);
+        assert!(!out.converged);
+    }
+
+    #[test]
+    fn assemble_propagates_errors() {
+        let err = VivaldiError::OutOfMemory { rank: 1, requested: 8, budget: 4, what: "t".into() };
+        let results = vec![Err::<RankOutput, _>(err.clone()), Err(err.clone())];
+        let got = assemble_fit(0, 2, results, vec![CommStats::new(), CommStats::new()]);
+        assert_eq!(got.unwrap_err(), err);
+    }
+}

@@ -1,0 +1,33 @@
+//! The partition layer: first-class descriptions of *who owns what* in
+//! every distributed algorithm, plus the shared per-rank harness.
+//!
+//! The paper's thesis is that scalable Kernel K-means comes from
+//! *composing* partitioning schemes (2D for the Gram matrix, 1D for V,
+//! nested 1.5D to glue them) rather than from any single primitive.
+//! Before this module existed, that composition lived as raw
+//! `util::part` arithmetic and `Grid2D` coordinate juggling repeated in
+//! every `algo_*.rs`, in `approx`, in `gemm::landmark`, and in every
+//! distributed test harness. [`Partition`] names the four schemes the
+//! codebase uses and answers, per rank:
+//!
+//! * the **owned range** — the canonical slice of `0..n` whose
+//!   assignments this rank reports (concatenating owned ranges in
+//!   [`Partition::canonical_order`] reassembles the global vector);
+//! * the **tile bounds** — the sub-block of the big operand (K or C)
+//!   this rank holds;
+//! * the **replication group** — the ranks that consume a copy of this
+//!   rank's owned assignment slice each iteration (the paper's
+//!   replication factor `c` is that group's size: P for the 1D layouts,
+//!   √P for the grid layouts).
+//!
+//! [`harness`] carries the other half of the duplication: memory-tracker
+//! construction, the convergence loop skeleton, and the
+//! `RankOutput` → `FitResult` assembly shared by `kkmeans::fit` and
+//! `approx::fit`. Adding a new partitioning scheme (2D landmark,
+//! streaming) now means one enum variant and one rank function, not
+//! another copy of the scaffolding.
+
+pub mod harness;
+pub mod partition;
+
+pub use partition::Partition;

@@ -1,0 +1,290 @@
+//! The [`Partition`] enum: the four partitioning schemes the
+//! distributed algorithms compose, built on `util::part` arithmetic.
+//!
+//! All grid variants use the **column-major** rank ordering of
+//! [`crate::comm::Grid2D`] (global rank `g` sits at row `g % q`, column
+//! `g / q`). That ordering is what makes the canonical reassembly order
+//! the identity: rank `g = j·q + i` owns sub-slice `i` of point block
+//! `j`, so walking global ranks in order walks `0..n` contiguously —
+//! the §V.C property the 1.5D reduce-scatters rely on.
+
+use crate::util::part;
+
+/// A partitioning scheme over `ranks()` simulated ranks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Partition {
+    /// 1D contiguous row blocks of `0..n` over `p` ranks (Algorithm 1
+    /// and the 1D landmark layout).
+    OneD { n: usize, p: usize },
+    /// 2D SUMMA tiles of an n×n operand on a q×q grid; canonical
+    /// ownership is still the nested 1D slice (sub-slice `row` of point
+    /// block `col`) — the 2D algorithm's output convention.
+    Tiles2D { n: usize, q: usize },
+    /// Nested 1.5D: the K tile stays 2D (same bounds as [`Partition::Tiles2D`])
+    /// while V stays 1D-partitioned as sub-slice `row` of point block
+    /// `col` — the paper's Algorithm 2 layout.
+    Nested15D { n: usize, q: usize },
+    /// Landmark grid for the approximate path: rank (i, j) holds the
+    /// cross-kernel tile C\[point block j, landmark block i\] of the
+    /// n×m landmark Gram — point blocks × landmark column blocks.
+    LandmarkGrid { n: usize, m: usize, q: usize },
+}
+
+fn grid_side(p: usize) -> Result<usize, String> {
+    let q = (p as f64).sqrt().round() as usize;
+    if q * q != p {
+        return Err(format!("grid partition requires a perfect-square rank count, got {p}"));
+    }
+    Ok(q)
+}
+
+impl Partition {
+    /// 1D row blocks of `0..n` over `p` ranks.
+    pub fn one_d(n: usize, p: usize) -> Partition {
+        assert!(p >= 1, "need at least one rank");
+        Partition::OneD { n, p }
+    }
+
+    /// SUMMA tiles of an n×n operand; `p` must be a perfect square.
+    pub fn tiles_2d(n: usize, p: usize) -> Result<Partition, String> {
+        Ok(Partition::Tiles2D { n, q: grid_side(p)? })
+    }
+
+    /// The nested 1.5D partition; `p` must be a perfect square.
+    pub fn nested_15d(n: usize, p: usize) -> Result<Partition, String> {
+        Ok(Partition::Nested15D { n, q: grid_side(p)? })
+    }
+
+    /// The landmark grid (points × landmark column blocks); `p` must be
+    /// a perfect square and every landmark block non-empty.
+    pub fn landmark_grid(n: usize, m: usize, p: usize) -> Result<Partition, String> {
+        let q = grid_side(p)?;
+        if m < q {
+            return Err(format!("landmark grid needs m >= sqrt(P) (m = {m}, sqrt(P) = {q})"));
+        }
+        Ok(Partition::LandmarkGrid { n, m, q })
+    }
+
+    /// Total ranks this partition is defined over.
+    pub fn ranks(&self) -> usize {
+        match *self {
+            Partition::OneD { p, .. } => p,
+            Partition::Tiles2D { q, .. }
+            | Partition::Nested15D { q, .. }
+            | Partition::LandmarkGrid { q, .. } => q * q,
+        }
+    }
+
+    /// Points n being partitioned.
+    pub fn points(&self) -> usize {
+        match *self {
+            Partition::OneD { n, .. }
+            | Partition::Tiles2D { n, .. }
+            | Partition::Nested15D { n, .. }
+            | Partition::LandmarkGrid { n, .. } => n,
+        }
+    }
+
+    /// Grid side √P for the grid variants, `None` for 1D.
+    pub fn grid_side(&self) -> Option<usize> {
+        match *self {
+            Partition::OneD { .. } => None,
+            Partition::Tiles2D { q, .. }
+            | Partition::Nested15D { q, .. }
+            | Partition::LandmarkGrid { q, .. } => Some(q),
+        }
+    }
+
+    /// (row, col) grid coordinates of a global rank (column-major);
+    /// 1D ranks sit on a single row.
+    fn coords(&self, rank: usize) -> (usize, usize) {
+        debug_assert!(rank < self.ranks());
+        match *self {
+            Partition::OneD { .. } => (0, rank),
+            Partition::Tiles2D { q, .. }
+            | Partition::Nested15D { q, .. }
+            | Partition::LandmarkGrid { q, .. } => (rank % q, rank / q),
+        }
+    }
+
+    /// Canonical owned range \[lo, hi) of `0..n`: the slice whose final
+    /// assignments this rank reports. Identical to the historical
+    /// `util::part` expressions each algorithm used inline.
+    pub fn owned_range(&self, rank: usize) -> (usize, usize) {
+        debug_assert!(rank < self.ranks());
+        match *self {
+            Partition::OneD { n, p } => part::bounds(n, p, rank),
+            Partition::Tiles2D { n, q }
+            | Partition::Nested15D { n, q }
+            | Partition::LandmarkGrid { n, q, .. } => {
+                let (i, j) = self.coords(rank);
+                part::nested(n, q, j, i)
+            }
+        }
+    }
+
+    /// Length of the canonical owned range.
+    pub fn owned_len(&self, rank: usize) -> usize {
+        let (lo, hi) = self.owned_range(rank);
+        hi - lo
+    }
+
+    /// ((row_lo, row_hi), (col_lo, col_hi)) of the operand tile this
+    /// rank holds: the K block row (1D), the K tile (2D / 1.5D), or the
+    /// C tile (landmark grid: point rows of the rank's grid *column*
+    /// block × landmark columns of its grid *row* block).
+    pub fn tile_bounds(&self, rank: usize) -> ((usize, usize), (usize, usize)) {
+        debug_assert!(rank < self.ranks());
+        match *self {
+            Partition::OneD { n, p } => (part::bounds(n, p, rank), (0, n)),
+            Partition::Tiles2D { n, q } | Partition::Nested15D { n, q } => {
+                let (i, j) = self.coords(rank);
+                (part::bounds(n, q, i), part::bounds(n, q, j))
+            }
+            Partition::LandmarkGrid { n, m, q } => {
+                let (i, j) = self.coords(rank);
+                (part::bounds(n, q, j), part::bounds(m, q, i))
+            }
+        }
+    }
+
+    /// The ranks that hold a copy of this rank's owned assignment slice
+    /// during an iteration (owner included): the whole world for 1D
+    /// (full allgather), the grid row whose tile row-block covers the
+    /// slice for the 2D/1.5D layouts, and the grid column sharing the
+    /// point block for the landmark grid.
+    pub fn replication_group(&self, rank: usize) -> Vec<usize> {
+        debug_assert!(rank < self.ranks());
+        match *self {
+            Partition::OneD { p, .. } => (0..p).collect(),
+            Partition::Tiles2D { q, .. } | Partition::Nested15D { q, .. } => {
+                // Owned slice ⊂ point block `col`; consumed by the ranks
+                // whose tile row-block is `col` = grid row `col`.
+                let (_, j) = self.coords(rank);
+                (0..q).map(|c| c * q + j).collect()
+            }
+            Partition::LandmarkGrid { q, .. } => {
+                // Owned slice ⊂ point block `col`; the C tiles with those
+                // point rows sit on grid column `col` (contiguous global
+                // ranks — the column-major property again).
+                let (_, j) = self.coords(rank);
+                (j * q..j * q + q).collect()
+            }
+        }
+    }
+
+    /// The paper's replication factor `c`: how many ranks hold each
+    /// assignment slice (P for 1D, √P for the grid layouts).
+    pub fn replication_factor(&self) -> usize {
+        match *self {
+            Partition::OneD { p, .. } => p,
+            Partition::Tiles2D { q, .. }
+            | Partition::Nested15D { q, .. }
+            | Partition::LandmarkGrid { q, .. } => q,
+        }
+    }
+
+    /// Rank order in which concatenating `owned_range` slices walks
+    /// `0..n` contiguously. The column-major grid makes this the
+    /// identity for every variant — pinned by the property tests, and
+    /// the reason `kkmeans::fit` can assemble assignments with a flat
+    /// concat over ranks.
+    pub fn canonical_order(&self) -> Vec<usize> {
+        (0..self.ranks()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_partitions(n: usize, m: usize, p_square: usize) -> Vec<Partition> {
+        vec![
+            Partition::one_d(n, p_square),
+            Partition::tiles_2d(n, p_square).unwrap(),
+            Partition::nested_15d(n, p_square).unwrap(),
+            Partition::landmark_grid(n, m, p_square).unwrap(),
+        ]
+    }
+
+    #[test]
+    fn canonical_order_tiles_zero_to_n() {
+        for p in [1usize, 4, 9, 16] {
+            for n in [p, 37, 100, 144] {
+                for part in all_partitions(n, 16.min(n), p) {
+                    let mut cursor = 0;
+                    for r in part.canonical_order() {
+                        let (lo, hi) = part.owned_range(r);
+                        assert_eq!(lo, cursor, "{part:?} rank {r}");
+                        assert!(hi >= lo);
+                        cursor = hi;
+                    }
+                    assert_eq!(cursor, n, "{part:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_d_matches_util_part() {
+        let part = Partition::one_d(103, 7);
+        for r in 0..7 {
+            assert_eq!(part.owned_range(r), part::bounds(103, 7, r));
+            assert_eq!(part.tile_bounds(r), (part::bounds(103, 7, r), (0, 103)));
+        }
+    }
+
+    #[test]
+    fn nested_matches_util_part() {
+        let part = Partition::nested_15d(145, 9).unwrap();
+        for r in 0..9 {
+            let (i, j) = (r % 3, r / 3);
+            assert_eq!(part.owned_range(r), part::nested(145, 3, j, i));
+            assert_eq!(
+                part.tile_bounds(r),
+                (part::bounds(145, 3, i), part::bounds(145, 3, j))
+            );
+        }
+    }
+
+    #[test]
+    fn landmark_grid_tile_and_ownership() {
+        let part = Partition::landmark_grid(100, 10, 4).unwrap();
+        for r in 0..4 {
+            let ((plo, phi), (llo, lhi)) = part.tile_bounds(r);
+            // Owned point range lies inside the tile's point rows.
+            let (olo, ohi) = part.owned_range(r);
+            assert!(plo <= olo && ohi <= phi, "rank {r}");
+            assert!(lhi <= 10 && llo <= lhi);
+        }
+        // Every (point block, landmark block) pair appears exactly once.
+        let mut seen = std::collections::HashSet::new();
+        for r in 0..4 {
+            assert!(seen.insert(part.tile_bounds(r)), "duplicate tile at rank {r}");
+        }
+    }
+
+    #[test]
+    fn replication_groups() {
+        // 1D: everyone holds everything.
+        assert_eq!(Partition::one_d(10, 3).replication_group(1), vec![0, 1, 2]);
+        // Landmark grid: the column group, contiguous global ranks.
+        let lg = Partition::landmark_grid(64, 8, 9).unwrap();
+        assert_eq!(lg.replication_group(4), vec![3, 4, 5]); // rank 4 = (1, 1)
+        assert_eq!(lg.replication_factor(), 3);
+        // Nested 1.5D: the grid row whose tile row-block is the owner's
+        // point block (rank 5 = (1, 2) on q=2... use q=3: rank 5 = (2, 1)).
+        let n15 = Partition::nested_15d(64, 9).unwrap();
+        // rank 5 sits at (row 2, col 1): slice ⊂ block 1, consumers are
+        // grid row 1 = ranks {1, 4, 7}.
+        assert_eq!(n15.replication_group(5), vec![1, 4, 7]);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        assert!(Partition::tiles_2d(10, 3).is_err());
+        assert!(Partition::nested_15d(10, 8).is_err());
+        assert!(Partition::landmark_grid(10, 1, 4).is_err()); // m < √P
+        assert!(Partition::landmark_grid(10, 2, 4).is_ok());
+    }
+}

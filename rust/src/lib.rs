@@ -40,6 +40,16 @@
 //! println!("converged after {} iters", out.iterations);
 //! ```
 //!
+//! ## The partition layer
+//!
+//! Every algorithm above is a *composition* of partitioning schemes —
+//! the paper's actual thesis. The [`layout`] module makes those schemes
+//! first-class: [`layout::Partition`] describes the 1D block, 2D
+//! SUMMA-tile, nested 1.5D, and landmark-grid partitions (owned range,
+//! tile bounds, replication group, canonical reassembly order), and
+//! [`layout::harness`] carries the per-rank scaffolding (tracker
+//! construction, convergence loop, result assembly) every fit shares.
+//!
 //! ## When the exact Gram does not fit: the landmark path
 //!
 //! The exact algorithms distribute the full n×n kernel matrix; past the
@@ -64,11 +74,34 @@
 //! println!("approximate fit: {} iters", out.iterations);
 //! ```
 //!
+//! When m itself grows large, the 1D landmark layout hits the same wall
+//! the exact 1D algorithm does (replicated W, a k×m coefficient
+//! allreduce): selecting [`approx::LandmarkLayout::OneFiveD`] instead
+//! tiles C on the √P×√P grid (point blocks × landmark column blocks),
+//! keeps one W replica per grid column, and lands E through a column
+//! reduce-scatter exactly on each rank's canonical slice:
+//!
+//! ```no_run
+//! use vivaldi::approx::{self, ApproxConfig, LandmarkLayout};
+//! use vivaldi::data::synth;
+//!
+//! let ds = synth::concentric_rings(4096, 2, 42);
+//! let cfg = ApproxConfig {
+//!     k: 2,
+//!     m: 1024,
+//!     layout: LandmarkLayout::OneFiveD,
+//!     ..Default::default()
+//! };
+//! let out = approx::fit(4, &ds.points, &cfg).unwrap();
+//! println!("1.5D landmark fit: {} iters", out.iterations);
+//! ```
+//!
 //! See `DESIGN.md` for the full system inventory and the experiment
 //! index, and `EXPERIMENTS.md` for the paper-vs-measured record.
 
 pub mod util;
 pub mod comm;
+pub mod layout;
 pub mod model;
 pub mod dense;
 pub mod sparse;

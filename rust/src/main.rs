@@ -58,8 +58,12 @@ fn print_help() {
          USAGE: vivaldi <COMMAND> [FLAGS]\n\
          \n\
          COMMANDS:\n\
-         \x20 run               one fit: --algo 1d|h1d|2d|1.5d --gpus G --k K\n\
-         \x20                   --n N --dataset kdd|higgs|mnist8m [--pjrt]\n\
+         \x20 run               one fit: --algo 1d|h1d|2d|1.5d|landmark --gpus G\n\
+         \x20                   --k K --n N --dataset kdd|higgs|mnist8m [--pjrt]\n\
+         \x20                   landmark extras: --m M (default n/8),\n\
+         \x20                   --landmark-layout 1d|1.5d, --budget BYTES\n\
+         \x20                   (on OOM the feasibility report prints which\n\
+         \x20                   path fits the budget)\n\
          \x20 weak-scaling      Fig. 2 [--breakdown → Fig. 3] [--quick]\n\
          \x20 strong-scaling    Fig. 4 [--breakdown → Fig. 5] [--quick]\n\
          \x20 sliding-window    Fig. 6 speedup over the single-device baseline\n\
@@ -126,10 +130,14 @@ fn parse_datasets(f: &Flags) -> Vec<PaperDataset> {
 
 fn cmd_run(args: &[String]) -> i32 {
     let f = Flags { args };
-    let algo = match Algo::parse(f.get("--algo").unwrap_or("1.5d")) {
+    let algo_str = f.get("--algo").unwrap_or("1.5d");
+    if algo_str.eq_ignore_ascii_case("landmark") {
+        return cmd_run_landmark(&f);
+    }
+    let algo = match Algo::parse(algo_str) {
         Some(a) => a,
         None => {
-            eprintln!("unknown --algo (use 1d|h1d|2d|1.5d)");
+            eprintln!("unknown --algo (use 1d|h1d|2d|1.5d|landmark)");
             return 2;
         }
     };
@@ -198,6 +206,115 @@ fn cmd_run(args: &[String]) -> i32 {
         }
         Err(e) => {
             eprintln!("fit failed: {e}");
+            1
+        }
+    }
+}
+
+/// `vivaldi run --algo landmark`: one landmark-approximate fit, with
+/// the layout knob and the feasibility report on OOM (the planning
+/// answer to "which path can hold this workload at all").
+fn cmd_run_landmark(f: &Flags) -> i32 {
+    use vivaldi::approx::{self, ApproxConfig, LandmarkLayout};
+    use vivaldi::config::{landmark_feasibility, MemModel};
+
+    let g = f.usize_or("--gpus", 4);
+    let k = f.usize_or("--k", 16);
+    let n = f.usize_or("--n", 4096);
+    let m = f.usize_or("--m", (n / 8).max(k));
+    let iters = f.usize_or("--iters", 10);
+    let layout = match LandmarkLayout::parse(f.get("--landmark-layout").unwrap_or("1d")) {
+        Some(l) => l,
+        None => {
+            eprintln!("unknown --landmark-layout (use 1d|1.5d)");
+            return 2;
+        }
+    };
+    let mem = f.get("--budget").map(|v| match v.parse::<u64>() {
+        Ok(budget) => MemModel {
+            budget,
+            repl_factor: MemModel::LAMBDA_REPL,
+            redist_factor: MemModel::NU_REDIST,
+        },
+        Err(_) => {
+            eprintln!("--budget takes a byte count");
+            std::process::exit(2);
+        }
+    });
+    let ds = PaperDataset::parse(f.get("--dataset").unwrap_or("higgs"))
+        .unwrap_or(PaperDataset::HiggsLike);
+    let scale = load_scale(f);
+    let data = ds.generate(n, scale.d_cap(ds), scale.seed);
+    let cfg = ApproxConfig {
+        k,
+        m,
+        layout,
+        max_iters: iters,
+        kernel: KernelFn::paper_polynomial(),
+        converge_on_stable: true,
+        mem,
+        ..Default::default()
+    };
+    println!(
+        "landmark fit: layout={} G={g} n={} d={} m={m} k={k} iters<={iters}",
+        layout.name(),
+        data.n(),
+        data.d(),
+    );
+    let t0 = std::time::Instant::now();
+    match approx::fit(g, &data.points, &cfg) {
+        Ok(out) => {
+            println!(
+                "done in {:.3}s wall: {} iterations, converged={}, peak mem {}",
+                t0.elapsed().as_secs_f64(),
+                out.iterations,
+                out.converged,
+                vivaldi::util::human_bytes(out.peak_mem)
+            );
+            let crit = out.critical_timings();
+            for (phase, secs) in crit.phases() {
+                println!("  phase {phase:<8} {secs:.4}s (critical path)");
+            }
+            let total = vivaldi::comm::CommStats::merged_sum(&out.comm_stats).total();
+            println!(
+                "  comm: {} messages, {} total",
+                total.msgs,
+                vivaldi::util::human_bytes(total.bytes)
+            );
+            if !data.labels.is_empty() {
+                let nmi = vivaldi::quality::nmi(&out.assignments, &data.labels, k);
+                println!("  quality: NMI vs generator labels = {nmi:.3}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("fit failed: {e}");
+            if matches!(e, vivaldi::VivaldiError::OutOfMemory { .. }) {
+                let report_mem = mem.unwrap_or_else(MemModel::unlimited);
+                let feas = landmark_feasibility(data.n(), data.d(), m, g, &report_mem);
+                eprintln!(
+                    "feasibility @ {} budget/rank:",
+                    vivaldi::util::human_bytes(feas.budget)
+                );
+                eprintln!(
+                    "  exact 1.5D tile     {:>12}  fits: {}",
+                    vivaldi::util::human_bytes(feas.exact_bytes_per_rank),
+                    feas.exact_fits
+                );
+                eprintln!(
+                    "  landmark 1D  (m={m}) {:>12}  fits: {}",
+                    vivaldi::util::human_bytes(feas.landmark_bytes_per_rank),
+                    feas.landmark_fits
+                );
+                eprintln!(
+                    "  landmark 1.5D (m={m}) {:>12}  fits: {}",
+                    vivaldi::util::human_bytes(feas.landmark_15d_bytes_per_rank),
+                    feas.landmark_15d_fits
+                );
+                if feas.recommends_landmark() {
+                    eprintln!("  -> only the landmark path can hold this workload");
+                }
+            }
             1
         }
     }

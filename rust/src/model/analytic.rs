@@ -81,6 +81,24 @@ pub fn d_sliding_window(_c: CostParams) -> CommCost {
     CommCost::new(0.0, 0.0)
 }
 
+/// 1D landmark reduced-rank update per iteration: the k×m coefficient
+/// Allreduce (binomial reduce + bcast). Words on the busiest rank are
+/// ⌈log₂P⌉·k·m — the bcast root forwards that many full copies —
+/// independent of n, but flat in P: the term that walls as m grows.
+pub fn d_landmark_1d(c: CostParams, m: usize) -> CommCost {
+    let lg = (c.p as f64).log2().ceil().max(1.0);
+    CommCost::new(lg, (c.k * m) as f64 * lg)
+}
+
+/// 1.5D landmark reduced-rank update per iteration: assignments and E
+/// move along grid columns, coefficient blocks along rows and the
+/// diagonal — α·O(√P) + β·O(k·m/√P + n(k+1)/√P), log factors dropped as
+/// in Table I. Beats [`d_landmark_1d`] whenever m outgrows ~n/√P.
+pub fn d_landmark_15d(c: CostParams, m: usize) -> CommCost {
+    let q = sqrt_p(c.p);
+    CommCost::new(q, (c.k * m) as f64 / q + (c.n * (c.k + 1)) as f64 / q)
+}
+
 /// All Table I rows for a parameter set, in the paper's order:
 /// (algorithm, K cost, Dᵀ cost).
 pub fn table1(c: CostParams) -> Vec<(&'static str, CommCost, CommCost)> {
@@ -137,6 +155,20 @@ mod tests {
         let cost = k_h1d(c);
         let summa = k_summa(c);
         assert!(cost.words > 10.0 * summa.words);
+    }
+
+    #[test]
+    fn landmark_15d_wins_at_large_m() {
+        let c = CostParams { p: 64, ..C };
+        // m far above n/√P: the 1.5D layout's sharded coefficient
+        // exchange beats the flat k·m allreduce.
+        let big_m = c.n / 8;
+        assert!(d_landmark_15d(c, big_m).words < d_landmark_1d(c, big_m).words);
+        // m far below n/√P: the E reduce-scatter dominates and the 1D
+        // layout communicates less — the crossover the layout knob
+        // exists for.
+        let small_m = 512;
+        assert!(d_landmark_15d(c, small_m).words > d_landmark_1d(c, small_m).words);
     }
 
     #[test]

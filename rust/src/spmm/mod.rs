@@ -29,3 +29,41 @@ pub mod onefived;
 pub use onedim::spmm_1d;
 pub use onefived::spmm_15d;
 pub use twodim::spmm_2d;
+
+use crate::comm::{Comm, Group};
+use crate::dense::DenseMatrix;
+use crate::util::part;
+
+/// Reduce-scatter an f32 row-major matrix along `g`, split by the
+/// `g.size()`-way block partition of its **rows**. Blocks are padded to
+/// the widest so the wire blocks are equal (`reduce_scatter_block`
+/// needs that); the pad is dropped on receipt. Member index `my_idx`
+/// receives the elementwise sum of everyone's copy of its own row
+/// block.
+///
+/// The shared primitive behind the exact 1.5D SpMM's column split, the
+/// row-split ablation, and the 1.5D landmark path's E exchange.
+pub(crate) fn reduce_scatter_row_blocks(
+    comm: &Comm,
+    g: &Group,
+    data: &DenseMatrix,
+    my_idx: usize,
+) -> DenseMatrix {
+    let q = g.size();
+    let rows = data.rows();
+    let cols = data.cols();
+    let max_rows = (0..q).map(|l| part::len(rows, q, l)).max().unwrap();
+    let mut buf = vec![0.0f32; q * max_rows * cols];
+    for l in 0..q {
+        let (lo, hi) = part::bounds(rows, q, l);
+        let src = &data.data()[lo * cols..hi * cols];
+        buf[l * max_rows * cols..l * max_rows * cols + src.len()].copy_from_slice(src);
+    }
+    let mine = comm.reduce_scatter_block(g, buf, |acc, other| {
+        for (a, b) in acc.iter_mut().zip(other) {
+            *a += b;
+        }
+    });
+    let my_rows = part::len(rows, q, my_idx);
+    DenseMatrix::from_vec(my_rows, cols, mine[..my_rows * cols].to_vec())
+}

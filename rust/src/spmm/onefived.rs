@@ -36,13 +36,11 @@ pub fn spmm_15d(
     grid: &Grid2D,
     k_tile: &DenseMatrix,
     local_assign: &[u32],
-    _n: usize,
     k: usize,
     inv_sizes: &[f32],
     backend: &dyn ComputeBackend,
 ) -> DenseMatrix {
     comm.set_phase("spmm");
-    let q = grid.q();
     let (i, j) = grid.coords(comm.rank());
     let row_g = grid.row_group(i);
     let col_g = grid.col_group(j);
@@ -70,27 +68,10 @@ pub fn spmm_15d(
     let et_partial = backend.spmm_vk_t(k_tile, &assign_block_i, k, inv_sizes);
 
     // (3) Transpose to (n_j × k) — Eᵀ column-major — and reduce-scatter
-    // along the process column, split by point sub-slices of block j.
-    let e_partial = et_partial.transpose();
-    let n_j = e_partial.rows();
-    // Equal blocks for the reduce-scatter: pad sub-slices to the max
-    // sub-slice height (remainder handling; no-op when q | n_j).
-    let max_rows = (0..q).map(|l| part::len(n_j, q, l)).max().unwrap();
-    let padded_len = q * max_rows * k;
-    let mut buf = vec![0.0f32; padded_len];
-    for l in 0..q {
-        let (lo, hi) = part::bounds(n_j, q, l);
-        let src = &e_partial.data()[lo * k..hi * k];
-        buf[l * max_rows * k..l * max_rows * k + src.len()].copy_from_slice(src);
-    }
-    let mine = comm.reduce_scatter_block(&col_g, buf, |acc, other| {
-        for (a, b) in acc.iter_mut().zip(other) {
-            *a += b;
-        }
-    });
-    // This rank is row l = i of column j; its slice length:
-    let my_rows = part::len(n_j, q, i);
-    DenseMatrix::from_vec(my_rows, k, mine[..my_rows * k].to_vec())
+    // along the process column, split by point sub-slices of block j
+    // (padded to equal wire blocks). This rank is row l = i of column
+    // j, so exactly its own 1D V partition's E rows land here.
+    super::reduce_scatter_row_blocks(comm, &col_g, &et_partial.transpose(), i)
 }
 
 #[cfg(test)]
@@ -98,6 +79,7 @@ mod tests {
     use super::*;
     use crate::backend::NativeBackend;
     use crate::comm::World;
+    use crate::layout::Partition;
     use crate::sparse::VPartition;
     use crate::util::rng::Rng;
 
@@ -115,20 +97,19 @@ mod tests {
         let expect = crate::sparse::ops::spmm_vk(&k_full, &assign, k, &inv);
 
         let grid = Grid2D::new(p).unwrap();
-        let q = grid.q();
+        let layout = Partition::nested_15d(n, p).unwrap();
         let gref = &grid;
+        let lref = &layout;
         let kref = &k_full;
         let aref = &assign;
         let iref = &inv;
         let (blocks, _) = World::run(p, |comm| {
-            let (i, j) = gref.coords(comm.rank());
-            let (rlo, rhi) = part::bounds(n, q, i);
-            let (clo, chi) = part::bounds(n, q, j);
+            let ((rlo, rhi), (clo, chi)) = lref.tile_bounds(comm.rank());
             let tile = kref.block(rlo, rhi, clo, chi);
             // Own 1D V partition: rank p = j·q + i owns nested(n,q,j,i).
-            let (vlo, vhi) = part::nested(n, q, j, i);
+            let (vlo, vhi) = lref.owned_range(comm.rank());
             let be = NativeBackend::new();
-            spmm_15d(comm, gref, &tile, &aref[vlo..vhi], n, k, iref, &be)
+            spmm_15d(comm, gref, &tile, &aref[vlo..vhi], k, iref, &be)
         });
         // Global ranks in order own contiguous nested slices.
         let e_full = DenseMatrix::vstack(&blocks);
@@ -180,19 +161,18 @@ mod tests {
             }
             let inv = VPartition::inv_sizes(&sizes);
             let grid = Grid2D::new(p).unwrap();
-            let q = grid.q();
+            let layout = Partition::nested_15d(n, p).unwrap();
             let gref = &grid;
+            let lref = &layout;
             let kref = &k_full;
             let aref = &assign;
             let iref = &inv;
             let (_, stats) = World::run(p, |comm| {
-                let (i, j) = gref.coords(comm.rank());
-                let (rlo, rhi) = part::bounds(n, q, i);
-                let (clo, chi) = part::bounds(n, q, j);
+                let ((rlo, rhi), (clo, chi)) = lref.tile_bounds(comm.rank());
                 let tile = kref.block(rlo, rhi, clo, chi);
-                let (vlo, vhi) = part::nested(n, q, j, i);
+                let (vlo, vhi) = lref.owned_range(comm.rank());
                 let be = NativeBackend::new();
-                spmm_15d(comm, gref, &tile, &aref[vlo..vhi], n, k, iref, &be)
+                spmm_15d(comm, gref, &tile, &aref[vlo..vhi], k, iref, &be)
             });
             let max_rank: u64 = stats.iter().map(|s| s.get("spmm").bytes).max().unwrap();
             per_rank.push(max_rank);
@@ -221,7 +201,6 @@ pub fn spmm_15d_rowsplit(
     grid: &Grid2D,
     k_tile: &DenseMatrix,
     local_assign: &[u32],
-    _n: usize,
     k: usize,
     inv_sizes: &[f32],
     backend: &dyn ComputeBackend,
@@ -246,20 +225,7 @@ pub fn spmm_15d_rowsplit(
 
     // (3) Reduce-scatter along the process column split by CLUSTER
     // rows (Eq. 21): rank (l, j) receives Eᵀ[cluster block l, block j].
-    let max_rows = (0..q).map(|l| part::len(k, q, l)).max().unwrap();
-    let mut buf = vec![0.0f32; q * max_rows * n_j];
-    for l in 0..q {
-        let (lo, hi) = part::bounds(k, q, l);
-        let src = &et_partial.data()[lo * n_j..hi * n_j];
-        buf[l * max_rows * n_j..l * max_rows * n_j + src.len()].copy_from_slice(src);
-    }
-    let mine = comm.reduce_scatter_block(&col_g, buf, |acc, other| {
-        for (a, b) in acc.iter_mut().zip(other) {
-            *a += b;
-        }
-    });
-    let (clo, chi) = part::bounds(k, q, i);
-    let my_cluster_rows = chi - clo;
+    let mine = super::reduce_scatter_row_blocks(comm, &col_g, &et_partial, i);
 
     // (4) THE PRICE OF THE ROW SPLIT: Eᵀ is now 2D-partitioned, so the
     // communication-free update is lost. Rebuild the 1D layout with an
@@ -267,7 +233,7 @@ pub fn spmm_15d_rowsplit(
     // counted under "update" — the extra n·k/√P words per rank that
     // the paper's column split avoids.
     comm.set_phase("update");
-    let full_cols = comm.allgather_concat(&col_g, mine[..my_cluster_rows * n_j].to_vec());
+    let full_cols = comm.allgather_concat(&col_g, mine.into_vec());
     // Reassemble Eᵀ (k × n_j) from per-cluster-block pieces.
     let mut et = DenseMatrix::zeros(k, n_j);
     let mut off = 0usize;
@@ -289,6 +255,7 @@ mod ablation_tests {
     use super::*;
     use crate::backend::NativeBackend;
     use crate::comm::World;
+    use crate::layout::Partition;
     use crate::sparse::VPartition;
     use crate::util::rng::Rng;
 
@@ -309,23 +276,22 @@ mod ablation_tests {
         }
         let inv = VPartition::inv_sizes(&sizes);
         let grid = Grid2D::new(p).unwrap();
-        let q = grid.q();
+        let layout = Partition::nested_15d(n, p).unwrap();
         let run = |rowsplit: bool| {
             let gref = &grid;
+            let lref = &layout;
             let kref = &k_full;
             let aref = &assign;
             let iref = &inv;
             World::run(p, move |comm| {
-                let (i, j) = gref.coords(comm.rank());
-                let (rlo, rhi) = part::bounds(n, q, i);
-                let (clo, chi) = part::bounds(n, q, j);
+                let ((rlo, rhi), (clo, chi)) = lref.tile_bounds(comm.rank());
                 let tile = kref.block(rlo, rhi, clo, chi);
-                let (vlo, vhi) = part::nested(n, q, j, i);
+                let (vlo, vhi) = lref.owned_range(comm.rank());
                 let be = NativeBackend::new();
                 if rowsplit {
-                    spmm_15d_rowsplit(comm, gref, &tile, &aref[vlo..vhi], n, k, iref, &be)
+                    spmm_15d_rowsplit(comm, gref, &tile, &aref[vlo..vhi], k, iref, &be)
                 } else {
-                    spmm_15d(comm, gref, &tile, &aref[vlo..vhi], n, k, iref, &be)
+                    spmm_15d(comm, gref, &tile, &aref[vlo..vhi], k, iref, &be)
                 }
             })
         };

@@ -2,7 +2,7 @@
 //! independent single-rank oracle, quality vs the exact-path oracle,
 //! and the feasibility story (exact OOMs, landmark fits).
 
-use vivaldi::approx::{self, oracle as approx_oracle, ApproxConfig};
+use vivaldi::approx::{self, oracle as approx_oracle, ApproxConfig, LandmarkLayout};
 use vivaldi::config::{landmark_feasibility, MemModel};
 use vivaldi::data::landmarks::LandmarkSeeding;
 use vivaldi::data::synth;
@@ -52,6 +52,68 @@ fn matches_oracle_at_p_1_4_9() {
             }
         }
     }
+}
+
+/// The same acceptance bar for the 1.5D landmark layout: identical
+/// landmark set, identical reduced-rank math, C tiled on the grid and
+/// the coefficient exchange sharded — the assignments must still match
+/// the single-rank oracle at p ∈ {1, 4, 9} (same one-boundary-point
+/// tolerance across the float formats and reduction orders).
+#[test]
+fn fifteen_d_matches_oracle_at_p_1_4_9() {
+    let kernel = KernelFn::paper_polynomial();
+    for seed in [201u64, 202] {
+        let ds = synth::gaussian_blobs(144, 5, 4, 4.5, seed);
+        for m in [16usize, 48] {
+            for p in [1usize, 4, 9] {
+                let cfg = ApproxConfig {
+                    layout: LandmarkLayout::OneFiveD,
+                    ..approx_cfg(4, m, kernel)
+                };
+                let lidx = approx::landmark_indices(&ds.points, &cfg, p);
+                let want = approx_oracle::reference_fit(&ds.points, &lidx, 4, &kernel, 40);
+                assert!(want.converged, "oracle must converge (seed={seed} m={m} p={p})");
+                let out = approx::fit(p, &ds.points, &cfg).unwrap();
+                assert!(out.converged, "fit must converge (seed={seed} m={m} p={p})");
+                let diffs = out
+                    .assignments
+                    .iter()
+                    .zip(&want.assignments)
+                    .filter(|(a, b)| a != b)
+                    .count();
+                assert!(
+                    diffs <= 1,
+                    "seed={seed} m={m} p={p}: {diffs}/{} points disagree with the oracle",
+                    out.assignments.len()
+                );
+                let score = nmi(&out.assignments, &want.assignments, 4);
+                assert!(score >= 0.99, "seed={seed} m={m} p={p} nmi-vs-oracle={score}");
+            }
+        }
+    }
+}
+
+/// The 1.5D layout under a memory budget: off-diagonal ranks carry no
+/// W replica, so its collective OOM check and peak accounting must
+/// still respect the budget when it fits.
+#[test]
+fn fifteen_d_respects_budget() {
+    let n = 512;
+    let ds = synth::concentric_rings(n, 2, 271);
+    let m = n / 8;
+    let cfg = ApproxConfig {
+        k: 2,
+        m,
+        layout: LandmarkLayout::OneFiveD,
+        kernel: KernelFn::gaussian(2.0),
+        max_iters: 20,
+        mem: Some(MemModel { budget: 200 << 10, repl_factor: 1.0, redist_factor: 0.0 }),
+        ..Default::default()
+    };
+    let out = approx::fit(4, &ds.points, &cfg).unwrap();
+    assert!(out.peak_mem <= 200 << 10);
+    let score = nmi(&out.assignments, &ds.labels, 2);
+    assert!(score >= 0.9, "nmi={score}");
 }
 
 /// Quality bar from the issue: ≥ 0.9 NMI on concentric rings with

@@ -118,6 +118,56 @@ fn fifteen_d_spmm_within_table1_band() {
     }
 }
 
+/// The 1.5D landmark acceptance bar: at P = 16, the busiest rank's
+/// counted "update"-phase bytes must sit strictly below the 1D landmark
+/// layout's k·m coefficient-allreduce volume — pinned against the
+/// closed form ⌈log₂P⌉·k·m·4 B ([`model::analytic::d_landmark_1d`]:
+/// the binomial bcast root forwards that many full copies), which the
+/// measured 1D path must in turn meet or exceed.
+#[test]
+fn landmark_15d_update_beats_1d_allreduce_closed_form() {
+    use vivaldi::approx::{self, ApproxConfig, LandmarkLayout};
+    use vivaldi::model::analytic::{d_landmark_1d, CostParams};
+
+    let points = data();
+    const M: usize = 96; // m > n/√P = 36: the regime the 1.5D layout targets
+    let p = 16;
+    let mk = |layout| ApproxConfig {
+        k: K,
+        m: M,
+        layout,
+        kernel: KernelFn::linear(),
+        max_iters: 1,
+        converge_on_stable: false,
+        ..Default::default()
+    };
+    let one = approx::fit(p, &points, &mk(LandmarkLayout::OneD)).unwrap();
+    let fif = approx::fit(p, &points, &mk(LandmarkLayout::OneFiveD)).unwrap();
+    assert_eq!(one.iterations, 1);
+    assert_eq!(fif.iterations, 1);
+
+    let closed_form_bytes =
+        (d_landmark_1d(CostParams { n: N, d: D, k: K, p }, M).words * 4.0) as u64;
+    let max_rank_update = |out: &kkmeans::FitResult| {
+        out.comm_stats.iter().map(|s| s.get("update").bytes).max().unwrap()
+    };
+    let one_max = max_rank_update(&one);
+    let fif_max = max_rank_update(&fif);
+    assert!(
+        one_max >= closed_form_bytes,
+        "1D landmark update {one_max} B must carry the k·m allreduce ({closed_form_bytes} B)"
+    );
+    assert!(
+        fif_max < closed_form_bytes,
+        "1.5D landmark update {fif_max} B must beat the 1D k·m allreduce closed form \
+         ({closed_form_bytes} B)"
+    );
+    assert!(
+        fif_max < one_max,
+        "1.5D landmark update {fif_max} B must beat the measured 1D volume {one_max} B"
+    );
+}
+
 #[test]
 fn table1_ordering_1d_vs_15d() {
     // The paper's headline comparison at a glance: by P = 16 the 1.5D

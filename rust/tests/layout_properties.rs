@@ -1,0 +1,183 @@
+//! Property tests for the partition layer: every [`Partition`] must
+//! cover `0..n` disjointly in canonical order, agree with the raw
+//! `util::part` arithmetic it unified, and hand out replication groups
+//! and tiles consistent with the column-major grid the collectives
+//! assume (randomized, seed-reported — the style of `properties.rs`).
+
+use vivaldi::layout::Partition;
+use vivaldi::util::part;
+use vivaldi::util::rng::Rng;
+
+const CASES: u64 = 40;
+
+fn draw_partitions(rng: &mut Rng) -> (usize, usize, usize, Vec<Partition>) {
+    let q = 1 + rng.below(4); // grid side 1..=4 => p in {1, 4, 9, 16}
+    let p = q * q;
+    let n = p + rng.below(400);
+    let m = q + rng.below(n.min(64).saturating_sub(q) + 1);
+    let parts = vec![
+        Partition::one_d(n, p),
+        Partition::tiles_2d(n, p).unwrap(),
+        Partition::nested_15d(n, p).unwrap(),
+        Partition::landmark_grid(n, m, p).unwrap(),
+    ];
+    (n, m, p, parts)
+}
+
+/// Disjoint exact cover: concatenating owned ranges over the canonical
+/// order walks 0..n with no gap, no overlap.
+#[test]
+fn prop_canonical_order_round_trips() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(8000 + case);
+        let (n, _, p, parts) = draw_partitions(&mut rng);
+        for part in parts {
+            assert_eq!(part.ranks(), p, "case {case} {part:?}");
+            let order = part.canonical_order();
+            assert_eq!(order.len(), p);
+            let mut cursor = 0;
+            let mut total = 0;
+            for r in order {
+                let (lo, hi) = part.owned_range(r);
+                assert_eq!(lo, cursor, "case {case} {part:?} rank {r}: gap or overlap");
+                assert!(hi >= lo, "case {case}");
+                assert_eq!(hi - lo, part.owned_len(r));
+                total += hi - lo;
+                cursor = hi;
+            }
+            assert_eq!(cursor, n, "case {case} {part:?}: cover must end at n");
+            assert_eq!(total, n);
+        }
+    }
+}
+
+/// The layer is a *renaming*, not a reinvention: every owned range and
+/// tile agrees with the historical `util::part` expressions the
+/// algorithms used inline.
+#[test]
+fn prop_agrees_with_util_part() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(8100 + case);
+        let (n, m, p, _) = draw_partitions(&mut rng);
+        let q = (p as f64).sqrt().round() as usize;
+
+        let one_d = Partition::one_d(n, p);
+        for r in 0..p {
+            assert_eq!(one_d.owned_range(r), part::bounds(n, p, r), "case {case} r={r}");
+        }
+        for grid_part in [Partition::tiles_2d(n, p).unwrap(), Partition::nested_15d(n, p).unwrap()]
+        {
+            for r in 0..p {
+                let (i, j) = (r % q, r / q);
+                assert_eq!(
+                    grid_part.owned_range(r),
+                    part::nested(n, q, j, i),
+                    "case {case} r={r}"
+                );
+                assert_eq!(
+                    grid_part.tile_bounds(r),
+                    (part::bounds(n, q, i), part::bounds(n, q, j)),
+                    "case {case} r={r}"
+                );
+            }
+        }
+        let lg = Partition::landmark_grid(n, m, p).unwrap();
+        for r in 0..p {
+            let (i, j) = (r % q, r / q);
+            assert_eq!(lg.owned_range(r), part::nested(n, q, j, i), "case {case} r={r}");
+            assert_eq!(
+                lg.tile_bounds(r),
+                (part::bounds(n, q, j), part::bounds(m, q, i)),
+                "case {case} r={r}"
+            );
+        }
+    }
+}
+
+/// Landmark-grid tiles cover the n×m cross-kernel exactly once, and
+/// each rank's canonical point slice lies inside its own tile's point
+/// rows (the property that lets the column reduce-scatter land E with
+/// no further movement).
+#[test]
+fn prop_landmark_tiles_cover_cross_kernel() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(8200 + case);
+        let (n, m, p, _) = draw_partitions(&mut rng);
+        let lg = Partition::landmark_grid(n, m, p).unwrap();
+        let mut covered = 0u64;
+        let mut tiles = std::collections::HashSet::new();
+        for r in 0..p {
+            let ((plo, phi), (llo, lhi)) = lg.tile_bounds(r);
+            assert!(phi <= n && lhi <= m, "case {case} r={r}");
+            covered += ((phi - plo) * (lhi - llo)) as u64;
+            assert!(tiles.insert((plo, phi, llo, lhi)), "case {case}: duplicate tile");
+            let (olo, ohi) = lg.owned_range(r);
+            assert!(plo <= olo && ohi <= phi, "case {case} r={r}: slice outside tile");
+        }
+        assert_eq!(covered, (n * m) as u64, "case {case}: tiles must cover n×m exactly");
+    }
+}
+
+/// Replication groups: the owner's slice reaches exactly the ranks
+/// whose tiles consume it, the group size is the advertised replication
+/// factor, and the union of groups over a point block's owners is the
+/// whole consuming row/column.
+#[test]
+fn prop_replication_groups_consistent() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(8300 + case);
+        let (_, _, p, parts) = draw_partitions(&mut rng);
+        let q = (p as f64).sqrt().round() as usize;
+        for part in parts {
+            for r in 0..p {
+                let group = part.replication_group(r);
+                assert_eq!(group.len(), part.replication_factor(), "case {case} {part:?}");
+                assert!(group.iter().all(|&g| g < p), "case {case}");
+                // No duplicates.
+                let mut sorted = group.clone();
+                sorted.sort_unstable();
+                sorted.dedup();
+                assert_eq!(sorted.len(), group.len(), "case {case}");
+                match part {
+                    Partition::OneD { .. } => {
+                        assert_eq!(group, (0..p).collect::<Vec<_>>(), "case {case}")
+                    }
+                    Partition::LandmarkGrid { .. } => {
+                        // The grid column sharing the point block —
+                        // contiguous global ranks (column-major).
+                        let j = r / q;
+                        assert_eq!(group, (j * q..(j + 1) * q).collect::<Vec<_>>());
+                        assert!(group.contains(&r), "owner keeps its slice");
+                    }
+                    Partition::Tiles2D { .. } | Partition::Nested15D { .. } => {
+                        // The grid row whose tile row-block is the
+                        // owner's point block.
+                        let j = r / q;
+                        assert_eq!(group, (0..q).map(|c| c * q + j).collect::<Vec<_>>());
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Degenerate shapes stay well-formed: single rank, n == p, and the
+/// constructors reject what the collectives cannot run on.
+#[test]
+fn degenerate_and_invalid_shapes() {
+    let single = Partition::one_d(7, 1);
+    assert_eq!(single.owned_range(0), (0, 7));
+    assert_eq!(single.replication_group(0), vec![0]);
+
+    let tiny = Partition::nested_15d(4, 4).unwrap();
+    let mut total = 0;
+    for r in 0..4 {
+        total += tiny.owned_len(r);
+    }
+    assert_eq!(total, 4);
+
+    assert!(Partition::tiles_2d(16, 8).is_err(), "non-square grid");
+    assert!(Partition::nested_15d(16, 12).is_err(), "non-square grid");
+    assert!(Partition::landmark_grid(16, 2, 9).is_err(), "m < sqrt(P)");
+    assert!(Partition::landmark_grid(16, 3, 9).is_ok());
+}
