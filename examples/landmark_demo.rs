@@ -1,12 +1,17 @@
 //! A dataset the exact 1.5D path cannot hold: under a calibrated
 //! device-memory budget the full n×n Gram OOMs collectively, while the
 //! landmark-approximate path (n×m cross-kernel, m = n/8) fits and still
-//! separates the rings.
+//! separates the rings — and under an even tighter budget where the
+//! batch landmark path OOMs too, the streaming mini-batch driver
+//! (`approx::stream`) still completes, because its peak footprint is
+//! bounded by the batch rather than by n.
 //!
 //! Run: `cargo run --release --example landmark_demo`
 
+use vivaldi::approx::stream::{fit_stream, StreamConfig};
 use vivaldi::approx::{self, ApproxConfig};
-use vivaldi::config::{landmark_feasibility, MemModel};
+use vivaldi::config::{landmark_feasibility, landmark_stream_feasibility, MemModel};
+use vivaldi::data::stream::MatrixSource;
 use vivaldi::kernelfn::KernelFn;
 use vivaldi::kkmeans::{self, Algo, FitConfig};
 use vivaldi::quality::nmi;
@@ -76,4 +81,41 @@ fn main() {
     }
     assert!(score > 0.9, "landmark path should separate the rings");
     println!("OK — the landmark path opened a workload the exact path cannot hold.");
+
+    // Act 3: tighten the budget below even the batch landmark state
+    // (its C block is n/p × m — still O(n)). The streaming driver's C
+    // block is batch/p × m, so it runs where both batch paths OOM.
+    let batch = n / 8;
+    let tight = MemModel { budget: 2 << 20, repl_factor: 1.0, redist_factor: 0.0 };
+    let sfeas = landmark_stream_feasibility(n, ds.points.cols(), m, p, batch, &tight);
+    println!(
+        "\ntighter budget {}: batch landmark needs {} (fits: {}), stream at B={batch} needs {} (fits: {})",
+        human_bytes(tight.budget),
+        human_bytes(sfeas.landmark_bytes_per_rank),
+        sfeas.landmark_fits,
+        human_bytes(sfeas.landmark_stream_bytes_per_rank),
+        sfeas.landmark_stream_fits,
+    );
+    assert!(!sfeas.landmark_fits && sfeas.landmark_stream_fits);
+    let batch_cfg = ApproxConfig { mem: Some(tight), ..cfg };
+    match approx::fit(p, &ds.points, &batch_cfg) {
+        Err(VivaldiError::OutOfMemory { .. }) => {
+            println!("batch landmark: OutOfMemory as predicted")
+        }
+        other => panic!("expected the batch landmark path to OOM, got {other:?}"),
+    }
+    let scfg = StreamConfig { base: batch_cfg, batch, ..Default::default() };
+    let mut source = MatrixSource::from_dataset(&ds);
+    let out = fit_stream(p, &mut source, &scfg).expect("streaming fit");
+    let score = nmi(&out.assignments, &ds.labels, 2);
+    println!(
+        "stream B={batch}: {} batches, {} inner iters, peak mem {} / {}, NMI={score:.3}",
+        out.batches,
+        out.iterations,
+        human_bytes(out.peak_mem),
+        human_bytes(tight.budget),
+    );
+    assert!(out.peak_mem <= tight.budget);
+    assert!(score > 0.85, "streaming path should still separate the rings");
+    println!("OK — the streaming path opened a stream no batch path can hold.");
 }

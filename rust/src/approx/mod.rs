@@ -47,6 +47,7 @@
 
 pub mod oracle;
 pub mod solve;
+pub mod stream;
 
 use crate::backend::ComputeBackend;
 use crate::comm::{Comm, Grid2D, Group, World};
@@ -87,6 +88,29 @@ impl LandmarkLayout {
             "1d" | "oned" => Some(LandmarkLayout::OneD),
             "1.5d" | "15d" | "onefived" => Some(LandmarkLayout::OneFiveD),
             _ => None,
+        }
+    }
+
+    /// Pick the layout with the smaller analytic per-iteration update
+    /// volume ([`crate::model::analytic::d_landmark_1d`] vs
+    /// [`crate::model::analytic::d_landmark_15d`]; the crossover sits at
+    /// m ≈ n/√P). Falls back to 1D whenever the grid constraints rule
+    /// the 1.5D layout out (non-square p, p = 1, or m < √P) — the
+    /// `--landmark-layout auto` selection.
+    pub fn auto(n: usize, d: usize, k: usize, m: usize, p: usize) -> LandmarkLayout {
+        use crate::model::analytic::{d_landmark_15d, d_landmark_1d, CostParams};
+        if p <= 1 || !crate::util::is_perfect_square(p) {
+            return LandmarkLayout::OneD;
+        }
+        let q = crate::util::isqrt_exact(p);
+        if m < q {
+            return LandmarkLayout::OneD;
+        }
+        let c = CostParams { n, d, k, p };
+        if d_landmark_15d(c, m).words < d_landmark_1d(c, m).words {
+            LandmarkLayout::OneFiveD
+        } else {
+            LandmarkLayout::OneD
         }
     }
 }
@@ -266,12 +290,7 @@ fn reduced_rank_e(
 
     // α (k×m): replicated ridge solve in f64.
     let (alpha, cvec) = solve_alpha(solver, w, &b, sizes, k);
-    let mut alpha_t = DenseMatrix::zeros(m, k); // αᵀ, for the E GEMM
-    for a in 0..k {
-        for t in 0..m {
-            alpha_t.set(t, a, alpha[a * m + t] as f32);
-        }
-    }
+    let alpha_t = alpha_transpose(&alpha, m, k);
 
     // E = C·αᵀ through the backend GEMM.
     let mut e = DenseMatrix::zeros(c_block.rows(), k);
@@ -279,9 +298,66 @@ fn reduced_rank_e(
     (e, cvec)
 }
 
+/// αᵀ (m×k, f32) from the row-major k×m f64 coefficients — the operand
+/// shape the E = C·αᵀ backend GEMM wants.
+pub(crate) fn alpha_transpose(alpha: &[f64], m: usize, k: usize) -> DenseMatrix {
+    debug_assert_eq!(alpha.len(), k * m);
+    let mut alpha_t = DenseMatrix::zeros(m, k);
+    for a in 0..k {
+        for t in 0..m {
+            alpha_t.set(t, a, alpha[a * m + t] as f32);
+        }
+    }
+    alpha_t
+}
+
+/// Reassemble the full k×m per-cluster sums from the diagonal ranks'
+/// landmark-block pieces (piece `l` covers columns
+/// `part::bounds(m, q, l)` of every cluster row). One copy of the
+/// block-offset math, shared by the batch 1.5D iteration and both
+/// streaming uses — they must stay bit-identical.
+pub(crate) fn assemble_diag_blocks(blocks: &[Vec<f32>], k: usize, m: usize, q: usize) -> Vec<f32> {
+    let mut b = vec![0.0f32; k * m];
+    for (l, blk) in blocks.iter().enumerate() {
+        let (blo, bhi) = part::bounds(m, q, l);
+        let w_l = bhi - blo;
+        debug_assert_eq!(blk.len(), k * w_l);
+        for a in 0..k {
+            b[a * m + blo..a * m + bhi].copy_from_slice(&blk[a * w_l..(a + 1) * w_l]);
+        }
+    }
+    b
+}
+
+/// Pack αᵀ\[landmark block llo..lhi\] (block_len × k, f32) plus the k
+/// center norms into the flat payload the 1.5D row broadcast carries.
+pub(crate) fn pack_alpha_block(
+    alpha: &[f64],
+    cvec: &[f32],
+    llo: usize,
+    lhi: usize,
+    m: usize,
+    k: usize,
+) -> Vec<f32> {
+    let mut flat = Vec::with_capacity((lhi - llo) * k + k);
+    for t in llo..lhi {
+        for a in 0..k {
+            flat.push(alpha[a * m + t] as f32);
+        }
+    }
+    flat.extend_from_slice(cvec);
+    flat
+}
+
 /// Per-cluster sums of C rows: the k×w partial this rank contributes to
-/// c̄ (w = the landmark columns this rank's C covers).
-fn cluster_row_sums(c_rows: &DenseMatrix, assign: &[u32], k: usize, w: usize) -> Vec<f32> {
+/// c̄ (w = the landmark columns this rank's C covers). Shared with the
+/// streaming driver, whose per-batch sums feed the decayed model.
+pub(crate) fn cluster_row_sums(
+    c_rows: &DenseMatrix,
+    assign: &[u32],
+    k: usize,
+    w: usize,
+) -> Vec<f32> {
     debug_assert_eq!(c_rows.rows(), assign.len());
     debug_assert_eq!(c_rows.cols(), w);
     let mut b = vec![0.0f32; k * w];
@@ -308,14 +384,32 @@ fn solve_alpha(
     sizes: &[u64],
     k: usize,
 ) -> (Vec<f64>, Vec<f32>) {
+    let weights: Vec<f64> = sizes.iter().map(|&s| s as f64).collect();
+    solve_alpha_weighted(solver, w, b, &weights, k)
+}
+
+/// [`solve_alpha`] generalized to fractional cluster weights: the
+/// streaming driver's decayed counts γᵗ·N are not integers, but the
+/// math is the same normalize-solve-norm sequence. With integer weights
+/// the output is bit-identical to the batch path (the batch wrapper
+/// routes through here), which is what makes a single-batch streaming
+/// fit exactly reproduce `approx::fit`.
+pub(crate) fn solve_alpha_weighted(
+    solver: &SpdSolver,
+    w: &DenseMatrix,
+    b: &[f32],
+    weights: &[f64],
+    k: usize,
+) -> (Vec<f64>, Vec<f32>) {
     let m = solver.dim();
     debug_assert_eq!(b.len(), k * m);
+    debug_assert_eq!(weights.len(), k);
     let mut alpha = vec![0.0f64; k * m];
     for a in 0..k {
-        if sizes[a] == 0 {
+        if weights[a] <= 0.0 {
             continue;
         }
-        let inv = 1.0 / sizes[a] as f64;
+        let inv = 1.0 / weights[a];
         let rhs: Vec<f64> = b[a * m..(a + 1) * m].iter().map(|&v| v as f64 * inv).collect();
         let x = solver.solve(&rhs);
         alpha[a * m..(a + 1) * m].copy_from_slice(&x);
@@ -415,16 +509,7 @@ fn run_rank_15d(
         // center norms come back along the row.
         let payload = if is_diag {
             let b_block = b_red.expect("diagonal is the row-reduce root");
-            let blocks = comm.allgather(&diag_g, b_block);
-            let mut b = vec![0.0f32; k * m];
-            for (l, blk) in blocks.iter().enumerate() {
-                let (blo, bhi) = part::bounds(m, q, l);
-                let w_l = bhi - blo;
-                debug_assert_eq!(blk.len(), k * w_l);
-                for a in 0..k {
-                    b[a * m + blo..a * m + bhi].copy_from_slice(&blk[a * w_l..(a + 1) * w_l]);
-                }
-            }
+            let b = assemble_diag_blocks(&comm.allgather(&diag_g, b_block), k, m, q);
             let (alpha, cvec) = solve_alpha(
                 solver.as_ref().expect("diagonal holds the W factor"),
                 w_opt.as_ref().expect("diagonal holds W"),
@@ -432,15 +517,7 @@ fn run_rank_15d(
                 &sizes,
                 k,
             );
-            // Pack αᵀ[landmark block i] (m_i × k, f32) + cvec.
-            let mut flat = Vec::with_capacity(m_i * k + k);
-            for t in llo..lhi {
-                for a in 0..k {
-                    flat.push(alpha[a * m + t] as f32);
-                }
-            }
-            flat.extend_from_slice(&cvec);
-            Some(flat)
+            Some(pack_alpha_block(&alpha, &cvec, llo, lhi, m, k))
         } else {
             None
         };
@@ -502,6 +579,25 @@ mod tests {
             ..Default::default()
         };
         assert!(matches!(fit(9, &ds.points, &cfg), Err(VivaldiError::InvalidConfig(_))));
+    }
+
+    #[test]
+    fn auto_layout_crossover() {
+        // Large m (past ~n/√P): the sharded 1.5D coefficient exchange
+        // wins; small m: the flat 1D allreduce is cheaper.
+        assert_eq!(LandmarkLayout::auto(256, 2, 4, 128, 4), LandmarkLayout::OneFiveD);
+        assert_eq!(LandmarkLayout::auto(256, 2, 4, 16, 4), LandmarkLayout::OneD);
+        // Grid constraints force 1D: non-square p, p = 1, m < √P.
+        assert_eq!(LandmarkLayout::auto(256, 2, 4, 128, 6), LandmarkLayout::OneD);
+        assert_eq!(LandmarkLayout::auto(256, 2, 4, 128, 1), LandmarkLayout::OneD);
+        assert_eq!(LandmarkLayout::auto(256, 2, 4, 2, 9), LandmarkLayout::OneD);
+        // The auto pick is always runnable: a fit with it succeeds.
+        let ds = synth::gaussian_blobs(144, 3, 3, 4.5, 23);
+        for p in [1usize, 4, 6, 9] {
+            let layout = LandmarkLayout::auto(144, 3, 3, 36, p);
+            let cfg = ApproxConfig { k: 3, m: 36, layout, max_iters: 30, ..Default::default() };
+            assert!(fit(p, &ds.points, &cfg).is_ok(), "auto layout must run at p={p}");
+        }
     }
 
     #[test]

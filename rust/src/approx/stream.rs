@@ -1,0 +1,972 @@
+//! Mini-batch / streaming landmark Kernel K-means
+//! (Pourkamali-Anaraki & Becker, 1608.07597, on the Chitta-style
+//! reduced-rank model of [`super`]).
+//!
+//! Every batch path in this crate needs the full point set resident
+//! before `fit` runs; this driver needs only one mini-batch at a time.
+//! Points arrive in chunks through a [`PointSource`]
+//! ([`crate::data::stream`]); the resident state is the m×d landmark
+//! set, the once-factored m×m W, and a k×m **decayed cluster-sum
+//! model** — everything else is proportional to the batch, so the peak
+//! tracked footprint is independent of the stream length (asserted by
+//! the streaming test wall).
+//!
+//! Per batch, on `p` simulated ranks:
+//!
+//! 1. **Warm start** — classify the batch under the carried model
+//!    (α solved from the decayed sums; first batch: the batch paths'
+//!    round-robin init instead).
+//! 2. **Inner loop** — up to `max_iters` reduced-rank iterations
+//!    through [`harness::drive_loop`], exactly the batch update but
+//!    with the decayed history folded into the per-cluster sums:
+//!    `b_eff = γ·S + b_batch`, `w_eff = γ·N + sizes_batch`.
+//! 3. **Absorb** — the settled batch's sums fold into the model:
+//!    `S ← γ·S + b_final`, `N ← γ·N + sizes_final` (γ = 1 is plain
+//!    accumulation; γ < 1 tracks drifting streams).
+//!
+//! Both landmark layouts stream: the 1D layout replicates W everywhere,
+//! the 1.5D layout keeps the factorization only on the grid diagonal
+//! (one replica per grid column) and runs the same sharded coefficient
+//! exchange as the batch path. W is factored **once per landmark set**
+//! — at stream init, and again only on a reservoir refresh — never per
+//! batch.
+//!
+//! **Exactness anchor:** a stream that delivers everything in one batch
+//! runs the identical collective and arithmetic sequence as
+//! [`super::fit`] — assignments and iteration counts are bit-identical
+//! (pinned by `rust/tests/stream.rs`). Multi-batch runs trade that
+//! exactness for bounded memory, with quality pinned against ground
+//! truth and the single-rank oracle.
+//!
+//! **Landmark maintenance:** with a [`LandmarkReservoir`] configured,
+//! the driver keeps a bounded uniform sample of the whole history and
+//! can periodically re-seed the landmarks from it (k-means++ refresh).
+//! The carried model survives a refresh by re-expression: the reservoir
+//! points are classified under the old model, and their cross-kernel
+//! against the *new* landmarks — scaled to the carried weight — becomes
+//! the new-basis history.
+
+use crate::backend::ComputeBackend;
+use crate::comm::{Comm, CommStats, Grid2D, Group, World};
+use crate::data::landmarks::{self, LandmarkReservoir};
+use crate::data::stream::PointSource;
+use crate::dense::DenseMatrix;
+use crate::kkmeans::{loop_common, RankOutput};
+use crate::layout::{harness, Partition};
+use crate::model::MemTracker;
+use crate::util::{part, timing, timing::Stopwatch};
+use crate::VivaldiError;
+
+use super::solve::SpdSolver;
+use super::{
+    alpha_transpose, assemble_diag_blocks, cluster_row_sums, pack_alpha_block,
+    solve_alpha_weighted, ApproxConfig, LandmarkLayout,
+};
+
+/// Streaming-fit configuration: the batch knobs of [`ApproxConfig`]
+/// plus the mini-batch schedule. `base.max_iters` bounds the *inner*
+/// iterations per batch; `base.seeding`/`base.landmark_seed` select the
+/// landmarks from the first batch (or the reservoir).
+#[derive(Debug, Clone)]
+pub struct StreamConfig {
+    pub base: ApproxConfig,
+    /// Mini-batch size B (peak memory scales with B, never with n).
+    pub batch: usize,
+    /// γ ∈ (0, 1]: per-batch decay of the carried cluster sums.
+    /// 1.0 = plain accumulation (a stationary stream); < 1 forgets old
+    /// batches geometrically (a drifting stream).
+    pub decay: f64,
+    /// Capacity of the landmark reservoir (0 = none: landmarks come
+    /// straight from the first batch via `base.seeding` and stay fixed,
+    /// the configuration that is bit-compatible with the batch path).
+    pub reservoir: usize,
+    /// Re-seed the landmarks from the reservoir every this many batches
+    /// (0 = never). Requires `reservoir > 0`.
+    pub refresh_every: usize,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig {
+            base: ApproxConfig::default(),
+            batch: 1024,
+            decay: 1.0,
+            reservoir: 0,
+            refresh_every: 0,
+        }
+    }
+}
+
+/// Outcome of a streaming fit.
+#[derive(Debug, Clone)]
+pub struct StreamFitResult {
+    /// Assignment of every streamed point in arrival order, labeled
+    /// when its batch settled (true streaming: no second pass).
+    pub assignments: Vec<u32>,
+    pub batches: usize,
+    /// Total inner iterations across all batches.
+    pub iterations: usize,
+    pub batch_iterations: Vec<usize>,
+    /// Final batch-local objective per batch.
+    pub objective_curve: Vec<f64>,
+    /// True when every batch's inner loop reached stability.
+    pub converged: bool,
+    /// Max peak tracked memory over ranks and batches — ∝ batch size,
+    /// independent of the stream length.
+    pub peak_mem: u64,
+    /// Per-rank communication ledgers merged across batches.
+    pub comm_stats: Vec<CommStats>,
+    /// Per-rank phase timings merged across batches.
+    pub timings: Vec<Stopwatch>,
+    pub ranks: usize,
+    /// Times the landmark set was re-seeded from the reservoir.
+    pub landmark_refreshes: usize,
+    /// Points consumed from the source.
+    pub n_total: usize,
+}
+
+/// The carried streaming state: landmarks, the once-factored W, and the
+/// decayed per-cluster model.
+struct StreamModel {
+    landmarks: DenseMatrix,
+    w: DenseMatrix,
+    solver: SpdSolver,
+    /// k×m decayed per-cluster C-row sums S.
+    sums: Vec<f32>,
+    /// k decayed cluster weights N (fractional once γ < 1).
+    weights: Vec<f64>,
+    has_history: bool,
+    /// Whether a batch already paid the one-time O(m·d) landmark
+    /// replication for the current landmark set.
+    replicated: bool,
+}
+
+/// γ-decayed history handed to a batch (already multiplied by γ; the
+/// batch's own sums add on top).
+struct History {
+    sums: Vec<f32>,
+    weights: Vec<f64>,
+}
+
+/// Per-batch global statistics folded back into the model.
+struct BatchFinal {
+    sums: Vec<f32>,
+    sizes: Vec<u64>,
+}
+
+impl StreamModel {
+    fn from_landmarks(
+        landmarks: DenseMatrix,
+        cfg: &StreamConfig,
+        backend: &dyn ComputeBackend,
+    ) -> StreamModel {
+        let k = cfg.base.k;
+        let m = landmarks.rows();
+        let l_norms =
+            if cfg.base.kernel.needs_norms() { landmarks.row_sq_norms() } else { Vec::new() };
+        // The same fused Gram + kernel product the batch pipelines run,
+        // so W (and its factor) is bit-identical to theirs.
+        let w = backend.gram_tile(&landmarks, &landmarks, &cfg.base.kernel, &l_norms, &l_norms);
+        let solver = SpdSolver::factor(&w);
+        StreamModel {
+            landmarks,
+            w,
+            solver,
+            sums: vec![0.0; k * m],
+            weights: vec![0.0; k],
+            has_history: false,
+            replicated: false,
+        }
+    }
+
+    /// The decayed history entering the next batch (`None` before any
+    /// batch has been absorbed — the bit-compatible-with-batch case).
+    fn decayed(&self, gamma: f64) -> Option<History> {
+        self.has_history.then(|| History {
+            sums: self.sums.iter().map(|&s| (s as f64 * gamma) as f32).collect(),
+            weights: self.weights.iter().map(|&w| w * gamma).collect(),
+        })
+    }
+
+    /// Fold a settled batch into the model on top of the decayed state
+    /// it ran against.
+    fn absorb(&mut self, decayed: Option<History>, fin: BatchFinal) {
+        match decayed {
+            Some(h) => {
+                self.sums = h.sums.iter().zip(&fin.sums).map(|(&a, &b)| a + b).collect();
+                self.weights =
+                    h.weights.iter().zip(&fin.sizes).map(|(&a, &b)| a + b as f64).collect();
+            }
+            None => {
+                self.sums = fin.sums;
+                self.weights = fin.sizes.iter().map(|&s| s as f64).collect();
+            }
+        }
+        self.has_history = true;
+    }
+
+    /// Classify arbitrary points under the carried model (driver-side:
+    /// translates history across a landmark refresh and labels a final
+    /// tail batch too small to shard). Returns the cross-kernel C, the
+    /// assignments, and the per-point min distances.
+    fn classify(
+        &self,
+        points: &DenseMatrix,
+        cfg: &StreamConfig,
+        backend: &dyn ComputeBackend,
+    ) -> (DenseMatrix, Vec<u32>, Vec<f32>) {
+        let k = cfg.base.k;
+        let m = self.landmarks.rows();
+        let (alpha, cvec) =
+            solve_alpha_weighted(&self.solver, &self.w, &self.sums, &self.weights, k);
+        let (pn, ln) = if cfg.base.kernel.needs_norms() {
+            (points.row_sq_norms(), self.landmarks.row_sq_norms())
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        let c = backend.gram_tile(points, &self.landmarks, &cfg.base.kernel, &pn, &ln);
+        let alpha_t = alpha_transpose(&alpha, m, k);
+        let mut e = DenseMatrix::zeros(points.rows(), k);
+        backend.matmul_nn_acc(&c, &alpha_t, &mut e);
+        let (assign, minvals) = backend.distances_argmin(&e, &cvec);
+        (c, assign, minvals)
+    }
+}
+
+/// Run a streaming landmark fit on `p` simulated ranks with the native
+/// backend, consuming `source` batch by batch.
+pub fn fit_stream(
+    p: usize,
+    source: &mut dyn PointSource,
+    cfg: &StreamConfig,
+) -> Result<StreamFitResult, VivaldiError> {
+    let backend = crate::backend::NativeBackend::new();
+    fit_stream_with_backend(p, source, cfg, &backend)
+}
+
+/// [`fit_stream`] with an explicit compute backend.
+pub fn fit_stream_with_backend(
+    p: usize,
+    source: &mut dyn PointSource,
+    cfg: &StreamConfig,
+    backend: &dyn ComputeBackend,
+) -> Result<StreamFitResult, VivaldiError> {
+    let k = cfg.base.k;
+    let m = cfg.base.m;
+    if k == 0 || m < k {
+        return Err(VivaldiError::InvalidConfig(format!("need 1 <= k <= m (k = {k}, m = {m})")));
+    }
+    if cfg.batch == 0 || p == 0 {
+        return Err(VivaldiError::InvalidConfig("batch size and rank count must be positive".into()));
+    }
+    if cfg.batch < p {
+        return Err(VivaldiError::InvalidConfig(format!(
+            "batch size {} < rank count {p}: every rank needs points each batch",
+            cfg.batch
+        )));
+    }
+    if !(cfg.decay > 0.0 && cfg.decay <= 1.0) {
+        return Err(VivaldiError::InvalidConfig(format!("decay must be in (0, 1], got {}", cfg.decay)));
+    }
+    if cfg.refresh_every > 0 && cfg.reservoir == 0 {
+        return Err(VivaldiError::InvalidConfig(
+            "landmark refresh requires a reservoir (set reservoir > 0)".into(),
+        ));
+    }
+    if cfg.reservoir > 0 && cfg.reservoir < m {
+        return Err(VivaldiError::InvalidConfig(format!(
+            "reservoir capacity {} < m = {m}: refresh could not seed the landmark set",
+            cfg.reservoir
+        )));
+    }
+    if cfg.base.layout == LandmarkLayout::OneFiveD {
+        // Same up-front shape validation as the batch fit; the point
+        // dimension is per batch, checked again when each batch lands.
+        Partition::landmark_grid(cfg.batch, m, p).map_err(VivaldiError::InvalidConfig)?;
+    }
+
+    let mut reservoir = (cfg.reservoir > 0)
+        .then(|| LandmarkReservoir::new(cfg.reservoir, source.dim(), cfg.base.landmark_seed));
+    let mut model: Option<StreamModel> = None;
+    let mut acc = harness::StreamAccumulator::new(p);
+    let mut refreshes = 0usize;
+    let mut batch_index = 0usize;
+
+    loop {
+        let batch = match source.next_batch(cfg.batch) {
+            Ok(Some(b)) => b,
+            Ok(None) => break,
+            // A broken source is a failed fit, never a silent truncation.
+            Err(e) => {
+                return Err(VivaldiError::InvalidConfig(format!("point source failed: {e}")))
+            }
+        };
+        let bn = batch.rows();
+        if let Some(res) = reservoir.as_mut() {
+            res.observe(&batch);
+        }
+        if bn < p {
+            // A tail too small to shard across the ranks. With a model
+            // in hand, label it driver-side and fold it into the sums —
+            // no collective round, no work discarded. Without one (the
+            // very first batch) the stream is genuinely unusable.
+            let Some(mdl) = model.as_mut() else {
+                return Err(VivaldiError::InvalidConfig(format!(
+                    "first batch of {bn} points is smaller than the rank count {p}"
+                )));
+            };
+            let (c_tail, assign, minvals) = mdl.classify(&batch, cfg, backend);
+            let sums = cluster_row_sums(&c_tail, &assign, k, m);
+            let mut sizes = vec![0u64; k];
+            for &a in &assign {
+                sizes[a as usize] += 1;
+            }
+            let decayed = mdl.decayed(cfg.decay);
+            mdl.absorb(decayed, BatchFinal { sums, sizes });
+            acc.objective_curve.push(minvals.iter().map(|&v| v as f64).sum());
+            acc.batch_iterations.push(0); // classified, no inner loop
+            acc.assignments.extend(assign);
+            batch_index += 1;
+            continue;
+        }
+        if model.is_none() {
+            model = Some(init_model(&batch, cfg, p, reservoir.as_ref(), backend)?);
+        } else if cfg.refresh_every > 0 && batch_index % cfg.refresh_every == 0 {
+            refresh_model(
+                model.as_mut().expect("model exists past the first batch"),
+                reservoir.as_ref().expect("refresh_every requires a reservoir"),
+                cfg,
+                backend,
+                refreshes,
+            );
+            refreshes += 1;
+        }
+
+        let mdl = model.as_ref().expect("model initialized on the first batch");
+        let decayed = mdl.decayed(cfg.decay);
+        let replicate_l = !mdl.replicated;
+        let (rank_results, comm_stats) = World::run(p, |comm| match cfg.base.layout {
+            LandmarkLayout::OneD => {
+                run_batch_1d(comm, &batch, mdl, decayed.as_ref(), cfg, backend, replicate_l)
+            }
+            LandmarkLayout::OneFiveD => {
+                run_batch_15d(comm, &batch, mdl, decayed.as_ref(), cfg, backend, replicate_l)
+            }
+        });
+
+        // Split the per-rank payloads, then reuse the batch assembly
+        // (collective-failure propagation included).
+        let mut fin = None;
+        let outs: Vec<Result<RankOutput, VivaldiError>> = rank_results
+            .into_iter()
+            .map(|r| {
+                r.map(|(out, f)| {
+                    if let Some(f) = f {
+                        fin = Some(f);
+                    }
+                    out
+                })
+            })
+            .collect();
+        let fit = harness::assemble_fit(bn, p, outs, comm_stats)?;
+        let fin = fin.expect("rank 0 reports the batch statistics");
+        let mdl = model.as_mut().expect("model initialized on the first batch");
+        mdl.absorb(decayed, fin);
+        mdl.replicated = true;
+        acc.absorb(fit);
+        batch_index += 1;
+    }
+
+    if acc.batches() == 0 {
+        return Err(VivaldiError::InvalidConfig("the stream yielded no points".into()));
+    }
+    Ok(StreamFitResult {
+        n_total: acc.assignments.len(),
+        batches: acc.batches(),
+        iterations: acc.iterations,
+        batch_iterations: acc.batch_iterations,
+        objective_curve: acc.objective_curve,
+        converged: acc.converged,
+        peak_mem: acc.peak_mem,
+        comm_stats: acc.comm_stats,
+        timings: acc.timings,
+        ranks: p,
+        landmark_refreshes: refreshes,
+        assignments: acc.assignments,
+    })
+}
+
+/// Select the initial landmark set from the first batch (or the
+/// reservoir) and build the model around it — including the single W
+/// factorization every later batch reuses.
+fn init_model(
+    first_batch: &DenseMatrix,
+    cfg: &StreamConfig,
+    p: usize,
+    reservoir: Option<&LandmarkReservoir>,
+    backend: &dyn ComputeBackend,
+) -> Result<StreamModel, VivaldiError> {
+    let m = cfg.base.m;
+    let landmarks = match reservoir {
+        Some(res) => {
+            if res.len() < m {
+                return Err(VivaldiError::InvalidConfig(format!(
+                    "first batch fed the reservoir only {} points, need m = {m}",
+                    res.len()
+                )));
+            }
+            res.refresh_kmeanspp(m, cfg.base.landmark_seed)
+        }
+        None => {
+            if first_batch.rows() < m {
+                return Err(VivaldiError::InvalidConfig(format!(
+                    "first batch has {} points, need at least m = {m} to seed landmarks",
+                    first_batch.rows()
+                )));
+            }
+            // The batch path's own sampler on the first batch: a
+            // one-batch stream therefore picks the identical landmark
+            // set as `approx::fit` on the same data.
+            let lidx = landmarks::sample_landmarks(
+                first_batch,
+                m,
+                p,
+                cfg.base.seeding,
+                cfg.base.landmark_seed,
+            );
+            landmarks::landmark_rows(first_batch, &lidx)
+        }
+    };
+    Ok(StreamModel::from_landmarks(landmarks, cfg, backend))
+}
+
+/// Re-seed the landmarks from the reservoir and translate the carried
+/// model into the new basis: classify the reservoir sample under the
+/// old model, then use its per-cluster cross-kernel sums against the
+/// *new* landmarks — scaled to the carried total weight — as the new
+/// history. Deterministic per (reservoir state, refresh ordinal).
+fn refresh_model(
+    model: &mut StreamModel,
+    reservoir: &LandmarkReservoir,
+    cfg: &StreamConfig,
+    backend: &dyn ComputeBackend,
+    refresh_ordinal: usize,
+) {
+    let k = cfg.base.k;
+    let m = cfg.base.m;
+    if reservoir.len() < m {
+        return; // not enough history yet; keep the current set
+    }
+    let snap = reservoir.snapshot();
+    // C from classify is against the *old* landmarks; only the labels
+    // carry over — the new-basis sums are rebuilt below.
+    let (_, old_assign, _) = model.classify(&snap, cfg, backend);
+    let seed = cfg.base.landmark_seed.wrapping_add(refresh_ordinal as u64 + 1);
+    let new_landmarks = reservoir.refresh_kmeanspp(m, seed);
+    let had_history = model.has_history;
+    let total_weight: f64 = model.weights.iter().sum();
+    let mut next = StreamModel::from_landmarks(new_landmarks, cfg, backend);
+    if had_history && total_weight > 0.0 && snap.rows() > 0 {
+        let (pn, ln) = if cfg.base.kernel.needs_norms() {
+            (snap.row_sq_norms(), next.landmarks.row_sq_norms())
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        let c_res = backend.gram_tile(&snap, &next.landmarks, &cfg.base.kernel, &pn, &ln);
+        let sums = cluster_row_sums(&c_res, &old_assign, k, m);
+        let mut counts = vec![0u64; k];
+        for &a in &old_assign {
+            counts[a as usize] += 1;
+        }
+        let scale = total_weight / snap.rows() as f64;
+        next.sums = sums.iter().map(|&s| (s as f64 * scale) as f32).collect();
+        next.weights = counts.iter().map(|&c| c as f64 * scale).collect();
+        next.has_history = true;
+    }
+    // The new landmark set must be re-replicated by the next batch.
+    next.replicated = false;
+    *model = next;
+}
+
+/// Effective per-cluster statistics for a batch iteration: the batch's
+/// own sums/sizes with the decayed history folded in. With no history
+/// the batch values pass through untouched (bit-compatible with the
+/// batch path).
+fn effective_stats(
+    b_batch: &[f32],
+    sizes: &[u64],
+    hist: Option<&History>,
+) -> (Vec<f32>, Vec<f64>) {
+    match hist {
+        None => (b_batch.to_vec(), sizes.iter().map(|&s| s as f64).collect()),
+        Some(h) => (
+            h.sums.iter().zip(b_batch).map(|(&a, &b)| a + b).collect(),
+            h.weights.iter().zip(sizes).map(|(&a, &b)| a + b as f64).collect(),
+        ),
+    }
+}
+
+/// Replicate the landmark rows through the fabric exactly as the batch
+/// Gram pipelines do (allgather of per-rank slices, phase "gemm") —
+/// paid once per landmark set, the first time a batch runs on it.
+fn replicate_landmarks(
+    comm: &Comm,
+    world: &Group,
+    landmarks: &DenseMatrix,
+    sw: &mut Stopwatch,
+) -> DenseMatrix {
+    let m = landmarks.rows();
+    let d = landmarks.cols();
+    let (llo, lhi) = part::bounds(m, comm.size(), comm.rank());
+    let own = landmarks.row_block(llo, lhi);
+    let data = sw.time("gemm", || comm.allgather_concat(world, own.into_vec()));
+    DenseMatrix::from_vec(m, d, data)
+}
+
+/// One mini-batch on the 1D landmark layout: C block rows over the
+/// batch, replicated W, history-aware k×m allreduce update. With no
+/// history this is instruction-for-instruction the batch
+/// [`super::fit`] loop on the batch's points.
+#[allow(clippy::too_many_arguments)]
+fn run_batch_1d(
+    comm: &Comm,
+    batch: &DenseMatrix,
+    model: &StreamModel,
+    hist: Option<&History>,
+    cfg: &StreamConfig,
+    backend: &dyn ComputeBackend,
+    replicate_l: bool,
+) -> Result<(RankOutput, Option<BatchFinal>), VivaldiError> {
+    let p = comm.size();
+    let bn = batch.rows();
+    let k = cfg.base.k;
+    let m = model.landmarks.rows();
+    let d = model.landmarks.cols();
+    let world = Group::world(p);
+    let (_mem, tracker) = harness::rank_tracker(comm.rank(), cfg.base.mem);
+    let layout = Partition::one_d(bn, p);
+    let (lo, hi) = layout.owned_range(comm.rank());
+    let local_pts = batch.row_block(lo, hi);
+    let mut sw = Stopwatch::new();
+
+    // Collective memory check: resident landmark state (L + W) plus
+    // this batch's C block — proportional to B, never to the stream
+    // length. (The k×m decayed model is driver-held host state, like
+    // the other per-iteration transients neither path charges; keeping
+    // the charge set identical to `landmark_stream_feasibility`'s
+    // estimate is what makes the planning report trustworthy.)
+    comm.set_phase("gemm");
+    let need = MemTracker::matrix_f32(m, d)
+        + MemTracker::matrix_f32(m, m)
+        + MemTracker::matrix_f32(hi - lo, m);
+    let ok = tracker.try_alloc(need, "stream batch: L + W + C block");
+    if !comm.allreduce_and(&world, ok) {
+        if ok {
+            tracker.free(need);
+        }
+        return Err(VivaldiError::OutOfMemory {
+            rank: comm.rank(),
+            requested: need,
+            budget: tracker.budget(),
+            what: "stream batch: L + W + C block".into(),
+        });
+    }
+
+    let replicated;
+    let landmarks: &DenseMatrix = if replicate_l {
+        replicated = replicate_landmarks(comm, &world, &model.landmarks, &mut sw);
+        &replicated
+    } else {
+        &model.landmarks
+    };
+    let (row_norms, l_norms) = if cfg.base.kernel.needs_norms() {
+        (local_pts.row_sq_norms(), landmarks.row_sq_norms())
+    } else {
+        (Vec::new(), Vec::new())
+    };
+    let c_block = sw.time("gemm", || {
+        backend.gram_tile(&local_pts, landmarks, &cfg.base.kernel, &row_norms, &l_norms)
+    });
+
+    comm.set_phase("update");
+    let mut assign: Vec<u32> = match hist {
+        // First batch: the batch paths' round-robin init, verbatim.
+        None => (lo..hi).map(|x| (x % k) as u32).collect(),
+        // Later batches: warm start — classify under the carried model.
+        Some(h) => {
+            let (alpha, cvec) =
+                solve_alpha_weighted(&model.solver, &model.w, &h.sums, &h.weights, k);
+            let alpha_t = alpha_transpose(&alpha, m, k);
+            let mut e = DenseMatrix::zeros(hi - lo, k);
+            backend.matmul_nn_acc(&c_block, &alpha_t, &mut e);
+            sw.time("update", || backend.distances_argmin(&e, &cvec).0)
+        }
+    };
+    let mut sizes = loop_common::global_sizes(comm, &world, &assign, k);
+
+    let outcome = harness::drive_loop(cfg.base.max_iters, cfg.base.converge_on_stable, |_| {
+        let (e_local, cvec) = sw.time("update", || {
+            comm.set_phase("update");
+            let b_batch =
+                comm.allreduce_sum_f32(&world, cluster_row_sums(&c_block, &assign, k, m));
+            let (b_eff, weights) = effective_stats(&b_batch, &sizes, hist);
+            let (alpha, cvec) =
+                solve_alpha_weighted(&model.solver, &model.w, &b_eff, &weights, k);
+            let alpha_t = alpha_transpose(&alpha, m, k);
+            let mut e = DenseMatrix::zeros(c_block.rows(), k);
+            backend.matmul_nn_acc(&c_block, &alpha_t, &mut e);
+            (e, cvec)
+        });
+        let (new_assign, minvals) = sw.time("update", || backend.distances_argmin(&e_local, &cvec));
+        let (changes, obj, new_sizes) = sw.time("update", || {
+            loop_common::commit_assignment(comm, &world, &mut assign, new_assign, &minvals, k)
+        });
+        sizes = new_sizes;
+        (changes, obj)
+    });
+
+    // The settled batch's global statistics, folded into the model by
+    // the driver.
+    comm.set_phase("update");
+    let b_final = comm.allreduce_sum_f32(&world, cluster_row_sums(&c_block, &assign, k, m));
+    let sizes_final = loop_common::global_sizes(comm, &world, &assign, k);
+    let fin = (comm.rank() == 0).then_some(BatchFinal { sums: b_final, sizes: sizes_final });
+    Ok((harness::finish_rank(assign, sw, outcome, &tracker), fin))
+}
+
+/// One mini-batch on the 1.5D landmark layout: the batch's C tiled on
+/// the √P×√P grid, W (and its once-per-stream factorization) only on
+/// the diagonal — one replica per grid column — and the batch path's
+/// sharded coefficient exchange with the decayed history folded in at
+/// the diagonal solve.
+#[allow(clippy::too_many_arguments)]
+fn run_batch_15d(
+    comm: &Comm,
+    batch: &DenseMatrix,
+    model: &StreamModel,
+    hist: Option<&History>,
+    cfg: &StreamConfig,
+    backend: &dyn ComputeBackend,
+    replicate_l: bool,
+) -> Result<(RankOutput, Option<BatchFinal>), VivaldiError> {
+    let p = comm.size();
+    let bn = batch.rows();
+    let k = cfg.base.k;
+    let m = model.landmarks.rows();
+    let d = model.landmarks.cols();
+    let world = Group::world(p);
+    let grid = Grid2D::new(p).expect("fit_stream checked square grid");
+    let q = grid.q();
+    let (i, j) = grid.coords(comm.rank());
+    let row_g = grid.row_group(i);
+    let col_g = grid.col_group(j);
+    let diag_g = Group::new((0..q).map(|r| grid.rank_at(r, r)).collect());
+    let is_diag = i == j;
+    let (_mem, tracker) = harness::rank_tracker(comm.rank(), cfg.base.mem);
+    let layout = Partition::landmark_grid(bn, m, p).map_err(VivaldiError::InvalidConfig)?;
+    let ((plo, phi), (llo, lhi)) = layout.tile_bounds(comm.rank());
+    let n_j = phi - plo;
+    let m_i = lhi - llo;
+    let point_block = batch.row_block(plo, phi);
+    let mut sw = Stopwatch::new();
+
+    // Collective memory check: transient L + C tile, plus W only on
+    // the diagonal ranks (the k×m decayed model is driver-held, as in
+    // the 1D batch function).
+    comm.set_phase("gemm");
+    let need = MemTracker::matrix_f32(m, d)
+        + MemTracker::matrix_f32(n_j, m_i)
+        + if is_diag { MemTracker::matrix_f32(m, m) } else { 0 };
+    let ok = tracker.try_alloc(need, "1.5D stream batch: L + C tile (+ diagonal W)");
+    if !comm.allreduce_and(&world, ok) {
+        if ok {
+            tracker.free(need);
+        }
+        return Err(VivaldiError::OutOfMemory {
+            rank: comm.rank(),
+            requested: need,
+            budget: tracker.budget(),
+            what: "1.5D stream batch: L + C tile (+ diagonal W)".into(),
+        });
+    }
+
+    let replicated;
+    let landmarks: &DenseMatrix = if replicate_l {
+        replicated = replicate_landmarks(comm, &world, &model.landmarks, &mut sw);
+        &replicated
+    } else {
+        &model.landmarks
+    };
+    let l_block = landmarks.row_block(llo, lhi);
+    let (row_norms, lb_norms) = if cfg.base.kernel.needs_norms() {
+        (point_block.row_sq_norms(), l_block.row_sq_norms())
+    } else {
+        (Vec::new(), Vec::new())
+    };
+    let c_tile = sw.time("gemm", || {
+        backend.gram_tile(&point_block, &l_block, &cfg.base.kernel, &row_norms, &lb_norms)
+    });
+
+    let (vlo, vhi) = layout.owned_range(comm.rank());
+    comm.set_phase("update");
+    let mut assign: Vec<u32> = match hist {
+        None => (vlo..vhi).map(|x| (x % k) as u32).collect(),
+        Some(h) => {
+            // Warm start through the same sharded exchange as an
+            // iteration: diagonal solve from the history, α block along
+            // the row, E reduce-scattered down the column.
+            let payload = is_diag.then(|| {
+                let (alpha, cvec) =
+                    solve_alpha_weighted(&model.solver, &model.w, &h.sums, &h.weights, k);
+                pack_alpha_block(&alpha, &cvec, llo, lhi, m, k)
+            });
+            let flat = comm.bcast(&row_g, i, payload);
+            let alpha_t_block = DenseMatrix::from_vec(m_i, k, flat[..m_i * k].to_vec());
+            let cvec: Vec<f32> = flat[m_i * k..].to_vec();
+            let mut e_part = DenseMatrix::zeros(n_j, k);
+            backend.matmul_nn_acc(&c_tile, &alpha_t_block, &mut e_part);
+            let e_local = crate::spmm::reduce_scatter_row_blocks(comm, &col_g, &e_part, i);
+            sw.time("update", || backend.distances_argmin(&e_local, &cvec).0)
+        }
+    };
+    let mut sizes = loop_common::global_sizes(comm, &world, &assign, k);
+
+    let outcome = harness::drive_loop(cfg.base.max_iters, cfg.base.converge_on_stable, |_| {
+        let t0 = timing::clock_now();
+        comm.set_phase("update");
+
+        // (1) Assignments of point block j, shared by the column group.
+        let assign_block = comm.allgather_concat(&col_g, assign.clone());
+        debug_assert_eq!(assign_block.len(), n_j);
+
+        // (2) Per-cluster sums over my tile, reduced to the diagonal.
+        let b_part = cluster_row_sums(&c_tile, &assign_block, k, m_i);
+        let b_red = comm.reduce(&row_g, i, b_part, |acc, other| {
+            for (x, y) in acc.iter_mut().zip(other) {
+                *x += y;
+            }
+        });
+
+        // (3) Diagonal exchange + once-per-column history-aware solve.
+        let payload = if is_diag {
+            let b_block = b_red.expect("diagonal is the row-reduce root");
+            let b = assemble_diag_blocks(&comm.allgather(&diag_g, b_block), k, m, q);
+            let (b_eff, weights) = effective_stats(&b, &sizes, hist);
+            let (alpha, cvec) =
+                solve_alpha_weighted(&model.solver, &model.w, &b_eff, &weights, k);
+            Some(pack_alpha_block(&alpha, &cvec, llo, lhi, m, k))
+        } else {
+            None
+        };
+        let flat = comm.bcast(&row_g, i, payload);
+        debug_assert_eq!(flat.len(), m_i * k + k);
+        let alpha_t_block = DenseMatrix::from_vec(m_i, k, flat[..m_i * k].to_vec());
+        let cvec: Vec<f32> = flat[m_i * k..].to_vec();
+
+        // (4) Partial E over my tile, reduce-scattered down the column
+        // onto each rank's canonical slice.
+        let mut e_part = DenseMatrix::zeros(n_j, k);
+        backend.matmul_nn_acc(&c_tile, &alpha_t_block, &mut e_part);
+        let e_local = crate::spmm::reduce_scatter_row_blocks(comm, &col_g, &e_part, i);
+        debug_assert_eq!(e_local.rows(), assign.len());
+
+        let (new_assign, minvals) = backend.distances_argmin(&e_local, &cvec);
+        let (changes, obj, new_sizes) =
+            loop_common::commit_assignment(comm, &world, &mut assign, new_assign, &minvals, k);
+        sizes = new_sizes;
+        sw.add("update", timing::clock_now() - t0);
+        (changes, obj)
+    });
+
+    // The settled batch's statistics, assembled on the diagonals (rank
+    // 0 = grid (0,0) reports them to the driver).
+    comm.set_phase("update");
+    let assign_block = comm.allgather_concat(&col_g, assign.clone());
+    let b_part = cluster_row_sums(&c_tile, &assign_block, k, m_i);
+    let b_red = comm.reduce(&row_g, i, b_part, |acc, other| {
+        for (x, y) in acc.iter_mut().zip(other) {
+            *x += y;
+        }
+    });
+    let b_full = is_diag.then(|| {
+        let blocks = comm.allgather(&diag_g, b_red.expect("diagonal is the row-reduce root"));
+        assemble_diag_blocks(&blocks, k, m, q)
+    });
+    let sizes_final = loop_common::global_sizes(comm, &world, &assign, k);
+    let fin = (comm.rank() == 0).then(|| BatchFinal {
+        sums: b_full.expect("rank 0 sits on the grid diagonal"),
+        sizes: sizes_final,
+    });
+    Ok((harness::finish_rank(assign, sw, outcome, &tracker), fin))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::stream::MatrixSource;
+    use crate::data::synth;
+    use crate::kernelfn::KernelFn;
+
+    fn rings_cfg(m: usize, batch: usize) -> StreamConfig {
+        StreamConfig {
+            base: ApproxConfig {
+                k: 2,
+                m,
+                kernel: KernelFn::gaussian(2.0),
+                max_iters: 30,
+                ..Default::default()
+            },
+            batch,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let ds = synth::gaussian_blobs(64, 3, 2, 3.0, 5);
+        let run = |cfg: &StreamConfig, p: usize| {
+            let mut src = MatrixSource::new(&ds.points);
+            fit_stream(p, &mut src, cfg)
+        };
+        // m < k.
+        let cfg = StreamConfig {
+            base: ApproxConfig { k: 4, m: 2, ..Default::default() },
+            ..Default::default()
+        };
+        assert!(matches!(run(&cfg, 1), Err(VivaldiError::InvalidConfig(_))));
+        // batch < p.
+        let cfg = StreamConfig { batch: 2, ..rings_cfg(8, 2) };
+        assert!(matches!(run(&cfg, 4), Err(VivaldiError::InvalidConfig(_))));
+        // refresh without a reservoir.
+        let cfg = StreamConfig { refresh_every: 2, ..rings_cfg(8, 32) };
+        assert!(matches!(run(&cfg, 1), Err(VivaldiError::InvalidConfig(_))));
+        // reservoir smaller than m.
+        let cfg = StreamConfig { reservoir: 4, ..rings_cfg(8, 32) };
+        assert!(matches!(run(&cfg, 1), Err(VivaldiError::InvalidConfig(_))));
+        // bad decay.
+        let cfg = StreamConfig { decay: 0.0, ..rings_cfg(8, 32) };
+        assert!(matches!(run(&cfg, 1), Err(VivaldiError::InvalidConfig(_))));
+        // first batch smaller than m.
+        let cfg = rings_cfg(48, 32);
+        assert!(matches!(run(&cfg, 1), Err(VivaldiError::InvalidConfig(_))));
+        // 1.5D stream on a non-square rank count.
+        let cfg = StreamConfig {
+            base: ApproxConfig {
+                layout: LandmarkLayout::OneFiveD,
+                ..rings_cfg(8, 32).base
+            },
+            ..rings_cfg(8, 32)
+        };
+        assert!(matches!(run(&cfg, 2), Err(VivaldiError::InvalidConfig(_))));
+    }
+
+    #[test]
+    fn undersized_tail_is_classified_not_discarded() {
+        // 260 points, batches of 64 on 8 ranks: the 4-point tail cannot
+        // shard across 8 ranks, so the driver labels it under the
+        // carried model — every point still gets an assignment.
+        let ds = synth::gaussian_blobs(260, 3, 2, 4.5, 43);
+        let cfg = StreamConfig {
+            base: ApproxConfig { k: 2, m: 16, max_iters: 20, ..Default::default() },
+            batch: 64,
+            ..Default::default()
+        };
+        let mut src = MatrixSource::new(&ds.points);
+        let out = fit_stream(8, &mut src, &cfg).unwrap();
+        assert_eq!(out.n_total, 260);
+        assert_eq!(out.assignments.len(), 260);
+        assert_eq!(out.batches, 5, "the tail counts as a (classified-only) batch");
+        assert_eq!(*out.batch_iterations.last().unwrap(), 0, "tail runs no inner loop");
+        let nmi = crate::quality::nmi(&out.assignments, &ds.labels, 2);
+        assert!(nmi > 0.9, "nmi = {nmi}");
+        // A first batch smaller than the rank count is still an error.
+        let tiny = ds.points.row_block(0, 6);
+        let mut small_src = MatrixSource::new(&tiny);
+        let cfg2 = StreamConfig { batch: 8, ..cfg };
+        assert!(matches!(
+            fit_stream(8, &mut small_src, &cfg2),
+            Err(VivaldiError::InvalidConfig(_))
+        ));
+    }
+
+    #[test]
+    fn multi_batch_converges_on_blobs() {
+        let ds = synth::gaussian_blobs(240, 4, 3, 5.0, 31);
+        let cfg = StreamConfig {
+            base: ApproxConfig { k: 3, m: 24, max_iters: 30, ..Default::default() },
+            batch: 60,
+            ..Default::default()
+        };
+        let mut src = MatrixSource::new(&ds.points);
+        let out = fit_stream(4, &mut src, &cfg).unwrap();
+        assert_eq!(out.batches, 4);
+        assert_eq!(out.n_total, 240);
+        assert_eq!(out.assignments.len(), 240);
+        assert!(out.converged, "every batch's inner loop should settle");
+        let nmi = crate::quality::nmi(&out.assignments, &ds.labels, 3);
+        assert!(nmi > 0.9, "nmi = {nmi}");
+    }
+
+    #[test]
+    fn decay_and_refresh_stay_deterministic() {
+        let ds = synth::gaussian_blobs(256, 3, 2, 4.5, 37);
+        let cfg = StreamConfig {
+            base: ApproxConfig { k: 2, m: 16, max_iters: 20, ..Default::default() },
+            batch: 64,
+            decay: 0.8,
+            reservoir: 64,
+            refresh_every: 2,
+        };
+        let run = || {
+            let mut src = MatrixSource::new(&ds.points);
+            fit_stream(2, &mut src, &cfg).unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.assignments, b.assignments);
+        assert_eq!(a.batch_iterations, b.batch_iterations);
+        assert!(a.landmark_refreshes >= 1, "refresh must actually trigger");
+        let nmi = crate::quality::nmi(&a.assignments, &ds.labels, 2);
+        assert!(nmi > 0.85, "refresh must not wreck the clustering: nmi = {nmi}");
+    }
+
+    #[test]
+    fn stream_comm_never_resends_landmarks() {
+        // The O(m·d) landmark replication is paid once (first batch);
+        // later batches move only k×m coefficients — so doubling the
+        // number of batches must not re-pay the gemm-phase volume.
+        let ds = synth::gaussian_blobs(512, 8, 2, 4.0, 41);
+        let mk = |n: usize| {
+            let cfg = StreamConfig {
+                base: ApproxConfig {
+                    k: 2,
+                    m: 32,
+                    max_iters: 3,
+                    converge_on_stable: false,
+                    ..Default::default()
+                },
+                batch: 128,
+                ..Default::default()
+            };
+            let block = ds.points.row_block(0, n);
+            let mut src = MatrixSource::new(&block);
+            fit_stream(4, &mut src, &cfg).unwrap()
+        };
+        let two = mk(256);
+        let four = mk(512);
+        let gemm = |r: &StreamFitResult| -> u64 {
+            r.comm_stats.iter().map(|s| s.get("gemm").bytes).sum()
+        };
+        // The marginal gemm-phase cost of two extra batches is only the
+        // per-batch collective OOM check (a handful of bool words) —
+        // far below the one-time (p−1)·m·d·4 replication itself.
+        let marginal = gemm(&four).saturating_sub(gemm(&two));
+        assert!(
+            marginal < gemm(&two) / 4,
+            "landmark replication must be once-per-stream, not per-batch \
+             (2 batches: {} B, 4 batches: {} B)",
+            gemm(&two),
+            gemm(&four)
+        );
+    }
+}

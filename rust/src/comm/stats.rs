@@ -77,6 +77,14 @@ impl CommStats {
         t
     }
 
+    /// Merge another ledger into this one by summation (a rank's
+    /// ledgers across mini-batch launches).
+    pub fn absorb(&mut self, other: &CommStats) {
+        for (k, v) in &other.phases {
+            self.phases.entry(k.clone()).or_default().add(v);
+        }
+    }
+
     /// Merge by summation (aggregate volume across ranks).
     pub fn merged_sum(all: &[CommStats]) -> CommStats {
         let mut out = CommStats::new();

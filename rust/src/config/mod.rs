@@ -95,11 +95,23 @@ pub struct Feasibility {
     /// Off-diagonal ranks drop the m² term entirely, so the aggregate W
     /// footprint is √P·m² instead of P·m².
     pub landmark_15d_bytes_per_rank: u64,
+    /// Mini-batch size the streaming estimate below assumes (= n for
+    /// the plain batch evaluation, where streaming degenerates to the
+    /// 1D landmark path).
+    pub stream_batch: usize,
+    /// Per-rank bytes of the streaming landmark driver's resident
+    /// state: replicated L + W + the in-flight batch's C block — the
+    /// C term scales with the batch, not with n, which is what opens
+    /// unbounded-length streams ([`crate::approx::stream`]).
+    pub landmark_stream_bytes_per_rank: u64,
     pub budget: u64,
     pub exact_fits: bool,
     pub landmark_fits: bool,
     /// Whether the 1.5D landmark layout's worst rank fits the budget.
     pub landmark_15d_fits: bool,
+    /// Whether the streaming path's per-rank state fits the budget at
+    /// `stream_batch`-sized mini-batches.
+    pub landmark_stream_fits: bool,
 }
 
 impl Feasibility {
@@ -113,7 +125,24 @@ impl Feasibility {
 /// Evaluate [`Feasibility`] for an (n, d) workload with m landmarks on
 /// p ranks under `mem`. For non-square p the exact estimate uses the
 /// next square grid side ⌈√p⌉ (the grid algorithms require square P).
+/// The streaming estimate assumes batch = n (the degenerate one-batch
+/// stream); use [`landmark_stream_feasibility`] for a real batch size.
 pub fn landmark_feasibility(n: usize, d: usize, m: usize, p: usize, mem: &MemModel) -> Feasibility {
+    landmark_stream_feasibility(n, d, m, p, n, mem)
+}
+
+/// [`landmark_feasibility`] with an explicit streaming mini-batch size:
+/// the stream estimate replaces the n/p C-block term by batch/p, so the
+/// reported footprint is bounded by the batch no matter how long the
+/// stream runs.
+pub fn landmark_stream_feasibility(
+    n: usize,
+    d: usize,
+    m: usize,
+    p: usize,
+    batch: usize,
+    mem: &MemModel,
+) -> Feasibility {
     use crate::util::ceil_div;
     let q = (p as f64).sqrt().ceil() as usize;
     let tile = ceil_div(n, q.max(1));
@@ -127,6 +156,15 @@ pub fn landmark_feasibility(n: usize, d: usize, m: usize, p: usize, mem: &MemMod
     let landmark_15d = 4 * (ceil_div(n, q.max(1)) as u64 * ceil_div(m, q.max(1)) as u64
         + m as u64 * m as u64
         + m as u64 * d as u64);
+    // Streaming 1D layout: replicated L + W + the in-flight batch's C
+    // block — exactly the charge set `approx::stream`'s per-batch rank
+    // functions register (the k×m decayed model is driver-held host
+    // state, charged by neither). The C block is the batch path's only
+    // n-dependent term, and it becomes batch-dependent here.
+    let batch = batch.clamp(1, n.max(1));
+    let b_p = ceil_div(batch, p.max(1));
+    let landmark_stream =
+        4 * (b_p as u64 * m as u64 + m as u64 * m as u64 + m as u64 * d as u64);
     Feasibility {
         n,
         d,
@@ -135,12 +173,15 @@ pub fn landmark_feasibility(n: usize, d: usize, m: usize, p: usize, mem: &MemMod
         exact_bytes_per_rank: exact,
         landmark_bytes_per_rank: landmark,
         landmark_15d_bytes_per_rank: landmark_15d,
+        stream_batch: batch,
+        landmark_stream_bytes_per_rank: landmark_stream,
         budget: mem.budget,
         exact_fits: exact <= mem.budget,
         landmark_fits: landmark <= mem.budget,
         // The 1.5D layout additionally needs a square grid; never
         // report it as fitting on a rank count it cannot run on.
         landmark_15d_fits: crate::util::is_perfect_square(p) && landmark_15d <= mem.budget,
+        landmark_stream_fits: landmark_stream <= mem.budget,
     }
 }
 
@@ -328,6 +369,30 @@ mod tests {
         let tiny = MemModel { budget: 1024, repl_factor: 1.0, redist_factor: 0.0 };
         let f3 = landmark_feasibility(4096, 2, 512, 4, &tiny);
         assert!(!f3.exact_fits && !f3.landmark_fits && !f3.recommends_landmark());
+    }
+
+    #[test]
+    fn stream_feasibility_bounded_by_batch() {
+        // A workload whose full-n landmark state busts the budget but
+        // whose batch-sized streaming state fits: the report must
+        // separate them, and the streaming estimate must not grow
+        // with n.
+        let mem = MemModel { budget: 600 << 10, repl_factor: 1.0, redist_factor: 0.0 };
+        let f = landmark_stream_feasibility(65_536, 2, 256, 4, 1024, &mem);
+        assert!(!f.landmark_fits, "full-n C block {} must exceed {}", f.landmark_bytes_per_rank, f.budget);
+        assert!(f.landmark_stream_fits, "batch C block {} must fit", f.landmark_stream_bytes_per_rank);
+        assert_eq!(f.stream_batch, 1024);
+        // Stream bytes are independent of n at fixed batch.
+        let g = landmark_stream_feasibility(4 * 65_536, 2, 256, 4, 1024, &mem);
+        assert_eq!(
+            f.landmark_stream_bytes_per_rank,
+            g.landmark_stream_bytes_per_rank
+        );
+        // The plain evaluation degenerates to batch = n: stream and
+        // batch estimates coincide.
+        let h = landmark_feasibility(4096, 2, 256, 4, &mem);
+        assert_eq!(h.stream_batch, 4096);
+        assert_eq!(h.landmark_stream_bytes_per_rank, h.landmark_bytes_per_rank);
     }
 
     #[test]

@@ -139,6 +139,87 @@ fn sq_dist(points: &DenseMatrix, a: usize, b: usize) -> f64 {
         .sum()
 }
 
+/// A bounded, deterministic reservoir of candidate landmark points over
+/// an unbounded stream (Vitter's Algorithm R), feeding the streaming
+/// driver's landmark refresh ([`crate::approx::stream`]).
+///
+/// The reservoir holds at most `capacity` rows; after `t` observed
+/// points each has been kept with probability `capacity / t`, so a
+/// k-means++ refresh over the reservoir approximates a D² selection
+/// over the whole history at O(capacity · d) memory — bounded by the
+/// reservoir, never by the stream length. Fully deterministic per
+/// (seed, observation order): the property the streaming determinism
+/// tests pin down.
+#[derive(Debug, Clone)]
+pub struct LandmarkReservoir {
+    rng: Rng,
+    capacity: usize,
+    seen: usize,
+    d: usize,
+    /// Row-major capacity-bounded sample of the stream.
+    rows: Vec<f32>,
+}
+
+impl LandmarkReservoir {
+    pub fn new(capacity: usize, d: usize, seed: u64) -> Self {
+        assert!(capacity >= 1 && d >= 1, "reservoir needs capacity >= 1 and d >= 1");
+        LandmarkReservoir { rng: Rng::new(seed), capacity, seen: 0, d, rows: Vec::new() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Points observed so far (kept or not).
+    pub fn seen(&self) -> usize {
+        self.seen
+    }
+
+    /// Points currently held (min(seen, capacity)).
+    pub fn len(&self) -> usize {
+        self.rows.len() / self.d
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Absorb a batch of points (Algorithm R per row).
+    pub fn observe(&mut self, batch: &DenseMatrix) {
+        assert_eq!(batch.cols(), self.d, "reservoir feature dim mismatch");
+        for r in 0..batch.rows() {
+            self.seen += 1;
+            if self.len() < self.capacity {
+                self.rows.extend_from_slice(batch.row(r));
+            } else {
+                let j = self.rng.below(self.seen);
+                if j < self.capacity {
+                    let dst = &mut self.rows[j * self.d..(j + 1) * self.d];
+                    dst.copy_from_slice(batch.row(r));
+                }
+            }
+        }
+    }
+
+    /// The current sample as a matrix (row order is reservoir-slot
+    /// order, deterministic per seed and observation history).
+    pub fn snapshot(&self) -> DenseMatrix {
+        DenseMatrix::from_vec(self.len(), self.d, self.rows.clone())
+    }
+
+    /// Select `m` spread-out landmark rows from the reservoir via
+    /// k-means++ (D²) seeding — the refresh step of the streaming
+    /// driver. Deterministic per (reservoir state, seed); requires
+    /// `m <= len()`.
+    pub fn refresh_kmeanspp(&self, m: usize, seed: u64) -> DenseMatrix {
+        let held = self.len();
+        assert!(m >= 1 && m <= held, "refresh needs 1 <= m <= {held} (got m = {m})");
+        let snap = self.snapshot();
+        let idx = kmeanspp(&snap, m, seed);
+        landmark_rows(&snap, &idx)
+    }
+}
+
 /// Gather the landmark rows into an `m × d` matrix (experiment setup /
 /// oracle use; the distributed path assembles the same matrix with an
 /// allgather of per-rank slices).
@@ -212,6 +293,56 @@ mod tests {
         let points = pts(12, 2, 4);
         let idx = sample_landmarks(&points, 12, 3, LandmarkSeeding::Uniform, 1);
         assert_eq!(idx, (0..12).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn reservoir_is_deterministic_and_bounded() {
+        let a_pts = pts(300, 3, 21);
+        let mut a = LandmarkReservoir::new(32, 3, 77);
+        let mut b = LandmarkReservoir::new(32, 3, 77);
+        // Same stream content, different chunkings: Algorithm R decides
+        // per observed row, so the chunking must not matter.
+        for lo in (0..300).step_by(50) {
+            a.observe(&a_pts.row_block(lo, lo + 50));
+        }
+        for lo in (0..300).step_by(25) {
+            b.observe(&a_pts.row_block(lo, lo + 25));
+        }
+        assert_eq!(a.seen(), 300);
+        assert_eq!(a.len(), 32);
+        assert_eq!(a.snapshot(), b.snapshot());
+        // A different seed keeps a different sample.
+        let mut c = LandmarkReservoir::new(32, 3, 78);
+        c.observe(&a_pts);
+        assert_ne!(a.snapshot(), c.snapshot());
+    }
+
+    #[test]
+    fn reservoir_under_capacity_keeps_everything() {
+        let p = pts(10, 2, 22);
+        let mut r = LandmarkReservoir::new(32, 2, 1);
+        r.observe(&p);
+        assert_eq!(r.len(), 10);
+        assert_eq!(r.snapshot(), p);
+    }
+
+    #[test]
+    fn reservoir_refresh_is_deterministic_and_distinct() {
+        let p = pts(200, 2, 23);
+        let mut r = LandmarkReservoir::new(64, 2, 5);
+        r.observe(&p);
+        let a = r.refresh_kmeanspp(16, 9);
+        let b = r.refresh_kmeanspp(16, 9);
+        assert_eq!(a, b);
+        assert_eq!(a.rows(), 16);
+        // All selected rows come from the reservoir and are distinct.
+        let snap = r.snapshot();
+        for i in 0..16 {
+            assert!((0..snap.rows()).any(|j| snap.row(j) == a.row(i)));
+            for j in 0..i {
+                assert_ne!(a.row(i), a.row(j), "duplicate landmark {i}/{j}");
+            }
+        }
     }
 
     #[test]

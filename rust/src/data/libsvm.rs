@@ -11,6 +11,49 @@ use crate::dense::DenseMatrix;
 use std::io::{BufRead, BufReader};
 use std::path::Path;
 
+/// One parsed libSVM line: the raw label plus (0-based index, value)
+/// feature pairs, already filtered by the optional feature cap.
+pub(crate) struct ParsedLine {
+    pub label: f64,
+    pub features: Vec<(usize, f32)>,
+    /// 1 + highest surviving feature index (0 for an all-filtered row).
+    pub max_feat: usize,
+}
+
+/// Parse one libSVM line (`None` for blank / comment lines). Shared by
+/// the whole-file reader below and the chunked [`super::stream`]
+/// source, so both accept exactly the same dialect.
+pub(crate) fn parse_line(line: &str, d_cap: Option<usize>) -> Option<ParsedLine> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return None;
+    }
+    let mut parts = line.split_whitespace();
+    let label_tok = parts.next().unwrap_or("0");
+    // Labels may be floats or negatives; map to a dense u32 later.
+    let label = label_tok.parse::<f64>().unwrap_or(0.0);
+    let mut features = Vec::new();
+    let mut max_feat = 0usize;
+    for tok in parts {
+        if let Some((i, v)) = tok.split_once(':') {
+            if let (Ok(i), Ok(v)) = (i.parse::<usize>(), v.parse::<f32>()) {
+                if i == 0 {
+                    continue; // malformed: libSVM is 1-based
+                }
+                let idx = i - 1;
+                if let Some(cap) = d_cap {
+                    if idx >= cap {
+                        continue;
+                    }
+                }
+                max_feat = max_feat.max(idx + 1);
+                features.push((idx, v));
+            }
+        }
+    }
+    Some(ParsedLine { label, features, max_feat })
+}
+
 /// Parse a libSVM file.
 pub fn read_libsvm(
     path: &Path,
@@ -24,34 +67,12 @@ pub fn read_libsvm(
     let mut max_feat = 0usize;
     for line in reader.lines() {
         let line = line?;
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
+        let Some(parsed) = parse_line(&line, d_cap) else {
             continue;
-        }
-        let mut parts = line.split_whitespace();
-        let label_tok = parts.next().unwrap_or("0");
-        // Labels may be floats or negatives; map to a dense u32 later.
-        let label = label_tok.parse::<f64>().unwrap_or(0.0);
-        let mut feats = Vec::new();
-        for tok in parts {
-            if let Some((i, v)) = tok.split_once(':') {
-                if let (Ok(i), Ok(v)) = (i.parse::<usize>(), v.parse::<f32>()) {
-                    if i == 0 {
-                        continue; // malformed: libSVM is 1-based
-                    }
-                    let idx = i - 1;
-                    if let Some(cap) = d_cap {
-                        if idx >= cap {
-                            continue;
-                        }
-                    }
-                    max_feat = max_feat.max(idx + 1);
-                    feats.push((idx, v));
-                }
-            }
-        }
-        labels.push(label_to_u32(label));
-        rows.push(feats);
+        };
+        max_feat = max_feat.max(parsed.max_feat);
+        labels.push(label_to_u32(parsed.label));
+        rows.push(parsed.features);
         if let Some(m) = max_rows {
             if rows.len() >= m {
                 break;

@@ -14,6 +14,7 @@ pub mod synth;
 pub mod datasets;
 pub mod landmarks;
 pub mod libsvm;
+pub mod stream;
 
 use crate::dense::DenseMatrix;
 

@@ -1,0 +1,271 @@
+//! Chunked point sources for the streaming landmark path
+//! ([`crate::approx::stream`]).
+//!
+//! Every batch path in the crate assumes the full point set is resident
+//! before `fit` runs; a [`PointSource`] inverts that contract — points
+//! arrive in caller-sized chunks, and only the chunk in flight is ever
+//! materialized. Two sources cover the repo's data story:
+//!
+//! * [`MatrixSource`] wraps an in-memory matrix (everything the
+//!   [`super::synth`] / [`super::datasets`] generators produce) so the
+//!   streaming driver can be tested against the batch path on identical
+//!   data.
+//! * [`LibsvmSource`] reads a libSVM file incrementally with a fixed
+//!   feature width — the real Table-II files never need to be densified
+//!   whole.
+
+use super::Dataset;
+use crate::dense::DenseMatrix;
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+
+/// A sequential source of points with a fixed feature dimension.
+///
+/// `next_batch(b)` yields the next at-most-`b` rows, `Ok(None)` once
+/// the source is cleanly exhausted, or `Err` on a mid-stream failure
+/// (an I/O error halfway through a file) — an error is **not** end of
+/// stream, so a broken feed can never silently truncate into a
+/// "successful" fit. Implementations must be deterministic: the same
+/// source replayed with the same batch sizes yields the same rows in
+/// the same order (the streaming tests replay sources against the batch
+/// oracle).
+pub trait PointSource {
+    /// Feature dimension of every batch this source yields.
+    fn dim(&self) -> usize;
+
+    /// The next chunk of at most `max_rows` rows (`Ok(None)` = cleanly
+    /// exhausted; `Err` = the stream broke mid-flight).
+    fn next_batch(&mut self, max_rows: usize) -> Result<Option<DenseMatrix>, String>;
+
+    /// Total rows, when known up front (generators know; files may not).
+    fn hint_total(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// Stream an in-memory matrix in row-block chunks (zero-copy slicing of
+/// the wrapped generator output).
+pub struct MatrixSource<'a> {
+    points: &'a DenseMatrix,
+    cursor: usize,
+}
+
+impl<'a> MatrixSource<'a> {
+    pub fn new(points: &'a DenseMatrix) -> Self {
+        MatrixSource { points, cursor: 0 }
+    }
+
+    /// Wrap a generated [`Dataset`]'s points (labels stay with the
+    /// caller — the stream carries points only, like a real feed).
+    pub fn from_dataset(ds: &'a Dataset) -> Self {
+        Self::new(&ds.points)
+    }
+
+    /// Rows already handed out.
+    pub fn consumed(&self) -> usize {
+        self.cursor
+    }
+}
+
+impl PointSource for MatrixSource<'_> {
+    fn dim(&self) -> usize {
+        self.points.cols()
+    }
+
+    fn next_batch(&mut self, max_rows: usize) -> Result<Option<DenseMatrix>, String> {
+        assert!(max_rows >= 1, "batch size must be positive");
+        let n = self.points.rows();
+        if self.cursor >= n {
+            return Ok(None);
+        }
+        let hi = (self.cursor + max_rows).min(n);
+        let block = self.points.row_block(self.cursor, hi);
+        self.cursor = hi;
+        Ok(Some(block))
+    }
+
+    fn hint_total(&self) -> Option<usize> {
+        Some(self.points.rows())
+    }
+}
+
+/// Incremental libSVM reader with a fixed feature width `d` (features
+/// past `d` are dropped, exactly like [`super::libsvm::read_libsvm`]'s
+/// `d_cap`). Labels are discarded — the stream is unsupervised input.
+pub struct LibsvmSource<R: BufRead> {
+    reader: R,
+    d: usize,
+    rows_read: usize,
+    done: bool,
+}
+
+impl LibsvmSource<BufReader<std::fs::File>> {
+    /// Open a libSVM file for streaming with feature width `d`.
+    pub fn open(path: &Path, d: usize) -> std::io::Result<Self> {
+        let f = std::fs::File::open(path)?;
+        Ok(Self::from_reader(BufReader::new(f), d))
+    }
+}
+
+impl<R: BufRead> LibsvmSource<R> {
+    /// Stream from any buffered reader (tests use in-memory strings).
+    pub fn from_reader(reader: R, d: usize) -> Self {
+        assert!(d >= 1, "feature width must be positive");
+        LibsvmSource { reader, d, rows_read: 0, done: false }
+    }
+
+    /// Rows parsed so far.
+    pub fn rows_read(&self) -> usize {
+        self.rows_read
+    }
+}
+
+impl<R: BufRead> PointSource for LibsvmSource<R> {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn next_batch(&mut self, max_rows: usize) -> Result<Option<DenseMatrix>, String> {
+        assert!(max_rows >= 1, "batch size must be positive");
+        if self.done {
+            return Ok(None);
+        }
+        let mut data = Vec::with_capacity(max_rows * self.d);
+        let mut rows = 0usize;
+        let mut line = String::new();
+        while rows < max_rows {
+            line.clear();
+            match self.reader.read_line(&mut line) {
+                Ok(0) => {
+                    self.done = true;
+                    break;
+                }
+                // A mid-file read failure is an error, not end-of-file:
+                // surfacing it (rather than truncating) is the whole
+                // point of the Result contract.
+                Err(e) => {
+                    self.done = true;
+                    return Err(format!(
+                        "libSVM stream failed after {} rows: {e}",
+                        self.rows_read + rows
+                    ));
+                }
+                Ok(_) => {}
+            }
+            let Some(parsed) = super::libsvm::parse_line(&line, Some(self.d)) else {
+                continue; // blank / comment line
+            };
+            let row_start = data.len();
+            data.resize(row_start + self.d, 0.0);
+            for (idx, v) in parsed.features {
+                data[row_start + idx] = v;
+            }
+            rows += 1;
+        }
+        if rows == 0 {
+            return Ok(None);
+        }
+        self.rows_read += rows;
+        Ok(Some(DenseMatrix::from_vec(rows, self.d, data)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn matrix_source_chunks_cover_in_order() {
+        let ds = synth::gaussian_blobs(100, 3, 2, 3.0, 5);
+        let mut src = MatrixSource::from_dataset(&ds);
+        assert_eq!(src.dim(), 3);
+        assert_eq!(src.hint_total(), Some(100));
+        let mut seen = Vec::new();
+        while let Some(b) = src.next_batch(32).unwrap() {
+            assert!(b.rows() <= 32);
+            seen.push(b);
+        }
+        assert_eq!(seen.iter().map(|b| b.rows()).collect::<Vec<_>>(), vec![32, 32, 32, 4]);
+        let back = DenseMatrix::vstack(&seen);
+        assert_eq!(back, ds.points);
+        assert_eq!(src.consumed(), 100);
+        assert!(src.next_batch(32).unwrap().is_none());
+    }
+
+    #[test]
+    fn matrix_source_single_batch_is_whole_set() {
+        let ds = synth::concentric_rings(64, 2, 7);
+        let mut src = MatrixSource::from_dataset(&ds);
+        let b = src.next_batch(64).unwrap().unwrap();
+        assert_eq!(b, ds.points);
+        assert!(src.next_batch(64).unwrap().is_none());
+    }
+
+    #[test]
+    fn libsvm_source_streams_fixed_width() {
+        let text = "1 1:0.5 3:2.0\n-1 2:1.5\n\n# comment\n0 1:1 9:9\n2 4:4\n";
+        let mut src = LibsvmSource::from_reader(std::io::Cursor::new(text), 4);
+        assert_eq!(src.dim(), 4);
+        let b1 = src.next_batch(2).unwrap().unwrap();
+        assert_eq!((b1.rows(), b1.cols()), (2, 4));
+        assert_eq!(b1.get(0, 0), 0.5);
+        assert_eq!(b1.get(0, 2), 2.0);
+        assert_eq!(b1.get(1, 1), 1.5);
+        let b2 = src.next_batch(2).unwrap().unwrap();
+        assert_eq!(b2.rows(), 2);
+        assert_eq!(b2.get(0, 0), 1.0); // feature 9 dropped by the cap
+        assert_eq!(b2.get(1, 3), 4.0);
+        assert!(src.next_batch(2).unwrap().is_none());
+        assert_eq!(src.rows_read(), 4);
+    }
+
+    #[test]
+    fn libsvm_source_matches_batch_reader() {
+        // Streaming chunks reassemble to exactly what read_libsvm sees.
+        let ds = synth::gaussian_blobs(23, 4, 2, 3.0, 9);
+        let dir = std::env::temp_dir().join("vivaldi_stream_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("stream.libsvm");
+        crate::data::libsvm::write_libsvm(&path, &ds).unwrap();
+        let whole = crate::data::libsvm::read_libsvm(&path, None, Some(4)).unwrap();
+        let mut src = LibsvmSource::open(&path, 4).unwrap();
+        let mut chunks = Vec::new();
+        while let Some(b) = src.next_batch(7).unwrap() {
+            chunks.push(b);
+        }
+        assert_eq!(DenseMatrix::vstack(&chunks), whole.points);
+    }
+
+    /// A reader that fails mid-stream: errors must surface as `Err`,
+    /// not masquerade as a clean end of stream.
+    struct FailingReader {
+        fed: &'static [u8],
+        pos: usize,
+    }
+
+    impl std::io::Read for FailingReader {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if self.pos >= self.fed.len() {
+                return Err(std::io::Error::other("disk went away"));
+            }
+            let n = buf.len().min(self.fed.len() - self.pos);
+            buf[..n].copy_from_slice(&self.fed[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    #[test]
+    fn libsvm_source_surfaces_midstream_errors() {
+        let reader = std::io::BufReader::new(FailingReader { fed: b"1 1:1\n0 2:2\n", pos: 0 });
+        let mut src = LibsvmSource::from_reader(reader, 3);
+        let b = src.next_batch(2).unwrap().unwrap();
+        assert_eq!(b.rows(), 2);
+        // The next pull hits the failing read: an error, not Ok(None).
+        let err = src.next_batch(2).unwrap_err();
+        assert!(err.contains("after 2 rows"), "{err}");
+        // And the source stays terminated afterwards.
+        assert!(src.next_batch(2).unwrap().is_none());
+    }
+}

@@ -110,6 +110,69 @@ pub fn assemble_fit(
     })
 }
 
+/// Accumulates per-batch [`FitResult`]s into stream-level aggregates —
+/// the scaffolding a mini-batch driver ([`crate::approx::stream`])
+/// repeats around its per-batch launches, kept here next to the
+/// per-batch pieces ([`rank_tracker`] / [`drive_loop`] /
+/// [`assemble_fit`]) it composes with.
+#[derive(Debug, Clone)]
+pub struct StreamAccumulator {
+    /// Assignments of every streamed point in arrival order.
+    pub assignments: Vec<u32>,
+    /// Total iterations across batches.
+    pub iterations: usize,
+    pub batch_iterations: Vec<usize>,
+    /// Final objective of each batch.
+    pub objective_curve: Vec<f64>,
+    /// True while every absorbed batch converged.
+    pub converged: bool,
+    /// Max peak tracked memory over ranks and batches.
+    pub peak_mem: u64,
+    /// Per-rank communication ledgers summed across batches.
+    pub comm_stats: Vec<CommStats>,
+    /// Per-rank phase timings summed across batches.
+    pub timings: Vec<Stopwatch>,
+    ranks: usize,
+}
+
+impl StreamAccumulator {
+    pub fn new(p: usize) -> Self {
+        StreamAccumulator {
+            assignments: Vec::new(),
+            iterations: 0,
+            batch_iterations: Vec::new(),
+            objective_curve: Vec::new(),
+            converged: true,
+            peak_mem: 0,
+            comm_stats: vec![CommStats::new(); p],
+            timings: vec![Stopwatch::new(); p],
+            ranks: p,
+        }
+    }
+
+    /// Fold one batch's [`FitResult`] into the stream aggregates.
+    pub fn absorb(&mut self, batch: FitResult) {
+        debug_assert_eq!(batch.ranks, self.ranks, "batches must run on the same rank count");
+        self.iterations += batch.iterations;
+        self.batch_iterations.push(batch.iterations);
+        self.objective_curve.push(batch.objective_curve.last().copied().unwrap_or(0.0));
+        self.converged &= batch.converged;
+        self.peak_mem = self.peak_mem.max(batch.peak_mem);
+        for (acc, s) in self.comm_stats.iter_mut().zip(&batch.comm_stats) {
+            acc.absorb(s);
+        }
+        for (acc, t) in self.timings.iter_mut().zip(&batch.timings) {
+            acc.merge(t);
+        }
+        self.assignments.extend(batch.assignments);
+    }
+
+    /// Batches absorbed so far.
+    pub fn batches(&self) -> usize {
+        self.batch_iterations.len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -145,6 +208,33 @@ mod tests {
         let out = drive_loop(3, false, |_| (0, 0.0));
         assert_eq!(out.iterations, 3);
         assert!(!out.converged);
+    }
+
+    #[test]
+    fn stream_accumulator_folds_batches() {
+        let mk = |assign: Vec<u32>, iters: usize, converged: bool, peak: u64, obj: f64| FitResult {
+            assignments: assign,
+            iterations: iters,
+            converged,
+            objective_curve: vec![obj + 1.0, obj],
+            changes_curve: vec![1, 0],
+            comm_stats: vec![CommStats::new(), CommStats::new()],
+            timings: vec![Stopwatch::new(), Stopwatch::new()],
+            peak_mem: peak,
+            ranks: 2,
+        };
+        let mut acc = StreamAccumulator::new(2);
+        assert_eq!(acc.batches(), 0);
+        acc.absorb(mk(vec![0, 1, 0], 3, true, 100, 5.0));
+        acc.absorb(mk(vec![1, 1], 2, false, 40, 3.0));
+        assert_eq!(acc.batches(), 2);
+        assert_eq!(acc.assignments, vec![0, 1, 0, 1, 1]);
+        assert_eq!(acc.iterations, 5);
+        assert_eq!(acc.batch_iterations, vec![3, 2]);
+        assert_eq!(acc.objective_curve, vec![5.0, 3.0]);
+        assert!(!acc.converged, "one unconverged batch taints the stream");
+        assert_eq!(acc.peak_mem, 100);
+        assert_eq!(acc.comm_stats.len(), 2);
     }
 
     #[test]

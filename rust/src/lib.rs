@@ -96,6 +96,36 @@
 //! println!("1.5D landmark fit: {} iters", out.iterations);
 //! ```
 //!
+//! ## When the points never stop arriving: the streaming path
+//!
+//! Both paths above still require the whole point set up front. The
+//! [`approx::stream`] driver removes even that: points arrive in
+//! mini-batches through a [`data::stream::PointSource`], the landmark
+//! model (m×d landmarks, the once-factored W, a k×m decayed
+//! cluster-sum state) is the only thing carried between batches, and
+//! the peak footprint is proportional to the batch size — independent
+//! of the stream length. A one-batch stream is bit-identical to
+//! [`approx::fit`]; multi-batch streams trade that exactness for
+//! bounded memory:
+//!
+//! ```no_run
+//! use vivaldi::approx::stream::{fit_stream, StreamConfig};
+//! use vivaldi::approx::ApproxConfig;
+//! use vivaldi::data::stream::MatrixSource;
+//! use vivaldi::data::synth;
+//! use vivaldi::kernelfn::KernelFn;
+//!
+//! let ds = synth::concentric_rings(65_536, 2, 42);
+//! let cfg = StreamConfig {
+//!     base: ApproxConfig { k: 2, m: 512, kernel: KernelFn::gaussian(2.0), ..Default::default() },
+//!     batch: 4096, // peak memory ∝ 4096, not 65_536
+//!     ..Default::default()
+//! };
+//! let mut source = MatrixSource::from_dataset(&ds);
+//! let out = fit_stream(4, &mut source, &cfg).unwrap();
+//! println!("{} batches, {} points labeled", out.batches, out.assignments.len());
+//! ```
+//!
 //! See `DESIGN.md` for the full system inventory and the experiment
 //! index, and `EXPERIMENTS.md` for the paper-vs-measured record.
 

@@ -61,9 +61,12 @@ fn print_help() {
          \x20 run               one fit: --algo 1d|h1d|2d|1.5d|landmark --gpus G\n\
          \x20                   --k K --n N --dataset kdd|higgs|mnist8m [--pjrt]\n\
          \x20                   landmark extras: --m M (default n/8),\n\
-         \x20                   --landmark-layout 1d|1.5d, --budget BYTES\n\
+         \x20                   --landmark-layout 1d|1.5d|auto, --budget BYTES\n\
          \x20                   (on OOM the feasibility report prints which\n\
          \x20                   path fits the budget)\n\
+         \x20                   streaming extras: --stream --batch B [--decay G]\n\
+         \x20                   [--reservoir R --refresh-every E] — mini-batch\n\
+         \x20                   landmark fit, peak memory ∝ B not n\n\
          \x20 weak-scaling      Fig. 2 [--breakdown → Fig. 3] [--quick]\n\
          \x20 strong-scaling    Fig. 4 [--breakdown → Fig. 5] [--quick]\n\
          \x20 sliding-window    Fig. 6 speedup over the single-device baseline\n\
@@ -211,23 +214,30 @@ fn cmd_run(args: &[String]) -> i32 {
     }
 }
 
-/// `vivaldi run --algo landmark`: one landmark-approximate fit, with
-/// the layout knob and the feasibility report on OOM (the planning
-/// answer to "which path can hold this workload at all").
+/// `vivaldi run --algo landmark`: one landmark-approximate fit (batch,
+/// or streaming with `--stream`), with the layout knob — `auto` picks
+/// from the analytic closed forms — and the feasibility report on OOM
+/// (the planning answer to "which path can hold this workload at all").
 fn cmd_run_landmark(f: &Flags) -> i32 {
     use vivaldi::approx::{self, ApproxConfig, LandmarkLayout};
-    use vivaldi::config::{landmark_feasibility, MemModel};
+    use vivaldi::config::MemModel;
 
     let g = f.usize_or("--gpus", 4);
     let k = f.usize_or("--k", 16);
     let n = f.usize_or("--n", 4096);
     let m = f.usize_or("--m", (n / 8).max(k));
     let iters = f.usize_or("--iters", 10);
-    let layout = match LandmarkLayout::parse(f.get("--landmark-layout").unwrap_or("1d")) {
-        Some(l) => l,
-        None => {
-            eprintln!("unknown --landmark-layout (use 1d|1.5d)");
-            return 2;
+    let layout_str = f.get("--landmark-layout").unwrap_or("1d");
+    let auto_layout = layout_str.eq_ignore_ascii_case("auto");
+    let explicit_layout = if auto_layout {
+        None
+    } else {
+        match LandmarkLayout::parse(layout_str) {
+            Some(l) => Some(l),
+            None => {
+                eprintln!("unknown --landmark-layout (use 1d|1.5d|auto)");
+                return 2;
+            }
         }
     };
     let mem = f.get("--budget").map(|v| match v.parse::<u64>() {
@@ -245,6 +255,15 @@ fn cmd_run_landmark(f: &Flags) -> i32 {
         .unwrap_or(PaperDataset::HiggsLike);
     let scale = load_scale(f);
     let data = ds.generate(n, scale.d_cap(ds), scale.seed);
+    let stream = f.has("--stream");
+    let batch = f.usize_or("--batch", (n / 8).max(m).max(g));
+    // Analytic auto-selection: the update-volume crossover sits at
+    // m ≈ n/√P (model::analytic::d_landmark_{1d,15d}). Streaming
+    // collectives act on batch-sized point blocks, so the crossover is
+    // evaluated at the batch, not the stream length.
+    let layout = explicit_layout.unwrap_or_else(|| {
+        LandmarkLayout::auto(if stream { batch.min(n) } else { n }, data.d(), k, m, g)
+    });
     let cfg = ApproxConfig {
         k,
         m,
@@ -255,9 +274,13 @@ fn cmd_run_landmark(f: &Flags) -> i32 {
         mem,
         ..Default::default()
     };
+    if stream {
+        return cmd_run_landmark_stream(&data, cfg, g, batch, f, auto_layout);
+    }
     println!(
-        "landmark fit: layout={} G={g} n={} d={} m={m} k={k} iters<={iters}",
+        "landmark fit: layout={}{} G={g} n={} d={} m={m} k={k} iters<={iters}",
         layout.name(),
+        if auto_layout { " (auto)" } else { "" },
         data.n(),
         data.d(),
     );
@@ -291,29 +314,130 @@ fn cmd_run_landmark(f: &Flags) -> i32 {
             eprintln!("fit failed: {e}");
             if matches!(e, vivaldi::VivaldiError::OutOfMemory { .. }) {
                 let report_mem = mem.unwrap_or_else(MemModel::unlimited);
-                let feas = landmark_feasibility(data.n(), data.d(), m, g, &report_mem);
-                eprintln!(
-                    "feasibility @ {} budget/rank:",
-                    vivaldi::util::human_bytes(feas.budget)
-                );
-                eprintln!(
-                    "  exact 1.5D tile     {:>12}  fits: {}",
-                    vivaldi::util::human_bytes(feas.exact_bytes_per_rank),
-                    feas.exact_fits
-                );
-                eprintln!(
-                    "  landmark 1D  (m={m}) {:>12}  fits: {}",
-                    vivaldi::util::human_bytes(feas.landmark_bytes_per_rank),
-                    feas.landmark_fits
-                );
-                eprintln!(
-                    "  landmark 1.5D (m={m}) {:>12}  fits: {}",
-                    vivaldi::util::human_bytes(feas.landmark_15d_bytes_per_rank),
-                    feas.landmark_15d_fits
-                );
-                if feas.recommends_landmark() {
-                    eprintln!("  -> only the landmark path can hold this workload");
-                }
+                print_feasibility_report(&data, m, g, data.n(), &report_mem);
+            }
+            1
+        }
+    }
+}
+
+/// The OOM planning report: which path (exact / landmark 1D / landmark
+/// 1.5D / streaming at the given batch) fits the per-rank budget.
+fn print_feasibility_report(
+    data: &vivaldi::data::Dataset,
+    m: usize,
+    g: usize,
+    batch: usize,
+    mem: &vivaldi::config::MemModel,
+) {
+    let feas =
+        vivaldi::config::landmark_stream_feasibility(data.n(), data.d(), m, g, batch, mem);
+    eprintln!(
+        "feasibility @ {} budget/rank:",
+        vivaldi::util::human_bytes(feas.budget)
+    );
+    eprintln!(
+        "  exact 1.5D tile     {:>12}  fits: {}",
+        vivaldi::util::human_bytes(feas.exact_bytes_per_rank),
+        feas.exact_fits
+    );
+    eprintln!(
+        "  landmark 1D  (m={m}) {:>12}  fits: {}",
+        vivaldi::util::human_bytes(feas.landmark_bytes_per_rank),
+        feas.landmark_fits
+    );
+    eprintln!(
+        "  landmark 1.5D (m={m}) {:>12}  fits: {}",
+        vivaldi::util::human_bytes(feas.landmark_15d_bytes_per_rank),
+        feas.landmark_15d_fits
+    );
+    eprintln!(
+        "  stream (B={})  {:>12}  fits: {}",
+        feas.stream_batch,
+        vivaldi::util::human_bytes(feas.landmark_stream_bytes_per_rank),
+        feas.landmark_stream_fits
+    );
+    if feas.recommends_landmark() {
+        eprintln!("  -> only the landmark path can hold this workload");
+    }
+}
+
+/// `vivaldi run --algo landmark --stream`: mini-batch streaming fit
+/// through `approx::stream` — peak memory scales with `--batch`, not
+/// with n.
+fn cmd_run_landmark_stream(
+    data: &vivaldi::data::Dataset,
+    base: vivaldi::approx::ApproxConfig,
+    g: usize,
+    batch: usize,
+    f: &Flags,
+    auto_layout: bool,
+) -> i32 {
+    use vivaldi::approx::stream::{fit_stream, StreamConfig};
+    use vivaldi::data::stream::MatrixSource;
+
+    let decay = f
+        .get("--decay")
+        .map(|v| match v.parse::<f64>() {
+            Ok(d) => d,
+            Err(_) => {
+                eprintln!("--decay takes a float in (0, 1]");
+                std::process::exit(2);
+            }
+        })
+        .unwrap_or(1.0);
+    let mem = base.mem;
+    let m = base.m;
+    let cfg = StreamConfig {
+        base,
+        batch,
+        decay,
+        reservoir: f.usize_or("--reservoir", 0),
+        refresh_every: f.usize_or("--refresh-every", 0),
+    };
+    println!(
+        "landmark stream fit: layout={}{} G={g} n={} d={} m={m} k={} B={batch} decay={decay}",
+        cfg.base.layout.name(),
+        if auto_layout { " (auto)" } else { "" },
+        data.n(),
+        data.d(),
+        cfg.base.k,
+    );
+    let t0 = std::time::Instant::now();
+    let mut source = MatrixSource::from_dataset(data);
+    match fit_stream(g, &mut source, &cfg) {
+        Ok(out) => {
+            println!(
+                "done in {:.3}s wall: {} batches, {} inner iterations, converged={}, \
+                 landmark refreshes={}, peak mem {} (batch-bounded)",
+                t0.elapsed().as_secs_f64(),
+                out.batches,
+                out.iterations,
+                out.converged,
+                out.landmark_refreshes,
+                vivaldi::util::human_bytes(out.peak_mem),
+            );
+            let crit = vivaldi::util::timing::Stopwatch::max_over(&out.timings);
+            for (phase, secs) in crit.phases() {
+                println!("  phase {phase:<8} {secs:.4}s (critical path)");
+            }
+            let total = vivaldi::comm::CommStats::merged_sum(&out.comm_stats).total();
+            println!(
+                "  comm: {} messages, {} total",
+                total.msgs,
+                vivaldi::util::human_bytes(total.bytes)
+            );
+            if !data.labels.is_empty() {
+                let nmi = vivaldi::quality::nmi(&out.assignments, &data.labels, cfg.base.k);
+                println!("  quality: NMI vs generator labels = {nmi:.3}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("stream fit failed: {e}");
+            if matches!(e, vivaldi::VivaldiError::OutOfMemory { .. }) {
+                let report_mem = mem.unwrap_or_else(vivaldi::config::MemModel::unlimited);
+                print_feasibility_report(data, m, g, batch, &report_mem);
             }
             1
         }

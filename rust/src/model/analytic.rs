@@ -99,6 +99,25 @@ pub fn d_landmark_15d(c: CostParams, m: usize) -> CommCost {
     CommCost::new(q, (c.k * m) as f64 / q + (c.n * (c.k + 1)) as f64 / q)
 }
 
+/// Streaming (mini-batch) landmark update for the whole length-n
+/// stream in the 1D layout: each of the ⌈n/B⌉ batches runs `iters`
+/// inner reduced-rank iterations, and each iteration is exactly the
+/// [`d_landmark_1d`] k×m coefficient allreduce — nothing per-point
+/// crosses the network, and the O(m·d) landmark replication is paid
+/// once per stream (dropped here like Table I's lower-order terms).
+/// Total words: ⌈n/B⌉·iters·⌈log₂P⌉·k·m, so the **per-point** volume
+/// is iters·log₂P·k·m/B — bounded by the batch size, independent of
+/// the stream length: the streaming analogue of the paper's
+/// communication-avoidance axis.
+pub fn d_landmark_stream(c: CostParams, m: usize, batch: usize, iters: usize) -> CommCost {
+    let batches = (c.n as f64 / batch.max(1) as f64).ceil();
+    let per_iter = d_landmark_1d(c, m);
+    CommCost::new(
+        batches * iters as f64 * per_iter.messages,
+        batches * iters as f64 * per_iter.words,
+    )
+}
+
 /// All Table I rows for a parameter set, in the paper's order:
 /// (algorithm, K cost, Dᵀ cost).
 pub fn table1(c: CostParams) -> Vec<(&'static str, CommCost, CommCost)> {
@@ -169,6 +188,26 @@ mod tests {
         // exists for.
         let small_m = 512;
         assert!(d_landmark_15d(c, small_m).words > d_landmark_1d(c, small_m).words);
+    }
+
+    #[test]
+    fn stream_volume_scales_with_batches_not_points() {
+        let c = CostParams { p: 16, ..C };
+        let m = 1024;
+        // Halving the batch doubles the number of batch launches and
+        // therefore the total stream volume.
+        let big = d_landmark_stream(c, m, 8192, 3);
+        let small = d_landmark_stream(c, m, 4096, 3);
+        assert!((small.words / big.words - 2.0).abs() < 1e-9);
+        // At fixed batch count the per-batch cost is d_landmark_1d —
+        // flat in n: doubling n with doubled batch size costs the same.
+        let double_n = CostParams { n: 2 * C.n, ..c };
+        let same = d_landmark_stream(double_n, m, 16384, 3);
+        assert_eq!(same.words, big.words);
+        assert_eq!(same.messages, big.messages);
+        // One batch covering everything = iters × the batch closed form.
+        let one = d_landmark_stream(c, m, C.n, 5);
+        assert!((one.words - 5.0 * d_landmark_1d(c, m).words).abs() < 1e-9);
     }
 
     #[test]

@@ -1,0 +1,137 @@
+//! CLI smoke tests: `main.rs` argument parsing and exit codes for the
+//! landmark subcommand — batch, `--landmark-layout auto` selection, the
+//! OOM feasibility-report path, and the streaming flags. These drive
+//! the real compiled binary, so the launcher can no longer rot
+//! untested.
+
+use std::process::Command;
+
+fn run(args: &[&str]) -> (i32, String, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_vivaldi"))
+        .args(args)
+        .output()
+        .expect("vivaldi binary must launch");
+    (
+        out.status.code().unwrap_or(-1),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn help_lists_landmark_and_stream_flags() {
+    let (code, stdout, _) = run(&["help"]);
+    assert_eq!(code, 0);
+    assert!(stdout.contains("USAGE"), "{stdout}");
+    assert!(stdout.contains("--landmark-layout 1d|1.5d|auto"), "{stdout}");
+    assert!(stdout.contains("--stream"), "{stdout}");
+}
+
+#[test]
+fn unknown_command_and_algo_exit_2() {
+    let (code, _, stderr) = run(&["frobnicate"]);
+    assert_eq!(code, 2);
+    assert!(stderr.contains("unknown command"), "{stderr}");
+    let (code, _, stderr) = run(&["run", "--algo", "3d"]);
+    assert_eq!(code, 2);
+    assert!(stderr.contains("unknown --algo"), "{stderr}");
+}
+
+#[test]
+fn landmark_run_parses_and_completes() {
+    let (code, stdout, stderr) = run(&[
+        "run", "--algo", "landmark", "--n", "240", "--m", "30", "--k", "2", "--gpus", "4",
+        "--iters", "5",
+    ]);
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(stdout.contains("landmark fit: layout=1D"), "{stdout}");
+    assert!(stdout.contains("done in"), "{stdout}");
+}
+
+#[test]
+fn landmark_layout_flag_parses_and_rejects() {
+    let (code, stdout, _) = run(&[
+        "run", "--algo", "landmark", "--landmark-layout", "1.5d", "--n", "144", "--m", "36",
+        "--k", "2", "--gpus", "4", "--iters", "3",
+    ]);
+    assert_eq!(code, 0);
+    assert!(stdout.contains("layout=1.5D"), "{stdout}");
+    let (code, _, stderr) = run(&["run", "--algo", "landmark", "--landmark-layout", "nope"]);
+    assert_eq!(code, 2);
+    assert!(stderr.contains("unknown --landmark-layout"), "{stderr}");
+}
+
+/// `--landmark-layout auto` must pick 1.5D past the m ≈ n/√P
+/// crossover and 1D below it (model::analytic::d_landmark_{1d,15d}).
+#[test]
+fn auto_layout_selects_by_crossover() {
+    let (code, stdout, stderr) = run(&[
+        "run", "--algo", "landmark", "--landmark-layout", "auto", "--n", "256", "--m", "128",
+        "--k", "4", "--gpus", "4", "--iters", "3",
+    ]);
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(stdout.contains("layout=1.5D (auto)"), "large m must pick 1.5D: {stdout}");
+    let (code, stdout, stderr) = run(&[
+        "run", "--algo", "landmark", "--landmark-layout", "auto", "--n", "256", "--m", "16",
+        "--k", "4", "--gpus", "4", "--iters", "3",
+    ]);
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(stdout.contains("layout=1D (auto)"), "small m must pick 1D: {stdout}");
+}
+
+/// The OOM path: a tiny `--budget` makes the fit fail collectively with
+/// exit 1 and prints the four-row feasibility report.
+#[test]
+fn oom_prints_feasibility_report() {
+    let (code, _, stderr) = run(&[
+        "run", "--algo", "landmark", "--n", "512", "--m", "64", "--k", "2", "--gpus", "4",
+        "--budget", "1024",
+    ]);
+    assert_eq!(code, 1, "stderr: {stderr}");
+    assert!(stderr.contains("fit failed"), "{stderr}");
+    assert!(stderr.contains("feasibility @"), "{stderr}");
+    assert!(stderr.contains("exact 1.5D tile"), "{stderr}");
+    assert!(stderr.contains("landmark 1D"), "{stderr}");
+    assert!(stderr.contains("stream (B="), "{stderr}");
+    // A malformed budget is a usage error, not a crash.
+    let (code, _, stderr) = run(&["run", "--algo", "landmark", "--budget", "lots"]);
+    assert_eq!(code, 2);
+    assert!(stderr.contains("--budget takes a byte count"), "{stderr}");
+}
+
+#[test]
+fn stream_run_parses_and_completes() {
+    let (code, stdout, stderr) = run(&[
+        "run", "--algo", "landmark", "--stream", "--batch", "64", "--n", "256", "--m", "32",
+        "--k", "2", "--gpus", "4", "--iters", "5",
+    ]);
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(stdout.contains("landmark stream fit"), "{stdout}");
+    assert!(stdout.contains("4 batches"), "{stdout}");
+    assert!(stdout.contains("batch-bounded"), "{stdout}");
+}
+
+/// With `--stream`, the auto crossover is evaluated at the batch size
+/// (the per-iteration collectives act on batch-sized blocks), not at
+/// the full stream length: m = 64 ≥ batch/√P = 32 picks 1.5D even
+/// though m ≪ n/√P = 256 would have picked 1D.
+#[test]
+fn stream_auto_layout_uses_batch_not_n() {
+    let (code, stdout, stderr) = run(&[
+        "run", "--algo", "landmark", "--stream", "--landmark-layout", "auto", "--batch", "64",
+        "--n", "512", "--m", "64", "--k", "4", "--gpus", "4", "--iters", "3",
+    ]);
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(stdout.contains("layout=1.5D (auto)"), "{stdout}");
+}
+
+#[test]
+fn stream_oom_reports_batch_feasibility() {
+    let (code, _, stderr) = run(&[
+        "run", "--algo", "landmark", "--stream", "--batch", "64", "--n", "512", "--m", "64",
+        "--k", "2", "--gpus", "4", "--budget", "2048",
+    ]);
+    assert_eq!(code, 1, "stderr: {stderr}");
+    assert!(stderr.contains("stream fit failed"), "{stderr}");
+    assert!(stderr.contains("stream (B=64)"), "{stderr}");
+}

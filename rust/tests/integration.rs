@@ -67,6 +67,37 @@ fn sliding_window_agrees_with_distributed() {
     assert_eq!(sw.assignments, dist.assignments);
 }
 
+/// Cross-algorithm quality wall: every exact algorithm (1D, H-1D, 2D,
+/// 1.5D) must reach the single-rank oracle's NMI on the concentric
+/// rings — the paper's motivating non-linearly-separable case — at
+/// p ∈ {1, 4, 9}. Pinned against the *oracle's* score (the algorithms
+/// provably share its fixed point), so a layout refactor that silently
+/// degrades exact-path quality fails here even if it still "clusters".
+#[test]
+fn exact_quality_wall_on_rings() {
+    let ds = synth::concentric_rings(180, 3, 117);
+    let kernel = KernelFn::gaussian(2.0);
+    let want = oracle::reference_fit(&ds.points, 3, &kernel, 40);
+    let oracle_nmi = quality::nmi(&want.assignments, &ds.labels, 3);
+    assert!(
+        oracle_nmi >= 0.6,
+        "the oracle itself must meaningfully separate the rings: nmi={oracle_nmi}"
+    );
+    for algo in Algo::ALL {
+        // All three counts are valid for every algorithm: squares for
+        // the grid family, and √9 = 3 ≤ k = 3 for 2D's MINLOC update.
+        for &p in &[1usize, 4, 9] {
+            let out = kkmeans::fit(algo, p, &ds.points, &cfg(3, kernel)).unwrap();
+            let score = quality::nmi(&out.assignments, &ds.labels, 3);
+            assert!(
+                score + 1e-9 >= oracle_nmi,
+                "algo={} p={p}: nmi {score} fell below the oracle's {oracle_nmi}",
+                algo.name()
+            );
+        }
+    }
+}
+
 /// Uneven divisions: n not divisible by P or by the grid — remainder
 /// handling on every path.
 #[test]

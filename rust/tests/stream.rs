@@ -1,0 +1,307 @@
+//! Streaming landmark Kernel K-means: the one-batch exactness anchor
+//! (bit-identical to `approx::fit`), multi-batch quality on the
+//! non-linearly-separable rings, oracle equivalence across rank counts,
+//! reservoir determinism, and the batch-bounded memory guarantee the
+//! subsystem exists for.
+
+use vivaldi::approx::stream::{fit_stream, StreamConfig, StreamFitResult};
+use vivaldi::approx::{self, oracle as approx_oracle, ApproxConfig, LandmarkLayout};
+use vivaldi::config::MemModel;
+use vivaldi::data::landmarks::LandmarkReservoir;
+use vivaldi::data::stream::{MatrixSource, PointSource};
+use vivaldi::data::synth;
+use vivaldi::dense::DenseMatrix;
+use vivaldi::kernelfn::KernelFn;
+use vivaldi::quality::nmi;
+use vivaldi::VivaldiError;
+
+/// Acceptance anchor: a stream that delivers everything in one batch
+/// must be **bit-identical** to the batch `approx::fit` — same
+/// assignments, same iteration count — on both landmark layouts.
+#[test]
+fn single_batch_stream_is_bit_identical_to_batch_fit() {
+    // Polynomial kernel on blobs and Gaussian on rings, so both the
+    // norm-free and norm-carrying Gram paths are pinned.
+    let blobs = synth::gaussian_blobs(144, 5, 4, 4.5, 301);
+    let rings = synth::concentric_rings(144, 2, 302);
+    let cases: [(&DenseMatrix, usize, KernelFn); 2] = [
+        (&blobs.points, 4, KernelFn::paper_polynomial()),
+        (&rings.points, 2, KernelFn::gaussian(2.0)),
+    ];
+    for (points, k, kernel) in cases {
+        for layout in [LandmarkLayout::OneD, LandmarkLayout::OneFiveD] {
+            for p in [1usize, 4] {
+                let base = ApproxConfig {
+                    k,
+                    m: 36,
+                    layout,
+                    kernel,
+                    max_iters: 40,
+                    ..Default::default()
+                };
+                let want = approx::fit(p, points, &base).unwrap();
+                let cfg = StreamConfig { base, batch: points.rows(), ..Default::default() };
+                let mut src = MatrixSource::new(points);
+                let got = fit_stream(p, &mut src, &cfg).unwrap();
+                assert_eq!(got.batches, 1, "whole set must arrive as one batch");
+                assert_eq!(
+                    got.assignments,
+                    want.assignments,
+                    "layout={} p={p} k={k}: one-batch stream must be bit-identical",
+                    layout.name()
+                );
+                assert_eq!(
+                    got.iterations,
+                    want.iterations,
+                    "layout={} p={p}: iteration counts must agree",
+                    layout.name()
+                );
+                assert_eq!(got.converged, want.converged);
+            }
+        }
+    }
+}
+
+/// The issue's quality bar: multi-batch streaming on concentric rings
+/// reaches ≥ 0.85 NMI with m = n/8 landmarks (landmarks seeded from
+/// the first batch only, model carried across batches).
+#[test]
+fn multi_batch_rings_quality() {
+    let n = 512;
+    for seed in [311u64, 312] {
+        let ds = synth::concentric_rings(n, 2, seed);
+        let cfg = StreamConfig {
+            base: ApproxConfig {
+                k: 2,
+                m: n / 8,
+                kernel: KernelFn::gaussian(2.0),
+                max_iters: 30,
+                ..Default::default()
+            },
+            batch: 128,
+            ..Default::default()
+        };
+        for p in [1usize, 4] {
+            let mut src = MatrixSource::new(&ds.points);
+            let out = fit_stream(p, &mut src, &cfg).unwrap();
+            assert_eq!(out.batches, 4);
+            assert_eq!(out.assignments.len(), n);
+            let score = nmi(&out.assignments, &ds.labels, 2);
+            assert!(score >= 0.85, "seed={seed} p={p} nmi={score}");
+        }
+    }
+}
+
+/// Oracle equivalence at p ∈ {1, 4}: the one-batch stream must reach
+/// the independent single-rank landmark oracle's fixed point (same
+/// one-boundary-point tolerance as the batch path's oracle wall — the
+/// oracle sums in f64, the distributed side in f32).
+#[test]
+fn stream_matches_oracle_at_p_1_4() {
+    let kernel = KernelFn::paper_polynomial();
+    for seed in [321u64, 322] {
+        let ds = synth::gaussian_blobs(144, 5, 4, 4.5, seed);
+        for p in [1usize, 4] {
+            let base = ApproxConfig { k: 4, m: 48, kernel, max_iters: 40, ..Default::default() };
+            let lidx = approx::landmark_indices(&ds.points, &base, p);
+            let want = approx_oracle::reference_fit(&ds.points, &lidx, 4, &kernel, 40);
+            assert!(want.converged, "oracle must converge (seed={seed} p={p})");
+            let cfg = StreamConfig { base, batch: 144, ..Default::default() };
+            let mut src = MatrixSource::new(&ds.points);
+            let out = fit_stream(p, &mut src, &cfg).unwrap();
+            let diffs =
+                out.assignments.iter().zip(&want.assignments).filter(|(a, b)| a != b).count();
+            assert!(
+                diffs <= 1,
+                "seed={seed} p={p}: {diffs}/{} points disagree with the oracle",
+                out.assignments.len()
+            );
+            let score = nmi(&out.assignments, &want.assignments, 4);
+            assert!(score >= 0.99, "seed={seed} p={p} nmi-vs-oracle={score}");
+        }
+    }
+}
+
+/// Landmark reservoir determinism under a fixed seed: the reservoir
+/// itself, and a full streaming fit that selects its landmarks through
+/// reservoir + k-means++ refresh, both replay identically.
+#[test]
+fn reservoir_determinism_under_fixed_seed() {
+    let ds = synth::gaussian_blobs(384, 3, 3, 4.5, 331);
+    // The raw reservoir replays bit-identically and respects capacity.
+    let feed = |seed: u64| {
+        let mut r = LandmarkReservoir::new(48, 3, seed);
+        let mut src = MatrixSource::new(&ds.points);
+        while let Some(b) = src.next_batch(96).expect("in-memory source cannot fail") {
+            r.observe(&b);
+        }
+        r
+    };
+    let r1 = feed(7);
+    let r2 = feed(7);
+    assert_eq!(r1.snapshot(), r2.snapshot());
+    assert_eq!(r1.len(), 48);
+    assert_eq!(r1.seen(), 384);
+    assert_eq!(r1.refresh_kmeanspp(24, 9), r2.refresh_kmeanspp(24, 9));
+    assert_ne!(feed(8).snapshot(), r1.snapshot(), "a different seed keeps a different sample");
+
+    // End-to-end: reservoir-seeded streaming fits replay identically
+    // and still cluster the blobs.
+    let cfg = StreamConfig {
+        base: ApproxConfig { k: 3, m: 24, max_iters: 25, ..Default::default() },
+        batch: 96,
+        reservoir: 48,
+        refresh_every: 2,
+        ..Default::default()
+    };
+    let run = || {
+        let mut src = MatrixSource::new(&ds.points);
+        fit_stream(4, &mut src, &cfg).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.assignments, b.assignments);
+    assert_eq!(a.batch_iterations, b.batch_iterations);
+    assert_eq!(a.landmark_refreshes, b.landmark_refreshes);
+    assert!(a.landmark_refreshes >= 1, "the refresh path must actually run");
+    let score = nmi(&a.assignments, &ds.labels, 3);
+    assert!(score >= 0.85, "nmi={score}");
+}
+
+/// The acceptance-criteria memory guarantee, asserted through the
+/// MemTracker: peak tracked memory of a streaming fit depends on the
+/// batch size, **not** on the stream length — and sits strictly below
+/// the batch path's n-proportional footprint.
+#[test]
+fn stream_peak_memory_is_batch_bound_not_n_bound() {
+    let mem = Some(MemModel { budget: 2 << 20, repl_factor: 1.0, redist_factor: 0.0 });
+    let big = synth::concentric_rings(1024, 2, 341);
+    let small = big.points.row_block(0, 256);
+    let base = ApproxConfig {
+        k: 2,
+        m: 32,
+        kernel: KernelFn::gaussian(2.0),
+        max_iters: 10,
+        mem,
+        ..Default::default()
+    };
+    let run_stream = |points: &DenseMatrix| -> StreamFitResult {
+        let cfg = StreamConfig { base: base.clone(), batch: 128, ..Default::default() };
+        let mut src = MatrixSource::new(points);
+        fit_stream(4, &mut src, &cfg).unwrap()
+    };
+    let two_batches = run_stream(&small);
+    let eight_batches = run_stream(&big.points);
+    assert_eq!(two_batches.batches, 2);
+    assert_eq!(eight_batches.batches, 8);
+    assert!(two_batches.peak_mem > 0, "the tracker must actually charge the stream state");
+    assert_eq!(
+        two_batches.peak_mem, eight_batches.peak_mem,
+        "peak tracked memory must be independent of the stream length"
+    );
+    // The batch path's C block scales with n; at n = 1024 it dominates
+    // the stream's batch-sized footprint.
+    let batch_fit = approx::fit(4, &big.points, &base).unwrap();
+    assert!(
+        eight_batches.peak_mem < batch_fit.peak_mem,
+        "stream peak {} must undercut the batch path's n-proportional peak {}",
+        eight_batches.peak_mem,
+        batch_fit.peak_mem
+    );
+}
+
+/// The workload-opening claim end-to-end: under a budget where even the
+/// *batch landmark* path OOMs (its C block scales with n), the
+/// streaming path completes and still separates the rings.
+#[test]
+fn stream_runs_where_batch_landmark_ooms() {
+    let n = 2048;
+    let m = 128;
+    let p = 4;
+    let ds = synth::concentric_rings(n, 2, 351);
+    let mem = MemModel { budget: 150 << 10, repl_factor: 1.0, redist_factor: 0.0 };
+    let base = ApproxConfig {
+        k: 2,
+        m,
+        kernel: KernelFn::gaussian(2.0),
+        max_iters: 20,
+        mem: Some(mem),
+        ..Default::default()
+    };
+
+    // Batch landmark path: n/p × m C block + W busts the budget.
+    assert!(matches!(
+        approx::fit(p, &ds.points, &base),
+        Err(VivaldiError::OutOfMemory { .. })
+    ));
+
+    // Streaming at B = 256: the C block shrinks to B/p × m and fits.
+    let cfg = StreamConfig { base, batch: 256, ..Default::default() };
+    let mut src = MatrixSource::new(&ds.points);
+    let out = fit_stream(p, &mut src, &cfg).unwrap();
+    assert_eq!(out.batches, 8);
+    assert!(out.peak_mem <= mem.budget);
+    let score = nmi(&out.assignments, &ds.labels, 2);
+    assert!(score >= 0.85, "nmi={score}");
+}
+
+/// Decay keeps the model adaptive without breaking stationary-stream
+/// quality: γ < 1 on a stationary rings stream must still clear the
+/// quality bar, and the decayed run replays deterministically.
+#[test]
+fn decayed_accumulation_on_stationary_stream() {
+    let n = 512;
+    let ds = synth::concentric_rings(n, 2, 361);
+    let cfg = StreamConfig {
+        base: ApproxConfig {
+            k: 2,
+            m: n / 8,
+            kernel: KernelFn::gaussian(2.0),
+            max_iters: 30,
+            ..Default::default()
+        },
+        batch: 128,
+        decay: 0.7,
+        ..Default::default()
+    };
+    let run = || {
+        let mut src = MatrixSource::new(&ds.points);
+        fit_stream(4, &mut src, &cfg).unwrap()
+    };
+    let a = run();
+    assert_eq!(a.assignments, run().assignments);
+    let score = nmi(&a.assignments, &ds.labels, 2);
+    assert!(score >= 0.85, "nmi={score}");
+}
+
+/// The 1.5D landmark layout streams too: multi-batch quality holds and
+/// the layouts agree with each other on the same stream.
+#[test]
+fn fifteen_d_layout_streams() {
+    let n = 512;
+    let ds = synth::concentric_rings(n, 2, 371);
+    let mk = |layout| StreamConfig {
+        base: ApproxConfig {
+            k: 2,
+            m: n / 8,
+            layout,
+            kernel: KernelFn::gaussian(2.0),
+            max_iters: 30,
+            ..Default::default()
+        },
+        batch: 128,
+        ..Default::default()
+    };
+    for p in [1usize, 4] {
+        let mut s1 = MatrixSource::new(&ds.points);
+        let a = fit_stream(p, &mut s1, &mk(LandmarkLayout::OneD)).unwrap();
+        let mut s2 = MatrixSource::new(&ds.points);
+        let b = fit_stream(p, &mut s2, &mk(LandmarkLayout::OneFiveD)).unwrap();
+        let score_a = nmi(&a.assignments, &ds.labels, 2);
+        let score_b = nmi(&b.assignments, &ds.labels, 2);
+        assert!(score_a >= 0.85, "p={p} 1D nmi={score_a}");
+        assert!(score_b >= 0.85, "p={p} 1.5D nmi={score_b}");
+        let agree = nmi(&a.assignments, &b.assignments, 2);
+        assert!(agree >= 0.95, "p={p}: layouts must reach the same clustering, nmi={agree}");
+    }
+}
