@@ -1,8 +1,19 @@
 //! Landmark-approximate vs exact 1.5D Kernel K-means: wall time,
 //! communication volume, peak simulated memory, and quality across an
 //! m sweep — the footprint/quality tradeoff the approximate subsystem
-//! buys (Chitta et al., 1402.3849) — with both landmark layouts, so the
-//! 1D-vs-1.5D coefficient-exchange crossover is visible in one table.
+//! buys (Chitta et al., 1402.3849) — with both landmark layouts and
+//! streaming rows, so the 1D-vs-1.5D coefficient-exchange crossover is
+//! visible in one table.
+//!
+//! Doubles as the **perf-smoke regression gate**: `--quick` shrinks the
+//! grid for CI, `--json PATH` emits a machine-readable
+//! `BENCH_landmark.json` (per-phase times + counted `CommStats`
+//! volumes for the 1D / 1.5D / stream rows), and every run diffs the
+//! counted communication against the `model::analytic` closed forms —
+//! a volume outside the schedule-constant band (e.g. a reintroduced
+//! full-L allgather, a per-iteration W re-factorization) exits 1 and
+//! fails the build.
+
 use vivaldi::approx::stream::{fit_stream, StreamConfig};
 use vivaldi::approx::{self, ApproxConfig, LandmarkLayout};
 use vivaldi::comm::CommStats;
@@ -11,15 +22,83 @@ use vivaldi::data::synth;
 use vivaldi::kernelfn::KernelFn;
 use vivaldi::kkmeans::{self, Algo, FitConfig};
 use vivaldi::metrics::Table;
+use vivaldi::model::analytic::{
+    d_landmark_15d_blockcyclic, d_landmark_1d, d_landmark_stream, w_blockcyclic_factor,
+    CostParams,
+};
 use vivaldi::quality::nmi;
 use vivaldi::util::human_bytes;
+use vivaldi::util::timing::Stopwatch;
+
+/// One emitted row: label, landmark count, wall seconds, per-phase
+/// (bytes, msgs, critical secs), quality, peak memory.
+struct Row {
+    path: String,
+    m: usize,
+    wall_s: f64,
+    peak_mem: u64,
+    nmi: f64,
+    /// (phase, aggregate bytes, aggregate msgs, critical-path secs).
+    phases: Vec<(String, u64, u64, f64)>,
+}
+
+/// One counted-vs-analytic check; `ok == false` fails the run.
+struct CommCheck {
+    row: String,
+    phase: String,
+    counted_bytes: u64,
+    closed_form_bytes: u64,
+    lo: f64,
+    hi: f64,
+}
+
+impl CommCheck {
+    fn ratio(&self) -> f64 {
+        self.counted_bytes as f64 / (self.closed_form_bytes.max(1)) as f64
+    }
+
+    fn ok(&self) -> bool {
+        let r = self.ratio();
+        r >= self.lo && r <= self.hi
+    }
+}
+
+fn phase_rows(stats: &[CommStats], timings: &[Stopwatch]) -> Vec<(String, u64, u64, f64)> {
+    let merged = CommStats::merged_sum(stats);
+    let crit = Stopwatch::max_over(timings);
+    merged
+        .phases()
+        .map(|(name, ps)| (name.to_string(), ps.bytes, ps.msgs, crit.get(name)))
+        .collect()
+}
+
+/// Busiest-rank bytes of one phase — the convention the analytic
+/// closed forms use.
+fn max_rank_bytes(stats: &[CommStats], phase: &str) -> u64 {
+    stats.iter().map(|s| s.get(phase).bytes).max().unwrap_or(0)
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
 
 fn main() {
-    let n = 2048;
-    let iters = 8;
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
+    // Fixed seed; --quick shrinks n and the iteration budget so the CI
+    // perf-smoke job stays in seconds.
+    let (n, iters) = if quick { (512, 4) } else { (2048, 8) };
     let p = 4;
     let ds = synth::concentric_rings(n, 2, 20260710);
     let kernel = KernelFn::gaussian(2.0);
+    let mut rows: Vec<Row> = Vec::new();
+    let mut checks: Vec<CommCheck> = Vec::new();
 
     let mut t = Table::new(
         &format!("Landmark vs exact 1.5D — rings n={n}, {p} ranks, {iters} iters"),
@@ -36,16 +115,27 @@ fn main() {
     let t0 = std::time::Instant::now();
     let exact = kkmeans::fit(Algo::OneFiveD, p, &ds.points, &cfg).expect("exact fit");
     let exact_wall = t0.elapsed().as_secs_f64();
+    let exact_nmi = nmi(&exact.assignments, &ds.labels, 2);
     t.row(vec![
         "exact 1.5D".into(),
         "-".into(),
         format!("{exact_wall:.3}"),
         CommStats::merged_sum(&exact.comm_stats).total().bytes.to_string(),
         human_bytes(exact.peak_mem),
-        format!("{:.3}", nmi(&exact.assignments, &ds.labels, 2)),
+        format!("{exact_nmi:.3}"),
     ]);
+    rows.push(Row {
+        path: "exact 1.5D".into(),
+        m: 0,
+        wall_s: exact_wall,
+        peak_mem: exact.peak_mem,
+        nmi: exact_nmi,
+        phases: phase_rows(&exact.comm_stats, &exact.timings),
+    });
 
-    for m in [n / 32, n / 16, n / 8, n / 4] {
+    let m_sweep: &[usize] =
+        if quick { &[64, 128] } else { &[64, 128, 256, 512] };
+    for &m in m_sweep {
         for layout in [LandmarkLayout::OneD, LandmarkLayout::OneFiveD] {
             let acfg = ApproxConfig {
                 k: 2,
@@ -59,21 +149,66 @@ fn main() {
             let t0 = std::time::Instant::now();
             let out = approx::fit(p, &ds.points, &acfg).expect("approx fit");
             let wall = t0.elapsed().as_secs_f64();
+            let label = format!("landmark {}", layout.name());
+            let score = nmi(&out.assignments, &ds.labels, 2);
             t.row(vec![
-                format!("landmark {}", layout.name()),
+                label.clone(),
                 m.to_string(),
                 format!("{wall:.3}"),
                 CommStats::merged_sum(&out.comm_stats).total().bytes.to_string(),
                 human_bytes(out.peak_mem),
-                format!("{:.3}", nmi(&out.assignments, &ds.labels, 2)),
+                format!("{score:.3}"),
             ]);
+
+            // Counted vs closed form, busiest rank, all `iters`
+            // iterations (the bench fixes the count).
+            let c = CostParams { n, d: 2, k: 2, p };
+            let per_iter = match layout {
+                // ⌈log₂P⌉·k·m words per iteration on the bcast root.
+                LandmarkLayout::OneD => d_landmark_1d(c, m),
+                // Sharded exchange + distributed-W solve (the default).
+                LandmarkLayout::OneFiveD => d_landmark_15d_blockcyclic(c, m),
+            };
+            let closed = (per_iter.words * 4.0 * iters as f64) as u64;
+            checks.push(CommCheck {
+                row: format!("{label} m={m}"),
+                phase: "update".into(),
+                counted_bytes: max_rank_bytes(&out.comm_stats, "update"),
+                closed_form_bytes: closed,
+                lo: 0.2,
+                hi: 4.0,
+            });
+            if layout == LandmarkLayout::OneFiveD {
+                // The one-time distributed factorization: per-attempt
+                // closed form; the generous ceiling tolerates the
+                // deterministic ridge escalation but fails a
+                // per-iteration re-factorization (≥ iters×).
+                let fclosed = (w_blockcyclic_factor(c, m).words * 4.0) as u64;
+                checks.push(CommCheck {
+                    row: format!("{label} m={m}"),
+                    phase: "wfactor".into(),
+                    counted_bytes: max_rank_bytes(&out.comm_stats, "wfactor"),
+                    closed_form_bytes: fclosed,
+                    lo: 0.25,
+                    hi: 16.0,
+                });
+            }
+            rows.push(Row {
+                path: label,
+                m,
+                wall_s: wall,
+                peak_mem: out.peak_mem,
+                nmi: score,
+                phases: phase_rows(&out.comm_stats, &out.timings),
+            });
         }
     }
+
     // Streaming rows: same landmark budget (m = n/8), mini-batched.
     // The peak footprint column is the story — it tracks B, not n.
     let m = n / 8;
-    // The first batch seeds the landmarks, so B ≥ m.
-    for batch in [n / 8, n / 4, n / 2] {
+    let batches: &[usize] = if quick { &[n / 4] } else { &[n / 8, n / 4, n / 2] };
+    for &batch in batches {
         let scfg = StreamConfig {
             base: ApproxConfig {
                 k: 2,
@@ -90,21 +225,129 @@ fn main() {
         let mut source = MatrixSource::new(&ds.points);
         let out = fit_stream(p, &mut source, &scfg).expect("stream fit");
         let wall = t0.elapsed().as_secs_f64();
+        let label = format!("stream 1D (B={batch})");
+        let score = nmi(&out.assignments, &ds.labels, 2);
         t.row(vec![
-            format!("stream 1D (B={batch})"),
+            label.clone(),
             m.to_string(),
             format!("{wall:.3}"),
             CommStats::merged_sum(&out.comm_stats).total().bytes.to_string(),
             human_bytes(out.peak_mem),
-            format!("{:.3}", nmi(&out.assignments, &ds.labels, 2)),
+            format!("{score:.3}"),
         ]);
+        // Whole-stream closed form: ⌈n/B⌉ batches × `iters` inner
+        // iterations of the k×m allreduce (per-batch setup collectives
+        // are the slack the band absorbs).
+        let c = CostParams { n, d: 2, k: 2, p };
+        let closed = (d_landmark_stream(c, m, batch, iters).words * 4.0) as u64;
+        checks.push(CommCheck {
+            row: label.clone(),
+            phase: "update".into(),
+            counted_bytes: max_rank_bytes(&out.comm_stats, "update"),
+            closed_form_bytes: closed,
+            lo: 0.2,
+            hi: 4.0,
+        });
+        rows.push(Row {
+            path: label,
+            m,
+            wall_s: wall,
+            peak_mem: out.peak_mem,
+            nmi: score,
+            phases: phase_rows(&out.comm_stats, &out.timings),
+        });
     }
 
     t.print();
     let _ = t.save_csv("landmark_scaling");
+
+    // The counted-vs-analytic diff: print every check, fail on any
+    // band violation.
+    let mut all_ok = true;
+    println!("\ncounted comm vs model::analytic closed forms (busiest rank):");
+    for ch in &checks {
+        let ok = ch.ok();
+        all_ok &= ok;
+        println!(
+            "  {:<28} {:<8} counted {:>10} B  closed {:>10} B  ratio {:>5.2}  [{}, {}]  {}",
+            ch.row,
+            ch.phase,
+            ch.counted_bytes,
+            ch.closed_form_bytes,
+            ch.ratio(),
+            ch.lo,
+            ch.hi,
+            if ok { "ok" } else { "REGRESSION" }
+        );
+    }
+
+    if let Some(path) = json_path {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"bench\": \"landmark_scaling\",\n");
+        s.push_str(&format!("  \"quick\": {quick},\n"));
+        s.push_str(&format!(
+            "  \"config\": {{\"n\": {n}, \"p\": {p}, \"iters\": {iters}, \"seed\": 20260710}},\n"
+        ));
+        s.push_str("  \"rows\": [\n");
+        for (i, r) in rows.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"path\": \"{}\", \"m\": {}, \"wall_s\": {:.6}, \"peak_mem\": {}, \
+                 \"nmi\": {:.4}, \"phases\": {{",
+                json_escape(&r.path),
+                r.m,
+                r.wall_s,
+                r.peak_mem,
+                r.nmi
+            ));
+            for (j, (name, bytes, msgs, secs)) in r.phases.iter().enumerate() {
+                s.push_str(&format!(
+                    "\"{}\": {{\"bytes\": {}, \"msgs\": {}, \"crit_s\": {:.6}}}{}",
+                    json_escape(name),
+                    bytes,
+                    msgs,
+                    secs,
+                    if j + 1 < r.phases.len() { ", " } else { "" }
+                ));
+            }
+            s.push_str(&format!("}}}}{}\n", if i + 1 < rows.len() { "," } else { "" }));
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"comm_checks\": [\n");
+        for (i, ch) in checks.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"row\": \"{}\", \"phase\": \"{}\", \"counted_bytes\": {}, \
+                 \"closed_form_bytes\": {}, \"ratio\": {:.4}, \"band\": [{}, {}], \
+                 \"ok\": {}}}{}\n",
+                json_escape(&ch.row),
+                json_escape(&ch.phase),
+                ch.counted_bytes,
+                ch.closed_form_bytes,
+                ch.ratio(),
+                ch.lo,
+                ch.hi,
+                ch.ok(),
+                if i + 1 < checks.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        match std::fs::write(&path, s) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => {
+                eprintln!("cannot write {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+
     println!(
         "The landmark rows trade O(n²) Gram state for O(n·m) at matching NMI; \
-         the stream rows bound the peak by the mini-batch — the workload \
-         classes the exact path cannot hold."
+         the 1.5D rows additionally shard W block-cyclically (no rank holds \
+         more than ~m²/√P of it); the stream rows bound the peak by the \
+         mini-batch — the workload classes the exact path cannot hold."
     );
+    if !all_ok {
+        eprintln!("communication regression: counted volume left the closed-form band");
+        std::process::exit(1);
+    }
 }

@@ -56,11 +56,11 @@ use crate::dense::DenseMatrix;
 use crate::gemm::{gemm_15d_landmark_gram, gemm_1d_landmark_gram};
 use crate::kernelfn::KernelFn;
 use crate::kkmeans::{loop_common, FitResult, RankOutput};
-use crate::layout::{harness, Partition};
+use crate::layout::{harness, Partition, WFactorization};
 use crate::util::{part, timing, timing::Stopwatch};
 use crate::VivaldiError;
 
-use solve::SpdSolver;
+use solve::{DiagSolver, DiagW, DistSpdSolver, SpdSolver};
 
 /// How the landmark state (C, W, the coefficient exchange) is
 /// distributed across ranks.
@@ -97,6 +97,16 @@ impl LandmarkLayout {
     /// m ≈ n/√P). Falls back to 1D whenever the grid constraints rule
     /// the 1.5D layout out (non-square p, p = 1, or m < √P) — the
     /// `--landmark-layout auto` selection.
+    ///
+    /// Deliberate scope: this compares the **coefficient-exchange**
+    /// layouts under a replicated W. The orthogonal
+    /// [`crate::layout::WFactorization`] knob (default block-cyclic)
+    /// adds [`crate::model::analytic::w_blockcyclic_solve`] words per
+    /// iteration in exchange for the ~m²/√P memory footprint — a
+    /// memory decision, not a volume one, quantified by
+    /// [`crate::model::analytic::d_landmark_15d_blockcyclic`] and the
+    /// feasibility report. Folding the memory model into `auto` is a
+    /// tracked follow-up (ROADMAP, PR 4).
     pub fn auto(n: usize, d: usize, k: usize, m: usize, p: usize) -> LandmarkLayout {
         use crate::model::analytic::{d_landmark_15d, d_landmark_1d, CostParams};
         if p <= 1 || !crate::util::is_perfect_square(p) {
@@ -129,6 +139,12 @@ pub struct ApproxConfig {
     pub landmark_seed: u64,
     /// How C, W, and the reduced-rank update are distributed.
     pub layout: LandmarkLayout,
+    /// How the 1.5D layout lays out W on the diagonal group:
+    /// block-cyclic (default — no rank holds more than ~m²/q of W, the
+    /// factorization and solves run distributed) or replicated (full
+    /// m×m per diagonal). Bit-identical results either way; ignored by
+    /// the 1D layout, which always replicates W.
+    pub w_fact: WFactorization,
     /// Maximum clustering iterations.
     pub max_iters: usize,
     /// Kernel function.
@@ -147,6 +163,7 @@ impl Default for ApproxConfig {
             seeding: LandmarkSeeding::Uniform,
             landmark_seed: 20260710,
             layout: LandmarkLayout::OneD,
+            w_fact: WFactorization::BlockCyclic,
             max_iters: 100,
             kernel: KernelFn::paper_polynomial(),
             converge_on_stable: true,
@@ -439,14 +456,20 @@ pub(crate) fn solve_alpha_weighted(
 /// 2. Per-cluster sums of the local C tile (k × m/√P), **reduced along
 ///    the grid row** to the diagonal — the k×m allreduce shrunk by √P.
 /// 3. Diagonals exchange their landmark blocks (allgather over the √P
-///    diagonal ranks), run the replicated f64 solve **once per grid
-///    column**, and broadcast their α block + center norms back along
-///    their row.
+///    diagonal ranks) and run the f64 solve **once per grid column** —
+///    replicated, or distributed against the block-cyclic factor
+///    ([`DistSpdSolver`], the default) — then broadcast their α block
+///    + center norms back along their row.
 /// 4. Partial E = C_tile · αᵀ_block, **reduce-scattered along the grid
 ///    column split by point sub-slices** — landing each rank's E rows
 ///    exactly on its canonical slice, where
 ///    [`loop_common::commit_assignment`] needs them (the same §V.C
 ///    column-major-grid property the exact 1.5D SpMM uses).
+///
+/// The one-time W factorization is its own phase ("wfactor"): in
+/// block-cyclic mode it is a collective over the diagonal group (panel
+/// broadcast + trailing update), so its communication is counted
+/// separately from the Gram build and the iteration loop.
 fn run_rank_15d(
     comm: &Comm,
     points: &DenseMatrix,
@@ -460,11 +483,10 @@ fn run_rank_15d(
     let m = lidx.len();
     let world = Group::world(p);
     let grid = Grid2D::new(p).expect("fit() checked square grid");
-    let q = grid.q();
     let (i, j) = grid.coords(comm.rank());
     let row_g = grid.row_group(i);
     let col_g = grid.col_group(j);
-    let diag_g = Group::new((0..q).map(|r| grid.rank_at(r, r)).collect());
+    let diag_g = grid.diag_group();
     let is_diag = i == j;
     let (_mem, tracker) = harness::rank_tracker(comm.rank(), cfg.mem);
     let layout = Partition::landmark_grid(n, m, p).expect("fit() validated the landmark grid");
@@ -475,13 +497,28 @@ fn run_rank_15d(
     let own_rows = owned_landmark_rows(points, lidx, p, comm.rank());
     let mut sw = Stopwatch::new();
 
-    // C tile + (diagonal-only) W.
-    let (c_tile, w_opt) = sw.time("gemm", || {
+    // C tile + (diagonal-only) W state in the configured layout.
+    let (c_tile, w_state) = sw.time("gemm", || {
         gemm_15d_landmark_gram(
             comm, &grid, &layout, &point_block, &own_rows, &cfg.kernel, backend, &tracker,
+            cfg.w_fact,
         )
     })?;
-    let solver = w_opt.as_ref().map(SpdSolver::factor);
+    // Factor once per fit — scalar on a replicated W, collectively over
+    // the diagonal group on block-cyclic panels (bit-identical either
+    // way).
+    let solver = sw.time("wfactor", || {
+        w_state.map(|state| match state {
+            DiagW::Full(w) => {
+                let solver = SpdSolver::factor(&w);
+                DiagSolver::Replicated { solver, w }
+            }
+            DiagW::Panels(panels) => {
+                comm.set_phase("wfactor");
+                DiagSolver::Dist(DistSpdSolver::factor_dist(comm, &diag_g, panels))
+            }
+        })
+    });
 
     // Round-robin V init over the canonical owned slice.
     let (vlo, vhi) = layout.owned_range(comm.rank());
@@ -505,18 +542,17 @@ fn run_rank_15d(
             }
         });
 
-        // (3) Diagonal exchange + once-per-column solve; α block and
-        // center norms come back along the row.
+        // (3) Diagonal exchange + once-per-column solve (replicated or
+        // distributed against the block-cyclic factor — bit-identical);
+        // α block and center norms come back along the row.
         let payload = if is_diag {
             let b_block = b_red.expect("diagonal is the row-reduce root");
-            let b = assemble_diag_blocks(&comm.allgather(&diag_g, b_block), k, m, q);
-            let (alpha, cvec) = solve_alpha(
-                solver.as_ref().expect("diagonal holds the W factor"),
-                w_opt.as_ref().expect("diagonal holds W"),
-                &b,
-                &sizes,
-                k,
-            );
+            let b = assemble_diag_blocks(&comm.allgather(&diag_g, b_block), k, m, diag_g.size());
+            let weights: Vec<f64> = sizes.iter().map(|&s| s as f64).collect();
+            let (alpha, cvec) = solver
+                .as_ref()
+                .expect("diagonal holds the W factor")
+                .solve_weighted(comm, &diag_g, &b, &weights, k);
             Some(pack_alpha_block(&alpha, &cvec, llo, lhi, m, k))
         } else {
             None

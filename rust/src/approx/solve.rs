@@ -8,8 +8,30 @@
 //! λ = 1e-8·tr(W)/m and multiply by 10 until the factorization
 //! succeeds. Everything is deterministic and rank-replicated — every
 //! rank factors the same W and obtains bit-identical coefficients.
+//!
+//! Two solvers implement that contract:
+//!
+//! * [`SpdSolver`] — the replicated scalar factorization (every caller
+//!   holds full W).
+//! * [`DistSpdSolver`] — the same factorization **distributed over the
+//!   1.5D grid's diagonal group**: W lives as block-cyclic column
+//!   panels ([`BlockCyclic`]), the Cholesky runs as panel
+//!   factorization + panel broadcast + trailing update, and the
+//!   per-iteration solves run as pipelined forward/back substitution
+//!   against the distributed factor. No rank ever holds more than
+//!   ~m²/q of W (plus one broadcast panel in flight).
+//!
+//! **Bit-identity invariant:** for every element, both solvers perform
+//! the identical sequence of f64 operations in the identical order —
+//! the trailing updates subtract `l[i][t]·l[j][t]` one `t` at a time in
+//! ascending `t`, exactly like the scalar loop — so `DistSpdSolver`
+//! produces bit-identical factors, coefficients, and center norms to
+//! `SpdSolver` on the same W. The test wall pins this with exact `==`
+//! on the f64 outputs.
 
+use crate::comm::{Comm, Group};
 use crate::dense::DenseMatrix;
+use crate::layout::BlockCyclic;
 
 /// Cholesky factor of `W + λI` (f64), reused across iterations: `W` is
 /// fixed for a whole fit, only the right-hand sides change.
@@ -49,6 +71,13 @@ impl SpdSolver {
         self.m
     }
 
+    /// The row-major m×m lower factor (upper part zero) — exposed so
+    /// the distributed solver can be seeded from a host-side factor
+    /// and so the bit-identity tests can compare factors exactly.
+    pub fn lower(&self) -> &[f64] {
+        &self.l
+    }
+
     /// Solve `(W + λI) x = rhs` via forward/back substitution.
     pub fn solve(&self, rhs: &[f64]) -> Vec<f64> {
         let m = self.m;
@@ -72,6 +101,516 @@ impl SpdSolver {
             x[i] = s / self.l[i * m + i];
         }
         x
+    }
+}
+
+/// One diagonal rank's share of the block-cyclic W: for each owned
+/// panel (ascending panel index) the full m-row columns, column-major
+/// f32 — exactly what [`crate::gemm::gemm_15d_landmark_gram`] hands
+/// back in block-cyclic mode, and what [`DistSpdSolver`] factors.
+#[derive(Debug, Clone)]
+pub struct WPanels {
+    pub bc: BlockCyclic,
+    /// This rank's index in the diagonal group.
+    pub my_idx: usize,
+    /// Per owned panel (ascending): column-major m×width f32 block.
+    pub cols: Vec<Vec<f32>>,
+}
+
+impl WPanels {
+    /// Slice a host-resident full W into the panels diagonal-group
+    /// index `my_idx` owns — the streaming driver's path, where W is
+    /// computed once per landmark set on the host.
+    pub fn from_full(w: &DenseMatrix, bc: BlockCyclic, my_idx: usize) -> WPanels {
+        let m = bc.m();
+        assert_eq!(w.rows(), m);
+        assert_eq!(w.cols(), m);
+        let mut cols = Vec::new();
+        for t in bc.owned_panels(my_idx) {
+            let (lo, hi) = bc.panel_bounds(t);
+            let mut block = Vec::with_capacity(m * (hi - lo));
+            for c in lo..hi {
+                for u in 0..m {
+                    block.push(w.get(u, c));
+                }
+            }
+            cols.push(block);
+        }
+        WPanels { bc, my_idx, cols }
+    }
+
+    /// W's diagonal entries within this rank's panels, as
+    /// (global column, value) in ascending column order per panel.
+    fn local_diag(&self) -> Vec<f32> {
+        let m = self.bc.m();
+        let mut out = Vec::new();
+        for (pi, &t) in self.bc.owned_panels(self.my_idx).iter().enumerate() {
+            let (lo, hi) = self.bc.panel_bounds(t);
+            for lc in 0..hi - lo {
+                out.push(self.cols[pi][lc * m + (lo + lc)]);
+            }
+        }
+        out
+    }
+}
+
+/// The W state a 1.5D-landmark diagonal rank carries out of the Gram
+/// pipeline: the full matrix (replicated mode) or its block-cyclic
+/// panels (distributed mode). Off-diagonal ranks carry neither.
+#[derive(Debug, Clone)]
+pub enum DiagW {
+    Full(DenseMatrix),
+    Panels(WPanels),
+}
+
+/// Reassemble per-rank panel-ordered payloads (each rank's buffer
+/// walks its owned panels ascending, `per_col` values per column) into
+/// a flat column-ascending vector of length `m·per_col`.
+fn unpack_panel_allgather<T: Copy + Default>(
+    bc: &BlockCyclic,
+    parts: &[Vec<T>],
+    per_col: usize,
+) -> Vec<T> {
+    let m = bc.m();
+    let mut out = vec![T::default(); m * per_col];
+    for (idx, buf) in parts.iter().enumerate() {
+        let mut cursor = 0usize;
+        for t in bc.owned_panels(idx) {
+            let (lo, hi) = bc.panel_bounds(t);
+            for c in lo..hi {
+                out[c * per_col..(c + 1) * per_col]
+                    .copy_from_slice(&buf[cursor..cursor + per_col]);
+                cursor += per_col;
+            }
+        }
+        debug_assert_eq!(cursor, buf.len());
+    }
+    out
+}
+
+/// Column offsets of a panel's packed lower storage: column `lo + lc`
+/// (rows `c..m`) starts at `offs[lc]`.
+fn lower_offsets(m: usize, lo: usize, hi: usize) -> Vec<usize> {
+    let mut offs = Vec::with_capacity(hi - lo);
+    let mut cur = 0usize;
+    for c in lo..hi {
+        offs.push(cur);
+        cur += m - c;
+    }
+    offs
+}
+
+/// The block-cyclic distributed counterpart of [`SpdSolver`]: the
+/// Cholesky factor of `W + λI` spread as column panels over the 1.5D
+/// grid's diagonal group, with pipelined forward/back substitution.
+/// Bit-identical to the replicated solver (see the module docs).
+#[derive(Debug, Clone)]
+pub struct DistSpdSolver {
+    bc: BlockCyclic,
+    my_idx: usize,
+    /// Per owned panel (ascending): the factored columns' lower parts,
+    /// column `c` stored as `l[c..m][c]`, concatenated in column order.
+    lower: Vec<Vec<f64>>,
+    /// The original W panels (retained for the center norms
+    /// c_a = α_aᵀWα_a, which the ridge-free W defines).
+    panels: WPanels,
+    /// The ridge that made the factorization succeed (identical to the
+    /// scalar solver's on the same W).
+    pub ridge: f64,
+}
+
+impl DistSpdSolver {
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.bc.m()
+    }
+
+    #[inline]
+    pub fn block_cyclic(&self) -> &BlockCyclic {
+        &self.bc
+    }
+
+    /// This rank's factored lower columns (tests compare them bitwise
+    /// against the scalar factor).
+    pub fn lower_panels(&self) -> &[Vec<f64>] {
+        &self.lower
+    }
+
+    /// Factor the distributed W **collectively over the diagonal
+    /// group**: every diagonal rank calls with its own panels. Per
+    /// panel: the owner factors it (all updates from earlier panels
+    /// already applied), broadcasts the factored columns, and every
+    /// rank applies the trailing update to its later panels — the
+    /// broadcast panel is the only transient, so peak W state stays at
+    /// ~m²/q + one panel. The escalating ridge restarts are collective
+    /// (the failure flag rides the panel broadcast), so every rank
+    /// lands on the same ridge as the scalar solver would.
+    pub fn factor_dist(comm: &Comm, diag: &Group, panels: WPanels) -> DistSpdSolver {
+        let bc = panels.bc;
+        let m = bc.m();
+        let my_idx = diag
+            .index_of(comm.rank())
+            .expect("factor_dist: caller must be in the diagonal group");
+        assert_eq!(my_idx, panels.my_idx, "panel ownership disagrees with group index");
+        assert_eq!(diag.size(), bc.q(), "diagonal group size must match the panel deal");
+
+        // Global diagonal of W (ascending), so the trace — and with it
+        // the ridge schedule — is computed in exactly the scalar order.
+        let diag_parts = comm.allgather(diag, panels.local_diag());
+        let w_diag = unpack_panel_allgather(&bc, &diag_parts, 1);
+        let trace: f64 = w_diag.iter().map(|&v| v as f64).sum();
+        let base = (trace / m as f64).abs().max(1e-12);
+        let mut ridge = 1e-8 * base;
+        for _ in 0..24 {
+            if let Some(lower) = try_cholesky_dist(comm, diag, &panels, ridge) {
+                return DistSpdSolver { bc, my_idx, lower, panels, ridge };
+            }
+            ridge *= 10.0;
+        }
+        panic!("DistSpdSolver: no ridge stabilized the {m}x{m} factorization");
+    }
+
+    /// Build the distributed solver from a host-side replicated factor
+    /// — the streaming driver's path: W is factored once per landmark
+    /// set on the host ([`SpdSolver::factor`], bit-identical to
+    /// [`Self::factor_dist`]), and each diagonal rank receives only its
+    /// panel slices, inheriting the distributed per-iteration solve
+    /// without re-paying the factorization.
+    pub fn from_host(
+        solver: &SpdSolver,
+        w: &DenseMatrix,
+        bc: BlockCyclic,
+        my_idx: usize,
+    ) -> DistSpdSolver {
+        let m = bc.m();
+        assert_eq!(solver.dim(), m);
+        let panels = WPanels::from_full(w, bc, my_idx);
+        let mut lower = Vec::new();
+        let mut total = 0usize;
+        for t in bc.owned_panels(my_idx) {
+            let (lo, hi) = bc.panel_bounds(t);
+            let mut block = Vec::with_capacity(lower_len(m, lo, hi));
+            for c in lo..hi {
+                for i in c..m {
+                    block.push(solver.l[i * m + c]);
+                }
+            }
+            total += block.len();
+            lower.push(block);
+        }
+        // The packed factor is exactly the layout's accounted size.
+        debug_assert_eq!(total as u64 * 8, bc.factor_bytes(my_idx));
+        DistSpdSolver { bc, my_idx, lower, panels, ridge: solver.ridge }
+    }
+
+    /// The distributed counterpart of the replicated
+    /// `solve_alpha_weighted`: solve the k ridge systems against the
+    /// block-cyclic factor and return the full α (k×m f64) plus center
+    /// norms on **every** diagonal rank — bit-identical to the
+    /// replicated solve on the same inputs.
+    ///
+    /// Collective over the diagonal group. Schedule per call:
+    /// a forward pipeline over panels (each owner finalizes its
+    /// columns' y values and applies their updates to all later rows
+    /// before passing the k×m token on), the mirrored backward
+    /// pipeline, a broadcast of the finished α from the first panel's
+    /// owner, and an allgather of the per-column center-norm terms
+    /// (summed in ascending column order on every rank — the scalar
+    /// accumulation order).
+    pub fn solve_alpha_weighted(
+        &self,
+        comm: &Comm,
+        diag: &Group,
+        b: &[f32],
+        weights: &[f64],
+        k: usize,
+    ) -> (Vec<f64>, Vec<f32>) {
+        let m = self.bc.m();
+        let n_panels = self.bc.panels();
+        debug_assert_eq!(b.len(), k * m);
+        debug_assert_eq!(weights.len(), k);
+        let active: Vec<usize> = (0..k).filter(|&a| weights[a] > 0.0).collect();
+
+        // Normalized right-hand sides (identical on every rank; rows of
+        // zero-weight clusters stay exactly zero, like the scalar path).
+        let mut z = vec![0.0f64; k * m];
+        for &a in &active {
+            let inv = 1.0 / weights[a];
+            for t in 0..m {
+                z[a * m + t] = b[a * m + t] as f64 * inv;
+            }
+        }
+
+        // Forward pipeline: L y = rhs, panels ascending.
+        let tag_f = comm.next_tag(diag);
+        for p in 0..n_panels {
+            if self.bc.owner(p) != self.my_idx {
+                continue;
+            }
+            if p > 0 && self.bc.owner(p - 1) != self.my_idx {
+                z = comm.recv(diag.rank_at(self.bc.owner(p - 1)), tag_f.wrapping_add(p as u64));
+            }
+            let (lo, hi) = self.bc.panel_bounds(p);
+            let offs = lower_offsets(m, lo, hi);
+            let lower = &self.lower[p / self.bc.q()];
+            for &a in &active {
+                let za = &mut z[a * m..(a + 1) * m];
+                for lc in 0..hi - lo {
+                    let c = lo + lc;
+                    let col = &lower[offs[lc]..offs[lc] + (m - c)];
+                    // All t < c already subtracted (earlier panels via
+                    // the pipeline, this panel via the loop below), in
+                    // ascending t — the scalar order.
+                    let y = za[c] / col[0];
+                    za[c] = y;
+                    for i in c + 1..m {
+                        za[i] -= col[i - c] * y;
+                    }
+                }
+            }
+            if p + 1 < n_panels && self.bc.owner(p + 1) != self.my_idx {
+                let bytes = (z.len() * 8) as u64;
+                comm.send(
+                    diag.rank_at(self.bc.owner(p + 1)),
+                    tag_f.wrapping_add((p + 1) as u64),
+                    z.clone(),
+                );
+                comm.record_critical(1, bytes);
+            }
+        }
+
+        // Backward pipeline: Lᵀ x = y, panels descending. The forward
+        // token carried every panel's y along, so the last owner starts
+        // from the complete y vector.
+        let tag_b = comm.next_tag(diag);
+        for p in (0..n_panels).rev() {
+            if self.bc.owner(p) != self.my_idx {
+                continue;
+            }
+            if p + 1 < n_panels && self.bc.owner(p + 1) != self.my_idx {
+                z = comm.recv(diag.rank_at(self.bc.owner(p + 1)), tag_b.wrapping_add(p as u64));
+            }
+            let (lo, hi) = self.bc.panel_bounds(p);
+            let offs = lower_offsets(m, lo, hi);
+            let lower = &self.lower[p / self.bc.q()];
+            for &a in &active {
+                let za = &mut z[a * m..(a + 1) * m];
+                for lc in (0..hi - lo).rev() {
+                    let c = lo + lc;
+                    let col = &lower[offs[lc]..offs[lc] + (m - c)];
+                    let mut s = za[c];
+                    // u ascending over the already-final x values —
+                    // the scalar back-substitution order.
+                    for u in c + 1..m {
+                        s -= col[u - c] * za[u];
+                    }
+                    za[c] = s / col[0];
+                }
+            }
+            if p > 0 && self.bc.owner(p - 1) != self.my_idx {
+                let bytes = (z.len() * 8) as u64;
+                comm.send(
+                    diag.rank_at(self.bc.owner(p - 1)),
+                    tag_b.wrapping_add((p - 1) as u64),
+                    z.clone(),
+                );
+                comm.record_critical(1, bytes);
+            }
+        }
+
+        // Panel 0's owner (group index 0) now holds the complete α.
+        let alpha = comm.bcast(diag, 0, (self.my_idx == 0).then_some(z));
+
+        // Center norms c_a = α_aᵀWα_a: the owner of column t computes
+        // row_t = Σ_u W[t][u]·α[u] from its stored full column t (W is
+        // bitwise symmetric) and the term α[t]·row_t; the terms are
+        // allgathered and summed in ascending t on every rank —
+        // exactly the scalar accumulation.
+        let owned = self.bc.owned_panels(self.my_idx);
+        let mut local_terms: Vec<f64> =
+            Vec::with_capacity(k * self.bc.owned_cols(self.my_idx));
+        for (pi, &t_panel) in owned.iter().enumerate() {
+            let (lo, hi) = self.bc.panel_bounds(t_panel);
+            for lc in 0..hi - lo {
+                let c = lo + lc;
+                let wcol = &self.panels.cols[pi][lc * m..(lc + 1) * m];
+                for a in 0..k {
+                    let al = &alpha[a * m..(a + 1) * m];
+                    let mut row = 0.0f64;
+                    for u in 0..m {
+                        row += wcol[u] as f64 * al[u];
+                    }
+                    local_terms.push(al[c] * row);
+                }
+            }
+        }
+        let term_parts = comm.allgather(diag, local_terms);
+        let terms = unpack_panel_allgather(&self.bc, &term_parts, k);
+        let mut cvec = vec![0.0f32; k];
+        for a in 0..k {
+            let mut s = 0.0f64;
+            for t in 0..m {
+                s += terms[t * k + a];
+            }
+            cvec[a] = s as f32;
+        }
+        (alpha, cvec)
+    }
+}
+
+/// One distributed factorization attempt at a fixed ridge: panel
+/// factorization + broadcast + ascending-t trailing updates. Returns
+/// the owned panels' factored lower columns, or `None` when any pivot
+/// fails (every rank agrees — the flag rides the broadcast).
+fn try_cholesky_dist(
+    comm: &Comm,
+    diag: &Group,
+    panels: &WPanels,
+    ridge: f64,
+) -> Option<Vec<Vec<f64>>> {
+    let bc = panels.bc;
+    let m = bc.m();
+    let my_idx = panels.my_idx;
+    let owned = bc.owned_panels(my_idx);
+
+    // Working storage: owned columns' lower parts in f64, seeded as
+    // (W as f64) + ridge on the diagonal — the scalar initial value.
+    let mut work: Vec<Vec<f64>> = owned
+        .iter()
+        .enumerate()
+        .map(|(pi, &t)| {
+            let (lo, hi) = bc.panel_bounds(t);
+            let mut block = Vec::with_capacity(lower_len(m, lo, hi));
+            for lc in 0..hi - lo {
+                let c = lo + lc;
+                for i in c..m {
+                    let mut v = panels.cols[pi][lc * m + i] as f64;
+                    if i == c {
+                        v += ridge;
+                    }
+                    block.push(v);
+                }
+            }
+            block
+        })
+        .collect();
+
+    let mut failed = false;
+    for p in 0..bc.panels() {
+        let owner = bc.owner(p);
+        // Every diagonal rank consumes the broadcast panel — the
+        // layout's declared replication group must be the whole group.
+        debug_assert_eq!(bc.panel_replication_group(p).len(), diag.size());
+        let (lo, hi) = bc.panel_bounds(p);
+        let offs = lower_offsets(m, lo, hi);
+        let payload = if owner == my_idx && !failed {
+            let a = &mut work[p / bc.q()];
+            let mut ok = true;
+            'cols: for lc in 0..hi - lo {
+                let c = lo + lc;
+                let s = a[offs[lc]];
+                if s <= 0.0 || !s.is_finite() {
+                    ok = false;
+                    break 'cols;
+                }
+                let lcc = s.sqrt();
+                a[offs[lc]] = lcc;
+                for i in c + 1..m {
+                    a[offs[lc] + (i - c)] /= lcc;
+                }
+                // Rank-1 update of the finished column onto the later
+                // columns of this panel (ascending t per element —
+                // cross-panel updates arrive later via the broadcast).
+                for lj in lc + 1..hi - lo {
+                    let j = lo + lj;
+                    let ljc = a[offs[lc] + (j - c)];
+                    for i in j..m {
+                        a[offs[lj] + (i - j)] -= a[offs[lc] + (i - c)] * ljc;
+                    }
+                }
+            }
+            if ok {
+                let mut buf = Vec::with_capacity(1 + a.len());
+                buf.push(1.0f64);
+                buf.extend_from_slice(a);
+                Some(buf)
+            } else {
+                Some(vec![0.0f64])
+            }
+        } else if owner == my_idx {
+            Some(vec![0.0f64])
+        } else {
+            None
+        };
+        let buf = comm.bcast(diag, owner, payload);
+        if buf[0] == 0.0 {
+            failed = true;
+            continue; // keep the collective schedule aligned
+        }
+        if failed {
+            continue;
+        }
+        // Trailing update: subtract this panel's columns (t ascending)
+        // from every later owned panel.
+        let lpanel = &buf[1..];
+        for t in lo..hi {
+            let lt = &lpanel[offs[t - lo]..offs[t - lo] + (m - t)];
+            for (pi, &op) in owned.iter().enumerate() {
+                if op <= p {
+                    continue;
+                }
+                let (plo, phi) = bc.panel_bounds(op);
+                let poffs = lower_offsets(m, plo, phi);
+                let a = &mut work[pi];
+                for lc in 0..phi - plo {
+                    let c = plo + lc;
+                    let lct = lt[c - t];
+                    for i in c..m {
+                        a[poffs[lc] + (i - c)] -= lt[i - t] * lct;
+                    }
+                }
+            }
+        }
+    }
+    if failed {
+        None
+    } else {
+        Some(work)
+    }
+}
+
+/// Length of a panel's packed lower storage.
+fn lower_len(m: usize, lo: usize, hi: usize) -> usize {
+    (lo..hi).map(|c| m - c).sum()
+}
+
+/// The solver a 1.5D-landmark diagonal rank drives its per-iteration
+/// coefficient solve through — replicated or distributed, selected by
+/// [`crate::layout::WFactorization`]. Both arms produce bit-identical
+/// (α, center-norm) output; only the memory and communication schedules
+/// differ.
+pub(crate) enum DiagSolver {
+    Replicated { solver: SpdSolver, w: DenseMatrix },
+    Dist(DistSpdSolver),
+}
+
+impl DiagSolver {
+    /// Solve the k weighted ridge systems; collective over `diag` in
+    /// the distributed arm, purely local in the replicated arm.
+    pub fn solve_weighted(
+        &self,
+        comm: &Comm,
+        diag: &Group,
+        b: &[f32],
+        weights: &[f64],
+        k: usize,
+    ) -> (Vec<f64>, Vec<f32>) {
+        match self {
+            DiagSolver::Replicated { solver, w } => {
+                super::solve_alpha_weighted(solver, w, b, weights, k)
+            }
+            DiagSolver::Dist(d) => d.solve_alpha_weighted(comm, diag, b, weights, k),
+        }
     }
 }
 
@@ -155,5 +694,154 @@ mod tests {
         let s2 = SpdSolver::factor(&w);
         assert_eq!(s1.ridge, s2.ridge);
         assert_eq!(s1.solve(&[1.0; 8]), s2.solve(&[1.0; 8]));
+    }
+
+    /// Extract the scalar factor's lower columns in the distributed
+    /// panel layout, for bitwise comparison.
+    fn scalar_panel(solver: &SpdSolver, bc: &BlockCyclic, idx: usize) -> Vec<Vec<f64>> {
+        let m = solver.dim();
+        bc.owned_panels(idx)
+            .iter()
+            .map(|&t| {
+                let (lo, hi) = bc.panel_bounds(t);
+                let mut block = Vec::new();
+                for c in lo..hi {
+                    for i in c..m {
+                        block.push(solver.lower()[i * m + c]);
+                    }
+                }
+                block
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dist_factor_bitwise_matches_scalar() {
+        use crate::comm::World;
+        let mut rng = Rng::new(11);
+        let m = 29; // odd, so panels are ragged
+        let a = DenseMatrix::random(m, m, &mut rng);
+        let mut w = crate::dense::ops::matmul_nt(&a, &a);
+        for i in 0..m {
+            w.set(i, i, w.get(i, i) + 1.0);
+        }
+        // Symmetrize bitwise (matmul_nt of A·Aᵀ is already bitwise
+        // symmetric, but make the invariant explicit for the test).
+        for i in 0..m {
+            for j in 0..i {
+                let v = w.get(i, j);
+                w.set(j, i, v);
+            }
+        }
+        let scalar = SpdSolver::factor(&w);
+        for q in [1usize, 2, 3, 4] {
+            let bc = BlockCyclic::new(m, q);
+            let wref = &w;
+            let (results, _) = World::run(q, |comm| {
+                let diag = Group::world(q);
+                let idx = comm.rank();
+                let panels = WPanels::from_full(wref, bc, idx);
+                let solver = DistSpdSolver::factor_dist(comm, &diag, panels);
+                (solver.ridge, solver.lower_panels().to_vec())
+            });
+            for (idx, (ridge, lower)) in results.into_iter().enumerate() {
+                assert_eq!(ridge, scalar.ridge, "q={q} idx={idx}");
+                assert_eq!(lower, scalar_panel(&scalar, &bc, idx), "q={q} idx={idx}");
+            }
+        }
+    }
+
+    #[test]
+    fn dist_factor_escalates_ridge_like_scalar() {
+        // Rank-1 W: heavily rank-deficient, so the factorization leans
+        // on the ridge. Whatever attempt the escalation settles on,
+        // the distributed run must land on the scalar ridge and the
+        // bitwise-identical factor.
+        let m = 9;
+        let v: Vec<f32> = (0..m).map(|i| (i + 1) as f32).collect();
+        let w = DenseMatrix::from_fn(m, m, |i, j| v[i] * v[j]);
+        let scalar = SpdSolver::factor(&w);
+        assert!(scalar.ridge > 0.0);
+        use crate::comm::World;
+        let bc = BlockCyclic::new(m, 3);
+        let wref = &w;
+        let (results, _) = World::run(3, |comm| {
+            let diag = Group::world(3);
+            let panels = WPanels::from_full(wref, bc, comm.rank());
+            let solver = DistSpdSolver::factor_dist(comm, &diag, panels);
+            (solver.ridge, solver.lower_panels().to_vec())
+        });
+        for (idx, (ridge, lower)) in results.into_iter().enumerate() {
+            assert_eq!(ridge, scalar.ridge, "idx={idx}");
+            assert_eq!(lower, scalar_panel(&scalar, &bc, idx), "idx={idx}");
+        }
+    }
+
+    #[test]
+    fn dist_solve_bitwise_matches_replicated() {
+        use crate::comm::World;
+        let mut rng = Rng::new(12);
+        let m = 17;
+        let k = 4;
+        let a = DenseMatrix::random(m, m, &mut rng);
+        let mut w = crate::dense::ops::matmul_nt(&a, &a);
+        for i in 0..m {
+            w.set(i, i, w.get(i, i) + 0.5);
+            for j in 0..i {
+                let v = w.get(i, j);
+                w.set(j, i, v);
+            }
+        }
+        let b: Vec<f32> = (0..k * m).map(|x| ((x * 7 % 13) as f32) - 5.0).collect();
+        // One zero-weight cluster: its α row and center norm must stay
+        // exactly zero on both paths.
+        let weights = vec![3.0f64, 0.0, 1.5, 7.0];
+        let scalar = SpdSolver::factor(&w);
+        let (want_alpha, want_cvec) =
+            super::super::solve_alpha_weighted(&scalar, &w, &b, &weights, k);
+        for q in [1usize, 2, 4] {
+            let bc = BlockCyclic::with_panel(m, q, 3);
+            let (wref, bref, wtref) = (&w, &b, &weights);
+            let (results, _) = World::run(q, |comm| {
+                let diag = Group::world(q);
+                let panels = WPanels::from_full(wref, bc, comm.rank());
+                let solver = DistSpdSolver::factor_dist(comm, &diag, panels);
+                solver.solve_alpha_weighted(comm, &diag, bref, wtref, k)
+            });
+            for (idx, (alpha, cvec)) in results.into_iter().enumerate() {
+                assert_eq!(alpha, want_alpha, "q={q} idx={idx}");
+                assert_eq!(cvec, want_cvec, "q={q} idx={idx}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_host_matches_factor_dist() {
+        use crate::comm::World;
+        let mut rng = Rng::new(13);
+        let m = 12;
+        let a = DenseMatrix::random(m, m, &mut rng);
+        let mut w = crate::dense::ops::matmul_nt(&a, &a);
+        for i in 0..m {
+            w.set(i, i, w.get(i, i) + 1.0);
+            for j in 0..i {
+                let v = w.get(i, j);
+                w.set(j, i, v);
+            }
+        }
+        let scalar = SpdSolver::factor(&w);
+        let bc = BlockCyclic::new(m, 2);
+        let wref = &w;
+        let (results, _) = World::run(2, |comm| {
+            let diag = Group::world(2);
+            let panels = WPanels::from_full(wref, bc, comm.rank());
+            let solver = DistSpdSolver::factor_dist(comm, &diag, panels);
+            solver.lower_panels().to_vec()
+        });
+        for (idx, lower) in results.into_iter().enumerate() {
+            let host = DistSpdSolver::from_host(&scalar, &w, bc, idx);
+            assert_eq!(host.lower_panels(), &lower[..], "idx={idx}");
+            assert_eq!(host.ridge, scalar.ridge);
+        }
     }
 }

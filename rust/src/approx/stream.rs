@@ -52,12 +52,12 @@ use crate::data::landmarks::{self, LandmarkReservoir};
 use crate::data::stream::PointSource;
 use crate::dense::DenseMatrix;
 use crate::kkmeans::{loop_common, RankOutput};
-use crate::layout::{harness, Partition};
+use crate::layout::{harness, BlockCyclic, Partition, WFactorization};
 use crate::model::MemTracker;
 use crate::util::{part, timing, timing::Stopwatch};
 use crate::VivaldiError;
 
-use super::solve::SpdSolver;
+use super::solve::{DistSpdSolver, SpdSolver};
 use super::{
     alpha_transpose, assemble_diag_blocks, cluster_row_sums, pack_alpha_block,
     solve_alpha_weighted, ApproxConfig, LandmarkLayout,
@@ -131,6 +131,14 @@ struct StreamModel {
     landmarks: DenseMatrix,
     w: DenseMatrix,
     solver: SpdSolver,
+    /// Per-diagonal-rank distributed solvers for the 1.5D
+    /// block-cyclic layout, built **once per landmark set** (empty for
+    /// the 1D layout, non-square rank counts, or replicated W — the
+    /// replicated solve dispatches straight to `solver`/`w` above, so
+    /// no per-diagonal state is duplicated): entry `i` carries exactly
+    /// the panel slices grid diagonal `i` owns. Batches borrow these
+    /// instead of re-slicing O(m²) state per batch.
+    dist_solvers: Vec<DistSpdSolver>,
     /// k×m decayed per-cluster C-row sums S.
     sums: Vec<f32>,
     /// k decayed cluster weights N (fractional once γ < 1).
@@ -158,6 +166,7 @@ impl StreamModel {
     fn from_landmarks(
         landmarks: DenseMatrix,
         cfg: &StreamConfig,
+        p: usize,
         backend: &dyn ComputeBackend,
     ) -> StreamModel {
         let k = cfg.base.k;
@@ -168,14 +177,56 @@ impl StreamModel {
         // so W (and its factor) is bit-identical to theirs.
         let w = backend.gram_tile(&landmarks, &landmarks, &cfg.base.kernel, &l_norms, &l_norms);
         let solver = SpdSolver::factor(&w);
+        // Per-diagonal panel solvers, paid once per landmark set — the
+        // streamed inheritance of the distributed factor. (Replicated
+        // W needs no per-diagonal state: every rank solves against the
+        // shared `solver`/`w`.)
+        let dist_solvers = if cfg.base.layout == LandmarkLayout::OneFiveD
+            && cfg.base.w_fact == WFactorization::BlockCyclic
+            && crate::util::is_perfect_square(p)
+        {
+            let q = crate::util::isqrt_exact(p);
+            let bc = BlockCyclic::new(m, q);
+            (0..q).map(|i| DistSpdSolver::from_host(&solver, &w, bc, i)).collect()
+        } else {
+            Vec::new()
+        };
         StreamModel {
             landmarks,
             w,
             solver,
+            dist_solvers,
             sums: vec![0.0; k * m],
             weights: vec![0.0; k],
             has_history: false,
             replicated: false,
+        }
+    }
+
+    /// The once-per-landmark-set coefficient solve as grid diagonal
+    /// `i` of the 1.5D layout: distributed against rank `i`'s panel
+    /// slices in block-cyclic mode (collective over `diag`), or local
+    /// against the shared replicated factor. Bit-identical either way.
+    #[allow(clippy::too_many_arguments)]
+    fn diag_solve(
+        &self,
+        comm: &Comm,
+        diag: &Group,
+        i: usize,
+        wfact: WFactorization,
+        b: &[f32],
+        weights: &[f64],
+        k: usize,
+    ) -> (Vec<f64>, Vec<f32>) {
+        match wfact {
+            WFactorization::Replicated => {
+                solve_alpha_weighted(&self.solver, &self.w, b, weights, k)
+            }
+            WFactorization::BlockCyclic => self
+                .dist_solvers
+                .get(i)
+                .expect("fit_stream builds one panel solver per grid diagonal")
+                .solve_alpha_weighted(comm, diag, b, weights, k),
         }
     }
 
@@ -336,6 +387,7 @@ pub fn fit_stream_with_backend(
                 model.as_mut().expect("model exists past the first batch"),
                 reservoir.as_ref().expect("refresh_every requires a reservoir"),
                 cfg,
+                p,
                 backend,
                 refreshes,
             );
@@ -437,7 +489,7 @@ fn init_model(
             landmarks::landmark_rows(first_batch, &lidx)
         }
     };
-    Ok(StreamModel::from_landmarks(landmarks, cfg, backend))
+    Ok(StreamModel::from_landmarks(landmarks, cfg, p, backend))
 }
 
 /// Re-seed the landmarks from the reservoir and translate the carried
@@ -449,6 +501,7 @@ fn refresh_model(
     model: &mut StreamModel,
     reservoir: &LandmarkReservoir,
     cfg: &StreamConfig,
+    p: usize,
     backend: &dyn ComputeBackend,
     refresh_ordinal: usize,
 ) {
@@ -465,7 +518,7 @@ fn refresh_model(
     let new_landmarks = reservoir.refresh_kmeanspp(m, seed);
     let had_history = model.has_history;
     let total_weight: f64 = model.weights.iter().sum();
-    let mut next = StreamModel::from_landmarks(new_landmarks, cfg, backend);
+    let mut next = StreamModel::from_landmarks(new_landmarks, cfg, p, backend);
     if had_history && total_weight > 0.0 && snap.rows() > 0 {
         let (pn, ln) = if cfg.base.kernel.needs_norms() {
             (snap.row_sq_norms(), next.landmarks.row_sq_norms())
@@ -660,7 +713,7 @@ fn run_batch_15d(
     let (i, j) = grid.coords(comm.rank());
     let row_g = grid.row_group(i);
     let col_g = grid.col_group(j);
-    let diag_g = Group::new((0..q).map(|r| grid.rank_at(r, r)).collect());
+    let diag_g = grid.diag_group();
     let is_diag = i == j;
     let (_mem, tracker) = harness::rank_tracker(comm.rank(), cfg.base.mem);
     let layout = Partition::landmark_grid(bn, m, p).map_err(VivaldiError::InvalidConfig)?;
@@ -668,16 +721,24 @@ fn run_batch_15d(
     let n_j = phi - plo;
     let m_i = lhi - llo;
     let point_block = batch.row_block(plo, phi);
+    let bc = BlockCyclic::new(m, q);
     let mut sw = Stopwatch::new();
 
-    // Collective memory check: transient L + C tile, plus W only on
-    // the diagonal ranks (the k×m decayed model is driver-held, as in
-    // the 1D batch function).
+    // Collective memory check: transient L + C tile, plus the W state
+    // only on the diagonal ranks — the full matrix (replicated) or its
+    // block-cyclic panels (~m²/q, the default). The k×m decayed model
+    // is driver-held, as in the 1D batch function.
     comm.set_phase("gemm");
-    let need = MemTracker::matrix_f32(m, d)
-        + MemTracker::matrix_f32(n_j, m_i)
-        + if is_diag { MemTracker::matrix_f32(m, m) } else { 0 };
-    let ok = tracker.try_alloc(need, "1.5D stream batch: L + C tile (+ diagonal W)");
+    let w_resident = if is_diag {
+        match cfg.base.w_fact {
+            WFactorization::Replicated => MemTracker::matrix_f32(m, m),
+            WFactorization::BlockCyclic => bc.w_state_bytes(i),
+        }
+    } else {
+        0
+    };
+    let need = MemTracker::matrix_f32(m, d) + MemTracker::matrix_f32(n_j, m_i) + w_resident;
+    let ok = tracker.try_alloc(need, "1.5D stream batch: L + C tile (+ diagonal W state)");
     if !comm.allreduce_and(&world, ok) {
         if ok {
             tracker.free(need);
@@ -686,7 +747,7 @@ fn run_batch_15d(
             rank: comm.rank(),
             requested: need,
             budget: tracker.budget(),
-            what: "1.5D stream batch: L + C tile (+ diagonal W)".into(),
+            what: "1.5D stream batch: L + C tile (+ diagonal W state)".into(),
         });
     }
 
@@ -716,8 +777,8 @@ fn run_batch_15d(
             // iteration: diagonal solve from the history, α block along
             // the row, E reduce-scattered down the column.
             let payload = is_diag.then(|| {
-                let (alpha, cvec) =
-                    solve_alpha_weighted(&model.solver, &model.w, &h.sums, &h.weights, k);
+                let (alpha, cvec) = model
+                    .diag_solve(comm, &diag_g, i, cfg.base.w_fact, &h.sums, &h.weights, k);
                 pack_alpha_block(&alpha, &cvec, llo, lhi, m, k)
             });
             let flat = comm.bcast(&row_g, i, payload);
@@ -747,13 +808,14 @@ fn run_batch_15d(
             }
         });
 
-        // (3) Diagonal exchange + once-per-column history-aware solve.
+        // (3) Diagonal exchange + once-per-column history-aware solve
+        // (replicated or distributed — bit-identical).
         let payload = if is_diag {
             let b_block = b_red.expect("diagonal is the row-reduce root");
             let b = assemble_diag_blocks(&comm.allgather(&diag_g, b_block), k, m, q);
             let (b_eff, weights) = effective_stats(&b, &sizes, hist);
             let (alpha, cvec) =
-                solve_alpha_weighted(&model.solver, &model.w, &b_eff, &weights, k);
+                model.diag_solve(comm, &diag_g, i, cfg.base.w_fact, &b_eff, &weights, k);
             Some(pack_alpha_block(&alpha, &cvec, llo, lhi, m, k))
         } else {
             None

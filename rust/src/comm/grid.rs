@@ -80,6 +80,13 @@ impl Grid2D {
     pub fn diagonal_of_row(&self, row: usize) -> usize {
         self.rank_at(row, row)
     }
+
+    /// The communication group of the grid diagonal: P(0,0)..P(q-1,q-1)
+    /// in row order, so group index `i` is the diagonal of grid row `i`.
+    /// This is the group the landmark W factor is distributed over.
+    pub fn diag_group(&self) -> Group {
+        Group::new((0..self.q).map(|r| self.rank_at(r, r)).collect())
+    }
 }
 
 #[cfg(test)]
@@ -125,6 +132,9 @@ mod tests {
         // Column 2: ranks 6, 7, 8.
         assert_eq!(g.col_group(2).ranks(), &[6, 7, 8]);
         assert_eq!(g.diagonal_of_row(2), g.rank_at(2, 2));
+        // Diagonal group: (0,0)=0, (1,1)=4, (2,2)=8, row order.
+        assert_eq!(g.diag_group().ranks(), &[0, 4, 8]);
+        assert_eq!(Grid2D::new(1).unwrap().diag_group().ranks(), &[0]);
     }
 
     #[test]

@@ -90,11 +90,20 @@ pub struct Feasibility {
     /// [`crate::gemm::gemm_1d_landmark_gram`] registers).
     pub landmark_bytes_per_rank: u64,
     /// Per-rank bytes of the 1.5D landmark layout's *worst* rank (the
-    /// diagonal: C tile + the per-grid-column W replica + transient L —
-    /// the charge [`crate::gemm::gemm_15d_landmark_gram`] registers).
-    /// Off-diagonal ranks drop the m² term entirely, so the aggregate W
-    /// footprint is √P·m² instead of P·m².
+    /// diagonal: C tile + the per-grid-column W replica + the m/√P × m
+    /// W-row build transient + transient L — the charge
+    /// [`crate::gemm::gemm_15d_landmark_gram`] registers). Off-diagonal
+    /// ranks drop the m² term entirely, so the aggregate W footprint is
+    /// √P·m² instead of P·m².
     pub landmark_15d_bytes_per_rank: u64,
+    /// The same worst (diagonal) rank under the **block-cyclic W
+    /// factorization** ([`crate::layout::WFactorization::BlockCyclic`],
+    /// the 1.5D default): the full-W replica is replaced by ~m²/q of
+    /// column panels plus the W-row redistribution transient
+    /// ([`crate::model::analytic::w_blockcyclic_state_bytes`]) — the
+    /// footprint that lets m keep growing with √P after the replicated
+    /// diagonal would OOM.
+    pub landmark_15d_bc_bytes_per_rank: u64,
     /// Mini-batch size the streaming estimate below assumes (= n for
     /// the plain batch evaluation, where streaming degenerates to the
     /// 1D landmark path).
@@ -109,6 +118,8 @@ pub struct Feasibility {
     pub landmark_fits: bool,
     /// Whether the 1.5D landmark layout's worst rank fits the budget.
     pub landmark_15d_fits: bool,
+    /// Whether the block-cyclic 1.5D worst rank fits the budget.
+    pub landmark_15d_bc_fits: bool,
     /// Whether the streaming path's per-rank state fits the budget at
     /// `stream_batch`-sized mini-batches.
     pub landmark_stream_fits: bool,
@@ -152,10 +163,18 @@ pub fn landmark_stream_feasibility(
     let landmark =
         4 * (n_p as u64 * m as u64 + m as u64 * m as u64 + m as u64 * d as u64);
     // 1.5D landmark layout, diagonal (worst) rank: C tile n/q × m/q,
-    // one W replica, transient L.
+    // one W replica plus the m/q × m W-row build transient, transient
+    // L — mirroring the gemm pipeline's diagonal charge exactly.
     let landmark_15d = 4 * (ceil_div(n, q.max(1)) as u64 * ceil_div(m, q.max(1)) as u64
         + m as u64 * m as u64
+        + ceil_div(m, q.max(1)) as u64 * m as u64
         + m as u64 * d as u64);
+    // Block-cyclic W (the 1.5D default): the full-W term drops to the
+    // panel state + row transient — mirroring the gemm pipeline's
+    // diagonal charge exactly.
+    let landmark_15d_bc = 4 * (ceil_div(n, q.max(1)) as u64 * ceil_div(m, q.max(1)) as u64
+        + m as u64 * d as u64)
+        + crate::model::analytic::w_blockcyclic_state_bytes(m, p);
     // Streaming 1D layout: replicated L + W + the in-flight batch's C
     // block — exactly the charge set `approx::stream`'s per-batch rank
     // functions register (the k×m decayed model is driver-held host
@@ -173,6 +192,7 @@ pub fn landmark_stream_feasibility(
         exact_bytes_per_rank: exact,
         landmark_bytes_per_rank: landmark,
         landmark_15d_bytes_per_rank: landmark_15d,
+        landmark_15d_bc_bytes_per_rank: landmark_15d_bc,
         stream_batch: batch,
         landmark_stream_bytes_per_rank: landmark_stream,
         budget: mem.budget,
@@ -181,6 +201,8 @@ pub fn landmark_stream_feasibility(
         // The 1.5D layout additionally needs a square grid; never
         // report it as fitting on a rank count it cannot run on.
         landmark_15d_fits: crate::util::is_perfect_square(p) && landmark_15d <= mem.budget,
+        landmark_15d_bc_fits: crate::util::is_perfect_square(p)
+            && landmark_15d_bc <= mem.budget,
         landmark_stream_fits: landmark_stream <= mem.budget,
     }
 }
@@ -369,6 +391,31 @@ mod tests {
         let tiny = MemModel { budget: 1024, repl_factor: 1.0, redist_factor: 0.0 };
         let f3 = landmark_feasibility(4096, 2, 512, 4, &tiny);
         assert!(!f3.exact_fits && !f3.landmark_fits && !f3.recommends_landmark());
+    }
+
+    #[test]
+    fn blockcyclic_w_opens_the_gap_past_replicated() {
+        // m = 1024 on a 4×4 grid with a 4 MiB budget: the replicated
+        // diagonal (C tile + full 4 MiB W + L) busts the budget, the
+        // block-cyclic diagonal (~2·m²/q) fits — the report must
+        // separate the two so `--landmark-layout auto` and the OOM
+        // report can recommend the path that actually runs.
+        let mem = MemModel { budget: 4 << 20, repl_factor: 1.0, redist_factor: 0.0 };
+        let f = landmark_feasibility(4096, 2, 1024, 16, &mem);
+        assert!(
+            !f.landmark_15d_fits,
+            "replicated diagonal {} must exceed {}",
+            f.landmark_15d_bytes_per_rank, f.budget
+        );
+        assert!(
+            f.landmark_15d_bc_fits,
+            "block-cyclic diagonal {} must fit {}",
+            f.landmark_15d_bc_bytes_per_rank, f.budget
+        );
+        assert!(f.landmark_15d_bc_bytes_per_rank < f.landmark_15d_bytes_per_rank);
+        // Non-square rank counts cannot run either 1.5D variant.
+        let g = landmark_feasibility(4096, 2, 1024, 6, &mem);
+        assert!(!g.landmark_15d_bc_fits && !g.landmark_15d_fits);
     }
 
     #[test]

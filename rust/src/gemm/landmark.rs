@@ -14,12 +14,14 @@
 //! C block row plus its own replicated copy of `W` locally through the
 //! same fused [`ComputeBackend::gram_tile`] the exact path uses.
 
+use crate::approx::solve::{DiagW, WPanels};
 use crate::backend::ComputeBackend;
 use crate::comm::{Comm, Grid2D, Group};
 use crate::dense::DenseMatrix;
 use crate::kernelfn::KernelFn;
-use crate::layout::Partition;
+use crate::layout::{BlockCyclic, Partition, WFactorization};
 use crate::model::MemTracker;
+use crate::util::part;
 use crate::VivaldiError;
 
 /// Compute this rank's block row of `C = κ(P, L)` plus the replicated
@@ -93,22 +95,31 @@ pub fn gemm_1d_landmark_gram(
 }
 
 /// 1.5D landmark Gram pipeline: this rank's C tile on the √P×√P grid,
-/// plus `W = κ(L, L)` materialized **only on the diagonal ranks** — one
-/// replica per grid column instead of P replicas.
+/// plus the W state **only on the diagonal ranks** — the full m×m
+/// matrix under [`WFactorization::Replicated`] (one replica per grid
+/// column), or its block-cyclic column panels under
+/// [`WFactorization::BlockCyclic`] (~m²/q per diagonal rank).
 ///
 /// `layout` must be the [`Partition::LandmarkGrid`] of the fit: rank
 /// (i, j) computes C\[point block j, landmark block i\]
 /// (`layout.tile_bounds`). `point_block` is the rank's point-block row
 /// slice; `local_landmarks` are the landmark rows this rank owns under
-/// the **1D point layout** (the world allgather reassembles L in
-/// landmark order exactly as in [`gemm_1d_landmark_gram`]).
+/// the **1D point layout**.
 ///
-/// Returns `(c_tile, Some(w))` on diagonal ranks and `(c_tile, None)`
-/// elsewhere. Memory: every rank is charged the transient replicated L
-/// and its resident C tile; only diagonals carry the m×m W — the
-/// aggregate W footprint drops from P·m² to √P·m², which is what lets m
-/// grow past the 1D layout's replication wall. OOM is collective
-/// (AND-allreduce), as everywhere.
+/// Landmark movement is a **grid-row block gather**, not a full-L
+/// allgather: each rank's owned landmark rows travel (alltoallv) to
+/// the diagonal rank of their landmark block, and each diagonal
+/// broadcasts its block along its grid row — so an off-diagonal rank
+/// only ever holds its m/√P × d landmark slice (the old path gave
+/// every rank the full m×d L). Diagonal ranks additionally exchange
+/// their blocks (allgather over the diagonal group) to form the W
+/// rows they own; in block-cyclic mode those contiguous row blocks are
+/// redistributed (alltoallv over the diagonal) into column panels,
+/// using W's bitwise symmetry (row c of W *is* column c).
+///
+/// Returns `(c_tile, Some(DiagW))` on diagonal ranks and
+/// `(c_tile, None)` elsewhere. OOM is collective (AND-allreduce), as
+/// everywhere.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_15d_landmark_gram(
     comm: &Comm,
@@ -119,28 +130,64 @@ pub fn gemm_15d_landmark_gram(
     kernel: &KernelFn,
     backend: &dyn ComputeBackend,
     tracker: &MemTracker,
-) -> Result<(DenseMatrix, Option<DenseMatrix>), VivaldiError> {
+    wfact: WFactorization,
+) -> Result<(DenseMatrix, Option<DiagW>), VivaldiError> {
     comm.set_phase("gemm");
-    let world = Group::world(grid.p());
+    let p = grid.p();
+    let q = grid.q();
+    let world = Group::world(p);
     let d = point_block.cols();
     let (i, j) = grid.coords(comm.rank());
     let is_diag = i == j;
     let ((plo, phi), (llo, lhi)) = layout.tile_bounds(comm.rank());
+    let m_i = lhi - llo;
     assert_eq!(point_block.rows(), phi - plo, "point block height mismatch");
     assert!(
         local_landmarks.rows() == 0 || local_landmarks.cols() == d,
         "landmark feature dim mismatch"
     );
 
-    // Total landmark count, verified collectively like the 1D pipeline.
-    let m = comm.allreduce_sum_u64(&world, vec![local_landmarks.rows() as u64])[0] as usize;
+    // Per-rank owned-landmark counts (allgather): the prefix sums give
+    // every owned row its global landmark index (ranks own contiguous
+    // runs — `sample_landmarks` returns ascending point indices), and
+    // the total is the collective m check the 1D pipeline does.
+    let counts: Vec<u64> = comm
+        .allgather(&world, vec![local_landmarks.rows() as u64])
+        .into_iter()
+        .map(|v| v[0])
+        .collect();
+    let my_off: u64 = counts[..comm.rank()].iter().sum();
+    let m = counts.iter().sum::<u64>() as usize;
     debug_assert!(lhi <= m, "layout landmark count disagrees with the sampled set");
+    let bc = BlockCyclic::new(m, q);
 
-    // Collective memory check: replicated L + C tile (+ W on diagonals).
-    let need = MemTracker::matrix_f32(m, d)
-        + MemTracker::matrix_f32(phi - plo, lhi - llo)
-        + if is_diag { MemTracker::matrix_f32(m, m) } else { 0 };
-    let ok = tracker.try_alloc(need, "1.5D landmark GEMM: L + C tile (+ diagonal W)");
+    // Collective memory check, covering the peak of this rank's role:
+    // every rank holds its landmark block and C tile; diagonals
+    // transiently hold the full L (their block exchange) and the W
+    // rows they compute, plus the resident W state their factorization
+    // mode keeps (full matrix, or ~m²/q of column panels).
+    let (need, what) = if is_diag {
+        // Both modes transiently hold this rank's computed W rows
+        // (m_i×m) beside the resident W state — replicated keeps the
+        // assembled full matrix, block-cyclic keeps ~m²/q of panels.
+        let w_resident = MemTracker::matrix_f32(m_i, m)
+            + match wfact {
+                WFactorization::Replicated => MemTracker::matrix_f32(m, m),
+                WFactorization::BlockCyclic => bc.w_state_bytes(i),
+            };
+        (
+            MemTracker::matrix_f32(m, d)
+                + MemTracker::matrix_f32(phi - plo, m_i)
+                + w_resident,
+            "1.5D landmark GEMM: L + C tile + diagonal W state",
+        )
+    } else {
+        (
+            MemTracker::matrix_f32(m_i, d) + MemTracker::matrix_f32(phi - plo, m_i),
+            "1.5D landmark GEMM: landmark block + C tile",
+        )
+    };
+    let ok = tracker.try_alloc(need, what);
     if !comm.allreduce_and(&world, ok) {
         if ok {
             tracker.free(need);
@@ -149,33 +196,102 @@ pub fn gemm_15d_landmark_gram(
             rank: comm.rank(),
             requested: need,
             budget: tracker.budget(),
-            what: "1.5D landmark GEMM: L + C tile (+ diagonal W)".into(),
+            what: what.into(),
         });
     }
 
-    // Allgather(v) of the owned landmark rows — O(m·d) words, rank
-    // order = ascending landmark order.
-    let l_data = comm.allgather_concat(&world, local_landmarks.data().to_vec());
-    let landmarks = DenseMatrix::from_vec(m, d, l_data);
-    let l_block = landmarks.row_block(llo, lhi);
+    // Stage 1 — route owned landmark rows to their block's diagonal
+    // rank (alltoallv over the world: each row moves once, O(m·d)
+    // aggregate instead of the old allgather's O(P·m·d)).
+    let mut sends: Vec<Vec<f32>> = (0..p).map(|_| Vec::new()).collect();
+    for r in 0..local_landmarks.rows() {
+        let t = my_off as usize + r;
+        let block = part::owner(m, q, t);
+        sends[grid.rank_at(block, block)].extend_from_slice(local_landmarks.row(r));
+    }
+    let recvd = comm.alltoallv(&world, sends);
 
-    let (row_norms, lb_norms, l_norms) = if kernel.needs_norms() {
-        // Full-L norms feed only the diagonal-only W product; off-
-        // diagonal ranks need just their landmark block's norms.
-        let l_norms = if is_diag { landmarks.row_sq_norms() } else { Vec::new() };
-        let lb_norms =
-            if is_diag { l_norms[llo..lhi].to_vec() } else { l_block.row_sq_norms() };
-        (point_block.row_sq_norms(), lb_norms, l_norms)
+    // Stage 2 — each diagonal broadcasts its assembled block along its
+    // grid row (sources arrive in rank order = ascending landmark
+    // index, so the concat is the block in row order).
+    let row_g = grid.row_group(i);
+    let block_payload = is_diag.then(|| recvd.into_iter().flatten().collect::<Vec<f32>>());
+    let l_block_data = comm.bcast(&row_g, i, block_payload);
+    debug_assert_eq!(l_block_data.len(), m_i * d);
+    let l_block = DenseMatrix::from_vec(m_i, d, l_block_data);
+
+    let (row_norms, lb_norms) = if kernel.needs_norms() {
+        (point_block.row_sq_norms(), l_block.row_sq_norms())
     } else {
-        (Vec::new(), Vec::new(), Vec::new())
+        (Vec::new(), Vec::new())
+    };
+    let c_tile = backend.gram_tile(point_block, &l_block, kernel, &row_norms, &lb_norms);
+
+    // Diagonal ranks build their W rows: exchange blocks over the
+    // diagonal group (transient full L), compute W[llo..lhi][0..m].
+    let w_state = if is_diag {
+        let diag_g = grid.diag_group();
+        let l_full_data = comm.allgather_concat(&diag_g, l_block.data().to_vec());
+        let l_full = DenseMatrix::from_vec(m, d, l_full_data);
+        let (lb_n, lf_n) = if kernel.needs_norms() {
+            (l_block.row_sq_norms(), l_full.row_sq_norms())
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        let w_rows = backend.gram_tile(&l_block, &l_full, kernel, &lb_n, &lf_n);
+        drop(l_full);
+        let state = match wfact {
+            WFactorization::Replicated => {
+                // Row blocks allgathered in diagonal order = full W;
+                // this rank's row block is consumed by the exchange.
+                let w_data = comm.allgather_concat(&diag_g, w_rows.into_vec());
+                tracker.free(MemTracker::matrix_f32(m_i, m));
+                DiagW::Full(DenseMatrix::from_vec(m, m, w_data))
+            }
+            WFactorization::BlockCyclic => {
+                // Redistribute contiguous row blocks into block-cyclic
+                // column panels: W row c is bitwise identical to W
+                // column c, so the owner of row c ships it as the full
+                // column to the panel owner.
+                let mut col_sends: Vec<Vec<f32>> = (0..q).map(|_| Vec::new()).collect();
+                for c in llo..lhi {
+                    let dest = bc.owner(bc.panel_of(c));
+                    col_sends[dest].extend_from_slice(w_rows.row(c - llo));
+                }
+                let col_recvd = comm.alltoallv(&diag_g, col_sends);
+                // Reassemble owned panels column-major: column c comes
+                // from the diagonal rank whose contiguous block holds
+                // c; each source packed its columns ascending.
+                let mut cursors = vec![0usize; q];
+                let mut cols = Vec::new();
+                for t in bc.owned_panels(i) {
+                    let (lo, hi) = bc.panel_bounds(t);
+                    let mut block = Vec::with_capacity(m * (hi - lo));
+                    for c in lo..hi {
+                        let src = part::owner(m, q, c);
+                        let cur = cursors[src];
+                        block.extend_from_slice(&col_recvd[src][cur..cur + m]);
+                        cursors[src] = cur + m;
+                    }
+                    cols.push(block);
+                }
+                // The contiguous row block is transient in this mode.
+                tracker.free(MemTracker::matrix_f32(m_i, m));
+                DiagW::Panels(WPanels { bc, my_idx: i, cols })
+            }
+        };
+        // The transient full L (diagonals charged m·d) is released once
+        // the W rows exist; keep the block's share like off-diagonals.
+        tracker.free(MemTracker::matrix_f32(m, d) - MemTracker::matrix_f32(m_i, d));
+        Some(state)
+    } else {
+        None
     };
 
-    let c_tile = backend.gram_tile(point_block, &l_block, kernel, &row_norms, &lb_norms);
-    let w = is_diag.then(|| backend.gram_tile(&landmarks, &landmarks, kernel, &l_norms, &l_norms));
-    // The replicated L is transient; C (and the diagonal W) stay
-    // resident for the clustering loop.
-    tracker.free(MemTracker::matrix_f32(m, d));
-    Ok((c_tile, w))
+    // The landmark block is transient; C (and the diagonal W state)
+    // stay resident for the clustering loop.
+    tracker.free(MemTracker::matrix_f32(m_i, d));
+    Ok((c_tile, w_state))
 }
 
 #[cfg(test)]
@@ -301,7 +417,15 @@ mod tests {
                     let be = NativeBackend::new();
                     let tracker = MemTracker::unlimited(comm.rank());
                     gemm_15d_landmark_gram(
-                        comm, gref, lref, &block, &own_rows, kref, &be, &tracker,
+                        comm,
+                        gref,
+                        lref,
+                        &block,
+                        &own_rows,
+                        kref,
+                        &be,
+                        &tracker,
+                        WFactorization::Replicated,
                     )
                     .unwrap()
                 });
@@ -315,13 +439,130 @@ mod tests {
                     c_full.paste(plo, llo, tile);
                     // W lives exactly on the diagonals.
                     assert_eq!(w.is_some(), i == j, "rank {rank}");
-                    if let Some(w) = w {
+                    if let Some(DiagW::Full(w)) = w {
                         assert!(w.max_abs_diff(&expect_w) < 1e-3, "p={p}");
+                    } else if w.is_some() {
+                        panic!("replicated mode must return the full W");
                     }
                 }
                 assert!(c_full.max_abs_diff(&expect_c) < 1e-3, "kernel={kernel:?} p={p}");
             }
         }
+    }
+
+    /// Block-cyclic mode: the reassembled panels must equal the oracle
+    /// W **bitwise** (the symmetry-based column redistribution and the
+    /// block-computed Gram must introduce no rounding difference), and
+    /// only diagonal ranks carry panels.
+    #[test]
+    fn fifteen_d_blockcyclic_panels_match_oracle_bitwise() {
+        let mut rng = Rng::new(95);
+        let n = 61;
+        let d = 5;
+        let m = 14;
+        let points = DenseMatrix::random(n, d, &mut rng);
+        for kernel in [KernelFn::linear(), KernelFn::gaussian(0.7)] {
+            for p in [1usize, 4, 9] {
+                let q = (p as f64).sqrt().round() as usize;
+                let idx = sample_landmarks(&points, m, p, LandmarkSeeding::Uniform, 8);
+                let lms = landmark_rows(&points, &idx);
+                let expect_w = oracle_c(&lms, &lms, &kernel);
+                let grid = crate::comm::Grid2D::new(p).unwrap();
+                let layout = Partition::landmark_grid(n, m, p).unwrap();
+                let (pref, iref, kref, gref, lref) = (&points, &idx, &kernel, &grid, &layout);
+                let (results, _) = World::run(p, |comm| {
+                    let ((plo, phi), _) = lref.tile_bounds(comm.rank());
+                    let block = pref.row_block(plo, phi);
+                    let (olo, ohi) = part::bounds(n, p, comm.rank());
+                    let own: Vec<usize> =
+                        iref.iter().copied().filter(|&t| t >= olo && t < ohi).collect();
+                    let own_rows = landmark_rows(pref, &own);
+                    let be = NativeBackend::new();
+                    let tracker = MemTracker::unlimited(comm.rank());
+                    gemm_15d_landmark_gram(
+                        comm,
+                        gref,
+                        lref,
+                        &block,
+                        &own_rows,
+                        kref,
+                        &be,
+                        &tracker,
+                        WFactorization::BlockCyclic,
+                    )
+                    .unwrap()
+                });
+                let mut covered = vec![false; m];
+                for (rank, (_, w)) in results.iter().enumerate() {
+                    let (i, j) = grid.coords(rank);
+                    assert_eq!(w.is_some(), i == j, "rank {rank}");
+                    let Some(DiagW::Panels(panels)) = w else { continue };
+                    assert_eq!(panels.my_idx, i);
+                    for (pi, &t) in panels.bc.owned_panels(i).iter().enumerate() {
+                        let (lo, hi) = panels.bc.panel_bounds(t);
+                        for c in lo..hi {
+                            covered[c] = true;
+                            for u in 0..m {
+                                assert_eq!(
+                                    panels.cols[pi][(c - lo) * m + u],
+                                    expect_w.get(u, c),
+                                    "p={p} q={q} col {c} row {u}"
+                                );
+                            }
+                        }
+                    }
+                }
+                assert!(covered.iter().all(|&x| x), "every W column owned exactly once");
+            }
+        }
+    }
+
+    /// The block gather's selling point: off-diagonal ranks' gemm-phase
+    /// receive/send volume stays at the m/√P×d slice scale — the world
+    /// no longer pays a full-L allgather per rank.
+    #[test]
+    fn block_gather_beats_full_allgather() {
+        let mut rng = Rng::new(96);
+        let n = 72;
+        let d = 32;
+        let m = 24;
+        let p = 9;
+        let points = DenseMatrix::random(n, d, &mut rng);
+        let idx = sample_landmarks(&points, m, p, LandmarkSeeding::Uniform, 4);
+        let grid = crate::comm::Grid2D::new(p).unwrap();
+        let layout = Partition::landmark_grid(n, m, p).unwrap();
+        let (pref, iref, gref, lref) = (&points, &idx, &grid, &layout);
+        let (_, stats) = World::run(p, |comm| {
+            let ((plo, phi), _) = lref.tile_bounds(comm.rank());
+            let block = pref.row_block(plo, phi);
+            let (olo, ohi) = part::bounds(n, p, comm.rank());
+            let own: Vec<usize> =
+                iref.iter().copied().filter(|&t| t >= olo && t < ohi).collect();
+            let own_rows = landmark_rows(pref, &own);
+            let be = NativeBackend::new();
+            let tracker = MemTracker::unlimited(comm.rank());
+            gemm_15d_landmark_gram(
+                comm,
+                gref,
+                lref,
+                &block,
+                &own_rows,
+                &KernelFn::linear(),
+                &be,
+                &tracker,
+                WFactorization::BlockCyclic,
+            )
+            .unwrap()
+        });
+        let total: u64 = stats.iter().map(|s| s.get("gemm").bytes).sum();
+        // The old full-L allgather alone moved (p−1)·m·d·4 B aggregate;
+        // the block gather (one move per row + row bcasts + the
+        // diagonal exchange) must come in well under it.
+        let old_allgather = ((p - 1) * m * d * 4) as u64;
+        assert!(
+            total < old_allgather,
+            "block-gather gemm volume {total} must beat the full allgather {old_allgather}"
+        );
     }
 
     #[test]

@@ -133,6 +133,10 @@ pub struct FitResult {
     pub timings: Vec<Stopwatch>,
     /// Max peak simulated device memory over ranks.
     pub peak_mem: u64,
+    /// Per-rank peak simulated device memory, in rank order (the
+    /// layout acceptance tests bound individual ranks — e.g. "no rank
+    /// tracked more than ~m²/q of W").
+    pub rank_peaks: Vec<u64>,
     /// Rank count the fit ran on.
     pub ranks: usize,
 }

@@ -103,6 +103,7 @@ pub fn assemble_fit(
         objective_curve: first.objective_curve.clone(),
         changes_curve: first.changes_curve.clone(),
         peak_mem: outs.iter().map(|o| o.peak_mem).max().unwrap_or(0),
+        rank_peaks: outs.iter().map(|o| o.peak_mem).collect(),
         timings: outs.iter().map(|o| o.stopwatch.clone()).collect(),
         comm_stats,
         assignments,
@@ -221,6 +222,7 @@ mod tests {
             comm_stats: vec![CommStats::new(), CommStats::new()],
             timings: vec![Stopwatch::new(), Stopwatch::new()],
             peak_mem: peak,
+            rank_peaks: vec![peak, peak / 2],
             ranks: 2,
         };
         let mut acc = StreamAccumulator::new(2);

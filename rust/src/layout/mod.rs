@@ -27,7 +27,14 @@
 //! streaming) now means one enum variant and one rank function, not
 //! another copy of the scaffolding.
 
+//! The landmark path's W factor has its own sub-partition:
+//! [`partition::BlockCyclic`] deals the m landmark columns as
+//! block-cyclic panels over the grid diagonal, the layout the
+//! distributed Cholesky ([`crate::approx::solve::DistSpdSolver`]) and
+//! its triangular solves run on; [`partition::WFactorization`] is the
+//! replicated-vs-distributed knob.
+
 pub mod harness;
 pub mod partition;
 
-pub use partition::Partition;
+pub use partition::{BlockCyclic, Partition, WFactorization};

@@ -194,6 +194,156 @@ impl Partition {
     }
 }
 
+/// How the m×m landmark kernel W (and its Cholesky factor) is laid out
+/// on the 1.5D landmark grid's diagonal group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WFactorization {
+    /// Every diagonal rank materializes and factors the full m×m W —
+    /// one replica per grid column (aggregate √P·m²).
+    Replicated,
+    /// W is split into block-cyclic column panels over the q diagonal
+    /// ranks ([`BlockCyclic`]); the Cholesky factorization and the
+    /// per-iteration triangular solves run distributed, so no rank ever
+    /// holds more than ~m²/q of W. Bit-identical to `Replicated`.
+    BlockCyclic,
+}
+
+impl WFactorization {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WFactorization::Replicated => "replicated",
+            WFactorization::BlockCyclic => "block-cyclic",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<WFactorization> {
+        match s.to_ascii_lowercase().as_str() {
+            "replicated" | "repl" => Some(WFactorization::Replicated),
+            "blockcyclic" | "block-cyclic" | "bc" => Some(WFactorization::BlockCyclic),
+            _ => None,
+        }
+    }
+}
+
+/// Block-cyclic column-panel sub-partition of the m landmark columns
+/// over the q-member diagonal group — the layout of the distributed W
+/// factorization. Panel `t` covers columns `[t·nb, min((t+1)·nb, m))`
+/// and is owned by diagonal-group index `t mod q`; a rank's resident W
+/// state is the full m-row column panels it owns (~m²/q elements), and
+/// the factorization's broadcast transient is one panel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockCyclic {
+    m: usize,
+    q: usize,
+    /// Panel width in columns.
+    nb: usize,
+}
+
+impl BlockCyclic {
+    /// Default panel width: ~2 panels per diagonal rank, so the cyclic
+    /// wrap is exercised while the solve pipeline stays shallow
+    /// (per-iteration pipeline depth = panels − 1).
+    pub fn new(m: usize, q: usize) -> BlockCyclic {
+        assert!(q >= 1 && m >= q, "block-cyclic W needs m >= q >= 1 (m = {m}, q = {q})");
+        let nb = crate::util::ceil_div(m, 2 * q).max(1);
+        BlockCyclic { m, q, nb }
+    }
+
+    /// Explicit panel width (tests sweep it; the solve/factor math is
+    /// width-independent).
+    pub fn with_panel(m: usize, q: usize, nb: usize) -> BlockCyclic {
+        assert!(q >= 1 && m >= q && nb >= 1);
+        BlockCyclic { m, q, nb: nb.min(m) }
+    }
+
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    #[inline]
+    pub fn q(&self) -> usize {
+        self.q
+    }
+
+    #[inline]
+    pub fn panel_width(&self) -> usize {
+        self.nb
+    }
+
+    /// Total panels ⌈m/nb⌉.
+    #[inline]
+    pub fn panels(&self) -> usize {
+        crate::util::ceil_div(self.m, self.nb)
+    }
+
+    /// Column bounds [lo, hi) of panel `t`.
+    #[inline]
+    pub fn panel_bounds(&self, t: usize) -> (usize, usize) {
+        debug_assert!(t < self.panels());
+        (t * self.nb, ((t + 1) * self.nb).min(self.m))
+    }
+
+    /// Diagonal-group index owning panel `t` (cyclic deal).
+    #[inline]
+    pub fn owner(&self, t: usize) -> usize {
+        t % self.q
+    }
+
+    /// Panel containing column `col`.
+    #[inline]
+    pub fn panel_of(&self, col: usize) -> usize {
+        debug_assert!(col < self.m);
+        col / self.nb
+    }
+
+    /// Panels owned by diagonal-group index `idx`, ascending.
+    pub fn owned_panels(&self, idx: usize) -> Vec<usize> {
+        debug_assert!(idx < self.q);
+        (0..self.panels()).filter(|t| self.owner(*t) == idx).collect()
+    }
+
+    /// Total columns owned by diagonal-group index `idx`.
+    pub fn owned_cols(&self, idx: usize) -> usize {
+        self.owned_panels(idx).iter().map(|&t| { let (lo, hi) = self.panel_bounds(t); hi - lo }).sum()
+    }
+
+    /// The ranks holding a copy of panel `t` during the factorization:
+    /// the whole diagonal group — every member consumes the broadcast
+    /// panel for its trailing update (the owner keeps it; the others
+    /// drop it after updating, which is what bounds the transient to
+    /// one panel). The distributed factorization asserts its broadcast
+    /// group against this.
+    pub fn panel_replication_group(&self, _t: usize) -> Vec<usize> {
+        (0..self.q).collect()
+    }
+
+    /// Resident f32 W bytes for `idx`: full m rows × owned columns.
+    pub fn w_state_bytes(&self, idx: usize) -> u64 {
+        (self.m as u64) * (self.owned_cols(idx) as u64) * 4
+    }
+
+    /// Resident f64 factor bytes for `idx`: the lower part of each
+    /// owned column, Σ (m − col) doubles — the exact size of the
+    /// packed factor the distributed solver stores (it sizes its
+    /// buffers from this).
+    pub fn factor_bytes(&self, idx: usize) -> u64 {
+        let mut tri = 0u64;
+        for t in self.owned_panels(idx) {
+            let (lo, hi) = self.panel_bounds(t);
+            for c in lo..hi {
+                tri += (self.m - c) as u64;
+            }
+        }
+        tri * 8
+    }
+
+    /// Max over diagonal ranks of the resident W-state bytes.
+    pub fn max_w_state_bytes(&self) -> u64 {
+        (0..self.q).map(|i| self.w_state_bytes(i)).max().unwrap_or(0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -286,5 +436,54 @@ mod tests {
         assert!(Partition::nested_15d(10, 8).is_err());
         assert!(Partition::landmark_grid(10, 1, 4).is_err()); // m < √P
         assert!(Partition::landmark_grid(10, 2, 4).is_ok());
+    }
+
+    #[test]
+    fn block_cyclic_covers_and_deals_cyclically() {
+        for (m, q) in [(36usize, 3usize), (29, 2), (7, 7), (48, 1), (5, 4)] {
+            let bc = BlockCyclic::new(m, q);
+            // Panels tile 0..m contiguously.
+            let mut cursor = 0;
+            for t in 0..bc.panels() {
+                let (lo, hi) = bc.panel_bounds(t);
+                assert_eq!(lo, cursor, "m={m} q={q} t={t}");
+                assert!(hi > lo);
+                cursor = hi;
+                assert_eq!(bc.owner(t), t % q);
+                assert_eq!(bc.panel_replication_group(t).len(), q);
+                for c in lo..hi {
+                    assert_eq!(bc.panel_of(c), t);
+                }
+            }
+            assert_eq!(cursor, m);
+            // Owned panels partition the panel set; owned cols sum to m.
+            let cols: usize = (0..q).map(|i| bc.owned_cols(i)).sum();
+            assert_eq!(cols, m);
+            // No rank's resident W state exceeds ~m²/q (+ one panel).
+            let bound = (m as u64 * m as u64 * 4) / q as u64
+                + bc.panel_width() as u64 * m as u64 * 4;
+            assert!(bc.max_w_state_bytes() <= bound, "m={m} q={q}");
+        }
+    }
+
+    #[test]
+    fn block_cyclic_explicit_panel_width() {
+        let bc = BlockCyclic::with_panel(20, 3, 4);
+        assert_eq!(bc.panels(), 5);
+        assert_eq!(bc.owned_panels(0), vec![0, 3]);
+        assert_eq!(bc.owned_panels(1), vec![1, 4]);
+        assert_eq!(bc.owned_panels(2), vec![2]);
+        assert_eq!(bc.owned_cols(2), 4);
+        // factor_bytes counts the strictly-lower-triangular column tails.
+        let bc1 = BlockCyclic::with_panel(4, 1, 4);
+        assert_eq!(bc1.factor_bytes(0), (4 + 3 + 2 + 1) * 8);
+    }
+
+    #[test]
+    fn w_factorization_parses() {
+        assert_eq!(WFactorization::parse("bc"), Some(WFactorization::BlockCyclic));
+        assert_eq!(WFactorization::parse("replicated"), Some(WFactorization::Replicated));
+        assert_eq!(WFactorization::parse("nope"), None);
+        assert_eq!(WFactorization::BlockCyclic.name(), "block-cyclic");
     }
 }

@@ -77,9 +77,9 @@
 //! When m itself grows large, the 1D landmark layout hits the same wall
 //! the exact 1D algorithm does (replicated W, a k×m coefficient
 //! allreduce): selecting [`approx::LandmarkLayout::OneFiveD`] instead
-//! tiles C on the √P×√P grid (point blocks × landmark column blocks),
-//! keeps one W replica per grid column, and lands E through a column
-//! reduce-scatter exactly on each rank's canonical slice:
+//! tiles C on the √P×√P grid (point blocks × landmark column blocks)
+//! and lands E through a column reduce-scatter exactly on each rank's
+//! canonical slice:
 //!
 //! ```no_run
 //! use vivaldi::approx::{self, ApproxConfig, LandmarkLayout};
@@ -95,6 +95,26 @@
 //! let out = approx::fit(4, &ds.points, &cfg).unwrap();
 //! println!("1.5D landmark fit: {} iters", out.iterations);
 //! ```
+//!
+//! ## When even W outgrows a rank: the distributed factor
+//!
+//! In the batch 1.5D landmark layout's default configuration
+//! ([`layout::WFactorization::BlockCyclic`]) no rank materializes the
+//! full m×m landmark kernel W: it lives as **block-cyclic column
+//! panels** over the grid diagonal ([`layout::BlockCyclic`]), the
+//! ridge Cholesky runs distributed (panel factorization + broadcast +
+//! trailing update — [`approx::solve::DistSpdSolver`]), and every
+//! coefficient solve is a pipelined forward/back substitution against
+//! the distributed factor, so no rank holds more than ~m²/√P of W.
+//! The results are **bit-identical** to the replicated factorization,
+//! which stays selectable via [`approx::ApproxConfig::w_fact`] (the
+//! streaming driver still assembles W host-side once per landmark set
+//! and hands each diagonal only its panel slices). Landmark rows move
+//! by grid-row block gather, so off-diagonal ranks hold only an
+//! m/√P × d slice.
+//! [`config::landmark_feasibility`] and
+//! [`model::analytic::w_blockcyclic_state_bytes`] quantify the
+//! footprint; `vivaldi run --algo landmark` reports it on OOM.
 //!
 //! ## When the points never stop arriving: the streaming path
 //!

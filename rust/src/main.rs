@@ -67,6 +67,8 @@ fn print_help() {
          \x20                   streaming extras: --stream --batch B [--decay G]\n\
          \x20                   [--reservoir R --refresh-every E] — mini-batch\n\
          \x20                   landmark fit, peak memory ∝ B not n\n\
+         \x20                   [--data FILE [--d D]] — stream a libSVM file\n\
+         \x20                   off disk instead of generated data\n\
          \x20 weak-scaling      Fig. 2 [--breakdown → Fig. 3] [--quick]\n\
          \x20 strong-scaling    Fig. 4 [--breakdown → Fig. 5] [--quick]\n\
          \x20 sliding-window    Fig. 6 speedup over the single-device baseline\n\
@@ -254,9 +256,44 @@ fn cmd_run_landmark(f: &Flags) -> i32 {
     let ds = PaperDataset::parse(f.get("--dataset").unwrap_or("higgs"))
         .unwrap_or(PaperDataset::HiggsLike);
     let scale = load_scale(f);
-    let data = ds.generate(n, scale.d_cap(ds), scale.seed);
     let stream = f.has("--stream");
+    let data_file = f.get("--data");
+    if data_file.is_some() && !stream {
+        eprintln!("--data FILE requires --stream (batch fits load datasets via $VIVALDI_DATA)");
+        return 2;
+    }
     let batch = f.usize_or("--batch", (n / 8).max(m).max(g));
+
+    // Streamed libSVM off disk: the real Table-II files never need to
+    // be densified whole — points arrive batch by batch.
+    if let Some(path) = data_file {
+        use vivaldi::data::stream::LibsvmSource;
+        let default_d = scale.d_cap(ds).unwrap_or(ds.d());
+        let d = f.usize_or("--d", default_d);
+        let layout =
+            explicit_layout.unwrap_or_else(|| LandmarkLayout::auto(batch, d, k, m, g));
+        let cfg = ApproxConfig {
+            k,
+            m,
+            layout,
+            max_iters: iters,
+            kernel: KernelFn::paper_polynomial(),
+            converge_on_stable: true,
+            mem,
+            ..Default::default()
+        };
+        let mut source = match LibsvmSource::open(std::path::Path::new(path), d) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("cannot open --data {path}: {e}");
+                return 2;
+            }
+        };
+        println!("streaming libSVM file {path} (d={d})");
+        return cmd_run_landmark_stream(&mut source, &[], 0, d, cfg, g, batch, f, auto_layout);
+    }
+
+    let data = ds.generate(n, scale.d_cap(ds), scale.seed);
     // Analytic auto-selection: the update-volume crossover sits at
     // m ≈ n/√P (model::analytic::d_landmark_{1d,15d}). Streaming
     // collectives act on batch-sized point blocks, so the crossover is
@@ -275,7 +312,20 @@ fn cmd_run_landmark(f: &Flags) -> i32 {
         ..Default::default()
     };
     if stream {
-        return cmd_run_landmark_stream(&data, cfg, g, batch, f, auto_layout);
+        use vivaldi::data::stream::MatrixSource;
+        let (n_report, d_report) = (data.n(), data.d());
+        let mut source = MatrixSource::from_dataset(&data);
+        return cmd_run_landmark_stream(
+            &mut source,
+            &data.labels,
+            n_report,
+            d_report,
+            cfg,
+            g,
+            batch,
+            f,
+            auto_layout,
+        );
     }
     println!(
         "landmark fit: layout={}{} G={g} n={} d={} m={m} k={k} iters<={iters}",
@@ -314,7 +364,7 @@ fn cmd_run_landmark(f: &Flags) -> i32 {
             eprintln!("fit failed: {e}");
             if matches!(e, vivaldi::VivaldiError::OutOfMemory { .. }) {
                 let report_mem = mem.unwrap_or_else(MemModel::unlimited);
-                print_feasibility_report(&data, m, g, data.n(), &report_mem);
+                print_feasibility_report(data.n(), data.d(), m, g, data.n(), &report_mem);
             }
             1
         }
@@ -322,16 +372,17 @@ fn cmd_run_landmark(f: &Flags) -> i32 {
 }
 
 /// The OOM planning report: which path (exact / landmark 1D / landmark
-/// 1.5D / streaming at the given batch) fits the per-rank budget.
+/// 1.5D replicated-W / 1.5D block-cyclic-W / streaming at the given
+/// batch) fits the per-rank budget.
 fn print_feasibility_report(
-    data: &vivaldi::data::Dataset,
+    n: usize,
+    d: usize,
     m: usize,
     g: usize,
     batch: usize,
     mem: &vivaldi::config::MemModel,
 ) {
-    let feas =
-        vivaldi::config::landmark_stream_feasibility(data.n(), data.d(), m, g, batch, mem);
+    let feas = vivaldi::config::landmark_stream_feasibility(n, d, m, g, batch, mem);
     eprintln!(
         "feasibility @ {} budget/rank:",
         vivaldi::util::human_bytes(feas.budget)
@@ -352,6 +403,11 @@ fn print_feasibility_report(
         feas.landmark_15d_fits
     );
     eprintln!(
+        "  landmark 1.5D block-cyclic W (m={m}) {:>12}  fits: {}",
+        vivaldi::util::human_bytes(feas.landmark_15d_bc_bytes_per_rank),
+        feas.landmark_15d_bc_fits
+    );
+    eprintln!(
         "  stream (B={})  {:>12}  fits: {}",
         feas.stream_batch,
         vivaldi::util::human_bytes(feas.landmark_stream_bytes_per_rank),
@@ -364,9 +420,16 @@ fn print_feasibility_report(
 
 /// `vivaldi run --algo landmark --stream`: mini-batch streaming fit
 /// through `approx::stream` — peak memory scales with `--batch`, not
-/// with n.
+/// with n. The source is either generated data or a libSVM file
+/// streaming off disk (`--data FILE`); `labels` is empty for files
+/// (unsupervised input), `n_report` is 0 when the stream length is
+/// unknown up front.
+#[allow(clippy::too_many_arguments)]
 fn cmd_run_landmark_stream(
-    data: &vivaldi::data::Dataset,
+    source: &mut dyn vivaldi::data::stream::PointSource,
+    labels: &[u32],
+    n_report: usize,
+    d: usize,
     base: vivaldi::approx::ApproxConfig,
     g: usize,
     batch: usize,
@@ -374,7 +437,6 @@ fn cmd_run_landmark_stream(
     auto_layout: bool,
 ) -> i32 {
     use vivaldi::approx::stream::{fit_stream, StreamConfig};
-    use vivaldi::data::stream::MatrixSource;
 
     let decay = f
         .get("--decay")
@@ -396,16 +458,14 @@ fn cmd_run_landmark_stream(
         refresh_every: f.usize_or("--refresh-every", 0),
     };
     println!(
-        "landmark stream fit: layout={}{} G={g} n={} d={} m={m} k={} B={batch} decay={decay}",
+        "landmark stream fit: layout={}{} G={g} n={} d={d} m={m} k={} B={batch} decay={decay}",
         cfg.base.layout.name(),
         if auto_layout { " (auto)" } else { "" },
-        data.n(),
-        data.d(),
+        if n_report > 0 { n_report.to_string() } else { "?".into() },
         cfg.base.k,
     );
     let t0 = std::time::Instant::now();
-    let mut source = MatrixSource::from_dataset(data);
-    match fit_stream(g, &mut source, &cfg) {
+    match fit_stream(g, source, &cfg) {
         Ok(out) => {
             println!(
                 "done in {:.3}s wall: {} batches, {} inner iterations, converged={}, \
@@ -427,8 +487,8 @@ fn cmd_run_landmark_stream(
                 total.msgs,
                 vivaldi::util::human_bytes(total.bytes)
             );
-            if !data.labels.is_empty() {
-                let nmi = vivaldi::quality::nmi(&out.assignments, &data.labels, cfg.base.k);
+            if !labels.is_empty() {
+                let nmi = vivaldi::quality::nmi(&out.assignments, labels, cfg.base.k);
                 println!("  quality: NMI vs generator labels = {nmi:.3}");
             }
             0
@@ -437,7 +497,7 @@ fn cmd_run_landmark_stream(
             eprintln!("stream fit failed: {e}");
             if matches!(e, vivaldi::VivaldiError::OutOfMemory { .. }) {
                 let report_mem = mem.unwrap_or_else(vivaldi::config::MemModel::unlimited);
-                print_feasibility_report(data, m, g, batch, &report_mem);
+                print_feasibility_report(n_report.max(batch), d, m, g, batch, &report_mem);
             }
             1
         }

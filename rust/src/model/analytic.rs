@@ -118,6 +118,73 @@ pub fn d_landmark_stream(c: CostParams, m: usize, batch: usize, iters: usize) ->
     )
 }
 
+/// Per-rank resident bytes of the **block-cyclic W state** on the
+/// worst diagonal rank: the f32 column panels (~m²/q) plus the W-row
+/// transient the Gram pipeline charges while redistributing rows into
+/// panels (⌈m/q⌉·m f32). This is the term that replaces the replicated
+/// layout's full 4·m² — the memory win that lets m scale with √P.
+/// For non-square p the effective grid side is ⌈√p⌉ (matching
+/// [`crate::config::landmark_feasibility`]'s convention).
+pub fn w_blockcyclic_state_bytes(m: usize, p: usize) -> u64 {
+    use crate::layout::BlockCyclic;
+    let q = (p as f64).sqrt().ceil() as usize;
+    let q = q.clamp(1, m.max(1));
+    if m == 0 {
+        return 0;
+    }
+    let bc = BlockCyclic::new(m, q);
+    bc.max_w_state_bytes() + 4 * (crate::util::ceil_div(m, q) * m) as u64
+}
+
+/// One-time communication of the distributed block-cyclic Cholesky
+/// (per successful attempt), busiest-rank words: every panel's lower
+/// columns are broadcast over the q diagonal ranks (binomial tree, the
+/// root forwards ⌈log₂q⌉ copies), and each rank roots ~1/q of the
+/// panels. Total factor payload is the f64 lower triangle —
+/// m(m+1)/2 doubles = m(m+1) words.
+pub fn w_blockcyclic_factor(c: CostParams, m: usize) -> CommCost {
+    use crate::layout::BlockCyclic;
+    let q = sqrt_p(c.p).round().max(1.0) as usize;
+    let q = q.clamp(1, m.max(1));
+    let bc = BlockCyclic::new(m, q);
+    let lg = (q as f64).log2().ceil().max(1.0);
+    let words = lg * (m as f64) * (m as f64 + 1.0) / q as f64;
+    CommCost::new(bc.panels() as f64 * lg, words)
+}
+
+/// Per-iteration communication the distributed W solve adds on the
+/// busiest diagonal rank: the forward/backward substitution pipelines
+/// (each rank forwards the k×m f64 token once per owned panel and
+/// direction), the α broadcast from the first panel's owner, and the
+/// ring allgather of the center-norm terms. All words are f32
+/// equivalents (f64 payloads count double).
+pub fn w_blockcyclic_solve(c: CostParams, m: usize) -> CommCost {
+    use crate::layout::BlockCyclic;
+    let q = sqrt_p(c.p).round().max(1.0) as usize;
+    let q = q.clamp(1, m.max(1));
+    if q == 1 {
+        return CommCost::new(0.0, 0.0);
+    }
+    let bc = BlockCyclic::new(m, q);
+    let b_panels = bc.panels() as f64;
+    let km = (c.k * m) as f64;
+    let lg = (q as f64).log2().ceil().max(1.0);
+    // pipeline: ~B/q tokens per rank per direction, 2·k·m words each;
+    // α bcast root: lg copies; terms allgather ring: ~2·k·m forwarded.
+    let words = 4.0 * b_panels * km / q as f64 + 2.0 * lg * km + 2.0 * km;
+    CommCost::new(2.0 * b_panels / q as f64 + lg + q as f64, words)
+}
+
+/// [`d_landmark_15d`] with the distributed-W solve's extra traffic
+/// folded in: the per-iteration cost of the block-cyclic layout. The
+/// memory win (m²/q resident instead of m²) buys this extra
+/// O(k·m·panels/√P) word term — the knob's tradeoff in closed form.
+pub fn d_landmark_15d_blockcyclic(c: CostParams, m: usize) -> CommCost {
+    let base = d_landmark_15d(c, m);
+    let solve = w_blockcyclic_solve(c, m);
+    CommCost::new(base.messages + solve.messages, base.words + solve.words)
+}
+
 /// All Table I rows for a parameter set, in the paper's order:
 /// (algorithm, K cost, Dᵀ cost).
 pub fn table1(c: CostParams) -> Vec<(&'static str, CommCost, CommCost)> {
@@ -216,5 +283,51 @@ mod tests {
         assert_eq!(t.len(), 4);
         assert_eq!(t[0].0, "1D");
         assert_eq!(t[2].0, "1.5D");
+    }
+
+    #[test]
+    fn blockcyclic_state_shrinks_with_p() {
+        let m = 4096;
+        // Replicated W is 4·m² per diagonal rank; the block-cyclic
+        // state must sit near 4·m²·2/q (panels + row transient) — an
+        // ~q/2 reduction that grows with the grid.
+        let repl = 4 * (m as u64) * (m as u64);
+        for p in [4usize, 16, 64] {
+            let q = (p as f64).sqrt() as u64;
+            let bc = w_blockcyclic_state_bytes(m, p);
+            // panels + transient ≈ 8m²/q: equal to replicated at q=2,
+            // strictly below from q=4 on, shrinking with the grid.
+            assert!(bc <= repl, "p={p}");
+            if q >= 4 {
+                assert!(bc < repl, "p={p}: {bc} vs replicated {repl}");
+            }
+            let ideal = 2 * repl / q;
+            assert!(
+                bc <= ideal + ideal / 2,
+                "p={p}: {bc} should be within 1.5x of 2·m²·4/q = {ideal}"
+            );
+        }
+        // q=1 degenerates to ~2 full copies (panels + transient), never less.
+        assert!(w_blockcyclic_state_bytes(m, 1) >= repl);
+    }
+
+    #[test]
+    fn blockcyclic_solve_cost_is_the_memory_price() {
+        let c = CostParams { p: 16, ..C };
+        let m = 2048;
+        // The distributed solve adds words on top of the replicated
+        // 1.5D update — the documented memory-for-communication trade.
+        assert!(d_landmark_15d_blockcyclic(c, m).words > d_landmark_15d(c, m).words);
+        // And the extra term scales with k·m, not with n.
+        let double_n = CostParams { n: 2 * c.n, ..c };
+        let extra_a = w_blockcyclic_solve(c, m).words;
+        let extra_b = w_blockcyclic_solve(double_n, m).words;
+        assert_eq!(extra_a, extra_b);
+        // Single rank: no solve communication at all.
+        assert_eq!(w_blockcyclic_solve(CostParams { p: 1, ..c }, m).words, 0.0);
+        // The one-time factor volume scales ~m² and shrinks per rank with q.
+        let f16 = w_blockcyclic_factor(c, m).words;
+        let f64_ = w_blockcyclic_factor(CostParams { p: 64, ..c }, m).words;
+        assert!(f64_ < f16, "more diagonal ranks spread the factor broadcast");
     }
 }

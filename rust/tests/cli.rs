@@ -134,4 +134,44 @@ fn stream_oom_reports_batch_feasibility() {
     assert_eq!(code, 1, "stderr: {stderr}");
     assert!(stderr.contains("stream fit failed"), "{stderr}");
     assert!(stderr.contains("stream (B=64)"), "{stderr}");
+    // The report now separates the two 1.5D W layouts.
+    assert!(stderr.contains("block-cyclic W"), "{stderr}");
+}
+
+/// `--data FILE` streams a real libSVM file off disk through
+/// `LibsvmSource` — the Table-II end-to-end path. The file is written
+/// by the crate's own writer, so the dialect matches exactly.
+#[test]
+fn stream_reads_libsvm_file_from_disk() {
+    let ds = vivaldi::data::synth::gaussian_blobs(220, 4, 2, 4.0, 77);
+    let dir = std::env::temp_dir().join("vivaldi_cli_stream_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("table2.libsvm");
+    vivaldi::data::libsvm::write_libsvm(&path, &ds).unwrap();
+    let path_s = path.to_str().unwrap();
+
+    let (code, stdout, stderr) = run(&[
+        "run", "--algo", "landmark", "--stream", "--data", path_s, "--d", "4", "--batch",
+        "64", "--m", "16", "--k", "2", "--gpus", "2", "--iters", "5",
+    ]);
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(stdout.contains("streaming libSVM file"), "{stdout}");
+    assert!(stdout.contains("landmark stream fit"), "{stdout}");
+    // 220 points in batches of 64: 3 full batches + a 28-point tail.
+    assert!(stdout.contains("4 batches"), "{stdout}");
+    assert!(stdout.contains("batch-bounded"), "{stdout}");
+
+    // --data without --stream is a usage error, not a silent fallback.
+    let (code, _, stderr) =
+        run(&["run", "--algo", "landmark", "--data", path_s, "--d", "4"]);
+    assert_eq!(code, 2);
+    assert!(stderr.contains("--data FILE requires --stream"), "{stderr}");
+
+    // A missing file fails loudly at open time.
+    let (code, _, stderr) = run(&[
+        "run", "--algo", "landmark", "--stream", "--data", "/nonexistent/nope.libsvm",
+        "--d", "4",
+    ]);
+    assert_eq!(code, 2);
+    assert!(stderr.contains("cannot open --data"), "{stderr}");
 }

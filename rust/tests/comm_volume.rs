@@ -127,15 +127,21 @@ fn fifteen_d_spmm_within_table1_band() {
 #[test]
 fn landmark_15d_update_beats_1d_allreduce_closed_form() {
     use vivaldi::approx::{self, ApproxConfig, LandmarkLayout};
+    use vivaldi::layout::WFactorization;
     use vivaldi::model::analytic::{d_landmark_1d, CostParams};
 
     let points = data();
     const M: usize = 96; // m > n/√P = 36: the regime the 1.5D layout targets
     let p = 16;
+    // Replicated W isolates the coefficient-*exchange* layouts this
+    // test compares: the block-cyclic W factor (the default) adds its
+    // own update-phase solve traffic, whose closed form is pinned
+    // separately in rust/tests/wfactor.rs.
     let mk = |layout| ApproxConfig {
         k: K,
         m: M,
         layout,
+        w_fact: WFactorization::Replicated,
         kernel: KernelFn::linear(),
         max_iters: 1,
         converge_on_stable: false,
