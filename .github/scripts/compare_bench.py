@@ -1,0 +1,97 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_landmark.json files and fail on a counted-comm-volume
+regression.
+
+Usage: compare_bench.py PREV.json CURRENT.json [--threshold 0.15]
+
+Rows are matched by (path, m); within a row, every phase's counted
+`bytes` is compared. The counted volumes are exact (deterministic
+simulated fabric, fixed seed), so any growth is a real schedule change
+— but config drift (different n/p/iters between the two files) makes
+byte counts incomparable, in which case the diff is skipped with a
+notice. Exit 1 iff any matched phase grew by more than the threshold.
+New rows/phases (no previous measurement) and removed ones are
+reported informationally and never fail the build.
+"""
+
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def row_key(row):
+    return (row["path"], row["m"])
+
+
+def main():
+    argv = sys.argv[1:]
+    threshold = 0.15
+    args = []
+    i = 0
+    while i < len(argv):
+        if argv[i] == "--threshold":
+            if i + 1 >= len(argv):
+                print("--threshold needs a value")
+                return 2
+            threshold = float(argv[i + 1])
+            i += 2
+        else:
+            args.append(argv[i])
+            i += 1
+    if len(args) != 2:
+        print("usage: compare_bench.py PREV.json CURRENT.json [--threshold 0.15]")
+        return 2
+    prev, cur = load(args[0]), load(args[1])
+
+    if prev.get("config") != cur.get("config"):
+        print(
+            f"bench configs differ (prev {prev.get('config')} vs "
+            f"cur {cur.get('config')}): byte counts are incomparable, skipping diff"
+        )
+        return 0
+
+    prev_rows = {row_key(r): r for r in prev.get("rows", [])}
+    regressions = []
+    print(f"comparing counted comm volumes (fail threshold: +{threshold:.0%})")
+    for row in cur.get("rows", []):
+        key = row_key(row)
+        base = prev_rows.get(key)
+        if base is None:
+            print(f"  {row['path']} (m={row['m']}): new row, no baseline")
+            continue
+        for phase, stats in row.get("phases", {}).items():
+            old = base.get("phases", {}).get(phase)
+            if old is None:
+                print(f"  {row['path']} (m={row['m']}) {phase}: new phase, no baseline")
+                continue
+            ob, nb = old["bytes"], stats["bytes"]
+            if ob == 0:
+                status = "ok" if nb == 0 else "grew from zero"
+                print(f"  {row['path']} (m={row['m']}) {phase}: {ob} -> {nb} B ({status})")
+                if nb > 0:
+                    regressions.append((key, phase, ob, nb))
+                continue
+            ratio = nb / ob - 1.0
+            flag = "REGRESSION" if ratio > threshold else "ok"
+            print(
+                f"  {row['path']} (m={row['m']}) {phase}: "
+                f"{ob} -> {nb} B ({ratio:+.1%}) {flag}"
+            )
+            if ratio > threshold:
+                regressions.append((key, phase, ob, nb))
+
+    if regressions:
+        print(f"\n{len(regressions)} phase(s) regressed beyond +{threshold:.0%}:")
+        for (path, m), phase, ob, nb in regressions:
+            print(f"  {path} (m={m}) {phase}: {ob} -> {nb} B")
+        return 1
+    print("no counted-comm-volume regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -91,24 +91,46 @@ impl LandmarkLayout {
         }
     }
 
-    /// Pick the layout with the smaller analytic per-iteration update
-    /// volume ([`crate::model::analytic::d_landmark_1d`] vs
-    /// [`crate::model::analytic::d_landmark_15d`]; the crossover sits at
-    /// m ≈ n/√P). Falls back to 1D whenever the grid constraints rule
-    /// the 1.5D layout out (non-square p, p = 1, or m < √P) — the
-    /// `--landmark-layout auto` selection.
-    ///
-    /// Deliberate scope: this compares the **coefficient-exchange**
-    /// layouts under a replicated W. The orthogonal
-    /// [`crate::layout::WFactorization`] knob (default block-cyclic)
-    /// adds [`crate::model::analytic::w_blockcyclic_solve`] words per
-    /// iteration in exchange for the ~m²/√P memory footprint — a
-    /// memory decision, not a volume one, quantified by
-    /// [`crate::model::analytic::d_landmark_15d_blockcyclic`] and the
-    /// feasibility report. Folding the memory model into `auto` is a
-    /// tracked follow-up (ROADMAP, PR 4).
+    /// [`Self::auto_for`] under the default W factorization
+    /// (block-cyclic) with no memory model — the volume-only pick for
+    /// plain library use.
     pub fn auto(n: usize, d: usize, k: usize, m: usize, p: usize) -> LandmarkLayout {
-        use crate::model::analytic::{d_landmark_15d, d_landmark_1d, CostParams};
+        Self::auto_for(n, d, k, m, p, WFactorization::BlockCyclic, None)
+    }
+
+    /// The full `--landmark-layout auto` decision: pick 1D or 1.5D
+    /// from the analytic closed forms **matching the configured W
+    /// factorization**, with the memory model consulted first.
+    ///
+    /// 1. Grid constraints (non-square p, p = 1, m < √P) force 1D.
+    /// 2. With a memory model, the **W wall** decides before volume
+    ///    does: if the 1D layout's per-rank state (whose m² replicated
+    ///    W is the wall as m grows) busts the budget while the 1.5D
+    ///    state fits — [`crate::config::Feasibility::landmark_15d_bc_fits`]
+    ///    under block-cyclic, the replicated diagonal otherwise — the
+    ///    pick is 1.5D regardless of volume, because it is the only
+    ///    layout that runs at all. The mirrored case picks 1D.
+    /// 3. Otherwise the smaller per-iteration update volume wins:
+    ///    [`crate::model::analytic::d_landmark_15d_blockcyclic`]
+    ///    (which charges the distributed solve's pipeline words — the
+    ///    honest cost of the default W layout) or the replicated
+    ///    [`crate::model::analytic::d_landmark_15d`], against
+    ///    [`crate::model::analytic::d_landmark_1d`]. Under block-
+    ///    cyclic W the solve traffic means 1.5D essentially never wins
+    ///    on volume alone — auto picks it **exactly when the W wall
+    ///    binds**, which is the point of the layout.
+    pub fn auto_for(
+        n: usize,
+        d: usize,
+        k: usize,
+        m: usize,
+        p: usize,
+        w_fact: WFactorization,
+        mem: Option<&crate::config::MemModel>,
+    ) -> LandmarkLayout {
+        use crate::model::analytic::{
+            d_landmark_15d, d_landmark_15d_blockcyclic, d_landmark_1d, CostParams,
+        };
         if p <= 1 || !crate::util::is_perfect_square(p) {
             return LandmarkLayout::OneD;
         }
@@ -116,8 +138,24 @@ impl LandmarkLayout {
         if m < q {
             return LandmarkLayout::OneD;
         }
+        if let Some(mem) = mem {
+            let f = crate::config::landmark_feasibility(n, d, m, p, mem);
+            let fifteen_fits = match w_fact {
+                WFactorization::Replicated => f.landmark_15d_fits,
+                WFactorization::BlockCyclic => f.landmark_15d_bc_fits,
+            };
+            match (f.landmark_fits, fifteen_fits) {
+                (false, true) => return LandmarkLayout::OneFiveD, // the W wall binds
+                (true, false) => return LandmarkLayout::OneD,
+                _ => {} // both (or neither) fit: fall through to volume
+            }
+        }
         let c = CostParams { n, d, k, p };
-        if d_landmark_15d(c, m).words < d_landmark_1d(c, m).words {
+        let fifteen = match w_fact {
+            WFactorization::Replicated => d_landmark_15d(c, m),
+            WFactorization::BlockCyclic => d_landmark_15d_blockcyclic(c, m),
+        };
+        if fifteen.words < d_landmark_1d(c, m).words {
             LandmarkLayout::OneFiveD
         } else {
             LandmarkLayout::OneD
@@ -619,14 +657,44 @@ mod tests {
 
     #[test]
     fn auto_layout_crossover() {
-        // Large m (past ~n/√P): the sharded 1.5D coefficient exchange
-        // wins; small m: the flat 1D allreduce is cheaper.
-        assert_eq!(LandmarkLayout::auto(256, 2, 4, 128, 4), LandmarkLayout::OneFiveD);
-        assert_eq!(LandmarkLayout::auto(256, 2, 4, 16, 4), LandmarkLayout::OneD);
-        // Grid constraints force 1D: non-square p, p = 1, m < √P.
+        use crate::config::MemModel;
+        // Replicated W (no solve traffic): the classic volume
+        // crossover at m ≈ n/√P — large m picks 1.5D, small m picks 1D.
+        let repl = |n, m, p| {
+            LandmarkLayout::auto_for(n, 2, 4, m, p, WFactorization::Replicated, None)
+        };
+        assert_eq!(repl(256, 128, 4), LandmarkLayout::OneFiveD);
+        assert_eq!(repl(256, 16, 4), LandmarkLayout::OneD);
+        // Block-cyclic W (the default): the distributed solve's
+        // pipeline words mean 1.5D never wins on volume alone...
+        assert_eq!(LandmarkLayout::auto(256, 2, 4, 128, 4), LandmarkLayout::OneD);
+        // ...so auto picks it exactly when the W wall binds: a budget
+        // the 1D layout's replicated m² W busts but the block-cyclic
+        // diagonal fits (the config test pins the same boundary).
+        let wall = MemModel { budget: 4 << 20, repl_factor: 1.0, redist_factor: 0.0 };
+        assert_eq!(
+            LandmarkLayout::auto_for(
+                4096, 2, 4, 1024, 16, WFactorization::BlockCyclic, Some(&wall)
+            ),
+            LandmarkLayout::OneFiveD
+        );
+        // With room for both, volume decides again.
+        let roomy = MemModel::unlimited();
+        assert_eq!(
+            LandmarkLayout::auto_for(
+                4096, 2, 4, 1024, 16, WFactorization::BlockCyclic, Some(&roomy)
+            ),
+            LandmarkLayout::OneD
+        );
+        // Grid constraints force 1D: non-square p, p = 1, m < √P —
+        // even under a binding W wall.
         assert_eq!(LandmarkLayout::auto(256, 2, 4, 128, 6), LandmarkLayout::OneD);
         assert_eq!(LandmarkLayout::auto(256, 2, 4, 128, 1), LandmarkLayout::OneD);
         assert_eq!(LandmarkLayout::auto(256, 2, 4, 2, 9), LandmarkLayout::OneD);
+        assert_eq!(
+            LandmarkLayout::auto_for(4096, 2, 4, 1024, 6, WFactorization::BlockCyclic, Some(&wall)),
+            LandmarkLayout::OneD
+        );
         // The auto pick is always runnable: a fit with it succeeds.
         let ds = synth::gaussian_blobs(144, 3, 3, 4.5, 23);
         for p in [1usize, 4, 6, 9] {

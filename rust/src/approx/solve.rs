@@ -19,7 +19,19 @@
 //!   factorization + panel broadcast + trailing update, and the
 //!   per-iteration solves run as pipelined forward/back substitution
 //!   against the distributed factor. No rank ever holds more than
-//!   ~m²/q of W (plus one broadcast panel in flight).
+//!   ~m²/q of W (plus one broadcast panel in flight). The substitution
+//!   token is **active-set restricted**: only clusters with nonzero
+//!   weight travel, and only the live row range of each sweep (the
+//!   forward token shrinks as y values finalize, the backward token
+//!   grows as x values finalize) — roughly halving the solve-phase
+//!   volume at full occupancy and shrinking it further with every
+//!   empty cluster, at zero arithmetic cost.
+//!
+//! [`host_solve_alpha_weighted_panels`] is the driver-side companion:
+//! it solves against a complete panel set (all q diagonal solvers)
+//! without assembling the factor, so the streaming driver can classify
+//! tail batches after the distributed stream-init dropped its m² host
+//! copy of W.
 //!
 //! **Bit-identity invariant:** for every element, both solvers perform
 //! the identical sequence of f64 operations in the identical order —
@@ -119,8 +131,10 @@ pub struct WPanels {
 
 impl WPanels {
     /// Slice a host-resident full W into the panels diagonal-group
-    /// index `my_idx` owns — the streaming driver's path, where W is
-    /// computed once per landmark set on the host.
+    /// index `my_idx` owns. Since the distributed stream-init landed,
+    /// production paths build panels through the Gram pipeline's
+    /// symmetry redistribution; this remains the test-oracle
+    /// construction (and the seed for [`DistSpdSolver::from_host`]).
     pub fn from_full(w: &DenseMatrix, bc: BlockCyclic, my_idx: usize) -> WPanels {
         let m = bc.m();
         assert_eq!(w.rows(), m);
@@ -236,6 +250,28 @@ impl DistSpdSolver {
         &self.lower
     }
 
+    /// The packed lower factor column `c` (rows `c..m`). Panics unless
+    /// this solver owns `c`'s panel — the driver-side panel-set solve
+    /// below routes each column to its owner.
+    fn factor_col(&self, c: usize) -> &[f64] {
+        let t = self.bc.panel_of(c);
+        assert_eq!(self.bc.owner(t), self.my_idx, "factor_col: column {c} not owned");
+        let (lo, hi) = self.bc.panel_bounds(t);
+        let offs = lower_offsets(self.bc.m(), lo, hi);
+        let start = offs[c - lo];
+        &self.lower[self.bc.panel_index(t)][start..start + (self.bc.m() - c)]
+    }
+
+    /// The stored W column `c` (full m rows, f32). Panics unless this
+    /// solver owns `c`'s panel.
+    fn w_col(&self, c: usize) -> &[f32] {
+        let t = self.bc.panel_of(c);
+        assert_eq!(self.bc.owner(t), self.my_idx, "w_col: column {c} not owned");
+        let (lo, _) = self.bc.panel_bounds(t);
+        let m = self.bc.m();
+        &self.panels.cols[self.bc.panel_index(t)][(c - lo) * m..(c - lo + 1) * m]
+    }
+
     /// Factor the distributed W **collectively over the diagonal
     /// group**: every diagonal rank calls with its own panels. Per
     /// panel: the owner factors it (all updates from earlier panels
@@ -271,11 +307,13 @@ impl DistSpdSolver {
     }
 
     /// Build the distributed solver from a host-side replicated factor
-    /// — the streaming driver's path: W is factored once per landmark
-    /// set on the host ([`SpdSolver::factor`], bit-identical to
-    /// [`Self::factor_dist`]), and each diagonal rank receives only its
-    /// panel slices, inheriting the distributed per-iteration solve
-    /// without re-paying the factorization.
+    /// ([`SpdSolver::factor`], bit-identical to [`Self::factor_dist`]):
+    /// each diagonal index receives only its panel slices. The
+    /// streaming driver no longer needs this — stream-init factors W
+    /// collectively on the first batch's diagonal group — so it
+    /// survives as the bit-identity **test oracle** relating the
+    /// scalar and distributed factors (`from_host_matches_factor_dist`)
+    /// and as a migration path for host-resident callers.
     pub fn from_host(
         solver: &SpdSolver,
         w: &DenseMatrix,
@@ -312,11 +350,25 @@ impl DistSpdSolver {
     /// Collective over the diagonal group. Schedule per call:
     /// a forward pipeline over panels (each owner finalizes its
     /// columns' y values and applies their updates to all later rows
-    /// before passing the k×m token on), the mirrored backward
-    /// pipeline, a broadcast of the finished α from the first panel's
-    /// owner, and an allgather of the per-column center-norm terms
-    /// (summed in ascending column order on every rank — the scalar
-    /// accumulation order).
+    /// before passing the token on), the mirrored backward pipeline, a
+    /// broadcast of the finished α from the first panel's owner, and an
+    /// allgather of the per-column center-norm terms (summed in
+    /// ascending column order on every rank — the scalar accumulation
+    /// order).
+    ///
+    /// **Active-set pipelining:** the token is restricted to clusters
+    /// with nonzero weight and to the *live row range* of each sweep —
+    /// the forward token entering panel t carries only the
+    /// not-yet-final rows `[lo_t, m)`, the backward token only the
+    /// finalized rows `[hi_t, m)`, and each rank's local buffer keeps
+    /// the rows the token no longer carries (exactly what the mirrored
+    /// sweep reads back later). Rows of zero-weight clusters are
+    /// exactly zero on the scalar path, so never shipping them is
+    /// algebraically free: the f64 operation sequence for every live
+    /// element is unchanged and the `==` bit-identity pins still hold,
+    /// while the solve-phase volume drops by ~2× on the range
+    /// restriction alone and further with every inactive cluster
+    /// ([`crate::model::analytic::w_blockcyclic_solve_active`]).
     pub fn solve_alpha_weighted(
         &self,
         comm: &Comm,
@@ -329,7 +381,15 @@ impl DistSpdSolver {
         let n_panels = self.bc.panels();
         debug_assert_eq!(b.len(), k * m);
         debug_assert_eq!(weights.len(), k);
+        // The active set is identical on every diagonal rank (weights
+        // come out of global reductions), so the shrunken schedule
+        // stays collectively consistent without any extra exchange.
         let active: Vec<usize> = (0..k).filter(|&a| weights[a] > 0.0).collect();
+        if active.is_empty() {
+            // Every α row and center norm is exactly zero on the
+            // scalar path too; all ranks take this branch together.
+            return (vec![0.0f64; k * m], vec![0.0f32; k]);
+        }
 
         // Normalized right-hand sides (identical on every rank; rows of
         // zero-weight clusters stay exactly zero, like the scalar path).
@@ -341,18 +401,38 @@ impl DistSpdSolver {
             }
         }
 
-        // Forward pipeline: L y = rhs, panels ascending.
+        // Token (de)serialization: rows [r0, m) of every active cluster.
+        let pack = |z: &[f64], r0: usize| -> Vec<f64> {
+            let mut buf = Vec::with_capacity(active.len() * (m - r0));
+            for &a in &active {
+                buf.extend_from_slice(&z[a * m + r0..(a + 1) * m]);
+            }
+            buf
+        };
+        let unpack = |z: &mut [f64], r0: usize, buf: &[f64]| {
+            let w = m - r0;
+            debug_assert_eq!(buf.len(), active.len() * w);
+            for (ai, &a) in active.iter().enumerate() {
+                z[a * m + r0..(a + 1) * m].copy_from_slice(&buf[ai * w..(ai + 1) * w]);
+            }
+        };
+
+        // Forward pipeline: L y = rhs, panels ascending. The token
+        // entering panel t is the shrinking tail [lo_t, m); finalized y
+        // values stay on the rank that produced them.
         let tag_f = comm.next_tag(diag);
         for p in 0..n_panels {
             if self.bc.owner(p) != self.my_idx {
                 continue;
             }
-            if p > 0 && self.bc.owner(p - 1) != self.my_idx {
-                z = comm.recv(diag.rank_at(self.bc.owner(p - 1)), tag_f.wrapping_add(p as u64));
-            }
             let (lo, hi) = self.bc.panel_bounds(p);
+            if p > 0 && self.bc.owner(p - 1) != self.my_idx {
+                let buf: Vec<f64> =
+                    comm.recv(diag.rank_at(self.bc.owner(p - 1)), tag_f.wrapping_add(p as u64));
+                unpack(&mut z, lo, &buf);
+            }
             let offs = lower_offsets(m, lo, hi);
-            let lower = &self.lower[p / self.bc.q()];
+            let lower = &self.lower[self.bc.panel_index(p)];
             for &a in &active {
                 let za = &mut z[a * m..(a + 1) * m];
                 for lc in 0..hi - lo {
@@ -369,30 +449,34 @@ impl DistSpdSolver {
                 }
             }
             if p + 1 < n_panels && self.bc.owner(p + 1) != self.my_idx {
-                let bytes = (z.len() * 8) as u64;
+                let buf = pack(&z, hi);
+                let bytes = (buf.len() * 8) as u64;
                 comm.send(
                     diag.rank_at(self.bc.owner(p + 1)),
                     tag_f.wrapping_add((p + 1) as u64),
-                    z.clone(),
+                    buf,
                 );
                 comm.record_critical(1, bytes);
             }
         }
 
-        // Backward pipeline: Lᵀ x = y, panels descending. The forward
-        // token carried every panel's y along, so the last owner starts
-        // from the complete y vector.
+        // Backward pipeline: Lᵀ x = y, panels descending. The token
+        // entering panel t is the grown tail of finalized x values
+        // [hi_t, m); each owner's y values for its own columns were
+        // kept local by the forward sweep's range restriction.
         let tag_b = comm.next_tag(diag);
         for p in (0..n_panels).rev() {
             if self.bc.owner(p) != self.my_idx {
                 continue;
             }
-            if p + 1 < n_panels && self.bc.owner(p + 1) != self.my_idx {
-                z = comm.recv(diag.rank_at(self.bc.owner(p + 1)), tag_b.wrapping_add(p as u64));
-            }
             let (lo, hi) = self.bc.panel_bounds(p);
+            if p + 1 < n_panels && self.bc.owner(p + 1) != self.my_idx {
+                let buf: Vec<f64> =
+                    comm.recv(diag.rank_at(self.bc.owner(p + 1)), tag_b.wrapping_add(p as u64));
+                unpack(&mut z, hi, &buf);
+            }
             let offs = lower_offsets(m, lo, hi);
-            let lower = &self.lower[p / self.bc.q()];
+            let lower = &self.lower[self.bc.panel_index(p)];
             for &a in &active {
                 let za = &mut z[a * m..(a + 1) * m];
                 for lc in (0..hi - lo).rev() {
@@ -408,33 +492,42 @@ impl DistSpdSolver {
                 }
             }
             if p > 0 && self.bc.owner(p - 1) != self.my_idx {
-                let bytes = (z.len() * 8) as u64;
+                let buf = pack(&z, lo);
+                let bytes = (buf.len() * 8) as u64;
                 comm.send(
                     diag.rank_at(self.bc.owner(p - 1)),
                     tag_b.wrapping_add((p - 1) as u64),
-                    z.clone(),
+                    buf,
                 );
                 comm.record_critical(1, bytes);
             }
         }
 
-        // Panel 0's owner (group index 0) now holds the complete α.
-        let alpha = comm.bcast(diag, 0, (self.my_idx == 0).then_some(z));
+        // Panel 0's owner (group index 0) now holds the complete α for
+        // every active cluster; inactive rows are exactly zero.
+        let packed = comm.bcast(diag, 0, (self.my_idx == 0).then(|| pack(&z, 0)));
+        let mut alpha = vec![0.0f64; k * m];
+        for (ai, &a) in active.iter().enumerate() {
+            alpha[a * m..(a + 1) * m].copy_from_slice(&packed[ai * m..(ai + 1) * m]);
+        }
 
         // Center norms c_a = α_aᵀWα_a: the owner of column t computes
         // row_t = Σ_u W[t][u]·α[u] from its stored full column t (W is
         // bitwise symmetric) and the term α[t]·row_t; the terms are
         // allgathered and summed in ascending t on every rank —
-        // exactly the scalar accumulation.
+        // exactly the scalar accumulation. Inactive clusters' terms are
+        // exactly zero on the scalar path and are never computed or
+        // shipped here.
         let owned = self.bc.owned_panels(self.my_idx);
+        let ka = active.len();
         let mut local_terms: Vec<f64> =
-            Vec::with_capacity(k * self.bc.owned_cols(self.my_idx));
+            Vec::with_capacity(ka * self.bc.owned_cols(self.my_idx));
         for (pi, &t_panel) in owned.iter().enumerate() {
             let (lo, hi) = self.bc.panel_bounds(t_panel);
             for lc in 0..hi - lo {
                 let c = lo + lc;
                 let wcol = &self.panels.cols[pi][lc * m..(lc + 1) * m];
-                for a in 0..k {
+                for &a in &active {
                     let al = &alpha[a * m..(a + 1) * m];
                     let mut row = 0.0f64;
                     for u in 0..m {
@@ -445,17 +538,95 @@ impl DistSpdSolver {
             }
         }
         let term_parts = comm.allgather(diag, local_terms);
-        let terms = unpack_panel_allgather(&self.bc, &term_parts, k);
+        let terms = unpack_panel_allgather(&self.bc, &term_parts, ka);
         let mut cvec = vec![0.0f32; k];
-        for a in 0..k {
+        for (ai, &a) in active.iter().enumerate() {
             let mut s = 0.0f64;
             for t in 0..m {
-                s += terms[t * k + a];
+                s += terms[t * ka + ai];
             }
             cvec[a] = s as f32;
         }
         (alpha, cvec)
     }
+}
+
+/// Driver-side solve over a **complete panel set** (one
+/// [`DistSpdSolver`] per diagonal index, ascending): the streaming
+/// driver's substitute for the scalar [`SpdSolver`] after the
+/// distributed stream-init removed its m²-f64 host factor. Walks the
+/// factor and W columns through their owners without ever assembling
+/// either matrix, performing **exactly the scalar operation sequence**
+/// (row-major j-ascending forward, j-ascending backward against column
+/// tails, ascending-u center-norm accumulation over the bitwise-
+/// symmetric W columns) — so the output is bit-identical to
+/// `solve_alpha_weighted(&SpdSolver::factor(w), ...)` on the same W.
+/// Used only for rare driver-side classifies (undersized tails,
+/// reservoir refresh re-expression); per-batch solves stay on the
+/// collective pipeline.
+pub fn host_solve_alpha_weighted_panels(
+    solvers: &[DistSpdSolver],
+    b: &[f32],
+    weights: &[f64],
+    k: usize,
+) -> (Vec<f64>, Vec<f32>) {
+    assert!(!solvers.is_empty(), "panel-set solve needs at least one solver");
+    let bc = solvers[0].bc;
+    let m = bc.m();
+    assert_eq!(solvers.len(), bc.q(), "one solver per diagonal index");
+    debug_assert_eq!(b.len(), k * m);
+    debug_assert_eq!(weights.len(), k);
+    // Per-column views, resolved once: column c lives on the owner of
+    // its panel (each solver asserts it holds what it is asked for).
+    let lcols: Vec<&[f64]> =
+        (0..m).map(|c| solvers[bc.owner(bc.panel_of(c))].factor_col(c)).collect();
+    let wcols: Vec<&[f32]> =
+        (0..m).map(|c| solvers[bc.owner(bc.panel_of(c))].w_col(c)).collect();
+
+    let mut alpha = vec![0.0f64; k * m];
+    for a in 0..k {
+        if weights[a] <= 0.0 {
+            continue;
+        }
+        let inv = 1.0 / weights[a];
+        let rhs: Vec<f64> = b[a * m..(a + 1) * m].iter().map(|&v| v as f64 * inv).collect();
+        // Forward: L y = rhs, the scalar row loop with l[i][j] read as
+        // column j's packed tail entry.
+        let mut y = vec![0.0f64; m];
+        for i in 0..m {
+            let mut s = rhs[i];
+            for (j, &yj) in y.iter().enumerate().take(i) {
+                s -= lcols[j][i - j] * yj;
+            }
+            y[i] = s / lcols[i][0];
+        }
+        // Backward: Lᵀ x = y; l[j][i] is column i's entry at row j.
+        let mut x = vec![0.0f64; m];
+        for i in (0..m).rev() {
+            let mut s = y[i];
+            for j in i + 1..m {
+                s -= lcols[i][j - i] * x[j];
+            }
+            x[i] = s / lcols[i][0];
+        }
+        alpha[a * m..(a + 1) * m].copy_from_slice(&x);
+    }
+    let mut cvec = vec![0.0f32; k];
+    for a in 0..k {
+        let al = &alpha[a * m..(a + 1) * m];
+        let mut s = 0.0f64;
+        for t in 0..m {
+            // W[t][u] = W[u][t] (bitwise symmetry) = column t, row u;
+            // u ascends, the scalar accumulation order.
+            let mut row = 0.0f64;
+            for (wv, &alu) in wcols[t].iter().zip(al.iter()) {
+                row += *wv as f64 * alu;
+            }
+            s += al[t] * row;
+        }
+        cvec[a] = s as f32;
+    }
+    (alpha, cvec)
 }
 
 /// One distributed factorization attempt at a fixed ridge: panel
@@ -504,7 +675,7 @@ fn try_cholesky_dist(
         let (lo, hi) = bc.panel_bounds(p);
         let offs = lower_offsets(m, lo, hi);
         let payload = if owner == my_idx && !failed {
-            let a = &mut work[p / bc.q()];
+            let a = &mut work[bc.panel_index(p)];
             let mut ok = true;
             'cols: for lc in 0..hi - lo {
                 let c = lo + lc;
@@ -813,6 +984,91 @@ mod tests {
                 assert_eq!(cvec, want_cvec, "q={q} idx={idx}");
             }
         }
+    }
+
+    /// The driver-side panel-set solve must be bit-identical to the
+    /// replicated scalar solve — it is what classifies tail batches
+    /// once the stream no longer holds a host factor.
+    #[test]
+    fn host_panel_solve_bitwise_matches_replicated() {
+        use crate::comm::World;
+        let mut rng = Rng::new(14);
+        let m = 19; // ragged panels
+        let k = 3;
+        let a = DenseMatrix::random(m, m, &mut rng);
+        let mut w = crate::dense::ops::matmul_nt(&a, &a);
+        for i in 0..m {
+            w.set(i, i, w.get(i, i) + 0.25);
+            for j in 0..i {
+                let v = w.get(i, j);
+                w.set(j, i, v);
+            }
+        }
+        let b: Vec<f32> = (0..k * m).map(|x| ((x * 5 % 11) as f32) - 4.0).collect();
+        let weights = vec![2.0f64, 0.0, 5.5];
+        let scalar = SpdSolver::factor(&w);
+        let (want_alpha, want_cvec) =
+            super::super::solve_alpha_weighted(&scalar, &w, &b, &weights, k);
+        for q in [1usize, 2, 3] {
+            let bc = BlockCyclic::new(m, q);
+            let wref = &w;
+            let (solvers, _) = World::run(q, |comm| {
+                let diag = Group::world(q);
+                let panels = WPanels::from_full(wref, bc, comm.rank());
+                DistSpdSolver::factor_dist(comm, &diag, panels)
+            });
+            let (alpha, cvec) = host_solve_alpha_weighted_panels(&solvers, &b, &weights, k);
+            assert_eq!(alpha, want_alpha, "q={q}");
+            assert_eq!(cvec, want_cvec, "q={q}");
+        }
+    }
+
+    /// The active-set restriction must shrink the pipelined token:
+    /// with half the clusters at zero weight, the counted solve bytes
+    /// sit well below the all-active volume of the same call — while
+    /// the output stays bitwise equal to the replicated solve (pinned
+    /// above by `dist_solve_bitwise_matches_replicated`).
+    #[test]
+    fn active_set_solve_moves_fewer_bytes() {
+        use crate::comm::World;
+        let mut rng = Rng::new(15);
+        let m = 24;
+        let k = 8;
+        let q = 4;
+        let a = DenseMatrix::random(m, m, &mut rng);
+        let mut w = crate::dense::ops::matmul_nt(&a, &a);
+        for i in 0..m {
+            w.set(i, i, w.get(i, i) + 1.0);
+            for j in 0..i {
+                let v = w.get(i, j);
+                w.set(j, i, v);
+            }
+        }
+        let b: Vec<f32> = (0..k * m).map(|x| ((x * 3 % 7) as f32) - 2.0).collect();
+        let full: Vec<f64> = (1..=k).map(|a| a as f64).collect();
+        let mut skewed = full.clone();
+        for a in 0..k / 2 {
+            skewed[a] = 0.0;
+        }
+        let bc = BlockCyclic::new(m, q);
+        let run = |weights: &[f64]| -> u64 {
+            let (wref, bref) = (&w, &b);
+            let (_, stats) = World::run(q, |comm| {
+                let diag = Group::world(q);
+                let panels = WPanels::from_full(wref, bc, comm.rank());
+                let solver = DistSpdSolver::factor_dist(comm, &diag, panels);
+                comm.set_phase("solve");
+                solver.solve_alpha_weighted(comm, &diag, bref, weights, k)
+            });
+            stats.iter().map(|s| s.get("solve").bytes).sum()
+        };
+        let full_bytes = run(&full);
+        let skewed_bytes = run(&skewed);
+        assert!(
+            skewed_bytes * 3 <= full_bytes * 2,
+            "half-active solve must move well under 2/3 of the all-active bytes \
+             (skewed {skewed_bytes} vs full {full_bytes})"
+        );
     }
 
     #[test]

@@ -31,6 +31,28 @@
 //! — at stream init, and again only on a reservoir refresh — never per
 //! batch.
 //!
+//! The 1.5D stream's one-time landmark movement rides the batch path's
+//! **grid-row block gather** ([`crate::gemm::block_gather_landmark_rows`]):
+//! counts allgather → alltoallv of rows to the block diagonals → row
+//! broadcast, so an off-diagonal rank only ever holds (and is charged
+//! for) its m/√P × d landmark slice — never the full m×d L the old
+//! world allgather replicated. The carried `StreamModel` keeps the
+//! per-grid-row block slices between batches, so steady-state batches
+//! touch no landmark communication at all.
+//!
+//! Under the default block-cyclic W factorization, **stream-init is
+//! fully distributed**: the first batch's Gram pipeline builds W's
+//! rows on the diagonal group, redistributes them into block-cyclic
+//! panels, and factors them collectively
+//! ([`DistSpdSolver::factor_dist`], phase "wfactor") — exactly the
+//! batch fit's schedule. The driver never materializes the m×m W or
+//! its m²-f64 host factor; the rare driver-side classifies (undersized
+//! tails, refresh re-expression) walk the panel set instead
+//! ([`crate::approx::solve::host_solve_alpha_weighted_panels`],
+//! bit-identical). The replicated-W modes (the 1D layout, and 1.5D
+//! with [`WFactorization::Replicated`]) keep the shared host factor,
+//! which is inherent to replication.
+//!
 //! **Exactness anchor:** a stream that delivers everything in one batch
 //! runs the identical collective and arithmetic sequence as
 //! [`super::fit`] — assignments and iteration counts are bit-identical
@@ -51,13 +73,14 @@ use crate::comm::{Comm, CommStats, Grid2D, Group, World};
 use crate::data::landmarks::{self, LandmarkReservoir};
 use crate::data::stream::PointSource;
 use crate::dense::DenseMatrix;
+use crate::gemm::{block_gather_landmark_rows, gemm_15d_landmark_gram, landmark_block_counts};
 use crate::kkmeans::{loop_common, RankOutput};
 use crate::layout::{harness, BlockCyclic, Partition, WFactorization};
 use crate::model::MemTracker;
 use crate::util::{part, timing, timing::Stopwatch};
 use crate::VivaldiError;
 
-use super::solve::{DistSpdSolver, SpdSolver};
+use super::solve::{host_solve_alpha_weighted_panels, DiagW, DistSpdSolver, SpdSolver};
 use super::{
     alpha_transpose, assemble_diag_blocks, cluster_row_sums, pack_alpha_block,
     solve_alpha_weighted, ApproxConfig, LandmarkLayout,
@@ -83,6 +106,14 @@ pub struct StreamConfig {
     /// Re-seed the landmarks from the reservoir every this many batches
     /// (0 = never). Requires `reservoir > 0`.
     pub refresh_every: usize,
+    /// Per-batch inner-iteration schedule: driven batch `b` runs up to
+    /// `inner_iters[min(b, len-1)]` reduced-rank iterations (the last
+    /// entry repeats for the rest of the stream). Empty = every batch
+    /// uses `base.max_iters`. `[1]` is **pure online mode**: one
+    /// classify-and-update pass per batch — the classic
+    /// quality-vs-throughput knob (CLI `--inner-iters`). Entries must
+    /// be ≥ 1; tail batches too small to shard still run zero.
+    pub inner_iters: Vec<usize>,
 }
 
 impl Default for StreamConfig {
@@ -93,6 +124,19 @@ impl Default for StreamConfig {
             decay: 1.0,
             reservoir: 0,
             refresh_every: 0,
+            inner_iters: Vec::new(),
+        }
+    }
+}
+
+impl StreamConfig {
+    /// Inner-iteration cap for driven batch `b` (0-indexed among the
+    /// sharded batches): the schedule entry, with the last entry
+    /// repeating — or `base.max_iters` with no schedule.
+    fn inner_cap(&self, b: usize) -> usize {
+        match self.inner_iters.as_slice() {
+            [] => self.base.max_iters,
+            s => s[b.min(s.len() - 1)],
         }
     }
 }
@@ -114,6 +158,9 @@ pub struct StreamFitResult {
     /// Max peak tracked memory over ranks and batches — ∝ batch size,
     /// independent of the stream length.
     pub peak_mem: u64,
+    /// Per-rank peak tracked memory (max over batches) — off-diagonal
+    /// 1.5D ranks stay at the C-tile + m·d/√P landmark-block scale.
+    pub rank_peaks: Vec<u64>,
     /// Per-rank communication ledgers merged across batches.
     pub comm_stats: Vec<CommStats>,
     /// Per-rank phase timings merged across batches.
@@ -125,28 +172,48 @@ pub struct StreamFitResult {
     pub n_total: usize,
 }
 
-/// The carried streaming state: landmarks, the once-factored W, and the
-/// decayed per-cluster model.
-struct StreamModel {
-    landmarks: DenseMatrix,
+/// The shared host-side W state of the **replicated** factorization
+/// modes (the 1D layout, and 1.5D with
+/// [`WFactorization::Replicated`]): one copy serves every simulated
+/// rank, which is exactly what replication means. The block-cyclic
+/// 1.5D stream carries no such state — its factor lives only in the
+/// per-diagonal panel solvers.
+struct HostW {
     w: DenseMatrix,
     solver: SpdSolver,
-    /// Per-diagonal-rank distributed solvers for the 1.5D
-    /// block-cyclic layout, built **once per landmark set** (empty for
-    /// the 1D layout, non-square rank counts, or replicated W — the
-    /// replicated solve dispatches straight to `solver`/`w` above, so
-    /// no per-diagonal state is duplicated): entry `i` carries exactly
-    /// the panel slices grid diagonal `i` owns. Batches borrow these
-    /// instead of re-slicing O(m²) state per batch.
+}
+
+/// The carried streaming state: landmarks, the once-factored W (host
+/// replica or distributed panels), and the decayed per-cluster model.
+struct StreamModel {
+    /// The driver's m×d landmark set — the reservoir/refresh working
+    /// copy and the source every per-rank slice is cut from.
+    landmarks: DenseMatrix,
+    /// 1.5D layouts: the q grid-row landmark blocks, sliced **once per
+    /// landmark set** after the init batch's block gather — steady-
+    /// state batches borrow block `i` instead of the full set, so an
+    /// off-diagonal rank's landmark state is m/√P × d.
+    l_blocks: Vec<DenseMatrix>,
+    /// Host W + scalar factor for the replicated modes; `None` under
+    /// the distributed (block-cyclic 1.5D) stream-init, which never
+    /// materializes W on the driver.
+    host: Option<HostW>,
+    /// Per-diagonal-rank distributed solvers for the 1.5D block-cyclic
+    /// layout, handed back by the init batch's collective
+    /// factorization: entry `i` carries exactly the panel slices grid
+    /// diagonal `i` owns. Batches borrow these instead of holding any
+    /// O(m²) state per batch.
     dist_solvers: Vec<DistSpdSolver>,
     /// k×m decayed per-cluster C-row sums S.
     sums: Vec<f32>,
     /// k decayed cluster weights N (fractional once γ < 1).
     weights: Vec<f64>,
     has_history: bool,
-    /// Whether a batch already paid the one-time O(m·d) landmark
-    /// replication for the current landmark set.
-    replicated: bool,
+    /// Whether a batch already paid the one-time per-landmark-set
+    /// work: the grid-row block gather (1.5D) or full replication
+    /// (1D), plus the distributed W factorization in block-cyclic
+    /// mode.
+    initialized: bool,
 }
 
 /// γ-decayed history handed to a batch (already multiplied by γ; the
@@ -166,47 +233,45 @@ impl StreamModel {
     fn from_landmarks(
         landmarks: DenseMatrix,
         cfg: &StreamConfig,
-        p: usize,
         backend: &dyn ComputeBackend,
     ) -> StreamModel {
         let k = cfg.base.k;
         let m = landmarks.rows();
-        let l_norms =
-            if cfg.base.kernel.needs_norms() { landmarks.row_sq_norms() } else { Vec::new() };
-        // The same fused Gram + kernel product the batch pipelines run,
-        // so W (and its factor) is bit-identical to theirs.
-        let w = backend.gram_tile(&landmarks, &landmarks, &cfg.base.kernel, &l_norms, &l_norms);
-        let solver = SpdSolver::factor(&w);
-        // Per-diagonal panel solvers, paid once per landmark set — the
-        // streamed inheritance of the distributed factor. (Replicated
-        // W needs no per-diagonal state: every rank solves against the
-        // shared `solver`/`w`.)
-        let dist_solvers = if cfg.base.layout == LandmarkLayout::OneFiveD
-            && cfg.base.w_fact == WFactorization::BlockCyclic
-            && crate::util::is_perfect_square(p)
-        {
-            let q = crate::util::isqrt_exact(p);
-            let bc = BlockCyclic::new(m, q);
-            (0..q).map(|i| DistSpdSolver::from_host(&solver, &w, bc, i)).collect()
-        } else {
-            Vec::new()
-        };
+        // Distributed stream-init (the 1.5D block-cyclic default)
+        // computes and factors W **on the first batch's diagonal
+        // group** — the driver holds neither the m×m W nor its m²-f64
+        // factor. The replicated modes keep the shared host factor
+        // (one copy standing in for every replica).
+        let dist_init = cfg.base.layout == LandmarkLayout::OneFiveD
+            && cfg.base.w_fact == WFactorization::BlockCyclic;
+        let host = (!dist_init).then(|| {
+            let l_norms =
+                if cfg.base.kernel.needs_norms() { landmarks.row_sq_norms() } else { Vec::new() };
+            // The same fused Gram + kernel product the batch pipelines
+            // run, so W (and its factor) is bit-identical to theirs.
+            let w =
+                backend.gram_tile(&landmarks, &landmarks, &cfg.base.kernel, &l_norms, &l_norms);
+            let solver = SpdSolver::factor(&w);
+            HostW { w, solver }
+        });
         StreamModel {
             landmarks,
-            w,
-            solver,
-            dist_solvers,
+            l_blocks: Vec::new(),
+            host,
+            dist_solvers: Vec::new(),
             sums: vec![0.0; k * m],
             weights: vec![0.0; k],
             has_history: false,
-            replicated: false,
+            initialized: false,
         }
     }
 
-    /// The once-per-landmark-set coefficient solve as grid diagonal
-    /// `i` of the 1.5D layout: distributed against rank `i`'s panel
-    /// slices in block-cyclic mode (collective over `diag`), or local
-    /// against the shared replicated factor. Bit-identical either way.
+    /// The per-batch coefficient solve as grid diagonal `i` of the
+    /// 1.5D layout: distributed against rank `i`'s panel slices in
+    /// block-cyclic mode (collective over `diag`; `fresh` is the
+    /// solver the init batch just factored, before the driver installs
+    /// it), or local against the shared replicated factor.
+    /// Bit-identical either way.
     #[allow(clippy::too_many_arguments)]
     fn diag_solve(
         &self,
@@ -214,19 +279,35 @@ impl StreamModel {
         diag: &Group,
         i: usize,
         wfact: WFactorization,
+        fresh: Option<&DistSpdSolver>,
         b: &[f32],
         weights: &[f64],
         k: usize,
     ) -> (Vec<f64>, Vec<f32>) {
         match wfact {
             WFactorization::Replicated => {
-                solve_alpha_weighted(&self.solver, &self.w, b, weights, k)
+                let h = self.host.as_ref().expect("replicated modes keep the host factor");
+                solve_alpha_weighted(&h.solver, &h.w, b, weights, k)
             }
-            WFactorization::BlockCyclic => self
-                .dist_solvers
-                .get(i)
-                .expect("fit_stream builds one panel solver per grid diagonal")
+            WFactorization::BlockCyclic => fresh
+                .or_else(|| self.dist_solvers.get(i))
+                .expect("the init batch factors one panel solver per grid diagonal")
                 .solve_alpha_weighted(comm, diag, b, weights, k),
+        }
+    }
+
+    /// Driver-side solve from the carried sums: against the host
+    /// factor (replicated modes) or the complete panel set
+    /// (distributed stream-init). Bit-identical either way.
+    fn host_solve(&self, k: usize) -> (Vec<f64>, Vec<f32>) {
+        match &self.host {
+            Some(h) => solve_alpha_weighted(&h.solver, &h.w, &self.sums, &self.weights, k),
+            None => host_solve_alpha_weighted_panels(
+                &self.dist_solvers,
+                &self.sums,
+                &self.weights,
+                k,
+            ),
         }
     }
 
@@ -268,8 +349,7 @@ impl StreamModel {
     ) -> (DenseMatrix, Vec<u32>, Vec<f32>) {
         let k = cfg.base.k;
         let m = self.landmarks.rows();
-        let (alpha, cvec) =
-            solve_alpha_weighted(&self.solver, &self.w, &self.sums, &self.weights, k);
+        let (alpha, cvec) = self.host_solve(k);
         let (pn, ln) = if cfg.base.kernel.needs_norms() {
             (points.row_sq_norms(), self.landmarks.row_sq_norms())
         } else {
@@ -330,6 +410,11 @@ pub fn fit_stream_with_backend(
             cfg.reservoir
         )));
     }
+    if cfg.inner_iters.iter().any(|&x| x == 0) {
+        return Err(VivaldiError::InvalidConfig(
+            "--inner-iters entries must be >= 1 (1 = pure online mode)".into(),
+        ));
+    }
     if cfg.base.layout == LandmarkLayout::OneFiveD {
         // Same up-front shape validation as the batch fit; the point
         // dimension is per batch, checked again when each batch lands.
@@ -342,6 +427,9 @@ pub fn fit_stream_with_backend(
     let mut acc = harness::StreamAccumulator::new(p);
     let mut refreshes = 0usize;
     let mut batch_index = 0usize;
+    // Driven (sharded) batches consumed so far — the index into the
+    // per-batch inner-iteration schedule.
+    let mut driven_batches = 0usize;
 
     loop {
         let batch = match source.next_batch(cfg.batch) {
@@ -387,7 +475,6 @@ pub fn fit_stream_with_backend(
                 model.as_mut().expect("model exists past the first batch"),
                 reservoir.as_ref().expect("refresh_every requires a reservoir"),
                 cfg,
-                p,
                 backend,
                 refreshes,
             );
@@ -396,25 +483,32 @@ pub fn fit_stream_with_backend(
 
         let mdl = model.as_ref().expect("model initialized on the first batch");
         let decayed = mdl.decayed(cfg.decay);
-        let replicate_l = !mdl.replicated;
+        let init = !mdl.initialized;
+        let max_iters = cfg.inner_cap(driven_batches);
         let (rank_results, comm_stats) = World::run(p, |comm| match cfg.base.layout {
             LandmarkLayout::OneD => {
-                run_batch_1d(comm, &batch, mdl, decayed.as_ref(), cfg, backend, replicate_l)
+                run_batch_1d(comm, &batch, mdl, decayed.as_ref(), cfg, backend, init, max_iters)
             }
             LandmarkLayout::OneFiveD => {
-                run_batch_15d(comm, &batch, mdl, decayed.as_ref(), cfg, backend, replicate_l)
+                run_batch_15d(comm, &batch, mdl, decayed.as_ref(), cfg, backend, init, max_iters)
             }
         });
 
         // Split the per-rank payloads, then reuse the batch assembly
-        // (collective-failure propagation included).
+        // (collective-failure propagation included). Diagonal ranks of
+        // an init batch additionally hand back their freshly factored
+        // panel solver (ascending rank order = ascending diag index).
         let mut fin = None;
+        let mut solvers: Vec<DistSpdSolver> = Vec::new();
         let outs: Vec<Result<RankOutput, VivaldiError>> = rank_results
             .into_iter()
             .map(|r| {
-                r.map(|(out, f)| {
+                r.map(|(out, f, s)| {
                     if let Some(f) = f {
                         fin = Some(f);
+                    }
+                    if let Some(s) = s {
+                        solvers.push(s);
                     }
                     out
                 })
@@ -424,9 +518,28 @@ pub fn fit_stream_with_backend(
         let fin = fin.expect("rank 0 reports the batch statistics");
         let mdl = model.as_mut().expect("model initialized on the first batch");
         mdl.absorb(decayed, fin);
-        mdl.replicated = true;
+        if init {
+            if cfg.base.layout == LandmarkLayout::OneFiveD {
+                // The per-grid-row landmark blocks the init batch
+                // gathered, sliced once so steady-state batches borrow
+                // them with no landmark communication at all.
+                let q = crate::util::isqrt_exact(p);
+                mdl.l_blocks = (0..q)
+                    .map(|l| {
+                        let (lo, hi) = part::bounds(m, q, l);
+                        mdl.landmarks.row_block(lo, hi)
+                    })
+                    .collect();
+                if cfg.base.w_fact == WFactorization::BlockCyclic {
+                    debug_assert_eq!(solvers.len(), q, "one panel solver per diagonal");
+                    mdl.dist_solvers = solvers;
+                }
+            }
+            mdl.initialized = true;
+        }
         acc.absorb(fit);
         batch_index += 1;
+        driven_batches += 1;
     }
 
     if acc.batches() == 0 {
@@ -440,6 +553,7 @@ pub fn fit_stream_with_backend(
         objective_curve: acc.objective_curve,
         converged: acc.converged,
         peak_mem: acc.peak_mem,
+        rank_peaks: acc.rank_peaks,
         comm_stats: acc.comm_stats,
         timings: acc.timings,
         ranks: p,
@@ -489,7 +603,7 @@ fn init_model(
             landmarks::landmark_rows(first_batch, &lidx)
         }
     };
-    Ok(StreamModel::from_landmarks(landmarks, cfg, p, backend))
+    Ok(StreamModel::from_landmarks(landmarks, cfg, backend))
 }
 
 /// Re-seed the landmarks from the reservoir and translate the carried
@@ -501,7 +615,6 @@ fn refresh_model(
     model: &mut StreamModel,
     reservoir: &LandmarkReservoir,
     cfg: &StreamConfig,
-    p: usize,
     backend: &dyn ComputeBackend,
     refresh_ordinal: usize,
 ) {
@@ -518,7 +631,7 @@ fn refresh_model(
     let new_landmarks = reservoir.refresh_kmeanspp(m, seed);
     let had_history = model.has_history;
     let total_weight: f64 = model.weights.iter().sum();
-    let mut next = StreamModel::from_landmarks(new_landmarks, cfg, p, backend);
+    let mut next = StreamModel::from_landmarks(new_landmarks, cfg, backend);
     if had_history && total_weight > 0.0 && snap.rows() > 0 {
         let (pn, ln) = if cfg.base.kernel.needs_norms() {
             (snap.row_sq_norms(), next.landmarks.row_sq_norms())
@@ -536,8 +649,9 @@ fn refresh_model(
         next.weights = counts.iter().map(|&c| c as f64 * scale).collect();
         next.has_history = true;
     }
-    // The new landmark set must be re-replicated by the next batch.
-    next.replicated = false;
+    // The next batch must re-run the one-time init for the new
+    // landmark set (block gather + distributed factorization).
+    next.initialized = false;
     *model = next;
 }
 
@@ -559,9 +673,15 @@ fn effective_stats(
     }
 }
 
-/// Replicate the landmark rows through the fabric exactly as the batch
-/// Gram pipelines do (allgather of per-rank slices, phase "gemm") —
-/// paid once per landmark set, the first time a batch runs on it.
+/// Replicate the landmark rows through the fabric exactly as the 1D
+/// batch Gram pipeline does (allgather of per-rank slices, phase
+/// "gemm") — paid once per landmark set, the first time a batch runs
+/// on it. **1D layout only**: every 1D rank genuinely needs all m
+/// landmark rows for its n_p×m C block, so full replication is the
+/// floor there. The 1.5D stream no longer comes through here — it
+/// rides the batch path's grid-row block gather
+/// ([`block_gather_landmark_rows`]), and its off-diagonal ranks hold
+/// only m/√P × d of L.
 fn replicate_landmarks(
     comm: &Comm,
     world: &Group,
@@ -588,13 +708,15 @@ fn run_batch_1d(
     hist: Option<&History>,
     cfg: &StreamConfig,
     backend: &dyn ComputeBackend,
-    replicate_l: bool,
-) -> Result<(RankOutput, Option<BatchFinal>), VivaldiError> {
+    init: bool,
+    max_iters: usize,
+) -> Result<(RankOutput, Option<BatchFinal>, Option<DistSpdSolver>), VivaldiError> {
     let p = comm.size();
     let bn = batch.rows();
     let k = cfg.base.k;
     let m = model.landmarks.rows();
     let d = model.landmarks.cols();
+    let hostw = model.host.as_ref().expect("the 1D layout always keeps the host factor");
     let world = Group::world(p);
     let (_mem, tracker) = harness::rank_tracker(comm.rank(), cfg.base.mem);
     let layout = Partition::one_d(bn, p);
@@ -626,7 +748,7 @@ fn run_batch_1d(
     }
 
     let replicated;
-    let landmarks: &DenseMatrix = if replicate_l {
+    let landmarks: &DenseMatrix = if init {
         replicated = replicate_landmarks(comm, &world, &model.landmarks, &mut sw);
         &replicated
     } else {
@@ -648,7 +770,7 @@ fn run_batch_1d(
         // Later batches: warm start — classify under the carried model.
         Some(h) => {
             let (alpha, cvec) =
-                solve_alpha_weighted(&model.solver, &model.w, &h.sums, &h.weights, k);
+                solve_alpha_weighted(&hostw.solver, &hostw.w, &h.sums, &h.weights, k);
             let alpha_t = alpha_transpose(&alpha, m, k);
             let mut e = DenseMatrix::zeros(hi - lo, k);
             backend.matmul_nn_acc(&c_block, &alpha_t, &mut e);
@@ -657,14 +779,14 @@ fn run_batch_1d(
     };
     let mut sizes = loop_common::global_sizes(comm, &world, &assign, k);
 
-    let outcome = harness::drive_loop(cfg.base.max_iters, cfg.base.converge_on_stable, |_| {
+    let outcome = harness::drive_loop(max_iters, cfg.base.converge_on_stable, |_| {
         let (e_local, cvec) = sw.time("update", || {
             comm.set_phase("update");
             let b_batch =
                 comm.allreduce_sum_f32(&world, cluster_row_sums(&c_block, &assign, k, m));
             let (b_eff, weights) = effective_stats(&b_batch, &sizes, hist);
             let (alpha, cvec) =
-                solve_alpha_weighted(&model.solver, &model.w, &b_eff, &weights, k);
+                solve_alpha_weighted(&hostw.solver, &hostw.w, &b_eff, &weights, k);
             let alpha_t = alpha_transpose(&alpha, m, k);
             let mut e = DenseMatrix::zeros(c_block.rows(), k);
             backend.matmul_nn_acc(&c_block, &alpha_t, &mut e);
@@ -684,14 +806,22 @@ fn run_batch_1d(
     let b_final = comm.allreduce_sum_f32(&world, cluster_row_sums(&c_block, &assign, k, m));
     let sizes_final = loop_common::global_sizes(comm, &world, &assign, k);
     let fin = (comm.rank() == 0).then_some(BatchFinal { sums: b_final, sizes: sizes_final });
-    Ok((harness::finish_rank(assign, sw, outcome, &tracker), fin))
+    Ok((harness::finish_rank(assign, sw, outcome, &tracker), fin, None))
 }
 
 /// One mini-batch on the 1.5D landmark layout: the batch's C tiled on
 /// the √P×√P grid, W (and its once-per-stream factorization) only on
-/// the diagonal — one replica per grid column — and the batch path's
-/// sharded coefficient exchange with the decayed history folded in at
-/// the diagonal solve.
+/// the diagonal — one replica per grid column, or block-cyclic panels
+/// under the default — and the batch path's sharded coefficient
+/// exchange with the decayed history folded in at the diagonal solve.
+///
+/// The `init` batch pays the one-time per-landmark-set work: the
+/// grid-row block gather of L (off-diagonals receive only their
+/// m/√P × d slice), and — in block-cyclic mode — the full batch Gram
+/// pipeline plus the collective W factorization (`factor_dist`, phase
+/// "wfactor"), whose per-diagonal solvers are handed back to the
+/// driver. Steady-state batches borrow the model's landmark block and
+/// panel solvers and touch no landmark or W communication at all.
 #[allow(clippy::too_many_arguments)]
 fn run_batch_15d(
     comm: &Comm,
@@ -700,13 +830,15 @@ fn run_batch_15d(
     hist: Option<&History>,
     cfg: &StreamConfig,
     backend: &dyn ComputeBackend,
-    replicate_l: bool,
-) -> Result<(RankOutput, Option<BatchFinal>), VivaldiError> {
+    init: bool,
+    max_iters: usize,
+) -> Result<(RankOutput, Option<BatchFinal>, Option<DistSpdSolver>), VivaldiError> {
     let p = comm.size();
     let bn = batch.rows();
     let k = cfg.base.k;
     let m = model.landmarks.rows();
     let d = model.landmarks.cols();
+    let wfact = cfg.base.w_fact;
     let world = Group::world(p);
     let grid = Grid2D::new(p).expect("fit_stream checked square grid");
     let q = grid.q();
@@ -724,49 +856,96 @@ fn run_batch_15d(
     let bc = BlockCyclic::new(m, q);
     let mut sw = Stopwatch::new();
 
-    // Collective memory check: transient L + C tile, plus the W state
-    // only on the diagonal ranks — the full matrix (replicated) or its
-    // block-cyclic panels (~m²/q, the default). The k×m decayed model
-    // is driver-held, as in the 1D batch function.
-    comm.set_phase("gemm");
-    let w_resident = if is_diag {
-        match cfg.base.w_fact {
-            WFactorization::Replicated => MemTracker::matrix_f32(m, m),
-            WFactorization::BlockCyclic => bc.w_state_bytes(i),
-        }
-    } else {
-        0
+    // Landmark and W state for this batch. The init batch in
+    // block-cyclic mode runs the batch fit's own Gram pipeline — block
+    // gather, diagonal W-row build, panel redistribution — and then
+    // factors the panels collectively: the fully distributed
+    // stream-init (no driver-side W anywhere, and the memory charges
+    // are the batch pipeline's own).
+    //
+    // Both init paths feed the gather from the same owned slice: the
+    // 1D deal of the driver's landmark rows over the world.
+    let owned_landmark_rows = || {
+        let (olo, ohi) = part::bounds(m, p, comm.rank());
+        model.landmarks.row_block(olo, ohi)
     };
-    let need = MemTracker::matrix_f32(m, d) + MemTracker::matrix_f32(n_j, m_i) + w_resident;
-    let ok = tracker.try_alloc(need, "1.5D stream batch: L + C tile (+ diagonal W state)");
-    if !comm.allreduce_and(&world, ok) {
-        if ok {
-            tracker.free(need);
-        }
-        return Err(VivaldiError::OutOfMemory {
-            rank: comm.rank(),
-            requested: need,
-            budget: tracker.budget(),
-            what: "1.5D stream batch: L + C tile (+ diagonal W state)".into(),
-        });
-    }
+    let (c_tile, fresh_solver): (DenseMatrix, Option<DistSpdSolver>) =
+        if init && wfact == WFactorization::BlockCyclic {
+            let own_rows = owned_landmark_rows();
+            let (c_tile, w_state) = sw.time("gemm", || {
+                gemm_15d_landmark_gram(
+                    comm, &grid, &layout, &point_block, &own_rows, &cfg.base.kernel, backend,
+                    &tracker, wfact,
+                )
+            })?;
+            let solver = sw.time("wfactor", || {
+                w_state.map(|state| {
+                    let DiagW::Panels(panels) = state else {
+                        unreachable!("block-cyclic gram returns panels")
+                    };
+                    comm.set_phase("wfactor");
+                    DistSpdSolver::factor_dist(comm, &diag_g, panels)
+                })
+            });
+            (c_tile, solver)
+        } else {
+            // Steady state, or the replicated-W init (which needs no W
+            // build on the ranks — the host replica stands in for every
+            // diagonal copy). Collective memory check: the m/√P × d
+            // landmark block + this batch's C tile, plus the resident W
+            // state on diagonals. The old full-L charge is gone — no
+            // rank holds the full landmark set anymore.
+            comm.set_phase("gemm");
+            let w_resident = if is_diag {
+                match wfact {
+                    WFactorization::Replicated => MemTracker::matrix_f32(m, m),
+                    WFactorization::BlockCyclic => bc.w_state_bytes(i),
+                }
+            } else {
+                0
+            };
+            let need =
+                MemTracker::matrix_f32(m_i, d) + MemTracker::matrix_f32(n_j, m_i) + w_resident;
+            let what = "1.5D stream batch: landmark block + C tile (+ diagonal W state)";
+            let ok = tracker.try_alloc(need, what);
+            if !comm.allreduce_and(&world, ok) {
+                if ok {
+                    tracker.free(need);
+                }
+                return Err(VivaldiError::OutOfMemory {
+                    rank: comm.rank(),
+                    requested: need,
+                    budget: tracker.budget(),
+                    what: what.into(),
+                });
+            }
 
-    let replicated;
-    let landmarks: &DenseMatrix = if replicate_l {
-        replicated = replicate_landmarks(comm, &world, &model.landmarks, &mut sw);
-        &replicated
-    } else {
-        &model.landmarks
-    };
-    let l_block = landmarks.row_block(llo, lhi);
-    let (row_norms, lb_norms) = if cfg.base.kernel.needs_norms() {
-        (point_block.row_sq_norms(), l_block.row_sq_norms())
-    } else {
-        (Vec::new(), Vec::new())
-    };
-    let c_tile = sw.time("gemm", || {
-        backend.gram_tile(&point_block, &l_block, &cfg.base.kernel, &row_norms, &lb_norms)
-    });
+            let gathered;
+            let l_block: &DenseMatrix = if init {
+                // Replicated-W init: pay the one-time grid-row block
+                // gather (counts allgather → alltoallv to block
+                // diagonals → row bcast), the same collective sequence
+                // as the batch Gram pipeline.
+                let own_rows = owned_landmark_rows();
+                gathered = sw.time("gemm", || {
+                    let (gm, my_off) = landmark_block_counts(comm, &world, own_rows.rows());
+                    debug_assert_eq!(gm, m);
+                    block_gather_landmark_rows(comm, &grid, &own_rows, my_off, gm, d)
+                });
+                &gathered
+            } else {
+                &model.l_blocks[i]
+            };
+            let (row_norms, lb_norms) = if cfg.base.kernel.needs_norms() {
+                (point_block.row_sq_norms(), l_block.row_sq_norms())
+            } else {
+                (Vec::new(), Vec::new())
+            };
+            let c_tile = sw.time("gemm", || {
+                backend.gram_tile(&point_block, l_block, &cfg.base.kernel, &row_norms, &lb_norms)
+            });
+            (c_tile, None)
+        };
 
     let (vlo, vhi) = layout.owned_range(comm.rank());
     comm.set_phase("update");
@@ -777,8 +956,16 @@ fn run_batch_15d(
             // iteration: diagonal solve from the history, α block along
             // the row, E reduce-scattered down the column.
             let payload = is_diag.then(|| {
-                let (alpha, cvec) = model
-                    .diag_solve(comm, &diag_g, i, cfg.base.w_fact, &h.sums, &h.weights, k);
+                let (alpha, cvec) = model.diag_solve(
+                    comm,
+                    &diag_g,
+                    i,
+                    wfact,
+                    fresh_solver.as_ref(),
+                    &h.sums,
+                    &h.weights,
+                    k,
+                );
                 pack_alpha_block(&alpha, &cvec, llo, lhi, m, k)
             });
             let flat = comm.bcast(&row_g, i, payload);
@@ -792,7 +979,7 @@ fn run_batch_15d(
     };
     let mut sizes = loop_common::global_sizes(comm, &world, &assign, k);
 
-    let outcome = harness::drive_loop(cfg.base.max_iters, cfg.base.converge_on_stable, |_| {
+    let outcome = harness::drive_loop(max_iters, cfg.base.converge_on_stable, |_| {
         let t0 = timing::clock_now();
         comm.set_phase("update");
 
@@ -814,8 +1001,16 @@ fn run_batch_15d(
             let b_block = b_red.expect("diagonal is the row-reduce root");
             let b = assemble_diag_blocks(&comm.allgather(&diag_g, b_block), k, m, q);
             let (b_eff, weights) = effective_stats(&b, &sizes, hist);
-            let (alpha, cvec) =
-                model.diag_solve(comm, &diag_g, i, cfg.base.w_fact, &b_eff, &weights, k);
+            let (alpha, cvec) = model.diag_solve(
+                comm,
+                &diag_g,
+                i,
+                wfact,
+                fresh_solver.as_ref(),
+                &b_eff,
+                &weights,
+                k,
+            );
             Some(pack_alpha_block(&alpha, &cvec, llo, lhi, m, k))
         } else {
             None
@@ -859,7 +1054,7 @@ fn run_batch_15d(
         sums: b_full.expect("rank 0 sits on the grid diagonal"),
         sizes: sizes_final,
     });
-    Ok((harness::finish_rank(assign, sw, outcome, &tracker), fin))
+    Ok((harness::finish_rank(assign, sw, outcome, &tracker), fin, fresh_solver))
 }
 
 #[cfg(test)]
@@ -907,6 +1102,9 @@ mod tests {
         assert!(matches!(run(&cfg, 1), Err(VivaldiError::InvalidConfig(_))));
         // bad decay.
         let cfg = StreamConfig { decay: 0.0, ..rings_cfg(8, 32) };
+        assert!(matches!(run(&cfg, 1), Err(VivaldiError::InvalidConfig(_))));
+        // zero entry in the inner-iteration schedule.
+        let cfg = StreamConfig { inner_iters: vec![2, 0], ..rings_cfg(8, 32) };
         assert!(matches!(run(&cfg, 1), Err(VivaldiError::InvalidConfig(_))));
         // first batch smaller than m.
         let cfg = rings_cfg(48, 32);
@@ -978,6 +1176,7 @@ mod tests {
             decay: 0.8,
             reservoir: 64,
             refresh_every: 2,
+            ..Default::default()
         };
         let run = || {
             let mut src = MatrixSource::new(&ds.points);
@@ -990,6 +1189,39 @@ mod tests {
         assert!(a.landmark_refreshes >= 1, "refresh must actually trigger");
         let nmi = crate::quality::nmi(&a.assignments, &ds.labels, 2);
         assert!(nmi > 0.85, "refresh must not wreck the clustering: nmi = {nmi}");
+    }
+
+    #[test]
+    fn inner_iter_schedule_caps_batches() {
+        // [3, 1]: the first driven batch runs up to 3 inner iterations,
+        // every later one exactly 1 — pure online mode after warm-up.
+        let ds = synth::gaussian_blobs(256, 4, 2, 4.0, 47);
+        let cfg = StreamConfig {
+            base: ApproxConfig {
+                k: 2,
+                m: 16,
+                max_iters: 30,
+                converge_on_stable: false,
+                ..Default::default()
+            },
+            batch: 64,
+            inner_iters: vec![3, 1],
+            ..Default::default()
+        };
+        let mut src = MatrixSource::new(&ds.points);
+        let out = fit_stream(4, &mut src, &cfg).unwrap();
+        assert_eq!(out.batch_iterations, vec![3, 1, 1, 1]);
+        assert_eq!(out.iterations, 6);
+        // The schedule replays deterministically.
+        let mut src2 = MatrixSource::new(&ds.points);
+        let out2 = fit_stream(4, &mut src2, &cfg).unwrap();
+        assert_eq!(out.assignments, out2.assignments);
+        // An empty schedule means base.max_iters everywhere — the
+        // bit-compatible-with-batch default.
+        let plain = StreamConfig { inner_iters: Vec::new(), ..cfg.clone() };
+        let mut src3 = MatrixSource::new(&ds.points);
+        let full = fit_stream(4, &mut src3, &plain).unwrap();
+        assert!(full.iterations > out.iterations, "the cap must actually bind");
     }
 
     #[test]

@@ -113,6 +113,13 @@ pub struct Feasibility {
     /// C term scales with the batch, not with n, which is what opens
     /// unbounded-length streams ([`crate::approx::stream`]).
     pub landmark_stream_bytes_per_rank: u64,
+    /// Worst-rank bytes of the **streaming 1.5D block-cyclic** path:
+    /// the distributed stream-init peak on a diagonal rank (batch C
+    /// tile + transient full L + W panels with their redistribution
+    /// transient — [`crate::model::analytic::stream_init_peak_bytes`]).
+    /// Off-diagonal ranks run at the batch-tile + m·d/√P block scale
+    /// for the whole stream. Bounded by the batch, never by n.
+    pub landmark_stream_15d_bytes_per_rank: u64,
     pub budget: u64,
     pub exact_fits: bool,
     pub landmark_fits: bool,
@@ -123,6 +130,9 @@ pub struct Feasibility {
     /// Whether the streaming path's per-rank state fits the budget at
     /// `stream_batch`-sized mini-batches.
     pub landmark_stream_fits: bool,
+    /// Whether the streaming 1.5D block-cyclic worst rank fits the
+    /// budget (requires a square grid, like the batch 1.5D rows).
+    pub landmark_stream_15d_fits: bool,
 }
 
 impl Feasibility {
@@ -184,6 +194,10 @@ pub fn landmark_stream_feasibility(
     let b_p = ceil_div(batch, p.max(1));
     let landmark_stream =
         4 * (b_p as u64 * m as u64 + m as u64 * m as u64 + m as u64 * d as u64);
+    // Streaming 1.5D block-cyclic: the distributed stream-init peak on
+    // the worst (diagonal) rank — mirrors the init batch's Gram + panel
+    // charge exactly, with n replaced by the batch.
+    let landmark_stream_15d = crate::model::analytic::stream_init_peak_bytes(m, d, batch, p);
     Feasibility {
         n,
         d,
@@ -195,6 +209,7 @@ pub fn landmark_stream_feasibility(
         landmark_15d_bc_bytes_per_rank: landmark_15d_bc,
         stream_batch: batch,
         landmark_stream_bytes_per_rank: landmark_stream,
+        landmark_stream_15d_bytes_per_rank: landmark_stream_15d,
         budget: mem.budget,
         exact_fits: exact <= mem.budget,
         landmark_fits: landmark <= mem.budget,
@@ -204,6 +219,8 @@ pub fn landmark_stream_feasibility(
         landmark_15d_bc_fits: crate::util::is_perfect_square(p)
             && landmark_15d_bc <= mem.budget,
         landmark_stream_fits: landmark_stream <= mem.budget,
+        landmark_stream_15d_fits: crate::util::is_perfect_square(p)
+            && landmark_stream_15d <= mem.budget,
     }
 }
 
@@ -440,6 +457,35 @@ mod tests {
         let h = landmark_feasibility(4096, 2, 256, 4, &mem);
         assert_eq!(h.stream_batch, 4096);
         assert_eq!(h.landmark_stream_bytes_per_rank, h.landmark_bytes_per_rank);
+    }
+
+    #[test]
+    fn stream_15d_feasibility_is_batch_bound_and_beats_replicated_w() {
+        // m = 1024 on a 4×4 grid: the 1D stream state carries the full
+        // m² W replica (4 MiB) and busts a 4 MiB budget even at a tiny
+        // batch; the 1.5D block-cyclic stream peaks at the distributed
+        // init (panels ~2·m²/q + batch tile) and fits.
+        let mem = MemModel { budget: 4 << 20, repl_factor: 1.0, redist_factor: 0.0 };
+        let f = landmark_stream_feasibility(1 << 20, 2, 1024, 16, 2048, &mem);
+        assert!(
+            !f.landmark_stream_fits,
+            "1D stream ({} B) carries the replicated W and must bust",
+            f.landmark_stream_bytes_per_rank
+        );
+        assert!(
+            f.landmark_stream_15d_fits,
+            "1.5D block-cyclic stream ({} B) must fit",
+            f.landmark_stream_15d_bytes_per_rank
+        );
+        // Batch-bound: quadrupling the stream length changes nothing.
+        let g = landmark_stream_feasibility(4 << 20, 2, 1024, 16, 2048, &mem);
+        assert_eq!(
+            f.landmark_stream_15d_bytes_per_rank,
+            g.landmark_stream_15d_bytes_per_rank
+        );
+        // Non-square rank counts cannot run the 1.5D stream.
+        let h = landmark_stream_feasibility(1 << 20, 2, 1024, 6, 2048, &mem);
+        assert!(!h.landmark_stream_15d_fits);
     }
 
     #[test]

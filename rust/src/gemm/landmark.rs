@@ -94,6 +94,72 @@ pub fn gemm_1d_landmark_gram(
     Ok((c_block, w))
 }
 
+/// Allgather the per-rank owned-landmark counts over `world` and return
+/// `(m, my_off)`: the total landmark count and the global index of this
+/// rank's first owned row. The prefix sums give every owned row its
+/// global landmark index (ranks own contiguous ascending runs), and the
+/// total is the collective m check the 1D pipeline does. Shared by the
+/// batch 1.5D Gram pipeline and the streaming driver's once-per-
+/// landmark-set block gather — both must count the same collective.
+pub fn landmark_block_counts(comm: &Comm, world: &Group, owned_rows: usize) -> (usize, usize) {
+    let counts: Vec<u64> = comm
+        .allgather(world, vec![owned_rows as u64])
+        .into_iter()
+        .map(|v| v[0])
+        .collect();
+    let my_off: u64 = counts[..comm.rank()].iter().sum();
+    (counts.iter().sum::<u64>() as usize, my_off as usize)
+}
+
+/// The grid-row **block gather** of landmark rows: each rank's owned
+/// rows travel (alltoallv over the world) to the diagonal rank of their
+/// landmark block, and each diagonal broadcasts its assembled block
+/// along its grid row — so an off-diagonal rank only ever holds its
+/// m/√P × d landmark slice, and the aggregate volume is O(m·d) plus the
+/// row broadcasts, never the old full-L allgather's O(P·m·d).
+///
+/// `local_landmarks` are the rows this rank owns in ascending global
+/// order starting at `my_off` (from [`landmark_block_counts`]). Returns
+/// the m_i × d landmark block of this rank's grid row. Shared by the
+/// batch pipeline below and `approx::stream`'s once-per-landmark-set
+/// gather (ROADMAP PR-4 follow-up: the stream no longer world-
+/// replicates the full L).
+pub fn block_gather_landmark_rows(
+    comm: &Comm,
+    grid: &Grid2D,
+    local_landmarks: &DenseMatrix,
+    my_off: usize,
+    m: usize,
+    d: usize,
+) -> DenseMatrix {
+    let p = grid.p();
+    let q = grid.q();
+    let world = Group::world(p);
+    let (i, j) = grid.coords(comm.rank());
+    let is_diag = i == j;
+    let (llo, lhi) = part::bounds(m, q, i);
+    let m_i = lhi - llo;
+
+    // Stage 1 — route owned landmark rows to their block's diagonal
+    // rank (alltoallv over the world: each row moves once).
+    let mut sends: Vec<Vec<f32>> = (0..p).map(|_| Vec::new()).collect();
+    for r in 0..local_landmarks.rows() {
+        let t = my_off + r;
+        let block = part::owner(m, q, t);
+        sends[grid.rank_at(block, block)].extend_from_slice(local_landmarks.row(r));
+    }
+    let recvd = comm.alltoallv(&world, sends);
+
+    // Stage 2 — each diagonal broadcasts its assembled block along its
+    // grid row (sources arrive in rank order = ascending landmark
+    // index, so the concat is the block in row order).
+    let row_g = grid.row_group(i);
+    let block_payload = is_diag.then(|| recvd.into_iter().flatten().collect::<Vec<f32>>());
+    let l_block_data = comm.bcast(&row_g, i, block_payload);
+    debug_assert_eq!(l_block_data.len(), m_i * d);
+    DenseMatrix::from_vec(m_i, d, l_block_data)
+}
+
 /// 1.5D landmark Gram pipeline: this rank's C tile on the √P×√P grid,
 /// plus the W state **only on the diagonal ranks** — the full m×m
 /// matrix under [`WFactorization::Replicated`] (one replica per grid
@@ -147,17 +213,9 @@ pub fn gemm_15d_landmark_gram(
         "landmark feature dim mismatch"
     );
 
-    // Per-rank owned-landmark counts (allgather): the prefix sums give
-    // every owned row its global landmark index (ranks own contiguous
-    // runs — `sample_landmarks` returns ascending point indices), and
-    // the total is the collective m check the 1D pipeline does.
-    let counts: Vec<u64> = comm
-        .allgather(&world, vec![local_landmarks.rows() as u64])
-        .into_iter()
-        .map(|v| v[0])
-        .collect();
-    let my_off: u64 = counts[..comm.rank()].iter().sum();
-    let m = counts.iter().sum::<u64>() as usize;
+    // Per-rank owned-landmark counts (allgather): `sample_landmarks`
+    // returns ascending point indices, so ranks own contiguous runs.
+    let (m, my_off) = landmark_block_counts(comm, &world, local_landmarks.rows());
     debug_assert!(lhi <= m, "layout landmark count disagrees with the sampled set");
     let bc = BlockCyclic::new(m, q);
 
@@ -200,25 +258,10 @@ pub fn gemm_15d_landmark_gram(
         });
     }
 
-    // Stage 1 — route owned landmark rows to their block's diagonal
-    // rank (alltoallv over the world: each row moves once, O(m·d)
-    // aggregate instead of the old allgather's O(P·m·d)).
-    let mut sends: Vec<Vec<f32>> = (0..p).map(|_| Vec::new()).collect();
-    for r in 0..local_landmarks.rows() {
-        let t = my_off as usize + r;
-        let block = part::owner(m, q, t);
-        sends[grid.rank_at(block, block)].extend_from_slice(local_landmarks.row(r));
-    }
-    let recvd = comm.alltoallv(&world, sends);
-
-    // Stage 2 — each diagonal broadcasts its assembled block along its
-    // grid row (sources arrive in rank order = ascending landmark
-    // index, so the concat is the block in row order).
-    let row_g = grid.row_group(i);
-    let block_payload = is_diag.then(|| recvd.into_iter().flatten().collect::<Vec<f32>>());
-    let l_block_data = comm.bcast(&row_g, i, block_payload);
-    debug_assert_eq!(l_block_data.len(), m_i * d);
-    let l_block = DenseMatrix::from_vec(m_i, d, l_block_data);
+    // Stages 1 + 2 — the shared grid-row block gather: rows alltoallv
+    // to block diagonals, then each diagonal broadcasts its block along
+    // its row. Off-diagonals never hold more than m/√P × d of L.
+    let l_block = block_gather_landmark_rows(comm, grid, local_landmarks, my_off, m, d);
 
     let (row_norms, lb_norms) = if kernel.needs_norms() {
         (point_block.row_sq_norms(), l_block.row_sq_norms())

@@ -15,7 +15,10 @@ pub mod onedim;
 pub mod summa;
 pub mod redistribute;
 
-pub use landmark::{gemm_15d_landmark_gram, gemm_1d_landmark_gram};
+pub use landmark::{
+    block_gather_landmark_rows, gemm_15d_landmark_gram, gemm_1d_landmark_gram,
+    landmark_block_counts,
+};
 pub use onedim::gemm_1d_gram;
 pub use redistribute::redistribute_2d_to_1d;
 pub use summa::{summa_gram, SummaPointTiles};

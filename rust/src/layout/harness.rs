@@ -129,6 +129,10 @@ pub struct StreamAccumulator {
     pub converged: bool,
     /// Max peak tracked memory over ranks and batches.
     pub peak_mem: u64,
+    /// Per-rank peak tracked memory, max over batches — the streaming
+    /// counterpart of [`FitResult::rank_peaks`], which is what lets the
+    /// test wall pin the off-diagonal m·d/√P landmark footprint.
+    pub rank_peaks: Vec<u64>,
     /// Per-rank communication ledgers summed across batches.
     pub comm_stats: Vec<CommStats>,
     /// Per-rank phase timings summed across batches.
@@ -145,6 +149,7 @@ impl StreamAccumulator {
             objective_curve: Vec::new(),
             converged: true,
             peak_mem: 0,
+            rank_peaks: vec![0; p],
             comm_stats: vec![CommStats::new(); p],
             timings: vec![Stopwatch::new(); p],
             ranks: p,
@@ -159,6 +164,9 @@ impl StreamAccumulator {
         self.objective_curve.push(batch.objective_curve.last().copied().unwrap_or(0.0));
         self.converged &= batch.converged;
         self.peak_mem = self.peak_mem.max(batch.peak_mem);
+        for (acc, &p) in self.rank_peaks.iter_mut().zip(&batch.rank_peaks) {
+            *acc = (*acc).max(p);
+        }
         for (acc, s) in self.comm_stats.iter_mut().zip(&batch.comm_stats) {
             acc.absorb(s);
         }
@@ -236,6 +244,7 @@ mod tests {
         assert_eq!(acc.objective_curve, vec![5.0, 3.0]);
         assert!(!acc.converged, "one unconverged batch taints the stream");
         assert_eq!(acc.peak_mem, 100);
+        assert_eq!(acc.rank_peaks, vec![100, 50], "per-rank peaks max across batches");
         assert_eq!(acc.comm_stats.len(), 2);
     }
 

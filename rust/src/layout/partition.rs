@@ -303,6 +303,16 @@ impl BlockCyclic {
         (0..self.panels()).filter(|t| self.owner(*t) == idx).collect()
     }
 
+    /// Position of panel `t` within its owner's ascending
+    /// [`Self::owned_panels`] list — the cyclic deal makes this `t/q`,
+    /// which is how the distributed solver indexes its per-panel
+    /// factor storage.
+    #[inline]
+    pub fn panel_index(&self, t: usize) -> usize {
+        debug_assert!(t < self.panels());
+        t / self.q
+    }
+
     /// Total columns owned by diagonal-group index `idx`.
     pub fn owned_cols(&self, idx: usize) -> usize {
         self.owned_panels(idx).iter().map(|&t| { let (lo, hi) = self.panel_bounds(t); hi - lo }).sum()

@@ -98,20 +98,24 @@
 //!
 //! ## When even W outgrows a rank: the distributed factor
 //!
-//! In the batch 1.5D landmark layout's default configuration
-//! ([`layout::WFactorization::BlockCyclic`]) no rank materializes the
-//! full m×m landmark kernel W: it lives as **block-cyclic column
-//! panels** over the grid diagonal ([`layout::BlockCyclic`]), the
-//! ridge Cholesky runs distributed (panel factorization + broadcast +
-//! trailing update — [`approx::solve::DistSpdSolver`]), and every
-//! coefficient solve is a pipelined forward/back substitution against
-//! the distributed factor, so no rank holds more than ~m²/√P of W.
-//! The results are **bit-identical** to the replicated factorization,
-//! which stays selectable via [`approx::ApproxConfig::w_fact`] (the
-//! streaming driver still assembles W host-side once per landmark set
-//! and hands each diagonal only its panel slices). Landmark rows move
-//! by grid-row block gather, so off-diagonal ranks hold only an
-//! m/√P × d slice.
+//! In the 1.5D landmark layout's default configuration
+//! ([`layout::WFactorization::BlockCyclic`]) no rank — and no driver —
+//! materializes the full m×m landmark kernel W: it lives as
+//! **block-cyclic column panels** over the grid diagonal
+//! ([`layout::BlockCyclic`]), the ridge Cholesky runs distributed
+//! (panel factorization + broadcast + trailing update —
+//! [`approx::solve::DistSpdSolver`]), and every coefficient solve is a
+//! pipelined forward/back substitution against the distributed factor
+//! whose token is **active-set restricted** — only clusters with
+//! nonzero weight travel, and only the live row range of each sweep —
+//! so no rank holds more than ~m²/√P of W and the solve traffic drops
+//! by ~2× at full occupancy, more with every empty cluster. The
+//! results are **bit-identical** to the replicated factorization,
+//! which stays selectable via [`approx::ApproxConfig::w_fact`].
+//! Streams run the same story end-to-end: stream-init factors W on
+//! the first batch's diagonal group (no host W anywhere), and
+//! landmark rows move by grid-row block gather, so off-diagonal ranks
+//! hold only an m/√P × d slice — batch and streaming alike.
 //! [`config::landmark_feasibility`] and
 //! [`model::analytic::w_blockcyclic_state_bytes`] quantify the
 //! footprint; `vivaldi run --algo landmark` reports it on OOM.

@@ -67,6 +67,9 @@ fn print_help() {
          \x20                   streaming extras: --stream --batch B [--decay G]\n\
          \x20                   [--reservoir R --refresh-every E] — mini-batch\n\
          \x20                   landmark fit, peak memory ∝ B not n\n\
+         \x20                   [--inner-iters N[,N2,...]] — per-batch inner\n\
+         \x20                   iteration schedule (last entry repeats; 1 =\n\
+         \x20                   pure online mode)\n\
          \x20                   [--data FILE [--d D]] — stream a libSVM file\n\
          \x20                   off disk instead of generated data\n\
          \x20 weak-scaling      Fig. 2 [--breakdown → Fig. 3] [--quick]\n\
@@ -262,6 +265,10 @@ fn cmd_run_landmark(f: &Flags) -> i32 {
         eprintln!("--data FILE requires --stream (batch fits load datasets via $VIVALDI_DATA)");
         return 2;
     }
+    if f.get("--inner-iters").is_some() && !stream {
+        eprintln!("--inner-iters is a per-batch schedule and requires --stream");
+        return 2;
+    }
     let batch = f.usize_or("--batch", (n / 8).max(m).max(g));
 
     // Streamed libSVM off disk: the real Table-II files never need to
@@ -270,8 +277,17 @@ fn cmd_run_landmark(f: &Flags) -> i32 {
         use vivaldi::data::stream::LibsvmSource;
         let default_d = scale.d_cap(ds).unwrap_or(ds.d());
         let d = f.usize_or("--d", default_d);
-        let layout =
-            explicit_layout.unwrap_or_else(|| LandmarkLayout::auto(batch, d, k, m, g));
+        let layout = explicit_layout.unwrap_or_else(|| {
+            LandmarkLayout::auto_for(
+                batch,
+                d,
+                k,
+                m,
+                g,
+                vivaldi::layout::WFactorization::BlockCyclic,
+                mem.as_ref(),
+            )
+        });
         let cfg = ApproxConfig {
             k,
             m,
@@ -294,12 +310,22 @@ fn cmd_run_landmark(f: &Flags) -> i32 {
     }
 
     let data = ds.generate(n, scale.d_cap(ds), scale.seed);
-    // Analytic auto-selection: the update-volume crossover sits at
-    // m ≈ n/√P (model::analytic::d_landmark_{1d,15d}). Streaming
-    // collectives act on batch-sized point blocks, so the crossover is
-    // evaluated at the batch, not the stream length.
+    // Analytic auto-selection under the default block-cyclic W: the
+    // W-wall (memory) decision comes first when --budget is given,
+    // volume (model::analytic::d_landmark_{1d,15d_blockcyclic})
+    // otherwise. Streaming collectives act on batch-sized point
+    // blocks, so the crossover is evaluated at the batch, not the
+    // stream length.
     let layout = explicit_layout.unwrap_or_else(|| {
-        LandmarkLayout::auto(if stream { batch.min(n) } else { n }, data.d(), k, m, g)
+        LandmarkLayout::auto_for(
+            if stream { batch.min(n) } else { n },
+            data.d(),
+            k,
+            m,
+            g,
+            vivaldi::layout::WFactorization::BlockCyclic,
+            mem.as_ref(),
+        )
     });
     let cfg = ApproxConfig {
         k,
@@ -413,6 +439,12 @@ fn print_feasibility_report(
         vivaldi::util::human_bytes(feas.landmark_stream_bytes_per_rank),
         feas.landmark_stream_fits
     );
+    eprintln!(
+        "  stream 1.5D block-cyclic W (B={}) {:>12}  fits: {}",
+        feas.stream_batch,
+        vivaldi::util::human_bytes(feas.landmark_stream_15d_bytes_per_rank),
+        feas.landmark_stream_15d_fits
+    );
     if feas.recommends_landmark() {
         eprintln!("  -> only the landmark path can hold this workload");
     }
@@ -448,6 +480,23 @@ fn cmd_run_landmark_stream(
             }
         })
         .unwrap_or(1.0);
+    // Per-batch inner-iteration schedule: "--inner-iters 1" is pure
+    // online mode, "--inner-iters 5,1" warms up on the first batch then
+    // goes online (the last entry repeats).
+    let inner_iters: Vec<usize> = f
+        .get("--inner-iters")
+        .map(|v| {
+            v.split(',')
+                .map(|s| match s.trim().parse::<usize>() {
+                    Ok(x) if x >= 1 => x,
+                    _ => {
+                        eprintln!("--inner-iters takes comma-separated integers >= 1");
+                        std::process::exit(2);
+                    }
+                })
+                .collect()
+        })
+        .unwrap_or_default();
     let mem = base.mem;
     let m = base.m;
     let cfg = StreamConfig {
@@ -456,6 +505,7 @@ fn cmd_run_landmark_stream(
         decay,
         reservoir: f.usize_or("--reservoir", 0),
         refresh_every: f.usize_or("--refresh-every", 0),
+        inner_iters,
     };
     println!(
         "landmark stream fit: layout={}{} G={g} n={} d={d} m={m} k={} B={batch} decay={decay}",

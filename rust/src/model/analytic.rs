@@ -153,26 +153,37 @@ pub fn w_blockcyclic_factor(c: CostParams, m: usize) -> CommCost {
 }
 
 /// Per-iteration communication the distributed W solve adds on the
-/// busiest diagonal rank: the forward/backward substitution pipelines
-/// (each rank forwards the k×m f64 token once per owned panel and
-/// direction), the α broadcast from the first panel's owner, and the
-/// ring allgather of the center-norm terms. All words are f32
-/// equivalents (f64 payloads count double).
-pub fn w_blockcyclic_solve(c: CostParams, m: usize) -> CommCost {
+/// busiest diagonal rank, with the **active-set pipelining** schedule:
+/// the forward/backward substitution tokens carry only the `active`
+/// clusters with nonzero weight, and only the live row range of each
+/// sweep (the forward token shrinks as y values finalize, the backward
+/// token grows as x values finalize — averaging m/2 rows per handoff),
+/// plus the α broadcast from the first panel's owner and the ring
+/// allgather of the center-norm terms, both active-restricted. All
+/// words are f32 equivalents (f64 payloads count double).
+pub fn w_blockcyclic_solve_active(c: CostParams, m: usize, active: usize) -> CommCost {
     use crate::layout::BlockCyclic;
     let q = sqrt_p(c.p).round().max(1.0) as usize;
     let q = q.clamp(1, m.max(1));
-    if q == 1 {
+    if q == 1 || active == 0 {
         return CommCost::new(0.0, 0.0);
     }
     let bc = BlockCyclic::new(m, q);
     let b_panels = bc.panels() as f64;
-    let km = (c.k * m) as f64;
+    let am = (active * m) as f64;
     let lg = (q as f64).log2().ceil().max(1.0);
-    // pipeline: ~B/q tokens per rank per direction, 2·k·m words each;
-    // α bcast root: lg copies; terms allgather ring: ~2·k·m forwarded.
-    let words = 4.0 * b_panels * km / q as f64 + 2.0 * lg * km + 2.0 * km;
+    // pipeline: ~B/q handoffs per rank per direction, each an average
+    // m/2-row active-cluster tail in f64 → 2·(B/q)·(active·m/2)·2 =
+    // 2·B·active·m/q words; α bcast root: lg copies of the 2·active·m
+    // f64 payload; terms allgather ring: ~2·active·m forwarded.
+    let words = 2.0 * b_panels * am / q as f64 + 2.0 * lg * am + 2.0 * am;
     CommCost::new(2.0 * b_panels / q as f64 + lg + q as f64, words)
+}
+
+/// [`w_blockcyclic_solve_active`] at full occupancy (every cluster
+/// active) — the upper bound the per-iteration planning forms use.
+pub fn w_blockcyclic_solve(c: CostParams, m: usize) -> CommCost {
+    w_blockcyclic_solve_active(c, m, c.k)
 }
 
 /// [`d_landmark_15d`] with the distributed-W solve's extra traffic
@@ -183,6 +194,41 @@ pub fn d_landmark_15d_blockcyclic(c: CostParams, m: usize) -> CommCost {
     let base = d_landmark_15d(c, m);
     let solve = w_blockcyclic_solve(c, m);
     CommCost::new(base.messages + solve.messages, base.words + solve.words)
+}
+
+/// Once-per-landmark-set volume of the streaming 1.5D **landmark block
+/// gather** on the busiest *off-diagonal* rank: its alltoallv share of
+/// the row routing (m/P rows of d) plus its worst-case forwarding in
+/// the binomial row broadcast of the m/√P × d block (≈ lg √P copies at
+/// the root; off-diagonals forward at most one less). This replaces
+/// the old per-stream full-L world allgather, whose every rank
+/// forwarded ≈ m·d words — the m·d/√P (not m·d) scale the acceptance
+/// test pins.
+pub fn stream_landmark_blockgather(c: CostParams, m: usize) -> CommCost {
+    let q = sqrt_p(c.p).round().max(1.0);
+    if q <= 1.0 {
+        return CommCost::new(0.0, 0.0);
+    }
+    let lg = q.log2().ceil().max(1.0);
+    let block = (m as f64) * (c.d as f64) / q;
+    let share = (m as f64) * (c.d as f64) / c.p as f64;
+    CommCost::new(c.p as f64 + lg, lg * block + share)
+}
+
+/// Per-rank peak bytes of the **distributed stream-init** (the 1.5D
+/// block-cyclic first batch, worst = a diagonal rank): the batch Gram
+/// pipeline's own charge with n replaced by the mini-batch — C tile
+/// (B/√P × m/√P) + the transient full L of the diagonal block exchange
+/// (m·d) + the W panel state with its row-redistribution transient
+/// ([`w_blockcyclic_state_bytes`]). This is what replaced the driver's
+/// host-side m×m W copy and m²-f64 scalar factor: the stream now peaks
+/// exactly where the batch fit does, bounded by B rather than n.
+pub fn stream_init_peak_bytes(m: usize, d: usize, batch: usize, p: usize) -> u64 {
+    use crate::util::ceil_div;
+    let q = (p as f64).sqrt().ceil() as usize;
+    let q = q.max(1);
+    4 * (ceil_div(batch, q) as u64 * ceil_div(m, q) as u64 + (m * d) as u64)
+        + w_blockcyclic_state_bytes(m, p)
 }
 
 /// All Table I rows for a parameter set, in the paper's order:
@@ -309,6 +355,63 @@ mod tests {
         }
         // q=1 degenerates to ~2 full copies (panels + transient), never less.
         assert!(w_blockcyclic_state_bytes(m, 1) >= repl);
+    }
+
+    #[test]
+    fn active_set_solve_words_scale_with_active_clusters() {
+        let c = CostParams { p: 16, ..C };
+        let m = 2048;
+        // The token is linear in the active-cluster count: halving the
+        // active set exactly halves the words.
+        let full = w_blockcyclic_solve_active(c, m, C.k);
+        let half = w_blockcyclic_solve_active(c, m, C.k / 2);
+        assert!((full.words / half.words - 2.0).abs() < 1e-9);
+        assert_eq!(full.messages, half.messages, "latency is schedule-shaped, not payload");
+        // Full occupancy is the planning upper bound `w_blockcyclic_solve`.
+        assert_eq!(w_blockcyclic_solve(c, m).words, full.words);
+        // The live-range restriction alone halves the pipeline term
+        // relative to the pre-active-set full-token schedule.
+        let q = 4.0;
+        let bc = crate::layout::BlockCyclic::new(m, 4);
+        let km = (C.k * m) as f64;
+        let lg = 2.0;
+        let old_schedule = 4.0 * bc.panels() as f64 * km / q + 2.0 * lg * km + 2.0 * km;
+        assert!(full.words < old_schedule, "{} !< {old_schedule}", full.words);
+        // No active clusters, no communication.
+        assert_eq!(w_blockcyclic_solve_active(c, m, 0).words, 0.0);
+    }
+
+    #[test]
+    fn stream_blockgather_is_block_scale_not_full_l() {
+        let m = 4096;
+        let c16 = CostParams { p: 16, ..C };
+        let c64 = CostParams { p: 64, ..C };
+        let full_l = (m * C.d) as f64; // the old world allgather's per-rank forwarding
+        let g16 = stream_landmark_blockgather(c16, m);
+        let g64 = stream_landmark_blockgather(c64, m);
+        assert!(g16.words < full_l, "{} !< {full_l}", g16.words);
+        assert!(g64.words < g16.words, "a wider grid shrinks each block");
+        // Single rank / 1×1 grid: nothing moves.
+        assert_eq!(stream_landmark_blockgather(CostParams { p: 1, ..C }, m).words, 0.0);
+    }
+
+    #[test]
+    fn stream_init_peak_tracks_batch_not_stream() {
+        let (m, d, p) = (1024, 64, 16);
+        // The peak is a function of the batch, never the stream length
+        // (n is not even a parameter), and grows monotonically with B.
+        let small = stream_init_peak_bytes(m, d, 1024, p);
+        let big = stream_init_peak_bytes(m, d, 8192, p);
+        assert!(big > small);
+        // The W state term is the floor: the panels + row transient.
+        assert!(small >= w_blockcyclic_state_bytes(m, p));
+        // And the whole thing undercuts the replicated diagonal's full
+        // m² W once the grid is wide enough (q ≥ 4).
+        let replicated_w = 4 * (m as u64) * (m as u64);
+        assert!(
+            stream_init_peak_bytes(m, d, 1024, 64) < replicated_w + 4 * (1024 / 8) * (m as u64 / 8),
+            "q=8 init peak must sit well under the replicated diagonal"
+        );
     }
 
     #[test]

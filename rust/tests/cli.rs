@@ -25,6 +25,7 @@ fn help_lists_landmark_and_stream_flags() {
     assert!(stdout.contains("USAGE"), "{stdout}");
     assert!(stdout.contains("--landmark-layout 1d|1.5d|auto"), "{stdout}");
     assert!(stdout.contains("--stream"), "{stdout}");
+    assert!(stdout.contains("--inner-iters"), "{stdout}");
 }
 
 #[test]
@@ -61,22 +62,34 @@ fn landmark_layout_flag_parses_and_rejects() {
     assert!(stderr.contains("unknown --landmark-layout"), "{stderr}");
 }
 
-/// `--landmark-layout auto` must pick 1.5D past the m ≈ n/√P
-/// crossover and 1D below it (model::analytic::d_landmark_{1d,15d}).
+/// `--landmark-layout auto` under the default block-cyclic W: without
+/// memory pressure the distributed solve's pipeline words mean the 1D
+/// allreduce wins on volume — and with a `--budget` that the 1D
+/// layout's replicated m² W busts while the block-cyclic diagonal
+/// fits, auto picks 1.5D **exactly when the W wall binds** (and the
+/// fit then actually runs inside that budget).
 #[test]
-fn auto_layout_selects_by_crossover() {
+fn auto_layout_selects_by_w_wall_and_volume() {
+    // No budget: volume decides, and the BC solve traffic keeps 1D
+    // ahead at both m values.
+    for m in ["16", "128"] {
+        let (code, stdout, stderr) = run(&[
+            "run", "--algo", "landmark", "--landmark-layout", "auto", "--n", "256", "--m", m,
+            "--k", "4", "--gpus", "4", "--iters", "3",
+        ]);
+        assert_eq!(code, 0, "stderr: {stderr}");
+        assert!(stdout.contains("layout=1D (auto)"), "m={m} without a budget: {stdout}");
+    }
+    // The W wall: 88 KiB of 1D state vs ~54 KiB block-cyclic 1.5D on a
+    // 64 KiB budget — auto must pick the only layout that runs, and
+    // complete the fit under that budget.
     let (code, stdout, stderr) = run(&[
         "run", "--algo", "landmark", "--landmark-layout", "auto", "--n", "256", "--m", "128",
-        "--k", "4", "--gpus", "4", "--iters", "3",
+        "--k", "4", "--gpus", "16", "--iters", "3", "--budget", "65536",
     ]);
     assert_eq!(code, 0, "stderr: {stderr}");
-    assert!(stdout.contains("layout=1.5D (auto)"), "large m must pick 1.5D: {stdout}");
-    let (code, stdout, stderr) = run(&[
-        "run", "--algo", "landmark", "--landmark-layout", "auto", "--n", "256", "--m", "16",
-        "--k", "4", "--gpus", "4", "--iters", "3",
-    ]);
-    assert_eq!(code, 0, "stderr: {stderr}");
-    assert!(stdout.contains("layout=1D (auto)"), "small m must pick 1D: {stdout}");
+    assert!(stdout.contains("layout=1.5D (auto)"), "the W wall must force 1.5D: {stdout}");
+    assert!(stdout.contains("done in"), "{stdout}");
 }
 
 /// The OOM path: a tiny `--budget` makes the fit fail collectively with
@@ -111,18 +124,54 @@ fn stream_run_parses_and_completes() {
     assert!(stdout.contains("batch-bounded"), "{stdout}");
 }
 
-/// With `--stream`, the auto crossover is evaluated at the batch size
-/// (the per-iteration collectives act on batch-sized blocks), not at
-/// the full stream length: m = 64 ≥ batch/√P = 32 picks 1.5D even
-/// though m ≪ n/√P = 256 would have picked 1D.
+/// With `--stream`, the auto decision is evaluated at the batch size
+/// (the per-batch collectives and resident state act on batch-sized
+/// blocks), not at the full stream length: under a 28,000 B budget the
+/// batch-scale 1D state (≈24.6 KB) fits — so volume decides and picks
+/// 1D — while the full-n 1D state (≈31.7 KB) would have busted and
+/// forced 1.5D. Seeing 1D proves the batch was used.
 #[test]
 fn stream_auto_layout_uses_batch_not_n() {
     let (code, stdout, stderr) = run(&[
         "run", "--algo", "landmark", "--stream", "--landmark-layout", "auto", "--batch", "64",
-        "--n", "512", "--m", "64", "--k", "4", "--gpus", "4", "--iters", "3",
+        "--n", "512", "--m", "64", "--k", "4", "--gpus", "16", "--iters", "3", "--budget",
+        "28000",
     ]);
     assert_eq!(code, 0, "stderr: {stderr}");
-    assert!(stdout.contains("layout=1.5D (auto)"), "{stdout}");
+    assert!(stdout.contains("layout=1D (auto)"), "{stdout}");
+    assert!(stdout.contains("8 batches"), "{stdout}");
+}
+
+/// `--inner-iters 1` is pure online mode: every driven batch runs
+/// exactly one reduced-rank iteration, so a 4-batch stream reports 4
+/// inner iterations. A zero entry is a loud usage error.
+#[test]
+fn stream_inner_iters_schedule() {
+    let (code, stdout, stderr) = run(&[
+        "run", "--algo", "landmark", "--stream", "--batch", "64", "--n", "256", "--m", "32",
+        "--k", "2", "--gpus", "4", "--iters", "10", "--inner-iters", "1",
+    ]);
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(stdout.contains("4 batches, 4 inner iterations"), "{stdout}");
+    // A schedule: 3 on the warm-up batch, then online.
+    let (code, stdout, stderr) = run(&[
+        "run", "--algo", "landmark", "--stream", "--batch", "64", "--n", "256", "--m", "32",
+        "--k", "2", "--gpus", "4", "--iters", "10", "--inner-iters", "3,1",
+    ]);
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(stdout.contains("4 batches"), "{stdout}");
+    let (code, _, stderr) = run(&[
+        "run", "--algo", "landmark", "--stream", "--batch", "64", "--n", "256", "--m", "32",
+        "--k", "2", "--gpus", "4", "--inner-iters", "0",
+    ]);
+    assert_eq!(code, 2, "stderr: {stderr}");
+    assert!(stderr.contains("--inner-iters takes"), "{stderr}");
+    // Without --stream the schedule has nothing to apply to — a loud
+    // usage error, not a silently ignored flag.
+    let (code, _, stderr) =
+        run(&["run", "--algo", "landmark", "--n", "256", "--m", "32", "--inner-iters", "1"]);
+    assert_eq!(code, 2, "stderr: {stderr}");
+    assert!(stderr.contains("--inner-iters") && stderr.contains("--stream"), "{stderr}");
 }
 
 #[test]
@@ -134,8 +183,9 @@ fn stream_oom_reports_batch_feasibility() {
     assert_eq!(code, 1, "stderr: {stderr}");
     assert!(stderr.contains("stream fit failed"), "{stderr}");
     assert!(stderr.contains("stream (B=64)"), "{stderr}");
-    // The report now separates the two 1.5D W layouts.
+    // The report separates the two 1.5D W layouts, batch and stream.
     assert!(stderr.contains("block-cyclic W"), "{stderr}");
+    assert!(stderr.contains("stream 1.5D block-cyclic W (B=64)"), "{stderr}");
 }
 
 /// `--data FILE` streams a real libSVM file off disk through

@@ -174,6 +174,150 @@ fn landmark_15d_update_beats_1d_allreduce_closed_form() {
     );
 }
 
+/// The streaming 1.5D landmark block gather: off-diagonal ranks' gemm-
+/// phase traffic over a whole stream sits at the m·d/√P block scale —
+/// pinned against the `stream_landmark_blockgather` closed form — and
+/// strictly below the m·d scale the old once-per-stream full-L world
+/// allgather made every rank forward. p ∈ {4, 16} per the acceptance
+/// criteria.
+#[test]
+fn stream_blockgather_offdiag_volume_within_band() {
+    use vivaldi::approx::stream::{fit_stream, StreamConfig};
+    use vivaldi::approx::ApproxConfig;
+    use vivaldi::data::stream::MatrixSource;
+    use vivaldi::model::analytic::{stream_landmark_blockgather, CostParams};
+    use vivaldi::util::rng::Rng;
+
+    const M: usize = 96;
+    const DD: usize = 32; // m·d large enough that the scales separate cleanly
+    let mut rng = Rng::new(4243);
+    let points = vivaldi::dense::DenseMatrix::random(256, DD, &mut rng);
+    for p in [4usize, 16] {
+        let q = (p as f64).sqrt() as usize;
+        let cfg = StreamConfig {
+            base: ApproxConfig {
+                k: 2,
+                m: M,
+                layout: vivaldi::approx::LandmarkLayout::OneFiveD,
+                kernel: KernelFn::linear(),
+                max_iters: 2,
+                converge_on_stable: false,
+                ..Default::default()
+            },
+            batch: 128,
+            ..Default::default()
+        };
+        let mut src = MatrixSource::new(&points);
+        let out = fit_stream(p, &mut src, &cfg).unwrap();
+        assert_eq!(out.batches, 2, "two batches: init + steady state");
+
+        let offdiag_max: u64 = (0..p)
+            .filter(|r| r % q != r / q)
+            .map(|r| out.comm_stats[r].get("gemm").bytes)
+            .max()
+            .unwrap();
+        // Closed-form band on the busiest off-diagonal rank.
+        let c = CostParams { n: 256, d: DD, k: 2, p };
+        let closed = (stream_landmark_blockgather(c, M).words * 4.0) as u64;
+        let ratio = offdiag_max as f64 / closed as f64;
+        assert!(
+            (0.15..=3.0).contains(&ratio),
+            "p={p}: off-diagonal gemm bytes {offdiag_max} vs closed form {closed} \
+             (ratio {ratio:.2})"
+        );
+        // The acceptance bar: m·d/√P, not m·d. The old world allgather
+        // forwarded ≈ m·d·4 B per rank.
+        let full_l = (M * DD * 4) as u64;
+        assert!(
+            offdiag_max < full_l,
+            "p={p}: off-diagonal streaming landmark traffic {offdiag_max} B must sit \
+             below the full-L scale {full_l} B"
+        );
+    }
+}
+
+/// The active-set pipelined solve: at p ∈ {4, 16} (q ∈ {2, 4}), with
+/// half the clusters at zero weight, the counted solve-phase volume
+/// sits within a band of the `w_blockcyclic_solve_active` closed form
+/// and at least 40% below the pre-active-set full-token schedule
+/// (4·B·k·m/q pipeline + full-k bcast and terms) — the acceptance
+/// criterion's skewed-weights reduction.
+#[test]
+fn active_set_solve_volume_within_band_and_reduced() {
+    use vivaldi::approx::solve::{DistSpdSolver, SpdSolver, WPanels};
+    use vivaldi::comm::{Group, World};
+    use vivaldi::dense::DenseMatrix;
+    use vivaldi::layout::BlockCyclic;
+    use vivaldi::model::analytic::{w_blockcyclic_solve_active, CostParams};
+    use vivaldi::util::rng::Rng;
+
+    let m = 64;
+    let k = 8;
+    let mut rng = Rng::new(4244);
+    let a = DenseMatrix::random(m, m, &mut rng);
+    let mut w = vivaldi::dense::ops::matmul_nt(&a, &a);
+    for i in 0..m {
+        w.set(i, i, w.get(i, i) + 1.0);
+        for j in 0..i {
+            let v = w.get(i, j);
+            w.set(j, i, v);
+        }
+    }
+    let b: Vec<f32> = (0..k * m).map(|x| ((x * 3 % 17) as f32) - 8.0).collect();
+    // Skewed weights: half the clusters empty.
+    let mut weights: Vec<f64> = (1..=k).map(|a| a as f64).collect();
+    for wv in weights.iter_mut().take(k / 2) {
+        *wv = 0.0;
+    }
+    let scalar = SpdSolver::factor(&w);
+    // The replicated reference α, via the public scalar solver: the
+    // same normalize-then-solve sequence the crate's solve_alpha uses.
+    let mut want_alpha = vec![0.0f64; k * m];
+    for a in 0..k {
+        if weights[a] <= 0.0 {
+            continue;
+        }
+        let inv = 1.0 / weights[a];
+        let rhs: Vec<f64> =
+            b[a * m..(a + 1) * m].iter().map(|&v| v as f64 * inv).collect();
+        want_alpha[a * m..(a + 1) * m].copy_from_slice(&scalar.solve(&rhs));
+    }
+    for p in [4usize, 16] {
+        let q = (p as f64).sqrt() as usize;
+        let bc = BlockCyclic::new(m, q);
+        let (wref, bref, wtref) = (&w, &b, &weights);
+        let (results, stats) = World::run(q, |comm| {
+            let diag = Group::world(q);
+            let panels = WPanels::from_full(wref, bc, comm.rank());
+            let solver = DistSpdSolver::factor_dist(comm, &diag, panels);
+            comm.set_phase("solve");
+            solver.solve_alpha_weighted(comm, &diag, bref, wtref, k)
+        });
+        // Bit-identity survives the skewed active set.
+        for (idx, (alpha, _)) in results.iter().enumerate() {
+            assert_eq!(alpha, &want_alpha, "p={p} idx={idx}");
+        }
+        let counted_max = stats.iter().map(|s| s.get("solve").bytes).max().unwrap();
+        let c = CostParams { n: 256, d: 2, k, p };
+        let closed = (w_blockcyclic_solve_active(c, m, k / 2).words * 4.0) as u64;
+        let ratio = counted_max as f64 / closed as f64;
+        assert!(
+            (0.2..=2.5).contains(&ratio),
+            "p={p}: solve bytes {counted_max} vs active closed form {closed} (ratio {ratio:.2})"
+        );
+        // ≥ 40% below the old full-token schedule.
+        let km = (k * m) as f64;
+        let lg = (q as f64).log2().ceil().max(1.0);
+        let old_words = 4.0 * bc.panels() as f64 * km / q as f64 + 2.0 * lg * km + 2.0 * km;
+        let old_bytes = (old_words * 4.0) as u64;
+        assert!(
+            (counted_max as f64) <= 0.6 * old_bytes as f64,
+            "p={p}: active-set solve {counted_max} B must undercut the full-token \
+             schedule {old_bytes} B by >= 40%"
+        );
+    }
+}
+
 #[test]
 fn table1_ordering_1d_vs_15d() {
     // The paper's headline comparison at a glance: by P = 16 the 1.5D

@@ -274,6 +274,102 @@ fn decayed_accumulation_on_stationary_stream() {
     assert!(score >= 0.85, "nmi={score}");
 }
 
+/// The streaming 1.5D landmark block gather bounds every off-diagonal
+/// rank's tracked peak at the batch C tile + its m·d/√P landmark block
+/// — strictly below the old full-L charge — and the peak stays
+/// batch-bounded: a 2× longer stream has the identical per-rank peaks.
+#[test]
+fn stream_offdiag_peak_is_landmark_block_scale() {
+    let m = 64;
+    let d = 16;
+    let batch = 128;
+    let p = 4;
+    let q = 2;
+    let mut rng = vivaldi::util::rng::Rng::new(381);
+    let big = DenseMatrix::random(512, d, &mut rng);
+    let small = big.row_block(0, 256);
+    let mem = Some(MemModel { budget: 2 << 20, repl_factor: 1.0, redist_factor: 0.0 });
+    let run = |points: &DenseMatrix| {
+        let cfg = StreamConfig {
+            base: ApproxConfig {
+                k: 2,
+                m,
+                layout: LandmarkLayout::OneFiveD,
+                kernel: KernelFn::linear(),
+                max_iters: 5,
+                mem,
+                ..Default::default()
+            },
+            batch,
+            ..Default::default()
+        };
+        let mut src = MatrixSource::new(points);
+        fit_stream(p, &mut src, &cfg).unwrap()
+    };
+    let two = run(&small);
+    let four = run(&big);
+    assert_eq!(two.batches, 2);
+    assert_eq!(four.batches, 4);
+    assert_eq!(two.rank_peaks, four.rank_peaks, "per-rank peaks are batch-bounded");
+
+    // Off-diagonal charge: C tile (batch/q × m/q) + the m/q × d
+    // landmark block — and nothing else. The old path charged the full
+    // m×d L on every rank.
+    let c_tile = (batch / q * (m / q) * 4) as u64;
+    let block_bound = c_tile + (m / q * d * 4) as u64;
+    let full_l_bound = c_tile + (m * d * 4) as u64;
+    for r in 0..p {
+        let (i, j) = (r % q, r / q);
+        if i == j {
+            continue;
+        }
+        let peak = four.rank_peaks[r];
+        assert!(
+            peak <= block_bound,
+            "off-diagonal rank {r}: peak {peak} exceeds C tile + m·d/√P block {block_bound}"
+        );
+        assert!(
+            peak < full_l_bound,
+            "off-diagonal rank {r}: peak {peak} must undercut the full-L charge {full_l_bound}"
+        );
+    }
+}
+
+/// An undersized tail on the 1.5D block-cyclic stream is classified
+/// driver-side through the panel-set solve (the driver holds no host
+/// W after the distributed stream-init) — every point labeled, and
+/// bit-identical to the replicated-W stream on the same data.
+#[test]
+fn fifteen_d_stream_tail_classified_via_panel_solve() {
+    let ds = synth::gaussian_blobs(258, 3, 2, 4.5, 391);
+    let mk = |wfact| StreamConfig {
+        base: ApproxConfig {
+            k: 2,
+            m: 24,
+            layout: LandmarkLayout::OneFiveD,
+            w_fact: wfact,
+            max_iters: 20,
+            ..Default::default()
+        },
+        batch: 64,
+        ..Default::default()
+    };
+    let run = |wfact| {
+        let mut src = MatrixSource::new(&ds.points);
+        fit_stream(4, &mut src, &mk(wfact)).unwrap()
+    };
+    let bc = run(vivaldi::layout::WFactorization::BlockCyclic);
+    assert_eq!(bc.n_total, 258);
+    assert_eq!(bc.assignments.len(), 258);
+    assert_eq!(bc.batches, 5, "4 driven batches + the 2-point classified tail");
+    assert_eq!(*bc.batch_iterations.last().unwrap(), 0, "tail runs no inner loop");
+    // The panel-set host solve is bit-identical to the replicated one.
+    let repl = run(vivaldi::layout::WFactorization::Replicated);
+    assert_eq!(bc.assignments, repl.assignments);
+    let score = nmi(&bc.assignments, &ds.labels, 2);
+    assert!(score > 0.85, "nmi = {score}");
+}
+
 /// The 1.5D landmark layout streams too: multi-batch quality holds and
 /// the layouts agree with each other on the same stream.
 #[test]
