@@ -47,6 +47,16 @@ def main():
         return 2
     prev, cur = load(args[0]), load(args[1])
 
+    prov_prev = prev.get("provenance", "measured")
+    prov_cur = cur.get("provenance", "measured")
+    if prov_prev != prov_cur:
+        threshold = max(threshold, 4.0)
+        print(
+            f"WARNING: baseline provenance '{prov_prev}' vs current '{prov_cur}' — "
+            f"an analytic-desk baseline pins volumes only to the closed-form band, "
+            f"so the fail threshold is relaxed to +{threshold:.0%}"
+        )
+
     if prev.get("config") != cur.get("config"):
         print(
             f"bench configs differ (prev {prev.get('config')} vs "

@@ -60,6 +60,23 @@
 //! exactness for bounded memory, with quality pinned against ground
 //! truth and the single-rank oracle.
 //!
+//! **Sliding window (`window > 0`):** the model additionally carries a
+//! ring of the last `window` batches' summary deltas — each slot holds
+//! the settled batch's k×m cluster sums, its per-cluster sizes, and
+//! its provenance (arrival index + point count). When a batch falls
+//! out of the window its contribution is **exactly evicted**: the
+//! carried sums are refolded over the surviving slots in arrival order
+//! through the same decay/absorb arithmetic every batch already uses,
+//! so the model is always exactly the fold of the last `window`
+//! batches — and a window that never evicts (including `window = 0`,
+//! the infinite default) is bit-identical to the unwindowed stream
+//! (pinned by `rust/tests/window.rs`). Eviction is driver-side state
+//! only: the per-batch rank schedules (`run_batch_1d` /
+//! `run_batch_15d`) are untouched, and both layouts inherit
+//! windowing through the carried history they already consume.
+//! Undersized tails enter exactly one ring slot via the same fold —
+//! never absorbed twice.
+//!
 //! **Landmark maintenance:** with a [`LandmarkReservoir`] configured,
 //! the driver keeps a bounded uniform sample of the whole history and
 //! can periodically re-seed the landmarks from it (k-means++ refresh).
@@ -67,6 +84,8 @@
 //! points are classified under the old model, and their cross-kernel
 //! against the *new* landmarks — scaled to the carried weight — becomes
 //! the new-basis history.
+
+use std::collections::VecDeque;
 
 use crate::backend::ComputeBackend;
 use crate::comm::{Comm, CommStats, Grid2D, Group, World};
@@ -114,6 +133,15 @@ pub struct StreamConfig {
     /// quality-vs-throughput knob (CLI `--inner-iters`). Entries must
     /// be ≥ 1; tail batches too small to shard still run zero.
     pub inner_iters: Vec<usize>,
+    /// Sliding-window width in batches (0 = infinite, the default).
+    /// With `window = W > 0` the model carries a ring of the last W
+    /// batches' summary deltas and **exactly evicts** a batch's
+    /// contribution the moment it falls out of the window (the carried
+    /// sums are refolded over the survivors). A window that never
+    /// evicts is bit-identical to the infinite stream. Mutually
+    /// exclusive with `refresh_every`: the ring's sums are expressed
+    /// in the current landmark basis, which a refresh would invalidate.
+    pub window: usize,
 }
 
 impl Default for StreamConfig {
@@ -125,6 +153,7 @@ impl Default for StreamConfig {
             reservoir: 0,
             refresh_every: 0,
             inner_iters: Vec::new(),
+            window: 0,
         }
     }
 }
@@ -170,6 +199,38 @@ pub struct StreamFitResult {
     pub landmark_refreshes: usize,
     /// Points consumed from the source.
     pub n_total: usize,
+    /// Points contributed by each batch in arrival order — driven and
+    /// classified-tail batches alike, so offsets into `assignments`
+    /// recover any batch's label slice.
+    pub batch_points: Vec<usize>,
+    /// Final eviction-ring state of a windowed run (`None` when
+    /// `window = 0`).
+    pub window: Option<WindowState>,
+}
+
+/// Provenance of one surviving eviction-ring slot.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WindowSlot {
+    /// Arrival index of the batch (0-based over all batches, driven
+    /// and classified tails alike).
+    pub batch_index: usize,
+    /// Points the batch contributed to the carried model.
+    pub points: usize,
+}
+
+/// Final state of a windowed stream's eviction ring: which batches
+/// survive, how many were evicted, and the carried model — exactly
+/// the fold of the surviving slots (pinned by `rust/tests/window.rs`).
+#[derive(Debug, Clone)]
+pub struct WindowState {
+    /// Surviving slots in arrival order (at most `window` of them).
+    pub slots: Vec<WindowSlot>,
+    /// Batches whose contribution was exactly evicted.
+    pub evictions: usize,
+    /// The carried k×m cluster sums S.
+    pub sums: Vec<f32>,
+    /// The carried k cluster weights N.
+    pub weights: Vec<f64>,
 }
 
 /// The shared host-side W state of the **replicated** factorization
@@ -208,6 +269,11 @@ struct StreamModel {
     sums: Vec<f32>,
     /// k decayed cluster weights N (fractional once γ < 1).
     weights: Vec<f64>,
+    /// Windowed mode only: the last `window` batches' summary deltas
+    /// in arrival order. Empty when the window is infinite.
+    ring: VecDeque<RingSlot>,
+    /// Batches exactly evicted from the ring so far.
+    evictions: usize,
     has_history: bool,
     /// Whether a batch already paid the one-time per-landmark-set
     /// work: the grid-row block gather (1.5D) or full replication
@@ -225,6 +291,16 @@ struct History {
 
 /// Per-batch global statistics folded back into the model.
 struct BatchFinal {
+    sums: Vec<f32>,
+    sizes: Vec<u64>,
+}
+
+/// One eviction-ring slot: a settled batch's summary delta plus its
+/// provenance, kept so the batch's contribution can be exactly
+/// removed when it leaves the window.
+struct RingSlot {
+    batch_index: usize,
+    points: usize,
     sums: Vec<f32>,
     sizes: Vec<u64>,
 }
@@ -261,6 +337,8 @@ impl StreamModel {
             dist_solvers: Vec::new(),
             sums: vec![0.0; k * m],
             weights: vec![0.0; k],
+            ring: VecDeque::new(),
+            evictions: 0,
             has_history: false,
             initialized: false,
         }
@@ -320,21 +398,59 @@ impl StreamModel {
         })
     }
 
-    /// Fold a settled batch into the model on top of the decayed state
-    /// it ran against.
-    fn absorb(&mut self, decayed: Option<History>, fin: BatchFinal) {
+    /// Fold a settled batch's statistics into the model on top of the
+    /// decayed state it ran against.
+    fn absorb(&mut self, decayed: Option<History>, sums: &[f32], sizes: &[u64]) {
         match decayed {
             Some(h) => {
-                self.sums = h.sums.iter().zip(&fin.sums).map(|(&a, &b)| a + b).collect();
-                self.weights =
-                    h.weights.iter().zip(&fin.sizes).map(|(&a, &b)| a + b as f64).collect();
+                self.sums = h.sums.iter().zip(sums).map(|(&a, &b)| a + b).collect();
+                self.weights = h.weights.iter().zip(sizes).map(|(&a, &b)| a + b as f64).collect();
             }
             None => {
-                self.sums = fin.sums;
-                self.weights = fin.sizes.iter().map(|&s| s as f64).collect();
+                self.sums = sums.to_vec();
+                self.weights = sizes.iter().map(|&s| s as f64).collect();
             }
         }
         self.has_history = true;
+    }
+
+    /// Fold a settled batch into the model: plain absorption when the
+    /// window is infinite, ring-push + exact eviction otherwise. Every
+    /// batch — driven or classified tail — enters exactly one ring
+    /// slot. In windowed mode the carried sums are refolded over the
+    /// surviving slots in arrival order; the refold replays the exact
+    /// decay/absorb op sequence of incremental absorption, so a window
+    /// that never evicts stays bit-identical to `window = 0`, and
+    /// after an eviction the model is exactly the fold of the
+    /// survivors (exact `==`, pinned by `rust/tests/window.rs`).
+    fn fold_batch(
+        &mut self,
+        decayed: Option<History>,
+        fin: BatchFinal,
+        cfg: &StreamConfig,
+        batch_index: usize,
+        points: usize,
+    ) {
+        if cfg.window == 0 {
+            self.absorb(decayed, &fin.sums, &fin.sizes);
+            return;
+        }
+        self.ring.push_back(RingSlot { batch_index, points, sums: fin.sums, sizes: fin.sizes });
+        if self.ring.len() > cfg.window {
+            self.ring.pop_front();
+            self.evictions += 1;
+        }
+        // Refold from scratch over the survivors. Taking the ring out
+        // lets the loop reuse `decayed`/`absorb` verbatim — the point
+        // is that eviction runs the *same* arithmetic as accumulation,
+        // just over a shorter history.
+        let ring = std::mem::take(&mut self.ring);
+        self.has_history = false;
+        for slot in &ring {
+            let decayed = self.decayed(cfg.decay);
+            self.absorb(decayed, &slot.sums, &slot.sizes);
+        }
+        self.ring = ring;
     }
 
     /// Classify arbitrary points under the carried model (driver-side:
@@ -415,6 +531,13 @@ pub fn fit_stream_with_backend(
             "--inner-iters entries must be >= 1 (1 = pure online mode)".into(),
         ));
     }
+    if cfg.window > 0 && cfg.refresh_every > 0 {
+        return Err(VivaldiError::InvalidConfig(
+            "--window and landmark refresh are mutually exclusive: the eviction ring's sums \
+             are expressed in the current landmark basis, which a refresh would invalidate"
+                .into(),
+        ));
+    }
     if cfg.base.layout == LandmarkLayout::OneFiveD {
         // Same up-front shape validation as the batch fit; the point
         // dimension is per batch, checked again when each batch lands.
@@ -461,9 +584,12 @@ pub fn fit_stream_with_backend(
                 sizes[a as usize] += 1;
             }
             let decayed = mdl.decayed(cfg.decay);
-            mdl.absorb(decayed, BatchFinal { sums, sizes });
+            // Exactly one ring slot for the tail, through the same
+            // fold as a driven batch — never absorbed twice.
+            mdl.fold_batch(decayed, BatchFinal { sums, sizes }, cfg, batch_index, bn);
             acc.objective_curve.push(minvals.iter().map(|&v| v as f64).sum());
             acc.batch_iterations.push(0); // classified, no inner loop
+            acc.batch_points.push(bn);
             acc.assignments.extend(assign);
             batch_index += 1;
             continue;
@@ -517,7 +643,7 @@ pub fn fit_stream_with_backend(
         let fit = harness::assemble_fit(bn, p, outs, comm_stats)?;
         let fin = fin.expect("rank 0 reports the batch statistics");
         let mdl = model.as_mut().expect("model initialized on the first batch");
-        mdl.absorb(decayed, fin);
+        mdl.fold_batch(decayed, fin, cfg, batch_index, bn);
         if init {
             if cfg.base.layout == LandmarkLayout::OneFiveD {
                 // The per-grid-row landmark blocks the init batch
@@ -545,6 +671,19 @@ pub fn fit_stream_with_backend(
     if acc.batches() == 0 {
         return Err(VivaldiError::InvalidConfig("the stream yielded no points".into()));
     }
+    let window = (cfg.window > 0).then(|| {
+        let mdl = model.as_ref().expect("model initialized on the first batch");
+        WindowState {
+            slots: mdl
+                .ring
+                .iter()
+                .map(|s| WindowSlot { batch_index: s.batch_index, points: s.points })
+                .collect(),
+            evictions: mdl.evictions,
+            sums: mdl.sums.clone(),
+            weights: mdl.weights.clone(),
+        }
+    });
     Ok(StreamFitResult {
         n_total: acc.assignments.len(),
         batches: acc.batches(),
@@ -558,6 +697,8 @@ pub fn fit_stream_with_backend(
         timings: acc.timings,
         ranks: p,
         landmark_refreshes: refreshes,
+        batch_points: acc.batch_points,
+        window,
         assignments: acc.assignments,
     })
 }
@@ -1106,6 +1247,14 @@ mod tests {
         // zero entry in the inner-iteration schedule.
         let cfg = StreamConfig { inner_iters: vec![2, 0], ..rings_cfg(8, 32) };
         assert!(matches!(run(&cfg, 1), Err(VivaldiError::InvalidConfig(_))));
+        // window + landmark refresh are mutually exclusive.
+        let cfg = StreamConfig {
+            window: 2,
+            reservoir: 64,
+            refresh_every: 2,
+            ..rings_cfg(8, 32)
+        };
+        assert!(matches!(run(&cfg, 1), Err(VivaldiError::InvalidConfig(_))));
         // first batch smaller than m.
         let cfg = rings_cfg(48, 32);
         assert!(matches!(run(&cfg, 1), Err(VivaldiError::InvalidConfig(_))));
@@ -1147,6 +1296,28 @@ mod tests {
             fit_stream(8, &mut small_src, &cfg2),
             Err(VivaldiError::InvalidConfig(_))
         ));
+    }
+
+    #[test]
+    fn window_ring_evicts_and_reports() {
+        // W = 1, γ = 1 over 4 even batches: three evictions, and the
+        // carried model is exactly the last batch's statistics.
+        let ds = synth::gaussian_blobs(256, 3, 2, 4.5, 43);
+        let cfg = StreamConfig {
+            base: ApproxConfig { k: 2, m: 16, max_iters: 20, ..Default::default() },
+            batch: 64,
+            window: 1,
+            ..Default::default()
+        };
+        let mut src = MatrixSource::new(&ds.points);
+        let out = fit_stream(2, &mut src, &cfg).unwrap();
+        assert_eq!(out.batches, 4);
+        assert_eq!(out.batch_points, vec![64, 64, 64, 64]);
+        let w = out.window.expect("windowed run reports ring state");
+        assert_eq!(w.evictions, 3);
+        assert_eq!(w.slots, vec![WindowSlot { batch_index: 3, points: 64 }]);
+        // γ = 1 keeps raw counts: the surviving weight is one batch.
+        assert_eq!(w.weights.iter().sum::<f64>(), 64.0);
     }
 
     #[test]

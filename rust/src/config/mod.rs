@@ -120,6 +120,15 @@ pub struct Feasibility {
     /// Off-diagonal ranks run at the batch-tile + m·d/√P block scale
     /// for the whole stream. Bounded by the batch, never by n.
     pub landmark_stream_15d_bytes_per_rank: u64,
+    /// Sliding-window width the windowed estimate below assumes (0 =
+    /// infinite: the row degenerates to the unwindowed 1.5D stream).
+    pub stream_window: usize,
+    /// Worst-rank bytes of the **windowed** 1.5D block-cyclic stream:
+    /// the distributed stream-init peak plus the driver-held eviction
+    /// ring of `stream_window` k×m summary slots
+    /// ([`crate::model::analytic::stream_window_peak_bytes`]). The
+    /// ring is summary-scale — windowing never re-buffers points.
+    pub landmark_stream_window_bytes_per_rank: u64,
     pub budget: u64,
     pub exact_fits: bool,
     pub landmark_fits: bool,
@@ -133,6 +142,9 @@ pub struct Feasibility {
     /// Whether the streaming 1.5D block-cyclic worst rank fits the
     /// budget (requires a square grid, like the batch 1.5D rows).
     pub landmark_stream_15d_fits: bool,
+    /// Whether the windowed 1.5D stream's worst rank (init peak +
+    /// eviction ring) fits the budget.
+    pub landmark_stream_window_fits: bool,
 }
 
 impl Feasibility {
@@ -162,6 +174,26 @@ pub fn landmark_stream_feasibility(
     m: usize,
     p: usize,
     batch: usize,
+    mem: &MemModel,
+) -> Feasibility {
+    landmark_stream_window_feasibility(n, d, m, p, batch, 0, 0, mem)
+}
+
+/// [`landmark_stream_feasibility`] with a sliding window: the windowed
+/// row adds the driver-held eviction ring (`window` slots of k×m
+/// summary state) on top of the distributed stream-init peak — the
+/// footprint `run --algo landmark --stream --window W` plans against.
+/// `window = 0` degenerates to the unwindowed report (k is then
+/// irrelevant: an empty ring is free).
+#[allow(clippy::too_many_arguments)]
+pub fn landmark_stream_window_feasibility(
+    n: usize,
+    d: usize,
+    m: usize,
+    p: usize,
+    batch: usize,
+    k: usize,
+    window: usize,
     mem: &MemModel,
 ) -> Feasibility {
     use crate::util::ceil_div;
@@ -198,6 +230,10 @@ pub fn landmark_stream_feasibility(
     // the worst (diagonal) rank — mirrors the init batch's Gram + panel
     // charge exactly, with n replaced by the batch.
     let landmark_stream_15d = crate::model::analytic::stream_init_peak_bytes(m, d, batch, p);
+    // Windowed stream: the init peak plus the eviction ring's
+    // `window` summary slots (driver-held, summary-scale).
+    let landmark_stream_window =
+        crate::model::analytic::stream_window_peak_bytes(m, d, batch, p, k, window);
     Feasibility {
         n,
         d,
@@ -210,6 +246,8 @@ pub fn landmark_stream_feasibility(
         stream_batch: batch,
         landmark_stream_bytes_per_rank: landmark_stream,
         landmark_stream_15d_bytes_per_rank: landmark_stream_15d,
+        stream_window: window,
+        landmark_stream_window_bytes_per_rank: landmark_stream_window,
         budget: mem.budget,
         exact_fits: exact <= mem.budget,
         landmark_fits: landmark <= mem.budget,
@@ -221,6 +259,8 @@ pub fn landmark_stream_feasibility(
         landmark_stream_fits: landmark_stream <= mem.budget,
         landmark_stream_15d_fits: crate::util::is_perfect_square(p)
             && landmark_stream_15d <= mem.budget,
+        landmark_stream_window_fits: crate::util::is_perfect_square(p)
+            && landmark_stream_window <= mem.budget,
     }
 }
 
@@ -486,6 +526,31 @@ mod tests {
         // Non-square rank counts cannot run the 1.5D stream.
         let h = landmark_stream_feasibility(1 << 20, 2, 1024, 6, 2048, &mem);
         assert!(!h.landmark_stream_15d_fits);
+    }
+
+    #[test]
+    fn window_feasibility_charges_the_ring() {
+        // Same workload as the 1.5D stream test, with a window: the
+        // windowed row is the init peak plus window·(k·m summary)
+        // bytes, so a wide-enough ring — and only the ring — can tip
+        // the verdict.
+        let mem = MemModel { budget: 4 << 20, repl_factor: 1.0, redist_factor: 0.0 };
+        let f = landmark_stream_window_feasibility(1 << 20, 2, 1024, 16, 2048, 16, 8, &mem);
+        assert_eq!(f.stream_window, 8);
+        assert!(
+            f.landmark_stream_window_bytes_per_rank > f.landmark_stream_15d_bytes_per_rank,
+            "the ring must be charged on top of the init peak"
+        );
+        assert!(f.landmark_stream_window_fits, "a small ring still fits");
+        // Window 0 degenerates to the unwindowed row exactly.
+        let g = landmark_stream_window_feasibility(1 << 20, 2, 1024, 16, 2048, 16, 0, &mem);
+        assert_eq!(
+            g.landmark_stream_window_bytes_per_rank,
+            g.landmark_stream_15d_bytes_per_rank
+        );
+        // A pathologically wide ring busts the budget on its own.
+        let h = landmark_stream_window_feasibility(1 << 20, 2, 1024, 16, 2048, 16, 100_000, &mem);
+        assert!(!h.landmark_stream_window_fits);
     }
 
     #[test]

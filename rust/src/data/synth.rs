@@ -105,6 +105,140 @@ pub fn anisotropic_mixture(n: usize, d: usize, k: usize, seed: u64) -> Dataset {
     }
 }
 
+// ---------------------------------------------------------------------
+// Drift-injection generators: points in **batch arrival order** over a
+// batch schedule, for the sliding-window streaming wall
+// (`rust/tests/window.rs`). Labels are always the true generating
+// cluster, so per-batch NMI against per-batch label slices measures
+// how fast a windowed model tracks the regime change.
+// ---------------------------------------------------------------------
+
+/// Cluster migration: `batches` batches of `batch` points from `k`
+/// isotropic blobs; at batch `switch`, cluster 0's center jumps by
+/// 2·`separation` along a seed-fixed random direction (a step regime
+/// change). Labels stay the generating cluster throughout.
+pub fn migrating_blobs(
+    batch: usize,
+    batches: usize,
+    d: usize,
+    k: usize,
+    separation: f64,
+    switch: usize,
+    seed: u64,
+) -> Dataset {
+    assert!(k >= 1 && d >= 1 && batch >= k && batches >= 1);
+    let n = batch * batches;
+    let mut rng = Rng::new(seed);
+    let centers: Vec<Vec<f64>> =
+        (0..k).map(|_| (0..d).map(|_| rng.normal() * separation).collect()).collect();
+    // The post-switch home of cluster 0: a jump of 2·separation along
+    // a random unit-ish direction.
+    let dir: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let norm = dir.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-12);
+    let moved: Vec<f64> = centers[0]
+        .iter()
+        .zip(&dir)
+        .map(|(&c, &v)| c + 2.0 * separation * v / norm)
+        .collect();
+    let mut data = Vec::with_capacity(n * d);
+    let mut labels = Vec::with_capacity(n);
+    for b in 0..batches {
+        for i in 0..batch {
+            let c = i % k;
+            labels.push(c as u32);
+            let center = if c == 0 && b >= switch { &moved } else { &centers[c] };
+            for f in 0..d {
+                data.push((center[f] + rng.normal()) as f32);
+            }
+        }
+    }
+    Dataset {
+        points: DenseMatrix::from_vec(n, d, data),
+        labels,
+        name: format!("migrate(batch={batch},batches={batches},k={k},switch={switch})"),
+    }
+}
+
+/// Cluster birth/death: before batch `switch` the stream draws from
+/// clusters `0..k-1`; from batch `switch` on, cluster 0 dies and
+/// cluster `k-1` is born (draws come from `1..k`). Labels are global
+/// cluster ids over all `k` clusters, so the label set itself changes
+/// at the regime boundary. Requires `k >= 2`.
+pub fn birth_death_blobs(
+    batch: usize,
+    batches: usize,
+    d: usize,
+    k: usize,
+    separation: f64,
+    switch: usize,
+    seed: u64,
+) -> Dataset {
+    assert!(k >= 2 && d >= 1 && batch >= k - 1 && batches >= 1);
+    let n = batch * batches;
+    let mut rng = Rng::new(seed);
+    let centers: Vec<Vec<f64>> =
+        (0..k).map(|_| (0..d).map(|_| rng.normal() * separation).collect()).collect();
+    let mut data = Vec::with_capacity(n * d);
+    let mut labels = Vec::with_capacity(n);
+    for b in 0..batches {
+        for i in 0..batch {
+            // k-1 live clusters per regime, balanced within the batch.
+            let c = if b < switch { i % (k - 1) } else { 1 + i % (k - 1) };
+            labels.push(c as u32);
+            for f in 0..d {
+                data.push((centers[c][f] + rng.normal()) as f32);
+            }
+        }
+    }
+    Dataset {
+        points: DenseMatrix::from_vec(n, d, data),
+        labels,
+        name: format!("birthdeath(batch={batch},batches={batches},k={k},switch={switch})"),
+    }
+}
+
+/// Covariance rotation: anisotropic clusters whose principal axis
+/// rotates in the first two coordinates by π/2 spread linearly over
+/// the batch schedule — the cluster *centers* never move, only the
+/// noise shape drifts. Requires `d >= 2`.
+pub fn rotating_mixture(
+    batch: usize,
+    batches: usize,
+    d: usize,
+    k: usize,
+    seed: u64,
+) -> Dataset {
+    assert!(k >= 1 && d >= 2 && batch >= k && batches >= 1);
+    let n = batch * batches;
+    let mut rng = Rng::new(seed);
+    let centers: Vec<Vec<f64>> =
+        (0..k).map(|_| (0..d).map(|_| rng.normal() * 4.0).collect()).collect();
+    // Strongly anisotropic in the leading plane: long axis 2.0, short
+    // axis 0.3, isotropic 1.0 beyond it.
+    let (long, short) = (2.0f64, 0.3f64);
+    let mut data = Vec::with_capacity(n * d);
+    let mut labels = Vec::with_capacity(n);
+    for b in 0..batches {
+        let theta = std::f64::consts::FRAC_PI_2 * b as f64 / batches.max(2) as f64;
+        let (cos, sin) = (theta.cos(), theta.sin());
+        for i in 0..batch {
+            let c = i % k;
+            labels.push(c as u32);
+            let (u, v) = (rng.normal() * long, rng.normal() * short);
+            data.push((centers[c][0] + u * cos - v * sin) as f32);
+            data.push((centers[c][1] + u * sin + v * cos) as f32);
+            for f in 2..d {
+                data.push((centers[c][f] + rng.normal()) as f32);
+            }
+        }
+    }
+    Dataset {
+        points: DenseMatrix::from_vec(n, d, data),
+        labels,
+        name: format!("rotate(batch={batch},batches={batches},k={k})"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -143,5 +277,79 @@ mod tests {
         for c in 0..3u32 {
             assert_eq!(ds.labels.iter().filter(|&&l| l == c).count(), 30);
         }
+    }
+
+    #[test]
+    fn migration_moves_cluster_zero_mean() {
+        let (batch, batches, d, switch) = (60, 6, 3, 3);
+        let ds = migrating_blobs(batch, batches, d, 2, 5.0, switch, 21);
+        assert_eq!(ds.n(), batch * batches);
+        // Mean of cluster-0 points before vs after the switch: the
+        // jump is 2·sep = 10, so the means must sit far apart.
+        let mean = |lo: usize, hi: usize| -> Vec<f64> {
+            let mut acc = vec![0.0f64; d];
+            let mut cnt = 0usize;
+            for i in lo..hi {
+                if ds.labels[i] == 0 {
+                    for (f, a) in acc.iter_mut().enumerate() {
+                        *a += ds.points.get(i, f) as f64;
+                    }
+                    cnt += 1;
+                }
+            }
+            acc.iter().map(|a| a / cnt as f64).collect()
+        };
+        let before = mean(0, switch * batch);
+        let after = mean(switch * batch, batch * batches);
+        let dist: f64 =
+            before.iter().zip(&after).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+        assert!(dist > 5.0, "cluster 0 must actually migrate (moved {dist:.2})");
+        // Determinism.
+        let again = migrating_blobs(batch, batches, d, 2, 5.0, switch, 21);
+        assert_eq!(ds.points, again.points);
+    }
+
+    #[test]
+    fn birth_death_swaps_label_support() {
+        let (batch, batches, switch) = (40, 4, 2);
+        let ds = birth_death_blobs(batch, batches, 2, 3, 5.0, switch, 22);
+        let first = &ds.labels[..switch * batch];
+        let second = &ds.labels[switch * batch..];
+        assert!(first.iter().all(|&l| l < 2), "cluster 2 unborn in the first regime");
+        assert!(second.iter().all(|&l| l >= 1), "cluster 0 dead in the second regime");
+        assert!(first.contains(&0) && second.contains(&2));
+    }
+
+    #[test]
+    fn rotation_keeps_centers_but_turns_covariance() {
+        let (batch, batches) = (200, 4);
+        let ds = rotating_mixture(batch, batches, 2, 1, 23);
+        // One cluster: per-batch covariance orientation in the leading
+        // plane rotates, so the xy-correlation must change sign-of-
+        // direction between the first and last batch while the mean
+        // stays put.
+        let stats = |b: usize| -> (f64, f64, f64) {
+            let (lo, hi) = (b * batch, (b + 1) * batch);
+            let (mut mx, mut my) = (0.0f64, 0.0f64);
+            for i in lo..hi {
+                mx += ds.points.get(i, 0) as f64;
+                my += ds.points.get(i, 1) as f64;
+            }
+            mx /= batch as f64;
+            my /= batch as f64;
+            let (mut cxx, mut cyy) = (0.0f64, 0.0f64);
+            for i in lo..hi {
+                let (x, y) = (ds.points.get(i, 0) as f64 - mx, ds.points.get(i, 1) as f64 - my);
+                cxx += x * x;
+                cyy += y * y;
+            }
+            (mx, cxx / batch as f64, cyy / batch as f64)
+        };
+        let (m0, xx0, yy0) = stats(0);
+        let (m3, xx3, yy3) = stats(batches - 1);
+        assert!((m0 - m3).abs() < 1.0, "centers must not drift");
+        assert!(xx0 > yy0 * 2.0, "batch 0: long axis along x (xx={xx0:.2}, yy={yy0:.2})");
+        assert!(xx3 < xx0, "late batches rotate variance out of x (xx0={xx0:.2}, xx3={xx3:.2})");
+        assert!(yy3 > yy0, "…and into y (yy0={yy0:.2}, yy3={yy3:.2})");
     }
 }

@@ -123,6 +123,8 @@ pub struct StreamAccumulator {
     /// Total iterations across batches.
     pub iterations: usize,
     pub batch_iterations: Vec<usize>,
+    /// Points contributed by each batch in arrival order.
+    pub batch_points: Vec<usize>,
     /// Final objective of each batch.
     pub objective_curve: Vec<f64>,
     /// True while every absorbed batch converged.
@@ -146,6 +148,7 @@ impl StreamAccumulator {
             assignments: Vec::new(),
             iterations: 0,
             batch_iterations: Vec::new(),
+            batch_points: Vec::new(),
             objective_curve: Vec::new(),
             converged: true,
             peak_mem: 0,
@@ -161,6 +164,7 @@ impl StreamAccumulator {
         debug_assert_eq!(batch.ranks, self.ranks, "batches must run on the same rank count");
         self.iterations += batch.iterations;
         self.batch_iterations.push(batch.iterations);
+        self.batch_points.push(batch.assignments.len());
         self.objective_curve.push(batch.objective_curve.last().copied().unwrap_or(0.0));
         self.converged &= batch.converged;
         self.peak_mem = self.peak_mem.max(batch.peak_mem);
@@ -241,6 +245,7 @@ mod tests {
         assert_eq!(acc.assignments, vec![0, 1, 0, 1, 1]);
         assert_eq!(acc.iterations, 5);
         assert_eq!(acc.batch_iterations, vec![3, 2]);
+        assert_eq!(acc.batch_points, vec![3, 2]);
         assert_eq!(acc.objective_curve, vec![5.0, 3.0]);
         assert!(!acc.converged, "one unconverged batch taints the stream");
         assert_eq!(acc.peak_mem, 100);

@@ -150,6 +150,24 @@
 //! println!("{} batches, {} points labeled", out.batches, out.assignments.len());
 //! ```
 //!
+//! ### When old data must stop mattering: the sliding window
+//!
+//! For drifting streams, [`approx::stream::StreamConfig::window`]
+//! carries only the last W batches: the model keeps a ring of
+//! per-batch k×m summary deltas and **exactly evicts** a batch's
+//! contribution — a signed refold of the survivors, not a decay
+//! approximation — the moment it falls out of the window. A window
+//! that never evicts is bit-identical to the infinite stream; the
+//! ring costs W·(4·k·m + 8·k + 16) bytes
+//! ([`model::analytic::stream_window_peak_bytes`]), independent of
+//! both the stream length and the point dimension. Drift sources to
+//! test against live in [`data::synth`] (`migrating_blobs`,
+//! `birth_death_blobs`, `rotating_mixture`); `rust/tests/window.rs`
+//! pins bit-identity, exact eviction, tail accounting, and NMI
+//! through a regime change, and `benches/fig6_sliding_window.rs`
+//! measures the windowed stream against the single-device
+//! [`sliding_window`] re-fit baseline on the same drifting source.
+//!
 //! See `DESIGN.md` for the full system inventory and the experiment
 //! index, and `EXPERIMENTS.md` for the paper-vs-measured record.
 

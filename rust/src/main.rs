@@ -67,6 +67,9 @@ fn print_help() {
          \x20                   streaming extras: --stream --batch B [--decay G]\n\
          \x20                   [--reservoir R --refresh-every E] — mini-batch\n\
          \x20                   landmark fit, peak memory ∝ B not n\n\
+         \x20                   [--window W] — sliding window: carry only the\n\
+         \x20                   last W batches, exactly evicting older ones\n\
+         \x20                   (0 = infinite; excludes --refresh-every)\n\
          \x20                   [--inner-iters N[,N2,...]] — per-batch inner\n\
          \x20                   iteration schedule (last entry repeats; 1 =\n\
          \x20                   pure online mode)\n\
@@ -269,6 +272,10 @@ fn cmd_run_landmark(f: &Flags) -> i32 {
         eprintln!("--inner-iters is a per-batch schedule and requires --stream");
         return 2;
     }
+    if f.get("--window").is_some() && !stream {
+        eprintln!("--window is a sliding-window width in batches and requires --stream");
+        return 2;
+    }
     let batch = f.usize_or("--batch", (n / 8).max(m).max(g));
 
     // Streamed libSVM off disk: the real Table-II files never need to
@@ -390,7 +397,7 @@ fn cmd_run_landmark(f: &Flags) -> i32 {
             eprintln!("fit failed: {e}");
             if matches!(e, vivaldi::VivaldiError::OutOfMemory { .. }) {
                 let report_mem = mem.unwrap_or_else(MemModel::unlimited);
-                print_feasibility_report(data.n(), data.d(), m, g, data.n(), &report_mem);
+                print_feasibility_report(data.n(), data.d(), m, g, data.n(), k, 0, &report_mem);
             }
             1
         }
@@ -399,16 +406,20 @@ fn cmd_run_landmark(f: &Flags) -> i32 {
 
 /// The OOM planning report: which path (exact / landmark 1D / landmark
 /// 1.5D replicated-W / 1.5D block-cyclic-W / streaming at the given
-/// batch) fits the per-rank budget.
+/// batch / windowed streaming) fits the per-rank budget.
+#[allow(clippy::too_many_arguments)]
 fn print_feasibility_report(
     n: usize,
     d: usize,
     m: usize,
     g: usize,
     batch: usize,
+    k: usize,
+    window: usize,
     mem: &vivaldi::config::MemModel,
 ) {
-    let feas = vivaldi::config::landmark_stream_feasibility(n, d, m, g, batch, mem);
+    let feas =
+        vivaldi::config::landmark_stream_window_feasibility(n, d, m, g, batch, k, window, mem);
     eprintln!(
         "feasibility @ {} budget/rank:",
         vivaldi::util::human_bytes(feas.budget)
@@ -445,6 +456,15 @@ fn print_feasibility_report(
         vivaldi::util::human_bytes(feas.landmark_stream_15d_bytes_per_rank),
         feas.landmark_stream_15d_fits
     );
+    if feas.stream_window > 0 {
+        eprintln!(
+            "  stream 1.5D windowed (B={}, W={}) {:>12}  fits: {}",
+            feas.stream_batch,
+            feas.stream_window,
+            vivaldi::util::human_bytes(feas.landmark_stream_window_bytes_per_rank),
+            feas.landmark_stream_window_fits
+        );
+    }
     if feas.recommends_landmark() {
         eprintln!("  -> only the landmark path can hold this workload");
     }
@@ -506,9 +526,12 @@ fn cmd_run_landmark_stream(
         reservoir: f.usize_or("--reservoir", 0),
         refresh_every: f.usize_or("--refresh-every", 0),
         inner_iters,
+        window: f.usize_or("--window", 0),
     };
+    let window_note =
+        if cfg.window > 0 { format!(" window={}", cfg.window) } else { String::new() };
     println!(
-        "landmark stream fit: layout={}{} G={g} n={} d={d} m={m} k={} B={batch} decay={decay}",
+        "landmark stream fit: layout={}{} G={g} n={} d={d} m={m} k={} B={batch} decay={decay}{window_note}",
         cfg.base.layout.name(),
         if auto_layout { " (auto)" } else { "" },
         if n_report > 0 { n_report.to_string() } else { "?".into() },
@@ -527,6 +550,13 @@ fn cmd_run_landmark_stream(
                 out.landmark_refreshes,
                 vivaldi::util::human_bytes(out.peak_mem),
             );
+            if let Some(w) = &out.window {
+                println!(
+                    "  window: {} slot(s) resident, {} batch(es) exactly evicted",
+                    w.slots.len(),
+                    w.evictions
+                );
+            }
             let crit = vivaldi::util::timing::Stopwatch::max_over(&out.timings);
             for (phase, secs) in crit.phases() {
                 println!("  phase {phase:<8} {secs:.4}s (critical path)");
@@ -547,7 +577,16 @@ fn cmd_run_landmark_stream(
             eprintln!("stream fit failed: {e}");
             if matches!(e, vivaldi::VivaldiError::OutOfMemory { .. }) {
                 let report_mem = mem.unwrap_or_else(vivaldi::config::MemModel::unlimited);
-                print_feasibility_report(n_report.max(batch), d, m, g, batch, &report_mem);
+                print_feasibility_report(
+                    n_report.max(batch),
+                    d,
+                    m,
+                    g,
+                    batch,
+                    cfg.base.k,
+                    cfg.window,
+                    &report_mem,
+                );
             }
             1
         }

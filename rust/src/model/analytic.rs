@@ -231,6 +231,25 @@ pub fn stream_init_peak_bytes(m: usize, d: usize, batch: usize, p: usize) -> u64
         + w_blockcyclic_state_bytes(m, p)
 }
 
+/// Per-rank peak bytes of the **windowed** stream: the distributed
+/// stream-init peak ([`stream_init_peak_bytes`]) plus the driver-held
+/// eviction ring — `window` slots each holding a k×m f32 sum block,
+/// k u64 cluster sizes, and a two-word provenance header. The ring is
+/// O(window·k·m): independent of the stream length *and* of the point
+/// dimension — windowing costs exactly the summary state it keeps,
+/// never a second copy of the data.
+pub fn stream_window_peak_bytes(
+    m: usize,
+    d: usize,
+    batch: usize,
+    p: usize,
+    k: usize,
+    window: usize,
+) -> u64 {
+    let slot = 4 * (k * m) as u64 + 8 * k as u64 + 16;
+    stream_init_peak_bytes(m, d, batch, p) + window as u64 * slot
+}
+
 /// All Table I rows for a parameter set, in the paper's order:
 /// (algorithm, K cost, Dᵀ cost).
 pub fn table1(c: CostParams) -> Vec<(&'static str, CommCost, CommCost)> {
@@ -412,6 +431,24 @@ mod tests {
             stream_init_peak_bytes(m, d, 1024, 64) < replicated_w + 4 * (1024 / 8) * (m as u64 / 8),
             "q=8 init peak must sit well under the replicated diagonal"
         );
+    }
+
+    #[test]
+    fn window_peak_adds_ring_not_stream() {
+        let (m, d, batch, p, k) = (1024usize, 64usize, 2048usize, 16usize, 64usize);
+        let base = stream_init_peak_bytes(m, d, batch, p);
+        // Zero window = the unwindowed init peak exactly.
+        assert_eq!(stream_window_peak_bytes(m, d, batch, p, k, 0), base);
+        let w8 = stream_window_peak_bytes(m, d, batch, p, k, 8);
+        let w16 = stream_window_peak_bytes(m, d, batch, p, k, 16);
+        // Linear in the window width…
+        assert_eq!(w16 - w8, w8 - base);
+        // …and each slot is summary-scale (k·m f32 + k u64 + header),
+        // never batch- or d-scale.
+        assert_eq!(w8 - base, 8 * (4 * (k * m) as u64 + 8 * k as u64 + 16));
+        // Doubling d moves the init term only — the ring term holds.
+        let w8_d = stream_window_peak_bytes(m, 2 * d, batch, p, k, 8);
+        assert_eq!(w8_d - stream_init_peak_bytes(m, 2 * d, batch, p), w8 - base);
     }
 
     #[test]

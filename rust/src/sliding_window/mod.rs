@@ -125,6 +125,34 @@ pub fn sliding_window_fit(
     }
 }
 
+/// The baseline's sliding-window **re-fit**: concatenate the last
+/// `window` batches of `history` and run [`sliding_window_fit`] on the
+/// result from scratch — exactly what the disk-resident scheme does
+/// when the window slides, since it carries no summary state to evict
+/// from. Every slide re-pays the full Gram recomputation over the
+/// window; the windowed landmark stream replaces this with an O(k·m)
+/// ring fold (`benches/fig6_sliding_window.rs` measures the gap).
+pub fn sliding_window_refit(
+    history: &[DenseMatrix],
+    window: usize,
+    cfg: &SwConfig,
+    backend: &dyn ComputeBackend,
+) -> SwResult {
+    assert!(!history.is_empty() && window >= 1);
+    let start = history.len().saturating_sub(window);
+    let live = &history[start..];
+    let d = live[0].cols();
+    let n: usize = live.iter().map(|b| b.rows()).sum();
+    let mut pts = DenseMatrix::zeros(n, d);
+    let mut row = 0;
+    for b in live {
+        assert_eq!(b.cols(), d, "window batches must share one dimension");
+        pts.paste(row, 0, b);
+        row += b.rows();
+    }
+    sliding_window_fit(&pts, cfg, backend)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,6 +188,26 @@ mod tests {
         // ceil(50/16) = 4 blocks per iteration × 3 iterations.
         assert_eq!(out.blocks_recomputed, 12);
         assert_eq!(out.iterations, 3);
+    }
+
+    #[test]
+    fn refit_runs_on_exactly_the_surviving_window() {
+        let ds = synth::gaussian_blobs(120, 3, 2, 4.0, 54);
+        let be = NativeBackend::new();
+        let cfg = SwConfig { k: 2, max_iters: 30, block: 32, ..Default::default() };
+        // Three 40-point batches of history.
+        let history: Vec<_> =
+            (0..3).map(|b| ds.points.row_block(40 * b, 40 * (b + 1))).collect();
+        // Window 1: identical to a from-scratch fit on the last batch.
+        let refit = sliding_window_refit(&history, 1, &cfg, &be);
+        let direct = sliding_window_fit(&history[2], &cfg, &be);
+        assert_eq!(refit.assignments, direct.assignments);
+        assert_eq!(refit.iterations, direct.iterations);
+        // Window ≥ history: identical to fitting everything.
+        let all = sliding_window_refit(&history, 5, &cfg, &be);
+        let full = sliding_window_fit(&ds.points, &cfg, &be);
+        assert_eq!(all.assignments, full.assignments);
+        assert_eq!(all.assignments.len(), 120);
     }
 
     #[test]

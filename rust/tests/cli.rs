@@ -26,6 +26,7 @@ fn help_lists_landmark_and_stream_flags() {
     assert!(stdout.contains("--landmark-layout 1d|1.5d|auto"), "{stdout}");
     assert!(stdout.contains("--stream"), "{stdout}");
     assert!(stdout.contains("--inner-iters"), "{stdout}");
+    assert!(stdout.contains("--window W"), "{stdout}");
 }
 
 #[test]
@@ -172,6 +173,38 @@ fn stream_inner_iters_schedule() {
         run(&["run", "--algo", "landmark", "--n", "256", "--m", "32", "--inner-iters", "1"]);
     assert_eq!(code, 2, "stderr: {stderr}");
     assert!(stderr.contains("--inner-iters") && stderr.contains("--stream"), "{stderr}");
+}
+
+/// `--window W` turns on sliding-window streaming: the run reports the
+/// resident ring and the exact eviction count (4 batches through a
+/// 2-slot window leave 2 resident, 2 evicted). Without `--stream` the
+/// flag is a loud usage error, and combining it with the landmark
+/// refresh path is rejected before any batch runs.
+#[test]
+fn stream_window_flag_parses_reports_and_rejects() {
+    let (code, stdout, stderr) = run(&[
+        "run", "--algo", "landmark", "--stream", "--batch", "64", "--n", "256", "--m", "32",
+        "--k", "2", "--gpus", "4", "--iters", "5", "--window", "2",
+    ]);
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(stdout.contains("window=2"), "{stdout}");
+    assert!(stdout.contains("window: 2 slot(s) resident, 2 batch(es) exactly evicted"), "{stdout}");
+
+    // --window without --stream is a usage error, not a silent no-op.
+    let (code, _, stderr) =
+        run(&["run", "--algo", "landmark", "--n", "256", "--m", "32", "--window", "2"]);
+    assert_eq!(code, 2, "stderr: {stderr}");
+    assert!(stderr.contains("--window") && stderr.contains("--stream"), "{stderr}");
+
+    // Window + landmark refresh would evict ring sums expressed in a
+    // dead landmark basis — rejected up front.
+    let (code, _, stderr) = run(&[
+        "run", "--algo", "landmark", "--stream", "--batch", "64", "--n", "256", "--m", "32",
+        "--k", "2", "--gpus", "4", "--window", "2", "--reservoir", "48", "--refresh-every",
+        "2",
+    ]);
+    assert_eq!(code, 1, "stderr: {stderr}");
+    assert!(stderr.contains("mutually exclusive"), "{stderr}");
 }
 
 #[test]

@@ -1,0 +1,187 @@
+//! The windowed-streaming wall: infinite-window bit-identity against
+//! `fit_stream`, the exact-eviction pin (a periodic stream's windowed
+//! model `==` the model of a stream that only ever saw the survivors),
+//! tail-batch ring accounting on a non-multiple-length stream, and
+//! NMI through injected drift.
+
+use vivaldi::approx::stream::{fit_stream, StreamConfig, StreamFitResult, WindowSlot};
+use vivaldi::approx::{ApproxConfig, LandmarkLayout};
+use vivaldi::data::stream::MatrixSource;
+use vivaldi::data::synth;
+use vivaldi::dense::DenseMatrix;
+use vivaldi::quality::nmi;
+
+/// NMI of batch `b`'s assignment slice against the matching label
+/// slice, located via `batch_points` offsets.
+fn batch_nmi(out: &StreamFitResult, labels: &[u32], k: usize, b: usize) -> f64 {
+    let start: usize = out.batch_points[..b].iter().sum();
+    let end = start + out.batch_points[b];
+    nmi(&out.assignments[start..end], &labels[start..end], k)
+}
+
+/// Acceptance anchor: a window wide enough to never evict is
+/// **bit-identical** to the infinite stream — exact `==` on
+/// assignments, per-batch iteration counts, and the f64 objective
+/// curve — on both landmark layouts at p ∈ {1, 4}. The ring refold
+/// replays the identical f32/f64 operation sequence as incremental
+/// absorption, so this holds exactly, not approximately.
+#[test]
+fn infinite_window_is_bit_identical_to_fit_stream() {
+    let ds = synth::gaussian_blobs(256, 4, 3, 4.5, 401);
+    for layout in [LandmarkLayout::OneD, LandmarkLayout::OneFiveD] {
+        for p in [1usize, 4] {
+            let mk = |window| StreamConfig {
+                base: ApproxConfig { k: 3, m: 32, layout, max_iters: 30, ..Default::default() },
+                batch: 64,
+                window,
+                ..Default::default()
+            };
+            let mut s0 = MatrixSource::new(&ds.points);
+            let inf = fit_stream(p, &mut s0, &mk(0)).unwrap();
+            let mut s1 = MatrixSource::new(&ds.points);
+            let win = fit_stream(p, &mut s1, &mk(16)).unwrap();
+            let tag = format!("layout={} p={p}", layout.name());
+            assert_eq!(win.assignments, inf.assignments, "{tag}: assignments");
+            assert_eq!(win.batch_iterations, inf.batch_iterations, "{tag}: iterations");
+            assert_eq!(win.objective_curve, inf.objective_curve, "{tag}: objective");
+            assert_eq!(win.converged, inf.converged);
+            assert_eq!(win.batch_points, vec![64; 4]);
+            assert!(inf.window.is_none(), "{tag}: infinite stream reports no ring");
+            let state = win.window.expect("windowed stream must report its ring");
+            assert_eq!(state.evictions, 0, "{tag}: a 16-wide window never evicts 4 batches");
+            let slots: Vec<_> =
+                (0..4).map(|b| WindowSlot { batch_index: b, points: 64 }).collect();
+            assert_eq!(state.slots, slots, "{tag}: every batch survives");
+        }
+    }
+}
+
+/// The exact-eviction pin. Stream A delivers [X, Y, X, Y] with W = 2;
+/// stream B delivers only [X, Y] with the same config. A's first two
+/// batches are bitwise the same run as B (identical inputs, identical
+/// code path, landmarks cut from X both times), and its last two
+/// batches re-converge to the same per-batch assignments — so after A
+/// evicts batches 0 and 1, its carried sums/weights must equal B's
+/// **exactly** (`==` on f32/f64), because eviction is exact, not an
+/// approximation. Checked on both layouts at p ∈ {1, 4}.
+#[test]
+fn exact_eviction_matches_fit_over_surviving_batches() {
+    let b = 64;
+    let ds = synth::gaussian_blobs(2 * b, 4, 2, 6.0, 411);
+    let x = ds.points.row_block(0, b);
+    let y = ds.points.row_block(b, 2 * b);
+    let periodic = DenseMatrix::vstack(&[x.clone(), y.clone(), x, y]);
+    for layout in [LandmarkLayout::OneD, LandmarkLayout::OneFiveD] {
+        for p in [1usize, 4] {
+            let cfg = StreamConfig {
+                base: ApproxConfig { k: 2, m: 24, layout, max_iters: 40, ..Default::default() },
+                batch: b,
+                window: 2,
+                ..Default::default()
+            };
+            let mut sa = MatrixSource::new(&periodic);
+            let a = fit_stream(p, &mut sa, &cfg).unwrap();
+            let mut sb = MatrixSource::new(&ds.points);
+            let bb = fit_stream(p, &mut sb, &cfg).unwrap();
+            let tag = format!("layout={} p={p}", layout.name());
+
+            // Guard the construction before pinning the model: A's
+            // prefix is the same run as B, and A's suffix re-converges
+            // to the same per-batch labelings (well-separated blobs).
+            assert_eq!(&a.assignments[..2 * b], &bb.assignments[..], "{tag}: shared prefix");
+            assert_eq!(
+                &a.assignments[2 * b..3 * b],
+                &a.assignments[..b],
+                "{tag}: batch 2 must re-converge to batch 0's labeling"
+            );
+            assert_eq!(
+                &a.assignments[3 * b..],
+                &a.assignments[b..2 * b],
+                "{tag}: batch 3 must re-converge to batch 1's labeling"
+            );
+
+            let wa = a.window.expect("windowed run A");
+            let wb = bb.window.expect("windowed run B");
+            assert_eq!(wa.evictions, 2, "{tag}: batches 0 and 1 fell out of the window");
+            assert_eq!(wb.evictions, 0, "{tag}: B never filled past the window");
+            assert_eq!(
+                wa.slots,
+                vec![
+                    WindowSlot { batch_index: 2, points: b },
+                    WindowSlot { batch_index: 3, points: b }
+                ],
+                "{tag}"
+            );
+            // The pin: after exact eviction the carried model is
+            // bitwise the fold of the survivors alone.
+            assert_eq!(wa.sums, wb.sums, "{tag}: carried sums must match exactly");
+            assert_eq!(wa.weights, wb.weights, "{tag}: carried weights must match exactly");
+        }
+    }
+}
+
+/// A non-multiple-length stream evicts cleanly: the classified tail
+/// (too small to shard across p = 8 ranks) enters **exactly one** ring
+/// slot — no double count, no dropped slot — and the surviving window
+/// accounts for exactly the surviving points.
+#[test]
+fn tail_batch_owns_one_ring_slot_and_evicts_cleanly() {
+    let ds = synth::gaussian_blobs(260, 3, 2, 4.5, 421);
+    let cfg = StreamConfig {
+        base: ApproxConfig { k: 2, m: 24, max_iters: 20, ..Default::default() },
+        batch: 64,
+        window: 2,
+        ..Default::default()
+    };
+    let mut src = MatrixSource::new(&ds.points);
+    let out = fit_stream(8, &mut src, &cfg).unwrap();
+    assert_eq!(out.batches, 5, "4 driven batches + the 4-point classified tail");
+    assert_eq!(out.batch_points, vec![64, 64, 64, 64, 4]);
+    assert_eq!(*out.batch_iterations.last().unwrap(), 0, "tail runs no inner loop");
+    let w = out.window.expect("windowed run");
+    assert_eq!(w.evictions, 3, "batches 0–2 evicted; 5 batches through a 2-slot ring");
+    assert_eq!(
+        w.slots,
+        vec![
+            WindowSlot { batch_index: 3, points: 64 },
+            WindowSlot { batch_index: 4, points: 4 }
+        ]
+    );
+    // The carried weights sum to exactly the surviving 64 + 4 points
+    // (integer counts folded in f64: exact).
+    assert_eq!(w.weights.iter().sum::<f64>(), 68.0);
+    assert_eq!(w.weights.len(), 2);
+    assert_eq!(w.sums.len(), 2 * 24);
+}
+
+/// The drift wall: on a migrating-blobs stream (cluster 0 jumps by
+/// 2·separation at the switch batch) a W = 2 windowed stream must be
+/// clustering the new regime at full quality within 5 batches of the
+/// regime change — the stale pre-switch summaries are exactly evicted
+/// instead of lingering forever.
+#[test]
+fn windowed_stream_tracks_migration_within_five_batches() {
+    let (batch, batches, k, switch) = (64usize, 10usize, 3usize, 4usize);
+    let ds = synth::migrating_blobs(batch, batches, 4, k, 6.0, switch, 431);
+    let cfg = StreamConfig {
+        base: ApproxConfig { k, m: 24, max_iters: 30, ..Default::default() },
+        batch,
+        window: 2,
+        ..Default::default()
+    };
+    let mut src = MatrixSource::new(&ds.points);
+    let out = fit_stream(4, &mut src, &cfg).unwrap();
+    assert_eq!(out.batches, batches);
+    assert_eq!(out.window.as_ref().map(|w| w.evictions), Some(batches - 2));
+    // Before the switch the stationary stream clusters cleanly.
+    for b in 1..switch {
+        let score = batch_nmi(&out, &ds.labels, k, b);
+        assert!(score >= 0.85, "pre-switch batch {b}: nmi={score}");
+    }
+    // Within 5 batches of the regime change the windowed model has
+    // forgotten the old cluster-0 location and tracks the new one.
+    for b in switch + 5..batches {
+        let score = batch_nmi(&out, &ds.labels, k, b);
+        assert!(score >= 0.85, "post-switch batch {b}: nmi={score}");
+    }
+}
