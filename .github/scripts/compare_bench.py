@@ -1,6 +1,6 @@
 #!/usr/bin/env python3
 """Diff two BENCH_landmark.json files and fail on a counted-comm-volume
-regression.
+regression; additionally gate measured wall times with a softer band.
 
 Usage: compare_bench.py PREV.json CURRENT.json [--threshold 0.15]
 
@@ -12,6 +12,13 @@ byte counts incomparable, in which case the diff is skipped with a
 notice. Exit 1 iff any matched phase grew by more than the threshold.
 New rows/phases (no previous measurement) and removed ones are
 reported informationally and never fail the build.
+
+Wall-time gate: each row's `wall_s` and each `local_wall` entry's
+scalar/threaded seconds are compared ONLY when both files carry
+provenance "measured" (an "analytic-desk" baseline has no real clock —
+its walls are never gated). Walls are noisy, so the band is softer
+than the volume gate: a warning above +30% growth, a failure at >=2x.
+The counted-volume gate above is unaffected by any wall result.
 """
 
 import json
@@ -94,12 +101,58 @@ def main():
             if ratio > threshold:
                 regressions.append((key, phase, ob, nb))
 
+    # Wall-time band: measured-vs-measured only; warn > +30%, fail >= 2x.
+    wall_failures = []
+    if prov_prev == "measured" and prov_cur == "measured":
+        WARN, FAIL = 0.30, 1.0  # growth ratios: +30% warn, +100% (2x) fail
+        print("\ncomparing wall times (warn > +30%, fail >= 2x)")
+
+        def gate_wall(label, old_s, new_s):
+            if old_s is None or new_s is None or old_s <= 0:
+                return
+            growth = new_s / old_s - 1.0
+            if growth >= FAIL:
+                flag = "WALL REGRESSION"
+                wall_failures.append((label, old_s, new_s))
+            elif growth > WARN:
+                flag = "WARNING: slower"
+            else:
+                flag = "ok"
+            print(f"  {label}: {old_s:.6f}s -> {new_s:.6f}s ({growth:+.1%}) {flag}")
+
+        for row in cur.get("rows", []):
+            base = prev_rows.get(row_key(row))
+            if base is None:
+                continue
+            gate_wall(f"{row['path']} (m={row['m']}) wall_s",
+                      base.get("wall_s"), row.get("wall_s"))
+        prev_walls = {w["phase"]: w for w in prev.get("local_wall", [])}
+        for w in cur.get("local_wall", []):
+            base = prev_walls.get(w["phase"])
+            if base is None:
+                print(f"  local {w['phase']}: new wall row, no baseline")
+                continue
+            gate_wall(f"local {w['phase']} scalar",
+                      base.get("scalar_s"), w.get("scalar_s"))
+            gate_wall(f"local {w['phase']} threaded",
+                      base.get("threaded_s"), w.get("threaded_s"))
+    else:
+        print(
+            "\nwall-time gate skipped: needs measured-vs-measured provenance "
+            f"(have '{prov_prev}' vs '{prov_cur}')"
+        )
+
     if regressions:
         print(f"\n{len(regressions)} phase(s) regressed beyond +{threshold:.0%}:")
         for (path, m), phase, ob, nb in regressions:
             print(f"  {path} (m={m}) {phase}: {ob} -> {nb} B")
         return 1
-    print("no counted-comm-volume regressions")
+    if wall_failures:
+        print(f"\n{len(wall_failures)} wall time(s) regressed beyond 2x:")
+        for label, old_s, new_s in wall_failures:
+            print(f"  {label}: {old_s:.6f}s -> {new_s:.6f}s")
+        return 1
+    print("no counted-comm-volume or wall-time regressions")
     return 0
 
 

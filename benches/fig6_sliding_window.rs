@@ -18,7 +18,7 @@
 //! volume inside the batch-scale closed-form band — a violation
 //! exits 1 and fails the perf-smoke job.
 
-use vivaldi::approx::stream::{fit_stream, StreamConfig};
+use vivaldi::approx::stream::{fit_stream_with_backend, StreamConfig};
 use vivaldi::approx::{ApproxConfig, LandmarkLayout};
 use vivaldi::backend::NativeBackend;
 use vivaldi::comm::CommStats;
@@ -176,10 +176,24 @@ fn main() {
     };
     let t1 = std::time::Instant::now();
     let mut source = MatrixSource::new(&ds.points);
-    let out = fit_stream(p, &mut source, &scfg).expect("windowed 1.5D stream fit");
+    let out =
+        fit_stream_with_backend(p, &mut source, &scfg, &be).expect("windowed 1.5D stream fit");
     let stream_wall = t1.elapsed().as_secs_f64();
     let stream_nmi = nmi(&out.assignments[last * batch..], newest_labels, k);
     let wstate = out.window.as_ref().expect("windowed run reports its ring");
+
+    // Same stream at the pinned single-thread backend: the wall-time
+    // scalar-vs-threaded row. Results must be bit-identical — the
+    // backend knob trades wall time only.
+    let t2 = std::time::Instant::now();
+    let mut source_s = MatrixSource::new(&ds.points);
+    let out_scalar = fit_stream_with_backend(p, &mut source_s, &scfg, &NativeBackend::scalar())
+        .expect("scalar windowed stream fit");
+    let scalar_wall = t2.elapsed().as_secs_f64();
+    assert_eq!(
+        out_scalar.assignments, out.assignments,
+        "scalar and threaded stream assignments must be bit-identical"
+    );
 
     let base_label = format!("fig6 sliding-window refit (W={window})");
     let stream_label = format!("fig6 stream 1.5D windowed (B={batch}, W={window})");
@@ -205,6 +219,14 @@ fn main() {
         human_bytes(out.peak_mem),
         format!("{stream_nmi:.3}"),
     ]);
+    let scalar_label = format!("fig6 stream 1.5D windowed scalar (B={batch}, W={window})");
+    t.row(vec![
+        scalar_label.clone(),
+        format!("{scalar_wall:.3}"),
+        CommStats::merged_sum(&out_scalar.comm_stats).total().bytes.to_string(),
+        human_bytes(out_scalar.peak_mem),
+        format!("{stream_nmi:.3}"),
+    ]);
     t.print();
     let _ = t.save_csv("fig6_sliding_window");
     println!(
@@ -212,6 +234,12 @@ fn main() {
          the stream evicted {} batch(es) via the ring instead (speedup {:.1}x)",
         wstate.evictions,
         base_wall / stream_wall.max(1e-9)
+    );
+    println!(
+        "stream backend wall: scalar {scalar_wall:.3}s vs threaded {stream_wall:.3}s \
+         (speedup {:.2}x, {} threads, assignments bit-identical)",
+        scalar_wall / stream_wall.max(1e-9),
+        vivaldi::util::par::num_threads()
     );
 
     // Measured-vs-analytic bands: the stream's tracked peak against the
@@ -273,11 +301,27 @@ fn main() {
             ("kgen".into(), 0, 0, kgen_s),
             ("cluster".into(), 0, 0, cluster_s),
         ];
+        let scalar_merged = CommStats::merged_sum(&out_scalar.comm_stats);
+        let scalar_crit = Stopwatch::max_over(&out_scalar.timings);
+        let scalar_phases: Vec<(String, u64, u64, f64)> = scalar_merged
+            .phases()
+            .map(|(name, ps)| (name.to_string(), ps.bytes, ps.msgs, scalar_crit.get(name)))
+            .collect();
         let rows = [
             row_json(&base_label, 0, base_wall, 0, base_nmi, &base_phases),
             row_json(&stream_label, m, stream_wall, out.peak_mem, stream_nmi, &stream_phases),
+            row_json(
+                &scalar_label,
+                m,
+                scalar_wall,
+                out_scalar.peak_mem,
+                stream_nmi,
+                &scalar_phases,
+            ),
         ];
         let checks_j: Vec<String> = checks.iter().map(check_json).collect();
+        let rows_joined = rows.join(",\n");
+        let checks_joined = checks_j.join(",\n");
 
         // Merge into an existing BENCH_landmark.json (the perf-smoke
         // job runs landmark_scaling first) by prepending at its two
@@ -287,9 +331,8 @@ fn main() {
             Some(prev)
                 if prev.contains("\"rows\": [\n") && prev.contains("\"comm_checks\": [\n") =>
             {
-                let row_block = format!("\"rows\": [\n{},\n{},\n", rows[0], rows[1]);
-                let chk_block =
-                    format!("\"comm_checks\": [\n{},\n{},\n", checks_j[0], checks_j[1]);
+                let row_block = format!("\"rows\": [\n{rows_joined},\n");
+                let chk_block = format!("\"comm_checks\": [\n{checks_joined},\n");
                 prev.replacen("\"rows\": [\n", &row_block, 1).replacen(
                     "\"comm_checks\": [\n",
                     &chk_block,
@@ -301,9 +344,8 @@ fn main() {
                     "{{\n  \"bench\": \"fig6_sliding_window\",\n  \"quick\": {quick},\n  \
                      \"provenance\": \"measured\",\n  \"config\": {{\"batch\": {batch}, \
                      \"batches\": {batches}, \"d\": {d}, \"k\": {k}, \"p\": {p}, \
-                     \"window\": {window}, \"seed\": 20260710}},\n  \"rows\": [\n{},\n{}\n  ],\n  \
-                     \"comm_checks\": [\n{},\n{}\n  ]\n}}\n",
-                    rows[0], rows[1], checks_j[0], checks_j[1]
+                     \"window\": {window}, \"seed\": 20260710}},\n  \"rows\": [\n\
+                     {rows_joined}\n  ],\n  \"comm_checks\": [\n{checks_joined}\n  ]\n}}\n"
                 )
             }
         };

@@ -16,15 +16,18 @@
 
 use vivaldi::approx::stream::{fit_stream, StreamConfig};
 use vivaldi::approx::{self, ApproxConfig, LandmarkLayout};
+use vivaldi::backend::{ComputeBackend, NativeBackend};
 use vivaldi::comm::CommStats;
+use vivaldi::dense::DenseMatrix;
 use vivaldi::data::stream::MatrixSource;
 use vivaldi::data::synth;
 use vivaldi::kernelfn::KernelFn;
 use vivaldi::kkmeans::{self, Algo, FitConfig};
 use vivaldi::metrics::Table;
 use vivaldi::model::analytic::{
-    d_landmark_15d_blockcyclic, d_landmark_1d, d_landmark_stream, stream_landmark_blockgather,
-    w_blockcyclic_factor, CostParams,
+    d_landmark_15d_blockcyclic, d_landmark_1d, d_landmark_stream, local_flops_cluster_sums,
+    local_flops_expand, local_flops_gram, stream_landmark_blockgather, w_blockcyclic_factor,
+    CostParams,
 };
 use vivaldi::quality::nmi;
 use vivaldi::util::human_bytes;
@@ -93,6 +96,100 @@ fn max_offdiag_bytes(stats: &[CommStats], q: usize, phase: &str) -> u64 {
 
 fn json_escape(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// One scalar-vs-threaded wall-time row of the local-kernel microbench.
+struct WallRow {
+    phase: String,
+    flops: f64,
+    scalar_s: f64,
+    threaded_s: f64,
+}
+
+impl WallRow {
+    fn speedup(&self) -> f64 {
+        self.scalar_s / self.threaded_s.max(1e-12)
+    }
+
+    /// Achieved GFLOP/s of the threaded run.
+    fn gflops(&self) -> f64 {
+        self.flops / self.threaded_s.max(1e-12) / 1e9
+    }
+}
+
+/// Best-of-`reps` wall seconds of `f` (min over repetitions discards
+/// scheduler noise — the standard microbench convention).
+fn best_of(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// Direct wall-time of the hot local kernels, scalar vs threaded: the
+/// cross-kernel gram panel C = κ(X, L), and the per-iteration update
+/// (k×m cluster-sum reduction + reduced-rank expansion E = C·αᵀ).
+/// Every threaded result is asserted `==` the scalar one — the bench
+/// doubles as a bit-identity check at the perf sizes.
+fn local_kernel_walls(quick: bool) -> Vec<WallRow> {
+    // Non-quick sizes put the gram panel at ~0.5 GFLOP so the thread
+    // speedup rises above scheduling noise; --quick shrinks for CI.
+    let (bn, bd, bm, bk) = if quick { (512, 64, 128, 8) } else { (4096, 128, 512, 16) };
+    let mut rng = vivaldi::util::rng::Rng::new(20260710);
+    let x = DenseMatrix::random(bn, bd, &mut rng);
+    let l = DenseMatrix::random(bm, bd, &mut rng);
+    let kernel = KernelFn::gaussian(0.5);
+    let xn: Vec<f32> = (0..bn).map(|i| vivaldi::dense::ops::dot(x.row(i), x.row(i))).collect();
+    let ln: Vec<f32> = (0..bm).map(|i| vivaldi::dense::ops::dot(l.row(i), l.row(i))).collect();
+    let assign: Vec<u32> = (0..bn).map(|i| ((i * 7 + 3) % bk) as u32).collect();
+    let alpha_t = DenseMatrix::random(bm, bk, &mut rng);
+    let scalar = NativeBackend::scalar();
+    let threaded = NativeBackend::new();
+    let reps = if quick { 2 } else { 3 };
+
+    let c_scalar = scalar.gram_tile(&x, &l, &kernel, &xn, &ln);
+    let c_threaded = threaded.gram_tile(&x, &l, &kernel, &xn, &ln);
+    assert_eq!(c_scalar.data(), c_threaded.data(), "threaded gram must be bit-identical");
+    let gram = WallRow {
+        phase: "gram".into(),
+        flops: local_flops_gram(bn, bm, bd),
+        scalar_s: best_of(reps, || {
+            std::hint::black_box(scalar.gram_tile(&x, &l, &kernel, &xn, &ln));
+        }),
+        threaded_s: best_of(reps, || {
+            std::hint::black_box(threaded.gram_tile(&x, &l, &kernel, &xn, &ln));
+        }),
+    };
+
+    let sums_scalar = scalar.cluster_row_sums(&c_scalar, &assign, bk, bm);
+    let sums_threaded = threaded.cluster_row_sums(&c_scalar, &assign, bk, bm);
+    assert_eq!(sums_scalar, sums_threaded, "threaded cluster sums must be bit-identical");
+    let mut e_scalar = DenseMatrix::zeros(bn, bk);
+    scalar.matmul_nn_acc(&c_scalar, &alpha_t, &mut e_scalar);
+    let mut e_threaded = DenseMatrix::zeros(bn, bk);
+    threaded.matmul_nn_acc(&c_scalar, &alpha_t, &mut e_threaded);
+    assert_eq!(e_scalar.data(), e_threaded.data(), "threaded expansion must be bit-identical");
+    let update_flops = local_flops_cluster_sums(bn, bm) + local_flops_expand(bn, bm, bk);
+    let update = WallRow {
+        phase: "update".into(),
+        flops: update_flops,
+        scalar_s: best_of(reps, || {
+            std::hint::black_box(scalar.cluster_row_sums(&c_scalar, &assign, bk, bm));
+            let mut e = DenseMatrix::zeros(bn, bk);
+            scalar.matmul_nn_acc(&c_scalar, &alpha_t, &mut e);
+            std::hint::black_box(&e);
+        }),
+        threaded_s: best_of(reps, || {
+            std::hint::black_box(threaded.cluster_row_sums(&c_scalar, &assign, bk, bm));
+            let mut e = DenseMatrix::zeros(bn, bk);
+            threaded.matmul_nn_acc(&c_scalar, &alpha_t, &mut e);
+            std::hint::black_box(&e);
+        }),
+    };
+    vec![gram, update]
 }
 
 fn main() {
@@ -346,6 +443,45 @@ fn main() {
     t.print();
     let _ = t.save_csv("landmark_scaling");
 
+    // The wall-time half of the perf trajectory: scalar vs threaded
+    // local kernels, with achieved GFLOP/s (the counted-volume checks
+    // above stay the strict gate; walls get their own softer band in
+    // compare_bench.py).
+    let walls = local_kernel_walls(quick);
+    let threads = vivaldi::util::par::num_threads();
+    let peak_gflops: Option<f64> =
+        std::env::var("VIVALDI_PEAK_GFLOPS").ok().and_then(|v| v.parse().ok());
+    println!("\nlocal kernel wall times ({threads} threads, best-of-rep):");
+    for w in &walls {
+        let roofline = peak_gflops
+            .map(|p| format!("  roofline {:>5.1}%", 100.0 * w.gflops() / p))
+            .unwrap_or_default();
+        println!(
+            "  {:<8} scalar {:>9.6}s  threaded {:>9.6}s  speedup {:>5.2}x  {:>7.2} GF/s{roofline}",
+            w.phase,
+            w.scalar_s,
+            w.threaded_s,
+            w.speedup(),
+            w.gflops(),
+        );
+    }
+    // On any multi-core runner the non-quick gram panel must show real
+    // thread scaling; quick sizes (and forced single-thread runs) are
+    // too small/constrained to gate on.
+    let cores =
+        std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    if !quick && cores >= 2 && threads >= 2 {
+        let gram = &walls[0];
+        if gram.speedup() <= 1.3 {
+            eprintln!(
+                "perf regression: threaded gram speedup {:.2}x <= 1.3x at {} threads",
+                gram.speedup(),
+                threads
+            );
+            std::process::exit(1);
+        }
+    }
+
     // The counted-vs-analytic diff: print every check, fail on any
     // band violation.
     let mut all_ok = true;
@@ -399,6 +535,22 @@ fn main() {
                 ));
             }
             s.push_str(&format!("}}}}{}\n", if i + 1 < rows.len() { "," } else { "" }));
+        }
+        s.push_str("  ],\n");
+        s.push_str(&format!("  \"threads\": {threads},\n"));
+        s.push_str("  \"local_wall\": [\n");
+        for (i, w) in walls.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"phase\": \"{}\", \"flops\": {:.0}, \"scalar_s\": {:.6}, \
+                 \"threaded_s\": {:.6}, \"speedup\": {:.4}, \"gflops\": {:.4}}}{}\n",
+                json_escape(&w.phase),
+                w.flops,
+                w.scalar_s,
+                w.threaded_s,
+                w.speedup(),
+                w.gflops(),
+                if i + 1 < walls.len() { "," } else { "" }
+            ));
         }
         s.push_str("  ],\n");
         s.push_str("  \"comm_checks\": [\n");

@@ -341,7 +341,7 @@ fn reduced_rank_e(
     let m = solver.dim();
     // Local per-cluster sums of C rows (k×m), then one Allreduce — the
     // volume the 1.5D layout avoids.
-    let b = comm.allreduce_sum_f32(world, cluster_row_sums(c_block, assign, k, m));
+    let b = comm.allreduce_sum_f32(world, backend.cluster_row_sums(c_block, assign, k, m));
 
     // α (k×m): replicated ridge solve in f64.
     let (alpha, cvec) = solve_alpha(solver, w, &b, sizes, k);
@@ -402,28 +402,6 @@ pub(crate) fn pack_alpha_block(
     }
     flat.extend_from_slice(cvec);
     flat
-}
-
-/// Per-cluster sums of C rows: the k×w partial this rank contributes to
-/// c̄ (w = the landmark columns this rank's C covers). Shared with the
-/// streaming driver, whose per-batch sums feed the decayed model.
-pub(crate) fn cluster_row_sums(
-    c_rows: &DenseMatrix,
-    assign: &[u32],
-    k: usize,
-    w: usize,
-) -> Vec<f32> {
-    debug_assert_eq!(c_rows.rows(), assign.len());
-    debug_assert_eq!(c_rows.cols(), w);
-    let mut b = vec![0.0f32; k * w];
-    for (j, &a) in assign.iter().enumerate() {
-        let row = c_rows.row(j);
-        let acc = &mut b[a as usize * w..(a as usize + 1) * w];
-        for (s, v) in acc.iter_mut().zip(row) {
-            *s += v;
-        }
-    }
-    b
 }
 
 /// Solve the ridge systems for every cluster from the globally summed
@@ -573,7 +551,7 @@ fn run_rank_15d(
         debug_assert_eq!(assign_block.len(), n_j);
 
         // (2) Per-cluster sums over my tile, reduced to the diagonal.
-        let b_part = cluster_row_sums(&c_tile, &assign_block, k, m_i);
+        let b_part = backend.cluster_row_sums(&c_tile, &assign_block, k, m_i);
         let b_red = comm.reduce(&row_g, i, b_part, |acc, other| {
             for (x, y) in acc.iter_mut().zip(other) {
                 *x += y;

@@ -101,8 +101,8 @@ use crate::VivaldiError;
 
 use super::solve::{host_solve_alpha_weighted_panels, DiagW, DistSpdSolver, SpdSolver};
 use super::{
-    alpha_transpose, assemble_diag_blocks, cluster_row_sums, pack_alpha_block,
-    solve_alpha_weighted, ApproxConfig, LandmarkLayout,
+    alpha_transpose, assemble_diag_blocks, pack_alpha_block, solve_alpha_weighted, ApproxConfig,
+    LandmarkLayout,
 };
 
 /// Streaming-fit configuration: the batch knobs of [`ApproxConfig`]
@@ -142,6 +142,14 @@ pub struct StreamConfig {
     /// exclusive with `refresh_every`: the ring's sums are expressed
     /// in the current landmark basis, which a refresh would invalidate.
     pub window: usize,
+    /// Objective-based stopping rule for the inner loop (the other half
+    /// of the `--inner-iters` quality-vs-throughput knob): a batch's
+    /// inner loop additionally stops once the **relative objective
+    /// drop** between consecutive iterations falls below `tol`.
+    /// `0.0` (the default) disables the rule entirely — the
+    /// fixed-iteration schedule is reproduced exactly, bit for bit
+    /// (pinned by `rust/tests/stream.rs`).
+    pub tol: f64,
 }
 
 impl Default for StreamConfig {
@@ -154,6 +162,7 @@ impl Default for StreamConfig {
             refresh_every: 0,
             inner_iters: Vec::new(),
             window: 0,
+            tol: 0.0,
         }
     }
 }
@@ -531,6 +540,12 @@ pub fn fit_stream_with_backend(
             "--inner-iters entries must be >= 1 (1 = pure online mode)".into(),
         ));
     }
+    if !(cfg.tol >= 0.0 && cfg.tol.is_finite()) {
+        return Err(VivaldiError::InvalidConfig(format!(
+            "--tol must be finite and >= 0 (0 disables the rule), got {}",
+            cfg.tol
+        )));
+    }
     if cfg.window > 0 && cfg.refresh_every > 0 {
         return Err(VivaldiError::InvalidConfig(
             "--window and landmark refresh are mutually exclusive: the eviction ring's sums \
@@ -578,7 +593,7 @@ pub fn fit_stream_with_backend(
                 )));
             };
             let (c_tail, assign, minvals) = mdl.classify(&batch, cfg, backend);
-            let sums = cluster_row_sums(&c_tail, &assign, k, m);
+            let sums = backend.cluster_row_sums(&c_tail, &assign, k, m);
             let mut sizes = vec![0u64; k];
             for &a in &assign {
                 sizes[a as usize] += 1;
@@ -780,7 +795,7 @@ fn refresh_model(
             (Vec::new(), Vec::new())
         };
         let c_res = backend.gram_tile(&snap, &next.landmarks, &cfg.base.kernel, &pn, &ln);
-        let sums = cluster_row_sums(&c_res, &old_assign, k, m);
+        let sums = backend.cluster_row_sums(&c_res, &old_assign, k, m);
         let mut counts = vec![0u64; k];
         for &a in &old_assign {
             counts[a as usize] += 1;
@@ -920,11 +935,11 @@ fn run_batch_1d(
     };
     let mut sizes = loop_common::global_sizes(comm, &world, &assign, k);
 
-    let outcome = harness::drive_loop(max_iters, cfg.base.converge_on_stable, |_| {
+    let outcome = harness::drive_loop_tol(max_iters, cfg.base.converge_on_stable, cfg.tol, |_| {
         let (e_local, cvec) = sw.time("update", || {
             comm.set_phase("update");
             let b_batch =
-                comm.allreduce_sum_f32(&world, cluster_row_sums(&c_block, &assign, k, m));
+                comm.allreduce_sum_f32(&world, backend.cluster_row_sums(&c_block, &assign, k, m));
             let (b_eff, weights) = effective_stats(&b_batch, &sizes, hist);
             let (alpha, cvec) =
                 solve_alpha_weighted(&hostw.solver, &hostw.w, &b_eff, &weights, k);
@@ -944,7 +959,7 @@ fn run_batch_1d(
     // The settled batch's global statistics, folded into the model by
     // the driver.
     comm.set_phase("update");
-    let b_final = comm.allreduce_sum_f32(&world, cluster_row_sums(&c_block, &assign, k, m));
+    let b_final = comm.allreduce_sum_f32(&world, backend.cluster_row_sums(&c_block, &assign, k, m));
     let sizes_final = loop_common::global_sizes(comm, &world, &assign, k);
     let fin = (comm.rank() == 0).then_some(BatchFinal { sums: b_final, sizes: sizes_final });
     Ok((harness::finish_rank(assign, sw, outcome, &tracker), fin, None))
@@ -1120,7 +1135,7 @@ fn run_batch_15d(
     };
     let mut sizes = loop_common::global_sizes(comm, &world, &assign, k);
 
-    let outcome = harness::drive_loop(max_iters, cfg.base.converge_on_stable, |_| {
+    let outcome = harness::drive_loop_tol(max_iters, cfg.base.converge_on_stable, cfg.tol, |_| {
         let t0 = timing::clock_now();
         comm.set_phase("update");
 
@@ -1129,7 +1144,7 @@ fn run_batch_15d(
         debug_assert_eq!(assign_block.len(), n_j);
 
         // (2) Per-cluster sums over my tile, reduced to the diagonal.
-        let b_part = cluster_row_sums(&c_tile, &assign_block, k, m_i);
+        let b_part = backend.cluster_row_sums(&c_tile, &assign_block, k, m_i);
         let b_red = comm.reduce(&row_g, i, b_part, |acc, other| {
             for (x, y) in acc.iter_mut().zip(other) {
                 *x += y;
@@ -1180,7 +1195,7 @@ fn run_batch_15d(
     // 0 = grid (0,0) reports them to the driver).
     comm.set_phase("update");
     let assign_block = comm.allgather_concat(&col_g, assign.clone());
-    let b_part = cluster_row_sums(&c_tile, &assign_block, k, m_i);
+    let b_part = backend.cluster_row_sums(&c_tile, &assign_block, k, m_i);
     let b_red = comm.reduce(&row_g, i, b_part, |acc, other| {
         for (x, y) in acc.iter_mut().zip(other) {
             *x += y;

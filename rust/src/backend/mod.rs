@@ -24,6 +24,47 @@ pub use native::NativeBackend;
 use crate::dense::DenseMatrix;
 use crate::kernelfn::KernelFn;
 
+/// Which local-compute flavor to instantiate — the CLI `--backend`
+/// knob. `Scalar` pins exactly one worker thread (today's sequential op
+/// order); `Threaded` uses the global thread default
+/// (`VIVALDI_THREADS`, else the available parallelism). Results are
+/// bit-identical either way — the knob trades wall time only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// One worker thread: the pinned sequential reference.
+    Scalar,
+    /// Row-blocked workers at the global thread count.
+    #[default]
+    Threaded,
+}
+
+impl BackendKind {
+    /// Parse the CLI / env spelling.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "scalar" => Ok(BackendKind::Scalar),
+            "threaded" => Ok(BackendKind::Threaded),
+            other => Err(format!("unknown backend {other:?} (expected scalar|threaded)")),
+        }
+    }
+
+    /// The CLI spelling back.
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Scalar => "scalar",
+            BackendKind::Threaded => "threaded",
+        }
+    }
+
+    /// Instantiate the native backend this knob names.
+    pub fn backend(self) -> NativeBackend {
+        match self {
+            BackendKind::Scalar => NativeBackend::scalar(),
+            BackendKind::Threaded => NativeBackend::new(),
+        }
+    }
+}
+
 /// Local compute operations used from the distributed hot path.
 pub trait ComputeBackend: Send + Sync {
     /// κ(A·Bᵀ): A is (m×d) points, B is (n×d) points; returns the m×n
@@ -71,6 +112,29 @@ pub trait ComputeBackend: Send + Sync {
         k: usize,
         inv_sizes: &[f32],
     ) -> DenseMatrix;
+
+    /// k×w cluster-sum reduction: b[a,·] = Σ_{j: assign_j = a} C[j,·]
+    /// — the landmark paths' per-iteration statistics gather (the rows
+    /// of Bᵀ·C before the ridge solve). Rows are folded in ascending j
+    /// order per output element, so implementations that split the
+    /// *columns* across workers stay bit-identical to this default.
+    fn cluster_row_sums(
+        &self,
+        c_rows: &DenseMatrix,
+        assign: &[u32],
+        k: usize,
+        w: usize,
+    ) -> Vec<f32> {
+        let mut b = vec![0.0f32; k * w];
+        for (j, &a) in assign.iter().enumerate() {
+            let row = c_rows.row(j);
+            let acc = &mut b[a as usize * w..(a as usize + 1) * w];
+            for (s, v) in acc.iter_mut().zip(row) {
+                *s += v;
+            }
+        }
+        b
+    }
 
     /// Masking: z[j] = E[j, assign[j]] (Eq. 5).
     fn mask_z(&self, e_local: &DenseMatrix, assign: &[u32]) -> Vec<f32>;

@@ -1,23 +1,72 @@
 //! Pure-Rust backend: blocked multithreaded GEMM + structured sparse
 //! kernels. Works at every shape; the reference the PJRT backend falls
 //! back to and is validated against.
+//!
+//! Every threaded kernel here parallelizes over **output rows** (or,
+//! for the cluster-sum reduction, output **columns**): each output
+//! element is produced by exactly one worker with a fixed inner block
+//! order, so the f32 op sequence per element — and therefore the bits —
+//! is invariant in the thread count. `NativeBackend::scalar()` (one
+//! pinned worker) and `NativeBackend::threaded(t)` at any `t` return
+//! identical results; `rust/tests/backend.rs` pins this with exact `==`
+//! through whole fits.
 
 use super::ComputeBackend;
 use crate::dense::{matrix::DenseMatrix, ops};
 use crate::kernelfn::KernelFn;
 use crate::sparse;
+use crate::util::par::{par_ranges_with, SendPtr};
+
+/// Row-block floor for the gram/expand GEMMs (matches `dense::ops`).
+const PAR_MIN_ROWS: usize = 8;
+/// Column-split floor for the cluster-sum reduction.
+const PAR_MIN_COLS: usize = 8;
+/// Row floor for the cheap elementwise kernels (mask / argmin / κ).
+const PAR_MIN_ELEM_ROWS: usize = 256;
+/// Cache block over the inner (reduction) dimension.
+const BLOCK_K: usize = 256;
+/// Cache block over B's rows in the gram panel loop.
+const BLOCK_J: usize = 64;
 
 /// The native (pure Rust) compute backend.
+///
+/// `threads == 0` means "use the global default"
+/// (`VIVALDI_THREADS`, else the available parallelism); `threads == 1`
+/// pins the exact sequential op order.
 #[derive(Debug, Default, Clone)]
-pub struct NativeBackend;
+pub struct NativeBackend {
+    threads: usize,
+}
 
 impl NativeBackend {
+    /// Global-default thread count (the historical behavior).
     pub fn new() -> Self {
-        NativeBackend
+        NativeBackend { threads: 0 }
+    }
+
+    /// One pinned worker: the sequential reference every threaded run
+    /// must match bit-for-bit.
+    pub fn scalar() -> Self {
+        NativeBackend { threads: 1 }
+    }
+
+    /// An explicit worker-thread cap (0 = global default).
+    pub fn threaded(threads: usize) -> Self {
+        NativeBackend { threads }
+    }
+
+    /// The configured cap (0 = global default).
+    pub fn thread_cap(&self) -> usize {
+        self.threads
     }
 }
 
 impl ComputeBackend for NativeBackend {
+    /// Fused cache-blocked gram: per worker row, the j-panel's dots are
+    /// accumulated over ascending kb blocks and κ is applied the moment
+    /// a panel's dots are finished. κ is a pure function of the
+    /// completed dot, so this equals the two-pass GEMM + `apply_tile`
+    /// bit-for-bit, at every thread count.
     fn gram_tile(
         &self,
         a: &DenseMatrix,
@@ -26,13 +75,44 @@ impl ComputeBackend for NativeBackend {
         row_norms: &[f32],
         col_norms: &[f32],
     ) -> DenseMatrix {
-        let mut tile = ops::matmul_nt(a, b);
-        kernel.apply_tile(&mut tile, row_norms, col_norms);
-        tile
+        assert_eq!(a.cols(), b.cols(), "gram_tile: inner dims differ");
+        let (m, n, d) = (a.rows(), b.rows(), a.cols());
+        let norms = kernel.needs_norms();
+        if norms {
+            assert_eq!(row_norms.len(), m);
+            assert_eq!(col_norms.len(), n);
+        }
+        let mut c = DenseMatrix::zeros(m, n);
+        {
+            let cptr = SendPtr(c.data_mut().as_mut_ptr());
+            par_ranges_with(self.threads, m, PAR_MIN_ROWS, |lo, hi| {
+                let cptr = &cptr;
+                for i in lo..hi {
+                    // SAFETY: rows [lo,hi) are exclusive to this worker.
+                    let crow = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i * n), n) };
+                    let nx = if norms { row_norms[i] } else { 0.0 };
+                    for jb in (0..n).step_by(BLOCK_J) {
+                        let jend = (jb + BLOCK_J).min(n);
+                        for kb in (0..d).step_by(BLOCK_K) {
+                            let kend = (kb + BLOCK_K).min(d);
+                            let arow = &a.row(i)[kb..kend];
+                            for (j, cj) in crow[jb..jend].iter_mut().enumerate() {
+                                *cj += ops::dot(arow, &b.row(jb + j)[kb..kend]);
+                            }
+                        }
+                        for (j, cj) in crow[jb..jend].iter_mut().enumerate() {
+                            let ny = if norms { col_norms[jb + j] } else { 0.0 };
+                            *cj = kernel.apply(*cj, nx, ny);
+                        }
+                    }
+                }
+            });
+        }
+        c
     }
 
     fn matmul_nn_acc(&self, a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix) {
-        ops::matmul_nn_acc(a, b, c);
+        ops::matmul_nn_acc_with(self.threads, a, b, c);
     }
 
     fn kernel_apply(
@@ -42,7 +122,25 @@ impl ComputeBackend for NativeBackend {
         row_norms: &[f32],
         col_norms: &[f32],
     ) {
-        kernel.apply_tile(b, row_norms, col_norms);
+        let norms = kernel.needs_norms();
+        if norms {
+            assert_eq!(row_norms.len(), b.rows());
+            assert_eq!(col_norms.len(), b.cols());
+        }
+        let (m, n) = (b.rows(), b.cols());
+        let bptr = SendPtr(b.data_mut().as_mut_ptr());
+        par_ranges_with(self.threads, m, PAR_MIN_ELEM_ROWS, |lo, hi| {
+            let bptr = &bptr;
+            for i in lo..hi {
+                // SAFETY: rows [lo,hi) are exclusive to this worker.
+                let row = unsafe { std::slice::from_raw_parts_mut(bptr.0.add(i * n), n) };
+                let nx = if norms { row_norms[i] } else { 0.0 };
+                for (j, v) in row.iter_mut().enumerate() {
+                    let ny = if norms { col_norms[j] } else { 0.0 };
+                    *v = kernel.apply(*v, nx, ny);
+                }
+            }
+        });
     }
 
     fn spmm_vk(
@@ -65,13 +163,53 @@ impl ComputeBackend for NativeBackend {
         sparse::ops::spmm_vk_t(k_tile, assign_r, k, inv_sizes)
     }
 
+    /// Workers own disjoint *column* ranges and every worker folds the
+    /// input rows in the same ascending-j order the sequential loop
+    /// uses, so each output element sees the identical f32 addition
+    /// sequence at every thread count.
+    fn cluster_row_sums(
+        &self,
+        c_rows: &DenseMatrix,
+        assign: &[u32],
+        k: usize,
+        w: usize,
+    ) -> Vec<f32> {
+        assert_eq!(c_rows.rows(), assign.len());
+        assert_eq!(c_rows.cols(), w, "cluster_row_sums: tile width differs from w");
+        let mut b = vec![0.0f32; k * w];
+        {
+            let bptr = SendPtr(b.as_mut_ptr());
+            par_ranges_with(self.threads, w, PAR_MIN_COLS, |clo, chi| {
+                let bptr = &bptr;
+                for (j, &a) in assign.iter().enumerate() {
+                    let row = c_rows.row(j);
+                    let base = a as usize * w;
+                    for (col, v) in row[clo..chi].iter().enumerate() {
+                        // SAFETY: columns [clo,chi) of every cluster row
+                        // are exclusive to this worker.
+                        unsafe { *bptr.0.add(base + clo + col) += v };
+                    }
+                }
+            });
+        }
+        b
+    }
+
     fn mask_z(&self, e_local: &DenseMatrix, assign: &[u32]) -> Vec<f32> {
         assert_eq!(e_local.rows(), assign.len());
-        assign
-            .iter()
-            .enumerate()
-            .map(|(j, &a)| e_local.get(j, a as usize))
-            .collect()
+        let n = assign.len();
+        let mut z = vec![0.0f32; n];
+        {
+            let zptr = SendPtr(z.as_mut_ptr());
+            par_ranges_with(self.threads, n, PAR_MIN_ELEM_ROWS, |lo, hi| {
+                let zptr = &zptr;
+                for (j, &a) in assign[lo..hi].iter().enumerate() {
+                    // SAFETY: indices [lo,hi) exclusive to this worker.
+                    unsafe { *zptr.0.add(lo + j) = e_local.get(lo + j, a as usize) };
+                }
+            });
+        }
+        z
     }
 
     fn spmv_vz(&self, assign: &[u32], z: &[f32], k: usize, inv_sizes: &[f32]) -> Vec<f32> {
@@ -84,26 +222,40 @@ impl ComputeBackend for NativeBackend {
         let m = e_local.rows();
         let mut arg = vec![0u32; m];
         let mut val = vec![0.0f32; m];
-        for j in 0..m {
-            let row = e_local.row(j);
-            let mut best = 0usize;
-            let mut best_d = -2.0 * row[0] + c[0];
-            for a in 1..k {
-                let d = -2.0 * row[a] + c[a];
-                // Strict < : ties break to the lower cluster index.
-                if d < best_d {
-                    best_d = d;
-                    best = a;
+        {
+            let aptr = SendPtr(arg.as_mut_ptr());
+            let vptr = SendPtr(val.as_mut_ptr());
+            par_ranges_with(self.threads, m, PAR_MIN_ELEM_ROWS, |lo, hi| {
+                let (aptr, vptr) = (&aptr, &vptr);
+                for j in lo..hi {
+                    let row = e_local.row(j);
+                    let mut best = 0usize;
+                    let mut best_d = -2.0 * row[0] + c[0];
+                    for a in 1..k {
+                        let d = -2.0 * row[a] + c[a];
+                        // Strict < : ties break to the lower cluster index.
+                        if d < best_d {
+                            best_d = d;
+                            best = a;
+                        }
+                    }
+                    // SAFETY: rows [lo,hi) exclusive to this worker.
+                    unsafe {
+                        *aptr.0.add(j) = best as u32;
+                        *vptr.0.add(j) = best_d;
+                    }
                 }
-            }
-            arg[j] = best as u32;
-            val[j] = best_d;
+            });
         }
         (arg, val)
     }
 
     fn name(&self) -> &str {
-        "native"
+        match self.threads {
+            0 => "native",
+            1 => "native-scalar",
+            _ => "native-threaded",
+        }
     }
 }
 
@@ -125,6 +277,72 @@ mod tests {
                 let dot = ops::dot(a.row(i), b.row(j));
                 assert!((tile.get(i, j) - kf.apply(dot, 0.0, 0.0)).abs() < 1e-4);
             }
+        }
+    }
+
+    #[test]
+    fn fused_gram_matches_two_pass_bitwise() {
+        // The fused epilogue must equal GEMM-then-apply_tile exactly —
+        // not approximately — for every kernel family, because the
+        // oracle tests and the scalar/threaded wall compare with `==`.
+        let mut rng = Rng::new(7);
+        let a = DenseMatrix::random(33, 300, &mut rng);
+        let b = DenseMatrix::random(21, 300, &mut rng);
+        let (an, bn) = (a.row_sq_norms(), b.row_sq_norms());
+        for kf in [KernelFn::linear(), KernelFn::paper_polynomial(), KernelFn::gaussian(0.3)] {
+            let (rn, cn): (&[f32], &[f32]) =
+                if kf.needs_norms() { (&an, &bn) } else { (&[], &[]) };
+            let mut two_pass = ops::matmul_nt(&a, &b);
+            kf.apply_tile(&mut two_pass, rn, cn);
+            for threads in [1usize, 2, 4, 8] {
+                let be = NativeBackend::threaded(threads);
+                let fused = be.gram_tile(&a, &b, &kf, rn, cn);
+                assert_eq!(fused.data(), two_pass.data(), "{} @ {threads} threads", kf.tag());
+            }
+        }
+    }
+
+    #[test]
+    fn cluster_row_sums_matches_default_at_all_thread_counts() {
+        let mut rng = Rng::new(11);
+        let (n, k, w) = (157, 5, 67);
+        let c = DenseMatrix::random(n, w, &mut rng);
+        let assign: Vec<u32> = (0..n).map(|j| (j * 7 % k) as u32).collect();
+        // The trait default's sequential loop is the reference.
+        fn reference(c: &DenseMatrix, assign: &[u32], k: usize, w: usize) -> Vec<f32> {
+            let mut b = vec![0.0f32; k * w];
+            for (j, &a) in assign.iter().enumerate() {
+                let row = c.row(j);
+                let acc = &mut b[a as usize * w..(a as usize + 1) * w];
+                for (s, v) in acc.iter_mut().zip(row) {
+                    *s += v;
+                }
+            }
+            b
+        }
+        let expect = reference(&c, &assign, k, w);
+        for threads in [1usize, 2, 4, 8] {
+            let be = NativeBackend::threaded(threads);
+            assert_eq!(be.cluster_row_sums(&c, &assign, k, w), expect, "@ {threads} threads");
+        }
+    }
+
+    #[test]
+    fn rowwise_kernels_are_thread_invariant() {
+        let mut rng = Rng::new(13);
+        let (n, k) = (611, 6);
+        let e = DenseMatrix::random(n, k, &mut rng);
+        let c: Vec<f32> = (0..k).map(|a| a as f32 * 0.37 - 1.0).collect();
+        let assign: Vec<u32> = (0..n).map(|j| (j * 5 % k) as u32).collect();
+        let s = NativeBackend::scalar();
+        let (arg1, val1) = s.distances_argmin(&e, &c);
+        let z1 = s.mask_z(&e, &assign);
+        for threads in [2usize, 4, 8] {
+            let be = NativeBackend::threaded(threads);
+            let (arg, val) = be.distances_argmin(&e, &c);
+            assert_eq!(arg, arg1, "argmin arg @ {threads}");
+            assert_eq!(val, val1, "argmin val @ {threads}");
+            assert_eq!(be.mask_z(&e, &assign), z1, "mask_z @ {threads}");
         }
     }
 

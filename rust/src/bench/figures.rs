@@ -227,6 +227,149 @@ pub fn sliding_speedup(
     tables
 }
 
+/// Paper-style **Fig. 2/4 rows for the landmark path** — measured
+/// wall-clock of real `approx::fit` runs (not the machine model), at
+/// the requested compute backend, for both landmark layouts over the
+/// scale's G sweep. The weak table keeps per-rank work flat
+/// (n = √G·n₀); the strong table fixes n = strong_n. Each row also
+/// reports counted words/rank and the gram phase's achieved GFLOP/s
+/// against [`analytic::local_flops_gram`] — the wall-time trajectory
+/// the perf CI tracks next to the counted-volume truth.
+pub fn landmark_scaling_figures(scale: &Scale, kind: &crate::backend::BackendKind) -> Vec<Table> {
+    use crate::approx::{self, ApproxConfig, LandmarkLayout};
+    let ds = PaperDataset::HiggsLike;
+    let k = *scale.ks.first().unwrap_or(&16);
+    let backend = kind.backend();
+    let mut tables = Vec::new();
+    for (title, weak) in [
+        ("Fig.2-style weak scaling — landmark path", true),
+        ("Fig.4-style strong scaling — landmark path", false),
+    ] {
+        let mut t = Table::new(
+            &format!("{title} (measured wall, backend={})", kind.name()),
+            &["G", "n", "m", "wall 1D(s)", "wall 1.5D(s)", "words/rank", "gram GF/s", "eff(1.5D)"],
+        );
+        let mut t15_first: Option<f64> = None;
+        for &g in square_gs(&scale.gpu_counts).iter().filter(|&&g| weak || g >= 4) {
+            let n = if weak { scale.weak_n(g) } else { scale.strong_n };
+            let m = (n / 8).max(k).min(n);
+            let data = ds.generate(n, scale.d_cap(ds), scale.seed);
+            let mut row = vec![g.to_string(), n.to_string(), m.to_string()];
+            let mut words_per_rank = 0u64;
+            let mut gram_gfs = f64::NAN;
+            let mut t15 = f64::NAN;
+            for layout in [LandmarkLayout::OneD, LandmarkLayout::OneFiveD] {
+                let cfg = ApproxConfig {
+                    k,
+                    m,
+                    layout,
+                    max_iters: scale.iters,
+                    converge_on_stable: false,
+                    ..Default::default()
+                };
+                let t0 = std::time::Instant::now();
+                match approx::fit_with_backend(g, &data.points, &cfg, &backend) {
+                    Ok(out) => {
+                        let wall = t0.elapsed().as_secs_f64();
+                        row.push(format!("{wall:.4}"));
+                        if layout == LandmarkLayout::OneFiveD {
+                            t15 = wall;
+                            let total =
+                                crate::comm::CommStats::merged_sum(&out.comm_stats).total();
+                            words_per_rank = total.bytes / 4 / g.max(1) as u64;
+                            let gemm_s = out
+                                .critical_timings()
+                                .phases()
+                                .iter()
+                                .find(|(p, _)| p == "gemm")
+                                .map(|&(_, s)| s)
+                                .unwrap_or(0.0);
+                            if gemm_s > 0.0 {
+                                gram_gfs =
+                                    analytic::local_flops_gram(n, m, data.d()) / gemm_s / 1e9;
+                            }
+                        }
+                    }
+                    Err(_) => row.push("OOM".into()),
+                }
+            }
+            row.push(words_per_rank.to_string());
+            row.push(if gram_gfs.is_finite() { format!("{gram_gfs:.2}") } else { "-".into() });
+            if t15.is_finite() {
+                let base = *t15_first.get_or_insert(t15);
+                if weak {
+                    row.push(format!("{:.1}%", 100.0 * base / t15));
+                } else {
+                    row.push(format!("{:.2}x", base / t15));
+                }
+            } else {
+                row.push("-".into());
+            }
+            t.row(row);
+        }
+        tables.push(t);
+    }
+    tables
+}
+
+/// Landmark **quality/footprint table**: an m sweep at fixed n and G
+/// reporting NMI against the generator labels, measured wall, peak
+/// simulated device memory, and counted words/rank — the
+/// approximation-quality axis (more landmarks → better NMI, more
+/// memory and volume) next to the perf trajectory.
+pub fn landmark_table(scale: &Scale, kind: &crate::backend::BackendKind) -> Table {
+    use crate::approx::{self, ApproxConfig, LandmarkLayout};
+    let ds = PaperDataset::HiggsLike;
+    let k = *scale.ks.first().unwrap_or(&16);
+    let g = square_gs(&scale.gpu_counts).iter().copied().find(|&g| g >= 4).unwrap_or(4);
+    let n = scale.strong_n;
+    let backend = kind.backend();
+    let data = ds.generate(n, scale.d_cap(ds), scale.seed);
+    let mut t = Table::new(
+        &format!(
+            "Landmark quality/footprint — {} n={n} G={g} k={k} (backend={})",
+            ds.name(),
+            kind.name()
+        ),
+        &["m", "NMI", "wall(s)", "peak mem", "words/rank", "iters"],
+    );
+    let mut ms: Vec<usize> = [k, n / 32, n / 16, n / 8]
+        .into_iter()
+        .map(|m| m.clamp(k, n))
+        .collect();
+    ms.dedup();
+    for m in ms {
+        let cfg = ApproxConfig {
+            k,
+            m,
+            layout: LandmarkLayout::OneD,
+            max_iters: scale.iters,
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        match approx::fit_with_backend(g, &data.points, &cfg, &backend) {
+            Ok(out) => {
+                let wall = t0.elapsed().as_secs_f64();
+                let total = crate::comm::CommStats::merged_sum(&out.comm_stats).total();
+                let nmi = crate::quality::nmi(&out.assignments, &data.labels, k);
+                t.row(vec![
+                    m.to_string(),
+                    format!("{nmi:.3}"),
+                    format!("{wall:.4}"),
+                    crate::util::human_bytes(out.peak_mem),
+                    (total.bytes / 4 / g as u64).to_string(),
+                    out.iterations.to_string(),
+                ]);
+            }
+            Err(_) => {
+                let dash = || "-".to_string();
+                t.row(vec![m.to_string(), dash(), "OOM".into(), dash(), dash(), dash()]);
+            }
+        }
+    }
+    t
+}
+
 /// **Table I**: counted communication volume vs the analytic formulas.
 ///
 /// For each algorithm, reports the exact counted words (f32) and
@@ -369,6 +512,27 @@ mod tests {
         let machine = MachineModel::perlmutter();
         let tables = comm_table(&scale, &machine);
         assert!(!tables[0].rows.is_empty());
+    }
+
+    #[test]
+    fn landmark_figures_produce_measured_rows() {
+        let scale = tiny_scale();
+        let kind = crate::backend::BackendKind::Scalar;
+        let tables = landmark_scaling_figures(&scale, &kind);
+        assert_eq!(tables.len(), 2); // weak + strong
+        assert_eq!(tables[0].rows.len(), 3); // G = 1, 4, 16
+        assert_eq!(tables[1].rows.len(), 2); // G = 4, 16 (strong starts at one node)
+        for row in tables.iter().flat_map(|t| &t.rows) {
+            // Wall columns are populated (measured, not modeled).
+            assert!(row[3].parse::<f64>().is_ok(), "wall 1D: {:?}", row[3]);
+            assert!(row[4].parse::<f64>().is_ok(), "wall 1.5D: {:?}", row[4]);
+        }
+        let t = landmark_table(&scale, &kind);
+        assert!(!t.rows.is_empty());
+        for row in &t.rows {
+            let nmi: f64 = row[1].parse().unwrap();
+            assert!((0.0..=1.0).contains(&nmi));
+        }
     }
 
     #[test]

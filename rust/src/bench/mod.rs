@@ -12,5 +12,8 @@
 pub mod run;
 pub mod figures;
 
-pub use figures::{comm_table, sliding_speedup, strong_scaling, weak_scaling, summary};
+pub use figures::{
+    comm_table, landmark_scaling_figures, landmark_table, sliding_speedup, strong_scaling,
+    summary, weak_scaling,
+};
 pub use run::{run_once, RunOutcome, PhaseCost};

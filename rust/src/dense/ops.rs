@@ -13,7 +13,7 @@
 //! 8-wide unrolled dot/axpy loops that LLVM auto-vectorizes.
 
 use super::matrix::DenseMatrix;
-use crate::util::par::{par_ranges, SendPtr};
+use crate::util::par::{par_ranges_with, SendPtr};
 
 /// Row-block size for parallel partitioning.
 const PAR_MIN_ROWS: usize = 8;
@@ -26,12 +26,19 @@ const BLOCK_J: usize = 64;
 ///
 /// A is m×d, B is n×d, result m×n.
 pub fn matmul_nt(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+    matmul_nt_with(0, a, b)
+}
+
+/// [`matmul_nt`] with an explicit thread-count cap (0 = global default).
+/// Each C row is produced by exactly one worker with a fixed jb→kb
+/// block order, so the result is bit-identical at every thread count.
+pub fn matmul_nt_with(threads: usize, a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
     assert_eq!(a.cols(), b.cols(), "matmul_nt: inner dims differ");
     let (m, n, d) = (a.rows(), b.rows(), a.cols());
     let mut c = DenseMatrix::zeros(m, n);
     {
         let cptr = SendPtr(c.data_mut().as_mut_ptr());
-        par_ranges(m, PAR_MIN_ROWS, |lo, hi| {
+        par_ranges_with(threads, m, PAR_MIN_ROWS, |lo, hi| {
             let cptr = &cptr;
             for jb in (0..n).step_by(BLOCK_J) {
                 let jend = (jb + BLOCK_J).min(n);
@@ -58,12 +65,19 @@ pub fn matmul_nt(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
 ///
 /// A is m×t, B is t×n, `c` is m×n.
 pub fn matmul_nn_acc(a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix) {
+    matmul_nn_acc_with(0, a, b, c)
+}
+
+/// [`matmul_nn_acc`] with an explicit thread-count cap (0 = global
+/// default). Row-exclusive writes + fixed kb order = bit-identity at
+/// every thread count.
+pub fn matmul_nn_acc_with(threads: usize, a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix) {
     assert_eq!(a.cols(), b.rows(), "matmul_nn: inner dims differ");
     assert_eq!(c.rows(), a.rows());
     assert_eq!(c.cols(), b.cols());
     let (m, t, n) = (a.rows(), a.cols(), b.cols());
     let cptr = SendPtr(c.data_mut().as_mut_ptr());
-    par_ranges(m, PAR_MIN_ROWS, |lo, hi| {
+    par_ranges_with(threads, m, PAR_MIN_ROWS, |lo, hi| {
         let cptr = &cptr;
         for i in lo..hi {
             // SAFETY: row i exclusive to this worker.
@@ -193,6 +207,26 @@ mod tests {
         axpy(2.0, &x, &mut acc);
         for (i, v) in acc.iter().enumerate() {
             assert_eq!(*v, 1.0 + 2.0 * i as f32);
+        }
+    }
+
+    #[test]
+    fn thread_count_is_bit_invariant() {
+        let mut rng = Rng::new(46);
+        let a = DenseMatrix::random(37, 129, &mut rng);
+        let b = DenseMatrix::random(23, 129, &mut rng);
+        let base = matmul_nt_with(1, &a, &b);
+        for threads in [2usize, 4, 8] {
+            let c = matmul_nt_with(threads, &a, &b);
+            assert_eq!(c.data(), base.data(), "matmul_nt @ {threads} threads");
+        }
+        let x = DenseMatrix::random(37, 23, &mut rng);
+        let mut acc1 = DenseMatrix::zeros(37, 129);
+        matmul_nn_acc_with(1, &x, &b, &mut acc1);
+        for threads in [2usize, 4, 8] {
+            let mut acc = DenseMatrix::zeros(37, 129);
+            matmul_nn_acc_with(threads, &x, &b, &mut acc);
+            assert_eq!(acc.data(), acc1.data(), "matmul_nn_acc @ {threads} threads");
         }
     }
 

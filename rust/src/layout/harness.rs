@@ -42,12 +42,31 @@ pub struct LoopOutcome {
 pub fn drive_loop(
     max_iters: usize,
     converge_on_stable: bool,
+    step: impl FnMut(usize) -> (u64, f64),
+) -> LoopOutcome {
+    drive_loop_tol(max_iters, converge_on_stable, 0.0, step)
+}
+
+/// [`drive_loop`] with an **objective-based stopping rule**: with
+/// `tol > 0`, the loop additionally stops once the relative objective
+/// drop between consecutive iterations falls below `tol` — i.e.
+/// `(prev − obj) < tol·|prev|` — counting as convergence. A rising or
+/// flat objective trips the rule too (the drop is ≤ 0 < tol·|prev| for
+/// any positive prev magnitude). `tol = 0` disables the rule entirely:
+/// the fixed-iteration schedule runs bit-identically to [`drive_loop`]
+/// — the rule is gated on `tol > 0.0` before any comparison, so no
+/// arithmetic path changes (pinned by the harness and stream tests).
+pub fn drive_loop_tol(
+    max_iters: usize,
+    converge_on_stable: bool,
+    tol: f64,
     mut step: impl FnMut(usize) -> (u64, f64),
 ) -> LoopOutcome {
     let mut objective_curve = Vec::new();
     let mut changes_curve = Vec::new();
     let mut iterations = 0;
     let mut converged = false;
+    let mut prev_obj: Option<f64> = None;
     for it in 0..max_iters {
         let (changes, obj) = step(it);
         objective_curve.push(obj);
@@ -56,6 +75,15 @@ pub fn drive_loop(
         if changes == 0 && converge_on_stable {
             converged = true;
             break;
+        }
+        if tol > 0.0 {
+            if let Some(prev) = prev_obj {
+                if prev - obj < tol * prev.abs() {
+                    converged = true;
+                    break;
+                }
+            }
+            prev_obj = Some(obj);
         }
     }
     LoopOutcome { iterations, converged, objective_curve, changes_curve }
@@ -221,6 +249,50 @@ mod tests {
         let out = drive_loop(3, false, |_| (0, 0.0));
         assert_eq!(out.iterations, 3);
         assert!(!out.converged);
+    }
+
+    #[test]
+    fn tol_zero_reproduces_fixed_schedule_exactly() {
+        // The pinning test for the stopping rule: tol = 0 must replay
+        // the fixed-iteration schedule verbatim — same iterations, same
+        // curves, same convergence flag — for converging and
+        // non-converging sequences alike.
+        let seqs: Vec<Vec<(u64, f64)>> = vec![
+            vec![(3, 9.0), (1, 5.0), (0, 5.0), (7, 1.0)],
+            vec![(2, 8.0), (2, 7.9), (2, 7.89), (2, 7.889)],
+            vec![(1, -4.0), (1, -4.1), (1, -4.11)],
+        ];
+        for seq in seqs {
+            for stable in [true, false] {
+                let mut a = seq.clone().into_iter();
+                let mut b = seq.clone().into_iter();
+                let base = drive_loop(seq.len(), stable, |_| a.next().unwrap());
+                let tol0 = drive_loop_tol(seq.len(), stable, 0.0, |_| b.next().unwrap());
+                assert_eq!(tol0.iterations, base.iterations);
+                assert_eq!(tol0.converged, base.converged);
+                assert_eq!(tol0.objective_curve, base.objective_curve);
+                assert_eq!(tol0.changes_curve, base.changes_curve);
+            }
+        }
+    }
+
+    #[test]
+    fn tol_stops_on_small_relative_drop() {
+        // 8.0 → 7.9 is a 1.25% drop; tol = 5% stops after seeing it.
+        let mut seq = vec![(2u64, 8.0), (2, 7.9), (2, 7.0), (2, 1.0)].into_iter();
+        let out = drive_loop_tol(10, true, 0.05, |_| seq.next().unwrap());
+        assert_eq!(out.iterations, 2);
+        assert!(out.converged, "a sub-tol drop counts as convergence");
+        assert_eq!(out.objective_curve, vec![8.0, 7.9]);
+        // A big drop keeps the loop alive: 8.0 → 4.0 is 50%.
+        let mut seq = vec![(2u64, 8.0), (2, 4.0), (2, 2.0), (2, 1.9)].into_iter();
+        let out = drive_loop_tol(4, true, 0.05, |_| seq.next().unwrap());
+        assert_eq!(out.iterations, 4, "halving drops never trip a 5% tol");
+        // A rising objective trips the rule immediately.
+        let mut seq = vec![(2u64, 5.0), (2, 6.0), (2, 1.0)].into_iter();
+        let out = drive_loop_tol(10, true, 0.01, |_| seq.next().unwrap());
+        assert_eq!(out.iterations, 2);
+        assert!(out.converged);
     }
 
     #[test]

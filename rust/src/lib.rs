@@ -168,6 +168,40 @@
 //! measures the windowed stream against the single-device
 //! [`sliding_window`] re-fit baseline on the same drifting source.
 //!
+//! ## The local compute backend: threads without tolerances
+//!
+//! Everything above counts communication exactly; the [`backend`]
+//! module makes the *local* arithmetic fast too. [`backend::native`]
+//! runs the hot per-rank kernels — the fused cross-kernel Gram panel
+//! C = κ(X, L), the k×m cluster-sum reduction, the reduced-rank
+//! expansion E = C·αᵀ, masking and argmin — cache-blocked and
+//! parallel over worker threads, and every kernel assigns each output
+//! element to exactly one worker with a fixed inner accumulation
+//! order, so the threaded results are **bit-identical** to the
+//! single-thread backend at every thread count (`rust/tests/backend.rs`
+//! pins `==` at 1/2/4/8 threads — no tolerances). Pick the flavor per
+//! fit; the knob trades wall time only:
+//!
+//! ```no_run
+//! use vivaldi::approx::{self, ApproxConfig};
+//! use vivaldi::backend::NativeBackend;
+//! use vivaldi::data::synth;
+//!
+//! let ds = synth::concentric_rings(4096, 2, 42);
+//! let cfg = ApproxConfig { k: 2, m: 512, ..Default::default() };
+//! // Pinned single worker …
+//! let a = approx::fit_with_backend(4, &ds.points, &cfg, &NativeBackend::scalar()).unwrap();
+//! // … vs all cores (or VIVALDI_THREADS): same bits, less wall time.
+//! let b = approx::fit_with_backend(4, &ds.points, &cfg, &NativeBackend::new()).unwrap();
+//! assert_eq!(a.assignments, b.assignments);
+//! ```
+//!
+//! `vivaldi run --backend scalar|threaded` exposes the same knob on
+//! the CLI, `benches/landmark_scaling.rs` reports scalar-vs-threaded
+//! wall rows per phase, and
+//! [`model::analytic::local_flops_gram`] (plus the `cluster_sums` /
+//! `expand` forms) turn measured seconds into achieved GFLOP/s.
+//!
 //! See `DESIGN.md` for the full system inventory and the experiment
 //! index, and `EXPERIMENTS.md` for the paper-vs-measured record.
 

@@ -18,6 +18,7 @@
 //! (JSON overrides, see `config::Scale`). Tables print to stdout and
 //! are saved as CSV under `results/`.
 
+use vivaldi::backend::BackendKind;
 use vivaldi::bench;
 use vivaldi::config::Scale;
 use vivaldi::data::datasets::PaperDataset;
@@ -35,6 +36,8 @@ fn main() {
         "weak-scaling" => cmd_figures(rest, Figure::Weak),
         "strong-scaling" => cmd_figures(rest, Figure::Strong),
         "sliding-window" | "sliding-window-speedup" => cmd_figures(rest, Figure::Sliding),
+        "landmark-scaling" => cmd_figures(rest, Figure::LandmarkScaling),
+        "landmark-table" => cmd_figures(rest, Figure::LandmarkTable),
         "comm-table" => cmd_figures(rest, Figure::CommTable),
         "summary" => cmd_figures(rest, Figure::Summary),
         "datasets" => cmd_datasets(),
@@ -77,6 +80,10 @@ fn print_help() {
          \x20                   off disk instead of generated data\n\
          \x20 weak-scaling      Fig. 2 [--breakdown → Fig. 3] [--quick]\n\
          \x20 strong-scaling    Fig. 4 [--breakdown → Fig. 5] [--quick]\n\
+         \x20 landmark-scaling  Fig. 2–5-style weak/strong rows for the\n\
+         \x20                   landmark path (counted volume + wall time)\n\
+         \x20 landmark-table    landmark quality/footprint table (m sweep:\n\
+         \x20                   NMI, peak memory, counted volume, wall)\n\
          \x20 sliding-window    Fig. 6 speedup over the single-device baseline\n\
          \x20 comm-table        Table I: counted vs analytic communication\n\
          \x20 summary           §VI headline aggregates\n\
@@ -86,7 +93,14 @@ fn print_help() {
          COMMON FLAGS:\n\
          \x20 --quick           small grid (seconds, for smoke tests)\n\
          \x20 --scale FILE      JSON overrides for the experiment scale\n\
-         \x20 --datasets LIST   comma-separated subset (kdd,higgs,mnist8m)"
+         \x20 --datasets LIST   comma-separated subset (kdd,higgs,mnist8m)\n\
+         \x20 --backend B       local compute backend: scalar|threaded\n\
+         \x20                   (default threaded; thread count from\n\
+         \x20                   VIVALDI_THREADS, else available cores;\n\
+         \x20                   results are bit-identical either way)\n\
+         \x20 --tol T           streaming only: stop the inner loop when\n\
+         \x20                   the relative objective drop falls below T\n\
+         \x20                   (0 = fixed --inner-iters schedule)"
     );
 }
 
@@ -110,6 +124,17 @@ impl<'a> Flags<'a> {
 
     fn usize_or(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// The `--backend scalar|threaded` knob (default threaded).
+    fn backend_kind(&self) -> BackendKind {
+        match self.get("--backend") {
+            None => BackendKind::default(),
+            Some(s) => BackendKind::parse(s).unwrap_or_else(|e| {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }),
+        }
     }
 }
 
@@ -166,12 +191,13 @@ fn cmd_run(args: &[String]) -> i32 {
         converge_on_stable: true,
         mem: None,
     };
+    let kind = f.backend_kind();
     println!(
         "fit: algo={} G={g} n={} d={} k={k} iters<={iters} backend={}",
         algo.name(),
         data.n(),
         data.d(),
-        if f.has("--pjrt") { "pjrt" } else { "native" }
+        if f.has("--pjrt") { "pjrt" } else { kind.name() }
     );
     let t0 = std::time::Instant::now();
     let result = if f.has("--pjrt") {
@@ -188,7 +214,7 @@ fn cmd_run(args: &[String]) -> i32 {
             }
         }
     } else {
-        kkmeans::fit(algo, g, &data.points, &cfg)
+        kkmeans::fit_with_backend(algo, g, &data.points, &cfg, &kind.backend())
     };
     match result {
         Ok(out) => {
@@ -360,15 +386,17 @@ fn cmd_run_landmark(f: &Flags) -> i32 {
             auto_layout,
         );
     }
+    let kind = f.backend_kind();
     println!(
-        "landmark fit: layout={}{} G={g} n={} d={} m={m} k={k} iters<={iters}",
+        "landmark fit: layout={}{} G={g} n={} d={} m={m} k={k} iters<={iters} backend={}",
         layout.name(),
         if auto_layout { " (auto)" } else { "" },
         data.n(),
         data.d(),
+        kind.name(),
     );
     let t0 = std::time::Instant::now();
-    match approx::fit(g, &data.points, &cfg) {
+    match approx::fit_with_backend(g, &data.points, &cfg, &kind.backend()) {
         Ok(out) => {
             println!(
                 "done in {:.3}s wall: {} iterations, converged={}, peak mem {}",
@@ -488,7 +516,7 @@ fn cmd_run_landmark_stream(
     f: &Flags,
     auto_layout: bool,
 ) -> i32 {
-    use vivaldi::approx::stream::{fit_stream, StreamConfig};
+    use vivaldi::approx::stream::{fit_stream_with_backend, StreamConfig};
 
     let decay = f
         .get("--decay")
@@ -517,6 +545,19 @@ fn cmd_run_landmark_stream(
                 .collect()
         })
         .unwrap_or_default();
+    // Objective-based stopping: the inner loop also stops when the
+    // relative objective drop falls below --tol (0 keeps the fixed
+    // --inner-iters schedule exactly).
+    let tol = f
+        .get("--tol")
+        .map(|v| match v.parse::<f64>() {
+            Ok(t) => t,
+            Err(_) => {
+                eprintln!("--tol takes a float >= 0 (0 disables the rule)");
+                std::process::exit(2);
+            }
+        })
+        .unwrap_or(0.0);
     let mem = base.mem;
     let m = base.m;
     let cfg = StreamConfig {
@@ -527,18 +568,21 @@ fn cmd_run_landmark_stream(
         refresh_every: f.usize_or("--refresh-every", 0),
         inner_iters,
         window: f.usize_or("--window", 0),
+        tol,
     };
     let window_note =
         if cfg.window > 0 { format!(" window={}", cfg.window) } else { String::new() };
+    let kind = f.backend_kind();
     println!(
-        "landmark stream fit: layout={}{} G={g} n={} d={d} m={m} k={} B={batch} decay={decay}{window_note}",
+        "landmark stream fit: layout={}{} G={g} n={} d={d} m={m} k={} B={batch} decay={decay}{window_note} backend={}",
         cfg.base.layout.name(),
         if auto_layout { " (auto)" } else { "" },
         if n_report > 0 { n_report.to_string() } else { "?".into() },
         cfg.base.k,
+        kind.name(),
     );
     let t0 = std::time::Instant::now();
-    match fit_stream(g, source, &cfg) {
+    match fit_stream_with_backend(g, source, &cfg, &kind.backend()) {
         Ok(out) => {
             println!(
                 "done in {:.3}s wall: {} batches, {} inner iterations, converged={}, \
@@ -596,6 +640,8 @@ fn cmd_run_landmark_stream(
 enum Figure {
     Weak,
     Strong,
+    LandmarkScaling,
+    LandmarkTable,
     Sliding,
     CommTable,
     Summary,
@@ -610,6 +656,8 @@ fn cmd_figures(args: &[String], which: Figure) -> i32 {
     let tables: Vec<Table> = match which {
         Figure::Weak => bench::weak_scaling(&scale, &machine, &datasets, breakdown),
         Figure::Strong => bench::strong_scaling(&scale, &machine, &datasets, breakdown),
+        Figure::LandmarkScaling => bench::landmark_scaling_figures(&scale, &f.backend_kind()),
+        Figure::LandmarkTable => vec![bench::landmark_table(&scale, &f.backend_kind())],
         Figure::Sliding => bench::sliding_speedup(&scale, &machine, &datasets),
         Figure::CommTable => bench::comm_table(&scale, &machine),
         Figure::Summary => vec![bench::summary(&scale, &machine, &datasets)],

@@ -250,6 +250,32 @@ pub fn stream_window_peak_bytes(
     stream_init_peak_bytes(m, d, batch, p) + window as u64 * slot
 }
 
+/// Local FLOPs of one cross-kernel Gram panel C = κ(X, L) with X
+/// (n×d) and L (m×d): the 2·n·m·d multiply-adds of the dot panels plus
+/// the elementwise kernel epilogue (~4 flops/element covers the
+/// poly/RBF norm combine + transcendental at the counting granularity
+/// Table-style rooflines use; linear pays it too — a deliberate upper
+/// bound). Pair with a measured wall time for achieved GFLOP/s:
+/// `local_flops_gram(..) / wall_s / 1e9` against the roofline peak
+/// (`VIVALDI_PEAK_GFLOPS`).
+pub fn local_flops_gram(n: usize, m: usize, d: usize) -> f64 {
+    2.0 * n as f64 * m as f64 * d as f64 + 4.0 * n as f64 * m as f64
+}
+
+/// Local FLOPs of the k×m cluster-sum reduction b[a,·] += C[j,·]:
+/// one add per C element — n·m, bandwidth-bound (arithmetic intensity
+/// 1/8 flop per byte read), so the roofline here is memory, not
+/// compute.
+pub fn local_flops_cluster_sums(n: usize, m: usize) -> f64 {
+    n as f64 * m as f64
+}
+
+/// Local FLOPs of the reduced-rank expansion E = C·αᵀ (n×m times
+/// m×k): 2·n·m·k multiply-adds.
+pub fn local_flops_expand(n: usize, m: usize, k: usize) -> f64 {
+    2.0 * n as f64 * m as f64 * k as f64
+}
+
 /// All Table I rows for a parameter set, in the paper's order:
 /// (algorithm, K cost, Dᵀ cost).
 pub fn table1(c: CostParams) -> Vec<(&'static str, CommCost, CommCost)> {
@@ -449,6 +475,22 @@ mod tests {
         // Doubling d moves the init term only — the ring term holds.
         let w8_d = stream_window_peak_bytes(m, 2 * d, batch, p, k, 8);
         assert_eq!(w8_d - stream_init_peak_bytes(m, 2 * d, batch, p), w8 - base);
+    }
+
+    #[test]
+    fn local_flops_closed_forms() {
+        // Gram dominates: for d >> k the dot panels dwarf the epilogue
+        // and the expansion.
+        let (n, m, d, k) = (4096usize, 512usize, 784usize, 64usize);
+        let gram = local_flops_gram(n, m, d);
+        assert_eq!(gram, 2.0 * (n * m * d) as f64 + 4.0 * (n * m) as f64);
+        assert!(gram > local_flops_expand(n, m, k));
+        assert!(local_flops_expand(n, m, k) > local_flops_cluster_sums(n, m));
+        // All three are linear in n — the per-point local work is flat
+        // in the stream length, matching the communication story.
+        assert_eq!(local_flops_gram(2 * n, m, d), 2.0 * gram);
+        assert_eq!(local_flops_cluster_sums(2 * n, m), 2.0 * local_flops_cluster_sums(n, m));
+        assert_eq!(local_flops_expand(2 * n, m, k), 2.0 * local_flops_expand(n, m, k));
     }
 
     #[test]

@@ -26,10 +26,26 @@ pub fn par_ranges<F>(n: usize, min_chunk: usize, f: F)
 where
     F: Fn(usize, usize) + Sync,
 {
+    par_ranges_with(0, n, min_chunk, f)
+}
+
+/// [`par_ranges`] with an explicit thread-count cap. `threads == 0`
+/// means "use the global default" ([`num_threads`]); `threads == 1`
+/// pins the exact sequential op order (no scope is even entered).
+///
+/// Because each output index is written by exactly one worker and every
+/// worker walks its range in ascending order, the per-element op
+/// sequence — and therefore the f32 result — is identical at every
+/// thread count. The backend's bit-identity wall rests on this.
+pub fn par_ranges_with<F>(threads: usize, n: usize, min_chunk: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
     if n == 0 {
         return;
     }
-    let workers = num_threads().min(n.div_ceil(min_chunk.max(1))).max(1);
+    let cap = if threads == 0 { num_threads() } else { threads };
+    let workers = cap.min(n.div_ceil(min_chunk.max(1))).max(1);
     if workers == 1 {
         f(0, n);
         return;
@@ -106,5 +122,22 @@ mod tests {
         par_ranges(0, 1, |_, _| panic!("must not be called"));
         let v = par_map(1, 64, |i| i + 1);
         assert_eq!(v, vec![1]);
+    }
+
+    #[test]
+    fn explicit_thread_counts_cover_all_indices_once() {
+        let n = 1003;
+        for threads in [1usize, 2, 4, 8] {
+            let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            par_ranges_with(threads, n, 4, |lo, hi| {
+                for i in lo..hi {
+                    counts[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(
+                counts.iter().all(|c| c.load(Ordering::Relaxed) == 1),
+                "threads = {threads}"
+            );
+        }
     }
 }

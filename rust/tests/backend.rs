@@ -1,0 +1,125 @@
+//! Backend bit-identity wall.
+//!
+//! The threaded local-compute backend must produce results exactly
+//! `==` the pinned single-thread backend — assignments, objective
+//! curves, change counts — with **no tolerances**, at every tested
+//! thread count, for batch and streaming fits, both landmark layouts,
+//! and p ∈ {1, 4}. The identity holds by construction (every threaded
+//! kernel assigns each output element to exactly one worker with a
+//! fixed inner iteration order), so any `!=` here is a scheduling bug,
+//! not float noise.
+
+use vivaldi::approx::stream::{fit_stream_with_backend, StreamConfig};
+use vivaldi::approx::{self, ApproxConfig, LandmarkLayout};
+use vivaldi::backend::NativeBackend;
+use vivaldi::data::stream::MatrixSource;
+use vivaldi::data::synth;
+
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+fn batch_cfg(layout: LandmarkLayout) -> ApproxConfig {
+    ApproxConfig {
+        k: 4,
+        m: 32,
+        layout,
+        max_iters: 5,
+        converge_on_stable: false,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn batch_fit_is_bit_identical_across_thread_counts() {
+    let ds = synth::concentric_rings(256, 4, 20260710);
+    for layout in [LandmarkLayout::OneD, LandmarkLayout::OneFiveD] {
+        for p in [1usize, 4] {
+            let cfg = batch_cfg(layout);
+            let base = approx::fit_with_backend(p, &ds.points, &cfg, &NativeBackend::scalar())
+                .expect("scalar fit");
+            for t in THREADS {
+                let out =
+                    approx::fit_with_backend(p, &ds.points, &cfg, &NativeBackend::threaded(t))
+                        .expect("threaded fit");
+                let ctx = format!("layout={} p={p} threads={t}", layout.name());
+                assert_eq!(out.assignments, base.assignments, "assignments differ: {ctx}");
+                assert_eq!(
+                    out.objective_curve, base.objective_curve,
+                    "objective curve differs: {ctx}"
+                );
+                assert_eq!(out.changes_curve, base.changes_curve, "changes differ: {ctx}");
+                assert_eq!(out.iterations, base.iterations, "iterations differ: {ctx}");
+                assert_eq!(out.converged, base.converged, "convergence differs: {ctx}");
+            }
+        }
+    }
+}
+
+#[test]
+fn stream_fit_is_bit_identical_across_thread_counts() {
+    // Windowed drifting stream: exercises init, the inner loop, the
+    // carried decayed sums, ring eviction, and the tail classify — the
+    // full streaming surface the backend routes through.
+    let ds = synth::migrating_blobs(64, 6, 8, 4, 6.0, 3, 20260710);
+    for layout in [LandmarkLayout::OneD, LandmarkLayout::OneFiveD] {
+        for p in [1usize, 4] {
+            let cfg = StreamConfig {
+                base: ApproxConfig {
+                    k: 4,
+                    m: 32,
+                    layout,
+                    max_iters: 4,
+                    converge_on_stable: false,
+                    ..Default::default()
+                },
+                batch: 64,
+                window: 2,
+                ..Default::default()
+            };
+            let mut src = MatrixSource::new(&ds.points);
+            let base = fit_stream_with_backend(p, &mut src, &cfg, &NativeBackend::scalar())
+                .expect("scalar stream fit");
+            for t in THREADS {
+                let mut src = MatrixSource::new(&ds.points);
+                let out =
+                    fit_stream_with_backend(p, &mut src, &cfg, &NativeBackend::threaded(t))
+                        .expect("threaded stream fit");
+                let ctx = format!("layout={} p={p} threads={t}", layout.name());
+                assert_eq!(out.assignments, base.assignments, "assignments differ: {ctx}");
+                assert_eq!(
+                    out.objective_curve, base.objective_curve,
+                    "objective curve differs: {ctx}"
+                );
+                assert_eq!(
+                    out.batch_iterations, base.batch_iterations,
+                    "inner-iteration schedule differs: {ctx}"
+                );
+                assert_eq!(out.peak_mem, base.peak_mem, "peak memory differs: {ctx}");
+                assert_eq!(out.converged, base.converged, "convergence differs: {ctx}");
+            }
+        }
+    }
+}
+
+#[test]
+fn threaded_backend_is_deterministic_run_to_run() {
+    // Same inputs, same backend, two runs: bit-identical outputs. The
+    // thread scheduler must have no observable effect on the numbers.
+    let ds = synth::concentric_rings(192, 2, 7);
+    let cfg = batch_cfg(LandmarkLayout::OneD);
+    let be = NativeBackend::threaded(8);
+    let a = approx::fit_with_backend(4, &ds.points, &cfg, &be).expect("first run");
+    let b = approx::fit_with_backend(4, &ds.points, &cfg, &be).expect("second run");
+    assert_eq!(a.assignments, b.assignments);
+    assert_eq!(a.objective_curve, b.objective_curve);
+    assert_eq!(a.changes_curve, b.changes_curve);
+}
+
+#[test]
+fn backend_kind_knob_parses_and_instantiates() {
+    use vivaldi::backend::BackendKind;
+    assert_eq!(BackendKind::parse("scalar").unwrap(), BackendKind::Scalar);
+    assert_eq!(BackendKind::parse("threaded").unwrap(), BackendKind::Threaded);
+    assert!(BackendKind::parse("gpu").is_err());
+    assert_eq!(BackendKind::Scalar.backend().thread_cap(), 1);
+    assert_eq!(BackendKind::Threaded.backend().thread_cap(), 0); // global default
+}

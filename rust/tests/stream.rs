@@ -370,6 +370,98 @@ fn fifteen_d_stream_tail_classified_via_panel_solve() {
     assert!(score > 0.85, "nmi = {score}");
 }
 
+/// The `tol` objective-based stopping rule: tol = 0 (the default) must
+/// reproduce the fixed-iteration schedule **exactly** — the other half
+/// of the `--inner-iters` knob only engages when asked.
+#[test]
+fn tol_zero_is_bit_identical_to_fixed_schedule() {
+    let n = 512;
+    let ds = synth::concentric_rings(n, 2, 401);
+    let mk = |tol: f64| StreamConfig {
+        base: ApproxConfig {
+            k: 2,
+            m: n / 8,
+            kernel: KernelFn::gaussian(2.0),
+            max_iters: 12,
+            converge_on_stable: false,
+            ..Default::default()
+        },
+        batch: 128,
+        tol,
+        ..Default::default()
+    };
+    // StreamConfig::default() leaves tol at 0.0 — the rule is opt-in.
+    assert_eq!(StreamConfig::default().tol, 0.0);
+    for p in [1usize, 4] {
+        let mut s1 = MatrixSource::new(&ds.points);
+        let fixed = fit_stream(p, &mut s1, &mk(0.0)).unwrap();
+        // With converge_on_stable off and tol 0, every batch runs the
+        // full budget — the fixed schedule the tol=0 contract pins —
+        // even though the objective visibly plateaus within it.
+        assert!(
+            fixed.batch_iterations.iter().all(|&it| it == 12),
+            "p={p}: tol=0 must run the fixed schedule: {:?}",
+            fixed.batch_iterations
+        );
+        // And a replay is bit-identical (the rule adds no hidden state).
+        let mut s2 = MatrixSource::new(&ds.points);
+        let again = fit_stream(p, &mut s2, &mk(0.0)).unwrap();
+        assert_eq!(fixed.assignments, again.assignments, "p={p}");
+        assert_eq!(fixed.objective_curve, again.objective_curve, "p={p}");
+    }
+}
+
+/// tol > 0 stops converged batches early (fewer inner iterations, same
+/// clustering quality), and an invalid tol is rejected up front.
+#[test]
+fn tol_stops_converged_batches_early() {
+    let n = 512;
+    let ds = synth::concentric_rings(n, 2, 402);
+    let mk = |tol: f64| StreamConfig {
+        base: ApproxConfig {
+            k: 2,
+            m: n / 8,
+            kernel: KernelFn::gaussian(2.0),
+            max_iters: 12,
+            converge_on_stable: false,
+            ..Default::default()
+        },
+        batch: 128,
+        tol,
+        ..Default::default()
+    };
+    let mut s1 = MatrixSource::new(&ds.points);
+    let fixed = fit_stream(4, &mut s1, &mk(0.0)).unwrap();
+    let mut s2 = MatrixSource::new(&ds.points);
+    let tolled = fit_stream(4, &mut s2, &mk(1e-3)).unwrap();
+    assert!(
+        tolled.iterations < fixed.iterations,
+        "tol must shave iterations: {} !< {}",
+        tolled.iterations,
+        fixed.iterations
+    );
+    assert!(
+        tolled.batch_iterations.iter().zip(&fixed.batch_iterations).all(|(a, b)| a <= b),
+        "tol never adds iterations: {:?} vs {:?}",
+        tolled.batch_iterations,
+        fixed.batch_iterations
+    );
+    let score = nmi(&tolled.assignments, &ds.labels, 2);
+    assert!(score >= 0.85, "early stopping must not cost quality: nmi={score}");
+
+    // Invalid tol values are config errors, not silent behavior.
+    for bad in [-0.5, f64::NAN, f64::INFINITY] {
+        let mut src = MatrixSource::new(&ds.points);
+        assert!(
+            matches!(
+                fit_stream(4, &mut src, &mk(bad)),
+                Err(VivaldiError::InvalidConfig(_))
+            ),
+            "tol={bad} must be rejected"
+        );
+    }
+}
+
 /// The 1.5D landmark layout streams too: multi-batch quality holds and
 /// the layouts agree with each other on the same stream.
 #[test]
