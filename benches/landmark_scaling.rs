@@ -26,9 +26,10 @@ use vivaldi::kkmeans::{self, Algo, FitConfig};
 use vivaldi::metrics::Table;
 use vivaldi::model::analytic::{
     d_landmark_15d_blockcyclic, d_landmark_1d, d_landmark_stream, local_flops_cluster_sums,
-    local_flops_expand, local_flops_gram, stream_landmark_blockgather, w_blockcyclic_factor,
-    CostParams,
+    local_flops_expand, local_flops_gram, local_flops_gram_sparse, stream_landmark_blockgather,
+    w_blockcyclic_factor, CostParams,
 };
+use vivaldi::sparse::CsrMatrix;
 use vivaldi::quality::nmi;
 use vivaldi::util::human_bytes;
 use vivaldi::util::timing::Stopwatch;
@@ -189,7 +190,38 @@ fn local_kernel_walls(quick: bool) -> Vec<WallRow> {
             std::hint::black_box(&e);
         }),
     };
-    vec![gram, update]
+    // The sparse cross-kernel gram at a text-like density (nnz ≈ n·d/16):
+    // the CSR lane is asserted bit-identical to the dense panel on the
+    // densified twin of the same data, then timed on its own —
+    // `local_flops_gram_sparse` is the matching nnz-bounded closed form,
+    // so the GF/s column stays comparable across densities.
+    let keep = (bd / 16).max(2);
+    let sparse_rows: Vec<Vec<(usize, f32)>> = (0..bn)
+        .map(|i| {
+            (0..keep)
+                .map(|s| ((i * 131 + s * 977) % bd, ((i + s) % 9) as f32 * 0.25 + 0.5))
+                .collect()
+        })
+        .collect();
+    let xs_csr = CsrMatrix::from_rows(bd, &sparse_rows);
+    let xs = xs_csr.to_dense();
+    let xsn: Vec<f32> = (0..bn).map(|i| vivaldi::dense::ops::dot(xs.row(i), xs.row(i))).collect();
+    let sg_dense = scalar.gram_tile(&xs, &l, &kernel, &xsn, &ln);
+    let sg_scalar = scalar.gram_tile_csr(&xs_csr, &l, &kernel, &xsn, &ln);
+    let sg_threaded = threaded.gram_tile_csr(&xs_csr, &l, &kernel, &xsn, &ln);
+    assert_eq!(sg_dense.data(), sg_scalar.data(), "sparse gram must be bit-identical to dense");
+    assert_eq!(sg_scalar.data(), sg_threaded.data(), "threaded sparse gram must be bit-identical");
+    let sparse_gram = WallRow {
+        phase: "gram-csr".into(),
+        flops: local_flops_gram_sparse(bn, bm, xs_csr.nnz() as u64),
+        scalar_s: best_of(reps, || {
+            std::hint::black_box(scalar.gram_tile_csr(&xs_csr, &l, &kernel, &xsn, &ln));
+        }),
+        threaded_s: best_of(reps, || {
+            std::hint::black_box(threaded.gram_tile_csr(&xs_csr, &l, &kernel, &xsn, &ln));
+        }),
+    };
+    vec![gram, update, sparse_gram]
 }
 
 fn main() {

@@ -52,9 +52,11 @@ pub mod stream;
 use crate::backend::ComputeBackend;
 use crate::comm::{Comm, Grid2D, Group, World};
 use crate::data::landmarks::{self, LandmarkSeeding};
+use crate::data::PointsRef;
 use crate::dense::DenseMatrix;
-use crate::gemm::{gemm_15d_landmark_gram, gemm_1d_landmark_gram};
+use crate::gemm::{gemm_15d_landmark_gram_points, gemm_1d_landmark_gram_points};
 use crate::kernelfn::KernelFn;
+use crate::sparse::CsrMatrix;
 use crate::kkmeans::{loop_common, FitResult, RankOutput};
 use crate::layout::{harness, Partition, WFactorization};
 use crate::util::{part, timing, timing::Stopwatch};
@@ -233,6 +235,54 @@ pub fn fit_with_backend(
     cfg: &ApproxConfig,
     backend: &dyn ComputeBackend,
 ) -> Result<FitResult, VivaldiError> {
+    fit_points_with_backend(p, PointsRef::Dense(points), cfg, backend)
+}
+
+/// [`fit`] over a CSR point store — the sparse lane's batch entry. The
+/// whole pipeline is nnz-bounded on the point side: the cross-kernel
+/// panel C = κ(X, L) streams stored entries only
+/// ([`crate::backend::ComputeBackend::gram_tile_csr`]), landmark rows
+/// are gathered straight from CSR rows, and the reduced-rank loop is
+/// shared verbatim with the dense path. On densifiable data the result
+/// is **bit-identical** to [`fit`] on `points.to_dense()`.
+///
+/// Requires [`LandmarkSeeding::Uniform`]: k-means++ seeding reads point
+/// values (it has no value-free form), so the sparse lane rejects it
+/// rather than densify behind the caller's back.
+pub fn fit_sparse(
+    p: usize,
+    points: &CsrMatrix,
+    cfg: &ApproxConfig,
+) -> Result<FitResult, VivaldiError> {
+    let backend = crate::backend::NativeBackend::new();
+    fit_sparse_with_backend(p, points, cfg, &backend)
+}
+
+/// [`fit_sparse`] with an explicit compute backend.
+pub fn fit_sparse_with_backend(
+    p: usize,
+    points: &CsrMatrix,
+    cfg: &ApproxConfig,
+    backend: &dyn ComputeBackend,
+) -> Result<FitResult, VivaldiError> {
+    if cfg.seeding == LandmarkSeeding::KmeansPP {
+        return Err(VivaldiError::InvalidConfig(
+            "k-means++ landmark seeding reads point values and would densify; \
+             the sparse lane supports uniform seeding only"
+                .into(),
+        ));
+    }
+    fit_points_with_backend(p, PointsRef::Sparse(points), cfg, backend)
+}
+
+/// The storage-generic fit driver both entries share: validation, the
+/// landmark draw, and the per-rank dispatch all run on [`PointsRef`].
+fn fit_points_with_backend(
+    p: usize,
+    points: PointsRef<'_>,
+    cfg: &ApproxConfig,
+    backend: &dyn ComputeBackend,
+) -> Result<FitResult, VivaldiError> {
     let n = points.rows();
     if cfg.k == 0 || n == 0 {
         return Err(VivaldiError::InvalidConfig("k and n must be positive".into()));
@@ -257,7 +307,17 @@ pub fn fit_with_backend(
     // (m <= n already guarantees every rank block covers its stratified
     // landmark quota: part::len is monotone in its first argument.)
 
-    let lidx = landmark_indices(points, cfg, p);
+    let lidx = match points {
+        PointsRef::Dense(d) => landmark_indices(d, cfg, p),
+        PointsRef::Sparse(_) => {
+            // The sparse entry rejected value-reading seedings up
+            // front; the value-free uniform draw picks the exact same
+            // indices the dense path would, which is what makes the
+            // lanes bit-comparable.
+            debug_assert_eq!(cfg.seeding, LandmarkSeeding::Uniform);
+            landmarks::uniform_landmark_indices(n, cfg.m, p, cfg.landmark_seed)
+        }
+    };
     let (rank_results, comm_stats) = World::run(p, |comm| match cfg.layout {
         LandmarkLayout::OneD => run_rank_1d(comm, points, &lidx, cfg, backend),
         LandmarkLayout::OneFiveD => run_rank_15d(comm, points, &lidx, cfg, backend),
@@ -266,16 +326,23 @@ pub fn fit_with_backend(
 }
 
 /// The landmark rows this rank owns under the 1D point layout — the
-/// contribution both Gram pipelines feed to the L allgather.
-fn owned_landmark_rows(points: &DenseMatrix, lidx: &[usize], p: usize, rank: usize) -> DenseMatrix {
+/// contribution both Gram pipelines feed to the L allgather. Always
+/// densified: landmarks are m ≪ n rows, so the m×d dense gather is the
+/// one intentionally d-scale term of the sparse lane.
+fn owned_landmark_rows(
+    points: PointsRef<'_>,
+    lidx: &[usize],
+    p: usize,
+    rank: usize,
+) -> DenseMatrix {
     let (lo, hi) = part::bounds(points.rows(), p, rank);
     let own: Vec<usize> = lidx.iter().copied().filter(|&t| t >= lo && t < hi).collect();
-    landmarks::landmark_rows(points, &own)
+    points.gather_rows(&own)
 }
 
 fn run_rank_1d(
     comm: &Comm,
-    points: &DenseMatrix,
+    points: PointsRef<'_>,
     lidx: &[usize],
     cfg: &ApproxConfig,
     backend: &dyn ComputeBackend,
@@ -291,9 +358,18 @@ fn run_rank_1d(
     let own_rows = owned_landmark_rows(points, lidx, p, comm.rank());
     let mut sw = Stopwatch::new();
 
-    // Rectangular Gram pipeline: C block row + replicated W.
+    // Rectangular Gram pipeline: C block row + replicated W. The
+    // point side keeps its storage (CSR blocks never densify).
     let (c_block, w) = sw.time("gemm", || {
-        gemm_1d_landmark_gram(comm, &world, &local_pts, &own_rows, &cfg.kernel, backend, &tracker)
+        gemm_1d_landmark_gram_points(
+            comm,
+            &world,
+            local_pts.as_ref(),
+            &own_rows,
+            &cfg.kernel,
+            backend,
+            &tracker,
+        )
     })?;
     let solver = SpdSolver::factor(&w);
 
@@ -488,7 +564,7 @@ pub(crate) fn solve_alpha_weighted(
 /// separately from the Gram build and the iteration loop.
 fn run_rank_15d(
     comm: &Comm,
-    points: &DenseMatrix,
+    points: PointsRef<'_>,
     lidx: &[usize],
     cfg: &ApproxConfig,
     backend: &dyn ComputeBackend,
@@ -513,10 +589,18 @@ fn run_rank_15d(
     let own_rows = owned_landmark_rows(points, lidx, p, comm.rank());
     let mut sw = Stopwatch::new();
 
-    // C tile + (diagonal-only) W state in the configured layout.
+    // C tile + (diagonal-only) W state in the configured layout. The
+    // point side keeps its storage (CSR blocks never densify).
     let (c_tile, w_state) = sw.time("gemm", || {
-        gemm_15d_landmark_gram(
-            comm, &grid, &layout, &point_block, &own_rows, &cfg.kernel, backend, &tracker,
+        gemm_15d_landmark_gram_points(
+            comm,
+            &grid,
+            &layout,
+            point_block.as_ref(),
+            &own_rows,
+            &cfg.kernel,
+            backend,
+            &tracker,
             cfg.w_fact,
         )
     })?;
@@ -739,6 +823,53 @@ mod tests {
             assert!(diffs <= 1, "p={p}: {diffs}/144 points disagree across layouts");
             let score = crate::quality::nmi(&a.assignments, &b.assignments, 4);
             assert!(score >= 0.99, "p={p} nmi={score}");
+        }
+    }
+
+    #[test]
+    fn sparse_fit_is_bit_identical_to_dense_fit() {
+        // Same landmarks (value-free uniform draw), same gram values
+        // (lane-replay dot), same reduced-rank loop: the sparse lane
+        // must reproduce the dense fit exactly — assignments AND the
+        // objective curve — on densifiable data, both layouts.
+        let ds = synth::gaussian_blobs(144, 5, 3, 4.5, 31);
+        let csr = crate::sparse::CsrMatrix::from_dense(&ds.points);
+        for layout in [LandmarkLayout::OneD, LandmarkLayout::OneFiveD] {
+            for p in [1usize, 4] {
+                let cfg = ApproxConfig {
+                    k: 3,
+                    m: 36,
+                    layout,
+                    max_iters: 40,
+                    ..Default::default()
+                };
+                let dense = fit(p, &ds.points, &cfg).unwrap();
+                let sparse = fit_sparse(p, &csr, &cfg).unwrap();
+                assert_eq!(
+                    dense.assignments, sparse.assignments,
+                    "{} p={p}: assignments must match bitwise",
+                    layout.name()
+                );
+                assert_eq!(dense.objective_curve, sparse.objective_curve, "{}", layout.name());
+                assert_eq!(dense.iterations, sparse.iterations);
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_fit_rejects_value_reading_seeding() {
+        let ds = synth::gaussian_blobs(40, 3, 2, 3.0, 5);
+        let csr = crate::sparse::CsrMatrix::from_dense(&ds.points);
+        let cfg = ApproxConfig {
+            k: 2,
+            m: 8,
+            seeding: LandmarkSeeding::KmeansPP,
+            ..Default::default()
+        };
+        let err = fit_sparse(1, &csr, &cfg).err().expect("k-means++ must be rejected");
+        match err {
+            VivaldiError::InvalidConfig(msg) => assert!(msg.contains("uniform"), "{msg}"),
+            other => panic!("expected InvalidConfig, got {other:?}"),
         }
     }
 

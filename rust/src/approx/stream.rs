@@ -91,8 +91,9 @@ use crate::backend::ComputeBackend;
 use crate::comm::{Comm, CommStats, Grid2D, Group, World};
 use crate::data::landmarks::{self, LandmarkReservoir};
 use crate::data::stream::PointSource;
+use crate::data::{PointBlock, PointsRef};
 use crate::dense::DenseMatrix;
-use crate::gemm::{block_gather_landmark_rows, gemm_15d_landmark_gram, landmark_block_counts};
+use crate::gemm::{block_gather_landmark_rows, gemm_15d_landmark_gram_points, landmark_block_counts};
 use crate::kkmeans::{loop_common, RankOutput};
 use crate::layout::{harness, BlockCyclic, Partition, WFactorization};
 use crate::model::MemTracker;
@@ -150,6 +151,16 @@ pub struct StreamConfig {
     /// fixed-iteration schedule is reproduced exactly, bit for bit
     /// (pinned by `rust/tests/stream.rs`).
     pub tol: f64,
+    /// Sparse ingest: pull each batch as a CSR block
+    /// ([`PointSource::next_batch_csr`]) and keep it sparse through the
+    /// whole per-batch pipeline — peak memory on the point side is
+    /// ∝ batch·nnz, never batch·d, so million-feature libSVM streams
+    /// fit where the dense ingest cannot even materialize one batch.
+    /// On densifiable data the results are bit-identical to the dense
+    /// stream. Excludes the landmark reservoir (it stores dense
+    /// points) and k-means++ landmark seeding (it reads point values);
+    /// both are rejected as `InvalidConfig`.
+    pub sparse: bool,
 }
 
 impl Default for StreamConfig {
@@ -163,6 +174,7 @@ impl Default for StreamConfig {
             inner_iters: Vec::new(),
             window: 0,
             tol: 0.0,
+            sparse: false,
         }
     }
 }
@@ -464,11 +476,13 @@ impl StreamModel {
 
     /// Classify arbitrary points under the carried model (driver-side:
     /// translates history across a landmark refresh and labels a final
-    /// tail batch too small to shard). Returns the cross-kernel C, the
-    /// assignments, and the per-point min distances.
+    /// tail batch too small to shard). Storage-generic: a sparse tail
+    /// streams stored entries straight through
+    /// [`ComputeBackend::gram_tile_points`]. Returns the cross-kernel
+    /// C, the assignments, and the per-point min distances.
     fn classify(
         &self,
-        points: &DenseMatrix,
+        points: PointsRef<'_>,
         cfg: &StreamConfig,
         backend: &dyn ComputeBackend,
     ) -> (DenseMatrix, Vec<u32>, Vec<f32>) {
@@ -480,7 +494,7 @@ impl StreamModel {
         } else {
             (Vec::new(), Vec::new())
         };
-        let c = backend.gram_tile(points, &self.landmarks, &cfg.base.kernel, &pn, &ln);
+        let c = backend.gram_tile_points(points, &self.landmarks, &cfg.base.kernel, &pn, &ln);
         let alpha_t = alpha_transpose(&alpha, m, k);
         let mut e = DenseMatrix::zeros(points.rows(), k);
         backend.matmul_nn_acc(&c, &alpha_t, &mut e);
@@ -553,6 +567,20 @@ pub fn fit_stream_with_backend(
                 .into(),
         ));
     }
+    if cfg.sparse && cfg.reservoir > 0 {
+        return Err(VivaldiError::InvalidConfig(
+            "--sparse and the landmark reservoir are mutually exclusive: the reservoir \
+             stores dense points, which would reintroduce the batch·d footprint"
+                .into(),
+        ));
+    }
+    if cfg.sparse && cfg.base.seeding == landmarks::LandmarkSeeding::KmeansPP {
+        return Err(VivaldiError::InvalidConfig(
+            "k-means++ landmark seeding reads point values and would densify; \
+             the sparse stream supports uniform seeding only"
+                .into(),
+        ));
+    }
     if cfg.base.layout == LandmarkLayout::OneFiveD {
         // Same up-front shape validation as the batch fit; the point
         // dimension is per batch, checked again when each batch lands.
@@ -570,17 +598,32 @@ pub fn fit_stream_with_backend(
     let mut driven_batches = 0usize;
 
     loop {
-        let batch = match source.next_batch(cfg.batch) {
-            Ok(Some(b)) => b,
-            Ok(None) => break,
-            // A broken source is a failed fit, never a silent truncation.
-            Err(e) => {
-                return Err(VivaldiError::InvalidConfig(format!("point source failed: {e}")))
+        // Sparse ingest pulls CSR blocks and never densifies; the
+        // dense path is byte-for-byte what it always was.
+        let batch: PointBlock = if cfg.sparse {
+            match source.next_batch_csr(cfg.batch) {
+                Ok(Some(c)) => PointBlock::Sparse(c),
+                Ok(None) => break,
+                Err(e) => {
+                    return Err(VivaldiError::InvalidConfig(format!("point source failed: {e}")))
+                }
+            }
+        } else {
+            match source.next_batch(cfg.batch) {
+                Ok(Some(b)) => PointBlock::Dense(b),
+                Ok(None) => break,
+                // A broken source is a failed fit, never a silent truncation.
+                Err(e) => {
+                    return Err(VivaldiError::InvalidConfig(format!("point source failed: {e}")))
+                }
             }
         };
         let bn = batch.rows();
         if let Some(res) = reservoir.as_mut() {
-            res.observe(&batch);
+            let PointBlock::Dense(b) = &batch else {
+                unreachable!("sparse mode rejects the reservoir up front")
+            };
+            res.observe(b);
         }
         if bn < p {
             // A tail too small to shard across the ranks. With a model
@@ -592,7 +635,7 @@ pub fn fit_stream_with_backend(
                     "first batch of {bn} points is smaller than the rank count {p}"
                 )));
             };
-            let (c_tail, assign, minvals) = mdl.classify(&batch, cfg, backend);
+            let (c_tail, assign, minvals) = mdl.classify(batch.as_ref(), cfg, backend);
             let sums = backend.cluster_row_sums(&c_tail, &assign, k, m);
             let mut sizes = vec![0u64; k];
             for &a in &assign {
@@ -610,7 +653,7 @@ pub fn fit_stream_with_backend(
             continue;
         }
         if model.is_none() {
-            model = Some(init_model(&batch, cfg, p, reservoir.as_ref(), backend)?);
+            model = Some(init_model(batch.as_ref(), cfg, p, reservoir.as_ref(), backend)?);
         } else if cfg.refresh_every > 0 && batch_index % cfg.refresh_every == 0 {
             refresh_model(
                 model.as_mut().expect("model exists past the first batch"),
@@ -627,12 +670,26 @@ pub fn fit_stream_with_backend(
         let init = !mdl.initialized;
         let max_iters = cfg.inner_cap(driven_batches);
         let (rank_results, comm_stats) = World::run(p, |comm| match cfg.base.layout {
-            LandmarkLayout::OneD => {
-                run_batch_1d(comm, &batch, mdl, decayed.as_ref(), cfg, backend, init, max_iters)
-            }
-            LandmarkLayout::OneFiveD => {
-                run_batch_15d(comm, &batch, mdl, decayed.as_ref(), cfg, backend, init, max_iters)
-            }
+            LandmarkLayout::OneD => run_batch_1d(
+                comm,
+                batch.as_ref(),
+                mdl,
+                decayed.as_ref(),
+                cfg,
+                backend,
+                init,
+                max_iters,
+            ),
+            LandmarkLayout::OneFiveD => run_batch_15d(
+                comm,
+                batch.as_ref(),
+                mdl,
+                decayed.as_ref(),
+                cfg,
+                backend,
+                init,
+                max_iters,
+            ),
         });
 
         // Split the per-rank payloads, then reuse the batch assembly
@@ -722,7 +779,7 @@ pub fn fit_stream_with_backend(
 /// reservoir) and build the model around it — including the single W
 /// factorization every later batch reuses.
 fn init_model(
-    first_batch: &DenseMatrix,
+    first_batch: PointsRef<'_>,
     cfg: &StreamConfig,
     p: usize,
     reservoir: Option<&LandmarkReservoir>,
@@ -748,15 +805,26 @@ fn init_model(
             }
             // The batch path's own sampler on the first batch: a
             // one-batch stream therefore picks the identical landmark
-            // set as `approx::fit` on the same data.
-            let lidx = landmarks::sample_landmarks(
-                first_batch,
-                m,
-                p,
-                cfg.base.seeding,
-                cfg.base.landmark_seed,
-            );
-            landmarks::landmark_rows(first_batch, &lidx)
+            // set as `approx::fit` on the same data. A sparse first
+            // batch uses the value-free uniform draw (the sparse
+            // validations rejected value-reading seedings), which picks
+            // the exact same indices the dense sampler would.
+            let lidx = match first_batch {
+                PointsRef::Dense(d) => landmarks::sample_landmarks(
+                    d,
+                    m,
+                    p,
+                    cfg.base.seeding,
+                    cfg.base.landmark_seed,
+                ),
+                PointsRef::Sparse(_) => landmarks::uniform_landmark_indices(
+                    first_batch.rows(),
+                    m,
+                    p,
+                    cfg.base.landmark_seed,
+                ),
+            };
+            first_batch.gather_rows(&lidx)
         }
     };
     Ok(StreamModel::from_landmarks(landmarks, cfg, backend))
@@ -782,7 +850,7 @@ fn refresh_model(
     let snap = reservoir.snapshot();
     // C from classify is against the *old* landmarks; only the labels
     // carry over — the new-basis sums are rebuilt below.
-    let (_, old_assign, _) = model.classify(&snap, cfg, backend);
+    let (_, old_assign, _) = model.classify(PointsRef::Dense(&snap), cfg, backend);
     let seed = cfg.base.landmark_seed.wrapping_add(refresh_ordinal as u64 + 1);
     let new_landmarks = reservoir.refresh_kmeanspp(m, seed);
     let had_history = model.has_history;
@@ -859,7 +927,7 @@ fn replicate_landmarks(
 #[allow(clippy::too_many_arguments)]
 fn run_batch_1d(
     comm: &Comm,
-    batch: &DenseMatrix,
+    batch: PointsRef<'_>,
     model: &StreamModel,
     hist: Option<&History>,
     cfg: &StreamConfig,
@@ -911,12 +979,18 @@ fn run_batch_1d(
         &model.landmarks
     };
     let (row_norms, l_norms) = if cfg.base.kernel.needs_norms() {
-        (local_pts.row_sq_norms(), landmarks.row_sq_norms())
+        (local_pts.as_ref().row_sq_norms(), landmarks.row_sq_norms())
     } else {
         (Vec::new(), Vec::new())
     };
     let c_block = sw.time("gemm", || {
-        backend.gram_tile(&local_pts, landmarks, &cfg.base.kernel, &row_norms, &l_norms)
+        backend.gram_tile_points(
+            local_pts.as_ref(),
+            landmarks,
+            &cfg.base.kernel,
+            &row_norms,
+            &l_norms,
+        )
     });
 
     comm.set_phase("update");
@@ -981,7 +1055,7 @@ fn run_batch_1d(
 #[allow(clippy::too_many_arguments)]
 fn run_batch_15d(
     comm: &Comm,
-    batch: &DenseMatrix,
+    batch: PointsRef<'_>,
     model: &StreamModel,
     hist: Option<&History>,
     cfg: &StreamConfig,
@@ -1029,9 +1103,16 @@ fn run_batch_15d(
         if init && wfact == WFactorization::BlockCyclic {
             let own_rows = owned_landmark_rows();
             let (c_tile, w_state) = sw.time("gemm", || {
-                gemm_15d_landmark_gram(
-                    comm, &grid, &layout, &point_block, &own_rows, &cfg.base.kernel, backend,
-                    &tracker, wfact,
+                gemm_15d_landmark_gram_points(
+                    comm,
+                    &grid,
+                    &layout,
+                    point_block.as_ref(),
+                    &own_rows,
+                    &cfg.base.kernel,
+                    backend,
+                    &tracker,
+                    wfact,
                 )
             })?;
             let solver = sw.time("wfactor", || {
@@ -1093,12 +1174,18 @@ fn run_batch_15d(
                 &model.l_blocks[i]
             };
             let (row_norms, lb_norms) = if cfg.base.kernel.needs_norms() {
-                (point_block.row_sq_norms(), l_block.row_sq_norms())
+                (point_block.as_ref().row_sq_norms(), l_block.row_sq_norms())
             } else {
                 (Vec::new(), Vec::new())
             };
             let c_tile = sw.time("gemm", || {
-                backend.gram_tile(&point_block, l_block, &cfg.base.kernel, &row_norms, &lb_norms)
+                backend.gram_tile_points(
+                    point_block.as_ref(),
+                    l_block,
+                    &cfg.base.kernel,
+                    &row_norms,
+                    &lb_norms,
+                )
             });
             (c_tile, None)
         };
@@ -1408,6 +1495,85 @@ mod tests {
         let mut src3 = MatrixSource::new(&ds.points);
         let full = fit_stream(4, &mut src3, &plain).unwrap();
         assert!(full.iterations > out.iterations, "the cap must actually bind");
+    }
+
+    #[test]
+    fn sparse_stream_is_bit_identical_to_dense_stream() {
+        // The sparse ingest pulls CSR chunks (from_dense under
+        // MatrixSource's default) and runs the lane-replay gram: every
+        // batch, both layouts, the whole run must match the dense
+        // stream exactly.
+        let ds = synth::gaussian_blobs(240, 4, 3, 5.0, 31);
+        for layout in [LandmarkLayout::OneD, LandmarkLayout::OneFiveD] {
+            for p in [1usize, 4] {
+                let cfg = StreamConfig {
+                    base: ApproxConfig {
+                        k: 3,
+                        m: 24,
+                        layout,
+                        max_iters: 30,
+                        ..Default::default()
+                    },
+                    batch: 60,
+                    ..Default::default()
+                };
+                let mut dsrc = MatrixSource::new(&ds.points);
+                let dense = fit_stream(p, &mut dsrc, &cfg).unwrap();
+                let scfg = StreamConfig { sparse: true, ..cfg };
+                let mut ssrc = MatrixSource::new(&ds.points);
+                let sparse = fit_stream(p, &mut ssrc, &scfg).unwrap();
+                assert_eq!(
+                    dense.assignments, sparse.assignments,
+                    "{} p={p}: sparse stream must match dense bitwise",
+                    layout.name()
+                );
+                assert_eq!(dense.objective_curve, sparse.objective_curve, "{}", layout.name());
+                assert_eq!(dense.batch_iterations, sparse.batch_iterations);
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_tail_is_classified_bit_identically() {
+        // 130 points, batch 64, 8 ranks: the 2-point tail cannot shard,
+        // so it goes through the driver-side classify — which must also
+        // be storage-generic and exact.
+        let ds = synth::gaussian_blobs(130, 3, 2, 4.5, 43);
+        let cfg = StreamConfig {
+            base: ApproxConfig { k: 2, m: 16, max_iters: 20, ..Default::default() },
+            batch: 64,
+            ..Default::default()
+        };
+        let mut dsrc = MatrixSource::new(&ds.points);
+        let dense = fit_stream(8, &mut dsrc, &cfg).unwrap();
+        let mut ssrc = MatrixSource::new(&ds.points);
+        let sparse =
+            fit_stream(8, &mut ssrc, &StreamConfig { sparse: true, ..cfg }).unwrap();
+        assert_eq!(dense.assignments, sparse.assignments);
+        assert_eq!(dense.batches, sparse.batches);
+        assert_eq!(*sparse.batch_iterations.last().unwrap(), 0, "tail runs no inner loop");
+    }
+
+    #[test]
+    fn sparse_stream_rejects_reservoir_and_kmeanspp() {
+        let ds = synth::gaussian_blobs(64, 3, 2, 3.0, 5);
+        let run = |cfg: &StreamConfig| {
+            let mut src = MatrixSource::new(&ds.points);
+            fit_stream(1, &mut src, cfg)
+        };
+        // The reservoir stores dense points.
+        let cfg = StreamConfig { sparse: true, reservoir: 32, ..rings_cfg(8, 32) };
+        assert!(matches!(run(&cfg), Err(VivaldiError::InvalidConfig(_))));
+        // k-means++ seeding reads point values.
+        let cfg = StreamConfig {
+            sparse: true,
+            base: ApproxConfig {
+                seeding: landmarks::LandmarkSeeding::KmeansPP,
+                ..rings_cfg(8, 32).base
+            },
+            ..rings_cfg(8, 32)
+        };
+        assert!(matches!(run(&cfg), Err(VivaldiError::InvalidConfig(_))));
     }
 
     #[test]

@@ -21,8 +21,10 @@ pub mod native;
 
 pub use native::NativeBackend;
 
+use crate::data::PointsRef;
 use crate::dense::DenseMatrix;
 use crate::kernelfn::KernelFn;
+use crate::sparse::CsrMatrix;
 
 /// Which local-compute flavor to instantiate — the CLI `--backend`
 /// knob. `Scalar` pins exactly one worker thread (today's sequential op
@@ -78,6 +80,40 @@ pub trait ComputeBackend: Send + Sync {
         row_norms: &[f32],
         col_norms: &[f32],
     ) -> DenseMatrix;
+
+    /// κ(A_sparse·Bᵀ) from CSR rows: the nnz-bounded cross-kernel gram
+    /// (the Popcorn lane's hot kernel). The default densifies A first —
+    /// correct for any backend, including ones with no sparse kernels —
+    /// while [`native::NativeBackend`] overrides it with an
+    /// O(nnz·n_B)-work panel that replays the dense fold order exactly,
+    /// so both are **bit-identical** to `gram_tile` on the densified
+    /// rows.
+    fn gram_tile_csr(
+        &self,
+        a: &CsrMatrix,
+        b: &DenseMatrix,
+        kernel: &KernelFn,
+        row_norms: &[f32],
+        col_norms: &[f32],
+    ) -> DenseMatrix {
+        self.gram_tile(&a.to_dense(), b, kernel, row_norms, col_norms)
+    }
+
+    /// Storage-dispatching gram: the landmark pipelines call this so the
+    /// dense and sparse flows share every other line of the algorithm.
+    fn gram_tile_points(
+        &self,
+        a: PointsRef<'_>,
+        b: &DenseMatrix,
+        kernel: &KernelFn,
+        row_norms: &[f32],
+        col_norms: &[f32],
+    ) -> DenseMatrix {
+        match a {
+            PointsRef::Dense(x) => self.gram_tile(x, b, kernel, row_norms, col_norms),
+            PointsRef::Sparse(x) => self.gram_tile_csr(x, b, kernel, row_norms, col_norms),
+        }
+    }
 
     /// C += A·B (SUMMA inner step; plain Gram accumulation, no kernel).
     fn matmul_nn_acc(&self, a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix);

@@ -15,6 +15,7 @@ use super::ComputeBackend;
 use crate::dense::{matrix::DenseMatrix, ops};
 use crate::kernelfn::KernelFn;
 use crate::sparse;
+use crate::sparse::CsrMatrix;
 use crate::util::par::{par_ranges_with, SendPtr};
 
 /// Row-block floor for the gram/expand GEMMs (matches `dense::ops`).
@@ -61,6 +62,44 @@ impl NativeBackend {
     }
 }
 
+/// One cache block of a sparse·dense dot, replaying `ops::dot`'s
+/// 8-lane fold on the stored entries only.
+///
+/// `ops::dot` over a `len`-long block routes position `off` to lane
+/// `off & 7` while `off < (len/8)*8` and to a sequential tail after,
+/// then combines `((s0+s1)+(s2+s3)) + ((s4+s5)+(s6+s7)) + tail`. Every
+/// partial sum starts at +0.0 and an f32 partial sum seeded +0.0 can
+/// never become −0.0 (x + −x rounds to +0.0; −0.0 needs −0.0 + −0.0),
+/// so the unstored positions' ±0.0 products are bitwise no-ops in the
+/// dense fold. Feeding only the stored entries — ascending, so each
+/// lane sees its products in the dense order — therefore reproduces the
+/// dense block dot **bit for bit** in O(nnz_block) work.
+#[inline]
+fn sparse_block_dot(idx: &[u32], vals: &[f32], y: &[f32], kb: usize, chunks8: usize) -> f32 {
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let (mut s4, mut s5, mut s6, mut s7) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let mut tail = 0.0f32;
+    for (&i, &v) in idx.iter().zip(vals) {
+        let off = i as usize - kb;
+        let p = v * y[off];
+        if off < chunks8 {
+            match off & 7 {
+                0 => s0 += p,
+                1 => s1 += p,
+                2 => s2 += p,
+                3 => s3 += p,
+                4 => s4 += p,
+                5 => s5 += p,
+                6 => s6 += p,
+                _ => s7 += p,
+            }
+        } else {
+            tail += p;
+        }
+    }
+    ((s0 + s1) + (s2 + s3)) + ((s4 + s5) + (s6 + s7)) + tail
+}
+
 impl ComputeBackend for NativeBackend {
     /// Fused cache-blocked gram: per worker row, the j-panel's dots are
     /// accumulated over ascending kb blocks and κ is applied the moment
@@ -99,6 +138,69 @@ impl ComputeBackend for NativeBackend {
                             for (j, cj) in crow[jb..jend].iter_mut().enumerate() {
                                 *cj += ops::dot(arow, &b.row(jb + j)[kb..kend]);
                             }
+                        }
+                        for (j, cj) in crow[jb..jend].iter_mut().enumerate() {
+                            let ny = if norms { col_norms[jb + j] } else { 0.0 };
+                            *cj = kernel.apply(*cj, nx, ny);
+                        }
+                    }
+                }
+            });
+        }
+        c
+    }
+
+    /// Sparse cross-kernel gram C = κ(X_sparse · Lᵀ): same row
+    /// ownership, same jb/kb blocking, and — via [`sparse_block_dot`] —
+    /// the same per-element f32 fold as the dense `gram_tile`, but the
+    /// inner work is O(nnz_row · n) instead of O(d · n). All-zero kb
+    /// blocks are skipped outright: the dense path adds their exactly
+    /// +0.0 block dot to a partial that is never −0.0, a bitwise no-op.
+    fn gram_tile_csr(
+        &self,
+        a: &CsrMatrix,
+        b: &DenseMatrix,
+        kernel: &KernelFn,
+        row_norms: &[f32],
+        col_norms: &[f32],
+    ) -> DenseMatrix {
+        assert_eq!(a.cols(), b.cols(), "gram_tile_csr: inner dims differ");
+        let (m, n, d) = (a.rows(), b.rows(), a.cols());
+        let norms = kernel.needs_norms();
+        if norms {
+            assert_eq!(row_norms.len(), m);
+            assert_eq!(col_norms.len(), n);
+        }
+        let mut c = DenseMatrix::zeros(m, n);
+        {
+            let cptr = SendPtr(c.data_mut().as_mut_ptr());
+            par_ranges_with(self.threads, m, PAR_MIN_ROWS, |lo, hi| {
+                let cptr = &cptr;
+                for i in lo..hi {
+                    // SAFETY: rows [lo,hi) are exclusive to this worker.
+                    let crow = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i * n), n) };
+                    let (aidx, avals) = a.row(i);
+                    let nx = if norms { row_norms[i] } else { 0.0 };
+                    for jb in (0..n).step_by(BLOCK_J) {
+                        let jend = (jb + BLOCK_J).min(n);
+                        // Entry cursor over the (ascending) CSR row:
+                        // [e0, e1) are the entries inside each kb block.
+                        let mut e0 = 0usize;
+                        for kb in (0..d).step_by(BLOCK_K) {
+                            let kend = (kb + BLOCK_K).min(d);
+                            let mut e1 = e0;
+                            while e1 < aidx.len() && (aidx[e1] as usize) < kend {
+                                e1 += 1;
+                            }
+                            if e1 > e0 {
+                                let chunks8 = ((kend - kb) / 8) * 8;
+                                let (bidx, bvals) = (&aidx[e0..e1], &avals[e0..e1]);
+                                for (j, cj) in crow[jb..jend].iter_mut().enumerate() {
+                                    let brow = &b.row(jb + j)[kb..kend];
+                                    *cj += sparse_block_dot(bidx, bvals, brow, kb, chunks8);
+                                }
+                            }
+                            e0 = e1;
                         }
                         for (j, cj) in crow[jb..jend].iter_mut().enumerate() {
                             let ny = if norms { col_norms[jb + j] } else { 0.0 };
@@ -300,6 +402,64 @@ mod tests {
                 assert_eq!(fused.data(), two_pass.data(), "{} @ {threads} threads", kf.tag());
             }
         }
+    }
+
+    #[test]
+    fn sparse_gram_matches_dense_bitwise() {
+        // The lane-replay CSR gram vs the dense fused gram: exact ==,
+        // every kernel family, several densities (a fully-zero row
+        // included), thread counts 1..8, and d values exercising both
+        // the kb blocking (d > BLOCK_K) and the 8-lane tail (d % 8 ≠ 0).
+        let mut rng = Rng::new(29);
+        for (rows, d, keep) in [(19usize, 300usize, 3usize), (33, 523, 7), (9, 40, 2)] {
+            let a = DenseMatrix::from_fn(rows, d, |i, j| {
+                let v = rng.next_f32() - 0.5;
+                if i != 5 && (i + j) % keep == 0 {
+                    v
+                } else {
+                    0.0
+                }
+            });
+            let b = DenseMatrix::random(21, d, &mut rng);
+            let sa = CsrMatrix::from_dense(&a);
+            assert!(sa.nnz() < rows * d);
+            let (an, bn) = (sa.row_sq_norms(), b.row_sq_norms());
+            assert_eq!(an, a.row_sq_norms(), "sparse norms must match dense bitwise");
+            for kf in [KernelFn::linear(), KernelFn::paper_polynomial(), KernelFn::gaussian(0.3)] {
+                let (rn, cn): (&[f32], &[f32]) =
+                    if kf.needs_norms() { (&an, &bn) } else { (&[], &[]) };
+                let dense = NativeBackend::scalar().gram_tile(&a, &b, &kf, rn, cn);
+                for threads in [1usize, 2, 4, 8] {
+                    let be = NativeBackend::threaded(threads);
+                    let sp = be.gram_tile_csr(&sa, &b, &kf, rn, cn);
+                    assert_eq!(
+                        sp.data(),
+                        dense.data(),
+                        "{} @ {threads} threads, shape ({rows},{d})",
+                        kf.tag()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_gram_keeps_explicit_zero_entries_bit_identical() {
+        // A stored explicit 0.0 entry multiplies to ±0.0 and must fold
+        // as a no-op — same bits as the dense path that also sees it.
+        let mut rng = Rng::new(31);
+        let b = DenseMatrix::random(5, 12, &mut rng);
+        let sa = CsrMatrix::from_rows(
+            12,
+            &[vec![(0, 1.5), (3, 0.0), (9, -2.0)], vec![(11, 4.0)], vec![]],
+        );
+        let a = sa.to_dense();
+        let kf = KernelFn::paper_polynomial();
+        let be = NativeBackend::scalar();
+        assert_eq!(
+            be.gram_tile_csr(&sa, &b, &kf, &[], &[]).data(),
+            be.gram_tile(&a, &b, &kf, &[], &[]).data()
+        );
     }
 
     #[test]

@@ -129,6 +129,26 @@ pub struct Feasibility {
     /// ([`crate::model::analytic::stream_window_peak_bytes`]). The
     /// ring is summary-scale — windowing never re-buffers points.
     pub landmark_stream_window_bytes_per_rank: u64,
+    /// Total stored entries of the workload's CSR store, when known
+    /// (`None` for dense workloads — the sparse rows below then carry
+    /// zeros and are omitted from the report).
+    pub nnz: Option<u64>,
+    /// Bytes needed just to **materialize the points densely** (4·n·d)
+    /// — the read-level wall the sparse lane removes: a dense `--data`
+    /// load allocates this before any algorithm runs.
+    pub dense_read_bytes: u64,
+    pub dense_read_fits: bool,
+    /// Bytes of the CSR store holding the same points
+    /// ([`crate::model::analytic::csr_bytes`]): linear in nnz,
+    /// independent of d. Zero when nnz is unknown.
+    pub sparse_read_bytes: u64,
+    pub sparse_read_fits: bool,
+    /// Per-rank peak of one **sparse streaming batch**
+    /// ([`crate::model::analytic::sparse_stream_peak_bytes`], batch nnz
+    /// prorated from the workload's uniform row density): the CSR batch
+    /// + dense L + C block + W. Zero when nnz is unknown.
+    pub sparse_stream_bytes_per_rank: u64,
+    pub sparse_stream_fits: bool,
     pub budget: u64,
     pub exact_fits: bool,
     pub landmark_fits: bool,
@@ -152,6 +172,13 @@ impl Feasibility {
     /// path cannot hold.
     pub fn recommends_landmark(&self) -> bool {
         !self.exact_fits && self.landmark_fits
+    }
+
+    /// True exactly when the sparse lane opens a workload the dense
+    /// read cannot even materialize: `--data` would OOM loading the
+    /// points densely, while the CSR store fits.
+    pub fn recommends_sparse(&self) -> bool {
+        self.nnz.is_some() && !self.dense_read_fits && self.sparse_read_fits
     }
 }
 
@@ -234,6 +261,10 @@ pub fn landmark_stream_window_feasibility(
     // `window` summary slots (driver-held, summary-scale).
     let landmark_stream_window =
         crate::model::analytic::stream_window_peak_bytes(m, d, batch, p, k, window);
+    // Read-level wall: what a dense `--data` load allocates before any
+    // algorithm runs. The sparse rows stay zeroed here — only
+    // `landmark_sparse_feasibility` knows an nnz to fill them with.
+    let dense_read = 4 * n as u64 * d as u64;
     Feasibility {
         n,
         d,
@@ -248,6 +279,13 @@ pub fn landmark_stream_window_feasibility(
         landmark_stream_15d_bytes_per_rank: landmark_stream_15d,
         stream_window: window,
         landmark_stream_window_bytes_per_rank: landmark_stream_window,
+        nnz: None,
+        dense_read_bytes: dense_read,
+        dense_read_fits: dense_read <= mem.budget,
+        sparse_read_bytes: 0,
+        sparse_read_fits: false,
+        sparse_stream_bytes_per_rank: 0,
+        sparse_stream_fits: false,
         budget: mem.budget,
         exact_fits: exact <= mem.budget,
         landmark_fits: landmark <= mem.budget,
@@ -262,6 +300,35 @@ pub fn landmark_stream_window_feasibility(
         landmark_stream_window_fits: crate::util::is_perfect_square(p)
             && landmark_stream_window <= mem.budget,
     }
+}
+
+/// [`landmark_stream_feasibility`] for a workload whose CSR store is
+/// known: delegates to the dense chain (every existing row and verdict
+/// is unchanged), then fills the nnz rows — the dense read wall
+/// (4·n·d), the CSR store ([`crate::model::analytic::csr_bytes`]), and
+/// the sparse streaming batch peak with the batch's nnz prorated from
+/// the workload's uniform row density. This is the report behind
+/// `run --algo landmark --sparse`: it shows concrete (n, d, nnz, m, p)
+/// where the dense read OOMs while the sparse lane completes.
+pub fn landmark_sparse_feasibility(
+    n: usize,
+    d: usize,
+    nnz: u64,
+    m: usize,
+    p: usize,
+    batch: usize,
+    mem: &MemModel,
+) -> Feasibility {
+    use crate::model::analytic::{csr_bytes, sparse_stream_peak_bytes};
+    let mut f = landmark_stream_feasibility(n, d, m, p, batch, mem);
+    f.nnz = Some(nnz);
+    f.sparse_read_bytes = csr_bytes(n, nnz);
+    f.sparse_read_fits = f.sparse_read_bytes <= mem.budget;
+    let nmax = n.max(1) as u64;
+    let batch_nnz = (nnz.saturating_mul(f.stream_batch as u64) + nmax - 1) / nmax;
+    f.sparse_stream_bytes_per_rank = sparse_stream_peak_bytes(m, d, f.stream_batch, batch_nnz);
+    f.sparse_stream_fits = f.sparse_stream_bytes_per_rank <= mem.budget;
+    f
 }
 
 /// Scaled-down experiment scale (paper values in comments).
@@ -551,6 +618,38 @@ mod tests {
         // A pathologically wide ring busts the budget on its own.
         let h = landmark_stream_window_feasibility(1 << 20, 2, 1024, 16, 2048, 16, 100_000, &mem);
         assert!(!h.landmark_stream_window_fits);
+    }
+
+    #[test]
+    fn sparse_feasibility_separates_read_paths() {
+        // 4096 rows in d = 2^20 features at 8 stored entries per row,
+        // 512 MiB budget: the dense read (16 GiB) cannot even
+        // materialize the points, the CSR store (~300 KiB) is nothing,
+        // and one sparse streaming batch (CSR batch + dense 64×2^20 L
+        // + C + W ≈ 270 MiB) completes — the lane's concrete opening.
+        let mem = MemModel { budget: 512 << 20, repl_factor: 1.0, redist_factor: 0.0 };
+        let nnz = 4096u64 * 8;
+        let f = landmark_sparse_feasibility(4096, 1 << 20, nnz, 64, 1, 4096, &mem);
+        assert!(
+            !f.dense_read_fits,
+            "dense read {} must exceed {}",
+            f.dense_read_bytes, f.budget
+        );
+        assert!(f.sparse_read_fits, "CSR store {} must fit", f.sparse_read_bytes);
+        assert!(f.sparse_stream_fits, "sparse batch {} must fit", f.sparse_stream_bytes_per_rank);
+        assert!(f.recommends_sparse());
+        assert_eq!(f.nnz, Some(nnz));
+        assert_eq!(f.dense_read_bytes, 4 * 4096 * (1 << 20));
+        assert_eq!(f.sparse_read_bytes, crate::model::analytic::csr_bytes(4096, nnz));
+        // The dense chain's rows and verdicts are untouched by the
+        // sparse wrapper.
+        let base = landmark_feasibility(4096, 1 << 20, 64, 1, &mem);
+        assert_eq!(f.landmark_bytes_per_rank, base.landmark_bytes_per_rank);
+        assert_eq!(f.landmark_fits, base.landmark_fits);
+        // Dense workloads carry no nnz and never recommend the lane.
+        assert!(base.nnz.is_none());
+        assert_eq!(base.sparse_read_bytes, 0);
+        assert!(!base.recommends_sparse());
     }
 
     #[test]

@@ -47,12 +47,28 @@ pub fn sample_landmarks(
     seed: u64,
 ) -> Vec<usize> {
     let n = points.rows();
+    match seeding {
+        LandmarkSeeding::Uniform => uniform_landmark_indices(n, m, p, seed),
+        LandmarkSeeding::KmeansPP => {
+            assert!(m >= 1 && m <= n, "need 1 <= m <= n (m={m}, n={n})");
+            assert!(p >= 1);
+            let mut idx = kmeanspp(points, m, seed);
+            idx.sort_unstable();
+            debug_assert!(idx.windows(2).all(|w| w[0] < w[1]), "duplicate landmark");
+            idx
+        }
+    }
+}
+
+/// The [`LandmarkSeeding::Uniform`] index set computed from shape alone
+/// — it never reads point values, so the sparse lane calls it on CSR
+/// data and picks **bit-identical** landmarks to a dense fit of the
+/// same (n, m, p, seed). (`KmeansPP` has no such form: D² seeding reads
+/// values, which is why the sparse entry points reject it.)
+pub fn uniform_landmark_indices(n: usize, m: usize, p: usize, seed: u64) -> Vec<usize> {
     assert!(m >= 1 && m <= n, "need 1 <= m <= n (m={m}, n={n})");
     assert!(p >= 1);
-    let mut idx = match seeding {
-        LandmarkSeeding::Uniform => stratified_uniform(n, m, p, seed),
-        LandmarkSeeding::KmeansPP => kmeanspp(points, m, seed),
-    };
+    let mut idx = stratified_uniform(n, m, p, seed);
     idx.sort_unstable();
     debug_assert!(idx.windows(2).all(|w| w[0] < w[1]), "duplicate landmark");
     idx

@@ -4,10 +4,25 @@
 //! 1-based feature indices. The paper's datasets (Table II) ship in
 //! this format; [`read_libsvm`] densifies into a [`DenseMatrix`]
 //! (optionally capped to the first `max_rows` rows / `d_cap` features,
-//! mirroring the paper's KDD feature sampling).
+//! mirroring the paper's KDD feature sampling), while
+//! [`read_libsvm_sparse`] keeps the rows in CSR form — peak memory
+//! ∝ nnz instead of ∝ n·d, the entry point of the sparse landmark lane.
+//!
+//! Parsing is **fail-loud**: a malformed token (`index:value` that does
+//! not parse, a 0 index — libSVM is 1-based — or a token with no `:`)
+//! is a per-line error surfaced through every reader's `Result` path,
+//! matching the stream layer's contract. Blank and `#`-comment lines
+//! are still skipped silently.
+//!
+//! Labels are remapped by **first appearance** of each distinct raw
+//! value to `0..k` ([`LabelMap`]): `{-1, +1}`, `{1..k}`, and float
+//! labels all land on dense ids without collisions. (The previous
+//! mapping sent every negative label to 0, colliding with a true 0
+//! label and corrupting label-based quality metrics on ±1 datasets.)
 
-use super::Dataset;
+use super::{Dataset, SparseDataset};
 use crate::dense::DenseMatrix;
+use crate::sparse::CsrMatrix;
 use std::io::{BufRead, BufReader};
 use std::path::Path;
 
@@ -20,69 +35,145 @@ pub(crate) struct ParsedLine {
     pub max_feat: usize,
 }
 
-/// Parse one libSVM line (`None` for blank / comment lines). Shared by
-/// the whole-file reader below and the chunked [`super::stream`]
-/// source, so both accept exactly the same dialect.
-pub(crate) fn parse_line(line: &str, d_cap: Option<usize>) -> Option<ParsedLine> {
+/// Parse one libSVM line (`Ok(None)` for blank / comment lines,
+/// `Err` with a description for malformed tokens). Shared by the
+/// whole-file readers below and the chunked [`super::stream`] sources,
+/// so all accept exactly the same dialect and fail the same way.
+pub(crate) fn parse_line(line: &str, d_cap: Option<usize>) -> Result<Option<ParsedLine>, String> {
     let line = line.trim();
     if line.is_empty() || line.starts_with('#') {
-        return None;
+        return Ok(None);
     }
     let mut parts = line.split_whitespace();
     let label_tok = parts.next().unwrap_or("0");
-    // Labels may be floats or negatives; map to a dense u32 later.
-    let label = label_tok.parse::<f64>().unwrap_or(0.0);
+    // Labels may be floats or negatives; [`LabelMap`] densifies later.
+    let label = label_tok
+        .parse::<f64>()
+        .map_err(|_| format!("unparseable label {label_tok:?}"))?;
     let mut features = Vec::new();
     let mut max_feat = 0usize;
     for tok in parts {
-        if let Some((i, v)) = tok.split_once(':') {
-            if let (Ok(i), Ok(v)) = (i.parse::<usize>(), v.parse::<f32>()) {
-                if i == 0 {
-                    continue; // malformed: libSVM is 1-based
-                }
-                let idx = i - 1;
-                if let Some(cap) = d_cap {
-                    if idx >= cap {
-                        continue;
-                    }
-                }
-                max_feat = max_feat.max(idx + 1);
-                features.push((idx, v));
+        let Some((i, v)) = tok.split_once(':') else {
+            return Err(format!("malformed feature token {tok:?} (expected index:value)"));
+        };
+        let i = i
+            .parse::<usize>()
+            .map_err(|_| format!("unparseable feature index in token {tok:?}"))?;
+        if i == 0 {
+            return Err(format!("feature index 0 in token {tok:?} (libSVM indices are 1-based)"));
+        }
+        let v = v
+            .parse::<f32>()
+            .map_err(|_| format!("unparseable feature value in token {tok:?}"))?;
+        let idx = i - 1;
+        if let Some(cap) = d_cap {
+            if idx >= cap {
+                continue; // intentional feature sampling, not an error
+            }
+        }
+        max_feat = max_feat.max(idx + 1);
+        features.push((idx, v));
+    }
+    Ok(Some(ParsedLine { label, features, max_feat }))
+}
+
+/// First-appearance remap of distinct raw labels to dense `0..k` ids.
+///
+/// Raw labels are compared by f64 bit pattern, so `-1`, `0`, `1`, and
+/// float labels like `2.5` each get their own id in order of first
+/// appearance — no truncation, no negative-collapse collisions.
+#[derive(Debug, Default, Clone)]
+pub struct LabelMap {
+    raw: Vec<f64>,
+}
+
+impl LabelMap {
+    pub fn new() -> LabelMap {
+        LabelMap::default()
+    }
+
+    /// Dense id of `label`, allocating the next id on first sight.
+    pub fn id(&mut self, label: f64) -> u32 {
+        match self.raw.iter().position(|r| r.to_bits() == label.to_bits()) {
+            Some(i) => i as u32,
+            None => {
+                self.raw.push(label);
+                (self.raw.len() - 1) as u32
             }
         }
     }
-    Some(ParsedLine { label, features, max_feat })
+
+    /// Number of distinct raw labels seen.
+    pub fn len(&self) -> usize {
+        self.raw.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.raw.is_empty()
+    }
+
+    /// The raw label behind dense id `id`.
+    pub fn raw(&self, id: u32) -> Option<f64> {
+        self.raw.get(id as usize).copied()
+    }
 }
 
-/// Parse a libSVM file.
+struct RawRows {
+    rows: Vec<Vec<(usize, f32)>>,
+    labels: Vec<u32>,
+    max_feat: usize,
+}
+
+/// Shared front half of both readers: parse up to `max_rows` data
+/// lines, remapping labels, surfacing the first malformed line as an
+/// `InvalidData` error with its 1-based line number.
+fn read_rows(
+    path: &Path,
+    max_rows: Option<usize>,
+    d_cap: Option<usize>,
+) -> std::io::Result<RawRows> {
+    let f = std::fs::File::open(path)?;
+    let reader = BufReader::new(f);
+    let mut out = RawRows { rows: Vec::new(), labels: Vec::new(), max_feat: 0 };
+    let mut label_map = LabelMap::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let parsed = parse_line(&line, d_cap).map_err(|msg| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("{}: line {}: {msg}", path.display(), lineno + 1),
+            )
+        })?;
+        let Some(parsed) = parsed else {
+            continue;
+        };
+        out.max_feat = out.max_feat.max(parsed.max_feat);
+        out.labels.push(label_map.id(parsed.label));
+        out.rows.push(parsed.features);
+        if let Some(m) = max_rows {
+            if out.rows.len() >= m {
+                break;
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn dataset_name(path: &Path) -> String {
+    path.file_name().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default()
+}
+
+/// Parse a libSVM file into a **dense** dataset (n × d materialized).
 pub fn read_libsvm(
     path: &Path,
     max_rows: Option<usize>,
     d_cap: Option<usize>,
 ) -> std::io::Result<Dataset> {
-    let f = std::fs::File::open(path)?;
-    let reader = BufReader::new(f);
-    let mut rows: Vec<Vec<(usize, f32)>> = Vec::new();
-    let mut labels: Vec<u32> = Vec::new();
-    let mut max_feat = 0usize;
-    for line in reader.lines() {
-        let line = line?;
-        let Some(parsed) = parse_line(&line, d_cap) else {
-            continue;
-        };
-        max_feat = max_feat.max(parsed.max_feat);
-        labels.push(label_to_u32(parsed.label));
-        rows.push(parsed.features);
-        if let Some(m) = max_rows {
-            if rows.len() >= m {
-                break;
-            }
-        }
-    }
-    let n = rows.len();
-    let d = d_cap.unwrap_or(max_feat).max(1);
+    let raw = read_rows(path, max_rows, d_cap)?;
+    let n = raw.rows.len();
+    let d = d_cap.unwrap_or(raw.max_feat).max(1);
     let mut data = vec![0.0f32; n * d];
-    for (r, feats) in rows.iter().enumerate() {
+    for (r, feats) in raw.rows.iter().enumerate() {
         for &(i, v) in feats {
             if i < d {
                 data[r * d + i] = v;
@@ -91,18 +182,28 @@ pub fn read_libsvm(
     }
     Ok(Dataset {
         points: DenseMatrix::from_vec(n, d, data),
-        labels,
-        name: path.file_name().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
+        labels: raw.labels,
+        name: dataset_name(path),
     })
 }
 
-fn label_to_u32(label: f64) -> u32 {
-    // Map common label schemes {-1,1}, {0..k}, {1..k} onto u32.
-    if label < 0.0 {
-        0
-    } else {
-        label as u32
-    }
+/// Parse a libSVM file into a **CSR** dataset with no densify step:
+/// peak memory ∝ nnz, so million-feature files fit where the dense
+/// reader's n·d buffer cannot. Same dialect, caps, label remap, and
+/// duplicate-index (last wins) semantics as [`read_libsvm`] — on any
+/// file both readers agree, `sparse.points.to_dense()` included.
+pub fn read_libsvm_sparse(
+    path: &Path,
+    max_rows: Option<usize>,
+    d_cap: Option<usize>,
+) -> std::io::Result<SparseDataset> {
+    let raw = read_rows(path, max_rows, d_cap)?;
+    let d = d_cap.unwrap_or(raw.max_feat).max(1);
+    Ok(SparseDataset {
+        points: CsrMatrix::from_rows(d, &raw.rows),
+        labels: raw.labels,
+        name: dataset_name(path),
+    })
 }
 
 /// Write a dataset in libSVM format (tests / interchange).
@@ -137,6 +238,8 @@ mod tests {
         let back = read_libsvm(&path, None, Some(5)).unwrap();
         assert_eq!(back.n(), 20);
         assert_eq!(back.d(), 5);
+        // gaussian_blobs labels appear in 0,1,..,k-1 order, so the
+        // first-appearance remap is the identity here.
         assert_eq!(back.labels, ds.labels);
         assert!(back.points.max_abs_diff(&ds.points) < 1e-4);
     }
@@ -153,7 +256,10 @@ mod tests {
         assert_eq!(ds.points.get(0, 0), 0.5);
         assert_eq!(ds.points.get(0, 2), 2.0);
         assert_eq!(ds.points.get(1, 1), 1.5);
-        assert_eq!(ds.labels, vec![1, 0, 0]);
+        // Distinct raw labels {1, -1, 0} -> first-appearance ids
+        // {0, 1, 2}. (The old mapping collapsed -1 and 0 onto the same
+        // id — a collision, not a remap.)
+        assert_eq!(ds.labels, vec![0, 1, 2]);
     }
 
     #[test]
@@ -166,5 +272,67 @@ mod tests {
         assert_eq!(ds.n(), 2);
         assert_eq!(ds.d(), 4);
         assert_eq!(ds.points.get(0, 0), 1.0); // feature 10 dropped by cap
+    }
+
+    #[test]
+    fn label_map_keeps_negatives_floats_and_zero_distinct() {
+        let mut m = LabelMap::new();
+        assert_eq!(m.id(-1.0), 0);
+        assert_eq!(m.id(0.0), 1);
+        assert_eq!(m.id(2.5), 2);
+        assert_eq!(m.id(-1.0), 0, "repeat raw label reuses its id");
+        assert_eq!(m.id(2.0), 3, "2.5 and 2 must not truncate together");
+        assert_eq!(m.len(), 4);
+        assert_eq!(m.raw(2), Some(2.5));
+    }
+
+    #[test]
+    fn malformed_tokens_are_loud() {
+        for bad in ["1 0:2.0\n", "1 a:2.0\n", "1 3:x\n", "1 novalue\n", "abc 1:2\n"] {
+            let dir = std::env::temp_dir().join("vivaldi_libsvm_test");
+            std::fs::create_dir_all(&dir).unwrap();
+            let path = dir.join("bad.libsvm");
+            std::fs::write(&path, format!("0 1:1\n{bad}")).unwrap();
+            let err = read_libsvm(&path, None, None).unwrap_err();
+            assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{bad:?}");
+            assert!(err.to_string().contains("line 2"), "{bad:?}: {err}");
+            let err = read_libsvm_sparse(&path, None, None).unwrap_err();
+            assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{bad:?} (sparse)");
+        }
+    }
+
+    #[test]
+    fn sparse_reader_matches_dense_reader() {
+        let dir = std::env::temp_dir().join("vivaldi_libsvm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("both.libsvm");
+        // Duplicate index 2:9 on row 1 exercises last-wins on both paths.
+        std::fs::write(&path, "1 1:0.5 3:2.0\n-1 2:1.5 2:9\n# c\n0 5:4\n").unwrap();
+        for d_cap in [None, Some(3), Some(8)] {
+            let dense = read_libsvm(&path, None, d_cap).unwrap();
+            let sparse = read_libsvm_sparse(&path, None, d_cap).unwrap();
+            assert_eq!(sparse.n(), dense.n());
+            assert_eq!(sparse.d(), dense.d(), "{d_cap:?}");
+            assert_eq!(sparse.labels, dense.labels);
+            assert_eq!(sparse.points.to_dense(), dense.points, "{d_cap:?}");
+        }
+        let sparse = read_libsvm_sparse(&path, None, None).unwrap();
+        assert_eq!(sparse.nnz(), 5);
+        assert_eq!(sparse.points.row(1), (&[1u32][..], &[9.0f32][..]));
+    }
+
+    #[test]
+    fn sparse_reader_is_nnz_bounded_on_huge_d() {
+        let dir = std::env::temp_dir().join("vivaldi_libsvm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("wide.libsvm");
+        // d = 2^20: the dense reader would materialize n·d floats; the
+        // sparse reader stores 4 entries.
+        std::fs::write(&path, "1 1:1 1048576:2\n-1 524288:3 7:4\n").unwrap();
+        let ds = read_libsvm_sparse(&path, None, None).unwrap();
+        assert_eq!(ds.d(), 1 << 20);
+        assert_eq!(ds.nnz(), 4);
+        assert!(ds.points.bytes() < 1024);
+        assert_eq!(ds.points.row(1).0, &[6u32, 524287]);
     }
 }

@@ -17,6 +17,7 @@ pub mod libsvm;
 pub mod stream;
 
 use crate::dense::DenseMatrix;
+use crate::sparse::CsrMatrix;
 
 /// A labeled dataset (labels are generator ground truth where
 /// available, used only by quality metrics — never by the algorithms).
@@ -35,5 +36,126 @@ impl Dataset {
 
     pub fn d(&self) -> usize {
         self.points.cols()
+    }
+}
+
+/// [`Dataset`]'s CSR twin: points held row-sparse with no densify step
+/// (the Popcorn lane's input). Memory ∝ nnz, never ∝ n·d.
+#[derive(Debug, Clone)]
+pub struct SparseDataset {
+    pub points: CsrMatrix,
+    /// Ground-truth labels (empty when unknown).
+    pub labels: Vec<u32>,
+    pub name: String,
+}
+
+impl SparseDataset {
+    pub fn n(&self) -> usize {
+        self.points.rows()
+    }
+
+    pub fn d(&self) -> usize {
+        self.points.cols()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.points.nnz()
+    }
+}
+
+/// A borrowed block of points in either storage — what the landmark
+/// gram pipelines and the stream driver are generic over. The dense
+/// arm is the existing path, bit for bit; the sparse arm routes to the
+/// nnz-bounded kernels.
+#[derive(Debug, Clone, Copy)]
+pub enum PointsRef<'a> {
+    Dense(&'a DenseMatrix),
+    Sparse(&'a CsrMatrix),
+}
+
+impl<'a> PointsRef<'a> {
+    pub fn rows(&self) -> usize {
+        match self {
+            PointsRef::Dense(m) => m.rows(),
+            PointsRef::Sparse(m) => m.rows(),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            PointsRef::Dense(m) => m.cols(),
+            PointsRef::Sparse(m) => m.cols(),
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, PointsRef::Sparse(_))
+    }
+
+    /// Stored entries (dense rows count every element).
+    pub fn nnz(&self) -> u64 {
+        match self {
+            PointsRef::Dense(m) => (m.rows() * m.cols()) as u64,
+            PointsRef::Sparse(m) => m.nnz() as u64,
+        }
+    }
+
+    /// Per-row squared norms; the sparse arm is bit-identical to the
+    /// dense one on densifiable data (see [`CsrMatrix::row_sq_norms`]).
+    pub fn row_sq_norms(&self) -> Vec<f32> {
+        match self {
+            PointsRef::Dense(m) => m.row_sq_norms(),
+            PointsRef::Sparse(m) => m.row_sq_norms(),
+        }
+    }
+
+    /// Gather `idx` rows densely (landmark extraction: m ≪ n rows).
+    pub fn gather_rows(&self, idx: &[usize]) -> DenseMatrix {
+        match self {
+            PointsRef::Dense(m) => {
+                let mut out = DenseMatrix::zeros(idx.len(), m.cols().max(1));
+                for (r, &i) in idx.iter().enumerate() {
+                    out.row_mut(r).copy_from_slice(m.row(i));
+                }
+                out
+            }
+            PointsRef::Sparse(m) => m.gather_rows(idx),
+        }
+    }
+
+    /// Rows `lo..hi` as an owned block in the same storage.
+    pub fn row_block(&self, lo: usize, hi: usize) -> PointBlock {
+        match self {
+            PointsRef::Dense(m) => PointBlock::Dense(m.row_block(lo, hi)),
+            PointsRef::Sparse(m) => PointBlock::Sparse(m.row_block(lo, hi)),
+        }
+    }
+}
+
+/// An owned block of points in either storage (see [`PointsRef`]).
+#[derive(Debug, Clone)]
+pub enum PointBlock {
+    Dense(DenseMatrix),
+    Sparse(CsrMatrix),
+}
+
+impl PointBlock {
+    pub fn as_ref(&self) -> PointsRef<'_> {
+        match self {
+            PointBlock::Dense(m) => PointsRef::Dense(m),
+            PointBlock::Sparse(m) => PointsRef::Sparse(m),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.as_ref().rows()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.as_ref().dim()
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, PointBlock::Sparse(_))
     }
 }

@@ -16,6 +16,7 @@
 
 use super::Dataset;
 use crate::dense::DenseMatrix;
+use crate::sparse::CsrMatrix;
 use std::io::{BufRead, BufReader};
 use std::path::Path;
 
@@ -36,6 +37,17 @@ pub trait PointSource {
     /// The next chunk of at most `max_rows` rows (`Ok(None)` = cleanly
     /// exhausted; `Err` = the stream broke mid-flight).
     fn next_batch(&mut self, max_rows: usize) -> Result<Option<DenseMatrix>, String>;
+
+    /// The next chunk in CSR form (the sparse streaming lane's pull).
+    ///
+    /// The default densifies a `next_batch` chunk and re-sparsifies —
+    /// correct for every source and bit-identical downstream (dropped
+    /// zeros fold as exactly +0.0). Sparse-native sources
+    /// ([`SparseLibsvmSource`]) override it to build CSR straight from
+    /// the parsed rows, so peak memory is ∝ batch·nnz, never ∝ batch·d.
+    fn next_batch_csr(&mut self, max_rows: usize) -> Result<Option<CsrMatrix>, String> {
+        Ok(self.next_batch(max_rows)?.map(|b| CsrMatrix::from_dense(&b)))
+    }
 
     /// Total rows, when known up front (generators know; files may not).
     fn hint_total(&self) -> Option<usize> {
@@ -152,8 +164,18 @@ impl<R: BufRead> PointSource for LibsvmSource<R> {
                 }
                 Ok(_) => {}
             }
-            let Some(parsed) = super::libsvm::parse_line(&line, Some(self.d)) else {
-                continue; // blank / comment line
+            let parsed = match super::libsvm::parse_line(&line, Some(self.d)) {
+                Ok(Some(p)) => p,
+                Ok(None) => continue, // blank / comment line
+                // Malformed tokens are stream failures, same contract
+                // as a mid-file read error — never silently dropped.
+                Err(msg) => {
+                    self.done = true;
+                    return Err(format!(
+                        "libSVM parse error after {} rows: {msg}",
+                        self.rows_read + rows
+                    ));
+                }
             };
             let row_start = data.len();
             data.resize(row_start + self.d, 0.0);
@@ -167,6 +189,102 @@ impl<R: BufRead> PointSource for LibsvmSource<R> {
         }
         self.rows_read += rows;
         Ok(Some(DenseMatrix::from_vec(rows, self.d, data)))
+    }
+}
+
+/// Incremental libSVM reader that keeps every chunk in CSR form: the
+/// sparse streaming lane's native source. Same dialect, `d`-cap
+/// filtering, and fail-loud contract as [`LibsvmSource`], but
+/// `next_batch_csr` builds the chunk straight from the parsed rows —
+/// peak memory ∝ batch·nnz, so million-feature files stream through a
+/// fixed budget the densifying source could never meet. (`next_batch`
+/// still works, densifying one chunk, so the source remains a drop-in
+/// [`PointSource`] anywhere.)
+pub struct SparseLibsvmSource<R: BufRead> {
+    reader: R,
+    d: usize,
+    rows_read: usize,
+    nnz_read: u64,
+    done: bool,
+}
+
+impl SparseLibsvmSource<BufReader<std::fs::File>> {
+    /// Open a libSVM file for sparse streaming with feature width `d`.
+    pub fn open(path: &Path, d: usize) -> std::io::Result<Self> {
+        let f = std::fs::File::open(path)?;
+        Ok(Self::from_reader(BufReader::new(f), d))
+    }
+}
+
+impl<R: BufRead> SparseLibsvmSource<R> {
+    /// Stream from any buffered reader (tests use in-memory strings).
+    pub fn from_reader(reader: R, d: usize) -> Self {
+        assert!(d >= 1, "feature width must be positive");
+        SparseLibsvmSource { reader, d, rows_read: 0, nnz_read: 0, done: false }
+    }
+
+    /// Rows parsed so far.
+    pub fn rows_read(&self) -> usize {
+        self.rows_read
+    }
+
+    /// Stored entries parsed so far (the lane's memory currency).
+    pub fn nnz_read(&self) -> u64 {
+        self.nnz_read
+    }
+}
+
+impl<R: BufRead> PointSource for SparseLibsvmSource<R> {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn next_batch(&mut self, max_rows: usize) -> Result<Option<DenseMatrix>, String> {
+        Ok(self.next_batch_csr(max_rows)?.map(|c| c.to_dense()))
+    }
+
+    fn next_batch_csr(&mut self, max_rows: usize) -> Result<Option<CsrMatrix>, String> {
+        assert!(max_rows >= 1, "batch size must be positive");
+        if self.done {
+            return Ok(None);
+        }
+        let mut rows: Vec<Vec<(usize, f32)>> = Vec::new();
+        let mut line = String::new();
+        while rows.len() < max_rows {
+            line.clear();
+            match self.reader.read_line(&mut line) {
+                Ok(0) => {
+                    self.done = true;
+                    break;
+                }
+                Err(e) => {
+                    self.done = true;
+                    return Err(format!(
+                        "libSVM stream failed after {} rows: {e}",
+                        self.rows_read + rows.len()
+                    ));
+                }
+                Ok(_) => {}
+            }
+            match super::libsvm::parse_line(&line, Some(self.d)) {
+                Ok(Some(p)) => rows.push(p.features),
+                Ok(None) => continue, // blank / comment line
+                Err(msg) => {
+                    self.done = true;
+                    return Err(format!(
+                        "libSVM parse error after {} rows: {msg}",
+                        self.rows_read + rows.len()
+                    ));
+                }
+            }
+        }
+        if rows.is_empty() {
+            return Ok(None);
+        }
+        self.rows_read += rows.len();
+        let csr = CsrMatrix::from_rows(self.d, &rows);
+        self.nnz_read += csr.nnz() as u64;
+        Ok(Some(csr))
     }
 }
 
@@ -267,5 +385,70 @@ mod tests {
         assert!(err.contains("after 2 rows"), "{err}");
         // And the source stays terminated afterwards.
         assert!(src.next_batch(2).unwrap().is_none());
+    }
+
+    #[test]
+    fn libsvm_sources_surface_malformed_lines() {
+        // A malformed token mid-stream is an Err on both sources, with
+        // the row position — never a silent drop (fail-loud contract).
+        let text = "1 1:0.5\n0 2:2\n-1 bogus\n";
+        let mut dense = LibsvmSource::from_reader(std::io::Cursor::new(text), 3);
+        assert_eq!(dense.next_batch(2).unwrap().unwrap().rows(), 2);
+        let err = dense.next_batch(2).unwrap_err();
+        assert!(err.contains("after 2 rows") && err.contains("bogus"), "{err}");
+        assert!(dense.next_batch(2).unwrap().is_none(), "terminated after the error");
+
+        let mut sparse = SparseLibsvmSource::from_reader(std::io::Cursor::new(text), 3);
+        assert_eq!(sparse.next_batch_csr(2).unwrap().unwrap().rows(), 2);
+        let err = sparse.next_batch_csr(2).unwrap_err();
+        assert!(err.contains("after 2 rows") && err.contains("bogus"), "{err}");
+        assert!(sparse.next_batch_csr(2).unwrap().is_none());
+    }
+
+    #[test]
+    fn sparse_source_matches_dense_source_chunkwise() {
+        let text = "1 1:0.5 3:2.0\n-1 2:1.5\n\n# comment\n0 1:1 9:9\n2 4:4\n1 2:0.25 4:8\n";
+        let mut dense = LibsvmSource::from_reader(std::io::Cursor::new(text), 4);
+        let mut sparse = SparseLibsvmSource::from_reader(std::io::Cursor::new(text), 4);
+        assert_eq!(sparse.dim(), 4);
+        loop {
+            let db = dense.next_batch(2).unwrap();
+            let sb = sparse.next_batch_csr(2).unwrap();
+            match (db, sb) {
+                (None, None) => break,
+                (Some(db), Some(sb)) => {
+                    // Densified CSR chunk == the densifying source's
+                    // chunk, exactly (same parse, same overwrite order).
+                    assert_eq!(sb.to_dense(), db);
+                }
+                (d, s) => {
+                    panic!("sources fell out of step: {:?} vs {:?}", d.is_some(), s.is_some())
+                }
+            }
+        }
+        assert_eq!(sparse.rows_read(), dense.rows_read());
+        assert_eq!(sparse.nnz_read(), 7, "feature 9 capped away, 7 entries survive");
+    }
+
+    #[test]
+    fn default_next_batch_csr_sparsifies_dense_chunks() {
+        // The provided-method path every dense source gets for free.
+        let ds = synth::gaussian_blobs(30, 4, 2, 3.0, 21);
+        let mut src = MatrixSource::from_dataset(&ds);
+        let csr = src.next_batch_csr(12).unwrap().unwrap();
+        assert_eq!(csr.rows(), 12);
+        assert_eq!(csr.to_dense(), ds.points.row_block(0, 12));
+        // And the sparse source's dense view round-trips the same rows.
+        let dir = std::env::temp_dir().join("vivaldi_stream_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sparse_rt.libsvm");
+        crate::data::libsvm::write_libsvm(&path, &ds).unwrap();
+        let mut ssrc = SparseLibsvmSource::open(&path, 4).unwrap();
+        let mut chunks = Vec::new();
+        while let Some(b) = ssrc.next_batch(7).unwrap() {
+            chunks.push(b);
+        }
+        let whole = crate::data::libsvm::read_libsvm(&path, None, Some(4)).unwrap();
+        assert_eq!(DenseMatrix::vstack(&chunks), whole.points);
     }
 }

@@ -17,6 +17,7 @@
 use crate::approx::solve::{DiagW, WPanels};
 use crate::backend::ComputeBackend;
 use crate::comm::{Comm, Grid2D, Group};
+use crate::data::PointsRef;
 use crate::dense::DenseMatrix;
 use crate::kernelfn::KernelFn;
 use crate::layout::{BlockCyclic, Partition, WFactorization};
@@ -45,8 +46,34 @@ pub fn gemm_1d_landmark_gram(
     backend: &dyn ComputeBackend,
     tracker: &MemTracker,
 ) -> Result<(DenseMatrix, DenseMatrix), VivaldiError> {
+    gemm_1d_landmark_gram_points(
+        comm,
+        world,
+        PointsRef::Dense(local_points),
+        local_landmarks,
+        kernel,
+        backend,
+        tracker,
+    )
+}
+
+/// Storage-generic body of [`gemm_1d_landmark_gram`]: the sparse lane
+/// passes a CSR point block and every other line — charges, collective
+/// order, norms, Gram fold — is shared with the dense flow, so sparse
+/// results on densifiable data are **bit-identical** (the CSR gram
+/// replays the dense fold; see
+/// [`ComputeBackend::gram_tile_csr`]).
+pub fn gemm_1d_landmark_gram_points(
+    comm: &Comm,
+    world: &Group,
+    local_points: PointsRef<'_>,
+    local_landmarks: &DenseMatrix,
+    kernel: &KernelFn,
+    backend: &dyn ComputeBackend,
+    tracker: &MemTracker,
+) -> Result<(DenseMatrix, DenseMatrix), VivaldiError> {
     comm.set_phase("gemm");
-    let d = local_points.cols();
+    let d = local_points.dim();
     let n_p = local_points.rows();
     assert!(
         local_landmarks.rows() == 0 || local_landmarks.cols() == d,
@@ -86,7 +113,7 @@ pub fn gemm_1d_landmark_gram(
         (Vec::new(), Vec::new())
     };
 
-    let c_block = backend.gram_tile(local_points, &landmarks, kernel, &row_norms, &l_norms);
+    let c_block = backend.gram_tile_points(local_points, &landmarks, kernel, &row_norms, &l_norms);
     let w = backend.gram_tile(&landmarks, &landmarks, kernel, &l_norms, &l_norms);
     // The replicated L is released after both Gram products; C and W
     // stay resident for the clustering loop.
@@ -198,11 +225,38 @@ pub fn gemm_15d_landmark_gram(
     tracker: &MemTracker,
     wfact: WFactorization,
 ) -> Result<(DenseMatrix, Option<DiagW>), VivaldiError> {
+    gemm_15d_landmark_gram_points(
+        comm,
+        grid,
+        layout,
+        PointsRef::Dense(point_block),
+        local_landmarks,
+        kernel,
+        backend,
+        tracker,
+        wfact,
+    )
+}
+
+/// Storage-generic body of [`gemm_15d_landmark_gram`] (see
+/// [`gemm_1d_landmark_gram_points`] for the sparse-lane contract).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_15d_landmark_gram_points(
+    comm: &Comm,
+    grid: &Grid2D,
+    layout: &Partition,
+    point_block: PointsRef<'_>,
+    local_landmarks: &DenseMatrix,
+    kernel: &KernelFn,
+    backend: &dyn ComputeBackend,
+    tracker: &MemTracker,
+    wfact: WFactorization,
+) -> Result<(DenseMatrix, Option<DiagW>), VivaldiError> {
     comm.set_phase("gemm");
     let p = grid.p();
     let q = grid.q();
     let world = Group::world(p);
-    let d = point_block.cols();
+    let d = point_block.dim();
     let (i, j) = grid.coords(comm.rank());
     let is_diag = i == j;
     let ((plo, phi), (llo, lhi)) = layout.tile_bounds(comm.rank());
@@ -268,7 +322,7 @@ pub fn gemm_15d_landmark_gram(
     } else {
         (Vec::new(), Vec::new())
     };
-    let c_tile = backend.gram_tile(point_block, &l_block, kernel, &row_norms, &lb_norms);
+    let c_tile = backend.gram_tile_points(point_block, &l_block, kernel, &row_norms, &lb_norms);
 
     // Diagonal ranks build their W rows: exchange blocks over the
     // diagonal group (transient full L), compute W[llo..lhi][0..m].

@@ -16,8 +16,8 @@ pub mod summa;
 pub mod redistribute;
 
 pub use landmark::{
-    block_gather_landmark_rows, gemm_15d_landmark_gram, gemm_1d_landmark_gram,
-    landmark_block_counts,
+    block_gather_landmark_rows, gemm_15d_landmark_gram, gemm_15d_landmark_gram_points,
+    gemm_1d_landmark_gram, gemm_1d_landmark_gram_points, landmark_block_counts,
 };
 pub use onedim::gemm_1d_gram;
 pub use redistribute::redistribute_2d_to_1d;

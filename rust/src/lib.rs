@@ -168,6 +168,42 @@
 //! measures the windowed stream against the single-device
 //! [`sliding_window`] re-fit baseline on the same drifting source.
 //!
+//! ## When the points barely have entries: the sparse lane
+//!
+//! Text and recommendation workloads ship as libSVM files with
+//! million-feature rows holding a handful of stored values each — the
+//! dense reader's 4·n·d materialization can never load them. The
+//! sparse lane keeps points in CSR form end-to-end:
+//! [`data::libsvm::read_libsvm_sparse`] parses rows straight into a
+//! [`sparse::CsrMatrix`] (memory ∝ nnz), [`approx::fit_sparse`] runs
+//! the landmark pipeline on it through the native backend's sparse
+//! cross-kernel Gram panel ([`backend::ComputeBackend::gram_tile_csr`]),
+//! and [`approx::stream::StreamConfig::sparse`] streams CSR batches
+//! (peak ∝ batch·nnz) through [`data::stream::SparseLibsvmSource`].
+//! Because the sparse panel replays the dense dot's accumulation-lane
+//! structure over the stored entries only, results on densifiable data
+//! are **bit-identical** to the dense lane —
+//! `rust/tests/sparse_lane.rs` pins exact `==` across kernels, thread counts,
+//! rank counts, and layouts, batch and streaming. Landmark seeding is
+//! the value-free uniform rule (k-means++ would read point values and
+//! is rejected up front). [`config::landmark_sparse_feasibility`]
+//! quantifies the read-level contrast, and
+//! [`config::Feasibility::recommends_sparse`] marks the workloads
+//! only this lane can hold:
+//!
+//! ```no_run
+//! use vivaldi::approx::{self, ApproxConfig};
+//! use vivaldi::data::libsvm::read_libsvm_sparse;
+//! use vivaldi::kernelfn::KernelFn;
+//!
+//! // A million-feature libSVM file parses straight into CSR rows —
+//! // peak memory ∝ nnz, never ∝ n·d.
+//! let ds = read_libsvm_sparse(std::path::Path::new("rcv1.libsvm"), None, None).unwrap();
+//! let cfg = ApproxConfig { k: 16, m: 512, kernel: KernelFn::linear(), ..Default::default() };
+//! let out = approx::fit_sparse(4, &ds.points, &cfg).unwrap();
+//! println!("{} sparse points fit in {} iters", out.assignments.len(), out.iterations);
+//! ```
+//!
 //! ## The local compute backend: threads without tolerances
 //!
 //! Everything above counts communication exactly; the [`backend`]

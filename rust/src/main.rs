@@ -78,6 +78,12 @@ fn print_help() {
          \x20                   pure online mode)\n\
          \x20                   [--data FILE [--d D]] — stream a libSVM file\n\
          \x20                   off disk instead of generated data\n\
+         \x20                   [--sparse] — nnz-bounded CSR lane (uniform\n\
+         \x20                   landmark seeding): points stay row-sparse\n\
+         \x20                   end-to-end, --data FILE also works without\n\
+         \x20                   --stream (the CSR read costs ∝ nnz, not n·d),\n\
+         \x20                   and results are bit-identical to the dense\n\
+         \x20                   path on densifiable data\n\
          \x20 weak-scaling      Fig. 2 [--breakdown → Fig. 3] [--quick]\n\
          \x20 strong-scaling    Fig. 4 [--breakdown → Fig. 5] [--quick]\n\
          \x20 landmark-scaling  Fig. 2–5-style weak/strong rows for the\n\
@@ -289,8 +295,12 @@ fn cmd_run_landmark(f: &Flags) -> i32 {
         .unwrap_or(PaperDataset::HiggsLike);
     let scale = load_scale(f);
     let stream = f.has("--stream");
+    let sparse = f.has("--sparse");
     let data_file = f.get("--data");
-    if data_file.is_some() && !stream {
+    // The dense batch path must densify the whole file (4·n·d bytes) to
+    // fit it, so it keeps refusing `--data`; the sparse lane reads the
+    // file straight into CSR rows (∝ nnz) and lifts the restriction.
+    if data_file.is_some() && !stream && !sparse {
         eprintln!("--data FILE requires --stream (batch fits load datasets via $VIVALDI_DATA)");
         return 2;
     }
@@ -304,10 +314,32 @@ fn cmd_run_landmark(f: &Flags) -> i32 {
     }
     let batch = f.usize_or("--batch", (n / 8).max(m).max(g));
 
+    // Batch sparse lane: CSR end-to-end via `approx::fit_sparse`,
+    // landmarks from the value-free uniform rule — bit-identical to
+    // the dense path on densifiable data, nnz-bounded otherwise.
+    if sparse && !stream {
+        return cmd_run_landmark_sparse_batch(
+            f,
+            data_file,
+            ds,
+            &scale,
+            n,
+            m,
+            k,
+            iters,
+            g,
+            batch,
+            explicit_layout,
+            auto_layout,
+            mem,
+        );
+    }
+
     // Streamed libSVM off disk: the real Table-II files never need to
-    // be densified whole — points arrive batch by batch.
+    // be densified whole — points arrive batch by batch (dense rows,
+    // or CSR rows bounded by batch·nnz with --sparse).
     if let Some(path) = data_file {
-        use vivaldi::data::stream::LibsvmSource;
+        use vivaldi::data::stream::{LibsvmSource, SparseLibsvmSource};
         let default_d = scale.d_cap(ds).unwrap_or(ds.d());
         let d = f.usize_or("--d", default_d);
         let layout = explicit_layout.unwrap_or_else(|| {
@@ -331,6 +363,17 @@ fn cmd_run_landmark(f: &Flags) -> i32 {
             mem,
             ..Default::default()
         };
+        if sparse {
+            let mut source = match SparseLibsvmSource::open(std::path::Path::new(path), d) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("cannot open --data {path}: {e}");
+                    return 2;
+                }
+            };
+            println!("streaming libSVM file {path} (d={d}, sparse)");
+            return cmd_run_landmark_stream(&mut source, &[], 0, d, cfg, g, batch, f, auto_layout);
+        }
         let mut source = match LibsvmSource::open(std::path::Path::new(path), d) {
             Ok(s) => s,
             Err(e) => {
@@ -425,7 +468,131 @@ fn cmd_run_landmark(f: &Flags) -> i32 {
             eprintln!("fit failed: {e}");
             if matches!(e, vivaldi::VivaldiError::OutOfMemory { .. }) {
                 let report_mem = mem.unwrap_or_else(MemModel::unlimited);
-                print_feasibility_report(data.n(), data.d(), m, g, data.n(), k, 0, &report_mem);
+                let (dn, dd) = (data.n(), data.d());
+                print_feasibility_report(dn, dd, m, g, dn, k, 0, &report_mem, None);
+            }
+            1
+        }
+    }
+}
+
+/// `vivaldi run --algo landmark --sparse` (batch): the nnz-bounded
+/// lane. `--data FILE` parses libSVM rows straight into CSR with no
+/// densify step (memory ∝ nnz, never ∝ n·d), generated data goes
+/// through `CsrMatrix::from_dense` so the result can be pinned
+/// bit-identical against the dense path. Landmarks come from the
+/// value-free uniform rule — `approx::fit_sparse_with_backend`
+/// rejects k-means++ seeding up front because it reads point values.
+#[allow(clippy::too_many_arguments)]
+fn cmd_run_landmark_sparse_batch(
+    f: &Flags,
+    data_file: Option<&str>,
+    ds: PaperDataset,
+    scale: &Scale,
+    n: usize,
+    m: usize,
+    k: usize,
+    iters: usize,
+    g: usize,
+    batch: usize,
+    explicit_layout: Option<vivaldi::approx::LandmarkLayout>,
+    auto_layout: bool,
+    mem: Option<vivaldi::config::MemModel>,
+) -> i32 {
+    use vivaldi::approx::{self, LandmarkLayout};
+    use vivaldi::sparse::CsrMatrix;
+
+    let (points, labels, src) = match data_file {
+        Some(path) => {
+            let d_cap = f.get("--d").and_then(|v| v.parse::<usize>().ok());
+            match vivaldi::data::libsvm::read_libsvm_sparse(std::path::Path::new(path), None, d_cap)
+            {
+                Ok(sd) => (sd.points, sd.labels, format!("libSVM {path}")),
+                Err(e) => {
+                    eprintln!("cannot read --data {path}: {e}");
+                    return 2;
+                }
+            }
+        }
+        None => {
+            let data = ds.generate(n, scale.d_cap(ds), scale.seed);
+            let csr = CsrMatrix::from_dense(&data.points);
+            (csr, data.labels, format!("{} via from_dense", ds.name()))
+        }
+    };
+    let nnz = points.nnz() as u64;
+    let layout = explicit_layout.unwrap_or_else(|| {
+        LandmarkLayout::auto_for(
+            points.rows(),
+            points.cols(),
+            k,
+            m,
+            g,
+            vivaldi::layout::WFactorization::BlockCyclic,
+            mem.as_ref(),
+        )
+    });
+    let cfg = approx::ApproxConfig {
+        k,
+        m,
+        layout,
+        max_iters: iters,
+        kernel: KernelFn::paper_polynomial(),
+        converge_on_stable: true,
+        mem,
+        ..Default::default()
+    };
+    let kind = f.backend_kind();
+    println!(
+        "landmark sparse fit: layout={}{} G={g} n={} d={} nnz={nnz} m={m} k={k} iters<={iters} \
+         backend={} ({src})",
+        layout.name(),
+        if auto_layout { " (auto)" } else { "" },
+        points.rows(),
+        points.cols(),
+        kind.name(),
+    );
+    let t0 = std::time::Instant::now();
+    match approx::fit_sparse_with_backend(g, &points, &cfg, &kind.backend()) {
+        Ok(out) => {
+            println!(
+                "done in {:.3}s wall: {} iterations, converged={}, peak mem {}",
+                t0.elapsed().as_secs_f64(),
+                out.iterations,
+                out.converged,
+                vivaldi::util::human_bytes(out.peak_mem)
+            );
+            let crit = out.critical_timings();
+            for (phase, secs) in crit.phases() {
+                println!("  phase {phase:<8} {secs:.4}s (critical path)");
+            }
+            let total = vivaldi::comm::CommStats::merged_sum(&out.comm_stats).total();
+            println!(
+                "  comm: {} messages, {} total",
+                total.msgs,
+                vivaldi::util::human_bytes(total.bytes)
+            );
+            if !labels.is_empty() {
+                let nmi = vivaldi::quality::nmi(&out.assignments, &labels, k);
+                println!("  quality: NMI vs generator labels = {nmi:.3}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("fit failed: {e}");
+            if matches!(e, vivaldi::VivaldiError::OutOfMemory { .. }) {
+                let report_mem = mem.unwrap_or_else(vivaldi::config::MemModel::unlimited);
+                print_feasibility_report(
+                    points.rows(),
+                    points.cols(),
+                    m,
+                    g,
+                    batch,
+                    k,
+                    0,
+                    &report_mem,
+                    Some(nnz),
+                );
             }
             1
         }
@@ -434,7 +601,11 @@ fn cmd_run_landmark(f: &Flags) -> i32 {
 
 /// The OOM planning report: which path (exact / landmark 1D / landmark
 /// 1.5D replicated-W / 1.5D block-cyclic-W / streaming at the given
-/// batch / windowed streaming) fits the per-rank budget.
+/// batch / windowed streaming) fits the per-rank budget. When the
+/// workload's nnz is known (`--sparse`), three read-level rows are
+/// appended contrasting the dense n·d materialization against the CSR
+/// read and the nnz-bounded stream batch — the rows that show a
+/// dataset the dense path can never load but the sparse lane holds.
 #[allow(clippy::too_many_arguments)]
 fn print_feasibility_report(
     n: usize,
@@ -445,9 +616,14 @@ fn print_feasibility_report(
     k: usize,
     window: usize,
     mem: &vivaldi::config::MemModel,
+    nnz: Option<u64>,
 ) {
-    let feas =
-        vivaldi::config::landmark_stream_window_feasibility(n, d, m, g, batch, k, window, mem);
+    let feas = match nnz {
+        Some(z) => vivaldi::config::landmark_sparse_feasibility(n, d, z, m, g, batch, mem),
+        None => {
+            vivaldi::config::landmark_stream_window_feasibility(n, d, m, g, batch, k, window, mem)
+        }
+    };
     eprintln!(
         "feasibility @ {} budget/rank:",
         vivaldi::util::human_bytes(feas.budget)
@@ -492,6 +668,30 @@ fn print_feasibility_report(
             vivaldi::util::human_bytes(feas.landmark_stream_window_bytes_per_rank),
             feas.landmark_stream_window_fits
         );
+    }
+    if let Some(z) = feas.nnz {
+        eprintln!(
+            "  dense read (n·d)    {:>12}  fits: {}",
+            vivaldi::util::human_bytes(feas.dense_read_bytes),
+            feas.dense_read_fits
+        );
+        eprintln!(
+            "  sparse read (nnz={z}) {:>12}  fits: {}",
+            vivaldi::util::human_bytes(feas.sparse_read_bytes),
+            feas.sparse_read_fits
+        );
+        eprintln!(
+            "  sparse stream (B={}) {:>12}  fits: {}",
+            feas.stream_batch,
+            vivaldi::util::human_bytes(feas.sparse_stream_bytes_per_rank),
+            feas.sparse_stream_fits
+        );
+        if feas.recommends_sparse() {
+            eprintln!(
+                "  -> only the sparse lane can read this dataset: \
+                 the dense n·d load busts the budget, the CSR read fits"
+            );
+        }
     }
     if feas.recommends_landmark() {
         eprintln!("  -> only the landmark path can hold this workload");
@@ -569,14 +769,16 @@ fn cmd_run_landmark_stream(
         inner_iters,
         window: f.usize_or("--window", 0),
         tol,
+        sparse: f.has("--sparse"),
     };
     let window_note =
         if cfg.window > 0 { format!(" window={}", cfg.window) } else { String::new() };
     let kind = f.backend_kind();
     println!(
-        "landmark stream fit: layout={}{} G={g} n={} d={d} m={m} k={} B={batch} decay={decay}{window_note} backend={}",
+        "landmark stream fit: layout={}{}{} G={g} n={} d={d} m={m} k={} B={batch} decay={decay}{window_note} backend={}",
         cfg.base.layout.name(),
         if auto_layout { " (auto)" } else { "" },
+        if cfg.sparse { " sparse" } else { "" },
         if n_report > 0 { n_report.to_string() } else { "?".into() },
         cfg.base.k,
         kind.name(),
@@ -630,6 +832,7 @@ fn cmd_run_landmark_stream(
                     cfg.base.k,
                     cfg.window,
                     &report_mem,
+                    None,
                 );
             }
             1

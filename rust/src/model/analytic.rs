@@ -276,6 +276,49 @@ pub fn local_flops_expand(n: usize, m: usize, k: usize) -> f64 {
     2.0 * n as f64 * m as f64 * k as f64
 }
 
+/// Resident bytes of an n-row CSR store holding `nnz` stored entries:
+/// 4·nnz f32 values + 4·nnz u32 column indices + 8·(rows+1) row
+/// offsets. Linear in nnz, **independent of d** — the sparse lane's
+/// whole point: a million-feature libSVM row with three stored entries
+/// costs the same as a three-feature dense row.
+pub fn csr_bytes(rows: usize, nnz: u64) -> u64 {
+    8 * nnz + 8 * (rows as u64 + 1)
+}
+
+/// Local FLOPs of the sparse cross-kernel Gram panel C = κ(X, L) with
+/// X an n-row CSR holding `nnz` stored entries and L dense (m×d): the
+/// 2·nnz·m multiply-adds of the stored-entry dot panels plus the same
+/// 4·n·m elementwise kernel epilogue [`local_flops_gram`] charges.
+/// Fully dense rows (nnz = n·d) recover the dense form exactly; for
+/// real sparse data the dot term collapses from d-scale to nnz/n-scale
+/// while the epilogue — already d-free — is unchanged.
+pub fn local_flops_gram_sparse(n: usize, m: usize, nnz: u64) -> f64 {
+    2.0 * nnz as f64 * m as f64 + 4.0 * n as f64 * m as f64
+}
+
+/// 1D landmark reduced-rank update per iteration under the **sparse
+/// lane** — identical to [`d_landmark_1d`], and that is the point: the
+/// update communicates C-derived per-cluster sums and coefficients,
+/// never raw features, so neither d nor nnz appears. Sparse storage
+/// changes the local FLOPs ([`local_flops_gram_sparse`]) and the
+/// resident bytes ([`csr_bytes`]), but not one word of the network
+/// cost. The `_nnz` parameter exists so call sites document which
+/// problem they priced.
+pub fn d_landmark_sparse(c: CostParams, m: usize, _nnz: u64) -> CommCost {
+    d_landmark_1d(c, m)
+}
+
+/// Per-rank peak bytes of one **sparse** streaming batch (1D layout,
+/// single-rank ingest view): the CSR batch itself ([`csr_bytes`] —
+/// nnz-bounded) plus the dense state the batch update carries — the
+/// replicated landmark rows L (m·d, the only d-scale term left), the
+/// C block (B×m), and W (m²). Versus the dense ingest, the 4·B·d
+/// batch materialization is replaced by `csr_bytes(B, nnz)`: the
+/// dense-OOMs/sparse-fits contrast the feasibility report prints.
+pub fn sparse_stream_peak_bytes(m: usize, d: usize, batch: usize, batch_nnz: u64) -> u64 {
+    csr_bytes(batch, batch_nnz) + 4 * ((m * d) as u64 + (batch * m) as u64 + (m * m) as u64)
+}
+
 /// All Table I rows for a parameter set, in the paper's order:
 /// (algorithm, K cost, Dᵀ cost).
 pub fn table1(c: CostParams) -> Vec<(&'static str, CommCost, CommCost)> {
@@ -491,6 +534,57 @@ mod tests {
         assert_eq!(local_flops_gram(2 * n, m, d), 2.0 * gram);
         assert_eq!(local_flops_cluster_sums(2 * n, m), 2.0 * local_flops_cluster_sums(n, m));
         assert_eq!(local_flops_expand(2 * n, m, k), 2.0 * local_flops_expand(n, m, k));
+    }
+
+    #[test]
+    fn csr_bytes_scale_with_nnz_not_dims() {
+        // Linear in nnz (8 bytes per stored entry), affine in rows
+        // (8 bytes per row offset) — and d never appears at all.
+        assert_eq!(csr_bytes(10, 200) - csr_bytes(10, 100), 8 * 100);
+        assert_eq!(csr_bytes(11, 100) - csr_bytes(10, 100), 8);
+        // A million-feature row with 3 stored entries stays tiny.
+        assert!(csr_bytes(1, 3) < 64);
+    }
+
+    #[test]
+    fn sparse_gram_flops_track_nnz() {
+        let (n, m, d) = (4096usize, 512usize, 1usize << 20);
+        let nnz = (n * 8) as u64; // 8 stored entries per row
+        let sparse = local_flops_gram_sparse(n, m, nnz);
+        let dense = local_flops_gram(n, m, d);
+        // At 8 entries per 2^20-wide row the dot term collapses by ~d/8.
+        assert!(sparse < dense / 1000.0, "{sparse} !< {dense}/1000");
+        // Fully dense rows recover the dense closed form exactly.
+        assert_eq!(local_flops_gram_sparse(n, m, (n * d) as u64), dense);
+    }
+
+    #[test]
+    fn sparse_landmark_comm_is_nnz_independent() {
+        let c = CostParams { p: 16, ..C };
+        let m = 1024;
+        // The reduced-rank update never ships features: words match the
+        // dense 1D closed form at any nnz.
+        let a = d_landmark_sparse(c, m, 10);
+        let b = d_landmark_sparse(c, m, 1 << 40);
+        assert_eq!(a.words, b.words);
+        assert_eq!(a.messages, b.messages);
+        assert_eq!(a.words, d_landmark_1d(c, m).words);
+    }
+
+    #[test]
+    fn sparse_stream_peak_is_nnz_bounded() {
+        let (m, d, batch) = (256usize, 1usize << 20, 4096usize);
+        let nnz = (batch * 8) as u64;
+        let sparse = sparse_stream_peak_bytes(m, d, batch, nnz);
+        // The dense ingest's batch materialization alone dwarfs the
+        // whole sparse peak (L's m·d term included).
+        let dense_batch = 4 * (batch as u64) * (d as u64);
+        assert!(sparse < dense_batch, "{sparse} !< {dense_batch}");
+        // Doubling nnz moves only the CSR term.
+        assert_eq!(
+            sparse_stream_peak_bytes(m, d, batch, 2 * nnz) - sparse,
+            csr_bytes(batch, 2 * nnz) - csr_bytes(batch, nnz)
+        );
     }
 
     #[test]

@@ -1,0 +1,276 @@
+//! CSR row store for sparse **point sets** (the Popcorn lane's input
+//! format).
+//!
+//! [`crate::sparse::CscMatrix`] carries the assignment matrix V by
+//! columns; this module carries the *data* by rows — the natural shape
+//! for the landmark cross-kernel C = κ(X, L), whose every output row
+//! consumes exactly one point row. A [`CsrMatrix`] is filled directly
+//! from parsed libSVM lines ([`crate::data::libsvm::read_libsvm_sparse`])
+//! with no densify step, so its footprint is ∝ nnz, never ∝ n·d — the
+//! property that opens million-feature text/recommendation workloads
+//! the dense reader can never hold.
+//!
+//! Column indices within each row are kept **strictly ascending**: the
+//! sparse Gram panel ([`crate::backend::ComputeBackend::gram_tile_csr`])
+//! replays the dense dot's accumulation lanes in ascending-index order,
+//! which is what makes the sparse path bit-identical to the dense one.
+
+use crate::dense::DenseMatrix;
+
+/// A sparse row-major matrix: `rowptr[i]..rowptr[i+1]` indexes the
+/// stored `(colidx, values)` pairs of row `i`, column indices strictly
+/// ascending within each row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    rowptr: Vec<usize>,
+    colidx: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Build from raw CSR arrays (validated: monotone `rowptr`,
+    /// strictly ascending in-range column indices per row).
+    pub fn new(
+        rows: usize,
+        cols: usize,
+        rowptr: Vec<usize>,
+        colidx: Vec<u32>,
+        values: Vec<f32>,
+    ) -> CsrMatrix {
+        assert!(cols <= u32::MAX as usize, "column index space exceeds u32");
+        assert_eq!(rowptr.len(), rows + 1, "rowptr length");
+        assert_eq!(colidx.len(), values.len(), "colidx/values length");
+        assert_eq!(*rowptr.last().unwrap_or(&0), colidx.len(), "rowptr tail");
+        assert_eq!(rowptr[0], 0, "rowptr head");
+        for i in 0..rows {
+            let (s, e) = (rowptr[i], rowptr[i + 1]);
+            assert!(s <= e, "rowptr must be monotone");
+            for t in s..e {
+                assert!((colidx[t] as usize) < cols, "column index out of range");
+                if t + 1 < e {
+                    assert!(colidx[t] < colidx[t + 1], "row {i}: indices must strictly ascend");
+                }
+            }
+        }
+        CsrMatrix { rows, cols, rowptr, colidx, values }
+    }
+
+    /// Build from per-row `(index, value)` lists in any order. Entries
+    /// are sorted ascending; duplicate indices keep the **last** value
+    /// — exactly the overwrite semantics of the densifying reader, so
+    /// both readers agree on every file. Explicit zeros are kept as
+    /// stored entries (they contribute exactly +0.0 in the Gram fold).
+    pub fn from_rows(cols: usize, rows: &[Vec<(usize, f32)>]) -> CsrMatrix {
+        let mut rowptr = Vec::with_capacity(rows.len() + 1);
+        rowptr.push(0usize);
+        let mut colidx = Vec::new();
+        let mut values = Vec::new();
+        let mut scratch: Vec<(usize, f32)> = Vec::new();
+        for feats in rows {
+            scratch.clear();
+            scratch.extend_from_slice(feats);
+            // Stable sort + last-wins dedup = the dense reader's
+            // overwrite order.
+            scratch.sort_by_key(|&(i, _)| i);
+            let mut w = 0usize;
+            for r in 0..scratch.len() {
+                if w > 0 && scratch[w - 1].0 == scratch[r].0 {
+                    scratch[w - 1].1 = scratch[r].1;
+                } else {
+                    scratch[w] = scratch[r];
+                    w += 1;
+                }
+            }
+            for &(i, v) in &scratch[..w] {
+                assert!(i < cols, "feature index {i} >= d = {cols}");
+                colidx.push(i as u32);
+                values.push(v);
+            }
+            rowptr.push(colidx.len());
+        }
+        CsrMatrix::new(rows.len(), cols, rowptr, colidx, values)
+    }
+
+    /// Sparsify a dense matrix (stored entries = the nonzeros, in
+    /// ascending column order). `to_dense` round-trips exactly.
+    pub fn from_dense(dense: &DenseMatrix) -> CsrMatrix {
+        let (r, c) = (dense.rows(), dense.cols());
+        let mut rowptr = Vec::with_capacity(r + 1);
+        rowptr.push(0usize);
+        let mut colidx = Vec::new();
+        let mut values = Vec::new();
+        for i in 0..r {
+            for (j, &v) in dense.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    colidx.push(j as u32);
+                    values.push(v);
+                }
+            }
+            rowptr.push(colidx.len());
+        }
+        CsrMatrix::new(r, c, rowptr, colidx, values)
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Stored entries (explicit zeros included).
+    pub fn nnz(&self) -> usize {
+        self.colidx.len()
+    }
+
+    /// Row `i` as parallel `(indices, values)` slices, indices strictly
+    /// ascending.
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (s, e) = (self.rowptr[i], self.rowptr[i + 1]);
+        (&self.colidx[s..e], &self.values[s..e])
+    }
+
+    /// Rows `lo..hi` as a new CSR matrix (same column space).
+    pub fn row_block(&self, lo: usize, hi: usize) -> CsrMatrix {
+        assert!(lo <= hi && hi <= self.rows);
+        let (s, e) = (self.rowptr[lo], self.rowptr[hi]);
+        let rowptr = self.rowptr[lo..=hi].iter().map(|&p| p - s).collect();
+        CsrMatrix {
+            rows: hi - lo,
+            cols: self.cols,
+            rowptr,
+            colidx: self.colidx[s..e].to_vec(),
+            values: self.values[s..e].to_vec(),
+        }
+    }
+
+    /// Gather `idx` rows into a dense matrix (the landmark extraction:
+    /// m ≪ n rows densify, the point set never does).
+    pub fn gather_rows(&self, idx: &[usize]) -> DenseMatrix {
+        let mut out = DenseMatrix::zeros(idx.len(), self.cols.max(1));
+        for (r, &i) in idx.iter().enumerate() {
+            let (cidx, vals) = self.row(i);
+            let orow = out.row_mut(r);
+            for (&j, &v) in cidx.iter().zip(vals) {
+                orow[j as usize] = v;
+            }
+        }
+        out
+    }
+
+    /// Densify (tests / the portable backend fallback).
+    pub fn to_dense(&self) -> DenseMatrix {
+        self.gather_rows(&(0..self.rows).collect::<Vec<_>>())
+    }
+
+    /// Per-row squared norms over the stored entries, accumulated in
+    /// ascending index order — **bit-identical** to
+    /// [`DenseMatrix::row_sq_norms`] on the densified rows: the skipped
+    /// entries' x·x terms are exactly +0.0, and an f32 left-fold sum
+    /// that starts at +0.0 can never reach −0.0, so adding them is a
+    /// bitwise no-op.
+    pub fn row_sq_norms(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|i| self.row(i).1.iter().map(|x| x * x).sum())
+            .collect()
+    }
+
+    /// Resident bytes of the CSR arrays — the nnz-bounded footprint
+    /// the analytics charge ([`crate::model::analytic::csr_bytes`]).
+    pub fn bytes(&self) -> u64 {
+        crate::model::analytic::csr_bytes(self.rows, self.nnz() as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn masked_random(rows: usize, cols: usize, keep_every: usize, seed: u64) -> DenseMatrix {
+        let mut rng = Rng::new(seed);
+        DenseMatrix::from_fn(rows, cols, |i, j| {
+            let v = rng.next_f32() - 0.5;
+            if (i + j) % keep_every == 0 {
+                v
+            } else {
+                0.0
+            }
+        })
+    }
+
+    #[test]
+    fn dense_roundtrip_and_shapes() {
+        let d = masked_random(7, 13, 3, 5);
+        let s = CsrMatrix::from_dense(&d);
+        assert_eq!((s.rows(), s.cols()), (7, 13));
+        assert_eq!(s.to_dense(), d);
+        assert!(s.nnz() < 7 * 13);
+        // Row slices ascend strictly.
+        for i in 0..s.rows() {
+            let (idx, vals) = s.row(i);
+            assert_eq!(idx.len(), vals.len());
+            assert!(idx.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn from_rows_sorts_and_dedups_last_wins() {
+        // Unsorted input with a duplicate index: the densifying
+        // reader's overwrite keeps the last value, and so must CSR.
+        let rows = vec![vec![(4usize, 2.0f32), (1, 1.0), (4, 9.0)], vec![], vec![(0, -1.0)]];
+        let s = CsrMatrix::from_rows(6, &rows);
+        assert_eq!(s.nnz(), 3);
+        assert_eq!(s.row(0), (&[1u32, 4][..], &[1.0f32, 9.0][..]));
+        assert_eq!(s.row(1).0.len(), 0);
+        let d = s.to_dense();
+        assert_eq!(d.get(0, 4), 9.0);
+        assert_eq!(d.get(2, 0), -1.0);
+    }
+
+    #[test]
+    fn row_block_matches_dense_slice() {
+        let d = masked_random(12, 9, 2, 11);
+        let s = CsrMatrix::from_dense(&d);
+        let b = s.row_block(3, 9);
+        assert_eq!(b.to_dense(), d.row_block(3, 9));
+        assert_eq!(s.row_block(5, 5).rows(), 0);
+    }
+
+    #[test]
+    fn gather_rows_matches_dense_rows() {
+        let d = masked_random(10, 6, 2, 17);
+        let s = CsrMatrix::from_dense(&d);
+        let idx = [7usize, 0, 7, 3];
+        let g = s.gather_rows(&idx);
+        for (r, &i) in idx.iter().enumerate() {
+            assert_eq!(g.row(r), d.row(i), "gathered row {r}");
+        }
+    }
+
+    #[test]
+    fn sparse_norms_bitwise_match_dense() {
+        let d = masked_random(9, 40, 3, 23);
+        let s = CsrMatrix::from_dense(&d);
+        // Exact ==, not a tolerance: zero terms are bitwise no-ops.
+        assert_eq!(s.row_sq_norms(), d.row_sq_norms());
+    }
+
+    #[test]
+    fn explicit_zeros_are_kept() {
+        let rows = vec![vec![(2usize, 0.0f32), (5, 1.5)]];
+        let s = CsrMatrix::from_rows(8, &rows);
+        assert_eq!(s.nnz(), 2, "explicit zeros stay stored");
+        assert_eq!(s.row_sq_norms(), s.to_dense().row_sq_norms());
+    }
+
+    #[test]
+    fn bytes_scale_with_nnz_not_dims() {
+        let wide = CsrMatrix::from_rows(1 << 20, &[vec![(0, 1.0), ((1 << 20) - 1, 2.0)]]);
+        assert_eq!(wide.nnz(), 2);
+        assert!(wide.bytes() < 64, "nnz-bounded, not d-bounded: {} B", wide.bytes());
+    }
+}

@@ -11,9 +11,11 @@
 //! allreduced cluster sizes.
 
 pub mod csc;
+pub mod csr;
 pub mod vmatrix;
 pub mod ops;
 
 pub use csc::CscMatrix;
+pub use csr::CsrMatrix;
 pub use vmatrix::VPartition;
 pub use ops::{spmm_vk, spmv_vz};

@@ -133,13 +133,15 @@ mod tests {
         let mut rng = Rng::new(7);
         for (m, nr, k) in [(5, 8, 3), (16, 16, 4), (9, 31, 5)] {
             let k_tile = DenseMatrix::random(m, nr, &mut rng);
-            let assign: Vec<u32> = (0..nr).map(|_| rng.below(k) as u32).collect();
+            // Round-robin prefix guarantees every cluster non-empty (the
+            // CSC division needs it), so the cross-check always runs —
+            // a random assignment could leave a cluster empty and
+            // silently skip the oracle.
+            let assign: Vec<u32> =
+                (0..nr).map(|r| if r < k { r as u32 } else { rng.below(k) as u32 }).collect();
             let v = VPartition::from_assign(k, 0, assign.clone());
             let sizes = v.local_sizes();
-            // Guard: all clusters non-empty for the CSC division.
-            if sizes.iter().any(|&s| s == 0) {
-                continue;
-            }
+            assert!(sizes.iter().all(|&s| s > 0), "prefix must fill every cluster");
             let inv = VPartition::inv_sizes(&sizes);
             let e = spmm_vk(&k_tile, &assign, k, &inv);
 
@@ -181,13 +183,14 @@ mod tests {
         let mut rng = Rng::new(8);
         let n = 23;
         let k = 4;
-        let assign: Vec<u32> = (0..n).map(|_| rng.below(k) as u32).collect();
+        // Round-robin prefix: every cluster non-empty by construction,
+        // so the CSC cross-check below always executes.
+        let assign: Vec<u32> =
+            (0..n).map(|r| if r < k { r as u32 } else { rng.below(k) as u32 }).collect();
         let z: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
         let v = VPartition::from_assign(k, 0, assign.clone());
         let sizes = v.local_sizes();
-        if sizes.iter().any(|&s| s == 0) {
-            return;
-        }
+        assert!(sizes.iter().all(|&s| s > 0), "prefix must fill every cluster");
         let inv = VPartition::inv_sizes(&sizes);
         let c = spmv_vz(&assign, &z, k, &inv);
         let expect = v.to_csc(&sizes).spmv(&z);

@@ -258,3 +258,62 @@ fn stream_reads_libsvm_file_from_disk() {
     assert_eq!(code, 2);
     assert!(stderr.contains("cannot open --data"), "{stderr}");
 }
+
+/// The sparse lane through the binary: `--sparse` batch on generated
+/// data, `--sparse --data FILE` **without** `--stream` (newly legal —
+/// the CSR read is nnz-bounded, unlike the dense batch loader), and
+/// `--sparse --stream` cutting CSR batches off disk.
+#[test]
+fn sparse_lane_cli_smoke() {
+    let (code, stdout, stderr) = run(&[
+        "run", "--algo", "landmark", "--sparse", "--n", "240", "--m", "30", "--k", "2",
+        "--gpus", "4", "--iters", "5",
+    ]);
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(stdout.contains("landmark sparse fit"), "{stdout}");
+    assert!(stdout.contains("nnz="), "{stdout}");
+    assert!(stdout.contains("done in"), "{stdout}");
+
+    let ds = vivaldi::data::synth::gaussian_blobs(220, 4, 2, 4.0, 77);
+    let dir = std::env::temp_dir().join("vivaldi_cli_sparse_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("popcorn.libsvm");
+    vivaldi::data::libsvm::write_libsvm(&path, &ds).unwrap();
+    let path_s = path.to_str().unwrap();
+
+    // Batch --data, no --stream: the sparse lane lifts the restriction.
+    let (code, stdout, stderr) = run(&[
+        "run", "--algo", "landmark", "--sparse", "--data", path_s, "--d", "4", "--m", "16",
+        "--k", "2", "--gpus", "2", "--iters", "5",
+    ]);
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(stdout.contains("landmark sparse fit"), "{stdout}");
+    assert!(stdout.contains("libSVM"), "{stdout}");
+    assert!(stdout.contains("done in"), "{stdout}");
+
+    // Streaming sparse off disk: CSR batches, batch-bounded peak.
+    let (code, stdout, stderr) = run(&[
+        "run", "--algo", "landmark", "--sparse", "--stream", "--data", path_s, "--d", "4",
+        "--batch", "64", "--m", "16", "--k", "2", "--gpus", "2", "--iters", "5",
+    ]);
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(stdout.contains("landmark stream fit: layout=1D sparse"), "{stdout}");
+    assert!(stdout.contains("4 batches"), "{stdout}");
+    assert!(stdout.contains("batch-bounded"), "{stdout}");
+}
+
+/// A sparse OOM appends the read-level rows to the feasibility report:
+/// the dense n·d materialization against the nnz-bounded CSR read.
+#[test]
+fn sparse_oom_prints_read_level_contrast() {
+    let (code, _, stderr) = run(&[
+        "run", "--algo", "landmark", "--sparse", "--n", "512", "--m", "64", "--k", "2",
+        "--gpus", "4", "--budget", "1024",
+    ]);
+    assert_eq!(code, 1, "stderr: {stderr}");
+    assert!(stderr.contains("fit failed"), "{stderr}");
+    assert!(stderr.contains("feasibility @"), "{stderr}");
+    assert!(stderr.contains("dense read"), "{stderr}");
+    assert!(stderr.contains("sparse read (nnz="), "{stderr}");
+    assert!(stderr.contains("sparse stream (B="), "{stderr}");
+}

@@ -1,0 +1,195 @@
+//! Integration pins for the nnz-bounded sparse lane (the Popcorn
+//! lane): sparse-vs-dense **bit-identity** across kernels, thread
+//! counts, rank counts, and both landmark layouts — batch and
+//! streaming — plus the CSR libSVM reader (with and without a feature
+//! cap) and the read-level feasibility contrast where the dense n·d
+//! load can never fit but the sparse lane completes.
+
+use vivaldi::approx::stream::{fit_stream_with_backend, StreamConfig};
+use vivaldi::approx::{self, ApproxConfig, LandmarkLayout};
+use vivaldi::backend::NativeBackend;
+use vivaldi::config::{landmark_sparse_feasibility, MemModel};
+use vivaldi::data::landmarks::LandmarkSeeding;
+use vivaldi::data::stream::MatrixSource;
+use vivaldi::data::synth;
+use vivaldi::kernelfn::KernelFn;
+use vivaldi::sparse::CsrMatrix;
+use vivaldi::VivaldiError;
+
+fn cfg_for(kernel: KernelFn, layout: LandmarkLayout, m: usize, k: usize) -> ApproxConfig {
+    ApproxConfig { k, m, layout, kernel, max_iters: 8, ..Default::default() }
+}
+
+/// The tentpole pin: `fit_sparse_with_backend` on `from_dense` CSR is
+/// **bitwise** equal to `fit_with_backend` on the dense matrix — same
+/// assignments, same objective trajectory, same iteration count — for
+/// linear, polynomial, and Gaussian kernels, at 1 and 4 compute
+/// threads, on 1 and 4 ranks, under both landmark layouts.
+#[test]
+fn sparse_batch_fit_matches_dense_bitwise() {
+    let data = synth::gaussian_blobs(192, 6, 3, 4.0, 42);
+    let csr = CsrMatrix::from_dense(&data.points);
+    let kernels = [KernelFn::linear(), KernelFn::paper_polynomial(), KernelFn::gaussian(0.5)];
+    for kernel in kernels {
+        for layout in [LandmarkLayout::OneD, LandmarkLayout::OneFiveD] {
+            for p in [1usize, 4] {
+                for threads in [1usize, 4] {
+                    let be = NativeBackend::threaded(threads);
+                    let cfg = cfg_for(kernel, layout, 24, 3);
+                    let dense = approx::fit_with_backend(p, &data.points, &cfg, &be)
+                        .expect("dense fit");
+                    let sparse = approx::fit_sparse_with_backend(p, &csr, &cfg, &be)
+                        .expect("sparse fit");
+                    let at = format!("{} {} p={p} threads={threads}", kernel.tag(), layout.name());
+                    assert_eq!(dense.assignments, sparse.assignments, "assignments @ {at}");
+                    assert_eq!(
+                        dense.objective_curve, sparse.objective_curve,
+                        "objective @ {at}"
+                    );
+                    assert_eq!(dense.iterations, sparse.iterations, "iterations @ {at}");
+                }
+            }
+        }
+    }
+}
+
+/// Streaming twin of the batch pin: the same `MatrixSource` driven in
+/// dense mode and in `sparse: true` mode (CSR batches cut by the
+/// default `next_batch_csr`) produces bitwise-equal assignments,
+/// per-batch objectives, and inner-iteration schedules.
+#[test]
+fn sparse_stream_matches_dense_stream_bitwise() {
+    let data = synth::gaussian_blobs(200, 5, 3, 4.0, 7);
+    for layout in [LandmarkLayout::OneD, LandmarkLayout::OneFiveD] {
+        for p in [1usize, 4] {
+            for threads in [1usize, 4] {
+                let be = NativeBackend::threaded(threads);
+                let dense_cfg = StreamConfig {
+                    base: cfg_for(KernelFn::paper_polynomial(), layout, 20, 3),
+                    batch: 50,
+                    ..Default::default()
+                };
+                let sparse_cfg = StreamConfig { sparse: true, ..dense_cfg.clone() };
+                let mut src = MatrixSource::new(&data.points);
+                let dense = fit_stream_with_backend(p, &mut src, &dense_cfg, &be)
+                    .expect("dense stream fit");
+                let mut src = MatrixSource::new(&data.points);
+                let sparse = fit_stream_with_backend(p, &mut src, &sparse_cfg, &be)
+                    .expect("sparse stream fit");
+                let at = format!("{} p={p} threads={threads}", layout.name());
+                assert_eq!(dense.assignments, sparse.assignments, "assignments @ {at}");
+                assert_eq!(dense.objective_curve, sparse.objective_curve, "objective @ {at}");
+                assert_eq!(
+                    dense.batch_iterations, sparse.batch_iterations,
+                    "inner schedule @ {at}"
+                );
+                assert_eq!(dense.batches, sparse.batches, "batches @ {at}");
+            }
+        }
+    }
+}
+
+/// The CSR libSVM reader against the dense reader on the same file:
+/// densifying the sparse read reproduces the dense read bitwise, the
+/// feature cap (`d_cap`) drops out-of-range indices identically in
+/// both, and the sparse read's nnz counts only what the file stores.
+#[test]
+fn csr_from_libsvm_matches_dense_reader_with_and_without_d_cap() {
+    let dir = std::env::temp_dir().join("vivaldi_sparse_lane_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("capped.libsvm");
+    std::fs::write(&path, "1 1:0.5 3:1.25 999:7.0\n2 2:-3.5\n1 1:0.5 7:0.25\n").unwrap();
+
+    // Capped at 8 features: index 999 is dropped by both readers.
+    let sd = vivaldi::data::libsvm::read_libsvm_sparse(&path, None, Some(8)).unwrap();
+    let dd = vivaldi::data::libsvm::read_libsvm(&path, None, Some(8)).unwrap();
+    assert_eq!(sd.points.cols(), 8);
+    assert_eq!(sd.points.rows(), 3);
+    assert_eq!(sd.points.nnz(), 5, "999:7.0 must fall outside the cap");
+    assert_eq!(sd.points.to_dense().data(), dd.points.data(), "capped densify mismatch");
+    assert_eq!(sd.labels, dd.labels);
+
+    // Uncapped: the width comes from the max stored index, and every
+    // stored entry survives.
+    let sd = vivaldi::data::libsvm::read_libsvm_sparse(&path, None, None).unwrap();
+    let dd = vivaldi::data::libsvm::read_libsvm(&path, None, None).unwrap();
+    assert_eq!(sd.points.cols(), dd.points.cols());
+    assert_eq!(sd.points.nnz(), 6);
+    assert_eq!(sd.points.to_dense().data(), dd.points.data(), "uncapped densify mismatch");
+}
+
+/// The lane's reason to exist, pinned end-to-end: a 1024 × 2^20
+/// workload whose dense read (4·n·d = 4 GiB) busts a 256 MiB budget
+/// while the CSR read (∝ nnz) fits — the feasibility report says so
+/// (`recommends_sparse`), and the sparse fit actually **completes**
+/// inside that budget.
+#[test]
+fn dense_read_ooms_where_sparse_lane_completes() {
+    let n = 1024usize;
+    let d = 1usize << 20;
+    let rows: Vec<Vec<(usize, f32)>> = (0..n)
+        .map(|i| {
+            (0..4)
+                .map(|j| (((i * 131 + j * 12289 + 1) * 257) % d, (i % 7) as f32 + 0.5))
+                .collect()
+        })
+        .collect();
+    let csr = CsrMatrix::from_rows(d, &rows);
+    let nnz = csr.nnz() as u64;
+    let mem = MemModel {
+        budget: 256 << 20,
+        repl_factor: MemModel::LAMBDA_REPL,
+        redist_factor: MemModel::NU_REDIST,
+    };
+
+    let feas = landmark_sparse_feasibility(n, d, nnz, 8, 1, n, &mem);
+    assert!(!feas.dense_read_fits, "4 GiB dense read must bust 256 MiB");
+    assert!(feas.sparse_read_fits, "the CSR read is nnz-bounded and must fit");
+    assert!(feas.recommends_sparse());
+
+    let cfg = ApproxConfig {
+        k: 4,
+        m: 8,
+        layout: LandmarkLayout::OneD,
+        kernel: KernelFn::linear(),
+        max_iters: 2,
+        mem: Some(mem),
+        ..Default::default()
+    };
+    let out = approx::fit_sparse_with_backend(1, &csr, &cfg, &NativeBackend::scalar())
+        .expect("the sparse lane must complete where the dense read cannot even load");
+    assert_eq!(out.assignments.len(), n);
+    assert!(out.peak_mem <= mem.budget, "tracked peak must respect the budget");
+}
+
+/// Both sparse entry points refuse configurations that would read
+/// point values densely: k-means++ landmark seeding (batch and
+/// stream) and the dense-point reservoir (stream only).
+#[test]
+fn sparse_entry_points_reject_value_reading_configs() {
+    let data = synth::gaussian_blobs(96, 4, 2, 4.0, 9);
+    let csr = CsrMatrix::from_dense(&data.points);
+    let mut cfg = cfg_for(KernelFn::linear(), LandmarkLayout::OneD, 12, 2);
+    cfg.seeding = LandmarkSeeding::KmeansPP;
+    match approx::fit_sparse_with_backend(1, &csr, &cfg, &NativeBackend::scalar()) {
+        Err(VivaldiError::InvalidConfig(msg)) => {
+            assert!(msg.contains("uniform"), "{msg}")
+        }
+        other => panic!("k-means++ must be rejected, got {:?}", other.map(|r| r.iterations)),
+    }
+
+    let scfg = StreamConfig {
+        base: cfg_for(KernelFn::linear(), LandmarkLayout::OneD, 12, 2),
+        batch: 48,
+        reservoir: 24,
+        sparse: true,
+        ..Default::default()
+    };
+    let mut src = MatrixSource::new(&data.points);
+    match fit_stream_with_backend(1, &mut src, &scfg, &NativeBackend::scalar()) {
+        Err(VivaldiError::InvalidConfig(msg)) => {
+            assert!(msg.contains("reservoir"), "{msg}")
+        }
+        other => panic!("the reservoir must be rejected, got {:?}", other.map(|r| r.batches)),
+    }
+}
