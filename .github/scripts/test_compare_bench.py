@@ -1,0 +1,139 @@
+#!/usr/bin/env python3
+"""Self-test for compare_bench.py — the perf gate that decides red vs
+green CI runs. Runs the script as a subprocess against synthetic
+BENCH_landmark.json pairs and pins its four verdict paths:
+
+1. config drift      -> "skipping diff", exit 0 (incomparable, not red)
+2. clean pass        -> "no ... regressions", exit 0
+3. provenance mismatch -> WARNING + threshold relaxed to the
+                          closed-form band (a modest growth that would
+                          fail measured-vs-measured passes), exit 0
+4. volume regression -> "REGRESSION", exit 1
+
+Also pins the wall band: measured-vs-measured walls warn above +30%
+and fail at >= 2x; an analytic-desk side skips the wall gate entirely.
+
+Stdlib only; run directly with python3. Exits nonzero on the first
+broken expectation.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+SCRIPT = os.path.join(HERE, "compare_bench.py")
+
+
+def bench(provenance, bytes_1d, wall=None, config=None):
+    doc = {
+        "provenance": provenance,
+        "config": config or {"n": 4096, "p": 4, "iters": 5},
+        "rows": [
+            {
+                "path": "landmark-1.5d",
+                "m": 128,
+                "phases": {"gram": {"bytes": bytes_1d}},
+            }
+        ],
+    }
+    if wall is not None:
+        doc["rows"][0]["wall_s"] = wall
+    return doc
+
+
+def run_pair(prev, cur, threshold="0.15"):
+    with tempfile.TemporaryDirectory() as d:
+        pp, cp = os.path.join(d, "prev.json"), os.path.join(d, "cur.json")
+        with open(pp, "w") as f:
+            json.dump(prev, f)
+        with open(cp, "w") as f:
+            json.dump(cur, f)
+        r = subprocess.run(
+            [sys.executable, SCRIPT, pp, cp, "--threshold", threshold],
+            capture_output=True,
+            text=True,
+        )
+    return r.returncode, r.stdout + r.stderr
+
+
+def expect(name, code, out, want_code, want_substrings, reject_substrings=()):
+    ok = code == want_code
+    for s in want_substrings:
+        ok = ok and s in out
+    for s in reject_substrings:
+        ok = ok and s not in out
+    print(f"{'PASS' if ok else 'FAIL'}: {name}")
+    if not ok:
+        print(f"  exit {code} (wanted {want_code}); output:\n{out}")
+        sys.exit(1)
+
+
+def main():
+    # 1. Config drift: byte counts are incomparable -> skip, green.
+    code, out = run_pair(
+        bench("measured", 1000),
+        bench("measured", 1000, config={"n": 9999, "p": 4, "iters": 5}),
+    )
+    expect("config drift skips the diff", code, out, 0, ["skipping diff"])
+
+    # 2. Clean measured-vs-measured pass, volumes flat, wall inside band.
+    code, out = run_pair(
+        bench("measured", 1000, wall=1.0),
+        bench("measured", 1000, wall=1.1),
+    )
+    expect(
+        "clean pass",
+        code,
+        out,
+        0,
+        ["no counted-comm-volume or wall-time regressions"],
+        reject_substrings=["REGRESSION", "WARNING"],
+    )
+
+    # 3. Provenance mismatch: analytic-desk baseline relaxes the volume
+    #    threshold to the closed-form band, so +50% growth (a hard fail
+    #    measured-vs-measured) passes with the WARNING — and the wall
+    #    gate is skipped outright.
+    code, out = run_pair(
+        bench("analytic-desk", 1000),
+        bench("measured", 1500, wall=1.0),
+    )
+    expect(
+        "provenance mismatch relaxes and warns",
+        code,
+        out,
+        0,
+        ["WARNING: baseline provenance", "wall-time gate skipped"],
+        reject_substrings=["REGRESSION"],
+    )
+
+    # 4. A real counted-volume regression: +50% measured-vs-measured is
+    #    beyond the 15% threshold -> red.
+    code, out = run_pair(
+        bench("measured", 1000),
+        bench("measured", 1500),
+    )
+    expect("volume regression fails", code, out, 1, ["REGRESSION"])
+
+    # Wall band, warn side: +50% wall is a warning, not a failure.
+    code, out = run_pair(
+        bench("measured", 1000, wall=1.0),
+        bench("measured", 1000, wall=1.5),
+    )
+    expect("wall +50% warns only", code, out, 0, ["WARNING: slower"])
+
+    # Wall band, fail side: 2x wall is red even with flat volumes.
+    code, out = run_pair(
+        bench("measured", 1000, wall=1.0),
+        bench("measured", 1000, wall=2.5),
+    )
+    expect("wall 2x fails", code, out, 1, ["WALL REGRESSION"])
+
+    print("compare_bench.py self-test: all verdict paths pinned")
+
+
+if __name__ == "__main__":
+    main()

@@ -90,6 +90,16 @@ impl SpdSolver {
         &self.l
     }
 
+    /// Rebuild a solver from its raw parts (the snapshot/restore path
+    /// of [`crate::approx::stream`]): the factor is stored verbatim, so
+    /// a round-tripped solver is bitwise the one that was saved —
+    /// nothing is re-factored.
+    pub fn from_raw(l: Vec<f64>, m: usize, ridge: f64) -> SpdSolver {
+        assert_eq!(l.len(), m * m, "SpdSolver::from_raw: factor must be m*m");
+        assert!(m >= 1);
+        SpdSolver { l, m, ridge }
+    }
+
     /// Solve `(W + λI) x = rhs` via forward/back substitution.
     pub fn solve(&self, rhs: &[f64]) -> Vec<f64> {
         let m = self.m;
@@ -248,6 +258,43 @@ impl DistSpdSolver {
     /// against the scalar factor).
     pub fn lower_panels(&self) -> &[Vec<f64>] {
         &self.lower
+    }
+
+    /// This solver's index in the diagonal group.
+    #[inline]
+    pub fn my_idx(&self) -> usize {
+        self.my_idx
+    }
+
+    /// The retained W panels (the snapshot/restore path serializes
+    /// them alongside the factor).
+    pub fn w_panels(&self) -> &WPanels {
+        &self.panels
+    }
+
+    /// Rebuild a distributed solver from its raw parts (the
+    /// snapshot/restore path of [`crate::approx::stream`]): panels and
+    /// factor are stored verbatim — nothing is re-factored, so a
+    /// round-tripped solver is bitwise the one that was saved.
+    pub fn from_raw(
+        bc: BlockCyclic,
+        my_idx: usize,
+        lower: Vec<Vec<f64>>,
+        panels: WPanels,
+        ridge: f64,
+    ) -> DistSpdSolver {
+        assert_eq!(panels.bc, bc, "from_raw: panel deal disagrees with the solver's");
+        assert_eq!(panels.my_idx, my_idx, "from_raw: panel ownership disagrees");
+        let owned = bc.owned_panels(my_idx);
+        assert_eq!(lower.len(), owned.len(), "from_raw: one factor block per owned panel");
+        assert_eq!(panels.cols.len(), owned.len(), "from_raw: one W block per owned panel");
+        let m = bc.m();
+        for (bi, &t) in owned.iter().enumerate() {
+            let (lo, hi) = bc.panel_bounds(t);
+            assert_eq!(lower[bi].len(), lower_len(m, lo, hi), "from_raw: packed factor size");
+            assert_eq!(panels.cols[bi].len(), m * (hi - lo), "from_raw: panel block size");
+        }
+        DistSpdSolver { bc, my_idx, lower, panels, ridge }
     }
 
     /// The packed lower factor column `c` (rows `c..m`). Panics unless

@@ -84,6 +84,23 @@
 //! points are classified under the old model, and their cross-kernel
 //! against the *new* landmarks — scaled to the carried weight — becomes
 //! the new-basis history.
+//!
+//! **Sessions, classify-only, and snapshots:** [`StreamSession`] is the
+//! resumable form of this driver loop — callers push batches one at a
+//! time instead of handing over a [`PointSource`], and `fit_stream`
+//! itself is now a thin pull-push wrapper around it, so a session fed
+//! the same batches is bit-identical to the one-shot fit. Sessions are
+//! what the multi-tenant service ([`crate::runtime::tenants`]) keeps
+//! warm per tenant: a schedule entry of **0** inner iterations makes a
+//! batch classify-only (assignments under the carried model, the
+//! model's sums bitwise untouched — the serving fast path), and
+//! [`StreamSession::snapshot`] / [`StreamSession::restore`] move the
+//! carried model — landmark blocks, factored W (host replica or
+//! block-cyclic panels), ring slots, schedule counters — through a
+//! versioned, dependency-free byte format with the pin that
+//! restore-then-ingest is **bit-identical** to never having
+//! snapshotted (factors and sums are stored as raw bit patterns;
+//! nothing is recomputed on restore).
 
 use std::collections::VecDeque;
 
@@ -131,8 +148,14 @@ pub struct StreamConfig {
     /// entry repeats for the rest of the stream). Empty = every batch
     /// uses `base.max_iters`. `[1]` is **pure online mode**: one
     /// classify-and-update pass per batch — the classic
-    /// quality-vs-throughput knob (CLI `--inner-iters`). Entries must
-    /// be ≥ 1; tail batches too small to shard still run zero.
+    /// quality-vs-throughput knob (CLI `--inner-iters`). A `0` entry
+    /// makes its batch **classify-only**: the points are labeled under
+    /// the carried model with zero inner iterations and *nothing is
+    /// folded* — the carried sums stay bitwise untouched (the serving
+    /// fast path of [`crate::runtime::tenants`]). A 0-cap batch needs
+    /// a warm model, so a schedule must run at least one ≥ 1 batch
+    /// before its first 0. Tail batches too small to shard still run
+    /// zero iterations regardless of the schedule.
     pub inner_iters: Vec<usize>,
     /// Sliding-window width in batches (0 = infinite, the default).
     /// With `window = W > 0` the model carries a ring of the last W
@@ -514,13 +537,47 @@ pub fn fit_stream(
     fit_stream_with_backend(p, source, cfg, &backend)
 }
 
-/// [`fit_stream`] with an explicit compute backend.
+/// [`fit_stream`] with an explicit compute backend: a thin pull-push
+/// loop over a [`StreamSession`]. The session *is* the driver loop,
+/// so a session fed the same batches by hand is bit-identical to the
+/// one-shot fit.
 pub fn fit_stream_with_backend(
     p: usize,
     source: &mut dyn PointSource,
     cfg: &StreamConfig,
     backend: &dyn ComputeBackend,
 ) -> Result<StreamFitResult, VivaldiError> {
+    let mut sess = StreamSession::new(p, cfg.clone())?;
+    loop {
+        // Sparse ingest pulls CSR blocks and never densifies; the
+        // dense path is byte-for-byte what it always was.
+        let batch: PointBlock = if cfg.sparse {
+            match source.next_batch_csr(cfg.batch) {
+                Ok(Some(c)) => PointBlock::Sparse(c),
+                Ok(None) => break,
+                Err(e) => {
+                    return Err(VivaldiError::InvalidConfig(format!("point source failed: {e}")))
+                }
+            }
+        } else {
+            match source.next_batch(cfg.batch) {
+                Ok(Some(b)) => PointBlock::Dense(b),
+                Ok(None) => break,
+                // A broken source is a failed fit, never a silent truncation.
+                Err(e) => {
+                    return Err(VivaldiError::InvalidConfig(format!("point source failed: {e}")))
+                }
+            }
+        };
+        sess.push_batch(batch, backend)?;
+    }
+    sess.finish()
+}
+
+/// The up-front configuration wall shared by [`fit_stream`] and
+/// [`StreamSession::new`]: everything checkable without data is
+/// rejected before the first batch is pulled.
+fn validate_stream_config(p: usize, cfg: &StreamConfig) -> Result<(), VivaldiError> {
     let k = cfg.base.k;
     let m = cfg.base.m;
     if k == 0 || m < k {
@@ -548,11 +605,6 @@ pub fn fit_stream_with_backend(
             "reservoir capacity {} < m = {m}: refresh could not seed the landmark set",
             cfg.reservoir
         )));
-    }
-    if cfg.inner_iters.iter().any(|&x| x == 0) {
-        return Err(VivaldiError::InvalidConfig(
-            "--inner-iters entries must be >= 1 (1 = pure online mode)".into(),
-        ));
     }
     if !(cfg.tol >= 0.0 && cfg.tol.is_finite()) {
         return Err(VivaldiError::InvalidConfig(format!(
@@ -586,40 +638,142 @@ pub fn fit_stream_with_backend(
         // dimension is per batch, checked again when each batch lands.
         Partition::landmark_grid(cfg.batch, m, p).map_err(VivaldiError::InvalidConfig)?;
     }
+    Ok(())
+}
 
-    let mut reservoir = (cfg.reservoir > 0)
-        .then(|| LandmarkReservoir::new(cfg.reservoir, source.dim(), cfg.base.landmark_seed));
-    let mut model: Option<StreamModel> = None;
-    let mut acc = harness::StreamAccumulator::new(p);
-    let mut refreshes = 0usize;
-    let mut batch_index = 0usize;
-    // Driven (sharded) batches consumed so far — the index into the
-    // per-batch inner-iteration schedule.
-    let mut driven_batches = 0usize;
+/// A resumable streaming fit: the driver loop of [`fit_stream`] with
+/// the pull side inverted — callers push [`PointBlock`]s one at a time
+/// and can pause, classify, snapshot, or resume between batches.
+/// Feeding a session the batches a `fit_stream` source would yield is
+/// **bit-identical** to the one-shot fit (same op sequence in the same
+/// order; `fit_stream_with_backend` is itself this loop).
+///
+/// This is the warm per-tenant state of the multi-tenant service
+/// ([`crate::runtime::tenants`]): open a session, ingest batches as
+/// they arrive, [`Self::classify_batch`] against the carried model
+/// between ingests, and [`Self::snapshot`] / [`Self::restore`] it
+/// across process restarts.
+pub struct StreamSession {
+    p: usize,
+    cfg: StreamConfig,
+    /// Created lazily on the first batch (from its point dimension —
+    /// the same value `fit_stream` reads off the source up front).
+    reservoir: Option<LandmarkReservoir>,
+    model: Option<StreamModel>,
+    acc: harness::StreamAccumulator,
+    refreshes: usize,
+    batch_index: usize,
+    /// Driven (sharded) batches consumed so far — the index into the
+    /// per-batch inner-iteration schedule.
+    driven_batches: usize,
+}
 
-    loop {
-        // Sparse ingest pulls CSR blocks and never densifies; the
-        // dense path is byte-for-byte what it always was.
-        let batch: PointBlock = if cfg.sparse {
-            match source.next_batch_csr(cfg.batch) {
-                Ok(Some(c)) => PointBlock::Sparse(c),
-                Ok(None) => break,
-                Err(e) => {
-                    return Err(VivaldiError::InvalidConfig(format!("point source failed: {e}")))
-                }
-            }
-        } else {
-            match source.next_batch(cfg.batch) {
-                Ok(Some(b)) => PointBlock::Dense(b),
-                Ok(None) => break,
-                // A broken source is a failed fit, never a silent truncation.
-                Err(e) => {
-                    return Err(VivaldiError::InvalidConfig(format!("point source failed: {e}")))
-                }
-            }
-        };
+impl StreamSession {
+    /// Validate the configuration and open an empty session on `p`
+    /// simulated ranks.
+    pub fn new(p: usize, cfg: StreamConfig) -> Result<StreamSession, VivaldiError> {
+        validate_stream_config(p, &cfg)?;
+        Ok(StreamSession {
+            p,
+            cfg,
+            reservoir: None,
+            model: None,
+            acc: harness::StreamAccumulator::new(p),
+            refreshes: 0,
+            batch_index: 0,
+            driven_batches: 0,
+        })
+    }
+
+    /// Simulated rank count the session runs on.
+    pub fn ranks(&self) -> usize {
+        self.p
+    }
+
+    /// The session's configuration (fixed at open).
+    pub fn config(&self) -> &StreamConfig {
+        &self.cfg
+    }
+
+    /// Batches pushed since the session (or its restore) started —
+    /// driven and classified tails alike.
+    pub fn batches_seen(&self) -> usize {
+        self.acc.batches()
+    }
+
+    /// Points pushed since the session (or its restore) started.
+    pub fn points_seen(&self) -> usize {
+        self.acc.assignments.len()
+    }
+
+    /// Total inner iterations across the pushed batches.
+    pub fn iterations_seen(&self) -> usize {
+        self.acc.iterations
+    }
+
+    /// Final batch-local objective of the most recent batch.
+    pub fn last_objective(&self) -> Option<f64> {
+        self.acc.objective_curve.last().copied()
+    }
+
+    /// The carried k×m cluster sums and k cluster weights (`None`
+    /// before the first batch) — the bitwise pin for classify-only
+    /// batches and snapshot round-trips.
+    pub fn carried_sums(&self) -> Option<(&[f32], &[f64])> {
+        self.model.as_ref().map(|m| (m.sums.as_slice(), m.weights.as_slice()))
+    }
+
+    /// Whether the session holds a warm, fully initialized model —
+    /// the precondition for [`Self::classify_batch`] and for
+    /// 0-inner-iteration (classify-only) batches.
+    pub fn is_warm(&self) -> bool {
+        self.model.as_ref().map(|m| m.initialized && m.has_history).unwrap_or(false)
+    }
+
+    fn warm_model(&self) -> Result<&StreamModel, VivaldiError> {
+        self.model.as_ref().filter(|m| m.initialized && m.has_history).ok_or_else(|| {
+            VivaldiError::InvalidConfig(
+                "classify-only needs a warm model: run at least one driven batch with \
+                 >= 1 inner iteration first"
+                    .into(),
+            )
+        })
+    }
+
+    /// Classify points under the carried model **without touching
+    /// it** — the serving fast path: zero inner iterations, zero
+    /// collectives, nothing folded into the sums. Returns per-point
+    /// assignments and squared feature-space distances. Needs a warm
+    /// model ([`Self::is_warm`]).
+    pub fn classify_batch(
+        &self,
+        points: PointsRef<'_>,
+        backend: &dyn ComputeBackend,
+    ) -> Result<(Vec<u32>, Vec<f32>), VivaldiError> {
+        let mdl = self.warm_model()?;
+        let (_c, assign, minvals) = mdl.classify(points, &self.cfg, backend);
+        Ok((assign, minvals))
+    }
+
+    /// Push one batch through the stream machinery: exactly one
+    /// iteration of the [`fit_stream`] driver loop (reservoir observe,
+    /// tail classification, init/refresh, the sharded inner loop, and
+    /// the fold back into the carried model).
+    pub fn push_batch(
+        &mut self,
+        batch: PointBlock,
+        backend: &dyn ComputeBackend,
+    ) -> Result<(), VivaldiError> {
+        let p = self.p;
+        let cfg = &self.cfg;
+        let k = cfg.base.k;
+        let m = cfg.base.m;
         let bn = batch.rows();
-        if let Some(res) = reservoir.as_mut() {
+        if self.reservoir.is_none() && cfg.reservoir > 0 {
+            self.reservoir =
+                Some(LandmarkReservoir::new(cfg.reservoir, batch.dim(), cfg.base.landmark_seed));
+        }
+        if let Some(res) = self.reservoir.as_mut() {
             let PointBlock::Dense(b) = &batch else {
                 unreachable!("sparse mode rejects the reservoir up front")
             };
@@ -630,7 +784,7 @@ pub fn fit_stream_with_backend(
             // in hand, label it driver-side and fold it into the sums —
             // no collective round, no work discarded. Without one (the
             // very first batch) the stream is genuinely unusable.
-            let Some(mdl) = model.as_mut() else {
+            let Some(mdl) = self.model.as_mut() else {
                 return Err(VivaldiError::InvalidConfig(format!(
                     "first batch of {bn} points is smaller than the rank count {p}"
                 )));
@@ -644,31 +798,50 @@ pub fn fit_stream_with_backend(
             let decayed = mdl.decayed(cfg.decay);
             // Exactly one ring slot for the tail, through the same
             // fold as a driven batch — never absorbed twice.
-            mdl.fold_batch(decayed, BatchFinal { sums, sizes }, cfg, batch_index, bn);
-            acc.objective_curve.push(minvals.iter().map(|&v| v as f64).sum());
-            acc.batch_iterations.push(0); // classified, no inner loop
-            acc.batch_points.push(bn);
-            acc.assignments.extend(assign);
-            batch_index += 1;
-            continue;
+            mdl.fold_batch(decayed, BatchFinal { sums, sizes }, cfg, self.batch_index, bn);
+            self.acc.objective_curve.push(minvals.iter().map(|&v| v as f64).sum());
+            self.acc.batch_iterations.push(0); // classified, no inner loop
+            self.acc.batch_points.push(bn);
+            self.acc.assignments.extend(assign);
+            self.batch_index += 1;
+            return Ok(());
         }
-        if model.is_none() {
-            model = Some(init_model(batch.as_ref(), cfg, p, reservoir.as_ref(), backend)?);
-        } else if cfg.refresh_every > 0 && batch_index % cfg.refresh_every == 0 {
+        if cfg.inner_cap(self.driven_batches) == 0 {
+            // A 0-cap schedule entry makes this batch classify-only:
+            // label it under the warm model and fold **nothing** — the
+            // carried sums stay bitwise untouched. Handled driver-side
+            // before any collective, because the rank schedules always
+            // fold their settled batch, which is exactly what a
+            // classify-only batch must not do.
+            let mdl = self.warm_model()?;
+            let (_c, assign, minvals) = mdl.classify(batch.as_ref(), cfg, backend);
+            self.acc.objective_curve.push(minvals.iter().map(|&v| v as f64).sum());
+            self.acc.batch_iterations.push(0);
+            self.acc.batch_points.push(bn);
+            self.acc.assignments.extend(assign);
+            self.batch_index += 1;
+            // A 0 entry still consumes its slot in the schedule.
+            self.driven_batches += 1;
+            return Ok(());
+        }
+        if self.model.is_none() {
+            self.model =
+                Some(init_model(batch.as_ref(), cfg, p, self.reservoir.as_ref(), backend)?);
+        } else if cfg.refresh_every > 0 && self.batch_index % cfg.refresh_every == 0 {
             refresh_model(
-                model.as_mut().expect("model exists past the first batch"),
-                reservoir.as_ref().expect("refresh_every requires a reservoir"),
+                self.model.as_mut().expect("model exists past the first batch"),
+                self.reservoir.as_ref().expect("refresh_every requires a reservoir"),
                 cfg,
                 backend,
-                refreshes,
+                self.refreshes,
             );
-            refreshes += 1;
+            self.refreshes += 1;
         }
 
-        let mdl = model.as_ref().expect("model initialized on the first batch");
+        let mdl = self.model.as_ref().expect("model initialized on the first batch");
         let decayed = mdl.decayed(cfg.decay);
         let init = !mdl.initialized;
-        let max_iters = cfg.inner_cap(driven_batches);
+        let max_iters = cfg.inner_cap(self.driven_batches);
         let (rank_results, comm_stats) = World::run(p, |comm| match cfg.base.layout {
             LandmarkLayout::OneD => run_batch_1d(
                 comm,
@@ -714,8 +887,8 @@ pub fn fit_stream_with_backend(
             .collect();
         let fit = harness::assemble_fit(bn, p, outs, comm_stats)?;
         let fin = fin.expect("rank 0 reports the batch statistics");
-        let mdl = model.as_mut().expect("model initialized on the first batch");
-        mdl.fold_batch(decayed, fin, cfg, batch_index, bn);
+        let mdl = self.model.as_mut().expect("model initialized on the first batch");
+        mdl.fold_batch(decayed, fin, cfg, self.batch_index, bn);
         if init {
             if cfg.base.layout == LandmarkLayout::OneFiveD {
                 // The per-grid-row landmark blocks the init batch
@@ -735,44 +908,410 @@ pub fn fit_stream_with_backend(
             }
             mdl.initialized = true;
         }
-        acc.absorb(fit);
-        batch_index += 1;
-        driven_batches += 1;
+        self.acc.absorb(fit);
+        self.batch_index += 1;
+        self.driven_batches += 1;
+        Ok(())
     }
 
-    if acc.batches() == 0 {
-        return Err(VivaldiError::InvalidConfig("the stream yielded no points".into()));
-    }
-    let window = (cfg.window > 0).then(|| {
-        let mdl = model.as_ref().expect("model initialized on the first batch");
-        WindowState {
-            slots: mdl
-                .ring
-                .iter()
-                .map(|s| WindowSlot { batch_index: s.batch_index, points: s.points })
-                .collect(),
-            evictions: mdl.evictions,
-            sums: mdl.sums.clone(),
-            weights: mdl.weights.clone(),
+    /// Close the session and assemble the [`StreamFitResult`] over the
+    /// batches pushed since it (or its restore) started. Errors if no
+    /// batch was ever pushed — same contract as an empty source.
+    pub fn finish(self) -> Result<StreamFitResult, VivaldiError> {
+        if self.acc.batches() == 0 {
+            return Err(VivaldiError::InvalidConfig("the stream yielded no points".into()));
         }
-    });
-    Ok(StreamFitResult {
-        n_total: acc.assignments.len(),
-        batches: acc.batches(),
-        iterations: acc.iterations,
-        batch_iterations: acc.batch_iterations,
-        objective_curve: acc.objective_curve,
-        converged: acc.converged,
-        peak_mem: acc.peak_mem,
-        rank_peaks: acc.rank_peaks,
-        comm_stats: acc.comm_stats,
-        timings: acc.timings,
-        ranks: p,
-        landmark_refreshes: refreshes,
-        batch_points: acc.batch_points,
-        window,
-        assignments: acc.assignments,
-    })
+        let window = (self.cfg.window > 0).then(|| {
+            let mdl = self.model.as_ref().expect("model initialized on the first batch");
+            WindowState {
+                slots: mdl
+                    .ring
+                    .iter()
+                    .map(|s| WindowSlot { batch_index: s.batch_index, points: s.points })
+                    .collect(),
+                evictions: mdl.evictions,
+                sums: mdl.sums.clone(),
+                weights: mdl.weights.clone(),
+            }
+        });
+        let acc = self.acc;
+        Ok(StreamFitResult {
+            n_total: acc.assignments.len(),
+            batches: acc.batches(),
+            iterations: acc.iterations,
+            batch_iterations: acc.batch_iterations,
+            objective_curve: acc.objective_curve,
+            converged: acc.converged,
+            peak_mem: acc.peak_mem,
+            rank_peaks: acc.rank_peaks,
+            comm_stats: acc.comm_stats,
+            timings: acc.timings,
+            ranks: self.p,
+            landmark_refreshes: self.refreshes,
+            batch_points: acc.batch_points,
+            window,
+            assignments: acc.assignments,
+        })
+    }
+}
+
+/// Snapshot container magic.
+const SNAP_MAGIC: &[u8; 4] = b"VSTM";
+/// Version byte of the [`StreamSession::snapshot`] format. v1 covers
+/// the full carried model — landmarks, per-grid-row `l_blocks`, the
+/// host or block-cyclic W factors, sums/weights, the eviction ring —
+/// plus the schedule counters. It does **not** cover the landmark
+/// reservoir (such sessions refuse to snapshot rather than silently
+/// dropping refresh state).
+pub const SNAPSHOT_VERSION: u8 = 1;
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64s(out: &mut Vec<u8>, v: &[u64]) {
+    put_u64(out, v.len() as u64);
+    for &x in v {
+        put_u64(out, x);
+    }
+}
+
+fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
+    put_u64(out, v.len() as u64);
+    for &x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_f64s(out: &mut Vec<u8>, v: &[f64]) {
+    put_u64(out, v.len() as u64);
+    for &x in v {
+        put_f64(out, x);
+    }
+}
+
+fn put_matrix(out: &mut Vec<u8>, m: &DenseMatrix) {
+    put_u64(out, m.rows() as u64);
+    put_u64(out, m.cols() as u64);
+    put_f32s(out, m.data());
+}
+
+/// Bounds-checked little-endian reader for the snapshot format: every
+/// decode failure is an [`VivaldiError::InvalidConfig`] naming the
+/// field, never a panic — snapshot bytes cross process boundaries.
+struct SnapReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> SnapReader<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], VivaldiError> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len()).ok_or_else(|| {
+            VivaldiError::InvalidConfig(format!("snapshot truncated reading {what}"))
+        })?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8, VivaldiError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn usize(&mut self, what: &str) -> Result<usize, VivaldiError> {
+        let b = self.take(8, what)?;
+        usize::try_from(u64::from_le_bytes(b.try_into().expect("8 bytes"))).map_err(|_| {
+            VivaldiError::InvalidConfig(format!("snapshot field {what} overflows usize"))
+        })
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64, VivaldiError> {
+        let b = self.take(8, what)?;
+        Ok(f64::from_le_bytes(b.try_into().expect("8 bytes")))
+    }
+
+    fn elems(&mut self, size: usize, what: &str) -> Result<&'a [u8], VivaldiError> {
+        let n = self.usize(what)?;
+        let bytes = n.checked_mul(size).ok_or_else(|| {
+            VivaldiError::InvalidConfig(format!("snapshot length for {what} overflows"))
+        })?;
+        self.take(bytes, what)
+    }
+
+    fn u64s(&mut self, what: &str) -> Result<Vec<u64>, VivaldiError> {
+        let b = self.elems(8, what)?;
+        Ok(b.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().expect("8 bytes"))).collect())
+    }
+
+    fn f32s(&mut self, what: &str) -> Result<Vec<f32>, VivaldiError> {
+        let b = self.elems(4, what)?;
+        Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes"))).collect())
+    }
+
+    fn f64s(&mut self, what: &str) -> Result<Vec<f64>, VivaldiError> {
+        let b = self.elems(8, what)?;
+        Ok(b.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().expect("8 bytes"))).collect())
+    }
+
+    fn matrix(&mut self, what: &str) -> Result<DenseMatrix, VivaldiError> {
+        let rows = self.usize(what)?;
+        let cols = self.usize(what)?;
+        let data = self.f32s(what)?;
+        if rows.checked_mul(cols) != Some(data.len()) {
+            return Err(VivaldiError::InvalidConfig(format!(
+                "snapshot matrix {what} has {} values for a {rows}x{cols} shape",
+                data.len()
+            )));
+        }
+        Ok(DenseMatrix::from_vec(rows, cols, data))
+    }
+}
+
+impl StreamSession {
+    /// Serialize the session — the carried model plus the schedule
+    /// counters — into the versioned, dependency-free snapshot format
+    /// (magic `VSTM`, version byte, little-endian fields; see the
+    /// README's serving section). Factors and sums are written as raw
+    /// f32/f64 bit patterns and nothing is recomputed on restore, so
+    /// restore-then-ingest is **bit-identical** to never having
+    /// snapshotted (pinned by `rust/tests/service.rs`).
+    ///
+    /// Sessions with a landmark reservoir refuse to snapshot: v1 does
+    /// not serialize the reservoir's sample, and silently dropping it
+    /// would change later refreshes.
+    pub fn snapshot(&self) -> Result<Vec<u8>, VivaldiError> {
+        if self.cfg.reservoir > 0 {
+            return Err(VivaldiError::InvalidConfig(
+                "snapshot v1 does not cover the landmark reservoir; run the session with \
+                 reservoir = 0 to snapshot it"
+                    .into(),
+            ));
+        }
+        let mut out = Vec::new();
+        out.extend_from_slice(SNAP_MAGIC);
+        out.push(SNAPSHOT_VERSION);
+        put_u64(&mut out, self.p as u64);
+        put_u64(&mut out, self.batch_index as u64);
+        put_u64(&mut out, self.driven_batches as u64);
+        put_u64(&mut out, self.refreshes as u64);
+        let Some(mdl) = self.model.as_ref() else {
+            out.push(0);
+            return Ok(out);
+        };
+        out.push(1);
+        put_matrix(&mut out, &mdl.landmarks);
+        put_u64(&mut out, mdl.l_blocks.len() as u64);
+        for b in &mdl.l_blocks {
+            put_matrix(&mut out, b);
+        }
+        match &mdl.host {
+            None => out.push(0),
+            Some(h) => {
+                out.push(1);
+                put_matrix(&mut out, &h.w);
+                put_u64(&mut out, h.solver.dim() as u64);
+                put_f64(&mut out, h.solver.ridge);
+                put_f64s(&mut out, h.solver.lower());
+            }
+        }
+        put_u64(&mut out, mdl.dist_solvers.len() as u64);
+        for s in &mdl.dist_solvers {
+            let bc = s.block_cyclic();
+            put_u64(&mut out, bc.m() as u64);
+            put_u64(&mut out, bc.q() as u64);
+            put_u64(&mut out, bc.panel_width() as u64);
+            put_u64(&mut out, s.my_idx() as u64);
+            put_f64(&mut out, s.ridge);
+            put_u64(&mut out, s.lower_panels().len() as u64);
+            for blk in s.lower_panels() {
+                put_f64s(&mut out, blk);
+            }
+            let panels = s.w_panels();
+            put_u64(&mut out, panels.cols.len() as u64);
+            for blk in &panels.cols {
+                put_f32s(&mut out, blk);
+            }
+        }
+        put_f32s(&mut out, &mdl.sums);
+        put_f64s(&mut out, &mdl.weights);
+        put_u64(&mut out, mdl.ring.len() as u64);
+        for slot in &mdl.ring {
+            put_u64(&mut out, slot.batch_index as u64);
+            put_u64(&mut out, slot.points as u64);
+            put_f32s(&mut out, &slot.sums);
+            put_u64s(&mut out, &slot.sizes);
+        }
+        put_u64(&mut out, mdl.evictions as u64);
+        out.push(u8::from(mdl.has_history));
+        out.push(u8::from(mdl.initialized));
+        Ok(out)
+    }
+
+    /// Rebuild a session from [`Self::snapshot`] bytes. The caller
+    /// supplies the [`StreamConfig`] the snapshotted session ran with
+    /// (the snapshot stores model state, not configuration); shape
+    /// mismatches between the two are rejected loudly. The restored
+    /// model is byte-for-byte the saved one — factors installed via
+    /// the solvers' `from_raw`, nothing re-factored — so ingesting
+    /// after a restore is bit-identical to never having snapshotted.
+    pub fn restore(cfg: StreamConfig, bytes: &[u8]) -> Result<StreamSession, VivaldiError> {
+        fn bad(what: impl Into<String>) -> VivaldiError {
+            VivaldiError::InvalidConfig(format!("snapshot: {}", what.into()))
+        }
+        if cfg.reservoir > 0 {
+            return Err(bad("v1 does not cover the landmark reservoir (reservoir must be 0)"));
+        }
+        let mut r = SnapReader { buf: bytes, pos: 0 };
+        if r.take(4, "magic")? != SNAP_MAGIC {
+            return Err(bad("bad magic (not a stream snapshot)"));
+        }
+        let version = r.u8("version")?;
+        if version != SNAPSHOT_VERSION {
+            return Err(bad(format!(
+                "unsupported version {version} (this build reads v{SNAPSHOT_VERSION})"
+            )));
+        }
+        let p = r.usize("ranks")?;
+        let batch_index = r.usize("batch index")?;
+        let driven_batches = r.usize("driven batches")?;
+        let refreshes = r.usize("refreshes")?;
+        let mut sess = StreamSession::new(p, cfg)?;
+        sess.batch_index = batch_index;
+        sess.driven_batches = driven_batches;
+        sess.refreshes = refreshes;
+        let k = sess.cfg.base.k;
+        let m = sess.cfg.base.m;
+        if r.u8("model flag")? == 0 {
+            if r.pos != bytes.len() {
+                return Err(bad("trailing bytes after the payload"));
+            }
+            return Ok(sess);
+        }
+        let landmarks = r.matrix("landmarks")?;
+        if landmarks.rows() != m {
+            return Err(bad(format!(
+                "landmark count {} does not match the config's m = {m}",
+                landmarks.rows()
+            )));
+        }
+        let n_blocks = r.usize("landmark block count")?;
+        if n_blocks > m {
+            return Err(bad("more landmark blocks than landmarks"));
+        }
+        let mut l_blocks = Vec::with_capacity(n_blocks);
+        for _ in 0..n_blocks {
+            l_blocks.push(r.matrix("landmark block")?);
+        }
+        let host = if r.u8("host flag")? == 1 {
+            let w = r.matrix("host W")?;
+            let dim = r.usize("host factor dim")?;
+            let ridge = r.f64("host ridge")?;
+            let lower = r.f64s("host factor")?;
+            if w.rows() != m || w.cols() != m || dim != m || lower.len() != m * m {
+                return Err(bad("host W state does not match the config's m"));
+            }
+            Some(HostW { w, solver: SpdSolver::from_raw(lower, dim, ridge) })
+        } else {
+            None
+        };
+        let n_solvers = r.usize("panel solver count")?;
+        if n_solvers > m {
+            return Err(bad("more panel solvers than landmarks"));
+        }
+        let mut dist_solvers = Vec::with_capacity(n_solvers);
+        for idx in 0..n_solvers {
+            let sm = r.usize("panel deal m")?;
+            let q = r.usize("panel deal q")?;
+            let nb = r.usize("panel width")?;
+            let my_idx = r.usize("panel owner index")?;
+            let ridge = r.f64("panel ridge")?;
+            if sm != m || q == 0 || q > sm || nb == 0 || my_idx != idx || my_idx >= q {
+                return Err(bad("panel solver geometry is inconsistent"));
+            }
+            let bc = BlockCyclic::with_panel(sm, q, nb);
+            let owned = bc.owned_panels(my_idx);
+            let n_lower = r.usize("factor block count")?;
+            if n_lower != owned.len() {
+                return Err(bad("factor block count does not match the panel deal"));
+            }
+            let mut lower = Vec::with_capacity(n_lower);
+            for &t in &owned {
+                let (lo, hi) = bc.panel_bounds(t);
+                let blk = r.f64s("factor block")?;
+                let expect: usize = (lo..hi).map(|c| sm - c).sum();
+                if blk.len() != expect {
+                    return Err(bad("factor block size does not match its panel"));
+                }
+                lower.push(blk);
+            }
+            let n_cols = r.usize("W panel block count")?;
+            if n_cols != owned.len() {
+                return Err(bad("W panel block count does not match the panel deal"));
+            }
+            let mut cols = Vec::with_capacity(n_cols);
+            for &t in &owned {
+                let (lo, hi) = bc.panel_bounds(t);
+                let blk = r.f32s("W panel block")?;
+                if blk.len() != sm * (hi - lo) {
+                    return Err(bad("W panel block size does not match its panel"));
+                }
+                cols.push(blk);
+            }
+            let panels = super::solve::WPanels { bc, my_idx, cols };
+            dist_solvers.push(DistSpdSolver::from_raw(bc, my_idx, lower, panels, ridge));
+        }
+        let sums = r.f32s("carried sums")?;
+        let weights = r.f64s("carried weights")?;
+        if sums.len() != k * m || weights.len() != k {
+            return Err(bad("carried model does not match the config's k and m"));
+        }
+        let n_slots = r.usize("ring slot count")?;
+        if sess.cfg.window == 0 && n_slots > 0 {
+            return Err(bad("ring slots in a snapshot of a window-less stream"));
+        }
+        if n_slots > sess.cfg.window {
+            return Err(bad("more ring slots than the window holds"));
+        }
+        let mut ring = VecDeque::with_capacity(n_slots);
+        for _ in 0..n_slots {
+            let slot_batch = r.usize("slot batch index")?;
+            let points = r.usize("slot points")?;
+            let s_sums = r.f32s("slot sums")?;
+            let s_sizes = r.u64s("slot sizes")?;
+            if s_sums.len() != k * m || s_sizes.len() != k {
+                return Err(bad("ring slot does not match the config's k and m"));
+            }
+            ring.push_back(RingSlot {
+                batch_index: slot_batch,
+                points,
+                sums: s_sums,
+                sizes: s_sizes,
+            });
+        }
+        let evictions = r.usize("evictions")?;
+        let has_history = r.u8("history flag")? != 0;
+        let initialized = r.u8("init flag")? != 0;
+        if r.pos != bytes.len() {
+            return Err(bad("trailing bytes after the payload"));
+        }
+        sess.model = Some(StreamModel {
+            landmarks,
+            l_blocks,
+            host,
+            dist_solvers,
+            sums,
+            weights,
+            ring,
+            evictions,
+            has_history,
+            initialized,
+        });
+        Ok(sess)
+    }
 }
 
 /// Select the initial landmark set from the first batch (or the
@@ -1346,8 +1885,10 @@ mod tests {
         // bad decay.
         let cfg = StreamConfig { decay: 0.0, ..rings_cfg(8, 32) };
         assert!(matches!(run(&cfg, 1), Err(VivaldiError::InvalidConfig(_))));
-        // zero entry in the inner-iteration schedule.
-        let cfg = StreamConfig { inner_iters: vec![2, 0], ..rings_cfg(8, 32) };
+        // a schedule that *starts* at 0 has no warm model to classify
+        // under — rejected when the first driven batch arrives, not at
+        // config time (0 entries are legal once a >= 1 batch has run).
+        let cfg = StreamConfig { inner_iters: vec![0], ..rings_cfg(8, 32) };
         assert!(matches!(run(&cfg, 1), Err(VivaldiError::InvalidConfig(_))));
         // window + landmark refresh are mutually exclusive.
         let cfg = StreamConfig {
@@ -1398,6 +1939,99 @@ mod tests {
             fit_stream(8, &mut small_src, &cfg2),
             Err(VivaldiError::InvalidConfig(_))
         ));
+    }
+
+    #[test]
+    fn zero_inner_iters_is_classify_only() {
+        // Schedule [2, 0]: every batch after the first is labeled under
+        // the carried model and folds nothing — the carried sums and
+        // weights at the end of the stream are bitwise the ones the
+        // first batch left behind.
+        let ds = synth::gaussian_blobs(256, 4, 2, 4.0, 47);
+        let backend = crate::backend::NativeBackend::new();
+        let cfg = StreamConfig {
+            base: ApproxConfig { k: 2, m: 16, max_iters: 30, ..Default::default() },
+            batch: 64,
+            inner_iters: vec![2, 0],
+            ..Default::default()
+        };
+        let mut sess = StreamSession::new(4, cfg.clone()).unwrap();
+        sess.push_batch(PointBlock::Dense(ds.points.row_block(0, 64)), &backend).unwrap();
+        assert!(sess.is_warm());
+        let (sums_1, weights_1) = {
+            let (s, w) = sess.carried_sums().unwrap();
+            (s.to_vec(), w.to_vec())
+        };
+        sess.push_batch(PointBlock::Dense(ds.points.row_block(64, 128)), &backend).unwrap();
+        let (s, w) = sess.carried_sums().unwrap();
+        assert_eq!(s, &sums_1[..], "a 0-iteration batch must leave the sums bitwise untouched");
+        assert_eq!(w, &weights_1[..]);
+        assert_eq!(sess.points_seen(), 128, "classified points are still reported");
+        // The same schedule through the source-driven entry point: one
+        // driven batch, then classify-only for the rest of the stream.
+        let mut src = MatrixSource::new(&ds.points);
+        let out = fit_stream(4, &mut src, &cfg).unwrap();
+        assert_eq!(out.batch_iterations, vec![2, 0, 0, 0]);
+        assert_eq!(out.iterations, 2);
+        assert_eq!(out.assignments.len(), 256);
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrips_bit_identically() {
+        // Snapshot after batch 1, restore, push the remaining batches:
+        // the carried model, the new batches' assignments, and the
+        // objective curve are exactly `==` the unsnapshotted session's.
+        // (The cross-layout, multi-rank wall lives in
+        // rust/tests/service.rs; this pins the 1D round-trip and the
+        // decode error paths.)
+        let ds = synth::gaussian_blobs(192, 4, 2, 4.0, 11);
+        let backend = crate::backend::NativeBackend::new();
+        let cfg = StreamConfig {
+            base: ApproxConfig { k: 2, m: 16, max_iters: 10, ..Default::default() },
+            batch: 64,
+            ..Default::default()
+        };
+        let mut full = StreamSession::new(1, cfg.clone()).unwrap();
+        for b in 0..3 {
+            let block = ds.points.row_block(64 * b, 64 * (b + 1));
+            full.push_batch(PointBlock::Dense(block), &backend).unwrap();
+        }
+        let mut head = StreamSession::new(1, cfg.clone()).unwrap();
+        head.push_batch(PointBlock::Dense(ds.points.row_block(0, 64)), &backend).unwrap();
+        let snap = head.snapshot().unwrap();
+        let mut resumed = StreamSession::restore(cfg.clone(), &snap).unwrap();
+        for b in 1..3 {
+            let block = ds.points.row_block(64 * b, 64 * (b + 1));
+            resumed.push_batch(PointBlock::Dense(block), &backend).unwrap();
+        }
+        let (fs, fw) = full.carried_sums().unwrap();
+        let (rs, rw) = resumed.carried_sums().unwrap();
+        assert_eq!(fs, rs, "restore-then-ingest must be bit-identical to never snapshotting");
+        assert_eq!(fw, rw);
+        let f = full.finish().unwrap();
+        let r = resumed.finish().unwrap();
+        // The resumed result covers the post-restore batches only:
+        // exactly the tail of the full run.
+        assert_eq!(r.assignments, f.assignments[64..].to_vec());
+        assert_eq!(r.objective_curve, f.objective_curve[1..].to_vec());
+        // Garbage and truncation are loud errors, never panics.
+        assert!(matches!(
+            StreamSession::restore(cfg.clone(), b"not a snapshot"),
+            Err(VivaldiError::InvalidConfig(_))
+        ));
+        let mut truncated = snap.clone();
+        truncated.truncate(snap.len() - 3);
+        assert!(matches!(
+            StreamSession::restore(cfg.clone(), &truncated),
+            Err(VivaldiError::InvalidConfig(_))
+        ));
+        // Reservoir sessions refuse to snapshot (v1 has no reservoir).
+        let res_cfg = StreamConfig { reservoir: 64, ..cfg };
+        let mut res_sess = StreamSession::new(1, res_cfg).unwrap();
+        res_sess
+            .push_batch(PointBlock::Dense(ds.points.row_block(0, 64)), &backend)
+            .unwrap();
+        assert!(matches!(res_sess.snapshot(), Err(VivaldiError::InvalidConfig(_))));
     }
 
     #[test]

@@ -331,6 +331,71 @@ pub fn landmark_sparse_feasibility(
     f
 }
 
+/// Verdict of one multi-tenant admission check
+/// ([`crate::runtime::tenants`]): whether a new tenant's closed-form
+/// resident bytes ([`crate::model::analytic::tenant_state_bytes`])
+/// fit in what the global budget has left after the already-open
+/// tenants. Admission is **all closed form** — no allocation is
+/// attempted to find out, and an over-budget open is rejected loudly
+/// with the feasibility report rather than queued.
+#[derive(Debug, Clone, Copy)]
+pub struct TenantAdmission {
+    /// Closed-form bytes the tenant would pin while open.
+    pub tenant_bytes: u64,
+    /// Sum of the already-admitted tenants' resident bytes.
+    pub resident_before: u64,
+    /// The global service budget.
+    pub budget: u64,
+    /// `resident_before + tenant_bytes <= budget`.
+    pub admitted: bool,
+}
+
+impl TenantAdmission {
+    /// Budget left before this tenant: what a rejection report is
+    /// evaluated against.
+    pub fn remaining(&self) -> u64 {
+        self.budget.saturating_sub(self.resident_before)
+    }
+}
+
+/// Admission check for one tenant of the multi-tenant stream service:
+/// the tenant's [`crate::model::analytic::tenant_state_bytes`] closed
+/// form against the budget minus the resident tenants.
+#[allow(clippy::too_many_arguments)]
+pub fn tenant_admission(
+    d: usize,
+    m: usize,
+    p: usize,
+    batch: usize,
+    k: usize,
+    window: usize,
+    resident_before: u64,
+    budget: u64,
+) -> TenantAdmission {
+    let tenant_bytes = crate::model::analytic::tenant_state_bytes(m, d, batch, p, k, window);
+    let admitted = resident_before.saturating_add(tenant_bytes) <= budget;
+    TenantAdmission { tenant_bytes, resident_before, budget, admitted }
+}
+
+/// The feasibility report a rejected `open` prints: the standard
+/// closed-form rows ([`landmark_stream_window_feasibility`]) evaluated
+/// against the budget **left** after the already-open tenants — the
+/// same OOM report the one-shot CLI prints, scoped to what this
+/// tenant actually had available. The stream length is irrelevant to
+/// a warm tenant, so the batch stands in for n.
+pub fn tenant_rejection_report(
+    d: usize,
+    m: usize,
+    p: usize,
+    batch: usize,
+    k: usize,
+    window: usize,
+    adm: &TenantAdmission,
+) -> Feasibility {
+    let mem = MemModel { budget: adm.remaining(), repl_factor: 1.0, redist_factor: 0.0 };
+    landmark_stream_window_feasibility(batch, d, m, p, batch, k, window, &mem)
+}
+
 /// Scaled-down experiment scale (paper values in comments).
 #[derive(Debug, Clone)]
 pub struct Scale {
@@ -515,6 +580,30 @@ mod tests {
         let tiny = MemModel { budget: 1024, repl_factor: 1.0, redist_factor: 0.0 };
         let f3 = landmark_feasibility(4096, 2, 512, 4, &tiny);
         assert!(!f3.exact_fits && !f3.landmark_fits && !f3.recommends_landmark());
+    }
+
+    #[test]
+    fn tenant_admission_sums_against_the_budget() {
+        let (d, m, p, batch, k, w) = (8, 64, 4, 256, 4, 2);
+        let one = crate::model::analytic::tenant_state_bytes(m, d, batch, p, k, w);
+        // Exactly two tenants fit in a 2×-plus-slack budget.
+        let budget = 2 * one + one / 2;
+        let a = tenant_admission(d, m, p, batch, k, w, 0, budget);
+        assert!(a.admitted);
+        assert_eq!(a.tenant_bytes, one);
+        let b = tenant_admission(d, m, p, batch, k, w, one, budget);
+        assert!(b.admitted);
+        let c = tenant_admission(d, m, p, batch, k, w, 2 * one, budget);
+        assert!(!c.admitted, "the third tenant must be rejected, not queued");
+        assert_eq!(c.remaining(), budget - 2 * one);
+        // The rejection report is evaluated against what was left, and
+        // its windowed-stream row agrees with the admission verdict.
+        let rep = tenant_rejection_report(d, m, p, batch, k, w, &c);
+        assert_eq!(rep.budget, c.remaining());
+        assert!(!rep.landmark_stream_window_fits);
+        // Unlimited budget admits anything.
+        let open = tenant_admission(d, m, p, batch, k, w, u64::MAX / 2, u64::MAX);
+        assert!(open.admitted);
     }
 
     #[test]

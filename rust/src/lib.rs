@@ -238,6 +238,27 @@
 //! [`model::analytic::local_flops_gram`] (plus the `cluster_sums` /
 //! `expand` forms) turn measured seconds into achieved GFLOP/s.
 //!
+//! ## When many streams must stay warm: the tenant service
+//!
+//! A fitted stream model is tiny, so the serving problem is hosting
+//! *many* of them. [`runtime::tenants`] is clustering-as-a-service on
+//! top of the streaming driver: a [`runtime::tenants::TenantService`]
+//! keeps one warm [`approx::stream::StreamSession`] per tenant under a
+//! global memory budget. Opens are admission-controlled by the closed
+//! form [`model::analytic::tenant_state_bytes`] — an over-budget open
+//! is rejected loudly with the feasibility report, never queued —
+//! ingests run the normal mini-batch machinery, `classify` is the
+//! zero-inner-iteration fast path (a `0` in the `inner_iters` schedule
+//! leaves the carried sums bitwise untouched), and
+//! [`approx::stream::StreamSession::snapshot`] /
+//! [`approx::stream::StreamSession::restore`] serialize a session to
+//! versioned dependency-free bytes such that restore-then-ingest is
+//! **bit-identical** to never snapshotting (`rust/tests/service.rs`
+//! pins exact `==` at p ∈ {1, 4}, both layouts). `vivaldi serve
+//! --script FILE` drives the service from a deterministic request
+//! script; `--threads N` shards tenants across workers with fixed
+//! ownership, so the output is identical at every thread count.
+//!
 //! See `DESIGN.md` for the full system inventory and the experiment
 //! index, and `EXPERIMENTS.md` for the paper-vs-measured record.
 

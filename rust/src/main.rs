@@ -8,6 +8,7 @@
 //! vivaldi weak-scaling     Fig. 2 (+ --breakdown = Fig. 3)
 //! vivaldi strong-scaling   Fig. 4 (+ --breakdown = Fig. 5)
 //! vivaldi sliding-window   Fig. 6 speedup table
+//! vivaldi serve            multi-tenant stream service (request script)
 //! vivaldi comm-table       Table I counted-vs-analytic volumes
 //! vivaldi summary          §VI headline aggregates
 //! vivaldi datasets         Table II dataset card
@@ -40,6 +41,7 @@ fn main() {
         "landmark-table" => cmd_figures(rest, Figure::LandmarkTable),
         "comm-table" => cmd_figures(rest, Figure::CommTable),
         "summary" => cmd_figures(rest, Figure::Summary),
+        "serve" => cmd_serve(rest),
         "datasets" => cmd_datasets(),
         "artifacts-check" => cmd_artifacts_check(),
         "help" | "--help" | "-h" => {
@@ -75,7 +77,8 @@ fn print_help() {
          \x20                   (0 = infinite; excludes --refresh-every)\n\
          \x20                   [--inner-iters N[,N2,...]] — per-batch inner\n\
          \x20                   iteration schedule (last entry repeats; 1 =\n\
-         \x20                   pure online mode)\n\
+         \x20                   pure online mode; 0 = classify-only, the\n\
+         \x20                   carried model stays bitwise untouched)\n\
          \x20                   [--data FILE [--d D]] — stream a libSVM file\n\
          \x20                   off disk instead of generated data\n\
          \x20                   [--sparse] — nnz-bounded CSR lane (uniform\n\
@@ -91,6 +94,11 @@ fn print_help() {
          \x20 landmark-table    landmark quality/footprint table (m sweep:\n\
          \x20                   NMI, peak memory, counted volume, wall)\n\
          \x20 sliding-window    Fig. 6 speedup over the single-device baseline\n\
+         \x20 serve             multi-tenant stream service: --script FILE\n\
+         \x20                   [--threads N] [--budget BYTES] — runs a\n\
+         \x20                   deterministic request script (open/ingest/\n\
+         \x20                   classify/snapshot/restore/close); over-budget\n\
+         \x20                   opens are rejected with a feasibility report\n\
          \x20 comm-table        Table I: counted vs analytic communication\n\
          \x20 summary           §VI headline aggregates\n\
          \x20 datasets          Table II dataset card\n\
@@ -736,9 +744,12 @@ fn cmd_run_landmark_stream(
         .map(|v| {
             v.split(',')
                 .map(|s| match s.trim().parse::<usize>() {
-                    Ok(x) if x >= 1 => x,
+                    Ok(x) => x,
                     _ => {
-                        eprintln!("--inner-iters takes comma-separated integers >= 1");
+                        eprintln!(
+                            "--inner-iters takes comma-separated integers >= 0 \
+                             (0 = classify-only)"
+                        );
                         std::process::exit(2);
                     }
                 })
@@ -879,6 +890,51 @@ fn cmd_figures(args: &[String], which: Figure) -> i32 {
         }
     }
     0
+}
+
+/// `vivaldi serve --script FILE [--threads N] [--budget BYTES]`: run a
+/// deterministic multi-tenant request script (see
+/// `runtime::tenants::run_script` for the grammar) and print its
+/// per-request lines plus the per-tenant summary.
+fn cmd_serve(args: &[String]) -> i32 {
+    let f = Flags { args };
+    let path = match f.get("--script") {
+        Some(p) => p.to_string(),
+        None => {
+            eprintln!("serve needs --script FILE (a line-oriented tenant request script)");
+            return 2;
+        }
+    };
+    let threads = f.usize_or("--threads", 1);
+    let budget = match f.get("--budget") {
+        None => None,
+        Some(v) => match v.parse::<u64>() {
+            Ok(b) => Some(b),
+            Err(_) => {
+                eprintln!("bad --budget byte count {v:?}");
+                return 2;
+            }
+        },
+    };
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("cannot read script {path:?}: {e}");
+            return 2;
+        }
+    };
+    match vivaldi::runtime::tenants::run_script(&text, threads, budget) {
+        Ok(lines) => {
+            for line in lines {
+                println!("{line}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("serve failed: {e}");
+            1
+        }
+    }
 }
 
 fn cmd_datasets() -> i32 {

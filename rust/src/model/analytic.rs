@@ -250,6 +250,29 @@ pub fn stream_window_peak_bytes(
     stream_init_peak_bytes(m, d, batch, p) + window as u64 * slot
 }
 
+/// Resident bytes of one **warm tenant** of the multi-tenant stream
+/// service ([`crate::runtime::tenants`]): the driver-held carried
+/// model — the m×d f32 landmark set, the k×m f32 cluster sums, the k
+/// f64 weights — plus the worst-rank windowed batch peak
+/// ([`stream_window_peak_bytes`]) an ingest through that tenant
+/// charges (which already includes the factored W state and the
+/// eviction ring). This is the closed form admission control sums
+/// across open tenants and checks against the global budget: a tenant
+/// is admitted iff `resident + tenant_state_bytes(..) <= budget`.
+pub fn tenant_state_bytes(
+    m: usize,
+    d: usize,
+    batch: usize,
+    p: usize,
+    k: usize,
+    window: usize,
+) -> u64 {
+    4 * (m * d) as u64
+        + 4 * (k * m) as u64
+        + 8 * k as u64
+        + stream_window_peak_bytes(m, d, batch, p, k, window)
+}
+
 /// Local FLOPs of one cross-kernel Gram panel C = κ(X, L) with X
 /// (n×d) and L (m×d): the 2·n·m·d multiply-adds of the dot panels plus
 /// the elementwise kernel epilogue (~4 flops/element covers the
@@ -335,6 +358,20 @@ mod tests {
     use super::*;
 
     const C: CostParams = CostParams { n: 96_000, d: 784, k: 64, p: 64 };
+
+    #[test]
+    fn tenant_state_is_model_plus_windowed_peak() {
+        let (m, d, batch, p, k, w) = (256, 64, 1024, 4, 8, 3);
+        let model = 4 * (m * d) as u64 + 4 * (k * m) as u64 + 8 * k as u64;
+        assert_eq!(
+            tenant_state_bytes(m, d, batch, p, k, w),
+            model + stream_window_peak_bytes(m, d, batch, p, k, w)
+        );
+        // Window-less tenants pay no ring; the window term is linear.
+        let base = tenant_state_bytes(m, d, batch, p, k, 0);
+        let slot = 4 * (k * m) as u64 + 8 * k as u64 + 16;
+        assert_eq!(tenant_state_bytes(m, d, batch, p, k, 5), base + 5 * slot);
+    }
 
     #[test]
     fn one_d_words_do_not_shrink_with_p() {

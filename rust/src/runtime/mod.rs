@@ -14,14 +14,21 @@
 //! from the manifest fall back to the native backend and are counted
 //! ([`PjrtBackend::fallbacks`]), so benches can report the PJRT hit
 //! rate honestly.
+//!
+//! The serving half of the runtime is [`tenants`]: a long-lived
+//! multi-tenant stream service (warm models, admission control,
+//! snapshot/restore) that runs on the native backend and needs no
+//! AOT artifacts.
 
 pub mod manifest;
 pub mod service;
 pub mod backend;
+pub mod tenants;
 
 pub use backend::PjrtBackend;
 pub use manifest::{Manifest, OpEntry, TensorSpec};
 pub use service::{DeviceService, HostTensor};
+pub use tenants::{run_script, TenantService, TenantSpec};
 
 /// Default artifacts directory (override with `VIVALDI_ARTIFACTS`).
 pub fn artifacts_dir() -> std::path::PathBuf {

@@ -1,0 +1,912 @@
+//! Clustering-as-a-service: a long-lived, multi-tenant stream driver.
+//!
+//! The 1.5D landmark formulation makes a fitted model tiny — landmark
+//! blocks, factored W panels, and a k×m sum — so the expensive thing
+//! about serving many streams is not any one model but keeping *many*
+//! of them warm at once. [`TenantService`] hosts warm
+//! [`StreamSession`]s keyed by tenant id under a single global memory
+//! budget:
+//!
+//! * **open** — admission-controlled by the closed forms
+//!   ([`crate::model::analytic::tenant_state_bytes`] summed across the
+//!   resident tenants via [`crate::config::tenant_admission`]). An
+//!   over-budget open is rejected **loudly** with the same feasibility
+//!   report the one-shot CLI prints on OOM — never queued.
+//! * **ingest** — a batch of points through the existing `fit_stream`
+//!   machinery (window/decay/tol per tenant), bit-identical to the
+//!   one-shot fit fed the same batches.
+//! * **classify** — the serving fast path: assignments under the
+//!   carried model with zero inner iterations and the model's sums
+//!   bitwise untouched.
+//! * **snapshot** / **restore** — the versioned byte format of
+//!   [`StreamSession::snapshot`]; restore-then-ingest is bit-identical
+//!   to never having snapshotted.
+//! * **close** — the tenant's budget charge is released.
+//!
+//! Two drivers sit on top: [`run_script`] executes a deterministic
+//! line-oriented request script (the CI-able `vivaldi serve --script`
+//! entry point), and its threaded mode shards tenants across N worker
+//! threads with **fixed ownership** (`util::par` style: tenant →
+//! shard at admission, never migrated), so the output is identical at
+//! every thread count — pinned by `rust/tests/service.rs`.
+
+use std::collections::BTreeMap;
+
+use crate::approx::stream::{StreamConfig, StreamSession, SNAPSHOT_VERSION};
+use crate::backend::NativeBackend;
+use crate::config::{tenant_admission, tenant_rejection_report, TenantAdmission};
+use crate::data::{synth, PointBlock, PointsRef};
+use crate::dense::DenseMatrix;
+use crate::VivaldiError;
+
+/// Everything a tenant's streams share: the simulated rank count, the
+/// point dimension, and the full stream configuration (batch, window,
+/// decay, tol, inner-iteration schedule, layout).
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    /// Simulated ranks the tenant's batches shard across.
+    pub p: usize,
+    /// Point dimension of the tenant's stream.
+    pub d: usize,
+    pub cfg: StreamConfig,
+}
+
+impl TenantSpec {
+    /// The tenant's closed-form admission charge while open.
+    pub fn state_bytes(&self) -> u64 {
+        crate::model::analytic::tenant_state_bytes(
+            self.cfg.base.m,
+            self.d,
+            self.cfg.batch,
+            self.p,
+            self.cfg.base.k,
+            self.cfg.window,
+        )
+    }
+}
+
+/// Service-level counters for one tenant, cumulative across snapshots
+/// and restores.
+#[derive(Debug, Clone, Default)]
+pub struct TenantStats {
+    pub ingested_points: usize,
+    pub ingested_batches: usize,
+    /// Inner iterations spent by this tenant's ingests.
+    pub inner_iterations: usize,
+    pub classified_points: usize,
+    pub snapshots: usize,
+    pub restores: usize,
+}
+
+/// What one `ingest` did: useful for request-level reporting.
+#[derive(Debug, Clone, Copy)]
+pub struct IngestReport {
+    pub points: usize,
+    pub batches: usize,
+    pub inner_iterations: usize,
+    /// Final batch-local objective of the last ingested batch.
+    pub objective: f64,
+}
+
+/// What one `classify` saw.
+#[derive(Debug, Clone, Copy)]
+pub struct ClassifyReport {
+    pub points: usize,
+    /// Sum of squared feature-space distances over the batch.
+    pub objective: f64,
+}
+
+struct Tenant {
+    spec: TenantSpec,
+    /// The admission charge held while open (released on close).
+    bytes: u64,
+    /// `None` once closed.
+    session: Option<StreamSession>,
+    /// Last snapshot taken through the service (restore reads it).
+    snapshot: Option<Vec<u8>>,
+    stats: TenantStats,
+    closed: bool,
+}
+
+/// A long-lived host of warm per-tenant [`StreamSession`]s under one
+/// global memory budget (`None` = unlimited — the shard workers of
+/// [`run_script`] run this way because admission was already decided
+/// by the coordinator pass).
+pub struct TenantService {
+    budget: Option<u64>,
+    resident: u64,
+    rejected: usize,
+    tenants: BTreeMap<String, Tenant>,
+    backend: NativeBackend,
+}
+
+impl TenantService {
+    pub fn new(budget: Option<u64>) -> TenantService {
+        TenantService {
+            budget,
+            resident: 0,
+            rejected: 0,
+            tenants: BTreeMap::new(),
+            backend: NativeBackend::new(),
+        }
+    }
+
+    /// Replace the global budget (admission checks from now on use the
+    /// new value; already-resident tenants are never evicted).
+    pub fn set_budget(&mut self, budget: Option<u64>) {
+        self.budget = budget;
+    }
+
+    pub fn budget(&self) -> Option<u64> {
+        self.budget
+    }
+
+    /// Sum of the open tenants' admission charges.
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident
+    }
+
+    /// Opens rejected by admission control so far.
+    pub fn rejected_opens(&self) -> usize {
+        self.rejected
+    }
+
+    /// The admission verdict a spec would get right now, without
+    /// opening anything.
+    pub fn admission_for(&self, spec: &TenantSpec) -> TenantAdmission {
+        tenant_admission(
+            spec.d,
+            spec.cfg.base.m,
+            spec.p,
+            spec.cfg.batch,
+            spec.cfg.base.k,
+            spec.cfg.window,
+            self.resident,
+            self.budget.unwrap_or(u64::MAX),
+        )
+    }
+
+    fn tenant(&self, name: &str) -> Result<&Tenant, VivaldiError> {
+        self.tenants.get(name).ok_or_else(|| {
+            VivaldiError::InvalidConfig(format!("no tenant named {name:?} is open"))
+        })
+    }
+
+    fn open_tenant(&mut self, name: &str) -> Result<&mut Tenant, VivaldiError> {
+        let t = self.tenants.get_mut(name).ok_or_else(|| {
+            VivaldiError::InvalidConfig(format!("no tenant named {name:?} is open"))
+        })?;
+        if t.closed {
+            return Err(VivaldiError::InvalidConfig(format!("tenant {name:?} is closed")));
+        }
+        Ok(t)
+    }
+
+    /// Open a tenant. Admission is all closed form: the spec's
+    /// [`TenantSpec::state_bytes`] against what the budget has left.
+    /// A rejected open returns `Ok` with `admitted = false` — the
+    /// service keeps serving its resident tenants; the caller prints
+    /// the report. Duplicate names and invalid configurations are
+    /// hard errors.
+    pub fn open(&mut self, name: &str, spec: TenantSpec) -> Result<TenantAdmission, VivaldiError> {
+        if self.tenants.contains_key(name) {
+            return Err(VivaldiError::InvalidConfig(format!(
+                "tenant {name:?} is already open (tenant ids are never reused)"
+            )));
+        }
+        validate_spec(&spec)?;
+        let adm = self.admission_for(&spec);
+        if !adm.admitted {
+            self.rejected += 1;
+            return Ok(adm);
+        }
+        let session = StreamSession::new(spec.p, spec.cfg.clone())?;
+        self.resident += adm.tenant_bytes;
+        self.tenants.insert(
+            name.to_string(),
+            Tenant {
+                bytes: adm.tenant_bytes,
+                spec,
+                session: Some(session),
+                snapshot: None,
+                stats: TenantStats::default(),
+                closed: false,
+            },
+        );
+        Ok(adm)
+    }
+
+    /// The spec a tenant was opened with.
+    pub fn spec(&self, name: &str) -> Result<&TenantSpec, VivaldiError> {
+        Ok(&self.tenant(name)?.spec)
+    }
+
+    /// Ingest a block of points: chunked into the tenant's mini-batch
+    /// size and pushed through the stream machinery in order —
+    /// bit-identical to a `fit_stream` source yielding the same rows.
+    pub fn ingest(&mut self, name: &str, points: DenseMatrix) -> Result<IngestReport, VivaldiError> {
+        let backend = self.backend.clone();
+        let t = self.open_tenant(name)?;
+        let sess = t.session.as_mut().expect("open tenants hold a session");
+        let n = points.rows();
+        if n == 0 {
+            return Err(VivaldiError::InvalidConfig(format!(
+                "ingest for tenant {name:?} carries no points"
+            )));
+        }
+        let batch = sess.config().batch;
+        let before_batches = sess.batches_seen();
+        let before_iters = sess.iterations_seen();
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + batch).min(n);
+            sess.push_batch(PointBlock::Dense(points.row_block(lo, hi)), &backend)?;
+            lo = hi;
+        }
+        let rep = IngestReport {
+            points: n,
+            batches: sess.batches_seen() - before_batches,
+            inner_iterations: sess.iterations_seen() - before_iters,
+            objective: sess.last_objective().expect("at least one batch was pushed"),
+        };
+        t.stats.ingested_points += rep.points;
+        t.stats.ingested_batches += rep.batches;
+        t.stats.inner_iterations += rep.inner_iterations;
+        Ok(rep)
+    }
+
+    /// Classify points under the tenant's carried model without
+    /// touching it — zero inner iterations, nothing folded
+    /// ([`StreamSession::classify_batch`]).
+    pub fn classify(
+        &mut self,
+        name: &str,
+        points: &DenseMatrix,
+    ) -> Result<ClassifyReport, VivaldiError> {
+        let backend = self.backend.clone();
+        let t = self.open_tenant(name)?;
+        let sess = t.session.as_ref().expect("open tenants hold a session");
+        let (_assign, minvals) = sess.classify_batch(PointsRef::Dense(points), &backend)?;
+        let rep = ClassifyReport {
+            points: points.rows(),
+            objective: minvals.iter().map(|&v| v as f64).sum(),
+        };
+        t.stats.classified_points += rep.points;
+        Ok(rep)
+    }
+
+    /// Snapshot the tenant's session into the service-held slot and
+    /// return the snapshot size in bytes.
+    pub fn snapshot(&mut self, name: &str) -> Result<usize, VivaldiError> {
+        let t = self.open_tenant(name)?;
+        let bytes = t.session.as_ref().expect("open tenants hold a session").snapshot()?;
+        let len = bytes.len();
+        t.snapshot = Some(bytes);
+        t.stats.snapshots += 1;
+        Ok(len)
+    }
+
+    /// Replace the tenant's session with one restored from its last
+    /// [`Self::snapshot`]. Ingesting after this is bit-identical to
+    /// never having snapshotted.
+    pub fn restore(&mut self, name: &str) -> Result<usize, VivaldiError> {
+        let t = self.open_tenant(name)?;
+        let bytes = t.snapshot.as_ref().ok_or_else(|| {
+            VivaldiError::InvalidConfig(format!("tenant {name:?} has no snapshot to restore"))
+        })?;
+        let sess = StreamSession::restore(t.spec.cfg.clone(), bytes)?;
+        t.session = Some(sess);
+        t.stats.restores += 1;
+        Ok(bytes.len())
+    }
+
+    /// Close the tenant: the session is dropped and its admission
+    /// charge released. Returns the bytes freed. The name stays
+    /// reserved (operations on it keep failing loudly).
+    pub fn close(&mut self, name: &str) -> Result<u64, VivaldiError> {
+        let t = self.open_tenant(name)?;
+        t.closed = true;
+        t.session = None;
+        let freed = t.bytes;
+        self.resident -= freed;
+        Ok(freed)
+    }
+
+    /// Per-tenant counters in name order: `(name, stats, closed)`.
+    pub fn tenant_summaries(&self) -> Vec<(String, TenantStats, bool)> {
+        self.tenants
+            .iter()
+            .map(|(name, t)| (name.clone(), t.stats.clone(), t.closed))
+            .collect()
+    }
+}
+
+/// Spec validation shared by [`TenantService::open`] and the script
+/// coordinator: the session's own configuration wall plus the service
+/// restrictions.
+fn validate_spec(spec: &TenantSpec) -> Result<(), VivaldiError> {
+    if spec.d == 0 {
+        return Err(VivaldiError::InvalidConfig("tenant point dimension must be positive".into()));
+    }
+    if spec.cfg.sparse {
+        return Err(VivaldiError::InvalidConfig(
+            "the tenant service drives dense batches; sparse tenants are not supported".into(),
+        ));
+    }
+    // Runs the full stream-config wall without opening anything.
+    StreamSession::new(spec.p, spec.cfg.clone()).map(|_| ())
+}
+
+// ---------------------------------------------------------------------------
+// The deterministic request script: `vivaldi serve --script FILE`.
+// ---------------------------------------------------------------------------
+
+/// One parsed script request.
+#[derive(Debug, Clone)]
+enum Request {
+    Budget { bytes: u64 },
+    Open { name: String, spec: TenantSpec },
+    Ingest { name: String, n: usize, seed: u64, spread: f64 },
+    Classify { name: String, n: usize, seed: u64, spread: f64 },
+    Snapshot { name: String },
+    Restore { name: String },
+    Close { name: String },
+}
+
+impl Request {
+    fn tenant_name(&self) -> Option<&str> {
+        match self {
+            Request::Budget { .. } => None,
+            Request::Open { name, .. }
+            | Request::Ingest { name, .. }
+            | Request::Classify { name, .. }
+            | Request::Snapshot { name }
+            | Request::Restore { name }
+            | Request::Close { name } => Some(name),
+        }
+    }
+}
+
+fn fmt_bytes(b: u64) -> String {
+    if b == u64::MAX {
+        return "unlimited".into();
+    }
+    if b >= 1 << 30 {
+        format!("{:.2} GiB", b as f64 / (1u64 << 30) as f64)
+    } else if b >= 1 << 20 {
+        format!("{:.2} MiB", b as f64 / (1u64 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.2} KiB", b as f64 / (1u64 << 10) as f64)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// The rejection report: the verdict line plus the same closed-form
+/// feasibility rows the one-shot CLI prints on OOM, evaluated against
+/// what the budget had left ([`tenant_rejection_report`]).
+fn rejection_lines(name: &str, spec: &TenantSpec, adm: &TenantAdmission) -> Vec<String> {
+    let f = tenant_rejection_report(
+        spec.d,
+        spec.cfg.base.m,
+        spec.p,
+        spec.cfg.batch,
+        spec.cfg.base.k,
+        spec.cfg.window,
+        adm,
+    );
+    let verdict = |fits: bool| if fits { "fits" } else { "OOM" };
+    let mut out = vec![format!(
+        "open {name}: REJECTED (needs {}, {} left of {} budget)",
+        fmt_bytes(adm.tenant_bytes),
+        fmt_bytes(adm.remaining()),
+        fmt_bytes(adm.budget),
+    )];
+    out.push(format!("  feasibility @ {} budget/rank:", fmt_bytes(f.budget)));
+    out.push(format!(
+        "    landmark 1D  (m={}): {} [{}]",
+        f.m,
+        fmt_bytes(f.landmark_bytes_per_rank),
+        verdict(f.landmark_fits)
+    ));
+    out.push(format!(
+        "    stream (B={}): {} [{}]",
+        f.stream_batch,
+        fmt_bytes(f.landmark_stream_bytes_per_rank),
+        verdict(f.landmark_stream_fits)
+    ));
+    out.push(format!(
+        "    stream 1.5D block-cyclic W (B={}): {} [{}]",
+        f.stream_batch,
+        fmt_bytes(f.landmark_stream_15d_bytes_per_rank),
+        verdict(f.landmark_stream_15d_fits)
+    ));
+    if f.stream_window > 0 {
+        out.push(format!(
+            "    stream 1.5D windowed (B={}, W={}): {} [{}]",
+            f.stream_batch,
+            f.stream_window,
+            fmt_bytes(f.landmark_stream_window_bytes_per_rank),
+            verdict(f.landmark_stream_window_fits)
+        ));
+    }
+    out
+}
+
+fn parse_script(text: &str) -> Result<Vec<Request>, VivaldiError> {
+    let mut reqs = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let lineno = i + 1;
+        let bad =
+            |msg: String| VivaldiError::InvalidConfig(format!("script line {lineno}: {msg}"));
+        let mut toks = line.split_whitespace();
+        let verb = toks.next().expect("non-empty line has a first token");
+        let rest: Vec<&str> = toks.collect();
+        let name_of = |rest: &[&str]| -> Result<String, VivaldiError> {
+            rest.first()
+                .map(|s| s.to_string())
+                .ok_or_else(|| bad(format!("{verb} needs a tenant name")))
+        };
+        let req = match verb {
+            "budget" => {
+                let v = rest.first().ok_or_else(|| bad("budget needs a byte count".into()))?;
+                let bytes =
+                    v.parse::<u64>().map_err(|_| bad(format!("bad budget byte count {v:?}")))?;
+                Request::Budget { bytes }
+            }
+            "open" => {
+                let name = name_of(&rest)?;
+                let spec = parse_open_spec(&rest[1..], &bad)?;
+                Request::Open { name, spec }
+            }
+            "ingest" | "classify" => {
+                let name = name_of(&rest)?;
+                let (mut n, mut seed, mut spread) = (None, 0u64, 4.0f64);
+                for t in &rest[1..] {
+                    let (key, val) = t
+                        .split_once('=')
+                        .ok_or_else(|| bad(format!("expected key=value, got {t:?}")))?;
+                    match key {
+                        "n" => {
+                            n = Some(
+                                val.parse::<usize>()
+                                    .map_err(|_| bad(format!("bad n {val:?}")))?,
+                            )
+                        }
+                        "seed" => {
+                            seed = val
+                                .parse::<u64>()
+                                .map_err(|_| bad(format!("bad seed {val:?}")))?
+                        }
+                        "spread" => {
+                            spread = val
+                                .parse::<f64>()
+                                .map_err(|_| bad(format!("bad spread {val:?}")))?
+                        }
+                        other => return Err(bad(format!("unknown {verb} key {other:?}"))),
+                    }
+                }
+                let n = n.ok_or_else(|| bad(format!("{verb} needs n=POINTS")))?;
+                if verb == "ingest" {
+                    Request::Ingest { name, n, seed, spread }
+                } else {
+                    Request::Classify { name, n, seed, spread }
+                }
+            }
+            "snapshot" => Request::Snapshot { name: name_of(&rest)? },
+            "restore" => Request::Restore { name: name_of(&rest)? },
+            "close" => Request::Close { name: name_of(&rest)? },
+            other => return Err(bad(format!("unknown verb {other:?}"))),
+        };
+        reqs.push(req);
+    }
+    Ok(reqs)
+}
+
+fn parse_open_spec(
+    kvs: &[&str],
+    bad: &dyn Fn(String) -> VivaldiError,
+) -> Result<TenantSpec, VivaldiError> {
+    use crate::approx::{ApproxConfig, LandmarkLayout};
+    let (mut k, mut m, mut d, mut batch) = (None, None, None, None);
+    let mut p = 1usize;
+    let mut cfg = StreamConfig::default();
+    let mut base = ApproxConfig::default();
+    for t in kvs {
+        let (key, val) =
+            t.split_once('=').ok_or_else(|| bad(format!("expected key=value, got {t:?}")))?;
+        let us =
+            |val: &str| val.parse::<usize>().map_err(|_| bad(format!("bad {key} {val:?}")));
+        match key {
+            "k" => k = Some(us(val)?),
+            "m" => m = Some(us(val)?),
+            "d" => d = Some(us(val)?),
+            "p" => p = us(val)?,
+            "batch" => batch = Some(us(val)?),
+            "window" => cfg.window = us(val)?,
+            "iters" => base.max_iters = us(val)?,
+            "layout" => {
+                base.layout = match val {
+                    "1d" => LandmarkLayout::OneD,
+                    "1.5d" | "15d" => LandmarkLayout::OneFiveD,
+                    other => return Err(bad(format!("unknown layout {other:?}"))),
+                }
+            }
+            "inner" => {
+                cfg.inner_iters = val
+                    .split(',')
+                    .map(|s| s.parse::<usize>().map_err(|_| bad(format!("bad inner {s:?}"))))
+                    .collect::<Result<Vec<_>, _>>()?
+            }
+            "decay" => {
+                cfg.decay =
+                    val.parse::<f64>().map_err(|_| bad(format!("bad decay {val:?}")))?
+            }
+            "tol" => {
+                cfg.tol = val.parse::<f64>().map_err(|_| bad(format!("bad tol {val:?}")))?
+            }
+            "seed" => {
+                base.landmark_seed =
+                    val.parse::<u64>().map_err(|_| bad(format!("bad seed {val:?}")))?
+            }
+            other => return Err(bad(format!("unknown open key {other:?}"))),
+        }
+    }
+    base.k = k.ok_or_else(|| bad("open needs k=CLUSTERS".into()))?;
+    base.m = m.ok_or_else(|| bad("open needs m=LANDMARKS".into()))?;
+    cfg.base = base;
+    cfg.batch = batch.ok_or_else(|| bad("open needs batch=SIZE".into()))?;
+    Ok(TenantSpec { p, d: d.ok_or_else(|| bad("open needs d=DIM".into()))?, cfg })
+}
+
+/// Ledger state the coordinator pass keeps per named tenant.
+struct LedgerTenant {
+    shard: usize,
+    bytes: u64,
+    open: bool,
+    rejected: bool,
+}
+
+/// Execute a request script and return its printed lines.
+///
+/// Deterministic by construction, at any `threads` count:
+///
+/// 1. **Coordinator pass** (script order): parses, validates, and runs
+///    the admission arithmetic — `budget` lines, every `open`'s closed
+///    form against the running resident sum, every `close`'s release.
+///    Admitted tenants are assigned to shard `admitted_index %
+///    threads` — fixed ownership, never migrated.
+/// 2. **Worker pass**: each shard worker owns a private
+///    [`TenantService`] (budget `None`: admission was already decided)
+///    and executes its tenants' requests in script order. Per-tenant
+///    op order is the script's, and tenants never share a worker
+///    mid-stream, so every session computes exactly the sequence the
+///    single-threaded service would.
+///
+/// Output lines are merged back in request order, followed by a
+/// per-tenant summary in name order. The first failing request (by
+/// script position) aborts the run with its error.
+pub fn run_script(
+    text: &str,
+    threads: usize,
+    default_budget: Option<u64>,
+) -> Result<Vec<String>, VivaldiError> {
+    let reqs = parse_script(text)?;
+    let threads = threads.max(1);
+    let mut budget = default_budget;
+    let mut resident: u64 = 0;
+    let mut rejected = 0usize;
+    let mut admitted_count = 0usize;
+    let mut ledger: BTreeMap<String, LedgerTenant> = BTreeMap::new();
+    let mut slots: Vec<Vec<String>> = vec![Vec::new(); reqs.len()];
+
+    // Pass 1: the admission ledger, in script order.
+    for (i, req) in reqs.iter().enumerate() {
+        let fail = |msg: String| {
+            VivaldiError::InvalidConfig(format!("request {} ({msg})", i + 1))
+        };
+        match req {
+            Request::Budget { bytes } => {
+                budget = Some(*bytes);
+                slots[i].push(format!("budget set to {}", fmt_bytes(*bytes)));
+            }
+            Request::Open { name, spec } => {
+                if ledger.contains_key(name) {
+                    return Err(fail(format!("tenant {name:?} already named by an earlier open")));
+                }
+                validate_spec(spec).map_err(|e| fail(format!("open {name}: {e}")))?;
+                let adm = tenant_admission(
+                    spec.d,
+                    spec.cfg.base.m,
+                    spec.p,
+                    spec.cfg.batch,
+                    spec.cfg.base.k,
+                    spec.cfg.window,
+                    resident,
+                    budget.unwrap_or(u64::MAX),
+                );
+                if adm.admitted {
+                    let shard = admitted_count % threads;
+                    admitted_count += 1;
+                    resident += adm.tenant_bytes;
+                    ledger.insert(
+                        name.clone(),
+                        LedgerTenant { shard, bytes: adm.tenant_bytes, open: true, rejected: false },
+                    );
+                    slots[i].push(format!(
+                        "open {name}: admitted ({}, resident {} of {})",
+                        fmt_bytes(adm.tenant_bytes),
+                        fmt_bytes(resident),
+                        fmt_bytes(adm.budget),
+                    ));
+                } else {
+                    rejected += 1;
+                    ledger.insert(
+                        name.clone(),
+                        LedgerTenant { shard: usize::MAX, bytes: 0, open: false, rejected: true },
+                    );
+                    slots[i].extend(rejection_lines(name, spec, &adm));
+                }
+            }
+            Request::Close { name } => {
+                let t = ledger
+                    .get_mut(name)
+                    .ok_or_else(|| fail(format!("close {name}: no such tenant")))?;
+                if t.rejected {
+                    return Err(fail(format!("close {name}: tenant was rejected at open")));
+                }
+                if !t.open {
+                    return Err(fail(format!("close {name}: tenant already closed")));
+                }
+                t.open = false;
+                resident -= t.bytes;
+                slots[i].push(format!(
+                    "close {name}: released {}, resident {}",
+                    fmt_bytes(t.bytes),
+                    fmt_bytes(resident),
+                ));
+            }
+            Request::Ingest { name, .. }
+            | Request::Classify { name, .. }
+            | Request::Snapshot { name }
+            | Request::Restore { name } => {
+                // Validated here (deterministically, in script order);
+                // executed by the owning shard worker in pass 2.
+                let t = ledger
+                    .get(name)
+                    .ok_or_else(|| fail(format!("{name}: no such tenant")))?;
+                if t.rejected {
+                    return Err(fail(format!("{name}: tenant was rejected at open")));
+                }
+                if !t.open {
+                    return Err(fail(format!("{name}: tenant is closed")));
+                }
+            }
+        }
+    }
+
+    // Fixed ownership: every request of a tenant goes to the shard it
+    // was assigned at admission, in script order.
+    let mut shard_reqs: Vec<Vec<usize>> = vec![Vec::new(); threads];
+    for (i, req) in reqs.iter().enumerate() {
+        if let Some(name) = req.tenant_name() {
+            let t = &ledger[name];
+            if !t.rejected {
+                shard_reqs[t.shard].push(i);
+            }
+        }
+    }
+
+    // Pass 2: shard workers execute their tenants' requests.
+    type ShardOut =
+        (Vec<(usize, String)>, Vec<(String, TenantStats, bool)>, Option<(usize, VivaldiError)>);
+    let shard_outs: Vec<ShardOut> = std::thread::scope(|s| {
+        let reqs = &reqs;
+        let handles: Vec<_> = shard_reqs
+            .iter()
+            .map(|idxs| s.spawn(move || run_shard(reqs, idxs)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("service worker panicked")).collect()
+    });
+
+    let mut first_err: Option<(usize, VivaldiError)> = None;
+    let mut all_stats: Vec<(String, TenantStats, bool)> = Vec::new();
+    for (lines, stats, err) in shard_outs {
+        for (i, line) in lines {
+            slots[i].push(line);
+        }
+        all_stats.extend(stats);
+        if let Some((i, e)) = err {
+            if first_err.as_ref().map_or(true, |(fi, _)| i < *fi) {
+                first_err = Some((i, e));
+            }
+        }
+    }
+    if let Some((i, e)) = first_err {
+        return Err(VivaldiError::InvalidConfig(format!("request {}: {e}", i + 1)));
+    }
+
+    let mut out: Vec<String> = slots.into_iter().flatten().collect();
+    out.push("-- service summary --".into());
+    all_stats.sort_by(|a, b| a.0.cmp(&b.0));
+    for (name, st, closed) in all_stats {
+        out.push(format!(
+            "tenant {name}: ingested {} points / {} batches, {} inner iterations, \
+             classified {} points, {} snapshot(s), {} restore(s), {}",
+            st.ingested_points,
+            st.ingested_batches,
+            st.inner_iterations,
+            st.classified_points,
+            st.snapshots,
+            st.restores,
+            if closed { "closed" } else { "open" },
+        ));
+    }
+    out.push(format!("rejected opens: {rejected}"));
+    Ok(out)
+}
+
+/// One shard worker: a private unlimited-budget [`TenantService`]
+/// executing its tenants' requests in script order. Returns the
+/// request-indexed output lines, the per-tenant counters, and the
+/// first failure (execution stops there — later requests of this
+/// shard are not attempted, matching the single-threaded service).
+fn run_shard(reqs: &[Request], idxs: &[usize]) -> ShardRun {
+    let mut svc = TenantService::new(None);
+    let mut lines: Vec<(usize, String)> = Vec::new();
+    for &i in idxs {
+        let out = run_one(&mut svc, &reqs[i]);
+        match out {
+            Ok(Some(line)) => lines.push((i, line)),
+            Ok(None) => {}
+            Err(e) => return (lines, svc.tenant_summaries(), Some((i, e))),
+        }
+    }
+    (lines, svc.tenant_summaries(), None)
+}
+
+type ShardRun =
+    (Vec<(usize, String)>, Vec<(String, TenantStats, bool)>, Option<(usize, VivaldiError)>);
+
+/// Execute one request against a shard's service. `Open`/`Close`
+/// return no line (the coordinator pass already printed theirs);
+/// the heavy verbs return their report line.
+fn run_one(svc: &mut TenantService, req: &Request) -> Result<Option<String>, VivaldiError> {
+    match req {
+        Request::Budget { .. } => Ok(None),
+        Request::Open { name, spec } => {
+            let adm = svc.open(name, spec.clone())?;
+            debug_assert!(adm.admitted, "shard services run with no budget");
+            Ok(None)
+        }
+        Request::Close { name } => {
+            svc.close(name)?;
+            Ok(None)
+        }
+        Request::Ingest { name, n, seed, spread } => {
+            let spec = svc.spec(name)?;
+            let ds = synth::gaussian_blobs(*n, spec.d, spec.cfg.base.k, *spread, *seed);
+            let rep = svc.ingest(name, ds.points)?;
+            Ok(Some(format!(
+                "ingest {name}: {} points in {} batch(es), {} inner iterations, objective {:.6}",
+                rep.points, rep.batches, rep.inner_iterations, rep.objective,
+            )))
+        }
+        Request::Classify { name, n, seed, spread } => {
+            let spec = svc.spec(name)?;
+            let ds = synth::gaussian_blobs(*n, spec.d, spec.cfg.base.k, *spread, *seed);
+            let rep = svc.classify(name, &ds.points)?;
+            Ok(Some(format!(
+                "classify {name}: {} points, objective {:.6}",
+                rep.points, rep.objective,
+            )))
+        }
+        Request::Snapshot { name } => {
+            let len = svc.snapshot(name)?;
+            Ok(Some(format!("snapshot {name}: {len} bytes (v{SNAPSHOT_VERSION})")))
+        }
+        Request::Restore { name } => {
+            let len = svc.restore(name)?;
+            Ok(Some(format!(
+                "restore {name}: restored from {len}-byte snapshot (v{SNAPSHOT_VERSION})"
+            )))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::ApproxConfig;
+
+    fn spec(p: usize, window: usize) -> TenantSpec {
+        TenantSpec {
+            p,
+            d: 4,
+            cfg: StreamConfig {
+                base: ApproxConfig { k: 2, m: 8, max_iters: 10, ..Default::default() },
+                batch: 32,
+                window,
+                ..Default::default()
+            },
+        }
+    }
+
+    #[test]
+    fn admission_math_matches_the_closed_form() {
+        let s = spec(1, 2);
+        let one = s.state_bytes();
+        assert_eq!(
+            one,
+            crate::model::analytic::tenant_state_bytes(8, 4, 32, 1, 2, 2),
+            "spec charge must be the analytic closed form"
+        );
+        // Budget for exactly one tenant: the second open is rejected,
+        // the first keeps serving.
+        let mut svc = TenantService::new(Some(one + one / 2));
+        let a = svc.open("a", s.clone()).unwrap();
+        assert!(a.admitted);
+        assert_eq!(svc.resident_bytes(), one);
+        let b = svc.open("b", s.clone()).unwrap();
+        assert!(!b.admitted, "over-budget open must be rejected, not queued");
+        assert_eq!(svc.rejected_opens(), 1);
+        assert_eq!(b.remaining(), one / 2);
+        // The resident tenant still serves.
+        let ds = synth::gaussian_blobs(64, 4, 2, 4.0, 3);
+        let rep = svc.ingest("a", ds.points).unwrap();
+        assert_eq!(rep.points, 64);
+        assert_eq!(rep.batches, 2);
+        // Close frees the budget; a fresh name is admitted again.
+        assert_eq!(svc.close("a").unwrap(), one);
+        assert_eq!(svc.resident_bytes(), 0);
+        assert!(svc.open("c", s).unwrap().admitted);
+        // Ops on the closed name fail loudly.
+        let ds2 = synth::gaussian_blobs(32, 4, 2, 4.0, 4);
+        assert!(svc.ingest("a", ds2.points).is_err());
+    }
+
+    #[test]
+    fn script_output_is_thread_count_invariant() {
+        let script = "\
+budget 100000000
+open a k=2 m=8 d=4 batch=32 iters=5 seed=1
+open b k=2 m=8 d=4 batch=32 iters=5 seed=2
+open c k=2 m=8 d=4 batch=32 iters=5 seed=3
+ingest a n=64 seed=10
+ingest b n=64 seed=11
+ingest c n=64 seed=12
+snapshot a
+classify b n=32 seed=13
+restore a
+ingest a n=32 seed=14
+close c
+";
+        let one = run_script(script, 1, None).unwrap();
+        let three = run_script(script, 3, None).unwrap();
+        assert_eq!(one, three, "fixed shard ownership must make output thread-invariant");
+        assert!(one.iter().any(|l| l.contains("-- service summary --")));
+        assert!(one.iter().any(|l| l.starts_with("tenant a:")));
+        assert!(one.last().unwrap().starts_with("rejected opens: 0"));
+    }
+
+    #[test]
+    fn script_errors_are_deterministic_and_positional() {
+        // Unknown tenant fails in the coordinator pass.
+        let e = run_script("ingest ghost n=32 seed=1\n", 2, None).unwrap_err();
+        let msg = format!("{e}");
+        assert!(msg.contains("request 1"), "got: {msg}");
+        // Ops on a rejected tenant fail, naming the rejection.
+        let script = "\
+budget 1024
+open t k=2 m=8 d=4 batch=32
+ingest t n=32 seed=1
+";
+        let e = run_script(script, 1, None).unwrap_err();
+        let msg = format!("{e}");
+        assert!(msg.contains("rejected"), "got: {msg}");
+    }
+}

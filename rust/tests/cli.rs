@@ -145,7 +145,9 @@ fn stream_auto_layout_uses_batch_not_n() {
 
 /// `--inner-iters 1` is pure online mode: every driven batch runs
 /// exactly one reduced-rank iteration, so a 4-batch stream reports 4
-/// inner iterations. A zero entry is a loud usage error.
+/// inner iterations. A `0` entry is classify-only — legal once a
+/// warm-up batch has run, a loud runtime error when the schedule
+/// *starts* cold at 0.
 #[test]
 fn stream_inner_iters_schedule() {
     let (code, stdout, stderr) = run(&[
@@ -161,12 +163,22 @@ fn stream_inner_iters_schedule() {
     ]);
     assert_eq!(code, 0, "stderr: {stderr}");
     assert!(stdout.contains("4 batches"), "{stdout}");
+    // Classify-only tail: warm up on batch 0 (one online pass), then
+    // label the remaining three batches without folding — exactly one
+    // inner iteration across the whole stream.
+    let (code, stdout, stderr) = run(&[
+        "run", "--algo", "landmark", "--stream", "--batch", "64", "--n", "256", "--m", "32",
+        "--k", "2", "--gpus", "4", "--iters", "10", "--inner-iters", "1,0",
+    ]);
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(stdout.contains("4 batches, 1 inner iterations"), "{stdout}");
+    // A schedule that starts at 0 has no warm model to classify under.
     let (code, _, stderr) = run(&[
         "run", "--algo", "landmark", "--stream", "--batch", "64", "--n", "256", "--m", "32",
         "--k", "2", "--gpus", "4", "--inner-iters", "0",
     ]);
-    assert_eq!(code, 2, "stderr: {stderr}");
-    assert!(stderr.contains("--inner-iters takes"), "{stderr}");
+    assert_eq!(code, 1, "stderr: {stderr}");
+    assert!(stderr.contains("classify-only needs a warm model"), "{stderr}");
     // Without --stream the schedule has nothing to apply to — a loud
     // usage error, not a silently ignored flag.
     let (code, _, stderr) =
@@ -257,6 +269,48 @@ fn stream_reads_libsvm_file_from_disk() {
     ]);
     assert_eq!(code, 2);
     assert!(stderr.contains("cannot open --data"), "{stderr}");
+}
+
+/// `vivaldi serve --script FILE` runs the multi-tenant request script:
+/// admitted tenants serve, the over-budget open prints the REJECTED
+/// verdict plus the feasibility report, and the per-tenant summary
+/// closes the output. `--script` is mandatory.
+#[test]
+fn serve_runs_a_script_and_rejects_over_budget_opens() {
+    let dir = std::env::temp_dir().join("vivaldi_cli_serve_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("requests.txt");
+    std::fs::write(
+        &path,
+        "# two in-budget tenants, one rejected open\n\
+         budget 10000000\n\
+         open a k=2 m=16 d=4 batch=64 iters=10 seed=1\n\
+         open b k=2 m=8 d=4 batch=32 iters=5 seed=2\n\
+         open hog k=8 m=512 d=64 batch=8192 window=8\n\
+         ingest a n=128 seed=10\n\
+         ingest b n=64 seed=11\n\
+         snapshot a\n\
+         classify a n=32 seed=12\n\
+         restore a\n\
+         ingest a n=64 seed=13\n\
+         close b\n",
+    )
+    .unwrap();
+    let path_s = path.to_str().unwrap();
+
+    let (code, stdout, stderr) = run(&["serve", "--script", path_s, "--threads", "2"]);
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(stdout.contains("open a: admitted"), "{stdout}");
+    assert!(stdout.contains("open hog: REJECTED"), "{stdout}");
+    assert!(stdout.contains("feasibility @"), "{stdout}");
+    assert!(stdout.contains("snapshot a:"), "{stdout}");
+    assert!(stdout.contains("restore a: restored from"), "{stdout}");
+    assert!(stdout.contains("-- service summary --"), "{stdout}");
+    assert!(stdout.contains("rejected opens: 1"), "{stdout}");
+
+    let (code, _, stderr) = run(&["serve"]);
+    assert_eq!(code, 2);
+    assert!(stderr.contains("--script"), "{stderr}");
 }
 
 /// The sparse lane through the binary: `--sparse` batch on generated

@@ -1,0 +1,194 @@
+//! Service wall: the multi-tenant stream service end to end.
+//!
+//! Pins the three serving invariants the runtime promises:
+//!
+//! * snapshot → restore → ingest is **bit-identical** to never
+//!   snapshotting, at p ∈ {1, 4} and both landmark layouts (exact `==`
+//!   on assignments, objective curve, and carried sums);
+//! * classify-only (`inner_iters` 0) leaves the carried model bitwise
+//!   untouched, while one inner iteration moves it;
+//! * admission control is the closed form
+//!   (`model::analytic::tenant_state_bytes`): an over-budget open is
+//!   rejected loudly with the feasibility report while in-budget
+//!   tenants keep serving — and the script driver's output is
+//!   identical at every worker-thread count.
+
+use vivaldi::approx::stream::{StreamConfig, StreamSession};
+use vivaldi::approx::{ApproxConfig, LandmarkLayout};
+use vivaldi::backend::NativeBackend;
+use vivaldi::data::{synth, PointBlock};
+use vivaldi::dense::DenseMatrix;
+use vivaldi::runtime::tenants::{run_script, TenantService, TenantSpec};
+
+fn cfg(layout: LandmarkLayout, inner: Vec<usize>) -> StreamConfig {
+    StreamConfig {
+        base: ApproxConfig { k: 2, m: 16, max_iters: 10, layout, ..Default::default() },
+        batch: 64,
+        inner_iters: inner,
+        ..Default::default()
+    }
+}
+
+fn batches(points: &DenseMatrix, batch: usize) -> Vec<DenseMatrix> {
+    let mut out = Vec::new();
+    let mut lo = 0;
+    while lo < points.rows() {
+        let hi = (lo + batch).min(points.rows());
+        out.push(points.row_block(lo, hi));
+        lo = hi;
+    }
+    out
+}
+
+#[test]
+fn snapshot_restore_is_bit_identical_across_layouts_and_ranks() {
+    let backend = NativeBackend::new();
+    let data = synth::gaussian_blobs(192, 4, 2, 4.0, 23);
+    for layout in [LandmarkLayout::OneD, LandmarkLayout::OneFiveD] {
+        for p in [1usize, 4] {
+            let c = cfg(layout, vec![]);
+            let blocks = batches(&data.points, c.batch);
+            assert_eq!(blocks.len(), 3);
+
+            // Reference: one session, never snapshotted.
+            let mut full = StreamSession::new(p, c.clone()).unwrap();
+            for b in &blocks {
+                full.push_batch(PointBlock::Dense(b.clone()), &backend).unwrap();
+            }
+            let (full_sums, full_weights) = {
+                let (s, w) = full.carried_sums().unwrap();
+                (s.to_vec(), w.to_vec())
+            };
+            let full_fit = full.finish().unwrap();
+
+            // Snapshot after the first batch, restore, push the rest.
+            let mut head = StreamSession::new(p, c.clone()).unwrap();
+            head.push_batch(PointBlock::Dense(blocks[0].clone()), &backend).unwrap();
+            let snap = head.snapshot().unwrap();
+            let mut tail = StreamSession::restore(c.clone(), &snap).unwrap();
+            for b in &blocks[1..] {
+                tail.push_batch(PointBlock::Dense(b.clone()), &backend).unwrap();
+            }
+            let (tail_sums, tail_weights) = {
+                let (s, w) = tail.carried_sums().unwrap();
+                (s.to_vec(), w.to_vec())
+            };
+            let tail_fit = tail.finish().unwrap();
+
+            let what = format!("{layout:?} p={p}");
+            assert_eq!(full_sums, tail_sums, "carried sums must be bitwise equal ({what})");
+            assert_eq!(full_weights, tail_weights, "carried weights ({what})");
+            assert_eq!(
+                &full_fit.assignments[c.batch..],
+                &tail_fit.assignments[..],
+                "post-restore assignments ({what})"
+            );
+            assert_eq!(
+                &full_fit.objective_curve[1..],
+                &tail_fit.objective_curve[..],
+                "post-restore objective curve ({what})"
+            );
+        }
+    }
+}
+
+#[test]
+fn classify_only_is_frozen_while_one_iteration_moves() {
+    let backend = NativeBackend::new();
+    let data = synth::gaussian_blobs(128, 4, 2, 4.0, 31);
+    let blocks = batches(&data.points, 64);
+    let run = |inner: Vec<usize>| {
+        let mut sess = StreamSession::new(1, cfg(LandmarkLayout::OneD, inner)).unwrap();
+        sess.push_batch(PointBlock::Dense(blocks[0].clone()), &backend).unwrap();
+        let warm: Vec<f32> = sess.carried_sums().unwrap().0.to_vec();
+        sess.push_batch(PointBlock::Dense(blocks[1].clone()), &backend).unwrap();
+        let after: Vec<f32> = sess.carried_sums().unwrap().0.to_vec();
+        (warm, after)
+    };
+    let (warm0, after0) = run(vec![2, 0]);
+    let (warm1, after1) = run(vec![2, 1]);
+    assert_eq!(warm0, warm1, "identical first batch must leave identical warm sums");
+    assert_eq!(after0, warm0, "a 0-iteration batch must leave the sums bitwise unchanged");
+    assert_ne!(after1, warm1, "a 1-iteration batch must fold the new batch in");
+}
+
+#[test]
+fn admission_is_the_closed_form_and_over_budget_opens_reject_loudly() {
+    let spec = TenantSpec {
+        p: 1,
+        d: 4,
+        cfg: StreamConfig {
+            base: ApproxConfig { k: 2, m: 8, max_iters: 10, ..Default::default() },
+            batch: 32,
+            window: 2,
+            ..Default::default()
+        },
+    };
+    let one = vivaldi::model::analytic::tenant_state_bytes(8, 4, 32, 1, 2, 2);
+    assert_eq!(spec.state_bytes(), one, "the admission charge is the analytic closed form");
+
+    let mut svc = TenantService::new(Some(one + one / 2));
+    let a = svc.open("a", spec.clone()).unwrap();
+    assert!(a.admitted);
+    assert_eq!(a.tenant_bytes, one);
+    let b = svc.open("b", spec.clone()).unwrap();
+    assert!(!b.admitted, "the second open exceeds the budget and must be rejected");
+    assert_eq!(b.remaining(), one / 2);
+    assert_eq!(svc.rejected_opens(), 1);
+
+    // The in-budget tenant keeps serving through the rejection.
+    let ds = synth::gaussian_blobs(64, 4, 2, 4.0, 7);
+    let rep = svc.ingest("a", ds.points).unwrap();
+    assert_eq!((rep.points, rep.batches), (64, 2));
+    let q = synth::gaussian_blobs(16, 4, 2, 4.0, 8);
+    assert_eq!(svc.classify("a", &q.points).unwrap().points, 16);
+
+    // The script driver prints the verdict plus the feasibility rows.
+    let script = "\
+budget 1024
+open tiny k=2 m=8 d=4 batch=32 window=2
+";
+    let out = run_script(script, 1, None).unwrap();
+    assert!(
+        out.iter().any(|l| l.contains("open tiny: REJECTED")),
+        "missing rejection line in {out:?}"
+    );
+    assert!(
+        out.iter().any(|l| l.contains("feasibility @")),
+        "rejection must carry the feasibility report: {out:?}"
+    );
+    assert!(
+        out.iter().any(|l| l.contains("stream 1.5D windowed")),
+        "windowed spec must print the windowed feasibility row: {out:?}"
+    );
+    assert!(out.last().unwrap().ends_with("rejected opens: 1"));
+}
+
+#[test]
+fn script_output_is_identical_at_every_thread_count() {
+    let script = "\
+budget 100000000
+open a k=2 m=16 d=4 batch=64 iters=10 seed=5
+open b k=2 m=16 d=4 batch=64 iters=10 layout=1.5d p=4 seed=6
+open c k=2 m=8 d=4 batch=32 iters=5 inner=2,1 seed=7
+ingest a n=128 seed=40
+ingest b n=128 seed=41
+ingest c n=64 seed=42
+snapshot a
+classify a n=32 seed=43
+restore a
+ingest a n=64 seed=44
+snapshot b
+restore b
+ingest b n=64 seed=45
+close c
+";
+    let one = run_script(script, 1, None).unwrap();
+    for threads in [2usize, 3, 5] {
+        let t = run_script(script, threads, None).unwrap();
+        assert_eq!(one, t, "output must not depend on the worker count ({threads} threads)");
+    }
+    assert!(one.iter().any(|l| l.starts_with("snapshot a: ") && l.ends_with("bytes (v1)")));
+    assert!(one.iter().any(|l| l.starts_with("restore b: ")));
+    assert!(one.iter().any(|l| l.starts_with("tenant c:") && l.ends_with("closed")));
+}
