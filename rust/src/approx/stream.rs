@@ -105,7 +105,7 @@
 use std::collections::VecDeque;
 
 use crate::backend::ComputeBackend;
-use crate::comm::{Comm, CommStats, Grid2D, Group, World};
+use crate::comm::{Comm, CommFailure, CommStats, Fault, FaultPlan, Grid2D, Group, World};
 use crate::data::landmarks::{self, LandmarkReservoir};
 use crate::data::stream::PointSource;
 use crate::data::{PointBlock, PointsRef};
@@ -184,6 +184,22 @@ pub struct StreamConfig {
     /// points) and k-means++ landmark seeding (it reads point values);
     /// both are rejected as `InvalidConfig`.
     pub sparse: bool,
+    /// Snapshot the carried model every this many batches (0 = off,
+    /// the default). At every multiple of `checkpoint_every` the
+    /// session checkpoints itself ([`StreamSession::snapshot`]) and
+    /// retains the batches pushed since, so an injected fabric failure
+    /// ([`crate::VivaldiError::Comm`]) recovers by re-laying-out the
+    /// surviving ranks, restoring the last checkpoint, and replaying —
+    /// instead of losing the model. Fault-free runs with checkpointing
+    /// on are **bit-identical** to runs without it: the snapshot is a
+    /// pure read of driver state (pinned by `rust/tests/fault.rs`).
+    /// Requires `reservoir = 0` (snapshot v1 refuses reservoirs).
+    pub checkpoint_every: usize,
+    /// Deterministic fault-injection plan threaded into the per-batch
+    /// collective launches ([`FaultPlan::for_batch`] slices it by batch
+    /// index). [`FaultPlan::none`] — the default — keeps every launch
+    /// on the infallible, bitwise-unchanged fabric path.
+    pub fault: FaultPlan,
 }
 
 impl Default for StreamConfig {
@@ -198,6 +214,8 @@ impl Default for StreamConfig {
             window: 0,
             tol: 0.0,
             sparse: false,
+            checkpoint_every: 0,
+            fault: FaultPlan::none(),
         }
     }
 }
@@ -250,6 +268,9 @@ pub struct StreamFitResult {
     /// Final eviction-ring state of a windowed run (`None` when
     /// `window = 0`).
     pub window: Option<WindowState>,
+    /// Completed checkpoint-restore recoveries (injected crashes the
+    /// stream survived).
+    pub recoveries: usize,
 }
 
 /// Provenance of one surviving eviction-ring slot.
@@ -626,6 +647,13 @@ fn validate_stream_config(p: usize, cfg: &StreamConfig) -> Result<(), VivaldiErr
                 .into(),
         ));
     }
+    if cfg.checkpoint_every > 0 && cfg.reservoir > 0 {
+        return Err(VivaldiError::InvalidConfig(
+            "--checkpoint-every requires reservoir = 0: snapshot v1 does not cover the \
+             landmark reservoir, so a checkpointed session must stay snapshot-able"
+                .into(),
+        ));
+    }
     if cfg.sparse && cfg.base.seeding == landmarks::LandmarkSeeding::KmeansPP {
         return Err(VivaldiError::InvalidConfig(
             "k-means++ landmark seeding reads point values and would densify; \
@@ -666,6 +694,42 @@ pub struct StreamSession {
     /// Driven (sharded) batches consumed so far — the index into the
     /// per-batch inner-iteration schedule.
     driven_batches: usize,
+    /// Last checkpoint (`checkpoint_every > 0` only): snapshot bytes,
+    /// the batch index it was taken at, and the stream aggregates at
+    /// that point — everything recovery needs to rebuild and replay.
+    checkpoint: Option<Checkpoint>,
+    /// Batches pushed since the last checkpoint, retained for replay
+    /// (cleared every time a new checkpoint is taken; empty when
+    /// checkpointing is off).
+    replay: Vec<PointBlock>,
+    /// Faults still armed for future batches. Recovery disarms every
+    /// entry at or before the failed batch so a replay cannot re-fire
+    /// the failure it is recovering from.
+    active_faults: Vec<Fault>,
+    /// Completed checkpoint-restore recoveries.
+    recoveries: usize,
+}
+
+/// One stream checkpoint: the model snapshot plus the aggregates the
+/// session had accumulated when it was taken.
+struct Checkpoint {
+    bytes: Vec<u8>,
+    batch_index: usize,
+    acc: harness::StreamAccumulator,
+}
+
+/// Internal outcome of one batch launch: a fatal driver error, or a
+/// typed fabric failure the checkpoint machinery may recover from.
+/// The `From` impl keeps `?` working unchanged inside the launch body.
+enum DriveError {
+    Fatal(VivaldiError),
+    Fault(Box<CommFailure>),
+}
+
+impl From<VivaldiError> for DriveError {
+    fn from(e: VivaldiError) -> Self {
+        DriveError::Fatal(e)
+    }
 }
 
 impl StreamSession {
@@ -675,6 +739,7 @@ impl StreamSession {
         validate_stream_config(p, &cfg)?;
         Ok(StreamSession {
             p,
+            active_faults: cfg.fault.faults.clone(),
             cfg,
             reservoir: None,
             model: None,
@@ -682,6 +747,9 @@ impl StreamSession {
             refreshes: 0,
             batch_index: 0,
             driven_batches: 0,
+            checkpoint: None,
+            replay: Vec::new(),
+            recoveries: 0,
         })
     }
 
@@ -714,6 +782,13 @@ impl StreamSession {
     /// Final batch-local objective of the most recent batch.
     pub fn last_objective(&self) -> Option<f64> {
         self.acc.objective_curve.last().copied()
+    }
+
+    /// Completed checkpoint-restore recoveries since the session
+    /// opened (each one re-laid-out the survivors, restored the last
+    /// checkpoint, and replayed the retained batches).
+    pub fn recoveries(&self) -> usize {
+        self.recoveries
     }
 
     /// The carried k×m cluster sums and k cluster weights (`None`
@@ -759,11 +834,54 @@ impl StreamSession {
     /// iteration of the [`fit_stream`] driver loop (reservoir observe,
     /// tail classification, init/refresh, the sharded inner loop, and
     /// the fold back into the carried model).
+    ///
+    /// With `checkpoint_every > 0` the session snapshots the carried
+    /// model at every multiple and retains the batches pushed since;
+    /// an injected fabric failure ([`VivaldiError::Comm`]) then
+    /// triggers **checkpointed recovery** — survivors re-laid-out,
+    /// last checkpoint restored, retained batches replayed — instead
+    /// of surfacing the error. Without a checkpoint the typed error
+    /// propagates. Non-finite point values are rejected at this
+    /// boundary with batch/row/column provenance, before any state
+    /// changes.
     pub fn push_batch(
         &mut self,
         batch: PointBlock,
         backend: &dyn ComputeBackend,
     ) -> Result<(), VivaldiError> {
+        reject_non_finite(&batch, self.batch_index)?;
+        if self.cfg.checkpoint_every > 0 {
+            if self.batch_index % self.cfg.checkpoint_every == 0 {
+                self.checkpoint = Some(Checkpoint {
+                    bytes: self.snapshot()?,
+                    batch_index: self.batch_index,
+                    acc: self.acc.clone(),
+                });
+                self.replay.clear();
+            }
+            self.replay.push(batch.clone());
+        }
+        match self.drive_batch(batch, backend) {
+            Ok(()) => Ok(()),
+            Err(DriveError::Fatal(e)) => Err(e),
+            Err(DriveError::Fault(failure)) => {
+                if self.checkpoint.is_some() {
+                    self.recover(*failure, backend)
+                } else {
+                    Err(VivaldiError::Comm(failure.error))
+                }
+            }
+        }
+    }
+
+    /// One batch launch — the [`fit_stream`] driver-loop body. A typed
+    /// fabric failure comes back as [`DriveError::Fault`] for the
+    /// recovery wrapper; everything else is fatal.
+    fn drive_batch(
+        &mut self,
+        batch: PointBlock,
+        backend: &dyn ComputeBackend,
+    ) -> Result<(), DriveError> {
         let p = self.p;
         let cfg = &self.cfg;
         let k = cfg.base.k;
@@ -783,11 +901,25 @@ impl StreamSession {
             // A tail too small to shard across the ranks. With a model
             // in hand, label it driver-side and fold it into the sums —
             // no collective round, no work discarded. Without one (the
-            // very first batch) the stream is genuinely unusable.
-            let Some(mdl) = self.model.as_mut() else {
-                return Err(VivaldiError::InvalidConfig(format!(
-                    "first batch of {bn} points is smaller than the rank count {p}"
-                )));
+            // very first batch) the stream is genuinely unusable. A
+            // model mid-re-initialization (right after a crash recovery
+            // re-laid-out the world) cannot host-solve yet — its panel
+            // solvers were dropped with the old grid — so the tail is
+            // refused loudly instead of panicking into empty state.
+            let mdl = match self.model.as_mut() {
+                Some(mdl) if mdl.initialized => mdl,
+                Some(_) => {
+                    return Err(DriveError::Fatal(VivaldiError::InvalidConfig(format!(
+                        "tail batch of {bn} points arrived while the carried model awaits \
+                         re-initialization on the recovered world; push a driven batch \
+                         (>= {p} points) first"
+                    ))))
+                }
+                None => {
+                    return Err(DriveError::Fatal(VivaldiError::InvalidConfig(format!(
+                        "first batch of {bn} points is smaller than the rank count {p}"
+                    ))))
+                }
             };
             let (c_tail, assign, minvals) = mdl.classify(batch.as_ref(), cfg, backend);
             let sums = backend.cluster_row_sums(&c_tail, &assign, k, m);
@@ -842,7 +974,20 @@ impl StreamSession {
         let decayed = mdl.decayed(cfg.decay);
         let init = !mdl.initialized;
         let max_iters = cfg.inner_cap(self.driven_batches);
-        let (rank_results, comm_stats) = World::run(p, |comm| match cfg.base.layout {
+        // This batch's slice of the fault plan. Entries recovery has
+        // already disarmed are gone from `active_faults`, so a replay
+        // never re-fires the failure it is recovering from.
+        let plan = FaultPlan {
+            seed: cfg.fault.seed,
+            recv_timeout_ms: cfg.fault.recv_timeout_ms,
+            faults: self
+                .active_faults
+                .iter()
+                .filter(|f| f.batch == self.batch_index)
+                .copied()
+                .collect(),
+        };
+        let body = |comm: &mut Comm| match cfg.base.layout {
             LandmarkLayout::OneD => run_batch_1d(
                 comm,
                 batch.as_ref(),
@@ -863,7 +1008,18 @@ impl StreamSession {
                 init,
                 max_iters,
             ),
-        });
+        };
+        // Batches with no injected faults go through the infallible
+        // launch — the bitwise-unchanged legacy path; only faulted
+        // batches pay the fallible variant.
+        let (rank_results, comm_stats) = if plan.faults.is_empty() {
+            World::run(p, body)
+        } else {
+            match World::try_run(p, plan, body) {
+                Ok(out) => out,
+                Err(failure) => return Err(DriveError::Fault(Box::new(failure))),
+            }
+        };
 
         // Split the per-rank payloads, then reuse the batch assembly
         // (collective-failure propagation included). Diagonal ranks of
@@ -914,6 +1070,65 @@ impl StreamSession {
         Ok(())
     }
 
+    /// Checkpointed recovery after a typed fabric failure: re-lay-out
+    /// the surviving ranks (p → p′), restore the last checkpoint onto
+    /// the new world, fold the failed launch's ledgers (fault counters
+    /// included) into the history, and replay the retained batches.
+    /// The recovered model is exactly what an uninterrupted session
+    /// restored from the same checkpoint at p′ would compute (pinned
+    /// by `rust/tests/fault.rs`).
+    fn recover(
+        &mut self,
+        failure: CommFailure,
+        backend: &dyn ComputeBackend,
+    ) -> Result<(), VivaldiError> {
+        let ck = self.checkpoint.take().expect("recover runs only with a checkpoint");
+        let failed_index = self.batch_index;
+        let survivors = self.p.saturating_sub(failure.crashed_ranks.len()).max(1);
+        let p_new = match self.cfg.base.layout {
+            LandmarkLayout::OneD => survivors,
+            LandmarkLayout::OneFiveD => {
+                // Largest square world the survivors can host whose
+                // grid still tiles the configured batch shape.
+                let mut q = 1usize;
+                while (q + 1) * (q + 1) <= survivors {
+                    q += 1;
+                }
+                while q > 1
+                    && Partition::landmark_grid(self.cfg.batch, self.cfg.base.m, q * q).is_err()
+                {
+                    q -= 1;
+                }
+                q * q
+            }
+        };
+        // Disarm every fault at or before the failed batch: the
+        // failure already happened, and the replay re-runs those
+        // batches clean. Faults aimed at later batches stay armed.
+        self.active_faults.retain(|f| f.batch > failed_index);
+        let mut fresh = StreamSession::restore_with_ranks(p_new, self.cfg.clone(), &ck.bytes)?;
+        fresh.active_faults = std::mem::take(&mut self.active_faults);
+        fresh.recoveries = self.recoveries + 1;
+        let mut acc = ck.acc;
+        acc.rebase_ranks(p_new);
+        // The failed launch's communication stays in the history, and
+        // the replay is credited as a retry on rank 0's ledger — the
+        // recovery is visible in the exact accounting, not hidden.
+        for (ledger, s) in acc.comm_stats.iter_mut().zip(&failure.stats) {
+            ledger.absorb(s);
+        }
+        if let Some(l0) = acc.comm_stats.first_mut() {
+            l0.faults.retries += 1;
+        }
+        fresh.acc = acc;
+        let batches = std::mem::take(&mut self.replay);
+        *self = fresh;
+        for b in batches {
+            self.push_batch(b, backend)?;
+        }
+        Ok(())
+    }
+
     /// Close the session and assemble the [`StreamFitResult`] over the
     /// batches pushed since it (or its restore) started. Errors if no
     /// batch was ever pushed — same contract as an empty source.
@@ -948,6 +1163,7 @@ impl StreamSession {
             timings: acc.timings,
             ranks: self.p,
             landmark_refreshes: self.refreshes,
+            recoveries: self.recoveries,
             batch_points: acc.batch_points,
             window,
             assignments: acc.assignments,
@@ -1229,7 +1445,7 @@ impl StreamSession {
             let nb = r.usize("panel width")?;
             let my_idx = r.usize("panel owner index")?;
             let ridge = r.f64("panel ridge")?;
-            if sm != m || q == 0 || q > sm || nb == 0 || my_idx != idx || my_idx >= q {
+            if sm != m || q == 0 || q > sm || nb == 0 || nb > sm || my_idx != idx || my_idx >= q {
                 return Err(bad("panel solver geometry is inconsistent"));
             }
             let bc = BlockCyclic::with_panel(sm, q, nb);
@@ -1312,6 +1528,70 @@ impl StreamSession {
         });
         Ok(sess)
     }
+
+    /// [`Self::restore`] onto a *different* rank count — the recovery
+    /// path after a rank crash shrinks the world from p to p′. The
+    /// p-independent model state (landmarks, host W factor, carried
+    /// sums/weights, eviction ring, schedule counters) is kept byte
+    /// for byte; the grid-dependent state (per-grid-row landmark
+    /// blocks, block-cyclic panel solvers) is dropped, and the next
+    /// driven batch re-pays the one-time init — the landmark block
+    /// gather and, in block-cyclic mode, the collective W
+    /// factorization — on the new world. With `p_new` equal to the
+    /// snapshot's rank count this is exactly [`Self::restore`].
+    pub fn restore_with_ranks(
+        p_new: usize,
+        cfg: StreamConfig,
+        bytes: &[u8],
+    ) -> Result<StreamSession, VivaldiError> {
+        let mut sess = StreamSession::restore(cfg, bytes)?;
+        if sess.p == p_new {
+            return Ok(sess);
+        }
+        validate_stream_config(p_new, &sess.cfg)?;
+        sess.p = p_new;
+        sess.acc = harness::StreamAccumulator::new(p_new);
+        if let Some(mdl) = sess.model.as_mut() {
+            mdl.l_blocks = Vec::new();
+            mdl.dist_solvers = Vec::new();
+            mdl.initialized = false;
+        }
+        Ok(sess)
+    }
+}
+
+/// Ingest guard: non-finite (NaN/Inf) point values are rejected loudly
+/// at the session boundary with full provenance — a poisoned value
+/// would otherwise spread NaN through every later batch's carried sums
+/// with no trace of where it entered the stream.
+fn reject_non_finite(batch: &PointBlock, batch_index: usize) -> Result<(), VivaldiError> {
+    let bad = |r: usize, c: usize, v: f32| {
+        VivaldiError::InvalidConfig(format!(
+            "non-finite point value {v} at batch {batch_index}, row {r}, col {c}: \
+             refusing to ingest"
+        ))
+    };
+    match batch {
+        PointBlock::Dense(m) => {
+            let cols = m.cols().max(1);
+            for (i, &v) in m.data().iter().enumerate() {
+                if !v.is_finite() {
+                    return Err(bad(i / cols, i % cols, v));
+                }
+            }
+        }
+        PointBlock::Sparse(m) => {
+            for r in 0..m.rows() {
+                let (idx, vals) = m.row(r);
+                for (&c, &v) in idx.iter().zip(vals) {
+                    if !v.is_finite() {
+                        return Err(bad(r, c as usize, v));
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
 }
 
 /// Select the initial landmark set from the first batch (or the

@@ -13,8 +13,24 @@
 //!
 //! Floating-point combine order is **deterministic** (fixed tree shape,
 //! independent of thread timing), which the integration tests rely on.
+//!
+//! Every collective exists in two forms. The `try_*` variants are
+//! fallible: they tick the rank's fault clock
+//! ([`Comm::fault_tick`](super::fabric::Comm)), use bounded receives,
+//! and surface any injected or detected failure as a typed
+//! [`CommError`] — never a hang. The historical infallible names are
+//! thin wrappers that delegate to `try_*` and convert a failure into a
+//! crash-flagged unwind ([`World::try_run`](super::fabric::World)
+//! catches it; `World::run` re-raises the legacy panic), so the
+//! fault-free path stays bitwise identical to the pre-fault fabric.
+//! Only the six *primitive* collectives (bcast, gather, allgather,
+//! reduce, reduce_scatter_block, alltoallv) tick the fault clock;
+//! composites (barrier, allreduce and friends) tick through the
+//! primitives they delegate to — `Fault::at_call` counts primitive
+//! calls.
 
 use super::fabric::Comm;
+use super::fault::CommError;
 use super::Group;
 
 #[inline]
@@ -34,13 +50,14 @@ impl Comm {
 
     /// Synchronize all members of `g`.
     pub fn barrier(&self, g: &Group) {
-        let _ = self.allgather_bytes_marker(g);
+        self.try_barrier(g).unwrap_or_else(|e| self.fail(e))
     }
 
-    fn allgather_bytes_marker(&self, g: &Group) -> Vec<u8> {
+    /// Fallible [`Comm::barrier`].
+    pub fn try_barrier(&self, g: &Group) -> Result<(), CommError> {
         // Zero-byte ring allgather; counts rounds only.
-        let parts = self.allgather::<u8>(g, vec![]);
-        parts.into_iter().flatten().collect()
+        let _ = self.try_allgather::<u8>(g, vec![])?;
+        Ok(())
     }
 
     /// Broadcast `data` from group index `root_idx` (binomial tree).
@@ -50,11 +67,22 @@ impl Comm {
         root_idx: usize,
         data: Option<Vec<T>>,
     ) -> Vec<T> {
+        self.try_bcast(g, root_idx, data).unwrap_or_else(|e| self.fail(e))
+    }
+
+    /// Fallible [`Comm::bcast`].
+    pub fn try_bcast<T: Clone + Send + 'static>(
+        &self,
+        g: &Group,
+        root_idx: usize,
+        data: Option<Vec<T>>,
+    ) -> Result<Vec<T>, CommError> {
         let p = g.size();
         let me = self.my_index(g);
+        self.fault_tick()?;
         let tag = self.next_tag(g);
         if p == 1 {
-            return data.expect("root must supply data");
+            return Ok(data.expect("root must supply data"));
         }
         let vrank = (me + p - root_idx) % p;
         let mut buf: Option<Vec<T>> = if vrank == 0 {
@@ -70,7 +98,7 @@ impl Comm {
             if !have && vrank >= stride && vrank < 2 * stride {
                 let parent_v = vrank - stride;
                 let parent = g.rank_at((parent_v + root_idx) % p);
-                buf = Some(self.recv::<T>(parent, tag));
+                buf = Some(self.try_recv::<T>(parent, tag)?);
                 have = true;
             } else if have && vrank < stride {
                 let child_v = vrank + stride;
@@ -83,7 +111,7 @@ impl Comm {
         let out = buf.expect("bcast: no data received");
         let m = (out.len() * std::mem::size_of::<T>()) as u64;
         self.record_critical(rounds, rounds * m);
-        out
+        Ok(out)
     }
 
     /// Gather each member's buffer at group index `root_idx`.
@@ -96,11 +124,22 @@ impl Comm {
         root_idx: usize,
         local: Vec<T>,
     ) -> Option<Vec<Vec<T>>> {
+        self.try_gather(g, root_idx, local).unwrap_or_else(|e| self.fail(e))
+    }
+
+    /// Fallible [`Comm::gather`].
+    pub fn try_gather<T: Send + 'static>(
+        &self,
+        g: &Group,
+        root_idx: usize,
+        local: Vec<T>,
+    ) -> Result<Option<Vec<Vec<T>>>, CommError> {
         let p = g.size();
         let me = self.my_index(g);
+        self.fault_tick()?;
         let tag = self.next_tag(g);
         if p == 1 {
-            return Some(vec![local]);
+            return Ok(Some(vec![local]));
         }
         let vrank = (me + p - root_idx) % p;
         // Accumulate (vrank, data) pairs; flatten on the wire as
@@ -115,8 +154,8 @@ impl Comm {
                 if child_v < p {
                     let child = g.rank_at((child_v + root_idx) % p);
                     // Header: child subtree's (vrank, len) pairs.
-                    let hdr: Vec<u64> = self.recv(child, tag ^ 0x1);
-                    let mut body: Vec<T> = self.recv(child, tag);
+                    let hdr: Vec<u64> = self.try_recv(child, tag ^ 0x1)?;
+                    let mut body: Vec<T> = self.try_recv(child, tag)?;
                     crit += (body.len() * std::mem::size_of::<T>()) as u64;
                     // Split the flat body back into per-member segments
                     // (from the tail, so split_off moves without Clone).
@@ -152,22 +191,32 @@ impl Comm {
                 let idx = (vr as usize + root_idx) % p;
                 out[idx] = Some(d);
             }
-            Some(out.into_iter().map(|d| d.expect("gather: missing member")).collect())
+            Ok(Some(out.into_iter().map(|d| d.expect("gather: missing member")).collect()))
         } else {
-            None
+            Ok(None)
         }
     }
 
     /// Ring allgather: returns every member's buffer, in group order.
     /// Handles variable-length buffers (allgatherv).
     pub fn allgather<T: Clone + Send + 'static>(&self, g: &Group, local: Vec<T>) -> Vec<Vec<T>> {
+        self.try_allgather(g, local).unwrap_or_else(|e| self.fail(e))
+    }
+
+    /// Fallible [`Comm::allgather`].
+    pub fn try_allgather<T: Clone + Send + 'static>(
+        &self,
+        g: &Group,
+        local: Vec<T>,
+    ) -> Result<Vec<Vec<T>>, CommError> {
         let p = g.size();
         let me = self.my_index(g);
+        self.fault_tick()?;
         let tag = self.next_tag(g);
         let mut parts: Vec<Option<Vec<T>>> = (0..p).map(|_| None).collect();
         if p == 1 {
             parts[0] = Some(local);
-            return parts.into_iter().map(|x| x.unwrap()).collect();
+            return Ok(parts.into_iter().map(|x| x.unwrap()).collect());
         }
         let right = g.rank_at((me + 1) % p);
         let left = g.rank_at((me + p - 1) % p);
@@ -178,18 +227,27 @@ impl Comm {
         for s in 1..p {
             crit += (current.len() * std::mem::size_of::<T>()) as u64;
             self.send(right, tag.wrapping_add(s as u64), current);
-            let incoming: Vec<T> = self.recv(left, tag.wrapping_add(s as u64));
+            let incoming: Vec<T> = self.try_recv(left, tag.wrapping_add(s as u64))?;
             let owner = (me + p - s) % p;
             parts[owner] = Some(incoming.clone());
             current = incoming;
         }
         self.record_critical((p - 1) as u64, crit);
-        parts.into_iter().map(|x| x.expect("allgather: hole")).collect()
+        Ok(parts.into_iter().map(|x| x.expect("allgather: hole")).collect())
     }
 
     /// Allgather + concatenate in group order.
     pub fn allgather_concat<T: Clone + Send + 'static>(&self, g: &Group, local: Vec<T>) -> Vec<T> {
-        self.allgather(g, local).into_iter().flatten().collect()
+        self.try_allgather_concat(g, local).unwrap_or_else(|e| self.fail(e))
+    }
+
+    /// Fallible [`Comm::allgather_concat`].
+    pub fn try_allgather_concat<T: Clone + Send + 'static>(
+        &self,
+        g: &Group,
+        local: Vec<T>,
+    ) -> Result<Vec<T>, CommError> {
+        Ok(self.try_allgather(g, local)?.into_iter().flatten().collect())
     }
 
     /// Reduce to group index `root_idx` with a deterministic binomial
@@ -199,11 +257,27 @@ impl Comm {
         T: Send + 'static,
         F: Fn(&mut [T], &[T]),
     {
+        self.try_reduce(g, root_idx, data, combine).unwrap_or_else(|e| self.fail(e))
+    }
+
+    /// Fallible [`Comm::reduce`].
+    pub fn try_reduce<T, F>(
+        &self,
+        g: &Group,
+        root_idx: usize,
+        data: Vec<T>,
+        combine: F,
+    ) -> Result<Option<Vec<T>>, CommError>
+    where
+        T: Send + 'static,
+        F: Fn(&mut [T], &[T]),
+    {
         let p = g.size();
         let me = self.my_index(g);
+        self.fault_tick()?;
         let tag = self.next_tag(g);
         if p == 1 {
-            return Some(data);
+            return Ok(Some(data));
         }
         let vrank = (me + p - root_idx) % p;
         let m = (data.len() * std::mem::size_of::<T>()) as u64;
@@ -215,7 +289,7 @@ impl Comm {
                 let child_v = vrank + stride;
                 if child_v < p {
                     let child = g.rank_at((child_v + root_idx) % p);
-                    let other: Vec<T> = self.recv(child, tag.wrapping_add(t as u64));
+                    let other: Vec<T> = self.try_recv(child, tag.wrapping_add(t as u64))?;
                     combine(&mut acc, &other);
                 }
             } else if vrank % (2 * stride) == stride {
@@ -228,9 +302,9 @@ impl Comm {
         }
         self.record_critical(rounds, rounds * m);
         if vrank == 0 {
-            Some(acc)
+            Ok(Some(acc))
         } else {
-            None
+            Ok(None)
         }
     }
 
@@ -240,13 +314,27 @@ impl Comm {
         T: Clone + Send + 'static,
         F: Fn(&mut [T], &[T]),
     {
-        let reduced = self.reduce(g, 0, data, combine);
-        self.bcast(g, 0, reduced)
+        self.try_allreduce(g, data, combine).unwrap_or_else(|e| self.fail(e))
+    }
+
+    /// Fallible [`Comm::allreduce`].
+    pub fn try_allreduce<T, F>(&self, g: &Group, data: Vec<T>, combine: F) -> Result<Vec<T>, CommError>
+    where
+        T: Clone + Send + 'static,
+        F: Fn(&mut [T], &[T]),
+    {
+        let reduced = self.try_reduce(g, 0, data, combine)?;
+        self.try_bcast(g, 0, reduced)
     }
 
     /// Elementwise f32 sum allreduce.
     pub fn allreduce_sum_f32(&self, g: &Group, data: Vec<f32>) -> Vec<f32> {
-        self.allreduce(g, data, |acc, other| {
+        self.try_allreduce_sum_f32(g, data).unwrap_or_else(|e| self.fail(e))
+    }
+
+    /// Fallible [`Comm::allreduce_sum_f32`].
+    pub fn try_allreduce_sum_f32(&self, g: &Group, data: Vec<f32>) -> Result<Vec<f32>, CommError> {
+        self.try_allreduce(g, data, |acc, other| {
             for (a, b) in acc.iter_mut().zip(other) {
                 *a += b;
             }
@@ -255,7 +343,12 @@ impl Comm {
 
     /// Elementwise u64 sum allreduce (cluster sizes).
     pub fn allreduce_sum_u64(&self, g: &Group, data: Vec<u64>) -> Vec<u64> {
-        self.allreduce(g, data, |acc, other| {
+        self.try_allreduce_sum_u64(g, data).unwrap_or_else(|e| self.fail(e))
+    }
+
+    /// Fallible [`Comm::allreduce_sum_u64`].
+    pub fn try_allreduce_sum_u64(&self, g: &Group, data: Vec<u64>) -> Result<Vec<u64>, CommError> {
+        self.try_allreduce(g, data, |acc, other| {
             for (a, b) in acc.iter_mut().zip(other) {
                 *a += b;
             }
@@ -264,12 +357,17 @@ impl Comm {
 
     /// Logical-AND allreduce (collective OOM checks).
     pub fn allreduce_and(&self, g: &Group, ok: bool) -> bool {
-        let out = self.allreduce(g, vec![ok as u8], |acc, other| {
+        self.try_allreduce_and(g, ok).unwrap_or_else(|e| self.fail(e))
+    }
+
+    /// Fallible [`Comm::allreduce_and`].
+    pub fn try_allreduce_and(&self, g: &Group, ok: bool) -> Result<bool, CommError> {
+        let out = self.try_allreduce(g, vec![ok as u8], |acc, other| {
             for (a, b) in acc.iter_mut().zip(other) {
                 *a &= b;
             }
-        });
-        out[0] != 0
+        })?;
+        Ok(out[0] != 0)
     }
 
     /// MINLOC allreduce: elementwise min of `vals` with the winning
@@ -278,16 +376,26 @@ impl Comm {
     /// — 8 B/element, matching the MPI_FLOAT_INT doubling the paper
     /// notes for the 2D algorithm's cluster update.
     pub fn allreduce_minloc(&self, g: &Group, vals: Vec<f32>, locs: Vec<u32>) -> (Vec<f32>, Vec<u32>) {
+        self.try_allreduce_minloc(g, vals, locs).unwrap_or_else(|e| self.fail(e))
+    }
+
+    /// Fallible [`Comm::allreduce_minloc`].
+    pub fn try_allreduce_minloc(
+        &self,
+        g: &Group,
+        vals: Vec<f32>,
+        locs: Vec<u32>,
+    ) -> Result<(Vec<f32>, Vec<u32>), CommError> {
         assert_eq!(vals.len(), locs.len());
         let pairs: Vec<(f32, u32)> = vals.into_iter().zip(locs).collect();
-        let out = self.allreduce(g, pairs, |acc, other| {
+        let out = self.try_allreduce(g, pairs, |acc, other| {
             for (a, b) in acc.iter_mut().zip(other) {
                 if b.0 < a.0 || (b.0 == a.0 && b.1 < a.1) {
                     *a = *b;
                 }
             }
-        });
-        out.into_iter().unzip()
+        })?;
+        Ok(out.into_iter().unzip())
     }
 
     /// Block reduce-scatter: `data.len()` must be `p · block`; member i
@@ -300,12 +408,27 @@ impl Comm {
         T: Clone + Send + 'static,
         F: Fn(&mut [T], &[T]),
     {
+        self.try_reduce_scatter_block(g, data, combine).unwrap_or_else(|e| self.fail(e))
+    }
+
+    /// Fallible [`Comm::reduce_scatter_block`].
+    pub fn try_reduce_scatter_block<T, F>(
+        &self,
+        g: &Group,
+        data: Vec<T>,
+        combine: F,
+    ) -> Result<Vec<T>, CommError>
+    where
+        T: Clone + Send + 'static,
+        F: Fn(&mut [T], &[T]),
+    {
         let p = g.size();
         let me = self.my_index(g);
+        self.fault_tick()?;
         assert_eq!(data.len() % p, 0, "reduce_scatter_block: len not divisible by group size");
         let block = data.len() / p;
         if p == 1 {
-            return data;
+            return Ok(data);
         }
         let tag = self.next_tag(g);
         let elem = std::mem::size_of::<T>();
@@ -334,7 +457,7 @@ impl Comm {
                 crit += (send_part.len() * elem) as u64;
                 rounds += 1;
                 self.send(partner, tag.wrapping_add(rounds), send_part);
-                let incoming: Vec<T> = self.recv(partner, tag.wrapping_add(rounds));
+                let incoming: Vec<T> = self.try_recv(partner, tag.wrapping_add(rounds))?;
                 let mut acc = keep;
                 // Deterministic order: lower half of the pair is always
                 // the accumulator target side; combine(acc, incoming)
@@ -350,10 +473,12 @@ impl Comm {
             }
             self.record_critical(rounds, crit);
             debug_assert_eq!(buf.len(), block);
-            buf
+            Ok(buf)
         } else {
             // General fallback: reduce to index 0, then scatter blocks.
-            let reduced = self.reduce(g, 0, data, &combine);
+            // (try_reduce ticks the fault clock again — the fallback is
+            // two primitive steps on the wire and counts as such.)
+            let reduced = self.try_reduce(g, 0, data, &combine)?;
             let stag = self.next_tag(g);
             if me == 0 {
                 let mut reduced = reduced.unwrap();
@@ -363,11 +488,11 @@ impl Comm {
                     self.send(g.rank_at(i), stag, tail);
                 }
                 self.record_critical(1, ((p - 1) * block * elem) as u64);
-                mine
+                Ok(mine)
             } else {
-                let out = self.recv::<T>(g.rank_at(0), stag);
+                let out = self.try_recv::<T>(g.rank_at(0), stag)?;
                 self.record_critical(1, 0);
-                out
+                Ok(out)
             }
         }
     }
@@ -378,11 +503,21 @@ impl Comm {
     pub fn alltoallv<T: Clone + Send + 'static>(
         &self,
         g: &Group,
-        mut sends: Vec<Vec<T>>,
+        sends: Vec<Vec<T>>,
     ) -> Vec<Vec<T>> {
+        self.try_alltoallv(g, sends).unwrap_or_else(|e| self.fail(e))
+    }
+
+    /// Fallible [`Comm::alltoallv`].
+    pub fn try_alltoallv<T: Clone + Send + 'static>(
+        &self,
+        g: &Group,
+        mut sends: Vec<Vec<T>>,
+    ) -> Result<Vec<Vec<T>>, CommError> {
         let p = g.size();
         assert_eq!(sends.len(), p);
         let me = self.my_index(g);
+        self.fault_tick()?;
         let tag = self.next_tag(g);
         let mut recvs: Vec<Option<Vec<T>>> = (0..p).map(|_| None).collect();
         let elem = std::mem::size_of::<T>();
@@ -395,17 +530,18 @@ impl Comm {
             let payload = std::mem::take(&mut sends[to]);
             crit += (payload.len() * elem) as u64;
             self.send(g.rank_at(to), tag.wrapping_add(s as u64), payload);
-            let incoming: Vec<T> = self.recv(g.rank_at(from), tag.wrapping_add(s as u64));
+            let incoming: Vec<T> = self.try_recv(g.rank_at(from), tag.wrapping_add(s as u64))?;
             recvs[from] = Some(incoming);
         }
         self.record_critical((p - 1) as u64, crit);
-        recvs.into_iter().map(|r| r.expect("alltoallv: hole")).collect()
+        Ok(recvs.into_iter().map(|r| r.expect("alltoallv: hole")).collect())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::super::fabric::World;
+    use super::super::fault::FaultPlan;
     use super::super::Group;
 
     #[test]
@@ -607,5 +743,57 @@ mod tests {
             comm.rank()
         });
         assert_eq!(results, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn try_variants_match_infallible_under_empty_plan() {
+        let p = 4;
+        let run_try = || {
+            World::try_run(p, FaultPlan::none(), |comm| {
+                let g = Group::world(p);
+                let s = comm.try_allreduce_sum_f32(&g, vec![0.1 * comm.rank() as f32]).unwrap();
+                let all = comm.try_allgather_concat(&g, vec![comm.rank() as u32]).unwrap();
+                let rs = comm
+                    .try_reduce_scatter_block(
+                        &g,
+                        (0..p).map(|j| j as f64 + comm.rank() as f64).collect(),
+                        |acc: &mut [f64], other: &[f64]| {
+                            for (a, b) in acc.iter_mut().zip(other) {
+                                *a += b;
+                            }
+                        },
+                    )
+                    .unwrap();
+                comm.try_barrier(&g).unwrap();
+                (s, all, rs)
+            })
+            .expect("no faults planned")
+        };
+        let run_plain = || {
+            World::run(p, |comm| {
+                let g = Group::world(p);
+                let s = comm.allreduce_sum_f32(&g, vec![0.1 * comm.rank() as f32]);
+                let all = comm.allgather_concat(&g, vec![comm.rank() as u32]);
+                let rs = comm.reduce_scatter_block(
+                    &g,
+                    (0..p).map(|j| j as f64 + comm.rank() as f64).collect(),
+                    |acc: &mut [f64], other: &[f64]| {
+                        for (a, b) in acc.iter_mut().zip(other) {
+                            *a += b;
+                        }
+                    },
+                );
+                comm.barrier(&g);
+                (s, all, rs)
+            })
+        };
+        let (tr, ts) = run_try();
+        let (pr, ps) = run_plain();
+        assert_eq!(tr, pr, "try_* collectives must be bit-identical to the infallible path");
+        for (a, b) in ts.iter().zip(&ps) {
+            assert_eq!(a.total(), b.total());
+            assert_eq!(a.faults.total(), 0);
+            assert_eq!(b.faults.total(), 0);
+        }
     }
 }

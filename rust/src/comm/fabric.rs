@@ -7,21 +7,39 @@
 //! counter, so interleaved collectives on different groups (grid rows
 //! vs. columns) never cross-match.
 //!
-//! A receive timeout (default 120 s, `VIVALDI_RECV_TIMEOUT_SECS`) turns
-//! protocol deadlocks into loud panics instead of hung test suites.
+//! **Failure model.** Every receive is bounded: a deadline (default
+//! 120 s, `VIVALDI_RECV_TIMEOUT_SECS`, or a [`FaultPlan`]'s
+//! `recv_timeout_ms` override) turns protocol deadlocks and dropped
+//! messages into typed [`CommError`]s instead of hung test suites. A
+//! failing rank raises its crash flag and wakes every mailbox, so
+//! peers blocked on it detect the failure immediately
+//! ([`CommError::PeerCrashed`]) without burning their own deadline.
+//! [`World::try_run`] catches each rank's typed failure at the thread
+//! boundary and returns a [`CommFailure`] carrying the root-cause
+//! error plus every rank's ledger (fault counters included);
+//! [`World::run`] delegates with [`FaultPlan::none`] and converts a
+//! failure back into the fabric's historical string panic, so the
+//! fault-free path is behaviorally unchanged.
 
 use std::any::Any;
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
+use super::fault::{CommError, FaultKind, FaultPlan};
 use super::stats::{CommStats, PhaseStats};
 use super::Group;
 
 struct Envelope {
     src: usize,
     tag: u64,
+    /// Injected payload corruption: the receiver rejects the envelope
+    /// with [`CommError::Corrupt`] instead of consuming it (modeling
+    /// checksum-detected corruption).
+    corrupt: bool,
     payload: Box<dyn Any + Send>,
 }
 
@@ -31,17 +49,49 @@ struct Mailbox {
     cv: Condvar,
 }
 
-/// The shared fabric: one mailbox per rank.
+/// A run that failed with a typed communication error.
+///
+/// Carries the root-cause [`CommError`], the set of ranks the fault
+/// plan crashed, and **every** rank's communication ledger (the fault
+/// counters survive the unwind), so a driver can account for the
+/// partial work before recovering.
+#[derive(Debug)]
+pub struct CommFailure {
+    pub error: CommError,
+    /// Ranks terminated by an injected [`FaultKind::Crash`].
+    pub crashed_ranks: Vec<usize>,
+    /// Per-rank ledgers in rank order, failed ranks included.
+    pub stats: Vec<CommStats>,
+}
+
+impl std::fmt::Display for CommFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.error)?;
+        if !self.crashed_ranks.is_empty() {
+            write!(f, " (crashed ranks: {:?})", self.crashed_ranks)?;
+        }
+        Ok(())
+    }
+}
+
+/// The shared fabric: one mailbox per rank, plus per-rank crash flags.
 pub struct World {
     p: usize,
     mailboxes: Arc<Vec<Mailbox>>,
+    crashed: Arc<Vec<AtomicBool>>,
+}
+
+enum RankExit<T> {
+    Done(T, CommStats),
+    Fault(CommError, CommStats),
 }
 
 impl World {
     pub fn new(p: usize) -> Self {
         assert!(p >= 1, "need at least one rank");
         let mailboxes = Arc::new((0..p).map(|_| Mailbox::default()).collect::<Vec<_>>());
-        World { p, mailboxes }
+        let crashed = Arc::new((0..p).map(|_| AtomicBool::new(false)).collect::<Vec<_>>());
+        World { p, mailboxes, crashed }
     }
 
     pub fn size(&self) -> usize {
@@ -51,44 +101,116 @@ impl World {
     /// Spawn P rank threads running `f(comm)`; returns per-rank results
     /// in rank order along with each rank's communication ledger.
     ///
-    /// Panics in any rank propagate (they abort the whole run with that
-    /// rank's panic payload) — tests rely on this.
+    /// Delegates to [`World::try_run`] with [`FaultPlan::none`] — the
+    /// fault-free path is bitwise identical to the historical fabric. A
+    /// typed communication failure (only a recv timeout is possible
+    /// without a plan) re-raises as the fabric's historical string
+    /// panic; any other rank panic propagates with its original
+    /// payload — tests rely on both.
     pub fn run<T, F>(p: usize, f: F) -> (Vec<T>, Vec<CommStats>)
     where
         T: Send,
         F: Fn(&mut Comm) -> T + Sync,
     {
+        match World::try_run(p, FaultPlan::none(), f) {
+            Ok(out) => out,
+            Err(failure) => panic!("{}", failure.error),
+        }
+    }
+
+    /// Fault-aware launch: like [`World::run`], but injects `plan` and
+    /// returns a typed [`CommFailure`] — never a hang, never an untyped
+    /// panic — when any rank fails with a communication error.
+    ///
+    /// Each rank's closure runs under `catch_unwind`, so a failing
+    /// rank's ledger (fault counters included) survives into the
+    /// failure report. Panics that are *not* [`CommError`]s (assertion
+    /// failures, type-mismatch recv) propagate unchanged.
+    ///
+    /// The reported root cause prefers, in order: an injected crash,
+    /// a recv timeout, a corrupt payload, then a peer-crash cascade —
+    /// each at the lowest reporting rank.
+    pub fn try_run<T, F>(
+        p: usize,
+        plan: FaultPlan,
+        f: F,
+    ) -> Result<(Vec<T>, Vec<CommStats>), CommFailure>
+    where
+        T: Send,
+        F: Fn(&mut Comm) -> T + Sync,
+    {
         let world = World::new(p);
-        let mut results: Vec<Option<T>> = (0..p).map(|_| None).collect();
-        let mut stats: Vec<Option<CommStats>> = (0..p).map(|_| None).collect();
+        let plan = Arc::new(plan);
+        let mut exits: Vec<Option<RankExit<T>>> = (0..p).map(|_| None).collect();
         {
             let fref = &f;
             let mbs = &world.mailboxes;
+            let crashed = &world.crashed;
+            let planref = &plan;
             std::thread::scope(|s| {
                 let handles: Vec<_> = (0..p)
                     .map(|rank| {
                         s.spawn(move || {
-                            let mut comm = Comm::new(rank, p, Arc::clone(mbs));
-                            let out = fref(&mut comm);
-                            (out, comm.into_stats())
+                            let mut comm = Comm::with_plan(
+                                rank,
+                                p,
+                                Arc::clone(mbs),
+                                Arc::clone(crashed),
+                                Arc::clone(planref),
+                            );
+                            let out = catch_unwind(AssertUnwindSafe(|| fref(&mut comm)));
+                            match out {
+                                Ok(v) => RankExit::Done(v, comm.into_stats()),
+                                Err(payload) => match payload.downcast::<CommError>() {
+                                    Ok(e) => RankExit::Fault(*e, comm.into_stats()),
+                                    // Not a comm failure: re-raise with the
+                                    // original payload (assertions, type
+                                    // mismatches) so `join` propagates it.
+                                    Err(other) => std::panic::resume_unwind(other),
+                                },
+                            }
                         })
                     })
                     .collect();
                 for (rank, h) in handles.into_iter().enumerate() {
                     match h.join() {
-                        Ok((out, st)) => {
-                            results[rank] = Some(out);
-                            stats[rank] = Some(st);
-                        }
+                        Ok(exit) => exits[rank] = Some(exit),
                         Err(e) => std::panic::resume_unwind(e),
                     }
                 }
             });
         }
-        (
-            results.into_iter().map(|r| r.unwrap()).collect(),
-            stats.into_iter().map(|s| s.unwrap()).collect(),
-        )
+        let mut results: Vec<Option<T>> = Vec::with_capacity(p);
+        let mut stats: Vec<CommStats> = Vec::with_capacity(p);
+        let mut errors: Vec<(usize, CommError)> = Vec::new();
+        let mut crashed_ranks: Vec<usize> = Vec::new();
+        for (rank, exit) in exits.into_iter().enumerate() {
+            match exit.expect("rank thread joined without an exit") {
+                RankExit::Done(v, st) => {
+                    results.push(Some(v));
+                    stats.push(st);
+                }
+                RankExit::Fault(e, st) => {
+                    if matches!(e, CommError::Crashed { .. }) {
+                        crashed_ranks.push(rank);
+                    }
+                    errors.push((rank, e));
+                    results.push(None);
+                    stats.push(st);
+                }
+            }
+        }
+        if errors.is_empty() {
+            return Ok((results.into_iter().map(|r| r.unwrap()).collect(), stats));
+        }
+        let rank_of = |pred: fn(&CommError) -> bool| {
+            errors.iter().find(|(_, e)| pred(e)).map(|(_, e)| e.clone())
+        };
+        let error = rank_of(|e| matches!(e, CommError::Crashed { .. }))
+            .or_else(|| rank_of(|e| matches!(e, CommError::RecvTimeout { .. })))
+            .or_else(|| rank_of(|e| matches!(e, CommError::Corrupt { .. })))
+            .unwrap_or_else(|| errors[0].1.clone());
+        Err(CommFailure { error, crashed_ranks, stats })
     }
 }
 
@@ -102,28 +224,46 @@ fn recv_timeout() -> Duration {
 
 /// Per-rank communicator handle.
 ///
-/// Cloneable state lives in `Arc`s; the per-rank ledger and tag counters
-/// are rank-local. All collective operations live in
-/// [`super::collectives`] as methods on `Comm`.
+/// Cloneable state lives in `Arc`s; the per-rank ledger, tag counters,
+/// and fault-arming state are rank-local. All collective operations
+/// live in [`super::collectives`] as methods on `Comm`.
 pub struct Comm {
     rank: usize,
     p: usize,
     mailboxes: Arc<Vec<Mailbox>>,
+    crashed: Arc<Vec<AtomicBool>>,
+    plan: Arc<FaultPlan>,
     stats: RefCell<CommStats>,
     phase: RefCell<String>,
     /// Per-group monotone counters for tag derivation.
     group_ops: RefCell<HashMap<u64, u64>>,
+    /// Primitive collective calls made by this rank (fault trigger
+    /// coordinate: `Fault::at_call` is 1-based against this counter).
+    calls: Cell<u64>,
+    /// A drop/delay/corrupt fault armed by the current collective,
+    /// consumed by this rank's next remote `send`.
+    armed: Cell<Option<FaultKind>>,
 }
 
 impl Comm {
-    fn new(rank: usize, p: usize, mailboxes: Arc<Vec<Mailbox>>) -> Self {
+    fn with_plan(
+        rank: usize,
+        p: usize,
+        mailboxes: Arc<Vec<Mailbox>>,
+        crashed: Arc<Vec<AtomicBool>>,
+        plan: Arc<FaultPlan>,
+    ) -> Self {
         Comm {
             rank,
             p,
             mailboxes,
+            crashed,
+            plan,
             stats: RefCell::new(CommStats::new()),
             phase: RefCell::new("default".to_string()),
             group_ops: RefCell::new(HashMap::new()),
+            calls: Cell::new(0),
+            armed: Cell::new(None),
         }
     }
 
@@ -170,49 +310,154 @@ impl Comm {
         group.id().wrapping_add(ctr.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Advance the primitive-collective call counter and fire/arm any
+    /// fault scheduled at it. Called once at the top of every
+    /// *primitive* try-collective (composites tick through the
+    /// primitives they delegate to).
+    ///
+    /// A `Crash` fires here: the rank records it, raises its crash
+    /// flag, and returns the typed error. Drop/delay/corrupt faults
+    /// arm, to be consumed by this rank's next remote `send` within
+    /// the collective (the previous collective's unconsumed arm — a
+    /// collective where this rank had no remote send — is cleared).
+    pub(crate) fn fault_tick(&self) -> Result<(), CommError> {
+        let call = self.calls.get() + 1;
+        self.calls.set(call);
+        self.armed.set(None);
+        if self.plan.faults.is_empty() {
+            return Ok(());
+        }
+        for fault in self.plan.faults.iter() {
+            if fault.rank == self.rank && fault.at_call == call {
+                match fault.kind {
+                    FaultKind::Crash => {
+                        self.stats.borrow_mut().faults.injected_crashes += 1;
+                        self.mark_crashed();
+                        return Err(CommError::Crashed { rank: self.rank, at_call: call });
+                    }
+                    kind => self.armed.set(Some(kind)),
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Raise this rank's crash flag and wake every blocked receiver so
+    /// peers detect the failure immediately instead of waiting out
+    /// their recv deadline.
+    fn mark_crashed(&self) {
+        self.crashed[self.rank].store(true, Ordering::SeqCst);
+        for mb in self.mailboxes.iter() {
+            // Lock briefly so a peer between its queue check and its
+            // condvar wait cannot miss the notification.
+            let _q = mb.queue.lock().unwrap();
+            mb.cv.notify_all();
+        }
+    }
+
+    /// Terminal failure on this rank: raise the crash flag (waking
+    /// blocked peers) and unwind with the typed error as payload —
+    /// [`World::try_run`] catches it at the thread boundary.
+    pub(crate) fn fail(&self, err: CommError) -> ! {
+        self.mark_crashed();
+        std::panic::panic_any(err)
+    }
+
     /// Point-to-point send of a typed buffer. Counts `len·size_of::<T>`
     /// bytes and one message (self-sends are not counted and bypass the
     /// mailbox — MPI semantics where local copies are free).
+    ///
+    /// An armed drop/delay/corrupt fault is consumed by the first
+    /// *remote* send: a dropped message is still accounted (the sender
+    /// believes it sent) but never deposited; a delayed message sleeps
+    /// then delivers intact; a corrupt message deposits poisoned.
     pub fn send<T: Send + 'static>(&self, dst: usize, tag: u64, data: Vec<T>) {
         assert!(dst < self.p, "send to invalid rank {dst}");
         let bytes = (data.len() * std::mem::size_of::<T>()) as u64;
         if dst == self.rank {
-            // Local move: deliver without counting.
+            // Local move: deliver without counting (and without faults
+            // — injected faults model the network).
             let mb = &self.mailboxes[dst];
             let mut q = mb.queue.lock().unwrap();
-            q.push(Envelope { src: self.rank, tag, payload: Box::new(data) });
+            q.push(Envelope { src: self.rank, tag, corrupt: false, payload: Box::new(data) });
             mb.cv.notify_all();
             return;
+        }
+        let mut corrupt = false;
+        match self.armed.take() {
+            None => {}
+            Some(FaultKind::Drop) => {
+                self.stats.borrow_mut().faults.injected_drops += 1;
+                // Accounted but lost in flight: the receiver's bounded
+                // deadline is the detector.
+                self.record(PhaseStats { msgs: 1, bytes, rounds: 0, crit_bytes: 0 });
+                return;
+            }
+            Some(FaultKind::DelayMs(ms)) => {
+                self.stats.borrow_mut().faults.injected_delays += 1;
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+            Some(FaultKind::Corrupt) => {
+                self.stats.borrow_mut().faults.injected_corruptions += 1;
+                corrupt = true;
+            }
+            Some(FaultKind::Crash) => unreachable!("crash faults fire at fault_tick"),
         }
         self.record(PhaseStats { msgs: 1, bytes, rounds: 0, crit_bytes: 0 });
         let mb = &self.mailboxes[dst];
         let mut q = mb.queue.lock().unwrap();
-        q.push(Envelope { src: self.rank, tag, payload: Box::new(data) });
+        q.push(Envelope { src: self.rank, tag, corrupt, payload: Box::new(data) });
         mb.cv.notify_all();
     }
 
     /// Blocking receive matching `(src, tag)`.
     ///
-    /// Panics on type mismatch or after the deadlock timeout.
+    /// Panics on type mismatch; a communication failure (timeout, peer
+    /// crash, corrupt payload) unwinds via [`Comm::fail`] with the
+    /// typed error — [`World::run`] re-raises it as the historical
+    /// string panic, [`World::try_run`] reports it as a
+    /// [`CommFailure`].
     pub fn recv<T: Send + 'static>(&self, src: usize, tag: u64) -> Vec<T> {
+        self.try_recv(src, tag).unwrap_or_else(|e| self.fail(e))
+    }
+
+    /// Fallible receive matching `(src, tag)`: blocks until a matching
+    /// message arrives, the peer's crash flag rises, or the bounded
+    /// deadline expires — every outcome is a value, never a hang.
+    ///
+    /// Messages already in the queue win over a raised crash flag, so
+    /// everything a peer sent before failing is still consumable —
+    /// this keeps failure detection deterministic (a message either
+    /// exists or never will; timing only affects how fast we notice).
+    pub fn try_recv<T: Send + 'static>(&self, src: usize, tag: u64) -> Result<Vec<T>, CommError> {
         let mb = &self.mailboxes[self.rank];
-        let deadline = std::time::Instant::now() + recv_timeout();
+        let timeout =
+            self.plan.recv_timeout_ms.map(Duration::from_millis).unwrap_or_else(recv_timeout);
+        let deadline = Instant::now() + timeout;
         let mut q = mb.queue.lock().unwrap();
         loop {
             if let Some(pos) = q.iter().position(|e| e.src == src && e.tag == tag) {
                 let env = q.remove(pos);
                 drop(q);
-                return *env
+                if env.corrupt {
+                    self.stats.borrow_mut().faults.detected_corruptions += 1;
+                    return Err(CommError::Corrupt { rank: self.rank, src, tag });
+                }
+                return Ok(*env
                     .payload
                     .downcast::<Vec<T>>()
-                    .unwrap_or_else(|_| panic!("type mismatch on recv from {src} tag {tag}"));
+                    .unwrap_or_else(|_| panic!("type mismatch on recv from {src} tag {tag}")));
             }
-            let now = std::time::Instant::now();
+            if self.crashed[src].load(Ordering::SeqCst) {
+                drop(q);
+                self.stats.borrow_mut().faults.detected_peer_crashes += 1;
+                return Err(CommError::PeerCrashed { rank: self.rank, peer: src });
+            }
+            let now = Instant::now();
             if now >= deadline {
-                panic!(
-                    "rank {}: recv timeout waiting for src={} tag={} (protocol deadlock?)",
-                    self.rank, src, tag
-                );
+                drop(q);
+                self.stats.borrow_mut().faults.detected_timeouts += 1;
+                return Err(CommError::RecvTimeout { rank: self.rank, src, tag });
             }
             let (qq, _t) = mb.cv.wait_timeout(q, deadline - now).unwrap();
             q = qq;
@@ -320,5 +565,78 @@ mod tests {
                 let _: Vec<u32> = comm.recv(0, 9);
             }
         });
+    }
+
+    #[test]
+    fn try_recv_times_out_with_typed_error() {
+        let plan =
+            FaultPlan { seed: 0, recv_timeout_ms: Some(50), faults: Vec::new() };
+        let out = World::try_run(2, plan, |comm| {
+            if comm.rank() == 1 {
+                comm.try_recv::<u8>(0, 99).err()
+            } else {
+                None
+            }
+        })
+        .expect("errors returned as values do not fail the run");
+        assert_eq!(out.0[1], Some(CommError::RecvTimeout { rank: 1, src: 0, tag: 99 }));
+        assert_eq!(out.1[1].faults.detected_timeouts, 1);
+    }
+
+    #[test]
+    fn crash_flag_wakes_blocked_peer() {
+        use crate::comm::fault::Fault;
+        // Rank 0 crashes at its first tick; rank 1 blocks on a recv
+        // from it with NO short timeout — detection must come from the
+        // crash flag, not the deadline.
+        let plan = FaultPlan {
+            seed: 0,
+            recv_timeout_ms: None,
+            faults: vec![Fault { rank: 0, at_call: 1, batch: 0, kind: FaultKind::Crash }],
+        };
+        let failure = World::try_run(2, plan, |comm| -> usize {
+            if comm.rank() == 0 {
+                if let Err(e) = comm.fault_tick() {
+                    comm.fail(e);
+                }
+                unreachable!("rank 0 must crash at its first tick")
+            } else {
+                let _: Vec<u8> = comm.recv(0, 5);
+                unreachable!("rank 1 must observe the crash")
+            }
+        })
+        .expect_err("the crash must surface as a CommFailure");
+        assert_eq!(failure.error, CommError::Crashed { rank: 0, at_call: 1 });
+        assert_eq!(failure.crashed_ranks, vec![0]);
+        assert_eq!(failure.stats[0].faults.injected_crashes, 1);
+        assert_eq!(failure.stats[1].faults.detected_peer_crashes, 1);
+    }
+
+    #[test]
+    fn queued_messages_win_over_crash_flag() {
+        use crate::comm::fault::Fault;
+        // Rank 0 sends, then crashes: rank 1 must still consume the
+        // pre-crash message before seeing the failure.
+        let plan = FaultPlan {
+            seed: 0,
+            recv_timeout_ms: None,
+            faults: vec![Fault { rank: 0, at_call: 1, batch: 0, kind: FaultKind::Crash }],
+        };
+        let failure = World::try_run(2, plan, |comm| -> usize {
+            if comm.rank() == 0 {
+                comm.send(1, 3, vec![7u32]);
+                if let Err(e) = comm.fault_tick() {
+                    comm.fail(e);
+                }
+                unreachable!()
+            } else {
+                let v: Vec<u32> = comm.recv(0, 3);
+                assert_eq!(v, vec![7]);
+                let _: Vec<u32> = comm.recv(0, 4); // never sent
+                unreachable!()
+            }
+        })
+        .expect_err("rank 1's second recv must fail");
+        assert_eq!(failure.stats[1].faults.detected_peer_crashes, 1);
     }
 }

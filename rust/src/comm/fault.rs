@@ -1,0 +1,370 @@
+//! Deterministic fault injection for the simulated fabric.
+//!
+//! A [`FaultPlan`] is a seeded, fully explicit list of [`Fault`]s the
+//! fabric injects while a [`super::World`] runs: a rank **crash** at
+//! its Nth collective call, a **dropped** message (true loss — the
+//! receiver's bounded recv deadline detects it), a bounded **delay**
+//! (the run still completes, bit-identically), or a **corrupted**
+//! payload (modeled as checksum-detected: the receiver sees the
+//! poisoned envelope and raises a typed error instead of consuming
+//! garbage). Every failure surfaces as a typed [`CommError`] — never a
+//! hang — through [`super::World::try_run`] and the fallible `try_*`
+//! collective variants; the infallible collectives delegate with
+//! [`FaultPlan::none`] and stay bitwise unchanged.
+//!
+//! Determinism contract: faults trigger on the per-rank **primitive
+//! collective call counter** (bcast, gather, allgather, reduce,
+//! reduce_scatter_block, alltoallv each tick it once; composites like
+//! allreduce tick through their primitives), not on wall-clock time,
+//! so the same plan on the same program yields the identical failure
+//! point, the identical fault counters, and the identical surviving
+//! state on every run — the pin `rust/tests/fault.rs` enforces.
+
+use std::fmt;
+
+/// What a single injected fault does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The rank stops dead at the faulted collective call: it sends
+    /// nothing further and its crash flag wakes every blocked peer.
+    Crash,
+    /// The rank's next fabric send is lost in flight (the receiver's
+    /// bounded recv deadline turns the loss into
+    /// [`CommError::RecvTimeout`]).
+    Drop,
+    /// The rank's next fabric send is delayed by this many
+    /// milliseconds, then delivered intact — the run completes with
+    /// bit-identical results, only the injected-delay counter moves.
+    DelayMs(u64),
+    /// The rank's next fabric send arrives checksum-poisoned; the
+    /// receiver raises [`CommError::Corrupt`] instead of consuming it.
+    Corrupt,
+}
+
+impl FaultKind {
+    fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Crash => "crash",
+            FaultKind::Drop => "drop",
+            FaultKind::DelayMs(_) => "delay",
+            FaultKind::Corrupt => "corrupt",
+        }
+    }
+}
+
+/// One injected fault: `kind` fires on `rank` at its `at_call`-th
+/// primitive collective call (1-based), within stream batch `batch`
+/// (drivers launching one `World` per batch filter on it via
+/// [`FaultPlan::for_batch`]; single-launch callers leave it 0).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fault {
+    pub rank: usize,
+    pub at_call: u64,
+    pub batch: usize,
+    pub kind: FaultKind,
+}
+
+/// A deterministic, seeded fault schedule plus the bounded recv
+/// deadline override. [`FaultPlan::none`] (the [`Default`]) injects
+/// nothing and leaves the fabric bitwise on its fault-free path.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Provenance seed (recorded so a failure report can name the plan
+    /// that produced it; the faults themselves are already explicit).
+    pub seed: u64,
+    /// Bounded recv deadline in milliseconds for this run, overriding
+    /// the `VIVALDI_RECV_TIMEOUT_SECS` environment default. Plans with
+    /// drop faults should set it low — the timeout is the drop
+    /// detector.
+    pub recv_timeout_ms: Option<u64>,
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// The empty plan: nothing injected, fabric bitwise unchanged.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// True when the plan injects nothing and overrides nothing.
+    pub fn is_none(&self) -> bool {
+        self.faults.is_empty() && self.recv_timeout_ms.is_none()
+    }
+
+    /// A plan with exactly one fault (batch 0).
+    pub fn single(kind: FaultKind, rank: usize, at_call: u64) -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            recv_timeout_ms: None,
+            faults: vec![Fault { rank, at_call, batch: 0, kind }],
+        }
+    }
+
+    /// Seeded single-crash generator: derives (rank, at_call, batch)
+    /// from `seed` with an xorshift mix — the same seed always builds
+    /// the same plan, the determinism anchor of the fault test wall.
+    /// `p`, `max_call >= 1`, and `batches >= 1` bound the draw.
+    pub fn random_crash(seed: u64, p: usize, max_call: u64, batches: usize) -> FaultPlan {
+        assert!(p >= 1 && max_call >= 1 && batches >= 1);
+        let mut x = seed ^ 0x9E3779B97F4A7C15;
+        let mut next = || {
+            // xorshift64*: deterministic, dependency-free.
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            x.wrapping_mul(0x2545F4914F6CDD1D)
+        };
+        let rank = (next() % p as u64) as usize;
+        let at_call = 1 + next() % max_call;
+        let batch = (next() % batches as u64) as usize;
+        FaultPlan {
+            seed,
+            recv_timeout_ms: None,
+            faults: vec![Fault { rank, at_call, batch, kind: FaultKind::Crash }],
+        }
+    }
+
+    /// The sub-plan for one stream batch: the faults whose `batch`
+    /// matches, with the seed and timeout carried along. A driver that
+    /// launches one `World` per batch hands each launch exactly its
+    /// own faults.
+    pub fn for_batch(&self, batch: usize) -> FaultPlan {
+        FaultPlan {
+            seed: self.seed,
+            recv_timeout_ms: self.recv_timeout_ms,
+            faults: self.faults.iter().filter(|f| f.batch == batch).copied().collect(),
+        }
+    }
+
+    /// Parse the CLI grammar: `;`-separated entries, each either a
+    /// global knob (`seed=S`, `timeout-ms=T`) or a fault
+    /// `kind:rank=R,call=N[,batch=B][,ms=D]` with kind one of
+    /// `crash|drop|delay|corrupt` (`ms` is the delay length, delay
+    /// only). Example:
+    /// `timeout-ms=2000;crash:rank=1,call=3,batch=2`.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::none();
+        for entry in spec.split(';').map(str::trim).filter(|e| !e.is_empty()) {
+            if let Some(v) = entry.strip_prefix("seed=") {
+                plan.seed = v.parse().map_err(|_| format!("bad seed in fault plan: {entry:?}"))?;
+                continue;
+            }
+            if let Some(v) = entry.strip_prefix("timeout-ms=") {
+                let t: u64 =
+                    v.parse().map_err(|_| format!("bad timeout-ms in fault plan: {entry:?}"))?;
+                if t == 0 {
+                    return Err("fault plan timeout-ms must be >= 1".into());
+                }
+                plan.recv_timeout_ms = Some(t);
+                continue;
+            }
+            let (kind_name, rest) = entry
+                .split_once(':')
+                .ok_or_else(|| format!("fault entry {entry:?} needs kind:key=val,..."))?;
+            let mut rank = None;
+            let mut call = None;
+            let mut batch = 0usize;
+            let mut ms = 1u64;
+            for kv in rest.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                let (key, val) = kv
+                    .split_once('=')
+                    .ok_or_else(|| format!("fault field {kv:?} is not key=value"))?;
+                let parsed: u64 =
+                    val.parse().map_err(|_| format!("fault field {kv:?} is not a number"))?;
+                match key {
+                    "rank" => rank = Some(parsed as usize),
+                    "call" => call = Some(parsed),
+                    "batch" => batch = parsed as usize,
+                    "ms" => ms = parsed,
+                    _ => return Err(format!("unknown fault field {key:?} in {entry:?}")),
+                }
+            }
+            let rank = rank.ok_or_else(|| format!("fault entry {entry:?} needs rank="))?;
+            let at_call = call.ok_or_else(|| format!("fault entry {entry:?} needs call="))?;
+            if at_call == 0 {
+                return Err(format!("fault entry {entry:?}: call is 1-based (call >= 1)"));
+            }
+            let kind = match kind_name {
+                "crash" => FaultKind::Crash,
+                "drop" => FaultKind::Drop,
+                "delay" => FaultKind::DelayMs(ms),
+                "corrupt" => FaultKind::Corrupt,
+                other => return Err(format!("unknown fault kind {other:?} in {entry:?}")),
+            };
+            plan.faults.push(Fault { rank, at_call, batch, kind });
+        }
+        Ok(plan)
+    }
+}
+
+/// Typed communication failure — what every fabric fault surfaces as
+/// instead of a hang or an untyped panic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CommError {
+    /// This rank was crashed by an injected fault at its `at_call`-th
+    /// collective call.
+    Crashed { rank: usize, at_call: u64 },
+    /// This rank needed a message from `peer`, which has crashed (or
+    /// failed and cascaded) — detection is immediate via the crash
+    /// flag, no timeout is burned.
+    PeerCrashed { rank: usize, peer: usize },
+    /// The bounded recv deadline expired: a dropped message, or a real
+    /// protocol deadlock. The Display wording is the fabric's
+    /// long-standing deadlock diagnostic.
+    RecvTimeout { rank: usize, src: usize, tag: u64 },
+    /// A checksum-poisoned payload arrived from `src` — rejected
+    /// instead of consumed.
+    Corrupt { rank: usize, src: usize, tag: u64 },
+}
+
+impl fmt::Display for CommError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CommError::Crashed { rank, at_call } => {
+                write!(f, "rank {rank}: injected crash at collective call {at_call}")
+            }
+            CommError::PeerCrashed { rank, peer } => {
+                write!(f, "rank {rank}: peer rank {peer} crashed")
+            }
+            CommError::RecvTimeout { rank, src, tag } => write!(
+                f,
+                "rank {rank}: recv timeout waiting for src={src} tag={tag} (protocol deadlock?)"
+            ),
+            CommError::Corrupt { rank, src, tag } => {
+                write!(f, "rank {rank}: corrupt payload from src={src} tag={tag}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
+
+impl CommError {
+    /// The rank that raised the error.
+    pub fn rank(&self) -> usize {
+        match *self {
+            CommError::Crashed { rank, .. }
+            | CommError::PeerCrashed { rank, .. }
+            | CommError::RecvTimeout { rank, .. }
+            | CommError::Corrupt { rank, .. } => rank,
+        }
+    }
+
+    /// Short machine-readable kind name (counters, logs, tests).
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            CommError::Crashed { .. } => "crashed",
+            CommError::PeerCrashed { .. } => "peer-crashed",
+            CommError::RecvTimeout { .. } => "recv-timeout",
+            CommError::Corrupt { .. } => "corrupt",
+        }
+    }
+}
+
+impl fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultKind::DelayMs(ms) => write!(f, "delay({ms}ms)"),
+            k => write!(f, "{}", k.name()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_plan_is_inert() {
+        let p = FaultPlan::none();
+        assert!(p.is_none());
+        assert!(p.for_batch(3).faults.is_empty());
+        assert!(!FaultPlan::single(FaultKind::Crash, 0, 1).is_none());
+    }
+
+    #[test]
+    fn random_crash_is_seed_deterministic() {
+        let a = FaultPlan::random_crash(42, 4, 10, 5);
+        let b = FaultPlan::random_crash(42, 4, 10, 5);
+        assert_eq!(a.faults, b.faults);
+        assert_eq!(a.faults.len(), 1);
+        let f = a.faults[0];
+        assert!(f.rank < 4);
+        assert!((1..=10).contains(&f.at_call));
+        assert!(f.batch < 5);
+        assert_eq!(f.kind, FaultKind::Crash);
+        // A different seed moves the draw (for these constants).
+        let c = FaultPlan::random_crash(43, 4, 10, 5);
+        assert_ne!((a.faults[0].rank, a.faults[0].at_call, a.faults[0].batch),
+                   (c.faults[0].rank, c.faults[0].at_call, c.faults[0].batch));
+    }
+
+    #[test]
+    fn for_batch_filters() {
+        let plan = FaultPlan {
+            seed: 7,
+            recv_timeout_ms: Some(500),
+            faults: vec![
+                Fault { rank: 0, at_call: 1, batch: 0, kind: FaultKind::Crash },
+                Fault { rank: 1, at_call: 2, batch: 2, kind: FaultKind::Drop },
+            ],
+        };
+        let b2 = plan.for_batch(2);
+        assert_eq!(b2.faults.len(), 1);
+        assert_eq!(b2.faults[0].rank, 1);
+        assert_eq!(b2.recv_timeout_ms, Some(500));
+        assert!(plan.for_batch(1).faults.is_empty());
+    }
+
+    #[test]
+    fn parse_round_trips_the_grammar() {
+        let plan = FaultPlan::parse(
+            "seed=9;timeout-ms=2000;crash:rank=1,call=3,batch=2;delay:rank=0,call=1,ms=5;\
+             drop:rank=2,call=4;corrupt:rank=3,call=2,batch=1",
+        )
+        .unwrap();
+        assert_eq!(plan.seed, 9);
+        assert_eq!(plan.recv_timeout_ms, Some(2000));
+        assert_eq!(
+            plan.faults,
+            vec![
+                Fault { rank: 1, at_call: 3, batch: 2, kind: FaultKind::Crash },
+                Fault { rank: 0, at_call: 1, batch: 0, kind: FaultKind::DelayMs(5) },
+                Fault { rank: 2, at_call: 4, batch: 0, kind: FaultKind::Drop },
+                Fault { rank: 3, at_call: 2, batch: 1, kind: FaultKind::Corrupt },
+            ]
+        );
+        assert!(FaultPlan::parse("").unwrap().is_none());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "crash",                      // no fields
+            "crash:call=1",               // missing rank
+            "crash:rank=0",               // missing call
+            "crash:rank=0,call=0",        // call is 1-based
+            "blowup:rank=0,call=1",       // unknown kind
+            "crash:rank=0,call=1,x=2",    // unknown field
+            "crash:rank=zero,call=1",     // not a number
+            "timeout-ms=0",               // zero deadline
+            "seed=abc",                   // bad seed
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn errors_display_and_classify() {
+        let e = CommError::RecvTimeout { rank: 2, src: 0, tag: 7 };
+        let msg = e.to_string();
+        assert!(msg.contains("recv timeout waiting for src=0 tag=7"), "{msg}");
+        assert!(msg.contains("(protocol deadlock?)"), "{msg}");
+        assert_eq!(e.rank(), 2);
+        assert_eq!(e.kind_name(), "recv-timeout");
+        assert_eq!(CommError::Crashed { rank: 1, at_call: 4 }.kind_name(), "crashed");
+        assert_eq!(CommError::PeerCrashed { rank: 0, peer: 3 }.rank(), 0);
+        assert_eq!(CommError::Corrupt { rank: 1, src: 2, tag: 9 }.kind_name(), "corrupt");
+        assert_eq!(FaultKind::DelayMs(5).to_string(), "delay(5ms)");
+    }
+}

@@ -16,18 +16,26 @@
 //!   from which Table I and the runtime-breakdown figures are produced.
 //! * [`grid::Grid2D`] arranges ranks column-major (required by the 1.5D
 //!   reduce-scatter layout, paper §V.C) and derives row/column groups.
+//! * [`fault`] injects deterministic, seeded failures ([`FaultPlan`]:
+//!   rank crashes at the Nth collective, message drops, bounded delays,
+//!   payload corruption); [`World::try_run`] and the `try_*` collective
+//!   variants surface every failure as a typed [`CommError`] within a
+//!   bounded recv deadline — never a hang — while the infallible APIs
+//!   delegate with [`FaultPlan::none`] and stay bitwise unchanged.
 //!
 //! Ranks execute real numerics concurrently; the fabric moves real data,
 //! so distributed results are testable against single-rank oracles.
 
 pub mod fabric;
 pub mod collectives;
+pub mod fault;
 pub mod grid;
 pub mod stats;
 
-pub use fabric::{Comm, World};
+pub use fabric::{Comm, CommFailure, World};
+pub use fault::{CommError, Fault, FaultKind, FaultPlan};
 pub use grid::Grid2D;
-pub use stats::{CommStats, PhaseStats};
+pub use stats::{CommStats, FaultCounters, PhaseStats};
 
 /// An ordered set of global ranks forming a communication group
 /// (world, a grid row, a grid column, ...). All collective operations

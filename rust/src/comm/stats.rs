@@ -45,10 +45,72 @@ impl PhaseStats {
     }
 }
 
+/// Fault-injection and recovery counters for one rank's ledger.
+///
+/// `injected_*` count faults this rank *fired* (it was the plan's
+/// victim); `detected_*` count failures this rank *observed* on
+/// receive (a peer's crash flag, a bounded-recv deadline, a poisoned
+/// payload). `retries` counts recovery replays credited to this rank
+/// by a driver (e.g. a checkpoint-restore in `approx::stream`). All
+/// are exact and deterministic for a given `FaultPlan` — the fault
+/// test wall pins them across thread counts.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct FaultCounters {
+    pub injected_crashes: u64,
+    pub injected_drops: u64,
+    pub injected_delays: u64,
+    pub injected_corruptions: u64,
+    pub detected_timeouts: u64,
+    pub detected_peer_crashes: u64,
+    pub detected_corruptions: u64,
+    pub retries: u64,
+}
+
+impl FaultCounters {
+    pub fn add(&mut self, other: &FaultCounters) {
+        self.injected_crashes += other.injected_crashes;
+        self.injected_drops += other.injected_drops;
+        self.injected_delays += other.injected_delays;
+        self.injected_corruptions += other.injected_corruptions;
+        self.detected_timeouts += other.detected_timeouts;
+        self.detected_peer_crashes += other.detected_peer_crashes;
+        self.detected_corruptions += other.detected_corruptions;
+        self.retries += other.retries;
+    }
+
+    /// Elementwise max (critical-path style aggregation).
+    pub fn max(&self, other: &FaultCounters) -> FaultCounters {
+        FaultCounters {
+            injected_crashes: self.injected_crashes.max(other.injected_crashes),
+            injected_drops: self.injected_drops.max(other.injected_drops),
+            injected_delays: self.injected_delays.max(other.injected_delays),
+            injected_corruptions: self.injected_corruptions.max(other.injected_corruptions),
+            detected_timeouts: self.detected_timeouts.max(other.detected_timeouts),
+            detected_peer_crashes: self.detected_peer_crashes.max(other.detected_peer_crashes),
+            detected_corruptions: self.detected_corruptions.max(other.detected_corruptions),
+            retries: self.retries.max(other.retries),
+        }
+    }
+
+    /// Total events of any kind (quick "anything happened?" probe).
+    pub fn total(&self) -> u64 {
+        self.injected_crashes
+            + self.injected_drops
+            + self.injected_delays
+            + self.injected_corruptions
+            + self.detected_timeouts
+            + self.detected_peer_crashes
+            + self.detected_corruptions
+            + self.retries
+    }
+}
+
 /// Per-rank ledger of [`PhaseStats`] keyed by phase label.
 #[derive(Debug, Default, Clone)]
 pub struct CommStats {
     phases: BTreeMap<String, PhaseStats>,
+    /// Fault/recovery events on this rank (fault injection layer).
+    pub faults: FaultCounters,
 }
 
 impl CommStats {
@@ -83,6 +145,7 @@ impl CommStats {
         for (k, v) in &other.phases {
             self.phases.entry(k.clone()).or_default().add(v);
         }
+        self.faults.add(&other.faults);
     }
 
     /// Merge by summation (aggregate volume across ranks).
@@ -92,6 +155,7 @@ impl CommStats {
             for (k, v) in &cs.phases {
                 out.phases.entry(k.clone()).or_default().add(v);
             }
+            out.faults.add(&cs.faults);
         }
         out
     }
@@ -104,6 +168,7 @@ impl CommStats {
                 let e = out.phases.entry(k.clone()).or_default();
                 *e = e.max(v);
             }
+            out.faults = out.faults.max(&cs.faults);
         }
         out
     }
@@ -137,5 +202,26 @@ mod tests {
         let max = CommStats::merged_max(&[a, b]);
         assert_eq!(max.get("x").msgs, 3);
         assert_eq!(max.get("x").bytes, 10);
+    }
+
+    #[test]
+    fn fault_counters_merge_with_phases() {
+        let mut a = CommStats::new();
+        a.faults.injected_crashes = 1;
+        a.faults.detected_timeouts = 2;
+        let mut b = CommStats::new();
+        b.faults.detected_peer_crashes = 3;
+        b.faults.detected_timeouts = 1;
+        let mut acc = a.clone();
+        acc.absorb(&b);
+        assert_eq!(acc.faults.injected_crashes, 1);
+        assert_eq!(acc.faults.detected_timeouts, 3);
+        assert_eq!(acc.faults.detected_peer_crashes, 3);
+        let sum = CommStats::merged_sum(&[a.clone(), b.clone()]);
+        assert_eq!(sum.faults.total(), 1 + 2 + 3 + 1);
+        let max = CommStats::merged_max(&[a, b]);
+        assert_eq!(max.faults.detected_timeouts, 2);
+        assert_eq!(max.faults.detected_peer_crashes, 3);
+        assert_eq!(FaultCounters::default().total(), 0);
     }
 }

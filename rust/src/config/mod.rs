@@ -396,6 +396,19 @@ pub fn tenant_rejection_report(
     landmark_stream_window_feasibility(batch, d, m, p, batch, k, window, &mem)
 }
 
+/// One-line note the eviction path appends to an over-budget `open`:
+/// how many bytes the open still needs after the resident tenants,
+/// how many cold (unpinned, snapshot-able) tenants are spill
+/// candidates, and how many bytes spilling all of them would free.
+/// Printed both when a spill plan exists (before the spill lines) and
+/// when it cannot cover the shortfall (before the rejection), so the
+/// arithmetic of the decision is always on the record.
+pub fn tenant_eviction_note(needed: u64, candidates: usize, freeable: u64) -> String {
+    format!(
+        "eviction check: need {needed} bytes, {candidates} cold tenant(s) can free {freeable} bytes"
+    )
+}
+
 /// Scaled-down experiment scale (paper values in comments).
 #[derive(Debug, Clone)]
 pub struct Scale {

@@ -50,6 +50,9 @@ pub(crate) fn parse_line(line: &str, d_cap: Option<usize>) -> Result<Option<Pars
     let label = label_tok
         .parse::<f64>()
         .map_err(|_| format!("unparseable label {label_tok:?}"))?;
+    if !label.is_finite() {
+        return Err(format!("non-finite label {label_tok:?}"));
+    }
     let mut features = Vec::new();
     let mut max_feat = 0usize;
     for tok in parts {
@@ -65,6 +68,9 @@ pub(crate) fn parse_line(line: &str, d_cap: Option<usize>) -> Result<Option<Pars
         let v = v
             .parse::<f32>()
             .map_err(|_| format!("unparseable feature value in token {tok:?}"))?;
+        if !v.is_finite() {
+            return Err(format!("non-finite feature value in token {tok:?}"));
+        }
         let idx = i - 1;
         if let Some(cap) = d_cap {
             if idx >= cap {
@@ -299,6 +305,30 @@ mod tests {
             let err = read_libsvm_sparse(&path, None, None).unwrap_err();
             assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{bad:?} (sparse)");
         }
+    }
+
+    #[test]
+    fn non_finite_values_are_rejected_at_parse() {
+        // `f32::from_str` happily accepts "nan"/"inf"; a poisoned value
+        // would propagate through every kernel evaluation downstream,
+        // so ingest refuses it with the offending token.
+        for bad in ["1 1:nan\n", "1 2:inf\n", "0 1:-inf\n", "1 3:infinity\n"] {
+            let err = parse_line(bad, None).unwrap_err();
+            assert!(err.contains("non-finite feature value"), "{bad:?}: {err}");
+        }
+        for bad in ["nan 1:1\n", "inf 1:1\n", "-inf 2:2\n"] {
+            let err = parse_line(bad, None).unwrap_err();
+            assert!(err.contains("non-finite label"), "{bad:?}: {err}");
+        }
+        // The whole-file readers surface the same rejection with a line
+        // number (provenance for the operator).
+        let dir = std::env::temp_dir().join("vivaldi_libsvm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("nonfinite.libsvm");
+        std::fs::write(&path, "0 1:1\n1 2:nan\n").unwrap();
+        let err = read_libsvm(&path, None, None).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("line 2"), "{err}");
     }
 
     #[test]

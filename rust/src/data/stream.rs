@@ -4,7 +4,7 @@
 //! Every batch path in the crate assumes the full point set is resident
 //! before `fit` runs; a [`PointSource`] inverts that contract — points
 //! arrive in caller-sized chunks, and only the chunk in flight is ever
-//! materialized. Two sources cover the repo's data story:
+//! materialized. The sources cover the repo's data story:
 //!
 //! * [`MatrixSource`] wraps an in-memory matrix (everything the
 //!   [`super::synth`] / [`super::datasets`] generators produce) so the
@@ -12,7 +12,14 @@
 //!   data.
 //! * [`LibsvmSource`] reads a libSVM file incrementally with a fixed
 //!   feature width — the real Table-II files never need to be densified
-//!   whole.
+//!   whole. A mid-stream I/O error is **resumable**: the source tracks
+//!   its byte offset, keeps already-parsed rows, and the next pull
+//!   carries on exactly where the failed read stopped.
+//! * [`RetrySource`] wraps any source with a capped-exponential-backoff
+//!   retry loop and a deterministic retry budget — exhaustion is a loud
+//!   typed error, never a silent truncation.
+//! * [`FlakySource`] is the fault injector for the above: it fails the
+//!   next N pulls with a deterministic error, then delegates.
 
 use super::Dataset;
 use crate::dense::DenseMatrix;
@@ -26,10 +33,13 @@ use std::path::Path;
 /// the source is cleanly exhausted, or `Err` on a mid-stream failure
 /// (an I/O error halfway through a file) — an error is **not** end of
 /// stream, so a broken feed can never silently truncate into a
-/// "successful" fit. Implementations must be deterministic: the same
-/// source replayed with the same batch sizes yields the same rows in
-/// the same order (the streaming tests replay sources against the batch
-/// oracle).
+/// "successful" fit. Transient errors may be retried by calling again
+/// (sources that can resume, like [`LibsvmSource`], pick up where the
+/// failed read stopped); fatal errors (malformed input) re-surface on
+/// every subsequent pull so a retry loop exhausts loudly instead of
+/// truncating. Implementations must be deterministic: the same source
+/// replayed with the same batch sizes yields the same rows in the same
+/// order (the streaming tests replay sources against the batch oracle).
 pub trait PointSource {
     /// Feature dimension of every batch this source yields.
     fn dim(&self) -> usize;
@@ -101,13 +111,185 @@ impl PointSource for MatrixSource<'_> {
     }
 }
 
+/// Wrap any [`PointSource`] with a bounded retry loop: each failed pull
+/// is retried up to `budget` times with capped exponential backoff
+/// (`base << attempt`, clamped to `max`), and budget exhaustion is a
+/// loud error naming the budget and the last underlying failure —
+/// never a silent truncation into `Ok(None)`.
+///
+/// Retrying is only useful over sources whose errors are transient and
+/// resumable ([`LibsvmSource`] / [`SparseLibsvmSource`] resume from
+/// their recorded byte offset; fatal parse errors re-surface on every
+/// retry until the budget exhausts, preserving fail-loud).
+pub struct RetrySource<S: PointSource> {
+    inner: S,
+    budget: u32,
+    base_backoff_ms: u64,
+    max_backoff_ms: u64,
+    retries: u64,
+}
+
+impl<S: PointSource> RetrySource<S> {
+    /// Wrap `inner`, allowing up to `budget` retries per pull with the
+    /// default 1 ms → 100 ms backoff ramp.
+    pub fn new(inner: S, budget: u32) -> Self {
+        RetrySource { inner, budget, base_backoff_ms: 1, max_backoff_ms: 100, retries: 0 }
+    }
+
+    /// Override the backoff ramp (tests pass `0, 0` to retry
+    /// immediately; `base << attempt` is clamped to `max`).
+    pub fn with_backoff(mut self, base_ms: u64, max_ms: u64) -> Self {
+        self.base_backoff_ms = base_ms;
+        self.max_backoff_ms = max_ms;
+        self
+    }
+
+    /// Total retries performed across the source's lifetime (the
+    /// service layer's degradation telemetry).
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
+    /// The wrapped source (counters like `rows_read` live there).
+    pub fn inner(&self) -> &S {
+        &self.inner
+    }
+
+    fn with_retry<T>(
+        &mut self,
+        mut pull: impl FnMut(&mut S) -> Result<T, String>,
+    ) -> Result<T, String> {
+        let mut attempt = 0u32;
+        loop {
+            match pull(&mut self.inner) {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    if attempt >= self.budget {
+                        return Err(format!(
+                            "retry budget exhausted after {} retries: {e}",
+                            self.budget
+                        ));
+                    }
+                    let backoff = self
+                        .base_backoff_ms
+                        .checked_shl(attempt)
+                        .unwrap_or(u64::MAX)
+                        .min(self.max_backoff_ms);
+                    if backoff > 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(backoff));
+                    }
+                    attempt += 1;
+                    self.retries += 1;
+                }
+            }
+        }
+    }
+}
+
+impl<S: PointSource> PointSource for RetrySource<S> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn next_batch(&mut self, max_rows: usize) -> Result<Option<DenseMatrix>, String> {
+        self.with_retry(|s| s.next_batch(max_rows))
+    }
+
+    fn next_batch_csr(&mut self, max_rows: usize) -> Result<Option<CsrMatrix>, String> {
+        self.with_retry(|s| s.next_batch_csr(max_rows))
+    }
+
+    fn hint_total(&self) -> Option<usize> {
+        self.inner.hint_total()
+    }
+}
+
+/// Deterministic fault injector for the retry path: fails the next
+/// `fail_next` pulls with an "injected flaky read" error, then
+/// delegates to the wrapped source untouched. Because the failure
+/// happens *before* the inner pull, no rows are consumed by a failed
+/// call — a retried pull sees exactly the stream it would have seen
+/// without the fault.
+pub struct FlakySource<S: PointSource> {
+    inner: S,
+    fail_next: u32,
+    injected: u64,
+}
+
+impl<S: PointSource> FlakySource<S> {
+    pub fn new(inner: S, fail_next: u32) -> Self {
+        FlakySource { inner, fail_next, injected: 0 }
+    }
+
+    /// Faults injected so far.
+    pub fn injected(&self) -> u64 {
+        self.injected
+    }
+
+    fn trip(&mut self) -> Result<(), String> {
+        if self.fail_next > 0 {
+            self.fail_next -= 1;
+            self.injected += 1;
+            return Err(format!("injected flaky read ({} more to come)", self.fail_next));
+        }
+        Ok(())
+    }
+}
+
+impl<S: PointSource> PointSource for FlakySource<S> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn next_batch(&mut self, max_rows: usize) -> Result<Option<DenseMatrix>, String> {
+        self.trip()?;
+        self.inner.next_batch(max_rows)
+    }
+
+    fn next_batch_csr(&mut self, max_rows: usize) -> Result<Option<CsrMatrix>, String> {
+        self.trip()?;
+        self.inner.next_batch_csr(max_rows)
+    }
+
+    fn hint_total(&self) -> Option<usize> {
+        self.inner.hint_total()
+    }
+}
+
 /// Incremental libSVM reader with a fixed feature width `d` (features
 /// past `d` are dropped, exactly like [`super::libsvm::read_libsvm`]'s
 /// `d_cap`). Labels are discarded — the stream is unsupervised input.
+///
+/// Failure contract: a mid-stream **I/O** error surfaces as `Err` with
+/// the byte offset, rows consumed, and in-flight batch index — and the
+/// source stays *resumable*: already-parsed rows and any partially-read
+/// line are retained, so the next pull (e.g. from [`RetrySource`])
+/// continues from exactly where the read stopped, with no row lost or
+/// duplicated. A **parse** error (malformed token) is fatal — retrying
+/// cannot fix the file — and re-surfaces on every subsequent pull so a
+/// retry loop exhausts its budget loudly instead of truncating.
+///
+/// One wrinkle of resumption: a resumed pull first drains the rows
+/// parsed before the failure, so it can return more than `max_rows`
+/// rows if the retry asks with a larger `max_rows` than the failed
+/// pull did. Retry loops that reuse the same `max_rows` (the only
+/// pattern in this crate) always get at-most-`max_rows` chunks.
 pub struct LibsvmSource<R: BufRead> {
     reader: R,
     d: usize,
     rows_read: usize,
+    byte_offset: u64,
+    batches: usize,
+    /// Partially-read line retained across a failed `read_line` (the
+    /// bytes were already consumed from the reader; dropping them
+    /// would corrupt the resumed stream).
+    partial: String,
+    /// Rows parsed before a failed read, densified, waiting for the
+    /// resuming pull.
+    pending: Vec<f32>,
+    pending_rows: usize,
+    /// A fatal (non-retryable) error; re-surfaced on every pull.
+    fatal: Option<String>,
     done: bool,
 }
 
@@ -123,12 +305,29 @@ impl<R: BufRead> LibsvmSource<R> {
     /// Stream from any buffered reader (tests use in-memory strings).
     pub fn from_reader(reader: R, d: usize) -> Self {
         assert!(d >= 1, "feature width must be positive");
-        LibsvmSource { reader, d, rows_read: 0, done: false }
+        LibsvmSource {
+            reader,
+            d,
+            rows_read: 0,
+            byte_offset: 0,
+            batches: 0,
+            partial: String::new(),
+            pending: Vec::new(),
+            pending_rows: 0,
+            fatal: None,
+            done: false,
+        }
     }
 
     /// Rows parsed so far.
     pub fn rows_read(&self) -> usize {
         self.rows_read
+    }
+
+    /// Bytes consumed from the underlying reader so far (the resume
+    /// position reported by mid-stream errors).
+    pub fn byte_offset(&self) -> u64 {
+        self.byte_offset
     }
 }
 
@@ -139,42 +338,60 @@ impl<R: BufRead> PointSource for LibsvmSource<R> {
 
     fn next_batch(&mut self, max_rows: usize) -> Result<Option<DenseMatrix>, String> {
         assert!(max_rows >= 1, "batch size must be positive");
-        if self.done {
+        if let Some(msg) = &self.fatal {
+            return Err(msg.clone());
+        }
+        if self.done && self.pending_rows == 0 {
             return Ok(None);
         }
-        let mut data = Vec::with_capacity(max_rows * self.d);
-        let mut rows = 0usize;
-        let mut line = String::new();
-        while rows < max_rows {
-            line.clear();
-            match self.reader.read_line(&mut line) {
-                Ok(0) => {
-                    self.done = true;
-                    break;
-                }
+        let mut data = std::mem::take(&mut self.pending);
+        let mut rows = std::mem::replace(&mut self.pending_rows, 0);
+        while rows < max_rows && !self.done {
+            let start = self.partial.len();
+            let n = match self.reader.read_line(&mut self.partial) {
+                Ok(n) => n,
                 // A mid-file read failure is an error, not end-of-file:
-                // surfacing it (rather than truncating) is the whole
-                // point of the Result contract.
+                // park the parsed rows and the partial line so the next
+                // pull resumes exactly here.
                 Err(e) => {
-                    self.done = true;
+                    self.byte_offset += (self.partial.len() - start) as u64;
+                    self.pending = data;
+                    self.pending_rows = rows;
                     return Err(format!(
-                        "libSVM stream failed after {} rows: {e}",
-                        self.rows_read + rows
+                        "libSVM stream failed at byte offset {} after {} rows \
+                         (batch {}): {e}; {rows} parsed rows held for resume",
+                        self.byte_offset,
+                        self.rows_read + rows,
+                        self.batches
                     ));
                 }
-                Ok(_) => {}
+            };
+            self.byte_offset += n as u64;
+            if n == 0 {
+                self.done = true;
+                if self.partial.is_empty() {
+                    break;
+                }
+                // fall through: the stream ended on a partial line kept
+                // from a failed read — parse it as the final row.
             }
+            let line = std::mem::take(&mut self.partial);
             let parsed = match super::libsvm::parse_line(&line, Some(self.d)) {
                 Ok(Some(p)) => p,
                 Ok(None) => continue, // blank / comment line
-                // Malformed tokens are stream failures, same contract
-                // as a mid-file read error — never silently dropped.
+                // Malformed tokens cannot be fixed by retrying: fatal,
+                // and sticky so a retry loop fails loudly every time.
                 Err(msg) => {
+                    let msg = format!(
+                        "libSVM parse error at byte offset {} after {} rows \
+                         (batch {}): {msg}",
+                        self.byte_offset,
+                        self.rows_read + rows,
+                        self.batches
+                    );
+                    self.fatal = Some(msg.clone());
                     self.done = true;
-                    return Err(format!(
-                        "libSVM parse error after {} rows: {msg}",
-                        self.rows_read + rows
-                    ));
+                    return Err(msg);
                 }
             };
             let row_start = data.len();
@@ -188,23 +405,29 @@ impl<R: BufRead> PointSource for LibsvmSource<R> {
             return Ok(None);
         }
         self.rows_read += rows;
+        self.batches += 1;
         Ok(Some(DenseMatrix::from_vec(rows, self.d, data)))
     }
 }
 
 /// Incremental libSVM reader that keeps every chunk in CSR form: the
 /// sparse streaming lane's native source. Same dialect, `d`-cap
-/// filtering, and fail-loud contract as [`LibsvmSource`], but
-/// `next_batch_csr` builds the chunk straight from the parsed rows —
-/// peak memory ∝ batch·nnz, so million-feature files stream through a
-/// fixed budget the densifying source could never meet. (`next_batch`
-/// still works, densifying one chunk, so the source remains a drop-in
-/// [`PointSource`] anywhere.)
+/// filtering, and fail-loud/resumable contract as [`LibsvmSource`],
+/// but `next_batch_csr` builds the chunk straight from the parsed
+/// rows — peak memory ∝ batch·nnz, so million-feature files stream
+/// through a fixed budget the densifying source could never meet.
+/// (`next_batch` still works, densifying one chunk, so the source
+/// remains a drop-in [`PointSource`] anywhere.)
 pub struct SparseLibsvmSource<R: BufRead> {
     reader: R,
     d: usize,
     rows_read: usize,
     nnz_read: u64,
+    byte_offset: u64,
+    batches: usize,
+    partial: String,
+    pending: Vec<Vec<(usize, f32)>>,
+    fatal: Option<String>,
     done: bool,
 }
 
@@ -220,7 +443,18 @@ impl<R: BufRead> SparseLibsvmSource<R> {
     /// Stream from any buffered reader (tests use in-memory strings).
     pub fn from_reader(reader: R, d: usize) -> Self {
         assert!(d >= 1, "feature width must be positive");
-        SparseLibsvmSource { reader, d, rows_read: 0, nnz_read: 0, done: false }
+        SparseLibsvmSource {
+            reader,
+            d,
+            rows_read: 0,
+            nnz_read: 0,
+            byte_offset: 0,
+            batches: 0,
+            partial: String::new(),
+            pending: Vec::new(),
+            fatal: None,
+            done: false,
+        }
     }
 
     /// Rows parsed so far.
@@ -231,6 +465,11 @@ impl<R: BufRead> SparseLibsvmSource<R> {
     /// Stored entries parsed so far (the lane's memory currency).
     pub fn nnz_read(&self) -> u64 {
         self.nnz_read
+    }
+
+    /// Bytes consumed from the underlying reader so far.
+    pub fn byte_offset(&self) -> u64 {
+        self.byte_offset
     }
 }
 
@@ -245,36 +484,52 @@ impl<R: BufRead> PointSource for SparseLibsvmSource<R> {
 
     fn next_batch_csr(&mut self, max_rows: usize) -> Result<Option<CsrMatrix>, String> {
         assert!(max_rows >= 1, "batch size must be positive");
-        if self.done {
+        if let Some(msg) = &self.fatal {
+            return Err(msg.clone());
+        }
+        if self.done && self.pending.is_empty() {
             return Ok(None);
         }
-        let mut rows: Vec<Vec<(usize, f32)>> = Vec::new();
-        let mut line = String::new();
-        while rows.len() < max_rows {
-            line.clear();
-            match self.reader.read_line(&mut line) {
-                Ok(0) => {
-                    self.done = true;
-                    break;
-                }
+        let mut rows: Vec<Vec<(usize, f32)>> = std::mem::take(&mut self.pending);
+        while rows.len() < max_rows && !self.done {
+            let start = self.partial.len();
+            let n = match self.reader.read_line(&mut self.partial) {
+                Ok(n) => n,
                 Err(e) => {
-                    self.done = true;
+                    self.byte_offset += (self.partial.len() - start) as u64;
+                    let held = rows.len();
+                    self.pending = rows;
                     return Err(format!(
-                        "libSVM stream failed after {} rows: {e}",
-                        self.rows_read + rows.len()
+                        "libSVM stream failed at byte offset {} after {} rows \
+                         (batch {}): {e}; {held} parsed rows held for resume",
+                        self.byte_offset,
+                        self.rows_read + held,
+                        self.batches
                     ));
                 }
-                Ok(_) => {}
+            };
+            self.byte_offset += n as u64;
+            if n == 0 {
+                self.done = true;
+                if self.partial.is_empty() {
+                    break;
+                }
             }
+            let line = std::mem::take(&mut self.partial);
             match super::libsvm::parse_line(&line, Some(self.d)) {
                 Ok(Some(p)) => rows.push(p.features),
                 Ok(None) => continue, // blank / comment line
                 Err(msg) => {
+                    let msg = format!(
+                        "libSVM parse error at byte offset {} after {} rows \
+                         (batch {}): {msg}",
+                        self.byte_offset,
+                        self.rows_read + rows.len(),
+                        self.batches
+                    );
+                    self.fatal = Some(msg.clone());
                     self.done = true;
-                    return Err(format!(
-                        "libSVM parse error after {} rows: {msg}",
-                        self.rows_read + rows.len()
-                    ));
+                    return Err(msg);
                 }
             }
         }
@@ -282,6 +537,7 @@ impl<R: BufRead> PointSource for SparseLibsvmSource<R> {
             return Ok(None);
         }
         self.rows_read += rows.len();
+        self.batches += 1;
         let csr = CsrMatrix::from_rows(self.d, &rows);
         self.nnz_read += csr.nnz() as u64;
         Ok(Some(csr))
@@ -336,6 +592,7 @@ mod tests {
         assert_eq!(b2.get(1, 3), 4.0);
         assert!(src.next_batch(2).unwrap().is_none());
         assert_eq!(src.rows_read(), 4);
+        assert_eq!(src.byte_offset(), text.len() as u64);
     }
 
     #[test]
@@ -374,35 +631,170 @@ mod tests {
         }
     }
 
+    /// A reader driven by a script of reads: each entry is either a
+    /// chunk of bytes or an injected I/O error; past the script's end
+    /// it reports clean EOF. Lets tests place a transient failure at an
+    /// exact byte position and then *recover*.
+    struct ScriptedReader {
+        script: std::collections::VecDeque<Result<&'static [u8], &'static str>>,
+    }
+
+    impl ScriptedReader {
+        fn new(script: Vec<Result<&'static [u8], &'static str>>) -> BufReader<Self> {
+            BufReader::new(ScriptedReader { script: script.into() })
+        }
+    }
+
+    impl std::io::Read for ScriptedReader {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            match self.script.pop_front() {
+                None => Ok(0),
+                Some(Err(msg)) => Err(std::io::Error::other(msg)),
+                Some(Ok(bytes)) => {
+                    assert!(bytes.len() <= buf.len(), "scripted chunk exceeds read buffer");
+                    buf[..bytes.len()].copy_from_slice(bytes);
+                    Ok(bytes.len())
+                }
+            }
+        }
+    }
+
     #[test]
     fn libsvm_source_surfaces_midstream_errors() {
         let reader = std::io::BufReader::new(FailingReader { fed: b"1 1:1\n0 2:2\n", pos: 0 });
         let mut src = LibsvmSource::from_reader(reader, 3);
         let b = src.next_batch(2).unwrap().unwrap();
         assert_eq!(b.rows(), 2);
-        // The next pull hits the failing read: an error, not Ok(None).
+        // The next pull hits the failing read: an error, not Ok(None),
+        // carrying the resume position.
         let err = src.next_batch(2).unwrap_err();
         assert!(err.contains("after 2 rows"), "{err}");
-        // And the source stays terminated afterwards.
-        assert!(src.next_batch(2).unwrap().is_none());
+        assert!(err.contains("byte offset 12"), "{err}");
+        assert!(err.contains("batch 1"), "{err}");
+        // The source is NOT terminated: the error keeps surfacing on
+        // every retry (the reader never recovers here), never a silent
+        // truncation into Ok(None).
+        let err = src.next_batch(2).unwrap_err();
+        assert!(err.contains("after 2 rows"), "{err}");
+        assert_eq!(src.rows_read(), 2);
+    }
+
+    #[test]
+    fn libsvm_source_resumes_after_transient_error() {
+        // The read fails mid-line, with one row already parsed in the
+        // in-flight batch. The retry must see every row exactly once:
+        // the parsed row is held, the partial line's consumed bytes are
+        // kept, and the resumed pull completes the batch.
+        let reader = ScriptedReader::new(vec![
+            Ok(b"1 1:1\n0 2:"),
+            Err("transient blip"),
+            Ok(b"2\n-1 3:3\n"),
+        ]);
+        let mut src = LibsvmSource::from_reader(reader, 3);
+        let err = src.next_batch(3).unwrap_err();
+        assert!(err.contains("after 1 rows"), "{err}");
+        assert!(err.contains("1 parsed rows held for resume"), "{err}");
+        let b = src.next_batch(3).unwrap().unwrap();
+        assert_eq!(b.rows(), 3, "no row lost or duplicated across the resume");
+        assert_eq!(b.get(0, 0), 1.0);
+        assert_eq!(b.get(1, 1), 2.0);
+        assert_eq!(b.get(2, 2), 3.0);
+        assert!(src.next_batch(3).unwrap().is_none());
+        assert_eq!(src.rows_read(), 3);
+    }
+
+    #[test]
+    fn sparse_libsvm_source_resumes_after_transient_error() {
+        let reader = ScriptedReader::new(vec![
+            Ok(b"1 1:1\n0 2:"),
+            Err("transient blip"),
+            Ok(b"2\n-1 3:3\n"),
+        ]);
+        let mut src = SparseLibsvmSource::from_reader(reader, 3);
+        let err = src.next_batch_csr(3).unwrap_err();
+        assert!(err.contains("after 1 rows"), "{err}");
+        let c = src.next_batch_csr(3).unwrap().unwrap();
+        assert_eq!(c.rows(), 3);
+        assert_eq!(c.to_dense().get(2, 2), 3.0);
+        assert!(src.next_batch_csr(3).unwrap().is_none());
+        assert_eq!(src.rows_read(), 3);
+        assert_eq!(src.nnz_read(), 3);
     }
 
     #[test]
     fn libsvm_sources_surface_malformed_lines() {
         // A malformed token mid-stream is an Err on both sources, with
-        // the row position — never a silent drop (fail-loud contract).
+        // the row position — and it is *sticky*: a retry loop keeps
+        // hitting it until its budget exhausts, so a broken file can
+        // never truncate into a "successful" stream.
         let text = "1 1:0.5\n0 2:2\n-1 bogus\n";
         let mut dense = LibsvmSource::from_reader(std::io::Cursor::new(text), 3);
         assert_eq!(dense.next_batch(2).unwrap().unwrap().rows(), 2);
         let err = dense.next_batch(2).unwrap_err();
         assert!(err.contains("after 2 rows") && err.contains("bogus"), "{err}");
-        assert!(dense.next_batch(2).unwrap().is_none(), "terminated after the error");
+        let again = dense.next_batch(2).unwrap_err();
+        assert_eq!(again, err, "parse errors re-surface verbatim on retry");
 
         let mut sparse = SparseLibsvmSource::from_reader(std::io::Cursor::new(text), 3);
         assert_eq!(sparse.next_batch_csr(2).unwrap().unwrap().rows(), 2);
         let err = sparse.next_batch_csr(2).unwrap_err();
         assert!(err.contains("after 2 rows") && err.contains("bogus"), "{err}");
-        assert!(sparse.next_batch_csr(2).unwrap().is_none());
+        assert_eq!(sparse.next_batch_csr(2).unwrap_err(), err);
+    }
+
+    #[test]
+    fn retry_source_recovers_within_budget() {
+        let ds = synth::gaussian_blobs(40, 3, 2, 3.0, 11);
+        let flaky = FlakySource::new(MatrixSource::from_dataset(&ds), 2);
+        let mut src = RetrySource::new(flaky, 3).with_backoff(0, 0);
+        assert_eq!(src.dim(), 3);
+        assert_eq!(src.hint_total(), Some(40));
+        let mut chunks = Vec::new();
+        while let Some(b) = src.next_batch(16).unwrap() {
+            chunks.push(b);
+        }
+        // Both injected faults were retried away; the stream is exactly
+        // the wrapped matrix.
+        assert_eq!(DenseMatrix::vstack(&chunks), ds.points);
+        assert_eq!(src.retries(), 2);
+        assert_eq!(src.inner().injected(), 2);
+    }
+
+    #[test]
+    fn retry_source_exhausts_budget_loudly() {
+        let ds = synth::gaussian_blobs(10, 3, 2, 3.0, 11);
+        let flaky = FlakySource::new(MatrixSource::from_dataset(&ds), 5);
+        let mut src = RetrySource::new(flaky, 2).with_backoff(0, 0);
+        let err = src.next_batch(4).unwrap_err();
+        assert!(err.contains("retry budget exhausted after 2 retries"), "{err}");
+        assert!(err.contains("injected flaky read"), "{err}");
+        assert_eq!(src.retries(), 2);
+    }
+
+    #[test]
+    fn retry_source_resumes_libsvm_stream_transparently() {
+        // End-to-end degradation story: a transient I/O failure inside
+        // a libSVM stream, absorbed by one retry, yields bit-identical
+        // rows to an unbroken read of the same bytes.
+        let reader = ScriptedReader::new(vec![
+            Ok(b"1 1:1\n0 2:"),
+            Err("transient blip"),
+            Ok(b"2\n-1 3:3\n1 1:4\n"),
+        ]);
+        let mut src = RetrySource::new(LibsvmSource::from_reader(reader, 3), 1).with_backoff(0, 0);
+        let mut chunks = Vec::new();
+        while let Some(b) = src.next_batch(2).unwrap() {
+            chunks.push(b);
+        }
+        let clean = "1 1:1\n0 2:2\n-1 3:3\n1 1:4\n";
+        let mut oracle = LibsvmSource::from_reader(std::io::Cursor::new(clean), 3);
+        let mut want = Vec::new();
+        while let Some(b) = oracle.next_batch(2).unwrap() {
+            want.push(b);
+        }
+        assert_eq!(DenseMatrix::vstack(&chunks), DenseMatrix::vstack(&want));
+        assert_eq!(src.retries(), 1);
+        assert_eq!(src.inner().rows_read(), 4);
     }
 
     #[test]
@@ -427,6 +819,7 @@ mod tests {
             }
         }
         assert_eq!(sparse.rows_read(), dense.rows_read());
+        assert_eq!(sparse.byte_offset(), dense.byte_offset());
         assert_eq!(sparse.nnz_read(), 7, "feature 9 capped away, 7 entries survive");
     }
 

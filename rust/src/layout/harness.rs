@@ -212,6 +212,25 @@ impl StreamAccumulator {
     pub fn batches(&self) -> usize {
         self.batch_iterations.len()
     }
+
+    /// Re-target the accumulator at a new rank count after a
+    /// checkpointed recovery re-lays-out the world (p → p′). The
+    /// per-rank vectors keep at least their original length — `absorb`
+    /// zips, so batches run on fewer ranks simply leave the tail
+    /// entries untouched and history accumulated on the old world is
+    /// preserved — and only grow if the world somehow widens.
+    pub fn rebase_ranks(&mut self, p: usize) {
+        self.ranks = p;
+        if self.rank_peaks.len() < p {
+            self.rank_peaks.resize(p, 0);
+        }
+        if self.comm_stats.len() < p {
+            self.comm_stats.resize(p, CommStats::new());
+        }
+        if self.timings.len() < p {
+            self.timings.resize(p, Stopwatch::new());
+        }
+    }
 }
 
 #[cfg(test)]

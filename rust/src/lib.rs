@@ -259,6 +259,29 @@
 //! script; `--threads N` shards tenants across workers with fixed
 //! ownership, so the output is identical at every thread count.
 //!
+//! ## When ranks die mid-stream: faults, checkpoints, recovery
+//!
+//! At the paper's 256-GPU scale, rank failures and flaky feeds are the
+//! steady state, so the fabric is failure-first. [`comm::fault`]
+//! injects deterministic, seeded faults ([`comm::FaultPlan`]: a rank
+//! crash at its Nth collective call, a dropped message, a bounded
+//! delay, a corrupted payload); every receive carries a bounded
+//! deadline and every failure surfaces as a typed [`comm::CommError`]
+//! through [`comm::World::try_run`] and the fallible `try_*`
+//! collective variants — never a hang — while the infallible APIs
+//! delegate with [`comm::FaultPlan::none`] and stay bitwise unchanged.
+//! Upstream, [`approx::stream::StreamConfig::checkpoint_every`]
+//! snapshots the carried model every N batches; when an injected crash
+//! fires mid-stream the session rebuilds the world over the survivors
+//! (p → p′ re-layout), restores the last checkpoint, and replays — the
+//! README's "Failure model" table maps each fault kind to its
+//! detection, recovery action, and bit-identity guarantee, and
+//! `rust/tests/fault.rs` pins all of it. On the ingest side,
+//! [`data::stream::RetrySource`] wraps any source with a capped,
+//! deterministic retry budget, and [`runtime::tenants`] degrades
+//! gracefully under memory pressure by spilling the coldest tenant to
+//! a snapshot blob instead of rejecting the new open.
+//!
 //! See `DESIGN.md` for the full system inventory and the experiment
 //! index, and `EXPERIMENTS.md` for the paper-vs-measured record.
 
@@ -296,6 +319,10 @@ pub enum VivaldiError {
     },
     /// Invalid configuration (e.g. non-square grid for a 2D algorithm).
     InvalidConfig(String),
+    /// A typed communication failure from the fault-injected fabric
+    /// (rank crash, dropped message, recv timeout, corrupt payload)
+    /// that no checkpoint could absorb.
+    Comm(comm::CommError),
 }
 
 impl std::fmt::Display for VivaldiError {
@@ -307,8 +334,22 @@ impl std::fmt::Display for VivaldiError {
                  ({requested} B requested, {budget} B budget)"
             ),
             VivaldiError::InvalidConfig(msg) => write!(f, "invalid config: {msg}"),
+            VivaldiError::Comm(e) => write!(f, "communication failure: {e}"),
         }
     }
 }
 
-impl std::error::Error for VivaldiError {}
+impl std::error::Error for VivaldiError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            VivaldiError::Comm(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<comm::CommError> for VivaldiError {
+    fn from(e: comm::CommError) -> Self {
+        VivaldiError::Comm(e)
+    }
+}

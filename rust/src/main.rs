@@ -81,6 +81,15 @@ fn print_help() {
          \x20                   carried model stays bitwise untouched)\n\
          \x20                   [--data FILE [--d D]] — stream a libSVM file\n\
          \x20                   off disk instead of generated data\n\
+         \x20                   [--checkpoint-every N] — snapshot the carried\n\
+         \x20                   model every N batches; an injected rank crash\n\
+         \x20                   recovers over the survivors from the last\n\
+         \x20                   checkpoint instead of losing the stream\n\
+         \x20                   [--fault-plan SPEC] — deterministic fabric\n\
+         \x20                   fault injection, e.g.\n\
+         \x20                   \"seed=7;crash:rank=1,call=3,batch=2\"\n\
+         \x20                   (kinds: crash|drop|delay|corrupt;\n\
+         \x20                   timeout-ms=T bounds every recv)\n\
          \x20                   [--sparse] — nnz-bounded CSR lane (uniform\n\
          \x20                   landmark seeding): points stay row-sparse\n\
          \x20                   end-to-end, --data FILE also works without\n\
@@ -99,6 +108,12 @@ fn print_help() {
          \x20                   deterministic request script (open/ingest/\n\
          \x20                   classify/snapshot/restore/close); over-budget\n\
          \x20                   opens are rejected with a feasibility report\n\
+         \x20                   [--evict spill] — degrade gracefully instead:\n\
+         \x20                   spill the coldest unpinned tenants (LRU) to\n\
+         \x20                   snapshot blobs, revived bit-identically on\n\
+         \x20                   their next request (open ... pin=1 exempts;\n\
+         \x20                   ingest ... flaky=N retry=M injects flaky\n\
+         \x20                   reads with a bounded retry budget)\n\
          \x20 comm-table        Table I: counted vs analytic communication\n\
          \x20 summary           §VI headline aggregates\n\
          \x20 datasets          Table II dataset card\n\
@@ -771,6 +786,22 @@ fn cmd_run_landmark_stream(
         .unwrap_or(0.0);
     let mem = base.mem;
     let m = base.m;
+    // Fault tolerance: --checkpoint-every N snapshots the carried model
+    // every N batches so an injected rank crash recovers over the
+    // survivors instead of losing the stream; --fault-plan injects
+    // deterministic fabric faults (see comm::FaultPlan::parse for the
+    // grammar, e.g. "seed=7;crash:rank=1,call=3,batch=2").
+    let checkpoint_every = f.usize_or("--checkpoint-every", 0);
+    let fault = match f.get("--fault-plan") {
+        None => vivaldi::comm::FaultPlan::none(),
+        Some(spec) => match vivaldi::comm::FaultPlan::parse(spec) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("bad --fault-plan: {e}");
+                std::process::exit(2);
+            }
+        },
+    };
     let cfg = StreamConfig {
         base,
         batch,
@@ -781,6 +812,8 @@ fn cmd_run_landmark_stream(
         window: f.usize_or("--window", 0),
         tol,
         sparse: f.has("--sparse"),
+        checkpoint_every,
+        fault,
     };
     let window_note =
         if cfg.window > 0 { format!(" window={}", cfg.window) } else { String::new() };
@@ -807,6 +840,12 @@ fn cmd_run_landmark_stream(
                 out.landmark_refreshes,
                 vivaldi::util::human_bytes(out.peak_mem),
             );
+            if out.recoveries > 0 {
+                println!(
+                    "  fault tolerance: {} injected crash(es) recovered from checkpoint",
+                    out.recoveries
+                );
+            }
             if let Some(w) = &out.window {
                 println!(
                     "  window: {} slot(s) resident, {} batch(es) exactly evicted",
@@ -892,10 +931,12 @@ fn cmd_figures(args: &[String], which: Figure) -> i32 {
     0
 }
 
-/// `vivaldi serve --script FILE [--threads N] [--budget BYTES]`: run a
-/// deterministic multi-tenant request script (see
-/// `runtime::tenants::run_script` for the grammar) and print its
-/// per-request lines plus the per-tenant summary.
+/// `vivaldi serve --script FILE [--threads N] [--budget BYTES]
+/// [--evict reject|spill]`: run a deterministic multi-tenant request
+/// script (see `runtime::tenants::run_script` for the grammar) and
+/// print its per-request lines plus the per-tenant summary. With
+/// `--evict spill`, over-budget opens spill the coldest unpinned
+/// tenants to snapshot blobs instead of rejecting.
 fn cmd_serve(args: &[String]) -> i32 {
     let f = Flags { args };
     let path = match f.get("--script") {
@@ -916,6 +957,14 @@ fn cmd_serve(args: &[String]) -> i32 {
             }
         },
     };
+    let policy = match f.get("--evict") {
+        None | Some("reject") => vivaldi::runtime::EvictPolicy::Reject,
+        Some("spill") => vivaldi::runtime::EvictPolicy::Spill,
+        Some(other) => {
+            eprintln!("bad --evict policy {other:?} (reject|spill)");
+            return 2;
+        }
+    };
     let text = match std::fs::read_to_string(&path) {
         Ok(t) => t,
         Err(e) => {
@@ -923,7 +972,7 @@ fn cmd_serve(args: &[String]) -> i32 {
             return 2;
         }
     };
-    match vivaldi::runtime::tenants::run_script(&text, threads, budget) {
+    match vivaldi::runtime::tenants::run_script_with_policy(&text, threads, budget, policy) {
         Ok(lines) => {
             for line in lines {
                 println!("{line}");

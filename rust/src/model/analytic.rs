@@ -273,6 +273,40 @@ pub fn tenant_state_bytes(
         + stream_window_peak_bytes(m, d, batch, p, k, window)
 }
 
+/// Exact byte length of a **1D-layout** v1 stream snapshot
+/// ([`crate::approx::stream::StreamSession::snapshot`]) holding a warm
+/// model with `ring_slots` occupied eviction-ring slots: the fixed
+/// header/flag/counter overhead (161 bytes) plus the m×d f32
+/// landmarks, the m×m f32 host W **and** its m×m f64 lower factor
+/// (4+8 = 12 bytes per W entry), the k×m f32 sums, the k f64 weights,
+/// and one length-prefixed ring slot per retained batch. The 1.5D
+/// block-cyclic layout serializes per-rank panel state instead of the
+/// host pair, so its length depends on the grid; this closed form is
+/// the spill-planning currency of the tenant service's eviction path,
+/// which serves 1D and replicated-1.5D tenants alike through the same
+/// snapshot format (pinned against a real blob by the tests).
+pub fn snapshot_bytes_1d(m: usize, d: usize, k: usize, ring_slots: usize) -> u64 {
+    let slot = 32 + 4 * (k * m) as u64 + 8 * k as u64;
+    161 + 4 * (m * d) as u64
+        + 12 * (m * m) as u64
+        + 4 * (k * m) as u64
+        + 8 * k as u64
+        + ring_slots as u64 * slot
+}
+
+/// Batches replayed after a crash at 0-based stream batch `b` under
+/// `checkpoint_every = e` ([`crate::approx::stream::StreamConfig`]):
+/// the last checkpoint sits at `b - b % e`, so recovery replays the
+/// `b % e` batches since it plus the crashing batch itself — worst
+/// case exactly `e`, independent of how long the stream has run. This
+/// is the recovery-cost half of the checkpoint-cadence tradeoff (the
+/// other half being one [`snapshot_bytes_1d`]-scale serialization per
+/// `e` batches).
+pub fn checkpoint_replay_batches(b: usize, e: usize) -> usize {
+    assert!(e > 0, "checkpoint cadence must be positive");
+    b % e + 1
+}
+
 /// Local FLOPs of one cross-kernel Gram panel C = κ(X, L) with X
 /// (n×d) and L (m×d): the 2·n·m·d multiply-adds of the dot panels plus
 /// the elementwise kernel epilogue (~4 flops/element covers the
@@ -371,6 +405,52 @@ mod tests {
         let base = tenant_state_bytes(m, d, batch, p, k, 0);
         let slot = 4 * (k * m) as u64 + 8 * k as u64 + 16;
         assert_eq!(tenant_state_bytes(m, d, batch, p, k, 5), base + 5 * slot);
+    }
+
+    #[test]
+    fn snapshot_closed_form_matches_a_real_blob() {
+        use crate::approx::stream::{StreamConfig, StreamSession};
+        use crate::approx::ApproxConfig;
+        use crate::backend::NativeBackend;
+        use crate::data::{synth, PointBlock};
+        let backend = NativeBackend::new();
+        let (k, m, d, batch) = (2usize, 8usize, 4usize, 32usize);
+        for window in [0usize, 2] {
+            let cfg = StreamConfig {
+                base: ApproxConfig { k, m, max_iters: 10, ..Default::default() },
+                batch,
+                window,
+                ..Default::default()
+            };
+            let mut sess = StreamSession::new(1, cfg).unwrap();
+            let ds = synth::gaussian_blobs(batch * 3, d, k, 4.0, 17);
+            for lo in (0..ds.points.rows()).step_by(batch) {
+                let hi = (lo + batch).min(ds.points.rows());
+                sess.push_batch(PointBlock::Dense(ds.points.row_block(lo, hi)), &backend)
+                    .unwrap();
+            }
+            let blob = sess.snapshot().unwrap();
+            // 3 driven batches: a window of 2 retains 2 ring slots.
+            let slots = window.min(3);
+            assert_eq!(
+                blob.len() as u64,
+                snapshot_bytes_1d(m, d, k, slots),
+                "window={window}"
+            );
+        }
+    }
+
+    #[test]
+    fn checkpoint_replay_is_bounded_by_the_cadence() {
+        // Crash right on a checkpoint batch: only that batch replays.
+        assert_eq!(checkpoint_replay_batches(0, 4), 1);
+        assert_eq!(checkpoint_replay_batches(8, 4), 1);
+        // Crash just before the next checkpoint: the full cadence.
+        assert_eq!(checkpoint_replay_batches(7, 4), 4);
+        // Never more than e, no matter how long the stream ran.
+        for b in 0..100 {
+            assert!(checkpoint_replay_batches(b, 5) <= 5);
+        }
     }
 
     #[test]

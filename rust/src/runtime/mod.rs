@@ -28,7 +28,7 @@ pub mod tenants;
 pub use backend::PjrtBackend;
 pub use manifest::{Manifest, OpEntry, TensorSpec};
 pub use service::{DeviceService, HostTensor};
-pub use tenants::{run_script, TenantService, TenantSpec};
+pub use tenants::{run_script, run_script_with_policy, EvictPolicy, TenantService, TenantSpec};
 
 /// Default artifacts directory (override with `VIVALDI_ARTIFACTS`).
 pub fn artifacts_dir() -> std::path::PathBuf {

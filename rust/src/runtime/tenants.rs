@@ -23,21 +23,52 @@
 //!   to never having snapshotted.
 //! * **close** — the tenant's budget charge is released.
 //!
+//! Under budget pressure the service degrades **gracefully** instead
+//! of rejecting outright when [`EvictPolicy::Spill`] is selected: an
+//! over-budget `open` (or the revival of a spilled tenant) spills the
+//! coldest unpinned, snapshot-able tenants — LRU by last verb — to
+//! their snapshot blobs, freeing exactly each victim's closed-form
+//! charge. A spilled tenant is revived transparently on its next
+//! verb (possibly cascading another spill); restore-then-ingest is
+//! bit-identical to never having been spilled. Pinned tenants and
+//! reservoir tenants (whose landmark reservoir the v1 snapshot does
+//! not cover) are never victims; when the cold set cannot cover the
+//! shortfall the open is rejected loudly with the eviction arithmetic
+//! on the record ([`crate::config::tenant_eviction_note`]).
+//!
 //! Two drivers sit on top: [`run_script`] executes a deterministic
 //! line-oriented request script (the CI-able `vivaldi serve --script`
 //! entry point), and its threaded mode shards tenants across N worker
 //! threads with **fixed ownership** (`util::par` style: tenant →
 //! shard at admission, never migrated), so the output is identical at
-//! every thread count — pinned by `rust/tests/service.rs`.
+//! every thread count — pinned by `rust/tests/service.rs`. All spill
+//! decisions are made by the single-threaded coordinator pass from
+//! closed-form bytes and script order alone, so they too are
+//! thread-count invariant.
 
 use std::collections::BTreeMap;
 
 use crate::approx::stream::{StreamConfig, StreamSession, SNAPSHOT_VERSION};
 use crate::backend::NativeBackend;
-use crate::config::{tenant_admission, tenant_rejection_report, TenantAdmission};
+use crate::config::{
+    tenant_admission, tenant_eviction_note, tenant_rejection_report, TenantAdmission,
+};
 use crate::data::{synth, PointBlock, PointsRef};
 use crate::dense::DenseMatrix;
 use crate::VivaldiError;
+
+/// What an over-budget `open` does to the already-resident tenants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EvictPolicy {
+    /// Reject the open loudly; resident tenants are never touched
+    /// (the original admission-control contract).
+    #[default]
+    Reject,
+    /// Spill the coldest unpinned tenants to their snapshot blobs
+    /// until the open fits, or reject loudly if the cold set cannot
+    /// cover the shortfall.
+    Spill,
+}
 
 /// Everything a tenant's streams share: the simulated rank count, the
 /// point dimension, and the full stream configuration (batch, window,
@@ -48,6 +79,9 @@ pub struct TenantSpec {
     pub p: usize,
     /// Point dimension of the tenant's stream.
     pub d: usize,
+    /// Pinned tenants are never spill victims under
+    /// [`EvictPolicy::Spill`] (latency-critical serving paths).
+    pub pinned: bool,
     pub cfg: StreamConfig,
 }
 
@@ -76,6 +110,9 @@ pub struct TenantStats {
     pub classified_points: usize,
     pub snapshots: usize,
     pub restores: usize,
+    /// Times this tenant was spilled to its snapshot blob by budget
+    /// pressure ([`EvictPolicy::Spill`]).
+    pub spills: usize,
 }
 
 /// What one `ingest` did: useful for request-level reporting.
@@ -104,6 +141,12 @@ struct Tenant {
     session: Option<StreamSession>,
     /// Last snapshot taken through the service (restore reads it).
     snapshot: Option<Vec<u8>>,
+    /// The spill blob while evicted by budget pressure (`Some` ⇔
+    /// `session` is `None` on an open tenant).
+    spilled: Option<Vec<u8>>,
+    /// Service clock at this tenant's last verb — the LRU key of the
+    /// spill victim choice.
+    last_touch: u64,
     stats: TenantStats,
     closed: bool,
 }
@@ -114,27 +157,46 @@ struct Tenant {
 /// by the coordinator pass).
 pub struct TenantService {
     budget: Option<u64>,
+    policy: EvictPolicy,
     resident: u64,
     rejected: usize,
+    spills: usize,
+    /// Monotone verb counter: the LRU clock of the spill choice.
+    clock: u64,
     tenants: BTreeMap<String, Tenant>,
     backend: NativeBackend,
 }
 
 impl TenantService {
     pub fn new(budget: Option<u64>) -> TenantService {
+        TenantService::with_policy(budget, EvictPolicy::Reject)
+    }
+
+    /// A service with an explicit over-budget policy (`vivaldi serve
+    /// --evict spill`).
+    pub fn with_policy(budget: Option<u64>, policy: EvictPolicy) -> TenantService {
         TenantService {
             budget,
+            policy,
             resident: 0,
             rejected: 0,
+            spills: 0,
+            clock: 0,
             tenants: BTreeMap::new(),
             backend: NativeBackend::new(),
         }
     }
 
     /// Replace the global budget (admission checks from now on use the
-    /// new value; already-resident tenants are never evicted).
+    /// new value; already-resident tenants are never evicted eagerly —
+    /// pressure is resolved at the next open or revival).
     pub fn set_budget(&mut self, budget: Option<u64>) {
         self.budget = budget;
+    }
+
+    /// Replace the over-budget policy.
+    pub fn set_policy(&mut self, policy: EvictPolicy) {
+        self.policy = policy;
     }
 
     pub fn budget(&self) -> Option<u64> {
@@ -149,6 +211,16 @@ impl TenantService {
     /// Opens rejected by admission control so far.
     pub fn rejected_opens(&self) -> usize {
         self.rejected
+    }
+
+    /// Spills performed by budget pressure so far.
+    pub fn spills(&self) -> usize {
+        self.spills
+    }
+
+    /// Whether the tenant is currently spilled to its snapshot blob.
+    pub fn is_spilled(&self, name: &str) -> bool {
+        self.tenants.get(name).is_some_and(|t| t.spilled.is_some())
     }
 
     /// The admission verdict a spec would get right now, without
@@ -195,13 +267,25 @@ impl TenantService {
             )));
         }
         validate_spec(&spec)?;
-        let adm = self.admission_for(&spec);
+        let mut adm = self.admission_for(&spec);
+        if !adm.admitted && self.policy == EvictPolicy::Spill {
+            let budget = self.budget.unwrap_or(u64::MAX);
+            let needed = self.resident.saturating_add(adm.tenant_bytes).saturating_sub(budget);
+            let mut cands = self.spill_candidates(None);
+            if let Some(victims) = pick_spills(&mut cands, needed) {
+                for v in &victims {
+                    self.spill(v)?;
+                }
+                adm = self.admission_for(&spec);
+            }
+        }
         if !adm.admitted {
             self.rejected += 1;
             return Ok(adm);
         }
         let session = StreamSession::new(spec.p, spec.cfg.clone())?;
         self.resident += adm.tenant_bytes;
+        let touch = self.tick();
         self.tenants.insert(
             name.to_string(),
             Tenant {
@@ -209,11 +293,100 @@ impl TenantService {
                 spec,
                 session: Some(session),
                 snapshot: None,
+                spilled: None,
+                last_touch: touch,
                 stats: TenantStats::default(),
                 closed: false,
             },
         );
         Ok(adm)
+    }
+
+    fn tick(&mut self) -> u64 {
+        let t = self.clock;
+        self.clock += 1;
+        t
+    }
+
+    /// Bump the tenant's LRU clock (no-op on unknown names — the verb
+    /// will fail loudly on its own).
+    fn touch(&mut self, name: &str) {
+        let t = self.tick();
+        if let Some(ten) = self.tenants.get_mut(name) {
+            ten.last_touch = t;
+        }
+    }
+
+    /// The spill-victim pool: open, unpinned, resident tenants whose
+    /// sessions the v1 snapshot can serialize (reservoir = 0), as
+    /// `(last_touch, name, bytes)` — excluding the tenant being
+    /// revived when a cascade runs.
+    fn spill_candidates(&self, exclude: Option<&str>) -> Vec<(u64, String, u64)> {
+        self.tenants
+            .iter()
+            .filter(|(n, t)| {
+                Some(n.as_str()) != exclude
+                    && !t.closed
+                    && !t.spec.pinned
+                    && t.spilled.is_none()
+                    && t.spec.cfg.reservoir == 0
+            })
+            .map(|(n, t)| (t.last_touch, n.clone(), t.bytes))
+            .collect()
+    }
+
+    /// Spill one resident tenant to its snapshot blob, releasing
+    /// exactly its closed-form charge. The model is not lost: the
+    /// blob revives it bit-identically on the next verb.
+    fn spill(&mut self, name: &str) -> Result<u64, VivaldiError> {
+        let t = self.tenants.get_mut(name).expect("spill victims are open tenants");
+        let sess = t.session.as_ref().expect("spill victims hold a session");
+        let blob = sess.snapshot()?;
+        t.spilled = Some(blob);
+        t.session = None;
+        t.stats.spills += 1;
+        let freed = t.bytes;
+        self.resident -= freed;
+        self.spills += 1;
+        Ok(freed)
+    }
+
+    /// Revive a spilled tenant before a verb touches it, cascading
+    /// further spills under [`EvictPolicy::Spill`] if the budget is
+    /// short, or failing loudly when revival cannot fit. No-op for
+    /// resident (or unknown/closed) tenants.
+    fn ensure_resident(&mut self, name: &str) -> Result<(), VivaldiError> {
+        let needs = match self.tenants.get(name) {
+            Some(t) if !t.closed && t.spilled.is_some() => t.bytes,
+            _ => return Ok(()),
+        };
+        let budget = self.budget.unwrap_or(u64::MAX);
+        if self.resident.saturating_add(needs) > budget {
+            let needed = self.resident.saturating_add(needs) - budget;
+            let mut cands = self.spill_candidates(Some(name));
+            let freeable: u64 = cands.iter().map(|c| c.2).sum();
+            let victims = if self.policy == EvictPolicy::Spill {
+                pick_spills(&mut cands, needed)
+            } else {
+                None
+            }
+            .ok_or_else(|| {
+                VivaldiError::InvalidConfig(format!(
+                    "tenant {name:?} cannot be revived: needs {} over budget; {}",
+                    fmt_bytes(needed),
+                    tenant_eviction_note(needed, cands.len(), freeable),
+                ))
+            })?;
+            for v in &victims {
+                self.spill(v)?;
+            }
+        }
+        let t = self.tenants.get_mut(name).expect("checked above");
+        let blob = t.spilled.take().expect("checked above");
+        let sess = StreamSession::restore(t.spec.cfg.clone(), &blob)?;
+        t.session = Some(sess);
+        self.resident += t.bytes;
+        Ok(())
     }
 
     /// The spec a tenant was opened with.
@@ -226,6 +399,8 @@ impl TenantService {
     /// bit-identical to a `fit_stream` source yielding the same rows.
     pub fn ingest(&mut self, name: &str, points: DenseMatrix) -> Result<IngestReport, VivaldiError> {
         let backend = self.backend.clone();
+        self.ensure_resident(name)?;
+        self.touch(name);
         let t = self.open_tenant(name)?;
         let sess = t.session.as_mut().expect("open tenants hold a session");
         let n = points.rows();
@@ -264,6 +439,8 @@ impl TenantService {
         points: &DenseMatrix,
     ) -> Result<ClassifyReport, VivaldiError> {
         let backend = self.backend.clone();
+        self.ensure_resident(name)?;
+        self.touch(name);
         let t = self.open_tenant(name)?;
         let sess = t.session.as_ref().expect("open tenants hold a session");
         let (_assign, minvals) = sess.classify_batch(PointsRef::Dense(points), &backend)?;
@@ -278,6 +455,8 @@ impl TenantService {
     /// Snapshot the tenant's session into the service-held slot and
     /// return the snapshot size in bytes.
     pub fn snapshot(&mut self, name: &str) -> Result<usize, VivaldiError> {
+        self.ensure_resident(name)?;
+        self.touch(name);
         let t = self.open_tenant(name)?;
         let bytes = t.session.as_ref().expect("open tenants hold a session").snapshot()?;
         let len = bytes.len();
@@ -290,6 +469,8 @@ impl TenantService {
     /// [`Self::snapshot`]. Ingesting after this is bit-identical to
     /// never having snapshotted.
     pub fn restore(&mut self, name: &str) -> Result<usize, VivaldiError> {
+        self.ensure_resident(name)?;
+        self.touch(name);
         let t = self.open_tenant(name)?;
         let bytes = t.snapshot.as_ref().ok_or_else(|| {
             VivaldiError::InvalidConfig(format!("tenant {name:?} has no snapshot to restore"))
@@ -301,13 +482,15 @@ impl TenantService {
     }
 
     /// Close the tenant: the session is dropped and its admission
-    /// charge released. Returns the bytes freed. The name stays
-    /// reserved (operations on it keep failing loudly).
+    /// charge released. Returns the bytes freed — `0` when the
+    /// tenant was spilled (its charge was already released at spill
+    /// time; the blob is dropped). The name stays reserved
+    /// (operations on it keep failing loudly).
     pub fn close(&mut self, name: &str) -> Result<u64, VivaldiError> {
         let t = self.open_tenant(name)?;
         t.closed = true;
         t.session = None;
-        let freed = t.bytes;
+        let freed = if t.spilled.take().is_some() { 0 } else { t.bytes };
         self.resident -= freed;
         Ok(freed)
     }
@@ -318,6 +501,28 @@ impl TenantService {
             .iter()
             .map(|(name, t)| (name.clone(), t.stats.clone(), t.closed))
             .collect()
+    }
+}
+
+/// Greedy LRU spill plan: sort the candidates by `(last_touch,
+/// name)` and take the coldest until at least `needed` bytes are
+/// freed. `None` when the whole pool cannot cover the shortfall —
+/// the caller rejects loudly instead of spilling uselessly.
+fn pick_spills(candidates: &mut Vec<(u64, String, u64)>, needed: u64) -> Option<Vec<String>> {
+    candidates.sort();
+    let mut freed = 0u64;
+    let mut victims = Vec::new();
+    for (_, name, bytes) in candidates.iter() {
+        if freed >= needed {
+            break;
+        }
+        freed += bytes;
+        victims.push(name.clone());
+    }
+    if freed >= needed {
+        Some(victims)
+    } else {
+        None
     }
 }
 
@@ -346,25 +551,11 @@ fn validate_spec(spec: &TenantSpec) -> Result<(), VivaldiError> {
 enum Request {
     Budget { bytes: u64 },
     Open { name: String, spec: TenantSpec },
-    Ingest { name: String, n: usize, seed: u64, spread: f64 },
+    Ingest { name: String, n: usize, seed: u64, spread: f64, flaky: u32, retry: u32 },
     Classify { name: String, n: usize, seed: u64, spread: f64 },
     Snapshot { name: String },
     Restore { name: String },
     Close { name: String },
-}
-
-impl Request {
-    fn tenant_name(&self) -> Option<&str> {
-        match self {
-            Request::Budget { .. } => None,
-            Request::Open { name, .. }
-            | Request::Ingest { name, .. }
-            | Request::Classify { name, .. }
-            | Request::Snapshot { name }
-            | Request::Restore { name }
-            | Request::Close { name } => Some(name),
-        }
-    }
 }
 
 fn fmt_bytes(b: u64) -> String {
@@ -466,6 +657,7 @@ fn parse_script(text: &str) -> Result<Vec<Request>, VivaldiError> {
             "ingest" | "classify" => {
                 let name = name_of(&rest)?;
                 let (mut n, mut seed, mut spread) = (None, 0u64, 4.0f64);
+                let (mut flaky, mut retry) = (0u32, 3u32);
                 for t in &rest[1..] {
                     let (key, val) = t
                         .split_once('=')
@@ -487,12 +679,22 @@ fn parse_script(text: &str) -> Result<Vec<Request>, VivaldiError> {
                                 .parse::<f64>()
                                 .map_err(|_| bad(format!("bad spread {val:?}")))?
                         }
+                        "flaky" if verb == "ingest" => {
+                            flaky = val
+                                .parse::<u32>()
+                                .map_err(|_| bad(format!("bad flaky {val:?}")))?
+                        }
+                        "retry" if verb == "ingest" => {
+                            retry = val
+                                .parse::<u32>()
+                                .map_err(|_| bad(format!("bad retry {val:?}")))?
+                        }
                         other => return Err(bad(format!("unknown {verb} key {other:?}"))),
                     }
                 }
                 let n = n.ok_or_else(|| bad(format!("{verb} needs n=POINTS")))?;
                 if verb == "ingest" {
-                    Request::Ingest { name, n, seed, spread }
+                    Request::Ingest { name, n, seed, spread, flaky, retry }
                 } else {
                     Request::Classify { name, n, seed, spread }
                 }
@@ -514,6 +716,7 @@ fn parse_open_spec(
     use crate::approx::{ApproxConfig, LandmarkLayout};
     let (mut k, mut m, mut d, mut batch) = (None, None, None, None);
     let mut p = 1usize;
+    let mut pinned = false;
     let mut cfg = StreamConfig::default();
     let mut base = ApproxConfig::default();
     for t in kvs {
@@ -553,6 +756,7 @@ fn parse_open_spec(
                 base.landmark_seed =
                     val.parse::<u64>().map_err(|_| bad(format!("bad seed {val:?}")))?
             }
+            "pin" => pinned = us(val)? != 0,
             other => return Err(bad(format!("unknown open key {other:?}"))),
         }
     }
@@ -560,7 +764,7 @@ fn parse_open_spec(
     base.m = m.ok_or_else(|| bad("open needs m=LANDMARKS".into()))?;
     cfg.base = base;
     cfg.batch = batch.ok_or_else(|| bad("open needs batch=SIZE".into()))?;
-    Ok(TenantSpec { p, d: d.ok_or_else(|| bad("open needs d=DIM".into()))?, cfg })
+    Ok(TenantSpec { p, d: d.ok_or_else(|| bad("open needs d=DIM".into()))?, pinned, cfg })
 }
 
 /// Ledger state the coordinator pass keeps per named tenant.
@@ -569,6 +773,26 @@ struct LedgerTenant {
     bytes: u64,
     open: bool,
     rejected: bool,
+    pinned: bool,
+    /// Reservoir tenants cannot be snapshot (v1), so never spilled.
+    reservoir: usize,
+    /// Mirror of the worker-side spill state, decided here.
+    spilled: bool,
+    /// Coordinator clock at the tenant's last verb (the LRU key).
+    last_touch: u64,
+}
+
+/// One instruction for a shard worker, in script order. All spill
+/// decisions were made by the coordinator; workers just execute.
+enum ShardAction {
+    /// Execute script request `i` ([`run_one`]).
+    Run(usize),
+    /// Spill `name` to its snapshot blob, on behalf of request `req`
+    /// (an over-budget open elsewhere). The coordinator printed the
+    /// line; failures are attributed to `req`.
+    Spill { req: usize, name: String },
+    /// Revive `name` before request `req` touches it.
+    Unspill { req: usize, name: String },
 }
 
 /// Execute a request script and return its printed lines.
@@ -595,16 +819,56 @@ pub fn run_script(
     threads: usize,
     default_budget: Option<u64>,
 ) -> Result<Vec<String>, VivaldiError> {
+    run_script_with_policy(text, threads, default_budget, EvictPolicy::Reject)
+}
+
+/// [`run_script`] with an explicit over-budget policy (`vivaldi serve
+/// --evict spill`). Under [`EvictPolicy::Spill`] the coordinator pass
+/// also plans spills/revivals — from closed-form bytes, script order,
+/// and the LRU clock alone, so the plan (and thus the output) stays
+/// identical at every thread count; shard workers just execute the
+/// planned `spill`/`unspill` actions in order.
+pub fn run_script_with_policy(
+    text: &str,
+    threads: usize,
+    default_budget: Option<u64>,
+    policy: EvictPolicy,
+) -> Result<Vec<String>, VivaldiError> {
     let reqs = parse_script(text)?;
     let threads = threads.max(1);
     let mut budget = default_budget;
     let mut resident: u64 = 0;
     let mut rejected = 0usize;
     let mut admitted_count = 0usize;
+    let mut clock = 0u64;
     let mut ledger: BTreeMap<String, LedgerTenant> = BTreeMap::new();
     let mut slots: Vec<Vec<String>> = vec![Vec::new(); reqs.len()];
+    // Fixed ownership, in script order: every instruction of a tenant
+    // goes to the shard it was assigned at admission. Spill/unspill
+    // actions are interleaved at the exact script position that
+    // triggered them, so a victim's state at spill time is the state
+    // the single-threaded service would have spilled.
+    let mut shard_actions: Vec<Vec<ShardAction>> = vec![Vec::new(); threads];
 
-    // Pass 1: the admission ledger, in script order.
+    // The candidate pool for a spill plan at the current clock.
+    let spill_pool = |ledger: &BTreeMap<String, LedgerTenant>,
+                      exclude: Option<&str>|
+     -> Vec<(u64, String, u64)> {
+        ledger
+            .iter()
+            .filter(|(n, t)| {
+                Some(n.as_str()) != exclude
+                    && t.open
+                    && !t.rejected
+                    && !t.pinned
+                    && !t.spilled
+                    && t.reservoir == 0
+            })
+            .map(|(n, t)| (t.last_touch, n.clone(), t.bytes))
+            .collect()
+    };
+
+    // Pass 1: the admission + eviction ledger, in script order.
     for (i, req) in reqs.iter().enumerate() {
         let fail = |msg: String| {
             VivaldiError::InvalidConfig(format!("request {} ({msg})", i + 1))
@@ -619,7 +883,8 @@ pub fn run_script(
                     return Err(fail(format!("tenant {name:?} already named by an earlier open")));
                 }
                 validate_spec(spec).map_err(|e| fail(format!("open {name}: {e}")))?;
-                let adm = tenant_admission(
+                let bud = budget.unwrap_or(u64::MAX);
+                let mut adm = tenant_admission(
                     spec.d,
                     spec.cfg.base.m,
                     spec.p,
@@ -627,16 +892,59 @@ pub fn run_script(
                     spec.cfg.base.k,
                     spec.cfg.window,
                     resident,
-                    budget.unwrap_or(u64::MAX),
+                    bud,
                 );
+                if !adm.admitted && policy == EvictPolicy::Spill {
+                    let needed =
+                        resident.saturating_add(adm.tenant_bytes).saturating_sub(bud);
+                    let mut cands = spill_pool(&ledger, None);
+                    let freeable: u64 = cands.iter().map(|c| c.2).sum();
+                    slots[i].push(tenant_eviction_note(needed, cands.len(), freeable));
+                    if let Some(victims) = pick_spills(&mut cands, needed) {
+                        for v in victims {
+                            let lt = ledger.get_mut(&v).expect("victims come from the ledger");
+                            lt.spilled = true;
+                            resident -= lt.bytes;
+                            shard_actions[lt.shard]
+                                .push(ShardAction::Spill { req: i, name: v.clone() });
+                            slots[i].push(format!(
+                                "spill {v}: freed {}, resident {}",
+                                fmt_bytes(lt.bytes),
+                                fmt_bytes(resident),
+                            ));
+                        }
+                        adm = tenant_admission(
+                            spec.d,
+                            spec.cfg.base.m,
+                            spec.p,
+                            spec.cfg.batch,
+                            spec.cfg.base.k,
+                            spec.cfg.window,
+                            resident,
+                            bud,
+                        );
+                    }
+                }
                 if adm.admitted {
                     let shard = admitted_count % threads;
                     admitted_count += 1;
                     resident += adm.tenant_bytes;
+                    let last_touch = clock;
+                    clock += 1;
                     ledger.insert(
                         name.clone(),
-                        LedgerTenant { shard, bytes: adm.tenant_bytes, open: true, rejected: false },
+                        LedgerTenant {
+                            shard,
+                            bytes: adm.tenant_bytes,
+                            open: true,
+                            rejected: false,
+                            pinned: spec.pinned,
+                            reservoir: spec.cfg.reservoir,
+                            spilled: false,
+                            last_touch,
+                        },
                     );
+                    shard_actions[shard].push(ShardAction::Run(i));
                     slots[i].push(format!(
                         "open {name}: admitted ({}, resident {} of {})",
                         fmt_bytes(adm.tenant_bytes),
@@ -647,7 +955,16 @@ pub fn run_script(
                     rejected += 1;
                     ledger.insert(
                         name.clone(),
-                        LedgerTenant { shard: usize::MAX, bytes: 0, open: false, rejected: true },
+                        LedgerTenant {
+                            shard: usize::MAX,
+                            bytes: 0,
+                            open: false,
+                            rejected: true,
+                            pinned: spec.pinned,
+                            reservoir: spec.cfg.reservoir,
+                            spilled: false,
+                            last_touch: 0,
+                        },
                     );
                     slots[i].extend(rejection_lines(name, spec, &adm));
                 }
@@ -663,12 +980,21 @@ pub fn run_script(
                     return Err(fail(format!("close {name}: tenant already closed")));
                 }
                 t.open = false;
-                resident -= t.bytes;
-                slots[i].push(format!(
-                    "close {name}: released {}, resident {}",
-                    fmt_bytes(t.bytes),
-                    fmt_bytes(resident),
-                ));
+                let freed = if t.spilled { 0 } else { t.bytes };
+                t.spilled = false;
+                resident -= freed;
+                let line = if freed == 0 {
+                    format!("close {name}: released 0 B (was spilled), resident {}", fmt_bytes(resident))
+                } else {
+                    format!(
+                        "close {name}: released {}, resident {}",
+                        fmt_bytes(freed),
+                        fmt_bytes(resident),
+                    )
+                };
+                let shard = t.shard;
+                shard_actions[shard].push(ShardAction::Run(i));
+                slots[i].push(line);
             }
             Request::Ingest { name, .. }
             | Request::Classify { name, .. }
@@ -676,39 +1002,81 @@ pub fn run_script(
             | Request::Restore { name } => {
                 // Validated here (deterministically, in script order);
                 // executed by the owning shard worker in pass 2.
-                let t = ledger
-                    .get(name)
-                    .ok_or_else(|| fail(format!("{name}: no such tenant")))?;
-                if t.rejected {
+                let (t_rejected, t_open, t_spilled, t_bytes) = {
+                    let t = ledger
+                        .get(name)
+                        .ok_or_else(|| fail(format!("{name}: no such tenant")))?;
+                    (t.rejected, t.open, t.spilled, t.bytes)
+                };
+                if t_rejected {
                     return Err(fail(format!("{name}: tenant was rejected at open")));
                 }
-                if !t.open {
+                if !t_open {
                     return Err(fail(format!("{name}: tenant is closed")));
                 }
+                if t_spilled {
+                    // Revive before the verb, cascading if short.
+                    let bud = budget.unwrap_or(u64::MAX);
+                    let needs = t_bytes;
+                    if resident.saturating_add(needs) > bud {
+                        let needed = resident.saturating_add(needs) - bud;
+                        let mut cands = spill_pool(&ledger, Some(name));
+                        let freeable: u64 = cands.iter().map(|c| c.2).sum();
+                        slots[i].push(tenant_eviction_note(needed, cands.len(), freeable));
+                        let victims = if policy == EvictPolicy::Spill {
+                            pick_spills(&mut cands, needed)
+                        } else {
+                            None
+                        }
+                        .ok_or_else(|| {
+                            fail(format!(
+                                "{name}: cannot revive spilled tenant (needs {} over budget, \
+                                 {} cold tenant(s) can free {})",
+                                fmt_bytes(needed),
+                                cands.len(),
+                                fmt_bytes(freeable),
+                            ))
+                        })?;
+                        for v in victims {
+                            let lt = ledger.get_mut(&v).expect("victims come from the ledger");
+                            lt.spilled = true;
+                            resident -= lt.bytes;
+                            shard_actions[lt.shard]
+                                .push(ShardAction::Spill { req: i, name: v.clone() });
+                            slots[i].push(format!(
+                                "spill {v}: freed {}, resident {}",
+                                fmt_bytes(lt.bytes),
+                                fmt_bytes(resident),
+                            ));
+                        }
+                    }
+                    let lt = ledger.get_mut(name).expect("checked above");
+                    lt.spilled = false;
+                    resident += lt.bytes;
+                    shard_actions[lt.shard]
+                        .push(ShardAction::Unspill { req: i, name: name.clone() });
+                    slots[i].push(format!(
+                        "unspill {name}: resident again ({}, resident {})",
+                        fmt_bytes(lt.bytes),
+                        fmt_bytes(resident),
+                    ));
+                }
+                let lt = ledger.get_mut(name).expect("checked above");
+                lt.last_touch = clock;
+                clock += 1;
+                shard_actions[lt.shard].push(ShardAction::Run(i));
             }
         }
     }
 
-    // Fixed ownership: every request of a tenant goes to the shard it
-    // was assigned at admission, in script order.
-    let mut shard_reqs: Vec<Vec<usize>> = vec![Vec::new(); threads];
-    for (i, req) in reqs.iter().enumerate() {
-        if let Some(name) = req.tenant_name() {
-            let t = &ledger[name];
-            if !t.rejected {
-                shard_reqs[t.shard].push(i);
-            }
-        }
-    }
-
-    // Pass 2: shard workers execute their tenants' requests.
+    // Pass 2: shard workers execute their planned actions.
     type ShardOut =
         (Vec<(usize, String)>, Vec<(String, TenantStats, bool)>, Option<(usize, VivaldiError)>);
     let shard_outs: Vec<ShardOut> = std::thread::scope(|s| {
         let reqs = &reqs;
-        let handles: Vec<_> = shard_reqs
+        let handles: Vec<_> = shard_actions
             .iter()
-            .map(|idxs| s.spawn(move || run_shard(reqs, idxs)))
+            .map(|actions| s.spawn(move || run_shard(reqs, actions)))
             .collect();
         handles.into_iter().map(|h| h.join().expect("service worker panicked")).collect()
     });
@@ -736,13 +1104,14 @@ pub fn run_script(
     for (name, st, closed) in all_stats {
         out.push(format!(
             "tenant {name}: ingested {} points / {} batches, {} inner iterations, \
-             classified {} points, {} snapshot(s), {} restore(s), {}",
+             classified {} points, {} snapshot(s), {} restore(s), {} spill(s), {}",
             st.ingested_points,
             st.ingested_batches,
             st.inner_iterations,
             st.classified_points,
             st.snapshots,
             st.restores,
+            st.spills,
             if closed { "closed" } else { "open" },
         ));
     }
@@ -751,19 +1120,35 @@ pub fn run_script(
 }
 
 /// One shard worker: a private unlimited-budget [`TenantService`]
-/// executing its tenants' requests in script order. Returns the
-/// request-indexed output lines, the per-tenant counters, and the
-/// first failure (execution stops there — later requests of this
-/// shard are not attempted, matching the single-threaded service).
-fn run_shard(reqs: &[Request], idxs: &[usize]) -> ShardRun {
+/// executing its planned actions in script order. Spill/unspill
+/// actions were decided (and printed) by the coordinator — the worker
+/// executes them silently, attributing failures to the triggering
+/// request. Returns the request-indexed output lines, the per-tenant
+/// counters, and the first failure (execution stops there — later
+/// actions of this shard are not attempted, matching the
+/// single-threaded service).
+fn run_shard(reqs: &[Request], actions: &[ShardAction]) -> ShardRun {
     let mut svc = TenantService::new(None);
     let mut lines: Vec<(usize, String)> = Vec::new();
-    for &i in idxs {
-        let out = run_one(&mut svc, &reqs[i]);
-        match out {
-            Ok(Some(line)) => lines.push((i, line)),
-            Ok(None) => {}
-            Err(e) => return (lines, svc.tenant_summaries(), Some((i, e))),
+    for action in actions {
+        let out = match action {
+            ShardAction::Run(i) => match run_one(&mut svc, &reqs[*i]) {
+                Ok(Some(line)) => {
+                    lines.push((*i, line));
+                    Ok(())
+                }
+                Ok(None) => Ok(()),
+                Err(e) => Err((*i, e)),
+            },
+            ShardAction::Spill { req, name } => {
+                svc.spill(name).map(|_| ()).map_err(|e| (*req, e))
+            }
+            ShardAction::Unspill { req, name } => {
+                svc.ensure_resident(name).map_err(|e| (*req, e))
+            }
+        };
+        if let Err((i, e)) = out {
+            return (lines, svc.tenant_summaries(), Some((i, e)));
         }
     }
     (lines, svc.tenant_summaries(), None)
@@ -787,12 +1172,41 @@ fn run_one(svc: &mut TenantService, req: &Request) -> Result<Option<String>, Viv
             svc.close(name)?;
             Ok(None)
         }
-        Request::Ingest { name, n, seed, spread } => {
+        Request::Ingest { name, n, seed, spread, flaky, retry } => {
             let spec = svc.spec(name)?;
-            let ds = synth::gaussian_blobs(*n, spec.d, spec.cfg.base.k, *spread, *seed);
-            let rep = svc.ingest(name, ds.points)?;
+            let (d, k, batch) = (spec.d, spec.cfg.base.k, spec.cfg.batch);
+            let ds = synth::gaussian_blobs(*n, d, k, *spread, *seed);
+            if *flaky == 0 {
+                let rep = svc.ingest(name, ds.points)?;
+                return Ok(Some(format!(
+                    "ingest {name}: {} points in {} batch(es), {} inner iterations, objective {:.6}",
+                    rep.points, rep.batches, rep.inner_iterations, rep.objective,
+                )));
+            }
+            // Fault-injected ingestion: the generated points arrive
+            // through a FlakySource that fails the next `flaky` pulls,
+            // wrapped in a RetrySource with a `retry` budget. Within
+            // budget the ingested rows are exactly the clean rows
+            // (FlakySource fails before consuming anything); past it
+            // the exhaustion error surfaces loudly.
+            use crate::data::stream::{FlakySource, MatrixSource, PointSource, RetrySource};
+            let mut src = RetrySource::new(FlakySource::new(MatrixSource::new(&ds.points), *flaky), *retry)
+                .with_backoff(0, 0);
+            let mut chunks: Vec<DenseMatrix> = Vec::new();
+            loop {
+                match src.next_batch(batch) {
+                    Ok(Some(chunk)) => chunks.push(chunk),
+                    Ok(None) => break,
+                    Err(e) => {
+                        return Err(VivaldiError::InvalidConfig(format!("ingest {name}: {e}")))
+                    }
+                }
+            }
+            let retries = src.retries();
+            let rep = svc.ingest(name, DenseMatrix::vstack(&chunks))?;
             Ok(Some(format!(
-                "ingest {name}: {} points in {} batch(es), {} inner iterations, objective {:.6}",
+                "ingest {name}: {} points in {} batch(es), {} inner iterations, objective {:.6}, \
+                 {retries} flaky read(s) retried",
                 rep.points, rep.batches, rep.inner_iterations, rep.objective,
             )))
         }
@@ -827,6 +1241,7 @@ mod tests {
         TenantSpec {
             p,
             d: 4,
+            pinned: false,
             cfg: StreamConfig {
                 base: ApproxConfig { k: 2, m: 8, max_iters: 10, ..Default::default() },
                 batch: 32,
@@ -908,5 +1323,139 @@ ingest t n=32 seed=1
         let e = run_script(script, 1, None).unwrap_err();
         let msg = format!("{e}");
         assert!(msg.contains("rejected"), "got: {msg}");
+    }
+
+    #[test]
+    fn spill_frees_the_closed_form_and_revival_is_bit_identical() {
+        let s = spec(1, 0);
+        let one = s.state_bytes();
+        // Room for exactly two tenants.
+        let mut svc = TenantService::with_policy(Some(2 * one), EvictPolicy::Spill);
+        assert!(svc.open("a", s.clone()).unwrap().admitted);
+        assert!(svc.open("b", s.clone()).unwrap().admitted);
+        let ds_a = synth::gaussian_blobs(64, 4, 2, 4.0, 7);
+        let ds_b = synth::gaussian_blobs(64, 4, 2, 4.0, 8);
+        svc.ingest("a", ds_a.points.clone()).unwrap();
+        svc.ingest("b", ds_b.points).unwrap();
+        // The third open spills the coldest tenant (a: touched before b)
+        // and frees exactly its closed-form charge.
+        assert!(svc.open("c", s.clone()).unwrap().admitted);
+        assert!(svc.is_spilled("a"));
+        assert!(!svc.is_spilled("b"));
+        assert_eq!(svc.resident_bytes(), 2 * one);
+        assert_eq!(svc.spills(), 1);
+        assert_eq!(svc.rejected_opens(), 0);
+        // Touching a revives it transparently, cascading a spill of the
+        // next-coldest tenant (b).
+        let ds_a2 = synth::gaussian_blobs(32, 4, 2, 4.0, 9);
+        svc.ingest("a", ds_a2.points.clone()).unwrap();
+        assert!(!svc.is_spilled("a"));
+        assert!(svc.is_spilled("b"));
+        assert_eq!(svc.spills(), 2);
+        // Spill + revival left no trace in the model: bit-identical to
+        // an unlimited-budget service fed the same batches.
+        svc.snapshot("a").unwrap();
+        let mut free = TenantService::new(None);
+        free.open("a", s).unwrap();
+        free.ingest("a", ds_a.points).unwrap();
+        free.ingest("a", ds_a2.points).unwrap();
+        free.snapshot("a").unwrap();
+        assert_eq!(
+            svc.tenants["a"].snapshot, free.tenants["a"].snapshot,
+            "spill/revive must be bitwise invisible to the model"
+        );
+    }
+
+    #[test]
+    fn pinned_and_reservoir_tenants_are_never_spilled() {
+        let mut pinned = spec(1, 0);
+        pinned.pinned = true;
+        let one = pinned.state_bytes();
+        let mut svc = TenantService::with_policy(Some(2 * one), EvictPolicy::Spill);
+        assert!(svc.open("p1", pinned.clone()).unwrap().admitted);
+        assert!(svc.open("p2", pinned).unwrap().admitted);
+        // Only pinned tenants are resident: the open is rejected loudly,
+        // nothing is spilled.
+        assert!(!svc.open("c", spec(1, 0)).unwrap().admitted);
+        assert_eq!(svc.spills(), 0);
+        assert_eq!(svc.rejected_opens(), 1);
+        // Reservoir tenants are not snapshot-able (v1), so never victims.
+        let mut res = spec(1, 0);
+        res.cfg.reservoir = 16;
+        let mut svc2 = TenantService::with_policy(Some(one + one / 2), EvictPolicy::Spill);
+        assert!(svc2.open("r", res).unwrap().admitted);
+        assert!(!svc2.open("c", spec(1, 0)).unwrap().admitted);
+        assert_eq!(svc2.spills(), 0);
+    }
+
+    #[test]
+    fn closing_a_spilled_tenant_releases_nothing() {
+        let s = spec(1, 0);
+        let one = s.state_bytes();
+        let mut svc = TenantService::with_policy(Some(one), EvictPolicy::Spill);
+        assert!(svc.open("a", s.clone()).unwrap().admitted);
+        let ds = synth::gaussian_blobs(32, 4, 2, 4.0, 1);
+        svc.ingest("a", ds.points).unwrap();
+        assert!(svc.open("b", s).unwrap().admitted);
+        assert!(svc.is_spilled("a"));
+        assert_eq!(svc.close("a").unwrap(), 0, "a spilled tenant holds no resident bytes");
+        assert_eq!(svc.resident_bytes(), one);
+    }
+
+    #[test]
+    fn script_spill_policy_is_thread_invariant_and_on_the_record() {
+        let one = spec(1, 0).state_bytes();
+        let script = format!(
+            "budget {}\n\
+             open a k=2 m=8 d=4 batch=32 iters=5 seed=1\n\
+             open b k=2 m=8 d=4 batch=32 iters=5 seed=2\n\
+             ingest a n=64 seed=10\n\
+             ingest b n=64 seed=11\n\
+             open c k=2 m=8 d=4 batch=32 iters=5 seed=3\n\
+             ingest a n=32 seed=12\n",
+            2 * one
+        );
+        let one_t = run_script_with_policy(&script, 1, None, EvictPolicy::Spill).unwrap();
+        let four_t = run_script_with_policy(&script, 4, None, EvictPolicy::Spill).unwrap();
+        assert_eq!(one_t, four_t, "coordinator-planned spills must be thread-invariant");
+        assert!(one_t.iter().any(|l| l.starts_with("eviction check:")), "got: {one_t:?}");
+        assert!(one_t.iter().any(|l| l.starts_with("spill a:")), "got: {one_t:?}");
+        assert!(one_t.iter().any(|l| l.starts_with("unspill a:")), "got: {one_t:?}");
+        assert!(one_t.iter().any(|l| l.starts_with("spill b:")), "cascade, got: {one_t:?}");
+        assert!(one_t.last().unwrap().starts_with("rejected opens: 0"));
+        assert!(one_t.iter().any(|l| l.starts_with("tenant a:") && l.contains("1 spill(s)")));
+        // The same script under the default policy rejects the open
+        // instead of touching the resident tenants.
+        let rej = run_script(&script, 1, None).unwrap();
+        assert!(rej.iter().any(|l| l.starts_with("open c: REJECTED")), "got: {rej:?}");
+        assert!(rej.last().unwrap().starts_with("rejected opens: 1"));
+    }
+
+    #[test]
+    fn flaky_ingest_retries_within_budget_and_exhausts_loudly() {
+        let flaky = "\
+open t k=2 m=8 d=4 batch=32 iters=5 seed=1
+ingest t n=64 seed=10 flaky=2 retry=3
+";
+        let out = run_script(flaky, 1, None).unwrap();
+        let flaky_line = out.iter().find(|l| l.starts_with("ingest t:")).unwrap();
+        assert!(flaky_line.ends_with("2 flaky read(s) retried"), "got: {flaky_line}");
+        // The retried stream ingests exactly the clean rows.
+        let clean = "\
+open t k=2 m=8 d=4 batch=32 iters=5 seed=1
+ingest t n=64 seed=10
+";
+        let cl = run_script(clean, 1, None).unwrap();
+        let clean_line = cl.iter().find(|l| l.starts_with("ingest t:")).unwrap();
+        assert_eq!(&format!("{clean_line}, 2 flaky read(s) retried"), flaky_line);
+        // Past the retry budget the exhaustion error surfaces loudly.
+        let bad = "\
+open t k=2 m=8 d=4 batch=32 iters=5 seed=1
+ingest t n=64 seed=10 flaky=9 retry=2
+";
+        let e = run_script(bad, 1, None).unwrap_err();
+        let msg = format!("{e}");
+        assert!(msg.contains("retry budget exhausted after 2 retries"), "got: {msg}");
+        assert!(msg.contains("injected flaky read"), "got: {msg}");
     }
 }

@@ -1,0 +1,330 @@
+//! Fault-injection wall: the fabric under injected crashes, drops,
+//! delays, and corruption, plus checkpointed stream recovery.
+//!
+//! Invariants pinned here, per the failure model:
+//! - **No hang**: any injected fault surfaces as a typed
+//!   [`CommError`] within the bounded recv deadline — never a stuck
+//!   test suite.
+//! - **Determinism**: the same [`FaultPlan`] produces the same root
+//!   cause, the same crashed-rank set, and the same per-rank fault
+//!   counters on every run, at every world size, on every backend.
+//! - **No lost model**: a checkpointed stream survives a crash by
+//!   re-laying-out the survivors and replaying, and the recovered
+//!   model is byte-for-byte what an uninterrupted session restored
+//!   from the same checkpoint at the same p′ would compute.
+//! - **Fault-free neutrality**: checkpointing alone, and delay-only
+//!   plans, change nothing but the counters.
+//! - **Snapshot hardening**: truncated or bit-flipped snapshot blobs
+//!   are rejected loudly — the reader never panics, never
+//!   over-allocates.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+use vivaldi::approx::stream::{fit_stream, fit_stream_with_backend, StreamConfig, StreamSession};
+use vivaldi::approx::{ApproxConfig, LandmarkLayout};
+use vivaldi::backend::NativeBackend;
+use vivaldi::comm::{Comm, CommError, Fault, FaultKind, FaultPlan, Group, World};
+use vivaldi::data::stream::MatrixSource;
+use vivaldi::data::{synth, PointBlock};
+use vivaldi::dense::DenseMatrix;
+use vivaldi::VivaldiError;
+
+fn blobs(n: usize, seed: u64) -> DenseMatrix {
+    synth::gaussian_blobs(n, 4, 2, 4.0, seed).points
+}
+
+fn stream_cfg(layout: LandmarkLayout, checkpoint_every: usize, fault: FaultPlan) -> StreamConfig {
+    StreamConfig {
+        base: ApproxConfig { k: 2, m: 8, layout, max_iters: 4, ..Default::default() },
+        batch: 32,
+        checkpoint_every,
+        fault,
+        ..Default::default()
+    }
+}
+
+fn plan(faults: Vec<Fault>, timeout_ms: u64) -> FaultPlan {
+    FaultPlan { seed: 1, recv_timeout_ms: Some(timeout_ms), faults }
+}
+
+fn crash(rank: usize, at_call: u64, batch: usize) -> Fault {
+    Fault { rank, at_call, batch, kind: FaultKind::Crash }
+}
+
+/// Three allreduce rounds — enough primitive calls for any at_call
+/// used below, with a rank-dependent contribution so corruption of
+/// any single payload is observable.
+fn rounds(p: usize) -> impl Fn(&mut Comm) -> Vec<f32> + Sync {
+    move |c: &mut Comm| {
+        let g = Group::world(p);
+        let mut v = vec![(c.rank() + 1) as f32; 8];
+        for _ in 0..3 {
+            v = c.allreduce_sum_f32(&g, v);
+        }
+        v
+    }
+}
+
+/// The no-hang contract: an injected crash mid-collective must come
+/// back as a typed failure well inside the watchdog budget. The
+/// launch runs on a helper thread so a regression to the historical
+/// hang fails this test instead of wedging the suite.
+#[test]
+fn injected_crash_fails_typed_and_never_hangs() {
+    let (tx, rx) = mpsc::channel();
+    thread::spawn(move || {
+        let out = World::try_run(4, plan(vec![crash(1, 1, 0)], 2_000), rounds(4));
+        tx.send(out).ok();
+    });
+    let out = rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("faulted launch must fail fast, not hang");
+    let failure = out.expect_err("a crashed rank cannot produce a clean launch");
+    assert_eq!(failure.crashed_ranks, vec![1]);
+    assert_eq!(failure.error, CommError::Crashed { rank: 1, at_call: 1 });
+    assert_eq!(failure.error.kind_name(), "crashed");
+    assert_eq!(failure.error.rank(), 1);
+    assert_eq!(failure.stats.len(), 4);
+    assert_eq!(failure.stats[1].faults.injected_crashes, 1);
+}
+
+/// Determinism at the fabric layer: the same crash plan reproduces
+/// the same root cause, crashed set, and per-rank fault counters on
+/// every run, at p = 4 and p = 16 alike.
+#[test]
+fn a_fault_plan_reproduces_its_failure_bit_for_bit() {
+    for p in [4usize, 16] {
+        let pl = plan(vec![crash(p - 1, 2, 0)], 5_000);
+        let a = World::try_run(p, pl.clone(), rounds(p))
+            .expect_err("the injected crash must surface");
+        let b = World::try_run(p, pl, rounds(p)).expect_err("and surface identically again");
+        assert_eq!(a.error, b.error, "p={p}: root cause must be deterministic");
+        assert_eq!(a.error.to_string(), b.error.to_string());
+        assert_eq!(a.crashed_ranks, b.crashed_ranks, "p={p}");
+        assert_eq!(a.crashed_ranks, vec![p - 1], "p={p}");
+        for r in 0..p {
+            assert_eq!(
+                a.stats[r].faults, b.stats[r].faults,
+                "p={p} rank {r}: fault counters must be deterministic"
+            );
+        }
+        let crashes: u64 = a.stats.iter().map(|s| s.faults.injected_crashes).sum();
+        assert_eq!(crashes, 1, "p={p}: exactly the planned crash fires");
+    }
+}
+
+/// A dropped message is detected by the bounded recv deadline and
+/// surfaces as a recv timeout — no rank is marked crashed, and both
+/// the injection and the detection are on the ledgers.
+#[test]
+fn a_dropped_message_surfaces_as_a_recv_timeout() {
+    let pl = plan(vec![Fault { rank: 0, at_call: 1, batch: 0, kind: FaultKind::Drop }], 250);
+    let failure = World::try_run(2, pl, rounds(2)).expect_err("the lost message must be detected");
+    assert_eq!(failure.error.kind_name(), "recv-timeout");
+    assert!(failure.crashed_ranks.is_empty(), "a drop crashes nobody");
+    let drops: u64 = failure.stats.iter().map(|s| s.faults.injected_drops).sum();
+    assert_eq!(drops, 1);
+    let timeouts: u64 = failure.stats.iter().map(|s| s.faults.detected_timeouts).sum();
+    assert!(timeouts >= 1, "the deadline is the drop detector");
+}
+
+/// A delayed message is delivered intact: the run completes with
+/// results bit-identical to the fault-free launch, and only the
+/// injected-delay counter moves.
+#[test]
+fn a_delayed_message_changes_nothing_but_the_counter() {
+    let delayed = plan(vec![Fault { rank: 2, at_call: 1, batch: 0, kind: FaultKind::DelayMs(20) }], 10_000);
+    let (want, _) = World::try_run(4, plan(vec![], 10_000), rounds(4))
+        .expect("the fault-free reference completes");
+    let (got, stats) = World::try_run(4, delayed, rounds(4)).expect("a delay is not a failure");
+    assert_eq!(got, want, "delayed payloads arrive intact");
+    let delays: u64 = stats.iter().map(|s| s.faults.injected_delays).sum();
+    assert_eq!(delays, 1);
+    let detected: u64 = stats.iter().map(|s| s.faults.total() - s.faults.injected_delays).sum();
+    assert_eq!(detected, 0, "nothing else on the ledgers");
+}
+
+/// A checksum-poisoned payload is rejected at the receiver instead of
+/// being consumed into the reduction.
+#[test]
+fn a_corrupt_payload_is_detected_not_consumed() {
+    let pl = plan(vec![Fault { rank: 0, at_call: 1, batch: 0, kind: FaultKind::Corrupt }], 5_000);
+    let failure = World::try_run(2, pl, rounds(2)).expect_err("poison must not pass");
+    assert_eq!(failure.error.kind_name(), "corrupt");
+    assert!(failure.crashed_ranks.is_empty());
+    let injected: u64 = failure.stats.iter().map(|s| s.faults.injected_corruptions).sum();
+    assert_eq!(injected, 1);
+    let detected: u64 = failure.stats.iter().map(|s| s.faults.detected_corruptions).sum();
+    assert!(detected >= 1);
+}
+
+/// Checkpointing a fault-free stream is a pure read: assignments,
+/// objective curve, and iteration counts are exactly those of the
+/// uncheckpointed run, at p ∈ {1, 4} on both layouts.
+#[test]
+fn checkpointing_a_fault_free_stream_is_bit_identical() {
+    let points = blobs(160, 23);
+    for layout in [LandmarkLayout::OneD, LandmarkLayout::OneFiveD] {
+        for p in [1usize, 4] {
+            let plain = stream_cfg(layout, 0, FaultPlan::none());
+            let ckpt = stream_cfg(layout, 2, FaultPlan::none());
+            let mut src = MatrixSource::new(&points);
+            let a = fit_stream(p, &mut src, &plain).unwrap();
+            let mut src = MatrixSource::new(&points);
+            let b = fit_stream(p, &mut src, &ckpt).unwrap();
+            assert_eq!(
+                a.assignments,
+                b.assignments,
+                "layout={} p={p}: checkpointing must not move a single label",
+                layout.name()
+            );
+            assert_eq!(a.objective_curve, b.objective_curve, "layout={} p={p}", layout.name());
+            assert_eq!(a.iterations, b.iterations);
+            assert_eq!(b.recoveries, 0, "no fault, no recovery");
+        }
+    }
+}
+
+/// Without a checkpoint there is nothing to recover onto: the crash
+/// surfaces as the typed communication error, not a panic or a hang.
+#[test]
+fn a_crash_without_a_checkpoint_is_a_typed_error() {
+    let points = blobs(160, 27);
+    let cfg = stream_cfg(LandmarkLayout::OneD, 0, plan(vec![crash(0, 1, 1)], 5_000));
+    let mut src = MatrixSource::new(&points);
+    let err = fit_stream(4, &mut src, &cfg).expect_err("no checkpoint, no second chance");
+    match err {
+        VivaldiError::Comm(e) => assert_eq!(e.kind_name(), "crashed"),
+        other => panic!("expected the typed comm failure, got {other:?}"),
+    }
+}
+
+/// The recovery equality pin: a session that loses rank 1 at batch 3
+/// (checkpoint cadence 2, so `checkpoint_replay_batches(3, 2) = 2`
+/// batches replay) must end byte-for-byte where an uninterrupted
+/// session restored from the same checkpoint onto the same 3
+/// survivors ends — and the labels of every post-checkpoint batch
+/// must agree exactly.
+#[test]
+fn crash_recovery_matches_a_restore_onto_the_survivors() {
+    let points = blobs(160, 29);
+    let blocks: Vec<DenseMatrix> =
+        (0..5).map(|i| points.row_block(32 * i, 32 * (i + 1))).collect();
+    let backend = NativeBackend::new();
+
+    let cfg_plain = stream_cfg(LandmarkLayout::OneD, 2, FaultPlan::none());
+    let cfg_fault = stream_cfg(LandmarkLayout::OneD, 2, plan(vec![crash(1, 2, 3)], 5_000));
+
+    let mut sess = StreamSession::new(4, cfg_fault).unwrap();
+    for b in &blocks {
+        sess.push_batch(PointBlock::Dense(b.clone()), &backend)
+            .expect("the checkpointed session absorbs the crash");
+    }
+    assert_eq!(sess.recoveries(), 1, "exactly one recovery");
+    assert_eq!(sess.ranks(), 3, "the 1D world shrinks to the survivors");
+
+    // Uninterrupted reference: run to the checkpoint taken at the
+    // entry of batch 2, restore those bytes onto p' = 3, and push the
+    // remaining batches — exactly what recovery claims to do.
+    let mut warm = StreamSession::new(4, cfg_plain.clone()).unwrap();
+    warm.push_batch(PointBlock::Dense(blocks[0].clone()), &backend).unwrap();
+    warm.push_batch(PointBlock::Dense(blocks[1].clone()), &backend).unwrap();
+    let ckpt = warm.snapshot().unwrap();
+    let mut reference = StreamSession::restore_with_ranks(3, cfg_plain, &ckpt).unwrap();
+    for b in &blocks[2..] {
+        reference.push_batch(PointBlock::Dense(b.clone()), &backend).unwrap();
+    }
+
+    assert_eq!(
+        sess.snapshot().unwrap(),
+        reference.snapshot().unwrap(),
+        "the recovered model must be byte-for-byte the reference restore"
+    );
+    let got = sess.finish().unwrap();
+    let want = reference.finish().unwrap();
+    assert_eq!(got.ranks, 3);
+    assert_eq!(got.recoveries, 1);
+    assert_eq!(got.assignments.len(), 160, "no point lost across the crash");
+    assert_eq!(
+        &got.assignments[64..],
+        &want.assignments[..],
+        "every post-checkpoint label must match the reference"
+    );
+    assert_eq!(&got.objective_curve[2..], &want.objective_curve[..]);
+}
+
+/// 1.5D recovery shrinks to the largest square world the survivors
+/// can host: losing 1 of 4 ranks leaves 3, whose largest square is 1.
+#[test]
+fn fifteen_d_recovery_shrinks_to_the_largest_square_world() {
+    let points = blobs(160, 31);
+    let cfg = stream_cfg(LandmarkLayout::OneFiveD, 2, plan(vec![crash(3, 1, 2)], 5_000));
+    let mut src = MatrixSource::new(&points);
+    let out = fit_stream(4, &mut src, &cfg).expect("the checkpointed 1.5D stream recovers");
+    assert_eq!(out.recoveries, 1);
+    assert_eq!(out.ranks, 1, "3 survivors host a 1x1 grid");
+    assert_eq!(out.assignments.len(), 160);
+}
+
+/// Recovery determinism across compute backends: the scalar and the
+/// threaded backend recover the same crash to the same labels and the
+/// same objective curve — and the threaded run reproduces itself.
+#[test]
+fn crash_recovery_is_backend_invariant_and_repeatable() {
+    let points = blobs(160, 37);
+    let cfg = stream_cfg(LandmarkLayout::OneD, 2, plan(vec![crash(2, 2, 2)], 5_000));
+    let run = |backend: &NativeBackend| {
+        let mut src = MatrixSource::new(&points);
+        fit_stream_with_backend(4, &mut src, &cfg, backend).expect("the stream recovers")
+    };
+    let scalar = run(&NativeBackend::scalar());
+    let threaded = run(&NativeBackend::new());
+    let again = run(&NativeBackend::new());
+    for out in [&scalar, &threaded, &again] {
+        assert_eq!(out.recoveries, 1);
+        assert_eq!(out.ranks, 3);
+    }
+    assert_eq!(scalar.assignments, threaded.assignments, "backends must agree bit for bit");
+    assert_eq!(scalar.objective_curve, threaded.objective_curve);
+    assert_eq!(threaded.assignments, again.assignments, "the recovery is repeatable");
+    assert_eq!(threaded.objective_curve, again.objective_curve);
+}
+
+/// Snapshot hardening sweep: every strict prefix of a real blob is
+/// rejected loudly, and no single-byte flip can make the reader
+/// panic or over-allocate — a flipped blob either restores (a benign
+/// payload flip) or errors, but never brings the service down.
+#[test]
+fn snapshot_restore_survives_truncation_and_byte_flips() {
+    let points = blobs(96, 41);
+    let backend = NativeBackend::new();
+    let cfg = StreamConfig {
+        base: ApproxConfig { k: 2, m: 8, max_iters: 3, ..Default::default() },
+        batch: 32,
+        window: 2,
+        ..Default::default()
+    };
+    let mut sess = StreamSession::new(1, cfg.clone()).unwrap();
+    for i in 0..3 {
+        sess.push_batch(PointBlock::Dense(points.row_block(32 * i, 32 * (i + 1))), &backend)
+            .unwrap();
+    }
+    let blob = sess.snapshot().unwrap();
+    StreamSession::restore(cfg.clone(), &blob).expect("the intact blob restores");
+    for len in 0..blob.len() {
+        assert!(
+            StreamSession::restore(cfg.clone(), &blob[..len]).is_err(),
+            "a blob truncated to {len} of {} bytes must be rejected",
+            blob.len()
+        );
+    }
+    for i in 0..blob.len() {
+        let mut bad = blob.clone();
+        bad[i] ^= 0xff;
+        // Outcome may be Ok (a benign numeric flip) or a loud error;
+        // the pin is that the reader never panics.
+        let _ = StreamSession::restore(cfg.clone(), &bad);
+    }
+}

@@ -117,6 +117,7 @@ fn admission_is_the_closed_form_and_over_budget_opens_reject_loudly() {
     let spec = TenantSpec {
         p: 1,
         d: 4,
+        pinned: false,
         cfg: StreamConfig {
             base: ApproxConfig { k: 2, m: 8, max_iters: 10, ..Default::default() },
             batch: 32,
